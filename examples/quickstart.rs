@@ -1,0 +1,61 @@
+//! Quickstart: load the tuned-kernel library's artifacts, run one GEMM
+//! through the PJRT runtime with two backends, and compare.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! This is the 60-second tour: the manifest tells us which kernels were
+//! shipped (the binary-size constraint of the paper), the runtime compiles
+//! the HLO once, and the same buffers run through both the Pallas
+//! single-best kernel and the XLA-dot comparator.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use kernelsel::dataset::config_by_name;
+use kernelsel::runtime::{Manifest, Runtime};
+use kernelsel::util::fill_buffer;
+
+fn main() -> anyhow::Result<()> {
+    let dir = PathBuf::from("artifacts");
+    let runtime = Runtime::new(&dir)?;
+    let manifest = Manifest::load(&dir).map_err(anyhow::Error::msg)?;
+    println!(
+        "platform: {} | {} artifacts | deployed kernels: {:?}",
+        runtime.platform(),
+        manifest.artifacts.len(),
+        manifest.deployed
+    );
+
+    // A mid-size GEMM from the quickstart bucket set.
+    let (m, k, n, b) = (512, 784, 512, 1);
+    let lhs = fill_buffer(1, b * m * k);
+    let rhs = fill_buffer(2, b * k * n);
+    let flops = 2.0 * (b * m * k * n) as f64;
+
+    let best = config_by_name(&manifest.single_best).expect("config").index();
+    for (label, cfg) in [("pallas single-best", Some(best)), ("xla dot", None)] {
+        let meta = manifest
+            .find_matmul(cfg, m, k, n, b)
+            .expect("artifact for quickstart shape")
+            .clone();
+        // First call compiles; second call measures the steady state.
+        let warm = runtime.run_matmul(&meta, &lhs, &rhs)?;
+        let t0 = Instant::now();
+        let out = runtime.run_matmul(&meta, &lhs, &rhs)?;
+        let secs = t0.elapsed().as_secs_f64();
+        assert_eq!(out.len(), warm.len());
+        println!(
+            "{label:>20}: {:>8.2} ms  ({:.2} GFLOP/s)  [{}]",
+            secs * 1e3,
+            flops / secs / 1e9,
+            meta.path
+        );
+    }
+
+    let stats = runtime.stats();
+    println!(
+        "runtime: {} compiles ({:.2}s), {} executions ({:.3}s)",
+        stats.compiles, stats.compile_secs, stats.executions, stats.execute_secs
+    );
+    Ok(())
+}

@@ -1,0 +1,101 @@
+//! Serving demo: drive the coordinator with concurrent client threads and
+//! report latency/throughput — the library as a GEMM-serving microservice.
+//!
+//!     make artifacts && cargo run --release --example serve
+//!
+//! Clients submit mixed-shape GEMM requests; the executor thread resolves
+//! each to a deployed kernel via the decision-tree selector, batches
+//! same-executable requests, and runs them on PJRT.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use kernelsel::classify::codegen::CompiledTree;
+use kernelsel::classify::{ClassifierKind, KernelClassifier};
+use kernelsel::coordinator::{BatcherConfig, Coordinator, SelectorPolicy};
+use kernelsel::dataset::{benchmark_shapes, config_by_name, GemmShape};
+use kernelsel::devsim::{generate_dataset, profile_by_name};
+use kernelsel::runtime::Manifest;
+use kernelsel::util::fill_buffer;
+
+const CLIENTS: usize = 4;
+const REQUESTS_PER_CLIENT: usize = 24;
+
+fn main() -> Result<(), String> {
+    let dir = PathBuf::from("artifacts");
+    let manifest = Manifest::load(&dir)?;
+
+    // Tuned policy: decision tree over the shipped deployment.
+    let ds = generate_dataset(profile_by_name("i7-6700k").unwrap(), &benchmark_shapes());
+    let deployed: Vec<usize> = manifest
+        .deployed
+        .iter()
+        .map(|n| config_by_name(n).unwrap().index())
+        .collect();
+    let clf = KernelClassifier::fit(ClassifierKind::DecisionTreeB, &ds, &deployed, 7);
+    let policy = SelectorPolicy::Tree(CompiledTree::compile(&clf).unwrap());
+
+    println!("starting coordinator with policy={} ...", policy.name());
+    let coord = Arc::new(Coordinator::start(dir, policy, BatcherConfig::default())?);
+
+    // The shape mix a DNN-serving workload would issue (vgg16-tiny GEMMs +
+    // generic buckets — all shipped as artifacts).
+    let shapes = [
+        GemmShape::new(128, 128, 128, 1),
+        GemmShape::new(512, 784, 512, 1),
+        GemmShape::new(64, 2304, 128, 1),
+        GemmShape::new(1024, 27, 64, 1),
+        GemmShape::new(256, 576, 128, 1),
+    ];
+
+    // Warm the executable cache (first-touch compiles would otherwise
+    // dominate the latency distribution — see EXPERIMENTS.md §Perf).
+    for s in shapes {
+        let lhs = fill_buffer(1, s.batch * s.m * s.k);
+        let rhs = fill_buffer(2, s.batch * s.k * s.n);
+        let _ = coord.call(s, lhs, rhs);
+    }
+
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for client in 0..CLIENTS {
+        let coord = coord.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut ok = 0usize;
+            let mut total_latency = 0.0f64;
+            for i in 0..REQUESTS_PER_CLIENT {
+                let s = shapes[(client + i) % shapes.len()];
+                let lhs = fill_buffer((client * 1000 + i) as u32, s.batch * s.m * s.k);
+                let rhs = fill_buffer((client * 1000 + i + 500) as u32, s.batch * s.k * s.n);
+                match coord.call(s, lhs, rhs) {
+                    Ok(resp) if resp.result.is_ok() => {
+                        ok += 1;
+                        total_latency += resp.latency.as_secs_f64();
+                    }
+                    Ok(resp) => eprintln!("request failed: {:?}", resp.result.err()),
+                    Err(e) => eprintln!("coordinator error: {e}"),
+                }
+            }
+            (ok, total_latency)
+        }));
+    }
+    let mut ok = 0usize;
+    let mut latency_sum = 0.0;
+    for j in joins {
+        let (o, l) = j.join().expect("client thread");
+        ok += o;
+        latency_sum += l;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let total = CLIENTS * REQUESTS_PER_CLIENT;
+
+    let metrics = Arc::try_unwrap(coord).ok().expect("sole owner").stop();
+    println!(
+        "\n{ok}/{total} requests ok in {wall:.3}s -> {:.1} req/s, mean latency {:.2} ms",
+        total as f64 / wall,
+        latency_sum / ok.max(1) as f64 * 1e3
+    );
+    println!("coordinator metrics: {}", metrics.summary());
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Tuning workflow for a brand-new device (the paper's headline use case:
+//! "new devices [can] be supported with very little developer effort").
+//!
+//!     cargo run --release --example tune_new_device [device]
+//!
+//! Walks the full automated pipeline for a device we never hand-tuned:
+//!   1. collect the benchmark dataset (simulated Mali G71 here),
+//!   2. compare the six kernel-subset selection methods (Fig 5/6 style),
+//!   3. pick PCA+K-means @ 8 kernels, train the decision-tree selector,
+//!   4. evaluate classifier vs oracle on held-out shapes,
+//!   5. emit the deploy JSON (feed to `python -m compile.aot --deploy`)
+//!      and the nested-if Rust selector source.
+
+use kernelsel::classify::codegen::{to_rust_source, CompiledTree};
+use kernelsel::classify::{ClassifierKind, KernelClassifier};
+use kernelsel::dataset::{benchmark_shapes, config_by_index, Normalization};
+use kernelsel::devsim::{generate_dataset, profile_by_name};
+use kernelsel::selection::{
+    achievable_percent, achieved_percent, select, single_best, Method, ALL_METHODS,
+};
+
+fn main() {
+    let device = std::env::args().nth(1).unwrap_or_else(|| "mali-g71".into());
+    let profile = profile_by_name(&device).expect("known device profile");
+    println!("== step 1: collect benchmark data for {device} ==");
+    let ds = generate_dataset(profile, &benchmark_shapes());
+    println!(
+        "   {} size sets x 640 configs; best-config range {:.1}..{:.1} GFLOP/s",
+        ds.n_shapes(),
+        (0..ds.n_shapes()).map(|i| ds.best_gflops(i)).fold(f64::INFINITY, f64::min),
+        (0..ds.n_shapes()).map(|i| ds.best_gflops(i)).fold(0.0, f64::max),
+    );
+
+    let split = ds.split(0.8, 7);
+    let train = ds.subset(&split.train);
+    let test = ds.subset(&split.test);
+
+    println!("\n== step 2: selection methods at k=8 (held-out oracle %) ==");
+    for method in ALL_METHODS {
+        let picks = select(method, &train, Normalization::Standard, 8, 7);
+        println!("   {:12} {:6.2}%", method.name(), achievable_percent(&test, &picks));
+    }
+
+    println!("\n== step 3: deploy PCA+K-means @ 8 + decision tree ==");
+    let deployed = select(Method::PcaKMeans, &train, Normalization::Standard, 8, 7);
+    let clf = KernelClassifier::fit(ClassifierKind::DecisionTreeB, &train, &deployed, 7);
+    let tree = CompiledTree::compile(&clf).unwrap();
+
+    println!("\n== step 4: held-out evaluation ==");
+    let oracle = achievable_percent(&test, &deployed);
+    let achieved = achieved_percent(&test, &clf.choices(&test));
+    println!("   oracle over deployed kernels : {oracle:6.2}% of optimal");
+    println!("   decision-tree selector       : {achieved:6.2}% of optimal");
+    println!("   selector tree               : {} nodes", tree.n_nodes());
+
+    println!("\n== step 5: deployment outputs ==");
+    let names: Vec<String> = deployed
+        .iter()
+        .map(|&c| format!("\"{}\"", config_by_index(c).name()))
+        .collect();
+    println!(
+        "deploy.json:\n{{\n  \"deployed\": [{}],\n  \"single_best\": \"{}\"\n}}",
+        names.join(", "),
+        config_by_index(single_best(&train)).name()
+    );
+    println!("\ngenerated runtime selector (first 24 lines):");
+    for line in to_rust_source(&tree, "select_kernel").lines().take(24) {
+        println!("  {line}");
+    }
+    println!("  ...");
+    println!(
+        "\nnext: python -m compile.aot --deploy deploy.json  # ship these {} kernels",
+        deployed.len()
+    );
+}

@@ -1,0 +1,103 @@
+//! End-to-end driver (paper §6 / Figure 7 measured): VGG16 inference
+//! through the full three-layer stack on a real small workload.
+//!
+//!     make artifacts && cargo run --release --example vgg16_inference
+//!
+//! The network's 16 layers run as AOT Pallas/XLA executables chained on the
+//! PJRT device; the decision-tree selector picks one of the 8 deployed
+//! kernel configurations per layer. Three backends are compared, exactly
+//! like the paper's SYCL-DNN / SYCL-BLAS / CLBlast figure.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use kernelsel::classify::codegen::CompiledTree;
+use kernelsel::classify::{ClassifierKind, KernelClassifier};
+use kernelsel::coordinator::{SelectorPolicy, VggEngine};
+use kernelsel::dataset::{benchmark_shapes, config_by_name};
+use kernelsel::devsim::{generate_dataset, profile_by_name};
+use kernelsel::runtime::{Manifest, Runtime};
+use kernelsel::util::fill_buffer;
+
+const ITERS: usize = 8;
+
+fn main() -> anyhow::Result<()> {
+    let dir = PathBuf::from("artifacts");
+    let runtime = Runtime::new(&dir)?;
+    let manifest = Manifest::load(&dir).map_err(anyhow::Error::msg)?;
+    let network = std::env::args().nth(1).unwrap_or_else(|| "vgg16-tiny".into());
+
+    // Tune the runtime selector: benchmark data -> decision tree over the
+    // shipped 8-kernel deployment. Prefer *measured* local-CPU data from
+    // `kernelsel collect` (the paper tunes on the target device!); fall
+    // back to the simulated CPU profile.
+    let measured = std::path::Path::new("results/measured_cpu.csv");
+    let ds = if measured.exists() {
+        println!("tuning selector on measured local-CPU data ...");
+        kernelsel::dataset::PerfDataset::load("local-cpu", measured)
+            .map_err(anyhow::Error::msg)?
+    } else {
+        println!("tuning selector on simulated i7-6700k data (run `kernelsel collect` for measured tuning) ...");
+        generate_dataset(profile_by_name("i7-6700k").unwrap(), &benchmark_shapes())
+    };
+    let deployed: Vec<usize> = manifest
+        .deployed
+        .iter()
+        .map(|n| config_by_name(n).unwrap().index())
+        .collect();
+    let clf = KernelClassifier::fit(ClassifierKind::DecisionTreeB, &ds, &deployed, 7);
+    let tree = CompiledTree::compile(&clf).unwrap();
+    let single = config_by_name(&manifest.single_best).unwrap().index();
+
+    println!("\n=== {network}: single-image inference, {ITERS} timed iterations ===");
+    println!(
+        "{:<16} {:>10} {:>10} {:>10} {:>14}",
+        "backend", "mean ms", "min ms", "p-layer ms", "distinct cfgs"
+    );
+    for policy in [
+        SelectorPolicy::Tree(tree.clone()),
+        SelectorPolicy::Single(single),
+        SelectorPolicy::Xla,
+    ] {
+        let engine = VggEngine::load(&runtime, &manifest, &network, &policy)?;
+        let image = fill_buffer(99, engine.input_shape().iter().product());
+        // Warmup compiles everything.
+        let (logits, timings) = engine.infer(&image)?;
+        let mut times = Vec::with_capacity(ITERS);
+        for _ in 0..ITERS {
+            let t0 = Instant::now();
+            engine.infer(&image)?;
+            times.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+        let slowest = timings
+            .iter()
+            .max_by(|a, b| a.secs.partial_cmp(&b.secs).unwrap())
+            .unwrap();
+        println!(
+            "{:<16} {:>10.2} {:>10.2} {:>10.2} {:>14}   top-logit {:.3}",
+            engine.backend(),
+            mean,
+            min,
+            slowest.secs * 1e3,
+            engine.distinct_configs(),
+            logits.iter().cloned().fold(f64::NEG_INFINITY as f32, f32::max),
+        );
+    }
+
+    println!("\nper-layer breakdown (tuned backend):");
+    let engine = VggEngine::load(&runtime, &manifest, &network, &SelectorPolicy::Tree(tree))?;
+    let image = fill_buffer(99, engine.input_shape().iter().product());
+    let (_, timings) = engine.infer(&image)?;
+    for t in &timings {
+        println!(
+            "  {:<10} gemm {:>22}  cfg {:<6}  {:>8.3} ms",
+            t.layer,
+            t.gemm_shape.label(),
+            t.config.map(|c| c.to_string()).unwrap_or_else(|| "xla".into()),
+            t.secs * 1e3
+        );
+    }
+    Ok(())
+}

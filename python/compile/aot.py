@@ -1,0 +1,321 @@
+"""AOT pipeline: lower Layer-2 graphs to HLO-text artifacts for the Rust runtime.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids that the xla_extension 0.5.1
+bundled with the ``xla`` crate rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs under ``artifacts/``:
+
+  matmul/…hlo.txt      standalone GEMM executables (logical shapes; padding
+                       and result slicing are inside the HLO, so the Rust
+                       side feeds plain (B,M,K)/(B,K,N) buffers),
+  <network>/…hlo.txt   per-layer executables for every deployed kernel
+                       configuration plus the ``xla`` comparator backend,
+  collect/…hlo.txt     (opt-in) the full 640-configuration sweep used to
+                       collect a measured-CPU dataset,
+  manifest.json        metadata for every artifact (shapes, flops, configs).
+
+Python runs once, at build time; the Rust binary is self-contained after
+``make artifacts``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import (
+    KernelConfig,
+    all_configs,
+    batched_matmul,
+    config_by_name,
+)
+
+# ---------------------------------------------------------------------------
+# Shape sets.
+# ---------------------------------------------------------------------------
+
+# Figure 1's three benchmark size sets (m, k, n, batch).
+FIG1_SHAPES: List[Tuple[int, int, int, int]] = [
+    (512, 784, 512, 16),
+    (512, 4608, 784, 1),
+    (32, 12321, 27, 1),
+]
+
+# Shapes used by the quickstart example, as (m, k, n, batch).
+QUICKSTART_SHAPES = [(128, 128, 128, 1), (512, 784, 512, 1), (64, 2304, 128, 1)]
+
+# Diverse shape set for measured-CPU data collection (batch 1 keeps a full
+# 640-config sweep tractable on the CPU PJRT backend).
+COLLECT_SHAPES: List[Tuple[int, int, int, int]] = [
+    (64, 64, 64, 1),
+    (256, 256, 256, 1),
+    (512, 784, 512, 1),
+    (256, 2304, 392, 1),
+    (32, 2048, 27, 1),
+    (1, 4096, 1000, 1),
+    (3136, 27, 64, 1),
+    (1024, 512, 256, 1),
+]
+
+
+def serving_bucket_shapes(network: str) -> List[Tuple[int, int, int, int]]:
+    """GEMM shape buckets the serving coordinator supports: the network's
+    own layer GEMMs plus a few generic power-of-two buckets."""
+    shapes = []
+    for spec in M.network_layers(network):
+        shapes.append((spec.gemm_m, spec.gemm_k, spec.gemm_n, 1))
+    shapes += [(128, 128, 128, 1), (512, 512, 512, 1), (1024, 1024, 64, 1)]
+    seen, out = set(), []
+    for s in shapes:
+        if s not in seen:
+            seen.add(s)
+            out.append(s)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Lowering helpers.
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe interchange).
+
+    `return_tuple=False`: every artifact returns exactly one array, so the
+    Rust runtime receives a plain buffer it can feed straight into the next
+    executable (zero-copy layer chaining) instead of a 1-tuple.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def lower_matmul(cfg: Optional[KernelConfig], b: int, m: int, k: int, n: int) -> str:
+    """Lower one GEMM executable. `cfg=None` -> XLA-dot comparator backend."""
+    lhs = jax.ShapeDtypeStruct((b, m, k), jnp.float32)
+    rhs = jax.ShapeDtypeStruct((b, k, n), jnp.float32)
+    if cfg is None:
+        fn = M.xla_backend()
+    else:
+        fn = M.pallas_backend(cfg)
+    return to_hlo_text(jax.jit(fn).lower(lhs, rhs))
+
+
+def lower_layer(spec, cfg: Optional[KernelConfig]) -> str:
+    """Lower one network layer. `cfg=None` -> XLA-dot comparator backend."""
+    mm = M.xla_backend() if cfg is None else M.pallas_backend(cfg)
+    fn = M.layer_fn(spec, mm)
+    return to_hlo_text(jax.jit(fn).lower(*M.layer_input_specs(spec)))
+
+
+# ---------------------------------------------------------------------------
+# Artifact bundle builder.
+# ---------------------------------------------------------------------------
+
+
+class Bundle:
+    def __init__(self, out_dir: str, force: bool):
+        self.out_dir = out_dir
+        self.force = force
+        self.entries: List[Dict] = []
+        self._seen: set = set()
+        self.lowered = 0
+        self.skipped = 0
+        self.t0 = time.time()
+
+    def _write(self, rel_path: str, make_text) -> None:
+        path = os.path.join(self.out_dir, rel_path)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        if os.path.exists(path) and not self.force:
+            self.skipped += 1
+            return
+        text = make_text()
+        with open(path, "w") as f:
+            f.write(text)
+        self.lowered += 1
+        if self.lowered % 50 == 0:
+            rate = self.lowered / (time.time() - self.t0)
+            print(
+                f"  lowered {self.lowered} artifacts ({rate:.1f}/s)",
+                flush=True,
+            )
+
+    def add_matmul(
+        self,
+        group: str,
+        cfg: Optional[KernelConfig],
+        b: int,
+        m: int,
+        k: int,
+        n: int,
+    ) -> None:
+        cname = cfg.name if cfg is not None else "xla"
+        rel = f"{group}/mm_{cname}_b{b}m{m}k{k}n{n}.hlo.txt"
+        if rel in self._seen:
+            return
+        self._seen.add(rel)
+        self.entries.append(
+            {
+                "path": rel,
+                "kind": "matmul",
+                "backend": "pallas" if cfg is not None else "xla",
+                "config": cfg.name if cfg else None,
+                "config_index": cfg.index() if cfg else None,
+                "b": b,
+                "m": m,
+                "k": k,
+                "n": n,
+                "flops": 2 * b * m * k * n,
+                "inputs": [[b, m, k], [b, k, n]],
+                "output": [b, m, n],
+            }
+        )
+        self._write(rel, lambda: lower_matmul(cfg, b, m, k, n))
+
+    def add_layer(self, network: str, index: int, spec, cfg) -> None:
+        cname = cfg.name if cfg is not None else "xla"
+        rel = f"{network}/{spec.name}_{cname}.hlo.txt"
+        if rel in self._seen:
+            return
+        self._seen.add(rel)
+        if isinstance(spec, M.ConvSpec):
+            inputs = [
+                [1, spec.hw, spec.hw, spec.cin],
+                [9 * spec.cin, spec.cout],
+                [spec.cout],
+            ]
+            output = [1, spec.out_hw, spec.out_hw, spec.cout]
+            kind = "conv_layer"
+        else:
+            inputs = [[1, spec.k], [spec.k, spec.n], [spec.n]]
+            output = [1, spec.n]
+            kind = "fc_layer"
+        self.entries.append(
+            {
+                "path": rel,
+                "kind": kind,
+                "backend": "pallas" if cfg is not None else "xla",
+                "config": cfg.name if cfg else None,
+                "config_index": cfg.index() if cfg else None,
+                "network": network,
+                "layer": spec.name,
+                "layer_index": index,
+                "m": spec.gemm_m,
+                "k": spec.gemm_k,
+                "n": spec.gemm_n,
+                "b": 1,
+                "pool": bool(getattr(spec, "pool", False)),
+                "relu": bool(getattr(spec, "relu", True)),
+                "flops": spec.flops,
+                "inputs": inputs,
+                "output": output,
+            }
+        )
+        self._write(rel, lambda: lower_layer(spec, cfg))
+
+    def write_manifest(self, meta: Dict) -> None:
+        manifest = {
+            "version": 1,
+            "generated_unix": int(time.time()),
+            "meta": meta,
+            "artifacts": self.entries,
+        }
+        path = os.path.join(self.out_dir, "manifest.json")
+        os.makedirs(self.out_dir, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(manifest, f, indent=1)
+        print(
+            f"manifest: {len(self.entries)} artifacts "
+            f"({self.lowered} lowered, {self.skipped} cached) -> {path}"
+        )
+
+
+def load_deploy(path: str) -> Tuple[List[KernelConfig], KernelConfig]:
+    with open(path) as f:
+        deploy = json.load(f)
+    configs = [config_by_name(n) for n in deploy["deployed"]]
+    single = config_by_name(deploy["single_best"])
+    return configs, single
+
+
+def main(argv: Sequence[str] = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--deploy",
+        default=os.path.join(os.path.dirname(__file__), "deploy_default.json"),
+        help="JSON file naming the deployed kernel configurations",
+    )
+    ap.add_argument(
+        "--networks",
+        default="vgg16-tiny",
+        help="comma-separated networks to emit per-layer artifacts for "
+        "(vgg16-tiny, vgg16, or none)",
+    )
+    ap.add_argument(
+        "--collect",
+        action="store_true",
+        help="also emit the full 640-config x %d-shape measured-CPU sweep"
+        % len(COLLECT_SHAPES),
+    )
+    ap.add_argument(
+        "--collect-shapes",
+        type=int,
+        default=len(COLLECT_SHAPES),
+        help="number of collection shapes (prefix of the standard list)",
+    )
+    ap.add_argument("--force", action="store_true", help="re-lower everything")
+    args = ap.parse_args(argv)
+
+    configs, single = load_deploy(args.deploy)
+    bundle = Bundle(args.out, args.force)
+
+    # Quickstart + Figure-1 GEMMs for every deployed config and comparators.
+    mm_cfgs: List[Optional[KernelConfig]] = [None, single] + configs
+    for m_, k_, n_, b_ in QUICKSTART_SHAPES + FIG1_SHAPES:
+        for cfg in mm_cfgs:
+            bundle.add_matmul("matmul", cfg, b_, m_, k_, n_)
+
+    networks = [n for n in args.networks.split(",") if n and n != "none"]
+    for network in networks:
+        layers = M.network_layers(network)
+        # Serving buckets: deployed configs + comparators for each bucket.
+        for m_, k_, n_, b_ in serving_bucket_shapes(network):
+            for cfg in mm_cfgs:
+                bundle.add_matmul("matmul", cfg, b_, m_, k_, n_)
+        # Per-layer artifacts.
+        for i, spec in enumerate(layers):
+            for cfg in mm_cfgs:
+                bundle.add_layer(network, i, spec, cfg)
+
+    if args.collect:
+        shapes = COLLECT_SHAPES[: args.collect_shapes]
+        for m_, k_, n_, b_ in shapes:
+            for cfg in all_configs():
+                bundle.add_matmul("collect", cfg, b_, m_, k_, n_)
+
+    bundle.write_manifest(
+        {
+            "deployed": [c.name for c in configs],
+            "single_best": single.name,
+            "networks": networks,
+            "collect": bool(args.collect),
+        }
+    )
+
+
+if __name__ == "__main__":
+    main()

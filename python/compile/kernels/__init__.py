@@ -1,0 +1,14 @@
+"""Layer-1 Pallas kernels and their configuration space."""
+
+from .config import (  # noqa: F401
+    KernelConfig,
+    NUM_CONFIGS,
+    TILE_SIZES,
+    WORKGROUPS,
+    all_configs,
+    config_by_index,
+    config_by_name,
+    iter_configs,
+)
+from .matmul import batched_matmul, matmul, padded_dims  # noqa: F401
+from .ref import batched_matmul_ref, matmul_ref  # noqa: F401

@@ -1,0 +1,130 @@
+"""The kernel configuration space of the paper (§3).
+
+The paper's SYCL GEMM kernel has three compile-time micro-tile parameters
+(R, A, C) -- each work-item accumulates an R x C output tile from R x A and
+A x C vector loads -- and a 2-D work-group size (WR, WC).  Tile parameters
+take values in {1, 2, 4, 8} (64 combinations) and 10 work-group pairings are
+legal, giving 640 configurations total.
+
+Pallas / TPU adaptation (DESIGN.md §2):
+  * The work-group times the micro-tile gives the HBM->VMEM block shape the
+    kernel schedules over: ``block_m = R * WR`` and ``block_n = C * WC``.
+  * The A-depth of the work-item loads becomes the depth of the VMEM K
+    pipeline: the kernel marches over K in chunks of ``k_chunk = A * K_UNIT``
+    so A genuinely changes the working set and the loop trip count, just as
+    it changes the per-iteration load depth in the SYCL kernel.
+
+This module is the single Python source of truth for the space; the Rust
+``dataset::config`` module mirrors it exactly (checked by a golden test on
+the manifest).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, List, Tuple
+
+TILE_SIZES: Tuple[int, ...] = (1, 2, 4, 8)
+
+# Legal (rows, cols) work-group pairings from the paper (§3): products are
+# capped by device work-group limits, so only these ten are used.
+WORKGROUPS: Tuple[Tuple[int, int], ...] = (
+    (1, 64),
+    (1, 128),
+    (8, 8),
+    (8, 16),
+    (8, 32),
+    (16, 8),
+    (16, 16),
+    (32, 8),
+    (64, 1),
+    (128, 1),
+)
+
+# One unit of K-chunk depth per unit of the A tile parameter.  A in {1,2,4,8}
+# therefore gives K chunks of {32, 64, 128, 256} -- small enough for VMEM,
+# large enough that the fori_loop trip count differs meaningfully per config.
+K_UNIT: int = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelConfig:
+    """One point in the 640-point kernel configuration space."""
+
+    acc_r: int  # R: rows of the per-work-item accumulator tile
+    acc_a: int  # A: depth of the per-iteration loads
+    acc_c: int  # C: cols of the per-work-item accumulator tile
+    wg_r: int   # work-group rows
+    wg_c: int   # work-group cols
+
+    @property
+    def block_m(self) -> int:
+        """Rows of the HBM->VMEM output block (work-group x micro-tile)."""
+        return self.acc_r * self.wg_r
+
+    @property
+    def block_n(self) -> int:
+        """Cols of the HBM->VMEM output block."""
+        return self.acc_c * self.wg_c
+
+    @property
+    def k_chunk(self) -> int:
+        """Depth of one K step of the VMEM pipeline."""
+        return self.acc_a * K_UNIT
+
+    @property
+    def name(self) -> str:
+        return (
+            f"r{self.acc_r}a{self.acc_a}c{self.acc_c}"
+            f"_wg{self.wg_r}x{self.wg_c}"
+        )
+
+    def index(self) -> int:
+        """Stable index of this config in `all_configs()` ordering."""
+        ti = (
+            TILE_SIZES.index(self.acc_r) * len(TILE_SIZES) * len(TILE_SIZES)
+            + TILE_SIZES.index(self.acc_a) * len(TILE_SIZES)
+            + TILE_SIZES.index(self.acc_c)
+        )
+        wi = WORKGROUPS.index((self.wg_r, self.wg_c))
+        return ti * len(WORKGROUPS) + wi
+
+    def vmem_bytes(self, dtype_bytes: int = 4) -> int:
+        """Estimated VMEM working set: lhs + rhs K-chunk strips + f32 acc."""
+        lhs = self.block_m * self.k_chunk * dtype_bytes
+        rhs = self.k_chunk * self.block_n * dtype_bytes
+        acc = self.block_m * self.block_n * 4
+        return lhs + rhs + acc
+
+
+def all_configs() -> List[KernelConfig]:
+    """The full 640-configuration space in stable index order."""
+    return list(iter_configs())
+
+
+def iter_configs() -> Iterator[KernelConfig]:
+    for r in TILE_SIZES:
+        for a in TILE_SIZES:
+            for c in TILE_SIZES:
+                for wr, wc in WORKGROUPS:
+                    yield KernelConfig(r, a, c, wr, wc)
+
+
+def config_by_index(idx: int) -> KernelConfig:
+    n_wg = len(WORKGROUPS)
+    ti, wi = divmod(idx, n_wg)
+    ri, rem = divmod(ti, len(TILE_SIZES) * len(TILE_SIZES))
+    ai, ci = divmod(rem, len(TILE_SIZES))
+    wr, wc = WORKGROUPS[wi]
+    return KernelConfig(TILE_SIZES[ri], TILE_SIZES[ai], TILE_SIZES[ci], wr, wc)
+
+
+def config_by_name(name: str) -> KernelConfig:
+    for cfg in iter_configs():
+        if cfg.name == name:
+            return cfg
+    raise KeyError(f"no such kernel config: {name!r}")
+
+
+NUM_CONFIGS: int = len(TILE_SIZES) ** 3 * len(WORKGROUPS)
+assert NUM_CONFIGS == 640

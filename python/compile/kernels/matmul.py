@@ -1,0 +1,163 @@
+"""Layer-1: the parameterized batched-GEMM Pallas kernel.
+
+This is the Pallas/TPU rethink of the paper's SYCL work-group GEMM kernel
+(DESIGN.md §2).  The SYCL kernel gives each work-item an R x C accumulator
+tile fed by A-deep vector loads, inside a (WR, WC) work-group.  On a TPU the
+analogous schedule is expressed with a BlockSpec grid:
+
+  * the work-group's collective output tile (R*WR, C*WC) becomes the
+    HBM->VMEM output block ``(block_m, block_n)``;
+  * the A-deep per-iteration loads become the depth of the K pipeline: the
+    kernel marches over K in VMEM chunks of ``k_chunk = A * K_UNIT``,
+    accumulating into a float32 VMEM accumulator (the MXU-friendly layout).
+
+All 640 configurations therefore lower to genuinely different HLO: block
+shapes, K-loop trip counts and VMEM working sets all differ, which is what
+the selection problem is about.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret-mode lowers the kernel to portable HLO that the
+Rust runtime compiles and runs.  Real-TPU viability per config is estimated
+analytically (DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .config import KernelConfig
+
+
+# K-pipeline steps at or below this are unrolled into straight-line dots at
+# trace time. Unrolled slabs use static slices that XLA fuses and schedules
+# much better than a `fori_loop` body (≈ +20% on the CPU PJRT backend);
+# the cap bounds the lowered HLO size for deep-K problems.
+UNROLL_MAX_STEPS: int = 16
+
+
+def _matmul_kernel(lhs_ref, rhs_ref, out_ref, *, k_chunk: int, out_dtype):
+    """Kernel body for one (batch, m-block, n-block) grid cell.
+
+    Refs:
+      lhs_ref: (1, block_m, K) VMEM block of the left operand.
+      rhs_ref: (1, K, block_n) VMEM block of the right operand.
+      out_ref: (1, block_m, block_n) output block.
+    """
+    block_m = lhs_ref.shape[1]
+    block_n = rhs_ref.shape[2]
+    k_total = lhs_ref.shape[2]
+    num_steps = k_total // k_chunk
+
+    def body(step, acc):
+        # One A-depth slab of the K pipeline: load (block_m, k_chunk) and
+        # (k_chunk, block_n) strips and accumulate their product in f32.
+        lhs_slab = pl.load(
+            lhs_ref, (0, slice(None), pl.dslice(step * k_chunk, k_chunk))
+        )
+        rhs_slab = pl.load(
+            rhs_ref, (0, pl.dslice(step * k_chunk, k_chunk), slice(None))
+        )
+        return acc + jax.lax.dot_general(
+            lhs_slab,
+            rhs_slab,
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    acc = jnp.zeros((block_m, block_n), jnp.float32)
+    if num_steps <= UNROLL_MAX_STEPS:
+        for step in range(num_steps):
+            acc = body(step, acc)
+    else:
+        acc = jax.lax.fori_loop(0, num_steps, body, acc)
+    out_ref[0, :, :] = acc.astype(out_dtype)
+
+
+def round_up(x: int, mult: int) -> int:
+    """Smallest multiple of `mult` that is >= x."""
+    return ((x + mult - 1) // mult) * mult
+
+
+def padded_dims(cfg: KernelConfig, m: int, k: int, n: int):
+    """The (M, K, N) the kernel actually runs for logical dims (m, k, n)."""
+    return (
+        round_up(m, cfg.block_m),
+        round_up(k, cfg.k_chunk),
+        round_up(n, cfg.block_n),
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("acc_r", "acc_a", "acc_c", "wg_r", "wg_c")
+)
+def _matmul_padded(lhs, rhs, *, acc_r, acc_a, acc_c, wg_r, wg_c):
+    """Pallas GEMM over already-padded operands.
+
+    lhs: (B, M, K) with M % block_m == 0 and K % k_chunk == 0.
+    rhs: (B, K, N) with N % block_n == 0.
+    """
+    cfg = KernelConfig(acc_r, acc_a, acc_c, wg_r, wg_c)
+    batch, m, k = lhs.shape
+    _, _, n = rhs.shape
+    bm, bn, kc = cfg.block_m, cfg.block_n, cfg.k_chunk
+    if m % bm or k % kc or n % bn:
+        raise ValueError(
+            f"operands not padded for {cfg.name}: "
+            f"m={m} (bm={bm}), k={k} (kc={kc}), n={n} (bn={bn})"
+        )
+    grid = (batch, m // bm, n // bn)
+    kernel = functools.partial(
+        _matmul_kernel, k_chunk=kc, out_dtype=lhs.dtype
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, k), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, k, bn), lambda b, i, j: (b, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda b, i, j: (b, i, j)),
+        out_shape=jax.ShapeDtypeStruct((batch, m, n), lhs.dtype),
+        interpret=True,
+    )(lhs, rhs)
+
+
+def batched_matmul(
+    lhs: jnp.ndarray, rhs: jnp.ndarray, cfg: KernelConfig
+) -> jnp.ndarray:
+    """out[b] = lhs[b] @ rhs[b] using kernel configuration `cfg`.
+
+    Operands of any (B, M, K) x (B, K, N) shape; they are zero-padded up to
+    the configuration's block multiples (zero padding is exact for matmul)
+    and the result is sliced back.  The padding waste is part of the cost a
+    configuration pays on awkward shapes -- exactly the under-utilisation
+    effect the paper observes for tall-skinny inputs.
+    """
+    if lhs.ndim != 3 or rhs.ndim != 3:
+        raise ValueError(f"expected rank-3 inputs, got {lhs.shape}, {rhs.shape}")
+    batch, m, k = lhs.shape
+    batch2, k2, n = rhs.shape
+    if batch != batch2 or k != k2:
+        raise ValueError(f"shape mismatch: {lhs.shape} @ {rhs.shape}")
+    mp, kp, np_ = padded_dims(cfg, m, k, n)
+    lhs_p = jnp.pad(lhs, ((0, 0), (0, mp - m), (0, kp - k)))
+    rhs_p = jnp.pad(rhs, ((0, 0), (0, kp - k), (0, np_ - n)))
+    out = _matmul_padded(
+        lhs_p,
+        rhs_p,
+        acc_r=cfg.acc_r,
+        acc_a=cfg.acc_a,
+        acc_c=cfg.acc_c,
+        wg_r=cfg.wg_r,
+        wg_c=cfg.wg_c,
+    )
+    return out[:, :m, :n]
+
+
+def matmul(lhs: jnp.ndarray, rhs: jnp.ndarray, cfg: KernelConfig) -> jnp.ndarray:
+    """Unbatched convenience wrapper."""
+    return batched_matmul(lhs[None], rhs[None], cfg)[0]

@@ -1,0 +1,39 @@
+"""Pure-jnp reference oracle for the parameterized GEMM kernel.
+
+This is the correctness contract for the Pallas kernel: every configuration
+must match ``batched_matmul_ref`` to float tolerance for every shape.  The
+pytest suite sweeps configurations and (hypothesis-generated) shapes against
+this oracle.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def batched_matmul_ref(lhs: jnp.ndarray, rhs: jnp.ndarray) -> jnp.ndarray:
+    """out[b] = lhs[b] @ rhs[b] with f32 accumulation.
+
+    Args:
+      lhs: (B, M, K) array.
+      rhs: (B, K, N) array.
+
+    Returns:
+      (B, M, N) array in the input dtype, accumulated in float32.
+    """
+    if lhs.ndim != 3 or rhs.ndim != 3:
+        raise ValueError(f"expected rank-3 inputs, got {lhs.shape}, {rhs.shape}")
+    if lhs.shape[0] != rhs.shape[0] or lhs.shape[2] != rhs.shape[1]:
+        raise ValueError(f"shape mismatch: {lhs.shape} @ {rhs.shape}")
+    out = jnp.einsum(
+        "bmk,bkn->bmn",
+        lhs,
+        rhs,
+        preferred_element_type=jnp.float32,
+    )
+    return out.astype(lhs.dtype)
+
+
+def matmul_ref(lhs: jnp.ndarray, rhs: jnp.ndarray) -> jnp.ndarray:
+    """Unbatched convenience wrapper: (M, K) @ (K, N) -> (M, N)."""
+    return batched_matmul_ref(lhs[None], rhs[None])[0]

@@ -1,0 +1,83 @@
+"""AOT pipeline tests: lowering produces loadable HLO text + sane manifest."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+from compile import model as M
+from compile.kernels import KernelConfig, config_by_name
+
+
+def test_lower_matmul_produces_hlo_text():
+    cfg = KernelConfig(2, 2, 2, 8, 8)
+    text = aot.lower_matmul(cfg, 1, 16, 32, 8)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # Output is a 1-tuple (return_tuple=True) of the (1,16,8) result.
+    assert "f32[1,16,8]" in text
+
+
+def test_lower_matmul_xla_backend():
+    text = aot.lower_matmul(None, 1, 8, 8, 8)
+    assert "HloModule" in text
+    assert "dot" in text
+
+
+def test_lower_layer_conv():
+    spec = M.ConvSpec("c", hw=4, cin=2, cout=4, pool=True)
+    text = aot.lower_layer(spec, KernelConfig(1, 1, 1, 8, 8))
+    assert "HloModule" in text
+    assert "f32[1,2,2,4]" in text  # pooled output shape
+
+
+def test_serving_bucket_shapes_unique_and_cover_network():
+    shapes = aot.serving_bucket_shapes("vgg16-tiny")
+    assert len(shapes) == len(set(shapes))
+    gemms = {
+        (s.gemm_m, s.gemm_k, s.gemm_n, 1) for s in M.network_layers("vgg16-tiny")
+    }
+    assert gemms.issubset(set(shapes))
+
+
+def test_fig1_shapes_match_paper():
+    assert aot.FIG1_SHAPES[0] == (512, 784, 512, 16)
+    assert aot.FIG1_SHAPES[1] == (512, 4608, 784, 1)
+    assert aot.FIG1_SHAPES[2] == (32, 12321, 27, 1)
+
+
+def test_default_deploy_file_valid():
+    path = os.path.join(os.path.dirname(aot.__file__), "deploy_default.json")
+    configs, single = aot.load_deploy(path)
+    assert len(configs) == 8
+    assert len({c.name for c in configs}) == 8
+    assert single.name == "r4a8c4_wg16x16"
+
+
+def test_bundle_emits_manifest(tmp_path):
+    bundle = aot.Bundle(str(tmp_path), force=False)
+    cfg = config_by_name("r1a1c1_wg8x8")
+    bundle.add_matmul("matmul", cfg, 1, 8, 8, 8)
+    bundle.add_matmul("matmul", cfg, 1, 8, 8, 8)  # duplicate: ignored
+    bundle.add_matmul("matmul", None, 1, 8, 8, 8)
+    bundle.write_manifest({"test": True})
+    with open(tmp_path / "manifest.json") as f:
+        manifest = json.load(f)
+    assert len(manifest["artifacts"]) == 2
+    entry = manifest["artifacts"][0]
+    assert entry["kind"] == "matmul"
+    assert entry["flops"] == 2 * 8 * 8 * 8
+    assert entry["inputs"] == [[1, 8, 8], [1, 8, 8]]
+    for e in manifest["artifacts"]:
+        assert (tmp_path / e["path"]).exists()
+
+
+def test_bundle_caches_existing(tmp_path):
+    cfg = config_by_name("r1a1c1_wg8x8")
+    b1 = aot.Bundle(str(tmp_path), force=False)
+    b1.add_matmul("matmul", cfg, 1, 8, 8, 8)
+    assert b1.lowered == 1
+    b2 = aot.Bundle(str(tmp_path), force=False)
+    b2.add_matmul("matmul", cfg, 1, 8, 8, 8)
+    assert b2.lowered == 0 and b2.skipped == 1

@@ -1,0 +1,58 @@
+"""Tests for the kernel configuration space."""
+
+import pytest
+
+from compile.kernels import (
+    NUM_CONFIGS,
+    TILE_SIZES,
+    WORKGROUPS,
+    all_configs,
+    config_by_index,
+    config_by_name,
+)
+from compile.kernels.config import K_UNIT
+
+
+def test_space_size():
+    cfgs = all_configs()
+    assert len(cfgs) == 640
+    assert NUM_CONFIGS == 640
+    assert len(set(c.name for c in cfgs)) == 640
+
+
+def test_index_roundtrip():
+    for i, cfg in enumerate(all_configs()):
+        assert cfg.index() == i
+        assert config_by_index(i) == cfg
+
+
+def test_name_roundtrip():
+    for cfg in all_configs()[::37]:
+        assert config_by_name(cfg.name) == cfg
+    with pytest.raises(KeyError):
+        config_by_name("r3a1c1_wg8x8")
+
+
+def test_workgroup_products_legal():
+    # The paper's pairing rule: work-group product capped by driver limits
+    # (largest deployed pairing is 256 work-items).
+    for wr, wc in WORKGROUPS:
+        assert 1 <= wr * wc <= 256
+
+
+def test_block_geometry():
+    for cfg in all_configs():
+        assert cfg.block_m == cfg.acc_r * cfg.wg_r
+        assert cfg.block_n == cfg.acc_c * cfg.wg_c
+        assert cfg.k_chunk == cfg.acc_a * K_UNIT
+        assert cfg.acc_r in TILE_SIZES
+        assert cfg.acc_a in TILE_SIZES
+        assert cfg.acc_c in TILE_SIZES
+
+
+def test_vmem_estimate_monotone_in_a():
+    # Deeper A pipelines strictly grow the VMEM working set.
+    base = config_by_name("r4a1c4_wg8x8")
+    deeper = config_by_name("r4a8c4_wg8x8")
+    assert deeper.vmem_bytes() > base.vmem_bytes()
+    assert deeper.k_chunk == 8 * base.k_chunk

@@ -1,0 +1,210 @@
+"""Pallas kernel vs pure-jnp oracle — the core L1 correctness signal.
+
+Deterministic sweeps cover every tile combination and every work-group
+pairing; hypothesis drives randomized shapes, dtypes and configurations.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import (
+    NUM_CONFIGS,
+    TILE_SIZES,
+    WORKGROUPS,
+    KernelConfig,
+    batched_matmul,
+    batched_matmul_ref,
+    config_by_index,
+    matmul,
+    matmul_ref,
+    padded_dims,
+)
+
+RNG = np.random.default_rng(1234)
+
+
+def rand(shape, dtype=np.float32):
+    return jnp.asarray(RNG.normal(size=shape).astype(dtype))
+
+
+def assert_matches_ref(lhs, rhs, cfg, rtol=2e-5, atol=2e-5):
+    got = batched_matmul(lhs, rhs, cfg)
+    want = batched_matmul_ref(lhs, rhs)
+    assert got.shape == want.shape
+    assert got.dtype == want.dtype
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32),
+        np.asarray(want, np.float32),
+        rtol=rtol,
+        atol=atol,
+        err_msg=f"config {cfg.name}",
+    )
+
+
+@pytest.mark.parametrize("r", TILE_SIZES)
+@pytest.mark.parametrize("a", TILE_SIZES)
+@pytest.mark.parametrize("c", TILE_SIZES)
+def test_all_tile_combinations(r, a, c):
+    cfg = KernelConfig(r, a, c, 8, 8)
+    lhs, rhs = rand((2, 33, 65)), rand((2, 65, 17))
+    assert_matches_ref(lhs, rhs, cfg)
+
+
+@pytest.mark.parametrize("wg", WORKGROUPS, ids=lambda w: f"{w[0]}x{w[1]}")
+def test_all_workgroups(wg):
+    cfg = KernelConfig(2, 2, 2, *wg)
+    lhs, rhs = rand((3, 40, 50)), rand((3, 50, 30))
+    assert_matches_ref(lhs, rhs, cfg)
+
+
+def test_exact_block_multiple_shapes():
+    # No padding path: shapes already multiples of the block geometry.
+    cfg = KernelConfig(4, 2, 4, 8, 8)  # bm=32, bn=32, kc=64
+    lhs, rhs = rand((2, 64, 128)), rand((2, 128, 32))
+    mp, kp, np_ = padded_dims(cfg, 64, 128, 32)
+    assert (mp, kp, np_) == (64, 128, 32)
+    assert_matches_ref(lhs, rhs, cfg)
+
+
+def test_single_element_dims():
+    cfg = KernelConfig(1, 1, 1, 8, 8)
+    assert_matches_ref(rand((1, 1, 1)), rand((1, 1, 1)), cfg)
+
+
+def test_tall_skinny():
+    # The paper's pathological class: m=32, k large, n tiny.
+    cfg = KernelConfig(1, 8, 1, 8, 8)
+    lhs, rhs = rand((1, 32, 1234)), rand((1, 1234, 27))
+    # Larger K accumulates more reduction-order noise.
+    assert_matches_ref(lhs, rhs, cfg, rtol=1e-4, atol=1e-4)
+
+
+def test_batch_dimension_independent():
+    cfg = KernelConfig(2, 1, 2, 8, 16)
+    lhs, rhs = rand((4, 24, 40)), rand((4, 40, 24))
+    out = batched_matmul(lhs, rhs, cfg)
+    for b in range(4):
+        np.testing.assert_allclose(
+            np.asarray(out[b]),
+            np.asarray(matmul_ref(lhs[b], rhs[b])),
+            rtol=2e-5,
+            atol=2e-5,
+        )
+
+
+def test_unbatched_wrapper():
+    cfg = KernelConfig(2, 2, 2, 8, 8)
+    lhs, rhs = rand((30, 20)), rand((20, 10))
+    np.testing.assert_allclose(
+        np.asarray(matmul(lhs, rhs, cfg)),
+        np.asarray(matmul_ref(lhs, rhs)),
+        rtol=2e-5,
+        atol=2e-5,
+    )
+
+
+def test_bfloat16():
+    cfg = KernelConfig(4, 2, 4, 8, 8)
+    lhs = rand((2, 32, 64)).astype(jnp.bfloat16)
+    rhs = rand((2, 64, 32)).astype(jnp.bfloat16)
+    got = batched_matmul(lhs, rhs, cfg)
+    want = batched_matmul_ref(lhs, rhs)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32),
+        np.asarray(want, np.float32),
+        rtol=2e-2,
+        atol=2e-2,
+    )
+
+
+def test_zero_inputs_give_zero():
+    cfg = KernelConfig(8, 8, 8, 16, 16)
+    lhs = jnp.zeros((1, 100, 300), jnp.float32)
+    rhs = jnp.zeros((1, 300, 50), jnp.float32)
+    out = batched_matmul(lhs, rhs, cfg)
+    assert not np.any(np.asarray(out))
+
+
+def test_identity_rhs_is_identity():
+    cfg = KernelConfig(2, 4, 2, 16, 8)
+    lhs = rand((2, 48, 36))
+    eye = jnp.tile(jnp.eye(36, dtype=jnp.float32)[None], (2, 1, 1))
+    np.testing.assert_allclose(
+        np.asarray(batched_matmul(lhs, eye, cfg)),
+        np.asarray(lhs),
+        rtol=1e-6,
+        atol=1e-6,
+    )
+
+
+def test_shape_mismatch_raises():
+    cfg = KernelConfig(1, 1, 1, 8, 8)
+    with pytest.raises(ValueError):
+        batched_matmul(rand((1, 4, 5)), rand((1, 6, 4)), cfg)
+    with pytest.raises(ValueError):
+        batched_matmul(rand((2, 4, 5)), rand((1, 5, 4)), cfg)
+    with pytest.raises(ValueError):
+        batched_matmul(rand((4, 5)), rand((5, 4)), cfg)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps: random configs x random shapes x dtypes.
+# ---------------------------------------------------------------------------
+
+shape_dims = st.tuples(
+    st.integers(1, 3),    # batch
+    st.integers(1, 48),   # m
+    st.integers(1, 80),   # k
+    st.integers(1, 48),   # n
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(cfg_idx=st.integers(0, NUM_CONFIGS - 1), dims=shape_dims)
+def test_random_config_random_shape(cfg_idx, dims):
+    cfg = config_by_index(cfg_idx)
+    b, m, k, n = dims
+    rng = np.random.default_rng(cfg_idx * 1_000_003 + m * 997 + k * 31 + n)
+    lhs = jnp.asarray(rng.normal(size=(b, m, k)).astype(np.float32))
+    rhs = jnp.asarray(rng.normal(size=(b, k, n)).astype(np.float32))
+    assert_matches_ref(lhs, rhs, cfg, rtol=3e-5, atol=3e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    cfg_idx=st.integers(0, NUM_CONFIGS - 1),
+    m=st.integers(1, 32),
+    k=st.integers(1, 64),
+    n=st.integers(1, 32),
+)
+def test_random_bf16(cfg_idx, m, k, n):
+    cfg = config_by_index(cfg_idx)
+    rng = np.random.default_rng(cfg_idx + m + k + n)
+    lhs = jnp.asarray(rng.normal(size=(1, m, k))).astype(jnp.bfloat16)
+    rhs = jnp.asarray(rng.normal(size=(1, k, n))).astype(jnp.bfloat16)
+    got = batched_matmul(lhs, rhs, cfg)
+    want = batched_matmul_ref(lhs, rhs)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32),
+        np.asarray(want, np.float32),
+        rtol=5e-2,
+        atol=5e-2,
+    )
+
+
+def test_padded_dims_properties():
+    for idx in range(0, NUM_CONFIGS, 17):
+        cfg = config_by_index(idx)
+        for m, k, n in [(1, 1, 1), (37, 100, 27), (512, 784, 512)]:
+            mp, kp, np_ = padded_dims(cfg, m, k, n)
+            assert mp >= m and kp >= k and np_ >= n
+            assert mp % cfg.block_m == 0
+            assert kp % cfg.k_chunk == 0
+            assert np_ % cfg.block_n == 0
+            assert mp - m < cfg.block_m
+            assert kp - k < cfg.k_chunk
+            assert np_ - n < cfg.block_n

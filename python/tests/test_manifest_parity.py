@@ -1,0 +1,64 @@
+"""Cross-language parity: the artifact manifest ties the Python and Rust
+views of the configuration space together. These tests pin the contract the
+Rust runtime relies on (config names <-> indices, shapes, flops)."""
+
+import json
+import os
+
+import pytest
+
+from compile.kernels import config_by_index, config_by_name
+
+MANIFEST = os.path.join(
+    os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json"
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    if not os.path.exists(MANIFEST):
+        pytest.skip("run `make artifacts` first")
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_config_names_and_indices_consistent(manifest):
+    checked = 0
+    for a in manifest["artifacts"]:
+        if a["config"] is None:
+            assert a["config_index"] is None
+            continue
+        cfg = config_by_name(a["config"])
+        assert cfg.index() == a["config_index"], a["path"]
+        checked += 1
+    assert checked > 50
+
+
+def test_flops_match_dims(manifest):
+    for a in manifest["artifacts"]:
+        if a["kind"] == "matmul":
+            assert a["flops"] == 2 * a["b"] * a["m"] * a["k"] * a["n"]
+
+
+def test_matmul_input_shapes_consistent(manifest):
+    for a in manifest["artifacts"]:
+        if a["kind"] == "matmul":
+            assert a["inputs"] == [
+                [a["b"], a["m"], a["k"]],
+                [a["b"], a["k"], a["n"]],
+            ]
+            assert a["output"] == [a["b"], a["m"], a["n"]]
+
+
+def test_deployed_set_valid(manifest):
+    deployed = manifest["meta"]["deployed"]
+    assert len(deployed) == len(set(deployed)) == 8
+    for name in deployed + [manifest["meta"]["single_best"]]:
+        cfg = config_by_name(name)  # raises KeyError if invalid
+        assert config_by_index(cfg.index()) == cfg
+
+
+def test_all_artifact_files_exist(manifest):
+    base = os.path.dirname(MANIFEST)
+    for a in manifest["artifacts"]:
+        assert os.path.exists(os.path.join(base, a["path"])), a["path"]

@@ -1,0 +1,183 @@
+"""Layer-2 model tests: layer fns, im2col, network forward, weight generator."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile import model as M
+from compile.kernels import KernelConfig
+
+CFG = KernelConfig(2, 2, 2, 8, 8)
+
+
+def rand(shape, seed=0):
+    return jnp.asarray(np.random.default_rng(seed).normal(size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# fill_buffer: golden values that the Rust util::fill mirror must also match.
+# ---------------------------------------------------------------------------
+
+
+def test_fill_buffer_golden():
+    buf = M.fill_buffer(7, 4)
+    # xorshift32 with state seeded at (7 * 2654435761) % 2^32.
+    state = (7 * 2654435761) % 2**32
+    want = []
+    x = state
+    for _ in range(4):
+        x ^= (x << 13) & 0xFFFFFFFF
+        x ^= x >> 17
+        x ^= (x << 5) & 0xFFFFFFFF
+        want.append(x / 2**32 - 0.5)
+    np.testing.assert_allclose(buf, np.array(want, np.float32), rtol=0, atol=0)
+
+
+def test_fill_buffer_range_and_determinism():
+    a = M.fill_buffer(123, 1000)
+    b = M.fill_buffer(123, 1000)
+    np.testing.assert_array_equal(a, b)
+    assert np.all(a >= -0.5) and np.all(a < 0.5)
+    assert np.std(a) > 0.2  # roughly uniform
+    c = M.fill_buffer(124, 1000)
+    assert np.any(a != c)
+
+
+def test_fill_buffer_zero_seed_fallback():
+    # seed*2654435761 % 2^32 == 0 must not give a stuck xorshift state.
+    buf = M.fill_buffer(0, 8)
+    assert np.any(buf != buf[0])
+
+
+# ---------------------------------------------------------------------------
+# im2col.
+# ---------------------------------------------------------------------------
+
+
+def test_im2col_matches_conv():
+    """im2col GEMM must equal jax's own convolution."""
+    import jax
+
+    x = rand((1, 6, 6, 3), seed=1)
+    w_hwio = rand((3, 3, 3, 5), seed=2)
+    want = jax.lax.conv_general_dilated(
+        x,
+        w_hwio,
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    patches = M.im2col_3x3(x)  # (1, 36, 27)
+    w_mat = w_hwio.reshape(9 * 3, 5)
+    got = (patches @ w_mat).reshape(1, 6, 6, 5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_im2col_shape():
+    x = rand((1, 8, 8, 4))
+    assert M.im2col_3x3(x).shape == (1, 64, 36)
+
+
+def test_maxpool():
+    x = jnp.arange(16.0).reshape(1, 4, 4, 1)
+    out = M.maxpool_2x2(x)
+    assert out.shape == (1, 2, 2, 1)
+    np.testing.assert_array_equal(
+        np.asarray(out[0, :, :, 0]), np.array([[5.0, 7.0], [13.0, 15.0]])
+    )
+
+
+# ---------------------------------------------------------------------------
+# Layer specs.
+# ---------------------------------------------------------------------------
+
+
+def test_vgg16_layer_structure():
+    layers = M.vgg16_layers(224)
+    assert len(layers) == 16  # 13 conv + 3 fc
+    convs = [l for l in layers if isinstance(l, M.ConvSpec)]
+    fcs = [l for l in layers if isinstance(l, M.FcSpec)]
+    assert len(convs) == 13 and len(fcs) == 3
+    # Paper §6.2: GEMM inputs vary from 12544x64 ... 512x512 territory.
+    assert convs[0].gemm_m == 224 * 224 and convs[0].gemm_k == 27
+    assert convs[2].gemm_m == 112 * 112 and convs[2].gemm_n == 128
+    assert convs[-1].gemm_k == 9 * 512 and convs[-1].gemm_n == 512
+    assert fcs[0].k == 7 * 7 * 512 and fcs[0].n == 4096
+    assert fcs[-1].n == 1000
+    # Total ~138M parameters.
+    params = sum(9 * c.cin * c.cout + c.cout for c in convs)
+    params += sum(f.k * f.n + f.n for f in fcs)
+    assert 137e6 < params < 139e6
+
+
+def test_vgg16_tiny_structure():
+    layers = M.network_layers("vgg16-tiny")
+    assert len(layers) == 16
+    assert layers[0].hw == 32
+    assert layers[-1].n == 10
+    # Spatial size reaches 1x1 after 5 pools.
+    assert layers[12].out_hw == 1
+
+
+def test_unknown_network_raises():
+    with pytest.raises(KeyError):
+        M.network_layers("resnet9000")
+
+
+# ---------------------------------------------------------------------------
+# Layer forward: pallas backend vs xla backend.
+# ---------------------------------------------------------------------------
+
+
+def test_conv_layer_pallas_vs_xla():
+    spec = M.ConvSpec("c", hw=8, cin=3, cout=16, pool=True)
+    x = rand((1, 8, 8, 3), seed=3)
+    w = rand((27, 16), seed=4)
+    b = rand((16,), seed=5)
+    got = M.conv_layer_fn(spec, M.pallas_backend(CFG))(x, w, b)
+    want = M.conv_layer_fn(spec, M.xla_backend())(x, w, b)
+    assert got.shape == (1, 4, 4, 16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_fc_layer_pallas_vs_xla():
+    spec = M.FcSpec("f", k=64, n=32, relu=True)
+    x, w, b = rand((1, 64), seed=6), rand((64, 32), seed=7), rand((32,), seed=8)
+    got = M.fc_layer_fn(spec, M.pallas_backend(CFG))(x, w, b)
+    want = M.fc_layer_fn(spec, M.xla_backend())(x, w, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+    assert np.all(np.asarray(got) >= 0)  # relu applied
+
+
+def test_fc_layer_no_relu_can_be_negative():
+    spec = M.FcSpec("f", k=32, n=16, relu=False)
+    x, w, b = rand((1, 32), seed=9), rand((32, 16), seed=10), rand((16,), seed=11)
+    out = np.asarray(M.fc_layer_fn(spec, M.xla_backend())(x, w, b))
+    assert np.any(out < 0)
+
+
+def test_network_forward_tiny_pallas_matches_xla():
+    """Full vgg16-tiny forward: per-layer Pallas kernels vs XLA backend."""
+    layers = M.network_layers("vgg16-tiny")
+    image = jnp.asarray(
+        M.fill_buffer(99, 32 * 32 * 3).reshape(1, 32, 32, 3)
+    )
+    got = M.network_forward(layers, image, lambda i, s: M.pallas_backend(CFG))
+    want = M.network_forward(layers, image, lambda i, s: M.xla_backend())
+    assert got.shape == (1, 10)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=5e-4, atol=5e-4
+    )
+    assert np.all(np.isfinite(np.asarray(got)))
+
+
+def test_layer_input_specs_match_forward():
+    for spec in M.network_layers("vgg16-tiny"):
+        shapes = M.layer_input_specs(spec)
+        assert len(shapes) == 3
+        if isinstance(spec, M.ConvSpec):
+            assert shapes[0].shape == (1, spec.hw, spec.hw, spec.cin)
+            assert shapes[1].shape == (9 * spec.cin, spec.cout)
+        else:
+            assert shapes[0].shape == (1, spec.k)

@@ -1,0 +1,90 @@
+//! Bench: coordinator serving throughput and latency under different
+//! batching configurations and selector policies.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use kernelsel::coordinator::{BatcherConfig, Coordinator, SelectorPolicy};
+use kernelsel::dataset::{config_by_name, GemmShape};
+use kernelsel::runtime::Manifest;
+use kernelsel::util::fill_buffer;
+
+const CLIENTS: usize = 4;
+const REQUESTS_PER_CLIENT: usize = 16;
+
+fn run_once(policy: SelectorPolicy, cfg: BatcherConfig, label: &str) {
+    let dir = PathBuf::from("artifacts");
+    let coord = Arc::new(Coordinator::start(dir, policy, cfg).expect("start"));
+    let shapes = [
+        GemmShape::new(128, 128, 128, 1),
+        GemmShape::new(1024, 27, 64, 1),
+        GemmShape::new(64, 2304, 128, 1),
+    ];
+    // Warm the executable cache.
+    for s in shapes {
+        let lhs = fill_buffer(1, s.batch * s.m * s.k);
+        let rhs = fill_buffer(2, s.batch * s.k * s.n);
+        let _ = coord.call(s, lhs, rhs);
+    }
+
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..CLIENTS {
+        let coord = coord.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut lat = Vec::new();
+            for i in 0..REQUESTS_PER_CLIENT {
+                let s = shapes[(c + i) % shapes.len()];
+                let lhs = fill_buffer((c * 37 + i) as u32, s.batch * s.m * s.k);
+                let rhs = fill_buffer((c * 37 + i + 11) as u32, s.batch * s.k * s.n);
+                let resp = coord.call(s, lhs, rhs).expect("call");
+                assert!(resp.result.is_ok());
+                lat.push(resp.latency.as_secs_f64());
+            }
+            lat
+        }));
+    }
+    let mut latencies = Vec::new();
+    for j in joins {
+        latencies.extend(j.join().unwrap());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let total = CLIENTS * REQUESTS_PER_CLIENT;
+    let metrics = Arc::try_unwrap(coord).ok().expect("sole owner").stop();
+    let stats = kernelsel::util::Stats::from_secs(&latencies);
+    println!(
+        "{label:<34} {:>8.1} req/s  p50 {:>7.2} ms  p95 {:>7.2} ms  mean_batch {:.2}",
+        total as f64 / wall,
+        stats.p50 * 1e3,
+        stats.p95 * 1e3,
+        metrics.mean_batch_size()
+    );
+}
+
+fn main() {
+    let manifest = Manifest::load(&PathBuf::from("artifacts")).expect("manifest");
+    let single = config_by_name(&manifest.single_best).unwrap().index();
+
+    println!("== coordinator throughput ({CLIENTS} clients x {REQUESTS_PER_CLIENT} reqs) ==");
+    for (label, max_batch, wait_us) in [
+        ("no batching (max_batch=1)", 1usize, 0u64),
+        ("batch<=8, wait 200us", 8, 200),
+        ("batch<=16, wait 2ms", 16, 2000),
+        ("batch<=32, wait 5ms", 32, 5000),
+    ] {
+        run_once(
+            SelectorPolicy::Xla,
+            BatcherConfig {
+                max_batch,
+                max_wait: Duration::from_micros(wait_us),
+            },
+            &format!("xla | {label}"),
+        );
+    }
+    run_once(
+        SelectorPolicy::Single(single),
+        BatcherConfig::default(),
+        "single-config | default batching",
+    );
+}

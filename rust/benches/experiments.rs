@@ -1,0 +1,36 @@
+//! Bench: regenerate every paper figure/table (the per-table end-to-end
+//! harness required by DESIGN.md §5), timing each driver.
+//!
+//! `cargo bench` runs this with a stride-2 dataset to stay quick; the full
+//! unstrided regeneration is `make experiments` / `kernelsel experiment all`.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use kernelsel::experiments::{run, Context, ALL_EXPERIMENTS};
+
+fn main() {
+    let stride: usize = std::env::var("KERNELSEL_BENCH_STRIDE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2);
+    let ctx = Context::with_stride(7, stride);
+    let artifacts = PathBuf::from("artifacts");
+    println!("== paper experiment regeneration (stride {stride}) ==\n");
+    let mut total = 0.0;
+    for id in ALL_EXPERIMENTS {
+        let t0 = Instant::now();
+        match run(id, &ctx, &artifacts) {
+            Ok(tables) => {
+                let secs = t0.elapsed().as_secs_f64();
+                total += secs;
+                println!("[{id}] {} table(s) in {secs:.2}s", tables.len());
+                for t in tables {
+                    println!("{}", t.render());
+                }
+            }
+            Err(e) => println!("[{id}] ERROR: {e}"),
+        }
+    }
+    println!("total experiment regeneration: {total:.1}s");
+}

@@ -1,0 +1,91 @@
+//! Bench: PJRT artifact execution — per-configuration GEMM wallclock on the
+//! local CPU, compile cost, and host<->device transfer overhead.
+//!
+//! This is the *measured* counterpart of the devsim numbers: it times every
+//! deployed Pallas configuration plus the XLA-dot backend on the shipped
+//! quickstart/Fig-1 shapes, i.e. a real (if small) slice of the paper's
+//! brute-force benchmark matrix.
+
+use std::time::{Duration, Instant};
+
+use kernelsel::dataset::config_by_name;
+use kernelsel::runtime::{Manifest, Runtime};
+use kernelsel::util::{fill_buffer, timing::measure};
+
+fn main() {
+    let dir = std::path::PathBuf::from("artifacts");
+    let runtime = Runtime::new(&dir).expect("PJRT runtime");
+    let manifest = Manifest::load(&dir).expect("run `make artifacts` first");
+
+    let shapes: [(usize, usize, usize, usize); 3] =
+        [(128, 128, 128, 1), (512, 784, 512, 1), (64, 2304, 128, 1)];
+
+    let mut backends: Vec<(String, Option<usize>)> = vec![("xla".into(), None)];
+    for name in &manifest.deployed {
+        backends.push((name.clone(), Some(config_by_name(name).unwrap().index())));
+    }
+
+    println!(
+        "{:<20} {:>22} {:>12} {:>12} {:>10}",
+        "backend", "shape", "mean ms", "p95 ms", "GFLOP/s"
+    );
+    for (m, k, n, b) in shapes {
+        let lhs = fill_buffer(1, b * m * k);
+        let rhs = fill_buffer(2, b * k * n);
+        let flops = 2.0 * (b * m * k * n) as f64;
+        for (name, cfg) in &backends {
+            let Some(meta) = manifest.find_matmul(*cfg, m, k, n, b) else {
+                continue;
+            };
+            let exe = runtime.load(&meta.path).expect("compile");
+            let stats = measure(
+                || {
+                    runtime
+                        .execute_f32(&exe, &[(&lhs, &[b, m, k]), (&rhs, &[b, k, n])])
+                        .expect("exec");
+                },
+                2,
+                Duration::from_millis(400),
+            );
+            println!(
+                "{:<20} {:>22} {:>12.3} {:>12.3} {:>10.2}",
+                name,
+                format!("m{m} k{k} n{n} b{b}"),
+                stats.mean_ms(),
+                stats.p95 * 1e3,
+                flops / stats.mean / 1e9
+            );
+        }
+    }
+
+    // Compile + transfer overheads.
+    println!("\n== overheads ==");
+    let meta = manifest.find_matmul(None, 128, 128, 128, 1).unwrap();
+    let t0 = Instant::now();
+    let fresh = Runtime::new(&dir).unwrap();
+    let _ = fresh.load(&meta.path).unwrap();
+    println!("cold load+compile (128^3 xla): {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+
+    let data = fill_buffer(3, 512 * 784);
+    let stats = measure(
+        || {
+            fresh.upload(&data, &[512, 784]).unwrap();
+        },
+        3,
+        Duration::from_millis(200),
+    );
+    println!(
+        "upload 512x784 f32 (1.5 MiB): {:.3} ms ({:.2} GB/s)",
+        stats.mean_ms(),
+        (512.0 * 784.0 * 4.0) / stats.mean / 1e9
+    );
+
+    let final_stats = runtime.stats();
+    println!(
+        "\nruntime totals: {} compiles {:.2}s, {} executions {:.2}s",
+        final_stats.compiles,
+        final_stats.compile_secs,
+        final_stats.executions,
+        final_stats.execute_secs
+    );
+}

@@ -1,0 +1,70 @@
+//! Bench: the runtime-selection hot path (paper §5's cost argument).
+//!
+//! The whole point of shipping a decision tree in the launcher is that the
+//! per-request classification cost must be negligible next to the kernel
+//! launch. This bench measures, per lookup:
+//!   * raw feature computation from a GemmShape,
+//!   * the compiled (flattened, destandardized) decision tree,
+//!   * the boxed classifier objects (tree / kNN / SVM / forest / MLP) —
+//!     the costly alternatives Tables 1/2 argue against deploying.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use kernelsel::classify::codegen::CompiledTree;
+use kernelsel::classify::{ClassifierKind, KernelClassifier, ALL_CLASSIFIERS};
+use kernelsel::dataset::{benchmark_shapes, GemmShape, Normalization};
+use kernelsel::devsim::{generate_dataset, profile_by_name};
+use kernelsel::selection::{select, Method};
+
+fn bench<F: FnMut()>(label: &str, iters: usize, mut f: F) {
+    // Warmup.
+    for _ in 0..iters / 10 + 1 {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+    println!("{label:<44} {ns:>12.1} ns/op");
+}
+
+fn main() {
+    println!("== selector hot path ==");
+    let shapes: Vec<GemmShape> = benchmark_shapes().into_iter().step_by(2).collect();
+    let ds = generate_dataset(profile_by_name("i7-6700k").unwrap(), &shapes);
+    let deployed = select(Method::PcaKMeans, &ds, Normalization::Standard, 8, 7);
+
+    let probe = GemmShape::new(512, 784, 512, 1);
+    bench("GemmShape::features", 1_000_000, || {
+        black_box(black_box(&probe).features());
+    });
+
+    let clf = KernelClassifier::fit(ClassifierKind::DecisionTreeB, &ds, &deployed, 7);
+    let tree = CompiledTree::compile(&clf).unwrap();
+    let feats = probe.features();
+    bench("CompiledTree::predict_config (hot path)", 1_000_000, || {
+        black_box(tree.predict_config(black_box(&feats)));
+    });
+    bench("CompiledTree incl. feature computation", 1_000_000, || {
+        black_box(tree.predict_config(&black_box(&probe).features()));
+    });
+
+    println!("\n== classifier objects (why trees win deployment) ==");
+    for kind in ALL_CLASSIFIERS {
+        let clf = KernelClassifier::fit(kind, &ds, &deployed, 7);
+        let iters = match kind {
+            ClassifierKind::NearestNeighbor1
+            | ClassifierKind::NearestNeighbor3
+            | ClassifierKind::NearestNeighbor7
+            | ClassifierKind::RadialSvm
+            | ClassifierKind::LinearSvm => 20_000,
+            ClassifierKind::RandomForest | ClassifierKind::Mlp => 50_000,
+            _ => 500_000,
+        };
+        bench(&format!("{}::predict", kind.name()), iters, || {
+            black_box(clf.predict_config(black_box(&feats)));
+        });
+    }
+}

@@ -1,0 +1,244 @@
+//! Decision-tree serialization and code generation.
+//!
+//! The paper's deployment story (§5.1): a decision tree "can be implemented
+//! as a series of nested if statements within the kernel launcher". Two
+//! forms are provided:
+//!
+//! * [`CompiledTree`] — a flat, allocation-free table the coordinator
+//!   evaluates on the request hot path (a few compares per lookup),
+//! * [`to_rust_source`] — generated Rust nested-if source, ready to paste
+//!   into a library that wants zero runtime data files.
+
+use crate::classify::{KernelClassifier, Standardizer};
+use crate::dataset::shapes::FEATURE_NAMES;
+use crate::ml::decision_tree::{Node, TreeClassifier};
+
+/// Flat decision-tree selector: nodes in preorder, features pre-standardized
+/// at build time so the hot path needs no allocation and no division.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CompiledTree {
+    /// (feature, threshold_destandardized, left, right); leaves encoded as
+    /// feature == usize::MAX with `left` holding the deployed-set class.
+    nodes: Vec<(usize, f64, u32, u32)>,
+    /// Deployed configuration indices; classes index into this.
+    pub deployed: Vec<usize>,
+}
+
+impl CompiledTree {
+    /// Compile a trained decision-tree classifier. Thresholds are folded
+    /// back into *raw feature* space (destandardized) so evaluation skips
+    /// the z-score transform entirely.
+    pub fn compile(clf: &KernelClassifier) -> Option<CompiledTree> {
+        let tree = clf.tree()?;
+        Some(CompiledTree {
+            nodes: flatten(tree, &clf.standardizer),
+            deployed: clf.deployed.clone(),
+        })
+    }
+
+    /// Deployed-set class for raw (unstandardized) shape features.
+    #[inline]
+    pub fn predict_class(&self, raw: &[f64]) -> usize {
+        let mut i = 0usize;
+        loop {
+            let (feat, thr, left, right) = self.nodes[i];
+            if feat == usize::MAX {
+                return left as usize;
+            }
+            i = if raw[feat] <= thr { left as usize } else { right as usize };
+        }
+    }
+
+    /// Full-space configuration index for raw shape features.
+    #[inline]
+    pub fn predict_config(&self, raw: &[f64]) -> usize {
+        self.deployed[self.predict_class(raw).min(self.deployed.len() - 1)]
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    // -- serialization (one line per node; human-auditable) ----------------
+
+    pub fn serialize(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "deployed {}\n",
+            self.deployed
+                .iter()
+                .map(|c| c.to_string())
+                .collect::<Vec<_>>()
+                .join(",")
+        ));
+        for &(feat, thr, left, right) in &self.nodes {
+            if feat == usize::MAX {
+                out.push_str(&format!("leaf {left}\n"));
+            } else {
+                out.push_str(&format!("split {feat} {thr:.17e} {left} {right}\n"));
+            }
+        }
+        out
+    }
+
+    pub fn deserialize(text: &str) -> Result<CompiledTree, String> {
+        let mut lines = text.lines();
+        let header = lines.next().ok_or("empty tree")?;
+        let deployed: Vec<usize> = header
+            .strip_prefix("deployed ")
+            .ok_or("missing deployed header")?
+            .split(',')
+            .map(|s| s.parse().map_err(|_| format!("bad config index {s}")))
+            .collect::<Result<_, String>>()?;
+        let mut nodes = Vec::new();
+        for line in lines {
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            match parts.as_slice() {
+                ["leaf", cls] => nodes.push((
+                    usize::MAX,
+                    0.0,
+                    cls.parse::<u32>().map_err(|e| e.to_string())?,
+                    0,
+                )),
+                ["split", f, t, l, r] => nodes.push((
+                    f.parse().map_err(|_| "bad feature")?,
+                    t.parse().map_err(|_| "bad threshold")?,
+                    l.parse().map_err(|_| "bad left")?,
+                    r.parse().map_err(|_| "bad right")?,
+                )),
+                [] => {}
+                _ => return Err(format!("bad tree line: {line}")),
+            }
+        }
+        if nodes.is_empty() {
+            return Err("tree has no nodes".into());
+        }
+        Ok(CompiledTree { nodes, deployed })
+    }
+}
+
+fn flatten(tree: &TreeClassifier, st: &Standardizer) -> Vec<(usize, f64, u32, u32)> {
+    let mut out = Vec::with_capacity(tree.nodes.len());
+    for node in &tree.nodes {
+        match node {
+            Node::Leaf { payload } => {
+                let counts = &tree.leaf_counts[*payload];
+                let cls = counts
+                    .iter()
+                    .enumerate()
+                    .max_by_key(|&(_, &c)| c)
+                    .map(|(i, _)| i)
+                    .unwrap_or(0);
+                out.push((usize::MAX, 0.0, cls as u32, 0));
+            }
+            Node::Split { feature, threshold, left, right } => {
+                // Destandardize: z <= t  <=>  raw <= t * std + mean.
+                let thr = threshold * st.std[*feature] + st.mean[*feature];
+                out.push((*feature, thr, *left as u32, *right as u32));
+            }
+        }
+    }
+    out
+}
+
+/// Generated Rust source: nested ifs over the raw feature names, as a
+/// library would embed (paper §5.1).
+pub fn to_rust_source(ct: &CompiledTree, fn_name: &str) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "/// Auto-generated kernel selector: returns an index into the\n\
+         /// deployed configuration table {:?}.\n",
+        ct.deployed
+    ));
+    out.push_str(&format!(
+        "pub fn {fn_name}(features: &[f64; {}]) -> usize {{\n",
+        FEATURE_NAMES.len()
+    ));
+    emit(ct, 0, 1, &mut out);
+    out.push_str("}\n");
+    out
+}
+
+fn emit(ct: &CompiledTree, node: usize, depth: usize, out: &mut String) {
+    let pad = "    ".repeat(depth);
+    let (feat, thr, left, right) = ct.nodes[node];
+    if feat == usize::MAX {
+        out.push_str(&format!("{pad}{left} // {:?}\n", ct.deployed.get(left as usize)));
+        return;
+    }
+    out.push_str(&format!(
+        "{pad}if features[{feat}] <= {thr:.6} {{ // {}\n",
+        FEATURE_NAMES[feat]
+    ));
+    emit(ct, left as usize, depth + 1, out);
+    out.push_str(&format!("{pad}}} else {{\n"));
+    emit(ct, right as usize, depth + 1, out);
+    out.push_str(&format!("{pad}}}\n"));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::classify::{ClassifierKind, KernelClassifier};
+    use crate::dataset::{benchmark_shapes, GemmShape};
+    use crate::devsim::{generate_dataset, profile_by_name};
+
+    fn trained() -> KernelClassifier {
+        let shapes: Vec<GemmShape> =
+            benchmark_shapes().into_iter().step_by(6).collect();
+        let ds = generate_dataset(profile_by_name("r9-nano").unwrap(), &shapes);
+        KernelClassifier::fit(ClassifierKind::DecisionTreeB, &ds, &[3, 77, 205, 611], 1)
+    }
+
+    #[test]
+    fn compiled_matches_original() {
+        let clf = trained();
+        let ct = CompiledTree::compile(&clf).unwrap();
+        for s in benchmark_shapes().iter().step_by(3) {
+            let f = s.features();
+            assert_eq!(
+                ct.predict_config(&f),
+                clf.predict_config(&f),
+                "mismatch on {s:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let clf = trained();
+        let ct = CompiledTree::compile(&clf).unwrap();
+        let text = ct.serialize();
+        let back = CompiledTree::deserialize(&text).unwrap();
+        assert_eq!(ct, back);
+    }
+
+    #[test]
+    fn deserialize_rejects_garbage() {
+        assert!(CompiledTree::deserialize("").is_err());
+        assert!(CompiledTree::deserialize("deployed 1,2\nnonsense 1 2\n").is_err());
+        assert!(CompiledTree::deserialize("deployed 1,2\n").is_err());
+    }
+
+    #[test]
+    fn rust_source_compilesque() {
+        let clf = trained();
+        let ct = CompiledTree::compile(&clf).unwrap();
+        let src = to_rust_source(&ct, "select_kernel");
+        assert!(src.contains("pub fn select_kernel"));
+        assert!(src.contains("features["));
+        // Balanced braces.
+        let open = src.matches('{').count();
+        let close = src.matches('}').count();
+        assert_eq!(open, close);
+    }
+
+    #[test]
+    fn non_tree_classifier_cannot_compile() {
+        let shapes: Vec<GemmShape> =
+            benchmark_shapes().into_iter().step_by(10).collect();
+        let ds = generate_dataset(profile_by_name("i7-6700k").unwrap(), &shapes);
+        let knn = KernelClassifier::fit(ClassifierKind::NearestNeighbor1, &ds, &[1, 2], 1);
+        assert!(CompiledTree::compile(&knn).is_none());
+    }
+}

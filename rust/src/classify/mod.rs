@@ -1,0 +1,335 @@
+//! Runtime kernel classification (paper §5): map a GEMM's matrix sizes to
+//! one of the deployed kernel configurations.
+//!
+//! Training labels come from the benchmark data: for each training size set
+//! the label is the deployed configuration with the best measured
+//! performance. Features are the log-scaled shape descriptors of
+//! `GemmShape::features`, z-score standardized on the training split.
+//!
+//! The ten classifiers of Tables 1 and 2 are provided behind one enum:
+//! decision trees A/B/C, 1/3/7-NN, linear/RBF SVM, random forest, MLP.
+
+pub mod codegen;
+
+use crate::dataset::PerfDataset;
+use crate::linalg::stats::argmax;
+use crate::linalg::Matrix;
+use crate::ml::decision_tree::{TreeClassifier, TreeParams};
+use crate::ml::knn::Knn;
+use crate::ml::mlp::{Mlp, MlpParams};
+use crate::ml::random_forest::{ForestParams, RandomForest};
+use crate::ml::svm::{Kernel, Svm, SvmParams};
+
+/// The classifier lineup of paper §5.1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ClassifierKind {
+    /// Unbounded depth, single-sample leaves.
+    DecisionTreeA,
+    /// Depth <= 6, >= 3 samples per leaf.
+    DecisionTreeB,
+    /// Depth <= 3, >= 4 samples per leaf.
+    DecisionTreeC,
+    NearestNeighbor1,
+    NearestNeighbor3,
+    NearestNeighbor7,
+    LinearSvm,
+    RadialSvm,
+    RandomForest,
+    Mlp,
+}
+
+pub const ALL_CLASSIFIERS: [ClassifierKind; 10] = [
+    ClassifierKind::DecisionTreeA,
+    ClassifierKind::DecisionTreeB,
+    ClassifierKind::DecisionTreeC,
+    ClassifierKind::NearestNeighbor1,
+    ClassifierKind::NearestNeighbor3,
+    ClassifierKind::NearestNeighbor7,
+    ClassifierKind::LinearSvm,
+    ClassifierKind::RadialSvm,
+    ClassifierKind::RandomForest,
+    ClassifierKind::Mlp,
+];
+
+impl ClassifierKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ClassifierKind::DecisionTreeA => "DecisionTreeA",
+            ClassifierKind::DecisionTreeB => "DecisionTreeB",
+            ClassifierKind::DecisionTreeC => "DecisionTreeC",
+            ClassifierKind::NearestNeighbor1 => "1NearestNeighbor",
+            ClassifierKind::NearestNeighbor3 => "3NearestNeighbor",
+            ClassifierKind::NearestNeighbor7 => "7NearestNeighbor",
+            ClassifierKind::LinearSvm => "LinearSVM",
+            ClassifierKind::RadialSvm => "RadialSVM",
+            ClassifierKind::RandomForest => "RandomForest",
+            ClassifierKind::Mlp => "MLP",
+        }
+    }
+}
+
+/// Feature standardization fitted on the training split.
+#[derive(Clone, Debug)]
+pub struct Standardizer {
+    pub mean: Vec<f64>,
+    pub std: Vec<f64>,
+}
+
+impl Standardizer {
+    pub fn fit(x: &Matrix) -> Standardizer {
+        let mean = x.col_means();
+        let mut var = vec![0.0f64; x.cols];
+        for r in 0..x.rows {
+            for (v, (&xv, &mu)) in var.iter_mut().zip(x.row(r).iter().zip(&mean)) {
+                *v += (xv - mu) * (xv - mu);
+            }
+        }
+        let std = var
+            .into_iter()
+            .map(|v| (v / x.rows as f64).sqrt().max(1e-9))
+            .collect();
+        Standardizer { mean, std }
+    }
+
+    pub fn transform_row(&self, row: &[f64]) -> Vec<f64> {
+        row.iter()
+            .zip(self.mean.iter().zip(&self.std))
+            .map(|(&v, (&mu, &sd))| (v - mu) / sd)
+            .collect()
+    }
+
+    pub fn transform(&self, x: &Matrix) -> Matrix {
+        Matrix::from_rows(&(0..x.rows).map(|r| self.transform_row(x.row(r))).collect::<Vec<_>>())
+    }
+}
+
+/// A trained kernel selector: classifier + standardizer + the deployed set.
+pub struct KernelClassifier {
+    pub kind: ClassifierKind,
+    pub standardizer: Standardizer,
+    /// Deployed configuration indices; classifier classes index into this.
+    pub deployed: Vec<usize>,
+    model: Model,
+}
+
+enum Model {
+    Tree(TreeClassifier),
+    Knn(Knn),
+    Svm(Svm),
+    Forest(RandomForest),
+    Mlp(Mlp),
+}
+
+/// Labels for training: per size set, the best config among `deployed`.
+pub fn deployment_labels(ds: &PerfDataset, deployed: &[usize]) -> Vec<usize> {
+    (0..ds.n_shapes())
+        .map(|r| {
+            let per_deploy: Vec<f64> =
+                deployed.iter().map(|&c| ds.gflops[(r, c)]).collect();
+            argmax(&per_deploy)
+        })
+        .collect()
+}
+
+impl KernelClassifier {
+    /// Train on the benchmark data of `train` restricted to `deployed`.
+    pub fn fit(
+        kind: ClassifierKind,
+        train: &PerfDataset,
+        deployed: &[usize],
+        seed: u64,
+    ) -> KernelClassifier {
+        assert!(!deployed.is_empty());
+        let features_raw = train.features();
+        let standardizer = Standardizer::fit(&features_raw);
+        let x = standardizer.transform(&features_raw);
+        let y = deployment_labels(train, deployed);
+        let model = match kind {
+            ClassifierKind::DecisionTreeA => Model::Tree(TreeClassifier::fit(
+                &x,
+                &y,
+                &TreeParams { seed, ..Default::default() },
+            )),
+            ClassifierKind::DecisionTreeB => Model::Tree(TreeClassifier::fit(
+                &x,
+                &y,
+                &TreeParams {
+                    max_depth: Some(6),
+                    min_samples_leaf: 3,
+                    seed,
+                    ..Default::default()
+                },
+            )),
+            ClassifierKind::DecisionTreeC => Model::Tree(TreeClassifier::fit(
+                &x,
+                &y,
+                &TreeParams {
+                    max_depth: Some(3),
+                    min_samples_leaf: 4,
+                    seed,
+                    ..Default::default()
+                },
+            )),
+            ClassifierKind::NearestNeighbor1 => Model::Knn(Knn::fit(&x, &y, 1)),
+            ClassifierKind::NearestNeighbor3 => {
+                Model::Knn(Knn::fit(&x, &y, 3.min(x.rows)))
+            }
+            ClassifierKind::NearestNeighbor7 => {
+                Model::Knn(Knn::fit(&x, &y, 7.min(x.rows)))
+            }
+            ClassifierKind::LinearSvm => Model::Svm(Svm::fit(
+                &x,
+                &y,
+                &SvmParams { kernel: Kernel::Linear, c: 10.0, seed, ..Default::default() },
+            )),
+            ClassifierKind::RadialSvm => Model::Svm(Svm::fit(
+                &x,
+                &y,
+                &SvmParams { kernel: Kernel::Rbf(0.25), c: 10.0, seed, ..Default::default() },
+            )),
+            ClassifierKind::RandomForest => Model::Forest(RandomForest::fit(
+                &x,
+                &y,
+                &ForestParams { n_trees: 50, seed, ..Default::default() },
+            )),
+            ClassifierKind::Mlp => Model::Mlp(Mlp::fit(
+                &x,
+                &y,
+                &MlpParams { hidden: 100, epochs: 120, seed, ..Default::default() },
+            )),
+        };
+        KernelClassifier { kind, standardizer, deployed: deployed.to_vec(), model }
+    }
+
+    /// Predict the *deployed-set-relative* class for raw shape features.
+    pub fn predict_class(&self, raw_features: &[f64]) -> usize {
+        let row = self.standardizer.transform_row(raw_features);
+        let cls = match &self.model {
+            Model::Tree(t) => t.predict(&row),
+            Model::Knn(k) => k.predict(&row),
+            Model::Svm(s) => s.predict(&row),
+            Model::Forest(f) => f.predict(&row),
+            Model::Mlp(m) => m.predict(&row),
+        };
+        cls.min(self.deployed.len() - 1)
+    }
+
+    /// Predict the configuration index (into the full 640-config space).
+    pub fn predict_config(&self, raw_features: &[f64]) -> usize {
+        self.deployed[self.predict_class(raw_features)]
+    }
+
+    /// Per-shape config choices over a dataset.
+    pub fn choices(&self, ds: &PerfDataset) -> Vec<usize> {
+        ds.shapes
+            .iter()
+            .map(|s| self.predict_config(&s.features()))
+            .collect()
+    }
+
+    /// The underlying decision tree, when the classifier is one (codegen).
+    pub fn tree(&self) -> Option<&TreeClassifier> {
+        match &self.model {
+            Model::Tree(t) => Some(t),
+            _ => None,
+        }
+    }
+}
+
+/// Table 1/2 cell: % of the absolute optimal performance the classifier's
+/// choices achieve on the test split.
+pub fn classifier_percent(
+    kind: ClassifierKind,
+    train: &PerfDataset,
+    test: &PerfDataset,
+    deployed: &[usize],
+    seed: u64,
+) -> f64 {
+    let clf = KernelClassifier::fit(kind, train, deployed, seed);
+    let choices = clf.choices(test);
+    crate::selection::achieved_percent(test, &choices)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::{benchmark_shapes, GemmShape, Normalization};
+    use crate::devsim::{generate_dataset, profile_by_name};
+    use crate::selection::{achievable_percent, select, Method};
+
+    fn dataset() -> PerfDataset {
+        let shapes: Vec<GemmShape> =
+            benchmark_shapes().into_iter().step_by(4).collect();
+        generate_dataset(profile_by_name("r9-nano").unwrap(), &shapes)
+    }
+
+    #[test]
+    fn standardizer_zero_mean_unit_std() {
+        let ds = dataset();
+        let x = ds.features();
+        let st = Standardizer::fit(&x);
+        let z = st.transform(&x);
+        for c in 0..z.cols {
+            let col = z.col(c);
+            assert!(crate::linalg::stats::mean(&col).abs() < 1e-9);
+            let sd = crate::linalg::stats::std_dev(&col);
+            assert!((sd - 1.0).abs() < 1e-6, "col {c} std {sd}");
+        }
+    }
+
+    #[test]
+    fn labels_point_at_best_deployed() {
+        let ds = dataset();
+        let deployed = vec![0usize, 100, 400];
+        let labels = deployment_labels(&ds, &deployed);
+        for (r, &l) in labels.iter().enumerate() {
+            let chosen = ds.gflops[(r, deployed[l])];
+            for &d in &deployed {
+                assert!(chosen >= ds.gflops[(r, d)]);
+            }
+        }
+    }
+
+    #[test]
+    fn all_classifiers_train_and_predict_in_range() {
+        let ds = dataset();
+        let split = ds.split(0.75, 3);
+        let train = ds.subset(&split.train);
+        let test = ds.subset(&split.test);
+        let deployed = select(Method::PcaKMeans, &train, Normalization::Standard, 5, 1);
+        for kind in ALL_CLASSIFIERS {
+            let clf = KernelClassifier::fit(kind, &train, &deployed, 7);
+            for s in &test.shapes {
+                let cfg = clf.predict_config(&s.features());
+                assert!(deployed.contains(&cfg), "{kind:?} chose undeployed {cfg}");
+            }
+        }
+    }
+
+    #[test]
+    fn decision_tree_close_to_oracle() {
+        // The paper's central §5 finding: a decision tree preserves most of
+        // the achievable performance of the deployment.
+        let ds = dataset();
+        let split = ds.split(0.75, 5);
+        let train = ds.subset(&split.train);
+        let test = ds.subset(&split.test);
+        let deployed = select(Method::PcaKMeans, &train, Normalization::Standard, 6, 1);
+        let oracle = achievable_percent(&test, &deployed);
+        let dt = classifier_percent(ClassifierKind::DecisionTreeA, &train, &test, &deployed, 7);
+        assert!(
+            dt > 0.75 * oracle,
+            "DT {dt:.1}% far below oracle {oracle:.1}%"
+        );
+    }
+
+    #[test]
+    fn tree_accessor_only_for_trees() {
+        let ds = dataset();
+        let deployed = vec![0usize, 1, 2];
+        let t = KernelClassifier::fit(ClassifierKind::DecisionTreeB, &ds, &deployed, 1);
+        assert!(t.tree().is_some());
+        let k = KernelClassifier::fit(ClassifierKind::NearestNeighbor1, &ds, &deployed, 1);
+        assert!(k.tree().is_none());
+    }
+}

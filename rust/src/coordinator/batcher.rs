@@ -1,0 +1,191 @@
+//! Dynamic batcher: groups queued GEMM requests that resolved to the same
+//! executable so the executor amortizes dispatch overhead, with a bounded
+//! per-request wait (the vLLM-style continuous-batching compromise scaled
+//! to this library's needs).
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// A queued unit of work, tagged with the executable it resolved to.
+#[derive(Debug)]
+pub struct Pending<T> {
+    pub artifact: String,
+    pub enqueued: Instant,
+    pub payload: T,
+}
+
+#[derive(Clone, Debug)]
+pub struct BatcherConfig {
+    /// Max requests per drained batch.
+    pub max_batch: usize,
+    /// A request older than this forces a drain of its group.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 16, max_wait: Duration::from_millis(2) }
+    }
+}
+
+pub struct Batcher<T> {
+    cfg: BatcherConfig,
+    queue: VecDeque<Pending<T>>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(cfg: BatcherConfig) -> Batcher<T> {
+        Batcher { cfg, queue: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, artifact: String, payload: T) {
+        self.queue.push_back(Pending { artifact, enqueued: Instant::now(), payload });
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Time until the oldest request exceeds its wait budget (drives the
+    /// executor's poll timeout). `None` when idle.
+    pub fn next_deadline(&self) -> Option<Duration> {
+        self.queue.front().map(|p| {
+            self.cfg
+                .max_wait
+                .saturating_sub(p.enqueued.elapsed())
+        })
+    }
+
+    /// Drain a batch if one is due: either some group reached `max_batch`
+    /// or the oldest request timed out (then its group drains, preserving
+    /// FIFO order within the group).
+    pub fn drain_due(&mut self) -> Option<(String, Vec<Pending<T>>)> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        // Group sizes by artifact.
+        let mut counts: std::collections::HashMap<&str, usize> =
+            std::collections::HashMap::new();
+        for p in &self.queue {
+            *counts.entry(p.artifact.as_str()).or_default() += 1;
+        }
+        let oldest_expired =
+            self.queue.front().map(|p| p.enqueued.elapsed() >= self.cfg.max_wait);
+        let full_group = counts
+            .iter()
+            .find(|(_, &c)| c >= self.cfg.max_batch)
+            .map(|(k, _)| k.to_string());
+        let target = match (full_group, oldest_expired) {
+            (Some(g), _) => g,
+            (None, Some(true)) => self.queue.front().unwrap().artifact.clone(),
+            _ => return None,
+        };
+        Some((target.clone(), self.take_group(&target)))
+    }
+
+    /// Drain everything (flush/shutdown), grouped, FIFO by oldest group.
+    pub fn drain_all(&mut self) -> Vec<(String, Vec<Pending<T>>)> {
+        let mut out = Vec::new();
+        while let Some(front) = self.queue.front() {
+            let artifact = front.artifact.clone();
+            out.push((artifact.clone(), self.take_group(&artifact)));
+        }
+        out
+    }
+
+    fn take_group(&mut self, artifact: &str) -> Vec<Pending<T>> {
+        let mut group = Vec::new();
+        let mut rest = VecDeque::with_capacity(self.queue.len());
+        while let Some(p) = self.queue.pop_front() {
+            if p.artifact == artifact && group.len() < self.cfg.max_batch {
+                group.push(p);
+            } else {
+                rest.push_back(p);
+            }
+        }
+        self.queue = rest;
+        group
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(max_batch: usize, max_wait_ms: u64) -> BatcherConfig {
+        BatcherConfig { max_batch, max_wait: Duration::from_millis(max_wait_ms) }
+    }
+
+    #[test]
+    fn groups_by_artifact() {
+        let mut b: Batcher<u32> = Batcher::new(cfg(2, 1000));
+        b.push("a".into(), 1);
+        b.push("b".into(), 2);
+        b.push("a".into(), 3);
+        // Group "a" reached max_batch=2.
+        let (artifact, group) = b.drain_due().unwrap();
+        assert_eq!(artifact, "a");
+        assert_eq!(group.iter().map(|p| p.payload).collect::<Vec<_>>(), vec![1, 3]);
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn respects_max_batch() {
+        let mut b: Batcher<u32> = Batcher::new(cfg(3, 1000));
+        for i in 0..7 {
+            b.push("a".into(), i);
+        }
+        let (_, group) = b.drain_due().unwrap();
+        assert_eq!(group.len(), 3);
+        assert_eq!(b.len(), 4);
+    }
+
+    #[test]
+    fn timeout_forces_drain() {
+        let mut b: Batcher<u32> = Batcher::new(cfg(100, 0));
+        b.push("a".into(), 1);
+        std::thread::sleep(Duration::from_millis(1));
+        let (artifact, group) = b.drain_due().unwrap();
+        assert_eq!(artifact, "a");
+        assert_eq!(group.len(), 1);
+    }
+
+    #[test]
+    fn not_due_when_fresh_and_underfull() {
+        let mut b: Batcher<u32> = Batcher::new(cfg(10, 10_000));
+        b.push("a".into(), 1);
+        assert!(b.drain_due().is_none());
+        assert!(b.next_deadline().unwrap() > Duration::from_secs(5));
+    }
+
+    #[test]
+    fn drain_all_empties_fifo() {
+        let mut b: Batcher<u32> = Batcher::new(cfg(10, 10_000));
+        for (art, v) in [("a", 1u32), ("b", 2), ("a", 3), ("c", 4)] {
+            b.push(art.into(), v);
+        }
+        let all = b.drain_all();
+        assert!(b.is_empty());
+        assert_eq!(all.len(), 3);
+        assert_eq!(all[0].0, "a"); // oldest group first
+        assert_eq!(all[0].1.len(), 2);
+        // Every payload appears exactly once.
+        let total: usize = all.iter().map(|(_, g)| g.len()).sum();
+        assert_eq!(total, 4);
+    }
+
+    #[test]
+    fn fifo_within_group() {
+        let mut b: Batcher<u32> = Batcher::new(cfg(4, 0));
+        for i in 0..4 {
+            b.push("a".into(), i);
+        }
+        let (_, group) = b.drain_due().unwrap();
+        let order: Vec<u32> = group.iter().map(|p| p.payload).collect();
+        assert_eq!(order, vec![0, 1, 2, 3]);
+    }
+}

@@ -1,0 +1,114 @@
+//! Serving metrics: request counts, latency distribution, batch sizes and
+//! per-configuration dispatch counts.
+
+use std::collections::HashMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub requests: usize,
+    pub batches: usize,
+    pub failures: usize,
+    pub fallback_config: usize,
+    pub fallback_xla: usize,
+    /// End-to-end latency samples (seconds).
+    latencies: Vec<f64>,
+    batch_sizes: Vec<usize>,
+    /// Dispatches per configuration index (usize::MAX = XLA backend).
+    pub per_config: HashMap<usize, usize>,
+}
+
+pub const XLA_BACKEND_KEY: usize = usize::MAX;
+
+impl Metrics {
+    pub fn record_batch(&mut self, size: usize) {
+        self.batches += 1;
+        self.batch_sizes.push(size);
+    }
+
+    pub fn record_request(&mut self, latency_secs: f64, config: Option<usize>) {
+        self.requests += 1;
+        self.latencies.push(latency_secs);
+        *self
+            .per_config
+            .entry(config.unwrap_or(XLA_BACKEND_KEY))
+            .or_default() += 1;
+    }
+
+    pub fn latency_stats(&self) -> Option<crate::util::Stats> {
+        if self.latencies.is_empty() {
+            None
+        } else {
+            Some(crate::util::Stats::from_secs(&self.latencies))
+        }
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batch_sizes.is_empty() {
+            0.0
+        } else {
+            self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
+        }
+    }
+
+    /// Number of distinct kernel configurations actually dispatched.
+    pub fn distinct_configs(&self) -> usize {
+        self.per_config
+            .keys()
+            .filter(|&&k| k != XLA_BACKEND_KEY)
+            .count()
+    }
+
+    pub fn summary(&self) -> String {
+        let lat = self
+            .latency_stats()
+            .map(|s| {
+                format!(
+                    "p50={:.1}us p95={:.1}us mean={:.1}us",
+                    s.p50 * 1e6,
+                    s.p95 * 1e6,
+                    s.mean * 1e6
+                )
+            })
+            .unwrap_or_else(|| "n/a".into());
+        format!(
+            "requests={} batches={} mean_batch={:.2} failures={} \
+             fallbacks(config/xla)={}/{} distinct_configs={} latency[{}]",
+            self.requests,
+            self.batches,
+            self.mean_batch_size(),
+            self.failures,
+            self.fallback_config,
+            self.fallback_xla,
+            self.distinct_configs(),
+            lat
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_summarizes() {
+        let mut m = Metrics::default();
+        m.record_batch(3);
+        m.record_request(0.001, Some(5));
+        m.record_request(0.002, Some(5));
+        m.record_request(0.003, None);
+        assert_eq!(m.requests, 3);
+        assert_eq!(m.per_config[&5], 2);
+        assert_eq!(m.per_config[&XLA_BACKEND_KEY], 1);
+        assert_eq!(m.distinct_configs(), 1);
+        let s = m.latency_stats().unwrap();
+        assert_eq!(s.n, 3);
+        assert!(m.summary().contains("requests=3"));
+    }
+
+    #[test]
+    fn empty_latency_none() {
+        let m = Metrics::default();
+        assert!(m.latency_stats().is_none());
+        assert_eq!(m.mean_batch_size(), 0.0);
+    }
+}

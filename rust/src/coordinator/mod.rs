@@ -1,0 +1,23 @@
+//! Layer-3 coordinator: the serving side of the tuned library.
+//!
+//! * [`selector`] — the deployed-set + decision-tree runtime selector and
+//!   the end-to-end `tune_selector` pipeline (paper §4 + §5 combined).
+//! * [`registry`] — maps GEMM requests to shipped AOT artifacts.
+//! * [`batcher`] — dynamic request batching by target executable.
+//! * [`server`] — the executor thread + channel front-end.
+//! * [`vgg`] — the VGG16 inference engine of paper §6.
+//! * [`metrics`] — serving statistics.
+
+pub mod batcher;
+pub mod metrics;
+pub mod registry;
+pub mod selector;
+pub mod server;
+pub mod vgg;
+
+pub use batcher::{Batcher, BatcherConfig};
+pub use metrics::Metrics;
+pub use registry::{KernelRegistry, Resolution};
+pub use selector::{tune_selector, SelectorPolicy};
+pub use server::{Coordinator, GemmRequest, GemmResponse};
+pub use vgg::{LayerTiming, VggEngine};

@@ -1,0 +1,120 @@
+//! Kernel registry: resolves a GEMM request to a concrete AOT artifact.
+//!
+//! The selector proposes a configuration; the registry reconciles that with
+//! what was actually shipped (the deployed artifact set), falling back in
+//! order: chosen config at the exact shape -> any deployed config at the
+//! shape -> the XLA-dot backend at the shape. Shapes with no artifact at
+//! all are rejected — like a SYCL library, we can only run what was
+//! compiled in.
+
+use crate::coordinator::selector::SelectorPolicy;
+use crate::dataset::GemmShape;
+use crate::runtime::{ArtifactMeta, Manifest};
+
+pub struct KernelRegistry {
+    pub manifest: Manifest,
+    pub policy: SelectorPolicy,
+}
+
+/// The outcome of a resolution, for metrics/inspection.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Resolution {
+    /// The selector's first choice was shipped.
+    Direct,
+    /// Fell back to another deployed configuration.
+    FallbackConfig,
+    /// Fell back to the XLA backend artifact.
+    FallbackXla,
+}
+
+impl KernelRegistry {
+    pub fn new(manifest: Manifest, policy: SelectorPolicy) -> KernelRegistry {
+        KernelRegistry { manifest, policy }
+    }
+
+    /// Resolve a GEMM shape to an artifact.
+    pub fn resolve(&self, shape: &GemmShape) -> Result<(&ArtifactMeta, Resolution), String> {
+        let (m, k, n, b) = (shape.m, shape.k, shape.n, shape.batch);
+        let want = self.policy.choose(shape);
+        if let Some(meta) = self.manifest.find_matmul(want, m, k, n, b) {
+            return Ok((meta, Resolution::Direct));
+        }
+        // Any other deployed config at this shape.
+        for cfg in self.policy.deployed() {
+            if Some(cfg) != want {
+                if let Some(meta) = self.manifest.find_matmul(Some(cfg), m, k, n, b) {
+                    return Ok((meta, Resolution::FallbackConfig));
+                }
+            }
+        }
+        if let Some(meta) = self.manifest.find_matmul(None, m, k, n, b) {
+            return Ok((meta, Resolution::FallbackXla));
+        }
+        Err(format!(
+            "no artifact for GEMM {m}x{k}x{n} (batch {b}); \
+             known buckets: {}",
+            self.manifest.matmul_shapes().len()
+        ))
+    }
+
+    /// The shape buckets this registry can serve.
+    pub fn buckets(&self) -> Vec<GemmShape> {
+        self.manifest
+            .matmul_shapes()
+            .into_iter()
+            .map(|(m, k, n, b)| GemmShape::new(m, k, n, b))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn registry(policy: SelectorPolicy) -> KernelRegistry {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        KernelRegistry::new(Manifest::load(&dir).unwrap(), policy)
+    }
+
+    #[test]
+    fn resolves_xla_backend() {
+        let reg = registry(SelectorPolicy::Xla);
+        let (meta, res) = reg.resolve(&GemmShape::new(128, 128, 128, 1)).unwrap();
+        assert_eq!(res, Resolution::Direct);
+        assert!(meta.config_index.is_none());
+    }
+
+    #[test]
+    fn resolves_single_config_with_fallback() {
+        // Config index 0 is never in the deployed artifact set, so a Single
+        // policy for it must fall back at shipped shapes.
+        let reg = registry(SelectorPolicy::Single(0));
+        let (_, res) = reg.resolve(&GemmShape::new(128, 128, 128, 1)).unwrap();
+        assert_eq!(res, Resolution::FallbackXla);
+        // The shipped single-best config resolves directly.
+        let best = crate::dataset::config_by_name(&reg.manifest.single_best)
+            .unwrap()
+            .index();
+        let reg2 = registry(SelectorPolicy::Single(best));
+        let (meta, res) = reg2.resolve(&GemmShape::new(128, 128, 128, 1)).unwrap();
+        assert_eq!(res, Resolution::Direct);
+        assert_eq!(meta.config_index, Some(best));
+    }
+
+    #[test]
+    fn unknown_shape_rejected() {
+        let reg = registry(SelectorPolicy::Xla);
+        assert!(reg.resolve(&GemmShape::new(17, 19, 23, 1)).is_err());
+    }
+
+    #[test]
+    fn buckets_nonempty_and_sorted_unique() {
+        let reg = registry(SelectorPolicy::Xla);
+        let buckets = reg.buckets();
+        assert!(buckets.len() > 10);
+        let set: std::collections::HashSet<_> =
+            buckets.iter().map(|s| s.label()).collect();
+        assert_eq!(set.len(), buckets.len());
+    }
+}

@@ -1,0 +1,90 @@
+//! The runtime kernel selector: the deployed configuration set plus the
+//! compiled decision tree that maps GEMM shapes to one of them (paper §5).
+
+use crate::classify::codegen::CompiledTree;
+use crate::classify::{ClassifierKind, KernelClassifier};
+use crate::dataset::{GemmShape, Normalization, PerfDataset};
+use crate::selection::{select, Method};
+
+/// How the coordinator picks a kernel configuration per request.
+#[derive(Clone, Debug)]
+pub enum SelectorPolicy {
+    /// The paper's deployment: decision tree over the deployed set.
+    Tree(CompiledTree),
+    /// A single fixed configuration (the CLBlast-style comparator).
+    Single(usize),
+    /// Always the XLA-dot backend (the vendor-BLAS comparator).
+    Xla,
+}
+
+impl SelectorPolicy {
+    /// The configuration chosen for a shape; `None` = XLA backend.
+    pub fn choose(&self, shape: &GemmShape) -> Option<usize> {
+        match self {
+            SelectorPolicy::Tree(tree) => Some(tree.predict_config(&shape.features())),
+            SelectorPolicy::Single(cfg) => Some(*cfg),
+            SelectorPolicy::Xla => None,
+        }
+    }
+
+    pub fn deployed(&self) -> Vec<usize> {
+        match self {
+            SelectorPolicy::Tree(tree) => tree.deployed.clone(),
+            SelectorPolicy::Single(cfg) => vec![*cfg],
+            SelectorPolicy::Xla => vec![],
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SelectorPolicy::Tree(_) => "tuned-tree",
+            SelectorPolicy::Single(_) => "single-config",
+            SelectorPolicy::Xla => "xla-gemm",
+        }
+    }
+}
+
+/// End-to-end tuning: benchmark data -> PCA+K-means selection -> decision
+/// tree -> compiled selector. This is the "completely automated" pipeline
+/// of the paper's conclusion, in one call.
+pub fn tune_selector(
+    train: &PerfDataset,
+    k: usize,
+    norm: Normalization,
+    seed: u64,
+) -> (Vec<usize>, CompiledTree) {
+    let deployed = select(Method::PcaKMeans, train, norm, k, seed);
+    let clf = KernelClassifier::fit(ClassifierKind::DecisionTreeB, train, &deployed, seed);
+    let tree = CompiledTree::compile(&clf).expect("decision tree compiles");
+    (deployed, tree)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::benchmark_shapes;
+    use crate::devsim::{generate_dataset, profile_by_name};
+
+    #[test]
+    fn tuned_selector_chooses_deployed_configs() {
+        let shapes: Vec<GemmShape> =
+            benchmark_shapes().into_iter().step_by(5).collect();
+        let ds = generate_dataset(profile_by_name("r9-nano").unwrap(), &shapes);
+        let (deployed, tree) = tune_selector(&ds, 6, Normalization::Standard, 1);
+        assert_eq!(deployed.len(), 6);
+        let policy = SelectorPolicy::Tree(tree);
+        for s in &shapes {
+            let cfg = policy.choose(s).unwrap();
+            assert!(deployed.contains(&cfg));
+        }
+    }
+
+    #[test]
+    fn policies_report_identity() {
+        assert_eq!(SelectorPolicy::Xla.name(), "xla-gemm");
+        assert_eq!(SelectorPolicy::Xla.choose(&GemmShape::new(8, 8, 8, 1)), None);
+        let single = SelectorPolicy::Single(42);
+        assert_eq!(single.choose(&GemmShape::new(8, 8, 8, 1)), Some(42));
+        assert_eq!(single.deployed(), vec![42]);
+    }
+}

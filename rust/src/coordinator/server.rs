@@ -1,0 +1,329 @@
+//! The serving loop: a dedicated executor thread owns the PJRT runtime
+//! (whose handles are not `Send`) and drains a dynamic batcher; any number
+//! of client threads submit GEMM requests over a channel and receive
+//! responses on per-request channels.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::batcher::{Batcher, BatcherConfig};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::registry::{KernelRegistry, Resolution};
+use crate::coordinator::selector::SelectorPolicy;
+use crate::dataset::GemmShape;
+use crate::runtime::{Manifest, Runtime};
+
+/// A GEMM request: `lhs` is (b, m, k), `rhs` is (b, k, n), row-major.
+pub struct GemmRequest {
+    pub shape: GemmShape,
+    pub lhs: Vec<f32>,
+    pub rhs: Vec<f32>,
+    pub respond: Sender<GemmResponse>,
+}
+
+#[derive(Debug)]
+pub struct GemmResponse {
+    pub result: Result<Vec<f32>, String>,
+    /// The configuration that served the request (None = XLA backend).
+    pub config_used: Option<usize>,
+    pub artifact: String,
+    pub latency: Duration,
+}
+
+enum Message {
+    Request(GemmRequest, Instant),
+    Stop(Sender<Metrics>),
+}
+
+/// Handle to a running coordinator.
+pub struct Coordinator {
+    tx: Sender<Message>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Start the executor thread.
+    pub fn start(
+        artifacts_dir: PathBuf,
+        policy: SelectorPolicy,
+        batcher_cfg: BatcherConfig,
+    ) -> Result<Coordinator, String> {
+        let (tx, rx) = channel::<Message>();
+        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+        let worker = std::thread::Builder::new()
+            .name("kernelsel-executor".into())
+            .spawn(move || executor_loop(artifacts_dir, policy, batcher_cfg, rx, ready_tx))
+            .map_err(|e| e.to_string())?;
+        ready_rx
+            .recv()
+            .map_err(|_| "executor died during startup".to_string())??;
+        Ok(Coordinator { tx, worker: Some(worker) })
+    }
+
+    /// Submit a request; the response arrives on the returned receiver.
+    pub fn submit(
+        &self,
+        shape: GemmShape,
+        lhs: Vec<f32>,
+        rhs: Vec<f32>,
+    ) -> Receiver<GemmResponse> {
+        let (resp_tx, resp_rx) = channel();
+        let req = GemmRequest { shape, lhs, rhs, respond: resp_tx };
+        // A send failure means the executor is gone; the dropped resp_tx
+        // surfaces as RecvError on the caller side.
+        let _ = self.tx.send(Message::Request(req, Instant::now()));
+        resp_rx
+    }
+
+    /// Blocking convenience call.
+    pub fn call(
+        &self,
+        shape: GemmShape,
+        lhs: Vec<f32>,
+        rhs: Vec<f32>,
+    ) -> Result<GemmResponse, String> {
+        self.submit(shape, lhs, rhs)
+            .recv()
+            .map_err(|_| "coordinator shut down".to_string())
+    }
+
+    /// Stop the executor and collect final metrics.
+    pub fn stop(mut self) -> Metrics {
+        let (mtx, mrx) = channel();
+        let _ = self.tx.send(Message::Stop(mtx));
+        let metrics = mrx.recv().unwrap_or_default();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        metrics
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        if let Some(w) = self.worker.take() {
+            let (mtx, _mrx) = channel();
+            let _ = self.tx.send(Message::Stop(mtx));
+            let _ = w.join();
+        }
+    }
+}
+
+struct Job {
+    req: GemmRequest,
+    t_submit: Instant,
+    config: Option<usize>,
+}
+
+fn executor_loop(
+    artifacts_dir: PathBuf,
+    policy: SelectorPolicy,
+    batcher_cfg: BatcherConfig,
+    rx: Receiver<Message>,
+    ready: Sender<Result<(), String>>,
+) {
+    let runtime = match Runtime::new(&artifacts_dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            let _ = ready.send(Err(format!("runtime init: {e}")));
+            return;
+        }
+    };
+    let manifest = match Manifest::load(&artifacts_dir) {
+        Ok(m) => m,
+        Err(e) => {
+            let _ = ready.send(Err(format!("manifest: {e}")));
+            return;
+        }
+    };
+    let registry = KernelRegistry::new(manifest, policy);
+    let mut batcher: Batcher<Job> = Batcher::new(batcher_cfg);
+    let mut metrics = Metrics::default();
+    let _ = ready.send(Ok(()));
+
+    let mut stop_reply: Option<Sender<Metrics>> = None;
+    'outer: loop {
+        // Wait for work, bounded by the batcher's next deadline.
+        let timeout = batcher
+            .next_deadline()
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(Message::Request(req, t_submit)) => {
+                match registry.resolve(&req.shape) {
+                    Ok((meta, resolution)) => {
+                        match resolution {
+                            Resolution::FallbackConfig => metrics.fallback_config += 1,
+                            Resolution::FallbackXla => metrics.fallback_xla += 1,
+                            Resolution::Direct => {}
+                        }
+                        let artifact = meta.path.clone();
+                        let config = meta.config_index;
+                        batcher.push(artifact, Job { req, t_submit, config });
+                    }
+                    Err(e) => {
+                        metrics.failures += 1;
+                        let _ = req.respond.send(GemmResponse {
+                            result: Err(e),
+                            config_used: None,
+                            artifact: String::new(),
+                            latency: t_submit.elapsed(),
+                        });
+                    }
+                }
+            }
+            Ok(Message::Stop(reply)) => {
+                stop_reply = Some(reply);
+                break 'outer;
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => break 'outer,
+        }
+        // Serve every batch that is due.
+        while let Some((artifact, group)) = batcher.drain_due() {
+            run_batch(&runtime, &artifact, group, &mut metrics);
+        }
+    }
+
+    // Flush outstanding work before stopping.
+    for (artifact, group) in batcher.drain_all() {
+        run_batch(&runtime, &artifact, group, &mut metrics);
+    }
+    if let Some(reply) = stop_reply {
+        let _ = reply.send(metrics);
+    }
+}
+
+fn run_batch(
+    runtime: &Runtime,
+    artifact: &str,
+    group: Vec<crate::coordinator::batcher::Pending<Job>>,
+    metrics: &mut Metrics,
+) {
+    metrics.record_batch(group.len());
+    let exe = runtime.load(artifact);
+    for pending in group {
+        let job = pending.payload;
+        let (b, m, k, n) =
+            (job.req.shape.batch, job.req.shape.m, job.req.shape.k, job.req.shape.n);
+        let result = match &exe {
+            Ok(exe) => runtime
+                .execute_f32(
+                    exe,
+                    &[(&job.req.lhs, &[b, m, k]), (&job.req.rhs, &[b, k, n])],
+                )
+                .map_err(|e| e.to_string()),
+            Err(e) => Err(e.to_string()),
+        };
+        let latency = job.t_submit.elapsed();
+        if result.is_err() {
+            metrics.failures += 1;
+        }
+        metrics.record_request(latency.as_secs_f64(), job.config);
+        let _ = job.req.respond.send(GemmResponse {
+            result,
+            config_used: job.config,
+            artifact: artifact.to_string(),
+            latency,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::fill_buffer;
+    use std::path::PathBuf;
+
+    fn artifacts() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn start_xla() -> Coordinator {
+        Coordinator::start(artifacts(), SelectorPolicy::Xla, BatcherConfig::default())
+            .expect("coordinator start")
+    }
+
+    #[test]
+    fn serves_single_request() {
+        let coord = start_xla();
+        let shape = GemmShape::new(128, 128, 128, 1);
+        let lhs = fill_buffer(1, 128 * 128);
+        let rhs = fill_buffer(2, 128 * 128);
+        let resp = coord.call(shape, lhs, rhs).unwrap();
+        let out = resp.result.expect("gemm result");
+        assert_eq!(out.len(), 128 * 128);
+        assert!(out.iter().all(|v| v.is_finite()));
+        let metrics = coord.stop();
+        assert_eq!(metrics.requests, 1);
+        assert_eq!(metrics.failures, 0);
+    }
+
+    #[test]
+    fn every_request_answered_exactly_once_under_concurrency() {
+        let coord = std::sync::Arc::new(start_xla());
+        let n_threads = 4;
+        let per_thread = 6;
+        let mut joins = Vec::new();
+        for t in 0..n_threads {
+            let coord = coord.clone();
+            joins.push(std::thread::spawn(move || {
+                let shape = GemmShape::new(128, 128, 128, 1);
+                let mut got = 0;
+                for i in 0..per_thread {
+                    let lhs = fill_buffer((t * 100 + i) as u32, 128 * 128);
+                    let rhs = fill_buffer((t * 100 + i + 50) as u32, 128 * 128);
+                    let rx = coord.submit(shape, lhs, rhs);
+                    let resp = rx.recv().expect("response");
+                    assert!(resp.result.is_ok());
+                    got += 1;
+                }
+                got
+            }));
+        }
+        let total: usize = joins.into_iter().map(|j| j.join().unwrap()).sum();
+        assert_eq!(total, n_threads * per_thread);
+        let metrics =
+            std::sync::Arc::try_unwrap(coord).ok().expect("sole owner").stop();
+        assert_eq!(metrics.requests, n_threads * per_thread);
+        assert_eq!(metrics.failures, 0);
+        assert!(metrics.mean_batch_size() >= 1.0);
+    }
+
+    #[test]
+    fn unknown_shape_fails_cleanly() {
+        let coord = start_xla();
+        let resp = coord
+            .call(GemmShape::new(17, 19, 23, 1), vec![0.0; 17 * 19], vec![0.0; 19 * 23])
+            .unwrap();
+        assert!(resp.result.is_err());
+        let metrics = coord.stop();
+        assert_eq!(metrics.failures, 1);
+    }
+
+    #[test]
+    fn tuned_policy_uses_deployed_config() {
+        let dir = artifacts();
+        let manifest = Manifest::load(&dir).unwrap();
+        let best = crate::dataset::config_by_name(&manifest.single_best)
+            .unwrap()
+            .index();
+        let coord = Coordinator::start(
+            dir,
+            SelectorPolicy::Single(best),
+            BatcherConfig::default(),
+        )
+        .unwrap();
+        let resp = coord
+            .call(
+                GemmShape::new(128, 128, 128, 1),
+                fill_buffer(1, 128 * 128),
+                fill_buffer(2, 128 * 128),
+            )
+            .unwrap();
+        assert_eq!(resp.config_used, Some(best));
+        assert!(resp.result.is_ok());
+        coord.stop();
+    }
+}

@@ -1,0 +1,199 @@
+//! The 640-point kernel configuration space (paper §3), mirroring
+//! `python/compile/kernels/config.py` exactly — index order, names, block
+//! geometry and the VMEM-footprint estimate. A golden test pins the two
+//! implementations together via the artifact manifest.
+
+pub const TILE_SIZES: [usize; 4] = [1, 2, 4, 8];
+
+/// The ten legal work-group pairings of the paper.
+pub const WORKGROUPS: [(usize, usize); 10] = [
+    (1, 64),
+    (1, 128),
+    (8, 8),
+    (8, 16),
+    (8, 32),
+    (16, 8),
+    (16, 16),
+    (32, 8),
+    (64, 1),
+    (128, 1),
+];
+
+/// One unit of K-chunk depth per unit of the A tile parameter (must match
+/// `config.py::K_UNIT`).
+pub const K_UNIT: usize = 32;
+
+pub const NUM_CONFIGS: usize = TILE_SIZES.len().pow(3) * WORKGROUPS.len();
+
+/// One point in the kernel configuration space.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct KernelConfig {
+    pub acc_r: usize,
+    pub acc_a: usize,
+    pub acc_c: usize,
+    pub wg_r: usize,
+    pub wg_c: usize,
+}
+
+impl KernelConfig {
+    /// Rows of the HBM->VMEM output block (work-group x micro-tile).
+    pub fn block_m(&self) -> usize {
+        self.acc_r * self.wg_r
+    }
+
+    /// Cols of the HBM->VMEM output block.
+    pub fn block_n(&self) -> usize {
+        self.acc_c * self.wg_c
+    }
+
+    /// Depth of one K step of the VMEM pipeline.
+    pub fn k_chunk(&self) -> usize {
+        self.acc_a * K_UNIT
+    }
+
+    pub fn name(&self) -> String {
+        format!(
+            "r{}a{}c{}_wg{}x{}",
+            self.acc_r, self.acc_a, self.acc_c, self.wg_r, self.wg_c
+        )
+    }
+
+    /// Stable index in `all_configs()` ordering.
+    pub fn index(&self) -> usize {
+        let ti = tile_pos(self.acc_r) * 16 + tile_pos(self.acc_a) * 4 + tile_pos(self.acc_c);
+        let wi = WORKGROUPS
+            .iter()
+            .position(|&(r, c)| r == self.wg_r && c == self.wg_c)
+            .expect("illegal work-group pairing");
+        ti * WORKGROUPS.len() + wi
+    }
+
+    /// Estimated VMEM working set (bytes): lhs/rhs K-chunk strips + f32 acc.
+    pub fn vmem_bytes(&self, dtype_bytes: usize) -> usize {
+        let lhs = self.block_m() * self.k_chunk() * dtype_bytes;
+        let rhs = self.k_chunk() * self.block_n() * dtype_bytes;
+        let acc = self.block_m() * self.block_n() * 4;
+        lhs + rhs + acc
+    }
+
+    /// Work-group size (number of "work-items" in SYCL terms).
+    pub fn wg_size(&self) -> usize {
+        self.wg_r * self.wg_c
+    }
+}
+
+fn tile_pos(t: usize) -> usize {
+    TILE_SIZES
+        .iter()
+        .position(|&x| x == t)
+        .expect("tile size not in {1,2,4,8}")
+}
+
+/// Config for a stable index (inverse of `KernelConfig::index`).
+pub fn config_by_index(idx: usize) -> KernelConfig {
+    assert!(idx < NUM_CONFIGS, "config index {idx} out of range");
+    let (ti, wi) = (idx / WORKGROUPS.len(), idx % WORKGROUPS.len());
+    let ri = ti / 16;
+    let ai = (ti / 4) % 4;
+    let ci = ti % 4;
+    let (wg_r, wg_c) = WORKGROUPS[wi];
+    KernelConfig {
+        acc_r: TILE_SIZES[ri],
+        acc_a: TILE_SIZES[ai],
+        acc_c: TILE_SIZES[ci],
+        wg_r,
+        wg_c,
+    }
+}
+
+/// The full space in stable index order.
+pub fn all_configs() -> Vec<KernelConfig> {
+    (0..NUM_CONFIGS).map(config_by_index).collect()
+}
+
+/// Look a configuration up by its canonical name (`r4a8c4_wg16x16`).
+pub fn config_by_name(name: &str) -> Option<KernelConfig> {
+    // Parse rXaYcZ_wgWxV.
+    let rest = name.strip_prefix('r')?;
+    let (r, rest) = split_num(rest)?;
+    let rest = rest.strip_prefix('a')?;
+    let (a, rest) = split_num(rest)?;
+    let rest = rest.strip_prefix('c')?;
+    let (c, rest) = split_num(rest)?;
+    let rest = rest.strip_prefix("_wg")?;
+    let (wr, rest) = split_num(rest)?;
+    let rest = rest.strip_prefix('x')?;
+    let (wc, rest) = split_num(rest)?;
+    if !rest.is_empty() {
+        return None;
+    }
+    let cfg = KernelConfig { acc_r: r, acc_a: a, acc_c: c, wg_r: wr, wg_c: wc };
+    if TILE_SIZES.contains(&r)
+        && TILE_SIZES.contains(&a)
+        && TILE_SIZES.contains(&c)
+        && WORKGROUPS.contains(&(wr, wc))
+    {
+        Some(cfg)
+    } else {
+        None
+    }
+}
+
+fn split_num(s: &str) -> Option<(usize, &str)> {
+    let end = s.find(|c: char| !c.is_ascii_digit()).unwrap_or(s.len());
+    if end == 0 {
+        return None;
+    }
+    Some((s[..end].parse().ok()?, &s[end..]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn space_size() {
+        assert_eq!(NUM_CONFIGS, 640);
+        assert_eq!(all_configs().len(), 640);
+    }
+
+    #[test]
+    fn index_roundtrip() {
+        for (i, cfg) in all_configs().iter().enumerate() {
+            assert_eq!(cfg.index(), i);
+            assert_eq!(config_by_index(i), *cfg);
+        }
+    }
+
+    #[test]
+    fn names_unique_and_parseable() {
+        let mut names = std::collections::HashSet::new();
+        for cfg in all_configs() {
+            let name = cfg.name();
+            assert!(names.insert(name.clone()), "duplicate name {name}");
+            assert_eq!(config_by_name(&name), Some(cfg));
+        }
+        assert_eq!(config_by_name("r3a1c1_wg8x8"), None);
+        assert_eq!(config_by_name("r4a8c4_wg5x5"), None);
+        assert_eq!(config_by_name("bogus"), None);
+    }
+
+    #[test]
+    fn python_parity_spot_checks() {
+        // Mirrors test values verified against python in test_config.py.
+        let c = config_by_name("r4a8c4_wg16x16").unwrap();
+        assert_eq!(c.block_m(), 64);
+        assert_eq!(c.block_n(), 64);
+        assert_eq!(c.k_chunk(), 256);
+        let first = config_by_index(0);
+        assert_eq!(first.name(), "r1a1c1_wg1x64");
+        let last = config_by_index(639);
+        assert_eq!(last.name(), "r8a8c8_wg128x1");
+    }
+
+    #[test]
+    fn vmem_estimate() {
+        let c = config_by_name("r4a1c4_wg8x8").unwrap(); // bm=32, bn=32, kc=32
+        assert_eq!(c.vmem_bytes(4), 32 * 32 * 4 + 32 * 32 * 4 + 32 * 32 * 4);
+    }
+}

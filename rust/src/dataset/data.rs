@@ -1,0 +1,269 @@
+//! The benchmark performance dataset: a (size-sets x 640 configs) matrix of
+//! GFLOP/s measurements for one device, plus split/evaluation helpers and a
+//! CSV codec for caching simulator output and real-CPU measurements.
+
+use crate::dataset::config::{all_configs, NUM_CONFIGS};
+use crate::dataset::normalize::Normalization;
+use crate::dataset::shapes::GemmShape;
+use crate::linalg::stats::argmax;
+use crate::linalg::Matrix;
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct PerfDataset {
+    pub device: String,
+    pub shapes: Vec<GemmShape>,
+    /// Raw GFLOP/s: gflops[(shape_idx, config_idx)].
+    pub gflops: Matrix,
+}
+
+/// A train/test split as index lists into `PerfDataset::shapes`.
+#[derive(Clone, Debug)]
+pub struct Split {
+    pub train: Vec<usize>,
+    pub test: Vec<usize>,
+}
+
+impl PerfDataset {
+    pub fn new(device: &str, shapes: Vec<GemmShape>, gflops: Matrix) -> PerfDataset {
+        assert_eq!(gflops.rows, shapes.len());
+        assert_eq!(gflops.cols, NUM_CONFIGS);
+        PerfDataset { device: device.to_string(), shapes, gflops }
+    }
+
+    pub fn n_shapes(&self) -> usize {
+        self.shapes.len()
+    }
+
+    /// Normalized copy of the performance matrix.
+    pub fn normalized(&self, norm: Normalization) -> Matrix {
+        norm.apply(&self.gflops)
+    }
+
+    /// Best configuration index for a size set.
+    pub fn best_config(&self, shape_idx: usize) -> usize {
+        argmax(self.gflops.row(shape_idx))
+    }
+
+    /// GFLOP/s of the best configuration for a size set.
+    pub fn best_gflops(&self, shape_idx: usize) -> f64 {
+        self.gflops.row(shape_idx)[self.best_config(shape_idx)]
+    }
+
+    /// Relative performance (0..1) of `config` on `shape_idx`.
+    pub fn relative(&self, shape_idx: usize, config: usize) -> f64 {
+        let best = self.best_gflops(shape_idx);
+        if best <= 0.0 {
+            0.0
+        } else {
+            self.gflops[(shape_idx, config)] / best
+        }
+    }
+
+    /// How many size sets each configuration wins (Figure 2).
+    pub fn winner_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; NUM_CONFIGS];
+        for r in 0..self.n_shapes() {
+            counts[self.best_config(r)] += 1;
+        }
+        counts
+    }
+
+    /// Feature matrix (n_shapes x n_features) for classifiers/trees.
+    pub fn features(&self) -> Matrix {
+        Matrix::from_rows(&self.shapes.iter().map(|s| s.features()).collect::<Vec<_>>())
+    }
+
+    /// Deterministic shuffled split; `train_frac` in (0, 1).
+    pub fn split(&self, train_frac: f64, seed: u64) -> Split {
+        assert!((0.0..1.0).contains(&train_frac) && train_frac > 0.0);
+        let mut idx: Vec<usize> = (0..self.n_shapes()).collect();
+        Rng::new(seed).shuffle(&mut idx);
+        let n_train = ((self.n_shapes() as f64) * train_frac).round() as usize;
+        let n_train = n_train.clamp(1, self.n_shapes() - 1);
+        Split { train: idx[..n_train].to_vec(), test: idx[n_train..].to_vec() }
+    }
+
+    /// Restrict to a subset of size sets (e.g. the train rows).
+    pub fn subset(&self, indices: &[usize]) -> PerfDataset {
+        let shapes = indices.iter().map(|&i| self.shapes[i]).collect();
+        let rows: Vec<Vec<f64>> =
+            indices.iter().map(|&i| self.gflops.row(i).to_vec()).collect();
+        PerfDataset {
+            device: self.device.clone(),
+            shapes,
+            gflops: Matrix::from_rows(&rows),
+        }
+    }
+
+    // -- CSV codec ----------------------------------------------------------
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str("m,k,n,batch");
+        for cfg in all_configs() {
+            out.push(',');
+            out.push_str(&cfg.name());
+        }
+        out.push('\n');
+        for (i, s) in self.shapes.iter().enumerate() {
+            out.push_str(&format!("{},{},{},{}", s.m, s.k, s.n, s.batch));
+            for v in self.gflops.row(i) {
+                out.push_str(&format!(",{v:.4}"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn from_csv(device: &str, text: &str) -> Result<PerfDataset, String> {
+        let mut lines = text.lines();
+        let header = lines.next().ok_or("empty csv")?;
+        let cols: Vec<&str> = header.split(',').collect();
+        if cols.len() != 4 + NUM_CONFIGS {
+            return Err(format!(
+                "expected {} columns, got {}",
+                4 + NUM_CONFIGS,
+                cols.len()
+            ));
+        }
+        // Validate config-name order matches the canonical space.
+        for (cfg, col) in all_configs().iter().zip(&cols[4..]) {
+            if cfg.name() != *col {
+                return Err(format!("config column mismatch: {col} != {}", cfg.name()));
+            }
+        }
+        let mut shapes = Vec::new();
+        let mut rows = Vec::new();
+        for (lineno, line) in lines.enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let fields: Vec<&str> = line.split(',').collect();
+            if fields.len() != 4 + NUM_CONFIGS {
+                return Err(format!("line {}: wrong field count", lineno + 2));
+            }
+            let parse_usize = |s: &str| -> Result<usize, String> {
+                s.parse().map_err(|_| format!("line {}: bad int {s}", lineno + 2))
+            };
+            shapes.push(GemmShape::new(
+                parse_usize(fields[0])?,
+                parse_usize(fields[1])?,
+                parse_usize(fields[2])?,
+                parse_usize(fields[3])?,
+            ));
+            let mut row = Vec::with_capacity(NUM_CONFIGS);
+            for f in &fields[4..] {
+                row.push(
+                    f.parse::<f64>()
+                        .map_err(|_| format!("line {}: bad float {f}", lineno + 2))?,
+                );
+            }
+            rows.push(row);
+        }
+        if rows.is_empty() {
+            return Err("no data rows".into());
+        }
+        Ok(PerfDataset::new(device, shapes, Matrix::from_rows(&rows)))
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_csv())
+    }
+
+    pub fn load(device: &str, path: &std::path::Path) -> Result<PerfDataset, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        PerfDataset::from_csv(device, &text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_dataset(n_shapes: usize, seed: u64) -> PerfDataset {
+        let mut rng = Rng::new(seed);
+        let shapes: Vec<GemmShape> = (0..n_shapes)
+            .map(|i| GemmShape::new(32 << (i % 4), 64, 32, 1 + (i % 3)))
+            .collect();
+        let rows: Vec<Vec<f64>> = (0..n_shapes)
+            .map(|_| (0..NUM_CONFIGS).map(|_| rng.uniform() * 1000.0).collect())
+            .collect();
+        PerfDataset::new("test", shapes, Matrix::from_rows(&rows))
+    }
+
+    #[test]
+    fn best_and_relative() {
+        let ds = tiny_dataset(5, 1);
+        for r in 0..5 {
+            let best = ds.best_config(r);
+            assert_eq!(ds.relative(r, best), 1.0);
+            for c in 0..NUM_CONFIGS {
+                assert!(ds.relative(r, c) <= 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn winner_counts_sum_to_rows() {
+        let ds = tiny_dataset(20, 2);
+        let counts = ds.winner_counts();
+        assert_eq!(counts.iter().sum::<usize>(), 20);
+    }
+
+    #[test]
+    fn split_partitions() {
+        let ds = tiny_dataset(10, 3);
+        let split = ds.split(0.7, 42);
+        assert_eq!(split.train.len() + split.test.len(), 10);
+        let mut all: Vec<usize> =
+            split.train.iter().chain(&split.test).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..10).collect::<Vec<_>>());
+        // Deterministic.
+        let again = ds.split(0.7, 42);
+        assert_eq!(split.train, again.train);
+    }
+
+    #[test]
+    fn subset_preserves_rows() {
+        let ds = tiny_dataset(6, 4);
+        let sub = ds.subset(&[4, 1]);
+        assert_eq!(sub.n_shapes(), 2);
+        assert_eq!(sub.shapes[0], ds.shapes[4]);
+        assert_eq!(sub.gflops.row(1), ds.gflops.row(1));
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let ds = tiny_dataset(4, 5);
+        let csv = ds.to_csv();
+        let back = PerfDataset::from_csv("test", &csv).unwrap();
+        assert_eq!(back.shapes, ds.shapes);
+        for r in 0..4 {
+            for c in 0..NUM_CONFIGS {
+                assert!((back.gflops[(r, c)] - ds.gflops[(r, c)]).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn csv_rejects_malformed() {
+        assert!(PerfDataset::from_csv("x", "").is_err());
+        assert!(PerfDataset::from_csv("x", "m,k,n,batch,onlyonecfg\n").is_err());
+        let ds = tiny_dataset(2, 6);
+        let mut csv = ds.to_csv();
+        csv.push_str("1,2,3\n"); // short row
+        assert!(PerfDataset::from_csv("x", &csv).is_err());
+    }
+
+    #[test]
+    fn normalized_rows_peak_at_one() {
+        let ds = tiny_dataset(5, 7);
+        let norm = ds.normalized(Normalization::Standard);
+        for r in 0..5 {
+            let max = norm.row(r).iter().cloned().fold(0.0f64, f64::max);
+            assert!((max - 1.0).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! The benchmark dataset substrate: the kernel configuration space, the
+//! GEMM shape suite derived from VGG16/ResNet50/MobileNetV2 (paper §3), the
+//! four normalization schemes (§3.4) and the performance-matrix container.
+
+pub mod config;
+pub mod data;
+pub mod normalize;
+pub mod shapes;
+
+pub use config::{
+    all_configs, config_by_index, config_by_name, KernelConfig, NUM_CONFIGS,
+};
+pub use data::{PerfDataset, Split};
+pub use normalize::{Normalization, ALL_NORMALIZATIONS};
+pub use shapes::{benchmark_shapes, GemmShape, FEATURE_NAMES};

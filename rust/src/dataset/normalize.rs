@@ -1,0 +1,166 @@
+//! The four data-normalization schemes of paper §3.4.
+//!
+//! Each maps a row of raw per-configuration GFLOP/s values to [0, 1] with
+//! the best kernel at 1.0:
+//!   * `Standard`  — divide by the row max.
+//!   * `RawCutoff` — standard, then clamp values under 0.9 to 0 (sparsity
+//!                   without distorting the survivors).
+//!   * `Cutoff`    — clamp under 0.9 then rescale the survivors to [0, 1].
+//!   * `Sigmoid`   — f(x) = 1 / (1 + exp(50 (0.85 - x))) on the standard
+//!                   values: 85% maps to 0.5, below 80% to < 0.1.
+
+use crate::linalg::Matrix;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Normalization {
+    Standard,
+    RawCutoff,
+    Cutoff,
+    Sigmoid,
+}
+
+pub const ALL_NORMALIZATIONS: [Normalization; 4] = [
+    Normalization::Standard,
+    Normalization::RawCutoff,
+    Normalization::Cutoff,
+    Normalization::Sigmoid,
+];
+
+pub const CUTOFF: f64 = 0.9;
+
+impl Normalization {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Normalization::Standard => "standard",
+            Normalization::RawCutoff => "raw-cutoff",
+            Normalization::Cutoff => "cutoff",
+            Normalization::Sigmoid => "sigmoid",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Normalization> {
+        ALL_NORMALIZATIONS.iter().copied().find(|n| n.name() == name)
+    }
+
+    /// Normalize one row of raw GFLOP/s values in place.
+    pub fn apply_row(&self, row: &mut [f64]) {
+        let max = row.iter().cloned().fold(0.0f64, f64::max);
+        if max <= 0.0 {
+            for v in row.iter_mut() {
+                *v = 0.0;
+            }
+            return;
+        }
+        for v in row.iter_mut() {
+            *v /= max;
+        }
+        match self {
+            Normalization::Standard => {}
+            Normalization::RawCutoff => {
+                for v in row.iter_mut() {
+                    if *v < CUTOFF {
+                        *v = 0.0;
+                    }
+                }
+            }
+            Normalization::Cutoff => {
+                for v in row.iter_mut() {
+                    *v = if *v < CUTOFF { 0.0 } else { (*v - CUTOFF) / (1.0 - CUTOFF) };
+                }
+            }
+            Normalization::Sigmoid => {
+                for v in row.iter_mut() {
+                    *v = 1.0 / (1.0 + (50.0 * (0.85 - *v)).exp());
+                }
+            }
+        }
+    }
+
+    /// Normalize every row of a (sizes x configs) performance matrix.
+    pub fn apply(&self, raw: &Matrix) -> Matrix {
+        let mut out = raw.clone();
+        for r in 0..out.rows {
+            self.apply_row(out.row_mut(r));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row() -> Vec<f64> {
+        vec![100.0, 95.0, 89.0, 50.0, 1.0]
+    }
+
+    #[test]
+    fn standard_preserves_ratios() {
+        let mut r = row();
+        Normalization::Standard.apply_row(&mut r);
+        assert_eq!(r[0], 1.0);
+        assert!((r[1] - 0.95).abs() < 1e-12);
+        assert!((r[4] - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn raw_cutoff_clamps_without_rescale() {
+        let mut r = row();
+        Normalization::RawCutoff.apply_row(&mut r);
+        assert_eq!(r[0], 1.0);
+        assert!((r[1] - 0.95).abs() < 1e-12); // survivor unchanged
+        assert_eq!(r[2], 0.0); // 0.89 < 0.9 clamped
+        assert_eq!(r[3], 0.0);
+    }
+
+    #[test]
+    fn cutoff_rescales_survivors() {
+        let mut r = row();
+        Normalization::Cutoff.apply_row(&mut r);
+        assert_eq!(r[0], 1.0);
+        assert!((r[1] - 0.5).abs() < 1e-9); // 0.95 -> (0.95-0.9)/0.1
+        assert_eq!(r[2], 0.0);
+    }
+
+    #[test]
+    fn sigmoid_landmarks() {
+        // 85% -> 0.5; below 80% -> < 0.1; 100% -> ~1.
+        let mut r = vec![100.0, 85.0, 79.9];
+        Normalization::Sigmoid.apply_row(&mut r);
+        assert!(r[0] > 0.99);
+        assert!((r[1] - 0.5).abs() < 1e-9);
+        assert!(r[2] < 0.1);
+    }
+
+    #[test]
+    fn all_outputs_in_unit_interval() {
+        for norm in ALL_NORMALIZATIONS {
+            let mut r = vec![3160.0, 2000.0, 13.0, 0.0];
+            norm.apply_row(&mut r);
+            assert!(
+                r.iter().all(|&v| (0.0..=1.0).contains(&v)),
+                "{:?}: {r:?}",
+                norm
+            );
+            // Sigmoid maps the best kernel to ~0.999 rather than exactly 1.
+            assert!(r[0] > 0.99, "{norm:?} best = {}", r[0]);
+        }
+    }
+
+    #[test]
+    fn zero_row_stays_zero() {
+        for norm in ALL_NORMALIZATIONS {
+            let mut r = vec![0.0, 0.0];
+            norm.apply_row(&mut r);
+            assert_eq!(r, vec![0.0, 0.0], "{norm:?}");
+        }
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for norm in ALL_NORMALIZATIONS {
+            assert_eq!(Normalization::by_name(norm.name()), Some(norm));
+        }
+        assert_eq!(Normalization::by_name("nope"), None);
+    }
+}

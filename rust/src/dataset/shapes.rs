@@ -1,0 +1,272 @@
+//! GEMM shape extraction from the three networks the paper benchmarks
+//! (§3: VGG, ResNet, MobileNet — "overall these gave 300 different sets of
+//! sizes for the input matrices").
+//!
+//! Convolutions map to im2col GEMMs: M = out_h*out_w, K = kh*kw*cin,
+//! N = cout; fully-connected layers are (1 x K) x (K x N).
+
+/// One benchmarked GEMM problem: out = lhs (b, m, k) x rhs (b, k, n).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct GemmShape {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub batch: usize,
+}
+
+impl GemmShape {
+    pub fn new(m: usize, k: usize, n: usize, batch: usize) -> GemmShape {
+        GemmShape { m, k, n, batch }
+    }
+
+    pub fn flops(&self) -> f64 {
+        2.0 * self.batch as f64 * self.m as f64 * self.k as f64 * self.n as f64
+    }
+
+    /// Feature vector for the runtime classifier / decision-tree clusterer.
+    /// Log-scaled dims plus shape-ratio features (aspect + reduction depth).
+    pub fn features(&self) -> Vec<f64> {
+        let (m, k, n, b) = (self.m as f64, self.k as f64, self.n as f64, self.batch as f64);
+        vec![
+            m.log2(),
+            k.log2(),
+            n.log2(),
+            b.log2(),
+            (m * n * b).log2(),          // output volume -> parallelism
+            (m * k * n * b).log2(),      // total work
+            (m / n).log2(),              // output aspect
+            (k / (m * n).sqrt()).log2(), // reduction depth vs output size
+        ]
+    }
+
+    pub fn label(&self) -> String {
+        format!("m{}k{}n{}b{}", self.m, self.k, self.n, self.batch)
+    }
+}
+
+pub const FEATURE_NAMES: [&str; 8] = [
+    "log2_m",
+    "log2_k",
+    "log2_n",
+    "log2_batch",
+    "log2_out_volume",
+    "log2_flops",
+    "log2_aspect",
+    "log2_depth_ratio",
+];
+
+fn conv(hw_in: usize, kernel: usize, stride: usize, pad: usize, cin: usize, cout: usize) -> (usize, GemmShape) {
+    let hw_out = (hw_in + 2 * pad - kernel) / stride + 1;
+    (hw_out, GemmShape::new(hw_out * hw_out, kernel * kernel * cin, cout, 1))
+}
+
+/// VGG16 (paper §6): 13 3x3 convs + 3 FC layers at 224x224.
+pub fn vgg16_gemms() -> Vec<GemmShape> {
+    let mut out = Vec::new();
+    let stages: [(usize, usize); 5] = [(64, 2), (128, 2), (256, 3), (512, 3), (512, 3)];
+    let mut hw = 224;
+    let mut cin = 3;
+    for (cout, reps) in stages {
+        for _ in 0..reps {
+            let (_, g) = conv(hw, 3, 1, 1, cin, cout);
+            out.push(g);
+            cin = cout;
+        }
+        hw /= 2;
+    }
+    out.push(GemmShape::new(1, hw * hw * cin, 4096, 1)); // fc6
+    out.push(GemmShape::new(1, 4096, 4096, 1)); // fc7
+    out.push(GemmShape::new(1, 4096, 1000, 1)); // fc8
+    out
+}
+
+/// ResNet-50 bottleneck GEMMs (stem, 1x1 reduce / 3x3 / 1x1 expand per
+/// block, downsample projections, final FC).
+pub fn resnet50_gemms() -> Vec<GemmShape> {
+    let mut out = Vec::new();
+    // Stem: 7x7/2 then the first 3x3 of each stage may stride.
+    let (hw, stem) = conv(224, 7, 2, 3, 3, 64);
+    out.push(stem);
+    let hw = hw / 2; // 3x3/2 max pool -> 56
+
+    // (blocks, mid_channels, out_channels); input channels tracked.
+    let stages: [(usize, usize, usize); 4] =
+        [(3, 64, 256), (4, 128, 512), (6, 256, 1024), (3, 512, 2048)];
+    let mut cin = 64;
+    let mut s = hw;
+    for (stage_idx, (blocks, mid, cout)) in stages.iter().enumerate() {
+        let stride = if stage_idx == 0 { 1 } else { 2 };
+        for b in 0..*blocks {
+            let blk_stride = if b == 0 { stride } else { 1 };
+            let s_out = s / blk_stride;
+            // 1x1 reduce (applied before stride in the 3x3 per torchvision).
+            out.push(GemmShape::new(s * s, cin, *mid, 1));
+            // 3x3 (stride on the first block of the stage).
+            let (_, g) = conv(s, 3, blk_stride, 1, *mid, *mid);
+            out.push(g);
+            // 1x1 expand.
+            out.push(GemmShape::new(s_out * s_out, *mid, *cout, 1));
+            if b == 0 {
+                // Projection shortcut.
+                out.push(GemmShape::new(s_out * s_out, cin, *cout, 1));
+            }
+            cin = *cout;
+            s = s_out;
+        }
+    }
+    out.push(GemmShape::new(1, 2048, 1000, 1)); // fc
+    out
+}
+
+/// MobileNetV2 pointwise GEMMs (expansion + projection 1x1 convs; depthwise
+/// convolutions are not GEMMs and are computed by dedicated kernels, as in
+/// SYCL-DNN).
+pub fn mobilenetv2_gemms() -> Vec<GemmShape> {
+    let mut out = Vec::new();
+    let (hw, stem) = conv(224, 3, 2, 1, 3, 32);
+    out.push(stem);
+    // (expansion t, cout, repeats, stride) per the MobileNetV2 paper.
+    let blocks: [(usize, usize, usize, usize); 7] = [
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    let mut cin = 32;
+    let mut s = hw;
+    for (t, cout, reps, stride) in blocks {
+        for r in 0..reps {
+            let blk_stride = if r == 0 { stride } else { 1 };
+            let hidden = cin * t;
+            if t != 1 {
+                // Expansion 1x1 at the input resolution.
+                out.push(GemmShape::new(s * s, cin, hidden, 1));
+            }
+            let s_out = s / blk_stride; // depthwise 3x3 handles the stride
+            // Projection 1x1 at the output resolution.
+            out.push(GemmShape::new(s_out * s_out, hidden, cout, 1));
+            cin = cout;
+            s = s_out;
+        }
+    }
+    // Final 1x1 to 1280 and classifier.
+    out.push(GemmShape::new(s * s, cin, 1280, 1));
+    out.push(GemmShape::new(1, 1280, 1000, 1));
+    out
+}
+
+/// Weight-gradient GEMM of a forward im2col GEMM: dW = dOut^T x patches is
+/// (cout x hw^2) x (hw^2 x 9cin) — the paper's tall-skinny pathological
+/// class (e.g. m=32, k=12321, n=27 is the MobileNet stem's weight grad).
+pub fn wgrad_of(g: &GemmShape) -> GemmShape {
+    GemmShape::new(g.n, g.m, g.k, g.batch)
+}
+
+/// The paper's full benchmark suite: all three networks' GEMMs (forward
+/// im2col plus conv weight-gradient orientations) crossed with batch sizes
+/// {1, 4, 16}, deduplicated (~300 distinct size sets — repeated blocks
+/// inside each network share shapes, matching the paper's "300 different
+/// sets of sizes" from the same three networks).
+pub fn benchmark_shapes() -> Vec<GemmShape> {
+    let mut all = Vec::new();
+    let base: Vec<GemmShape> = vgg16_gemms()
+        .into_iter()
+        .chain(resnet50_gemms())
+        .chain(mobilenetv2_gemms())
+        .collect();
+    for batch in [1usize, 4, 16] {
+        for g in &base {
+            all.push(GemmShape::new(g.m, g.k, g.n, batch));
+            if g.m > 1 {
+                let w = wgrad_of(g);
+                all.push(GemmShape::new(w.m, w.k, w.n, batch));
+            }
+        }
+    }
+    // The paper's three Figure-1 example size sets, verbatim (§3.2).
+    all.push(GemmShape::new(512, 784, 512, 16));
+    all.push(GemmShape::new(512, 4608, 784, 1));
+    all.push(GemmShape::new(32, 12321, 27, 1));
+    dedupe(all)
+}
+
+fn dedupe(shapes: Vec<GemmShape>) -> Vec<GemmShape> {
+    let mut seen = std::collections::HashSet::new();
+    shapes.into_iter().filter(|s| seen.insert(*s)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg16_shape_count_and_range() {
+        let g = vgg16_gemms();
+        assert_eq!(g.len(), 16);
+        // Paper §6.2 territory: M spans 50176 (conv1) down to the FC tails.
+        assert!(g.iter().any(|s| s.m == 224 * 224 && s.n == 64));
+        assert!(g.iter().any(|s| s.m == 112 * 112 && s.n == 128));
+        assert!(g.iter().any(|s| s.m == 196 && s.k == 4608 && s.n == 512));
+        assert_eq!(g[0].k, 27); // 3x3x3 stem
+        assert_eq!(g.last().unwrap().n, 1000);
+    }
+
+    #[test]
+    fn resnet50_structure() {
+        let g = resnet50_gemms();
+        // 1 stem + 16 blocks x 3 + 4 projections + 1 fc = 54.
+        assert_eq!(g.len(), 54);
+        assert!(g.iter().any(|s| s.m == 56 * 56 && s.k == 64 && s.n == 64));
+        assert!(g.iter().any(|s| s.m == 49 && s.k == 512 && s.n == 2048));
+    }
+
+    #[test]
+    fn mobilenetv2_structure() {
+        let g = mobilenetv2_gemms();
+        // Expansion layers exist for t=6 blocks and shapes look pointwise.
+        assert!(g.iter().any(|s| s.k == 32 && s.n == 192)); // 32 -> 192 expand? (t=6 of 32)
+        assert!(g.iter().any(|s| s.n == 1280));
+        assert!(g.len() > 25);
+    }
+
+    #[test]
+    fn benchmark_suite_around_300() {
+        let shapes = benchmark_shapes();
+        assert!(
+            (250..=350).contains(&shapes.len()),
+            "expected ~300 size sets, got {}",
+            shapes.len()
+        );
+        // All distinct.
+        let set: std::collections::HashSet<_> = shapes.iter().collect();
+        assert_eq!(set.len(), shapes.len());
+        // Contains the paper's shape classes: the wgrad of VGG's conv4
+        // block ((512, 196*?, ...) territory) and tall-skinny wgrads of the
+        // low-channel stems.
+        assert!(shapes.iter().any(|s| s.m == 512 && s.k == 784 && s.n == 4608));
+        assert!(shapes.iter().any(|s| s.n == 27 && s.k > 10_000 && s.m <= 64));
+    }
+
+    #[test]
+    fn features_finite_and_distinct() {
+        let shapes = benchmark_shapes();
+        for s in &shapes {
+            let f = s.features();
+            assert_eq!(f.len(), FEATURE_NAMES.len());
+            assert!(f.iter().all(|v| v.is_finite()), "{s:?}");
+        }
+        let a = shapes[0].features();
+        let b = shapes[1].features();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn flops_positive_monotone_in_batch() {
+        let s1 = GemmShape::new(64, 64, 64, 1);
+        let s16 = GemmShape::new(64, 64, 64, 16);
+        assert_eq!(s1.flops() * 16.0, s16.flops());
+    }
+}

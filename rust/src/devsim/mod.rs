@@ -1,0 +1,270 @@
+//! Analytical device-performance simulator (DESIGN.md §3).
+//!
+//! The paper benchmarks 640 kernel configurations x ~300 GEMM shapes on real
+//! OpenCL devices we do not have. The ML selection/classification pipeline
+//! only consumes the resulting (shape x config) GFLOP/s matrix, so we
+//! substitute a roofline-style analytical model that reproduces the
+//! *structure* the paper reports:
+//!
+//!   * a compute roofline scaled by per-work-item ILP, arithmetic intensity,
+//!     register-spill and vectorization efficiencies (micro-tile R/A/C),
+//!   * a memory roofline from classic tiled-GEMM traffic (block reuse),
+//!     with cache acceleration for small working sets,
+//!   * a parallelism term that starves wide GPUs on tall-skinny shapes
+//!     (the paper's pathological class) but saturates CPUs quickly,
+//!   * work-group-granularity tail effects and edge-padding waste,
+//!   * seeded multiplicative noise.
+//!
+//! Absolute numbers are calibrated per device profile to the paper's
+//! landmarks (e.g. ~3160 GFLOP/s best / 13 GFLOP/s worst on the R9 Nano);
+//! what matters downstream is who wins where, and by how much.
+
+pub mod profiles;
+
+pub use profiles::{all_profiles, profile_by_name, DeviceProfile};
+
+use crate::dataset::{GemmShape, KernelConfig, PerfDataset, NUM_CONFIGS};
+use crate::linalg::Matrix;
+use crate::util::Rng;
+
+/// Simulate the GFLOP/s a kernel configuration achieves on one GEMM shape.
+pub fn simulate(profile: &DeviceProfile, shape: &GemmShape, cfg: &KernelConfig) -> f64 {
+    let (m, k, n, b) = (
+        shape.m as f64,
+        shape.k as f64,
+        shape.n as f64,
+        shape.batch as f64,
+    );
+    let (r, a, c) = (cfg.acc_r as f64, cfg.acc_a as f64, cfg.acc_c as f64);
+    let (wr, wc) = (cfg.wg_r as f64, cfg.wg_c as f64);
+
+    // --- Work decomposition -------------------------------------------------
+    let tiles_m = (m / r).ceil();
+    let tiles_n = (n / c).ceil();
+    let threads = b * tiles_m * tiles_n;
+    let wgs_m = (tiles_m / wr).ceil();
+    let wgs_n = (tiles_n / wc).ceil();
+    let wgs = b * wgs_m * wgs_n;
+
+    // Edge padding: full work-groups are executed even on ragged edges.
+    let padded_m = wgs_m * wr * r;
+    let padded_n = wgs_n * wc * c;
+    let useful_flops = 2.0 * b * m * k * n;
+    let padded_flops = 2.0 * b * padded_m * k * padded_n;
+
+    // --- Per-work-item compute efficiency -----------------------------------
+    // Registers: accumulator R*C + double-buffered A-deep loads.
+    let regs = r * c + 2.0 * r * a + 2.0 * a * c + 8.0;
+    let spill = if regs <= profile.regs_per_thread {
+        1.0
+    } else {
+        (profile.regs_per_thread / regs).powf(profile.spill_exponent)
+    };
+    // Independent accumulators hide FMA latency.
+    let ilp = (r * c / profile.ilp_for_peak).min(1.0).powf(0.5);
+    // Flops per operand element touched in registers: R*C/(R+C).
+    let intensity = r * c / (r + c);
+    let intensity_eff = intensity / (intensity + profile.intensity_half);
+    // Vector loads: the tile dims are the load widths (paper §3).
+    let vec_eff = profile.vector_eff(a, c);
+
+    let compute_rate =
+        profile.peak_gflops * 1e9 * ilp * intensity_eff * spill * vec_eff;
+
+    // --- Parallelism ---------------------------------------------------------
+    let hw_threads = profile.compute_units * profile.threads_for_peak;
+    let par = (threads / hw_threads).min(1.0);
+    // Work-group scheduling tail: the last wave of WGs underfills the CUs.
+    let waves = (wgs / profile.compute_units).ceil();
+    let tail = (wgs / (waves * profile.compute_units)).clamp(0.05, 1.0);
+    // Very large work-groups reduce scheduling flexibility slightly.
+    let wg_fit = profile.wg_shape_eff(wr, wc);
+
+    let rate = compute_rate * par * tail.powf(0.5) * wg_fit;
+
+    let t_compute = padded_flops / rate.max(1.0);
+
+    // --- Memory --------------------------------------------------------------
+    // Classic tiled-GEMM traffic: each (block_m x k) strip of lhs is read
+    // once per n-block and vice versa, plus the output write.
+    let blocks_m = wgs_m;
+    let blocks_n = wgs_n;
+    let bytes = 4.0
+        * b
+        * (padded_m * k * blocks_n + k * padded_n * blocks_m + m * n);
+    let working_set = 4.0 * b * (m * k + k * n + m * n);
+    let bw = if working_set <= profile.cache_kb * 1024.0 {
+        profile.cache_bw_gbs
+    } else {
+        profile.mem_bw_gbs
+    } * 1e9;
+    let bw_eff = profile.coalesce_eff(wr, wc, a, c);
+    // Cache blocking: one work-group streams (block_m x k) + (k x block_n)
+    // strips; when those overflow the per-CU cache slice, reuse degrades.
+    // This couples work-group shape with the reduction depth, so different
+    // shapes favour different work-groups (strongest on cache-heavy CPUs).
+    let block_ws = 4.0 * (wr * r * k + k * wc * c);
+    let cache_per_cu = profile.cache_kb * 1024.0 / profile.compute_units;
+    let cache_eff = if block_ws <= cache_per_cu {
+        1.0
+    } else {
+        (cache_per_cu / block_ws).powf(profile.cache_pressure)
+    };
+    let t_mem = bytes / (bw * bw_eff * cache_eff);
+
+    // --- Overheads -----------------------------------------------------------
+    let t_overhead = profile.kernel_launch_us * 1e-6
+        + (wgs / profile.compute_units) * profile.wg_overhead_us * 1e-6;
+
+    let t = t_compute.max(t_mem) + t_overhead;
+    let mut gflops = useful_flops / t / 1e9;
+
+    // --- Seeded noise ---------------------------------------------------------
+    let seed = noise_seed(profile.name, shape, cfg);
+    let eps = Rng::new(seed).normal();
+    gflops *= (profile.noise_sigma * eps).exp();
+    gflops.max(0.05)
+}
+
+fn noise_seed(device: &str, shape: &GemmShape, cfg: &KernelConfig) -> u64 {
+    // FNV-1a over the identifying tuple.
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut eat = |x: u64| {
+        h ^= x;
+        h = h.wrapping_mul(0x100000001b3);
+    };
+    for byte in device.bytes() {
+        eat(byte as u64);
+    }
+    for v in [shape.m, shape.k, shape.n, shape.batch, cfg.index()] {
+        eat(v as u64);
+    }
+    h
+}
+
+/// Generate the full benchmark dataset for a device profile.
+pub fn generate_dataset(profile: &DeviceProfile, shapes: &[GemmShape]) -> PerfDataset {
+    let configs = crate::dataset::all_configs();
+    let mut gflops = Matrix::zeros(shapes.len(), NUM_CONFIGS);
+    for (si, shape) in shapes.iter().enumerate() {
+        for (ci, cfg) in configs.iter().enumerate() {
+            gflops[(si, ci)] = simulate(profile, shape, cfg);
+        }
+    }
+    PerfDataset::new(profile.name, shapes.to_vec(), gflops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::{benchmark_shapes, config_by_name};
+
+    fn nano() -> &'static DeviceProfile {
+        profile_by_name("r9-nano").unwrap()
+    }
+
+    fn cpu() -> &'static DeviceProfile {
+        profile_by_name("i7-6700k").unwrap()
+    }
+
+    #[test]
+    fn deterministic() {
+        let s = GemmShape::new(512, 784, 512, 16);
+        let cfg = config_by_name("r8a4c4_wg16x16").unwrap();
+        assert_eq!(simulate(nano(), &s, &cfg), simulate(nano(), &s, &cfg));
+    }
+
+    #[test]
+    fn square_beats_tall_skinny_on_gpu() {
+        let square = GemmShape::new(512, 784, 512, 16);
+        let skinny = GemmShape::new(32, 12321, 27, 1);
+        let cfg = config_by_name("r8a4c4_wg16x16").unwrap();
+        let gs = simulate(nano(), &square, &cfg);
+        let gk = simulate(nano(), &skinny, &cfg);
+        assert!(
+            gs > 10.0 * gk,
+            "square {gs:.0} vs skinny {gk:.0} GFLOP/s"
+        );
+    }
+
+    #[test]
+    fn gpu_landmarks_roughly_match_paper() {
+        // Paper §3.2: best (8,4,4)@(16,16) on (512,784,512,16) ~ 3160
+        // GFLOP/s; worst (1,8,1)@(8,8) on (32,12321,27,1) ~ 13 GFLOP/s.
+        let best = simulate(
+            nano(),
+            &GemmShape::new(512, 784, 512, 16),
+            &config_by_name("r8a4c4_wg16x16").unwrap(),
+        );
+        let worst = simulate(
+            nano(),
+            &GemmShape::new(32, 12321, 27, 1),
+            &config_by_name("r1a8c1_wg8x8").unwrap(),
+        );
+        assert!(
+            (1500.0..=5000.0).contains(&best),
+            "best-case landmark {best:.0} GFLOP/s"
+        );
+        assert!((2.0..=80.0).contains(&worst), "worst-case landmark {worst:.0}");
+        assert!(best / worst > 50.0, "dynamic range {}", best / worst);
+    }
+
+    #[test]
+    fn large_tiles_win_on_big_square_small_tiles_lose() {
+        let s = GemmShape::new(512, 784, 512, 16);
+        let big = simulate(nano(), &s, &config_by_name("r8a4c4_wg16x16").unwrap());
+        let small = simulate(nano(), &s, &config_by_name("r1a1c1_wg8x8").unwrap());
+        assert!(big > 2.0 * small, "big {big:.0} vs small {small:.0}");
+    }
+
+    #[test]
+    fn cpu_more_consistent_than_gpu() {
+        // Relative std of the best-config perf across shapes must be lower
+        // on the CPU (paper §4.3: "this device was more consistent").
+        let shapes: Vec<GemmShape> =
+            benchmark_shapes().into_iter().step_by(13).collect();
+        let spread = |p: &DeviceProfile| {
+            let ds = generate_dataset(p, &shapes);
+            let best: Vec<f64> =
+                (0..ds.n_shapes()).map(|i| ds.best_gflops(i) / p.peak_gflops).collect();
+            crate::linalg::stats::std_dev(&best) / crate::linalg::stats::mean(&best)
+        };
+        let gpu_spread = spread(nano());
+        let cpu_spread = spread(cpu());
+        assert!(
+            cpu_spread < gpu_spread,
+            "cpu {cpu_spread:.3} vs gpu {gpu_spread:.3}"
+        );
+    }
+
+    #[test]
+    fn winner_diversity_long_tail() {
+        // Figure 2's long tail: many configs win at least one shape.
+        let shapes = benchmark_shapes();
+        let ds = generate_dataset(nano(), &shapes);
+        let counts = ds.winner_counts();
+        let winners = counts.iter().filter(|&&c| c > 0).count();
+        assert!(
+            winners >= 20,
+            "only {winners} distinct winning configs — no long tail"
+        );
+        let top = counts.iter().max().unwrap();
+        assert!(*top >= 5, "top winner too weak: {top}");
+    }
+
+    #[test]
+    fn all_profiles_produce_sane_numbers() {
+        let s = GemmShape::new(256, 256, 256, 4);
+        for p in all_profiles() {
+            for cfg_name in ["r1a1c1_wg8x8", "r4a4c4_wg8x16", "r8a8c8_wg16x16"] {
+                let g = simulate(p, &s, &config_by_name(cfg_name).unwrap());
+                assert!(
+                    g > 0.0 && g < p.peak_gflops,
+                    "{}/{cfg_name}: {g} GFLOP/s vs peak {}",
+                    p.name,
+                    p.peak_gflops
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,240 @@
+//! Device profiles for the analytical simulator: the two benchmark devices
+//! of paper §3.1 plus the two extra §6 deployment targets.
+//!
+//! Numbers are public datasheet figures where available (peak GFLOP/s,
+//! bandwidth, compute units); the efficiency knobs (ILP, intensity_half,
+//! register budget, overheads) are calibrated so the simulated datasets hit
+//! the paper's qualitative landmarks (see devsim::tests).
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeviceKind {
+    DiscreteGpu,
+    Cpu,
+    IntegratedGpu,
+    MobileGpu,
+}
+
+#[derive(Clone, Debug)]
+pub struct DeviceProfile {
+    pub name: &'static str,
+    pub kind: DeviceKind,
+    pub compute_units: f64,
+    pub peak_gflops: f64,
+    pub mem_bw_gbs: f64,
+    /// Effective bandwidth when the whole working set fits in cache.
+    pub cache_bw_gbs: f64,
+    pub cache_kb: f64,
+    /// Resident work-items per CU needed to hide latency at peak.
+    pub threads_for_peak: f64,
+    /// Per-work-item register budget before spilling.
+    pub regs_per_thread: f64,
+    pub spill_exponent: f64,
+    /// Independent accumulators needed per work-item for full FMA pipe.
+    pub ilp_for_peak: f64,
+    /// Arithmetic-intensity half-saturation point (R*C/(R+C) units).
+    pub intensity_half: f64,
+    /// Preferred f32 vector width for loads.
+    pub vec_width: f64,
+    pub kernel_launch_us: f64,
+    pub wg_overhead_us: f64,
+    /// Exponent of the cache-overflow bandwidth penalty (0 disables).
+    pub cache_pressure: f64,
+    pub noise_sigma: f64,
+}
+
+impl DeviceProfile {
+    /// Efficiency of the (A, C)-wide vector loads against the device's
+    /// preferred width. GPUs prefer narrow-to-medium vectors (coalescing
+    /// does the widening); CPUs want the full SIMD width.
+    pub fn vector_eff(&self, a: f64, c: f64) -> f64 {
+        let pref = self.vec_width;
+        let one = |w: f64| -> f64 {
+            if w <= pref {
+                // Under-wide: partially filled vector units.
+                (0.55 + 0.45 * (w / pref)).min(1.0)
+            } else {
+                // Over-wide: split loads, slight penalty.
+                1.0 - 0.08 * (w / pref - 1.0)
+            }
+        };
+        (one(a) * one(c)).clamp(0.2, 1.0)
+    }
+
+    /// Work-group shape efficiency: degenerate 1-wide groups lose the
+    /// cooperative-reuse advantage on GPUs; CPUs barely care.
+    pub fn wg_shape_eff(&self, wr: f64, wc: f64) -> f64 {
+        match self.kind {
+            DeviceKind::Cpu => 1.0 - 0.02 * ((wr * wc) / 256.0),
+            _ => {
+                let aspect = (wr / wc).max(wc / wr); // 1 for square, 128 worst
+                (1.0 - 0.035 * aspect.log2()).clamp(0.6, 1.0)
+            }
+        }
+    }
+
+    /// Memory-coalescing efficiency of the work-group's collective loads.
+    /// GPU: threads along the wg row load consecutive rhs columns — wider
+    /// rows coalesce better; the per-thread C-wide vector also helps.
+    /// CPU: contiguous A/C-wide vector loads approaching SIMD width win.
+    pub fn coalesce_eff(&self, wr: f64, wc: f64, a: f64, c: f64) -> f64 {
+        match self.kind {
+            DeviceKind::Cpu => {
+                let width = (a.max(c) * 4.0) / (self.vec_width * 4.0);
+                (0.5 + 0.5 * width.min(1.0)).clamp(0.3, 1.0)
+            }
+            _ => {
+                let row_span = (wc * c).min(64.0) / 64.0; // 64 lanes ~ wavefront
+                let col_pen = 1.0 - 0.1 * (wr / (wr + 16.0));
+                (0.35 + 0.65 * row_span) * col_pen
+            }
+        }
+    }
+}
+
+/// AMD R9 Nano (Fiji): 64 CUs, 8.19 TFLOP/s fp32, 512 GB/s HBM.
+fn r9_nano() -> DeviceProfile {
+    DeviceProfile {
+        name: "r9-nano",
+        kind: DeviceKind::DiscreteGpu,
+        compute_units: 64.0,
+        peak_gflops: 8192.0,
+        mem_bw_gbs: 512.0,
+        cache_bw_gbs: 1024.0,
+        cache_kb: 2048.0,
+        threads_for_peak: 512.0,
+        regs_per_thread: 160.0,
+        spill_exponent: 1.6,
+        ilp_for_peak: 16.0,
+        intensity_half: 1.15,
+        vec_width: 2.0,
+        kernel_launch_us: 8.0,
+        wg_overhead_us: 0.10,
+        cache_pressure: 0.18,
+        noise_sigma: 0.055,
+    }
+}
+
+/// Intel i7-6700K (Skylake, 4c/8t @ 4.0 GHz, AVX2 FMA): ~512 GFLOP/s fp32,
+/// ~34 GB/s DDR4.
+fn i7_6700k() -> DeviceProfile {
+    DeviceProfile {
+        name: "i7-6700k",
+        kind: DeviceKind::Cpu,
+        compute_units: 4.0,
+        peak_gflops: 512.0,
+        mem_bw_gbs: 34.0,
+        cache_bw_gbs: 300.0,
+        cache_kb: 8192.0,
+        threads_for_peak: 16.0,
+        regs_per_thread: 224.0,
+        spill_exponent: 0.8,
+        ilp_for_peak: 8.0,
+        intensity_half: 0.7,
+        vec_width: 8.0,
+        kernel_launch_us: 25.0,
+        wg_overhead_us: 0.4,
+        cache_pressure: 0.5,
+        noise_sigma: 0.06,
+    }
+}
+
+/// Intel HD Graphics 530 (Gen9, 24 EUs): ~440 GFLOP/s, shared ~34 GB/s.
+fn hd530() -> DeviceProfile {
+    DeviceProfile {
+        name: "hd530",
+        kind: DeviceKind::IntegratedGpu,
+        compute_units: 24.0,
+        peak_gflops: 441.0,
+        mem_bw_gbs: 30.0,
+        cache_bw_gbs: 120.0,
+        cache_kb: 768.0,
+        threads_for_peak: 56.0,
+        regs_per_thread: 128.0,
+        spill_exponent: 1.4,
+        ilp_for_peak: 10.0,
+        intensity_half: 1.0,
+        vec_width: 4.0,
+        kernel_launch_us: 15.0,
+        wg_overhead_us: 0.25,
+        cache_pressure: 0.3,
+        noise_sigma: 0.035,
+    }
+}
+
+/// ARM Mali G71 (Bifrost, ~8 cores): ~265 GFLOP/s, ~15 GB/s LPDDR4.
+fn mali_g71() -> DeviceProfile {
+    DeviceProfile {
+        name: "mali-g71",
+        kind: DeviceKind::MobileGpu,
+        compute_units: 8.0,
+        peak_gflops: 265.0,
+        mem_bw_gbs: 14.9,
+        cache_bw_gbs: 50.0,
+        cache_kb: 512.0,
+        threads_for_peak: 96.0,
+        regs_per_thread: 96.0,
+        spill_exponent: 1.8,
+        ilp_for_peak: 6.0,
+        intensity_half: 0.9,
+        vec_width: 4.0,
+        kernel_launch_us: 40.0,
+        wg_overhead_us: 0.8,
+        cache_pressure: 0.35,
+        noise_sigma: 0.045,
+    }
+}
+
+pub fn all_profiles() -> &'static [DeviceProfile] {
+    use once_cell::sync::Lazy;
+    static PROFILES: Lazy<Vec<DeviceProfile>> =
+        Lazy::new(|| vec![r9_nano(), i7_6700k(), hd530(), mali_g71()]);
+    &PROFILES
+}
+
+pub fn profile_by_name(name: &str) -> Option<&'static DeviceProfile> {
+    all_profiles().iter().find(|p| p.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn four_profiles_unique_names() {
+        let names: Vec<&str> = all_profiles().iter().map(|p| p.name).collect();
+        assert_eq!(names, vec!["r9-nano", "i7-6700k", "hd530", "mali-g71"]);
+    }
+
+    #[test]
+    fn lookup() {
+        assert!(profile_by_name("r9-nano").is_some());
+        assert!(profile_by_name("rtx-4090").is_none());
+    }
+
+    #[test]
+    fn efficiencies_bounded() {
+        for p in all_profiles() {
+            for a in [1.0, 2.0, 4.0, 8.0] {
+                for c in [1.0, 2.0, 4.0, 8.0] {
+                    let v = p.vector_eff(a, c);
+                    assert!((0.2..=1.0).contains(&v), "{} vec {v}", p.name);
+                }
+            }
+            for (wr, wc) in crate::dataset::config::WORKGROUPS {
+                let w = p.wg_shape_eff(wr as f64, wc as f64);
+                assert!((0.5..=1.0).contains(&w), "{} wg {w}", p.name);
+                let ce = p.coalesce_eff(wr as f64, wc as f64, 4.0, 4.0);
+                assert!((0.25..=1.0).contains(&ce), "{} coalesce {ce}", p.name);
+            }
+        }
+    }
+
+    #[test]
+    fn cpu_prefers_wide_vectors_gpu_indifferent() {
+        let cpu = profile_by_name("i7-6700k").unwrap();
+        assert!(cpu.vector_eff(8.0, 8.0) > cpu.vector_eff(1.0, 1.0));
+        let gpu = profile_by_name("r9-nano").unwrap();
+        // GPU: widening beyond pref must not *improve* things much.
+        assert!(gpu.vector_eff(8.0, 8.0) <= gpu.vector_eff(2.0, 2.0) + 0.05);
+    }
+}

@@ -1,0 +1,132 @@
+//! The experiment harness: one driver per figure/table of the paper's
+//! evaluation (DESIGN.md §5). Every driver prints the paper-style rows as a
+//! console table and dumps CSV into a results directory.
+
+pub mod classifier_tables;
+pub mod figures_data;
+pub mod selection_figs;
+pub mod tpu_est;
+pub mod vgg_fig;
+
+use crate::dataset::{benchmark_shapes, PerfDataset};
+use crate::devsim::{generate_dataset, profile_by_name};
+use crate::util::Table;
+use std::path::Path;
+
+/// Shared experiment context: simulated datasets are generated once.
+pub struct Context {
+    pub seed: u64,
+    /// Take every `stride`-th benchmark shape (1 = the full suite; larger
+    /// strides keep tests fast).
+    pub stride: usize,
+    datasets: std::cell::RefCell<std::collections::HashMap<String, std::rc::Rc<PerfDataset>>>,
+}
+
+impl Context {
+    pub fn new(seed: u64) -> Context {
+        Context { seed, stride: 1, datasets: Default::default() }
+    }
+
+    /// Subsampled context for fast tests.
+    pub fn with_stride(seed: u64, stride: usize) -> Context {
+        Context { seed, stride: stride.max(1), datasets: Default::default() }
+    }
+
+    /// The simulated benchmark dataset for a device (cached).
+    pub fn dataset(&self, device: &str) -> std::rc::Rc<PerfDataset> {
+        if let Some(ds) = self.datasets.borrow().get(device) {
+            return ds.clone();
+        }
+        let profile = profile_by_name(device)
+            .unwrap_or_else(|| panic!("unknown device {device}"));
+        let mut shapes: Vec<_> = benchmark_shapes()
+            .into_iter()
+            .step_by(self.stride)
+            .collect();
+        // Striding must never drop the Figure-1/4 reference shapes.
+        for &(m, k, n, b) in &figures_data::FIG1_SHAPES {
+            let s = crate::dataset::GemmShape::new(m, k, n, b);
+            if !shapes.contains(&s) {
+                shapes.push(s);
+            }
+        }
+        let ds = std::rc::Rc::new(generate_dataset(profile, &shapes));
+        self.datasets
+            .borrow_mut()
+            .insert(device.to_string(), ds.clone());
+        ds
+    }
+}
+
+/// All experiment identifiers, in paper order.
+pub const ALL_EXPERIMENTS: [&str; 10] = [
+    "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "tab1", "tab2", "fig7",
+    "tpu-est",
+];
+
+/// Run one experiment; returns its tables.
+pub fn run(id: &str, ctx: &Context, artifacts_dir: &Path) -> Result<Vec<Table>, String> {
+    match id {
+        "fig1" => Ok(figures_data::fig1(ctx)),
+        "fig2" => Ok(figures_data::fig2(ctx)),
+        "fig3" => Ok(figures_data::fig3(ctx)),
+        "fig4" => Ok(figures_data::fig4(ctx)),
+        "fig5" => Ok(selection_figs::fig5(ctx)),
+        "fig6" => Ok(selection_figs::fig6(ctx)),
+        "tab1" => Ok(classifier_tables::tab1(ctx)),
+        "tab2" => Ok(classifier_tables::tab2(ctx)),
+        "fig7" => vgg_fig::fig7(ctx, artifacts_dir),
+        "tpu-est" => Ok(tpu_est::tpu_estimates()),
+        other => Err(format!(
+            "unknown experiment {other:?}; known: {}",
+            ALL_EXPERIMENTS.join(", ")
+        )),
+    }
+}
+
+/// Run one or all experiments, printing tables and dumping CSVs.
+pub fn run_and_save(
+    id: &str,
+    ctx: &Context,
+    artifacts_dir: &Path,
+    out_dir: Option<&Path>,
+) -> Result<(), String> {
+    let ids: Vec<&str> = if id == "all" {
+        ALL_EXPERIMENTS.to_vec()
+    } else {
+        vec![id]
+    };
+    for id in ids {
+        let tables = run(id, ctx, artifacts_dir)?;
+        for (i, t) in tables.iter().enumerate() {
+            println!("{}", t.render());
+            if let Some(dir) = out_dir {
+                std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+                let fname = format!("{id}_{i}.csv");
+                std::fs::write(dir.join(&fname), t.to_csv())
+                    .map_err(|e| e.to_string())?;
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn context_caches_datasets() {
+        let ctx = Context::new(1);
+        let a = ctx.dataset("r9-nano");
+        let b = ctx.dataset("r9-nano");
+        assert!(std::rc::Rc::ptr_eq(&a, &b));
+        assert_eq!(a.n_shapes(), benchmark_shapes().len());
+    }
+
+    #[test]
+    fn unknown_experiment_rejected() {
+        let ctx = Context::new(1);
+        assert!(run("fig99", &ctx, Path::new(".")).is_err());
+    }
+}

@@ -1,0 +1,106 @@
+//! TPU-viability estimates for the kernel configuration space (DESIGN.md
+//! §8): interpret-mode wallclock is not a TPU proxy, so real-TPU prospects
+//! are assessed analytically from the BlockSpec geometry — VMEM footprint
+//! of the working set and MXU systolic-array utilization of the block
+//! shapes.
+
+use crate::dataset::{all_configs, config_by_name, KernelConfig};
+use crate::util::table::{fnum, Table};
+
+/// VMEM budget of a TPU core (v4-ish), bytes.
+pub const VMEM_BUDGET: usize = 16 * 1024 * 1024;
+
+/// MXU systolic tile edge.
+const MXU: f64 = 128.0;
+
+/// Utilization of one dimension against the 128-wide systolic array:
+/// blocks are padded up to multiples of 128 lanes.
+fn dim_util(d: usize) -> f64 {
+    let d = d as f64;
+    d / ((d / MXU).ceil() * MXU)
+}
+
+/// Estimated MXU utilization of a configuration's output block.
+pub fn mxu_utilization(cfg: &KernelConfig) -> f64 {
+    // K-chunk >= 32 everywhere, deeper than the 8-stage bf16 pipeline, so
+    // the K dimension never starves the array; block M/N padding dominates.
+    dim_util(cfg.block_m()) * dim_util(cfg.block_n())
+}
+
+/// Whether the double-buffered working set fits VMEM at a given K depth.
+pub fn fits_vmem(cfg: &KernelConfig, dtype_bytes: usize) -> bool {
+    2 * cfg.vmem_bytes(dtype_bytes) <= VMEM_BUDGET
+}
+
+pub fn tpu_estimates() -> Vec<Table> {
+    let mut t = Table::new(
+        "TPU-viability estimates per kernel configuration (DESIGN.md §8)",
+        &["config", "block", "k_chunk", "VMEM KiB (2x buf)", "fits 16MiB", "MXU util"],
+    );
+    // The shipped deployment plus the extreme corners of the space.
+    let mut names: Vec<String> = vec![
+        "r2a8c1_wg8x32",
+        "r2a8c4_wg16x16",
+        "r4a4c4_wg8x32",
+        "r4a8c4_wg8x32",
+        "r4a8c4_wg16x16",
+        "r8a4c4_wg8x32",
+        "r1a4c2_wg1x64",
+        "r8a8c8_wg16x16",
+        "r1a1c1_wg1x64",
+        "r8a8c8_wg128x1",
+    ]
+    .into_iter()
+    .map(String::from)
+    .collect();
+    names.dedup();
+    for name in names {
+        let cfg = config_by_name(&name).expect("known config");
+        t.row(vec![
+            name,
+            format!("{}x{}", cfg.block_m(), cfg.block_n()),
+            cfg.k_chunk().to_string(),
+            fnum(2.0 * cfg.vmem_bytes(4) as f64 / 1024.0, 1),
+            if fits_vmem(&cfg, 4) { "yes".into() } else { "NO".into() },
+            fnum(mxu_utilization(&cfg), 3),
+        ]);
+    }
+    let viable = all_configs()
+        .iter()
+        .filter(|c| fits_vmem(c, 4) && mxu_utilization(c) >= 0.25)
+        .count();
+    t.note(&format!(
+        "{viable}/640 configurations are TPU-viable (fit 2x-buffered VMEM \
+         and reach >=25% MXU utilization); the deployment pipeline would \
+         restrict the search space to these on real TPU hardware"
+    ));
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mxu_util_monotone_to_block_size() {
+        let small = config_by_name("r1a1c1_wg1x64").unwrap(); // 1x64
+        let big = config_by_name("r8a8c8_wg16x16").unwrap(); // 128x128
+        assert!(mxu_utilization(&big) > mxu_utilization(&small));
+        assert!((mxu_utilization(&big) - 1.0).abs() < 1e-12); // 128x128 exact
+    }
+
+    #[test]
+    fn all_configs_fit_vmem_at_f32() {
+        // Largest block is 1024x8 with k_chunk 256: comfortably in VMEM.
+        for cfg in all_configs() {
+            assert!(fits_vmem(&cfg, 4), "{}", cfg.name());
+        }
+    }
+
+    #[test]
+    fn table_renders() {
+        let t = &tpu_estimates()[0];
+        assert!(t.rows.len() >= 9);
+        assert!(t.notes[0].contains("/640"));
+    }
+}

@@ -1,0 +1,25 @@
+//! # kernelsel
+//!
+//! A reproduction of *"Performance portability through machine learning
+//! guided kernel selection in SYCL libraries"* (Lawson, 2020) as a
+//! three-layer Rust + JAX/Pallas + PJRT stack:
+//!
+//! * **Layer 1** (`python/compile/kernels/`): the paper's parameterized GEMM
+//!   as a Pallas kernel — 640 configurations of micro-tile and work-group
+//!   parameters, AOT-lowered to HLO-text artifacts.
+//! * **Layer 2** (`python/compile/model.py`): JAX compute graphs (VGG16 via
+//!   im2col) calling the kernel; lowered once at build time.
+//! * **Layer 3** (this crate): everything at runtime — the benchmark data
+//!   pipeline, the unsupervised kernel-subset selection, the runtime
+//!   classifier, the PJRT executor, and the serving coordinator.
+
+pub mod classify;
+pub mod coordinator;
+pub mod dataset;
+pub mod devsim;
+pub mod experiments;
+pub mod linalg;
+pub mod ml;
+pub mod runtime;
+pub mod selection;
+pub mod util;

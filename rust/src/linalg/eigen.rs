@@ -1,0 +1,222 @@
+//! Symmetric eigendecomposition via the cyclic Jacobi method.
+//!
+//! Powers PCA (covariance matrices) and spectral clustering (graph
+//! Laplacians). Jacobi is O(n^3) per sweep but unconditionally stable and
+//! more than fast enough for the ≤ 640-dimensional problems here.
+
+use super::Matrix;
+
+/// Eigendecomposition result: `values[i]` corresponds to the column
+/// `vectors[.., i]`; sorted by descending eigenvalue.
+#[derive(Clone, Debug)]
+pub struct Eigh {
+    pub values: Vec<f64>,
+    /// Column-eigenvector matrix: vectors[(r, i)] is component r of
+    /// eigenvector i.
+    pub vectors: Matrix,
+}
+
+/// Jacobi eigendecomposition of a symmetric matrix.
+///
+/// Panics if the matrix is not square; asymmetry is tolerated up to
+/// round-off (the algorithm uses only the upper triangle).
+pub fn eigh(m: &Matrix) -> Eigh {
+    assert_eq!(m.rows, m.cols, "eigh requires a square matrix");
+    let n = m.rows;
+    if n == 0 {
+        return Eigh { values: vec![], vectors: Matrix::zeros(0, 0) };
+    }
+    let mut a = m.clone();
+    let mut v = Matrix::identity(n);
+
+    let max_sweeps = 100;
+    for _sweep in 0..max_sweeps {
+        // Off-diagonal Frobenius norm.
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += a[(i, j)] * a[(i, j)];
+            }
+        }
+        if off.sqrt() < 1e-12 {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = a[(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = a[(p, p)];
+                let aqq = a[(q, q)];
+                let theta = (aqq - app) / (2.0 * apq);
+                // tan of the rotation angle, stable formula.
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+
+                // A <- J^T A J applied to rows/cols p and q.
+                for k in 0..n {
+                    let akp = a[(k, p)];
+                    let akq = a[(k, q)];
+                    a[(k, p)] = c * akp - s * akq;
+                    a[(k, q)] = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let apk = a[(p, k)];
+                    let aqk = a[(q, k)];
+                    a[(p, k)] = c * apk - s * aqk;
+                    a[(q, k)] = s * apk + c * aqk;
+                }
+                // Accumulate eigenvectors.
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    // Sort by descending eigenvalue.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| a[(j, j)].partial_cmp(&a[(i, i)]).unwrap());
+    let values: Vec<f64> = order.iter().map(|&i| a[(i, i)]).collect();
+    let mut vectors = Matrix::zeros(n, n);
+    for (new_c, &old_c) in order.iter().enumerate() {
+        for r in 0..n {
+            vectors[(r, new_c)] = v[(r, old_c)];
+        }
+    }
+    Eigh { values, vectors }
+}
+
+/// The `k` eigenvectors with the *smallest* eigenvalues (for Laplacians),
+/// as rows of points: returns (n x k) embedding matrix.
+pub fn smallest_eigvec_embedding(m: &Matrix, k: usize) -> Matrix {
+    let e = eigh(m);
+    let n = m.rows;
+    let k = k.min(n);
+    let mut out = Matrix::zeros(n, k);
+    for j in 0..k {
+        let col = n - 1 - j; // ascending from the tail of the descending sort
+        for r in 0..n {
+            out[(r, j)] = e.vectors[(r, col)];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dot;
+
+    fn reconstruct(e: &Eigh) -> Matrix {
+        // V diag(w) V^T
+        let n = e.values.len();
+        let mut vd = e.vectors.clone();
+        for c in 0..n {
+            for r in 0..n {
+                vd[(r, c)] *= e.values[c];
+            }
+        }
+        vd.matmul(&e.vectors.transpose())
+    }
+
+    #[test]
+    fn diagonal_matrix() {
+        let m = Matrix::from_rows(&[
+            vec![3.0, 0.0, 0.0],
+            vec![0.0, 1.0, 0.0],
+            vec![0.0, 0.0, 2.0],
+        ]);
+        let e = eigh(&m);
+        assert_eq!(e.values, vec![3.0, 2.0, 1.0]);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] has eigenvalues 3 and 1.
+        let m = Matrix::from_rows(&[vec![2.0, 1.0], vec![1.0, 2.0]]);
+        let e = eigh(&m);
+        assert!((e.values[0] - 3.0).abs() < 1e-10);
+        assert!((e.values[1] - 1.0).abs() < 1e-10);
+        // Eigenvector for 3 is (1,1)/sqrt(2) up to sign.
+        let v0 = e.vectors.col(0);
+        assert!((v0[0].abs() - std::f64::consts::FRAC_1_SQRT_2).abs() < 1e-10);
+        assert!((v0[0] - v0[1]).abs() < 1e-10);
+    }
+
+    #[test]
+    fn reconstruction_and_orthonormality() {
+        // Pseudo-random symmetric matrix.
+        let n = 12;
+        let mut m = Matrix::zeros(n, n);
+        let mut rng = crate::util::Rng::new(3);
+        for i in 0..n {
+            for j in i..n {
+                let v = rng.normal();
+                m[(i, j)] = v;
+                m[(j, i)] = v;
+            }
+        }
+        let e = eigh(&m);
+        let rec = reconstruct(&e);
+        for i in 0..n {
+            for j in 0..n {
+                assert!(
+                    (rec[(i, j)] - m[(i, j)]).abs() < 1e-8,
+                    "reconstruction mismatch at ({i},{j})"
+                );
+            }
+        }
+        // Columns orthonormal.
+        for a in 0..n {
+            for b in 0..n {
+                let d = dot(&e.vectors.col(a), &e.vectors.col(b));
+                let want = if a == b { 1.0 } else { 0.0 };
+                assert!((d - want).abs() < 1e-9, "V^T V [{a},{b}] = {d}");
+            }
+        }
+        // Values descending.
+        for w in e.values.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+    }
+
+    #[test]
+    fn psd_covariance_nonnegative() {
+        let x = Matrix::from_rows(&[
+            vec![1.0, 2.0, 0.5],
+            vec![2.0, 3.9, 1.1],
+            vec![3.0, 6.1, 1.4],
+            vec![4.0, 8.0, 2.2],
+        ]);
+        let e = eigh(&x.covariance());
+        for &w in &e.values {
+            assert!(w > -1e-10, "negative eigenvalue {w} for PSD matrix");
+        }
+    }
+
+    #[test]
+    fn smallest_embedding_orientation() {
+        // Block-diagonal Laplacian of two disconnected edges: the two
+        // smallest eigenvalues are 0, eigenvectors constant per component.
+        let m = Matrix::from_rows(&[
+            vec![1.0, -1.0, 0.0, 0.0],
+            vec![-1.0, 1.0, 0.0, 0.0],
+            vec![0.0, 0.0, 1.0, -1.0],
+            vec![0.0, 0.0, -1.0, 1.0],
+        ]);
+        let emb = smallest_eigvec_embedding(&m, 2);
+        assert_eq!(emb.rows, 4);
+        assert_eq!(emb.cols, 2);
+        // Rows 0,1 identical and rows 2,3 identical in the 2-dim embedding.
+        for c in 0..2 {
+            assert!((emb[(0, c)] - emb[(1, c)]).abs() < 1e-8);
+            assert!((emb[(2, c)] - emb[(3, c)]).abs() < 1e-8);
+        }
+    }
+}

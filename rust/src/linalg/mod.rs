@@ -1,0 +1,247 @@
+//! Dense linear algebra substrate for the ML modules.
+//!
+//! A deliberately small, well-tested core: row-major `Matrix`, the handful
+//! of BLAS-1/2/3 operations the clustering and classification methods need,
+//! a symmetric eigensolver (cyclic Jacobi) powering PCA and spectral
+//! clustering, and summary statistics.
+
+pub mod eigen;
+pub mod stats;
+
+pub use eigen::{eigh, Eigh};
+
+/// Row-major dense f64 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_rows(rows_in: &[Vec<f64>]) -> Matrix {
+        assert!(!rows_in.is_empty(), "Matrix::from_rows on empty input");
+        let cols = rows_in[0].len();
+        let mut data = Vec::with_capacity(rows_in.len() * cols);
+        for r in rows_in {
+            assert_eq!(r.len(), cols, "ragged rows");
+            data.extend_from_slice(r);
+        }
+        Matrix { rows: rows_in.len(), cols, data }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Matrix {
+        assert_eq!(data.len(), rows * cols);
+        Matrix { rows, cols, data }
+    }
+
+    pub fn identity(n: usize) -> Matrix {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f64] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn col(&self, c: usize) -> Vec<f64> {
+        (0..self.rows).map(|r| self[(r, c)]).collect()
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out[(c, r)] = self[(r, c)];
+            }
+        }
+        out
+    }
+
+    /// self (r x k) * other (k x c) -> (r x c). Cache-friendly ikj loop.
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = other.row(k);
+                let out_row = out.row_mut(i);
+                for (o, &b) in out_row.iter_mut().zip(orow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// self (r x c) * v (c) -> (r).
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, v.len());
+        (0..self.rows)
+            .map(|r| dot(self.row(r), v))
+            .collect()
+    }
+
+    /// Mean of each column.
+    pub fn col_means(&self) -> Vec<f64> {
+        let mut means = vec![0.0; self.cols];
+        for r in 0..self.rows {
+            for (m, &x) in means.iter_mut().zip(self.row(r)) {
+                *m += x;
+            }
+        }
+        for m in &mut means {
+            *m /= self.rows as f64;
+        }
+        means
+    }
+
+    /// Subtract `mu` from every row (in place).
+    pub fn center_rows(&mut self, mu: &[f64]) {
+        assert_eq!(mu.len(), self.cols);
+        for r in 0..self.rows {
+            for (x, &m) in self.row_mut(r).iter_mut().zip(mu) {
+                *x -= m;
+            }
+        }
+    }
+
+    /// Covariance of the rows (columns are variables): (Xc^T Xc) / (n-1).
+    pub fn covariance(&self) -> Matrix {
+        let mu = self.col_means();
+        let mut centered = self.clone();
+        centered.center_rows(&mu);
+        let xt = centered.transpose();
+        let mut cov = xt.matmul(&centered);
+        let denom = (self.rows.max(2) - 1) as f64;
+        for v in &mut cov.data {
+            *v /= denom;
+        }
+        cov
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &f64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+#[inline]
+pub fn norm2(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+#[inline]
+pub fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+#[inline]
+pub fn euclidean(a: &[f64], b: &[f64]) -> f64 {
+    sq_dist(a, b).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let i = Matrix::identity(2);
+        assert_eq!(a.matmul(&i), a);
+        assert_eq!(i.matmul(&a), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]]);
+        let b = Matrix::from_rows(&[vec![7.0, 8.0], vec![9.0, 10.0], vec![11.0, 12.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![58.0, 64.0, 139.0, 154.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]]);
+        assert_eq!(a.transpose().transpose(), a);
+        assert_eq!(a.transpose()[(2, 1)], 6.0);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let v = vec![5.0, 6.0];
+        assert_eq!(a.matvec(&v), vec![17.0, 39.0]);
+    }
+
+    #[test]
+    fn col_means_and_center() {
+        let mut a = Matrix::from_rows(&[vec![1.0, 10.0], vec![3.0, 20.0]]);
+        let mu = a.col_means();
+        assert_eq!(mu, vec![2.0, 15.0]);
+        a.center_rows(&mu);
+        assert_eq!(a.col_means(), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn covariance_known() {
+        // Two perfectly correlated columns.
+        let a = Matrix::from_rows(&[
+            vec![1.0, 2.0],
+            vec![2.0, 4.0],
+            vec![3.0, 6.0],
+        ]);
+        let c = a.covariance();
+        assert!((c[(0, 0)] - 1.0).abs() < 1e-12);
+        assert!((c[(0, 1)] - 2.0).abs() < 1e-12);
+        assert!((c[(1, 1)] - 4.0).abs() < 1e-12);
+        // Symmetric.
+        assert_eq!(c[(0, 1)], c[(1, 0)]);
+    }
+
+    #[test]
+    fn distances() {
+        let a = [0.0, 3.0];
+        let b = [4.0, 0.0];
+        assert_eq!(sq_dist(&a, &b), 25.0);
+        assert_eq!(euclidean(&a, &b), 5.0);
+        assert_eq!(norm2(&[3.0, 4.0]), 5.0);
+    }
+}

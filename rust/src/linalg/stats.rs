@@ -1,0 +1,93 @@
+//! Summary statistics used across the selection/evaluation pipeline.
+
+/// Arithmetic mean. Panics on empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty(), "mean of empty slice");
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance.
+pub fn variance(xs: &[f64]) -> f64 {
+    let mu = mean(xs);
+    xs.iter().map(|x| (x - mu) * (x - mu)).sum::<f64>() / xs.len() as f64
+}
+
+pub fn std_dev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Geometric mean — the paper's aggregate for relative performance (§4.3).
+/// Zero entries are clamped to `eps` so a single unusable kernel does not
+/// annihilate the aggregate.
+pub fn geomean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty(), "geomean of empty slice");
+    let eps = 1e-9;
+    let log_sum: f64 = xs.iter().map(|&x| x.max(eps).ln()).sum();
+    (log_sum / xs.len() as f64).exp()
+}
+
+/// Index of the maximum value (first on ties). Panics on empty input.
+pub fn argmax(xs: &[f64]) -> usize {
+    assert!(!xs.is_empty(), "argmax of empty slice");
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate().skip(1) {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Index of the minimum value (first on ties). Panics on empty input.
+pub fn argmin(xs: &[f64]) -> usize {
+    assert!(!xs.is_empty(), "argmin of empty slice");
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate().skip(1) {
+        if x < xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Max value. Panics on empty input.
+pub fn max(xs: &[f64]) -> f64 {
+    xs[argmax(xs)]
+}
+
+/// Min value. Panics on empty input.
+pub fn min(xs: &[f64]) -> f64 {
+    xs[argmin(xs)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_var() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert_eq!(mean(&xs), 5.0);
+        assert_eq!(variance(&xs), 4.0);
+        assert_eq!(std_dev(&xs), 2.0);
+    }
+
+    #[test]
+    fn geomean_known() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
+        // Zero clamps instead of annihilating.
+        assert!(geomean(&[0.0, 1.0]) > 0.0);
+    }
+
+    #[test]
+    fn arg_extrema() {
+        let xs = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0];
+        assert_eq!(argmax(&xs), 5);
+        assert_eq!(argmin(&xs), 1);
+        assert_eq!(max(&xs), 9.0);
+        assert_eq!(min(&xs), 1.0);
+        // First on ties.
+        assert_eq!(argmax(&[1.0, 2.0, 2.0]), 1);
+    }
+}

@@ -1,0 +1,474 @@
+//! `kernelsel` — the command-line front end of the tuned-kernel library.
+//!
+//! Subcommands cover the whole paper pipeline:
+//!   simulate    generate benchmark datasets (devsim) to CSV
+//!   select      run a kernel-subset selection and print/emit a deployment
+//!   train       train the runtime classifier, emit the selector tree
+//!   codegen     emit the nested-if Rust source of a trained selector
+//!   eval        evaluate selection + classifier on a train/test split
+//!   experiment  regenerate a paper figure/table (or `all`)
+//!   serve       run the GEMM serving coordinator demo
+//!   infer       run VGG16 inference through the runtime
+//!   tpu-est     print TPU-viability estimates
+
+use std::path::PathBuf;
+
+use kernelsel::classify::codegen::{to_rust_source, CompiledTree};
+use kernelsel::classify::{ClassifierKind, KernelClassifier, ALL_CLASSIFIERS};
+use kernelsel::coordinator::{BatcherConfig, Coordinator, SelectorPolicy, VggEngine};
+use kernelsel::dataset::{
+    benchmark_shapes, config_by_index, config_by_name, GemmShape, Normalization,
+};
+use kernelsel::devsim::{all_profiles, generate_dataset, profile_by_name};
+use kernelsel::experiments;
+use kernelsel::runtime::{Manifest, Runtime};
+use kernelsel::selection::{achievable_percent, select, Method};
+use kernelsel::util::fill_buffer;
+
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::HashMap::new();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                let value = if it.peek().map_or(false, |v| !v.starts_with("--")) {
+                    it.next().unwrap().clone()
+                } else {
+                    "true".to_string()
+                };
+                flags.insert(name.to_string(), value);
+            } else {
+                positional.push(a.clone());
+            }
+        }
+        Args { positional, flags }
+    }
+
+    fn get(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.flags
+            .get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get("artifacts", "artifacts"))
+}
+
+fn device_dataset(args: &Args) -> kernelsel::dataset::PerfDataset {
+    let device = args.get("device", "r9-nano");
+    if let Some(csv) = args.flags.get("data") {
+        kernelsel::dataset::PerfDataset::load(&device, std::path::Path::new(csv))
+            .unwrap_or_else(|e| fail(&format!("loading {csv}: {e}")))
+    } else {
+        let profile = profile_by_name(&device)
+            .unwrap_or_else(|| fail(&format!("unknown device {device}")));
+        generate_dataset(profile, &benchmark_shapes())
+    }
+}
+
+fn fail(msg: &str) -> ! {
+    eprintln!("error: {msg}");
+    std::process::exit(1);
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    let Some(cmd) = args.positional.first().map(String::as_str) else {
+        print_usage();
+        std::process::exit(2);
+    };
+    match cmd {
+        "collect" => cmd_collect(&args),
+        "simulate" => cmd_simulate(&args),
+        "select" => cmd_select(&args),
+        "train" => cmd_train(&args),
+        "codegen" => cmd_codegen(&args),
+        "eval" => cmd_eval(&args),
+        "experiment" => cmd_experiment(&args),
+        "serve" => cmd_serve(&args),
+        "infer" => cmd_infer(&args),
+        "tpu-est" => cmd_tpu_est(),
+        "help" | "--help" | "-h" => print_usage(),
+        other => {
+            eprintln!("unknown command {other:?}");
+            print_usage();
+            std::process::exit(2);
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "kernelsel — ML-guided kernel selection (Lawson 2020 reproduction)
+
+USAGE: kernelsel <command> [flags]
+
+  simulate   --device <name|all> [--out results/]          dataset CSVs
+  collect    [--out results/measured_cpu.csv]              measure shipped
+             artifacts on the local CPU PJRT (real data for tuning)
+  select     --device D [--method M --norm N --k K --emit-deploy]
+  train      --device D [--k K --classifier C --out tree.txt]
+  codegen    --device D [--k K]                            nested-if Rust
+  eval       --device D [--k K]                            full pipeline eval
+  experiment <fig1..fig7|tab1|tab2|tpu-est|all> [--out results/]
+  serve      [--requests N --policy tuned|single|xla]      coordinator demo
+  infer      [--network vgg16-tiny --policy tuned|single|xla --iters N]
+  tpu-est                                                   TPU estimates
+
+Common flags: --device {}, --artifacts DIR, --seed S, --data CSV",
+        all_profiles()
+            .iter()
+            .map(|p| p.name)
+            .collect::<Vec<_>>()
+            .join("|")
+    );
+}
+
+/// Measure every shipped (config, shape) GEMM artifact on the local CPU
+/// PJRT backend — the paper's data-collection protocol (§3.1: warmup, then
+/// batched timed iterations) on real hardware. Unmeasured configs stay 0,
+/// which downstream training over the deployed set never reads.
+fn cmd_collect(args: &Args) {
+    use kernelsel::dataset::{PerfDataset, NUM_CONFIGS};
+    use kernelsel::linalg::Matrix;
+    use std::time::Duration;
+
+    let dir = artifacts_dir(args);
+    let runtime = Runtime::new(&dir).unwrap_or_else(|e| fail(&e.to_string()));
+    let manifest = Manifest::load(&dir).unwrap_or_else(|e| fail(&e));
+    let out = PathBuf::from(args.get("out", "results/measured_cpu.csv"));
+    let budget = Duration::from_millis(args.get_usize("budget-ms", 100) as u64);
+    // Skip shapes whose single-execution cost would dominate the run: the
+    // selector only needs relative data on the serving-bucket shapes.
+    let max_gflop = args.get_usize("max-gflop", 2) as f64;
+
+    let shapes: Vec<GemmShape> = manifest
+        .matmul_shapes()
+        .into_iter()
+        .map(|(m, k, n, b)| GemmShape::new(m, k, n, b))
+        .filter(|s| s.flops() <= max_gflop * 1e9)
+        .collect();
+    let mut gflops = Matrix::zeros(shapes.len(), NUM_CONFIGS);
+    let mut measured = 0usize;
+    for (si, s) in shapes.iter().enumerate() {
+        let lhs = fill_buffer(si as u32, s.batch * s.m * s.k);
+        let rhs = fill_buffer((si + 77) as u32, s.batch * s.k * s.n);
+        for meta in manifest.matmuls_for_shape(s.m, s.k, s.n, s.batch) {
+            let Some(cfg) = meta.config_index else {
+                continue; // the xla backend has no config column
+            };
+            let exe = runtime.load(&meta.path).unwrap_or_else(|e| fail(&e.to_string()));
+            let stats = kernelsel::util::timing::measure(
+                || {
+                    runtime
+                        .execute_f32(
+                            &exe,
+                            &[
+                                (&lhs, &[s.batch, s.m, s.k]),
+                                (&rhs, &[s.batch, s.k, s.n]),
+                            ],
+                        )
+                        .expect("execute");
+                },
+                1,
+                budget,
+            );
+            gflops[(si, cfg)] = s.flops() / stats.mean / 1e9;
+            measured += 1;
+        }
+        eprintln!(
+            "[{}/{}] {}: measured {} configs",
+            si + 1,
+            shapes.len(),
+            s.label(),
+            manifest.matmuls_for_shape(s.m, s.k, s.n, s.batch).len()
+        );
+    }
+    let ds = PerfDataset::new("local-cpu", shapes, gflops);
+    std::fs::create_dir_all(out.parent().unwrap_or(std::path::Path::new("."))).ok();
+    ds.save(&out).unwrap_or_else(|e| fail(&e.to_string()));
+    println!(
+        "measured {} (config, shape) points over {} shapes -> {}",
+        measured,
+        ds.n_shapes(),
+        out.display()
+    );
+}
+
+fn cmd_simulate(args: &Args) {
+    let device = args.get("device", "all");
+    let out = PathBuf::from(args.get("out", "results"));
+    std::fs::create_dir_all(&out).unwrap();
+    let devices: Vec<String> = if device == "all" {
+        all_profiles().iter().map(|p| p.name.to_string()).collect()
+    } else {
+        vec![device]
+    };
+    for dev in devices {
+        let profile = profile_by_name(&dev).unwrap_or_else(|| fail("unknown device"));
+        let ds = generate_dataset(profile, &benchmark_shapes());
+        let path = out.join(format!("dataset_{dev}.csv"));
+        ds.save(&path).unwrap();
+        println!(
+            "{dev}: {} shapes x 640 configs -> {}",
+            ds.n_shapes(),
+            path.display()
+        );
+    }
+}
+
+fn cmd_select(args: &Args) {
+    let ds = device_dataset(args);
+    let method = Method::by_name(&args.get("method", "PCA+KMeans"))
+        .unwrap_or_else(|| fail("unknown method"));
+    let norm = Normalization::by_name(&args.get("norm", "standard"))
+        .unwrap_or_else(|| fail("unknown normalization"));
+    let k = args.get_usize("k", 8);
+    let seed = args.get_usize("seed", 7) as u64;
+    let split = ds.split(0.8, seed);
+    let train = ds.subset(&split.train);
+    let test = ds.subset(&split.test);
+    let picks = select(method, &train, norm, k, seed);
+    let pct = achievable_percent(&test, &picks);
+    if args.flags.contains_key("emit-deploy") {
+        // JSON consumable by `python -m compile.aot --deploy`.
+        let names: Vec<String> = picks
+            .iter()
+            .map(|&c| format!("\"{}\"", config_by_index(c).name()))
+            .collect();
+        let single = kernelsel::selection::single_best(&train);
+        println!(
+            "{{\n  \"deployed\": [{}],\n  \"single_best\": \"{}\"\n}}",
+            names.join(", "),
+            config_by_index(single).name()
+        );
+    } else {
+        println!(
+            "{} selection of {k} kernels on {} ({} norm): {:.2}% of optimal",
+            method.name(),
+            ds.device,
+            norm.name(),
+            pct
+        );
+        for &c in &picks {
+            println!("  {}", config_by_index(c).name());
+        }
+    }
+}
+
+fn cmd_train(args: &Args) {
+    let ds = device_dataset(args);
+    let k = args.get_usize("k", 8);
+    let seed = args.get_usize("seed", 7) as u64;
+    let kind = ALL_CLASSIFIERS
+        .iter()
+        .copied()
+        .find(|c| c.name().eq_ignore_ascii_case(&args.get("classifier", "DecisionTreeB")))
+        .unwrap_or(ClassifierKind::DecisionTreeB);
+    let split = ds.split(0.8, seed);
+    let train = ds.subset(&split.train);
+    let test = ds.subset(&split.test);
+    let deployed = select(Method::PcaKMeans, &train, Normalization::Standard, k, seed);
+    let clf = KernelClassifier::fit(kind, &train, &deployed, seed);
+    let pct = kernelsel::selection::achieved_percent(&test, &clf.choices(&test));
+    println!(
+        "{} over {k} PCA+KMeans kernels on {}: {:.2}% of optimal \
+         (oracle {:.2}%)",
+        kind.name(),
+        ds.device,
+        pct,
+        achievable_percent(&test, &deployed)
+    );
+    if let Some(tree) = CompiledTree::compile(&clf) {
+        let out = args.get("out", "");
+        if !out.is_empty() {
+            std::fs::write(&out, tree.serialize()).unwrap();
+            println!("selector tree -> {out}");
+        }
+    }
+}
+
+fn cmd_codegen(args: &Args) {
+    let ds = device_dataset(args);
+    let k = args.get_usize("k", 8);
+    let seed = args.get_usize("seed", 7) as u64;
+    let (_, tree) = kernelsel::coordinator::tune_selector(
+        &ds,
+        k,
+        Normalization::Standard,
+        seed,
+    );
+    println!("{}", to_rust_source(&tree, "select_kernel"));
+}
+
+fn cmd_eval(args: &Args) {
+    let ds = device_dataset(args);
+    let k = args.get_usize("k", 8);
+    let seed = args.get_usize("seed", 7) as u64;
+    let split = ds.split(0.8, seed);
+    let train = ds.subset(&split.train);
+    let test = ds.subset(&split.test);
+    println!("device={} shapes={} k={k}", ds.device, ds.n_shapes());
+    for method in kernelsel::selection::ALL_METHODS {
+        let picks = select(method, &train, Normalization::Standard, k, seed);
+        println!(
+            "  {:12} oracle {:.2}%",
+            method.name(),
+            achievable_percent(&test, &picks)
+        );
+    }
+    let deployed = select(Method::PcaKMeans, &train, Normalization::Standard, k, seed);
+    for kind in ALL_CLASSIFIERS {
+        let pct =
+            kernelsel::classify::classifier_percent(kind, &train, &test, &deployed, seed);
+        println!("  {:16} {:.2}%", kind.name(), pct);
+    }
+}
+
+fn cmd_experiment(args: &Args) {
+    let id = args
+        .positional
+        .get(1)
+        .cloned()
+        .unwrap_or_else(|| "all".to_string());
+    let seed = args.get_usize("seed", 7) as u64;
+    let ctx = experiments::Context::new(seed);
+    let out = args.flags.get("out").map(PathBuf::from);
+    if let Err(e) =
+        experiments::run_and_save(&id, &ctx, &artifacts_dir(args), out.as_deref())
+    {
+        fail(&e);
+    }
+}
+
+fn cmd_serve(args: &Args) {
+    let n = args.get_usize("requests", 64);
+    let dir = artifacts_dir(args);
+    let policy = policy_from_flag(args, &dir);
+    println!("starting coordinator (policy={}) ...", policy.name());
+    let coord = Coordinator::start(dir, policy, BatcherConfig::default())
+        .unwrap_or_else(|e| fail(&e));
+    let shapes = [
+        GemmShape::new(128, 128, 128, 1),
+        GemmShape::new(512, 784, 512, 1),
+        GemmShape::new(64, 2304, 128, 1),
+    ];
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    for i in 0..n {
+        let s = shapes[i % shapes.len()];
+        let lhs = fill_buffer(i as u32, s.batch * s.m * s.k);
+        let rhs = fill_buffer((i + 1000) as u32, s.batch * s.k * s.n);
+        pending.push(coord.submit(s, lhs, rhs));
+    }
+    let mut ok = 0;
+    for rx in pending {
+        if rx.recv().map(|r| r.result.is_ok()).unwrap_or(false) {
+            ok += 1;
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let metrics = coord.stop();
+    println!(
+        "{ok}/{n} ok in {secs:.3}s ({:.1} req/s)\n{}",
+        n as f64 / secs,
+        metrics.summary()
+    );
+}
+
+fn policy_from_flag(args: &Args, dir: &std::path::Path) -> SelectorPolicy {
+    let manifest = Manifest::load(dir).unwrap_or_else(|e| fail(&e));
+    match args.get("policy", "tuned").as_str() {
+        "xla" => SelectorPolicy::Xla,
+        "single" => SelectorPolicy::Single(
+            config_by_name(&manifest.single_best).unwrap().index(),
+        ),
+        _ => {
+            // Tune a tree over the shipped deployment. Prefer *measured*
+            // local-CPU data (`kernelsel collect`) when available; fall
+            // back to the simulated CPU dataset.
+            let measured = PathBuf::from(
+                args.get("measured-data", "results/measured_cpu.csv"),
+            );
+            let ds = if measured.exists() {
+                eprintln!("tuning on measured data: {}", measured.display());
+                kernelsel::dataset::PerfDataset::load("local-cpu", &measured)
+                    .unwrap_or_else(|e| fail(&e))
+            } else {
+                generate_dataset(
+                    profile_by_name("i7-6700k").unwrap(),
+                    &benchmark_shapes(),
+                )
+            };
+            let deployed: Vec<usize> = manifest
+                .deployed
+                .iter()
+                .map(|n| config_by_name(n).unwrap().index())
+                .collect();
+            let clf = KernelClassifier::fit(
+                ClassifierKind::DecisionTreeB,
+                &ds,
+                &deployed,
+                args.get_usize("seed", 7) as u64,
+            );
+            SelectorPolicy::Tree(CompiledTree::compile(&clf).unwrap())
+        }
+    }
+}
+
+fn cmd_infer(args: &Args) {
+    let dir = artifacts_dir(args);
+    let network = args.get("network", "vgg16-tiny");
+    let iters = args.get_usize("iters", 5);
+    let policy = policy_from_flag(args, &dir);
+    let runtime = Runtime::new(&dir).unwrap_or_else(|e| fail(&e.to_string()));
+    let manifest = Manifest::load(&dir).unwrap_or_else(|e| fail(&e));
+    let engine = VggEngine::load(&runtime, &manifest, &network, &policy)
+        .unwrap_or_else(|e| fail(&e.to_string()));
+    let in_shape = engine.input_shape().to_vec();
+    let image = fill_buffer(99, in_shape.iter().product());
+    println!(
+        "{network} via {} ({} layers, {} distinct kernel configs)",
+        engine.backend(),
+        engine.n_layers(),
+        engine.distinct_configs()
+    );
+    let (logits, _) = engine.infer(&image).unwrap_or_else(|e| fail(&e.to_string()));
+    let mut times = Vec::new();
+    for _ in 0..iters {
+        let t0 = std::time::Instant::now();
+        engine.infer(&image).unwrap_or_else(|e| fail(&e.to_string()));
+        times.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let argmax = logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap();
+    println!(
+        "inference mean {mean:.2} ms over {iters} iters; class={argmax} \
+         logit={:.4}",
+        logits[argmax]
+    );
+}
+
+fn cmd_tpu_est() {
+    for t in kernelsel::experiments::tpu_est::tpu_estimates() {
+        println!("{}", t.render());
+    }
+}

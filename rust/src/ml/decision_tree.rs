@@ -1,0 +1,660 @@
+//! CART decision trees (paper §4.1.5 and §5.1).
+//!
+//! Two specializations share the axis-aligned split machinery:
+//!   * `TreeRegressor` — multi-output regression (maps matrix-size features
+//!     to full 640-dim performance vectors); used as a *clustering* device
+//!     by bounding the number of leaves (§4.1.5).
+//!   * `TreeClassifier` — Gini classification (the runtime kernel selector,
+//!     §5.1, decision trees A/B/C).
+
+use crate::linalg::Matrix;
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct TreeParams {
+    pub max_depth: Option<usize>,
+    pub min_samples_leaf: usize,
+    pub min_samples_split: usize,
+    /// Max leaf count (regressor-as-clusterer); None = unlimited.
+    pub max_leaves: Option<usize>,
+    /// Features considered per split; None = all (set for forests).
+    pub max_features: Option<usize>,
+    pub seed: u64,
+}
+
+impl Default for TreeParams {
+    fn default() -> Self {
+        TreeParams {
+            max_depth: None,
+            min_samples_leaf: 1,
+            min_samples_split: 2,
+            max_leaves: None,
+            max_features: None,
+            seed: 0,
+        }
+    }
+}
+
+/// Tree nodes in a flat arena.
+#[derive(Clone, Debug)]
+pub enum Node {
+    Split { feature: usize, threshold: f64, left: usize, right: usize },
+    /// Leaf payload index (into `leaf_values` / `leaf_counts`).
+    Leaf { payload: usize },
+}
+
+// ---------------------------------------------------------------------------
+// Split search shared by both tree kinds.
+// ---------------------------------------------------------------------------
+
+/// Candidate split of `idx` on `feature` at `threshold` (x <= t goes left).
+struct BestSplit {
+    feature: usize,
+    threshold: f64,
+    score: f64, // impurity improvement; higher is better
+}
+
+/// Generic split finder: `eval(sorted_idx, split_pos)` scores a candidate
+/// partition of the (feature-sorted) index list. Returns the best split.
+fn find_best_split<F>(
+    x: &Matrix,
+    idx: &[usize],
+    features: &[usize],
+    min_leaf: usize,
+    mut eval: F,
+) -> Option<BestSplit>
+where
+    F: FnMut(&[usize], usize) -> f64,
+{
+    let mut best: Option<BestSplit> = None;
+    let mut sorted = idx.to_vec();
+    for &f in features {
+        sorted.sort_by(|&a, &b| x[(a, f)].partial_cmp(&x[(b, f)]).unwrap());
+        for pos in min_leaf..=(sorted.len().saturating_sub(min_leaf)) {
+            if pos == 0 || pos == sorted.len() {
+                continue;
+            }
+            let lo = x[(sorted[pos - 1], f)];
+            let hi = x[(sorted[pos], f)];
+            if hi <= lo {
+                continue; // no threshold separates equal values
+            }
+            let score = eval(&sorted, pos);
+            if best.as_ref().map_or(true, |b| score > b.score) {
+                best = Some(BestSplit { feature: f, threshold: (lo + hi) / 2.0, score });
+            }
+        }
+    }
+    best.filter(|b| b.score > 1e-12)
+}
+
+fn feature_subset(n_features: usize, params: &TreeParams, rng: &mut Rng) -> Vec<usize> {
+    match params.max_features {
+        Some(k) if k < n_features => rng.sample_indices(n_features, k),
+        _ => (0..n_features).collect(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Multi-output regressor.
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct TreeRegressor {
+    pub nodes: Vec<Node>,
+    /// Mean target vector per leaf.
+    pub leaf_values: Vec<Vec<f64>>,
+    /// Training samples captured by each leaf.
+    pub leaf_members: Vec<Vec<usize>>,
+    pub n_features: usize,
+}
+
+struct RegBuildCtx<'a> {
+    x: &'a Matrix,
+    y: &'a Matrix,
+    params: &'a TreeParams,
+}
+
+impl TreeRegressor {
+    /// Fit on features `x` (n x d) and multi-output targets `y` (n x t).
+    pub fn fit(x: &Matrix, y: &Matrix, params: &TreeParams) -> TreeRegressor {
+        assert_eq!(x.rows, y.rows, "x/y row mismatch");
+        assert!(x.rows > 0, "empty training set");
+        let mut tree = TreeRegressor {
+            nodes: Vec::new(),
+            leaf_values: Vec::new(),
+            leaf_members: Vec::new(),
+            n_features: x.cols,
+        };
+        let ctx = RegBuildCtx { x, y, params };
+        let mut rng = Rng::new(params.seed);
+        let all: Vec<usize> = (0..x.rows).collect();
+
+        if let Some(max_leaves) = params.max_leaves {
+            tree.build_best_first(&ctx, all, max_leaves, &mut rng);
+        } else {
+            let root = tree.build_depth_first(&ctx, all, 0, &mut rng);
+            debug_assert_eq!(root, 0);
+        }
+        tree
+    }
+
+    fn make_leaf(&mut self, ctx: &RegBuildCtx, idx: Vec<usize>) -> usize {
+        let t = ctx.y.cols;
+        let mut mean = vec![0.0; t];
+        for &i in &idx {
+            for (m, &v) in mean.iter_mut().zip(ctx.y.row(i)) {
+                *m += v;
+            }
+        }
+        for m in &mut mean {
+            *m /= idx.len() as f64;
+        }
+        let payload = self.leaf_values.len();
+        self.leaf_values.push(mean);
+        self.leaf_members.push(idx);
+        self.nodes.push(Node::Leaf { payload });
+        self.nodes.len() - 1
+    }
+
+    fn split_of(
+        &self,
+        ctx: &RegBuildCtx,
+        idx: &[usize],
+        rng: &mut Rng,
+    ) -> Option<BestSplit> {
+        if idx.len() < ctx.params.min_samples_split {
+            return None;
+        }
+        let feats = feature_subset(ctx.x.cols, ctx.params, rng);
+        // Incremental SSE via prefix sums of y and y^2 over the sorted order.
+        let y = ctx.y;
+        find_best_split(ctx.x, idx, &feats, ctx.params.min_samples_leaf, |sorted, pos| {
+            variance_reduction(y, sorted, pos)
+        })
+    }
+
+    fn build_depth_first(
+        &mut self,
+        ctx: &RegBuildCtx,
+        idx: Vec<usize>,
+        depth: usize,
+        rng: &mut Rng,
+    ) -> usize {
+        let stop = ctx
+            .params
+            .max_depth
+            .map_or(false, |d| depth >= d);
+        let split = if stop { None } else { self.split_of(ctx, &idx, rng) };
+        match split {
+            None => self.make_leaf(ctx, idx),
+            Some(s) => {
+                let (li, ri): (Vec<usize>, Vec<usize>) = idx
+                    .iter()
+                    .partition(|&&i| ctx.x[(i, s.feature)] <= s.threshold);
+                let me = self.nodes.len();
+                self.nodes.push(Node::Split {
+                    feature: s.feature,
+                    threshold: s.threshold,
+                    left: 0,
+                    right: 0,
+                });
+                let l = self.build_depth_first(ctx, li, depth + 1, rng);
+                let r = self.build_depth_first(ctx, ri, depth + 1, rng);
+                if let Node::Split { left, right, .. } = &mut self.nodes[me] {
+                    *left = l;
+                    *right = r;
+                }
+                me
+            }
+        }
+    }
+
+    /// Best-first growth to an exact leaf budget: repeatedly split the
+    /// frontier leaf with the largest impurity improvement (how scikit-learn
+    /// implements `max_leaf_nodes`).
+    fn build_best_first(
+        &mut self,
+        ctx: &RegBuildCtx,
+        idx: Vec<usize>,
+        max_leaves: usize,
+        rng: &mut Rng,
+    ) {
+        // Frontier entries: (node id, members, candidate split).
+        self.nodes.push(Node::Leaf { payload: usize::MAX });
+        let mut frontier: Vec<(usize, Vec<usize>, Option<BestSplit>)> = Vec::new();
+        let split = self.split_of(ctx, &idx, rng);
+        frontier.push((0, idx, split));
+        let mut leaves = 1usize;
+        let mut depth_ok = true;
+        while leaves < max_leaves && depth_ok {
+            // Pick the best splittable frontier entry.
+            let pick = frontier
+                .iter()
+                .enumerate()
+                .filter(|(_, (_, _, s))| s.is_some())
+                .max_by(|a, b| {
+                    let sa = a.1 .2.as_ref().unwrap().score;
+                    let sb = b.1 .2.as_ref().unwrap().score;
+                    sa.partial_cmp(&sb).unwrap()
+                })
+                .map(|(i, _)| i);
+            let Some(pi) = pick else {
+                depth_ok = false;
+                continue;
+            };
+            let (node, members, split) = frontier.swap_remove(pi);
+            let s = split.unwrap();
+            let (li, ri): (Vec<usize>, Vec<usize>) = members
+                .iter()
+                .partition(|&&i| ctx.x[(i, s.feature)] <= s.threshold);
+            let lnode = self.nodes.len();
+            self.nodes.push(Node::Leaf { payload: usize::MAX });
+            let rnode = self.nodes.len();
+            self.nodes.push(Node::Leaf { payload: usize::MAX });
+            self.nodes[node] = Node::Split {
+                feature: s.feature,
+                threshold: s.threshold,
+                left: lnode,
+                right: rnode,
+            };
+            let lsplit = self.split_of(ctx, &li, rng);
+            let rsplit = self.split_of(ctx, &ri, rng);
+            frontier.push((lnode, li, lsplit));
+            frontier.push((rnode, ri, rsplit));
+            leaves += 1;
+        }
+        // Materialize remaining frontier nodes as leaves.
+        for (node, members, _) in frontier {
+            let t = ctx.y.cols;
+            let mut mean = vec![0.0; t];
+            for &i in &members {
+                for (m, &v) in mean.iter_mut().zip(ctx.y.row(i)) {
+                    *m += v;
+                }
+            }
+            for m in &mut mean {
+                *m /= members.len() as f64;
+            }
+            let payload = self.leaf_values.len();
+            self.leaf_values.push(mean);
+            self.leaf_members.push(members);
+            self.nodes[node] = Node::Leaf { payload };
+        }
+    }
+
+    /// Index of the leaf payload a feature row lands in.
+    pub fn apply(&self, row: &[f64]) -> usize {
+        let mut node = 0usize;
+        loop {
+            match &self.nodes[node] {
+                Node::Leaf { payload } => return *payload,
+                Node::Split { feature, threshold, left, right } => {
+                    node = if row[*feature] <= *threshold { *left } else { *right };
+                }
+            }
+        }
+    }
+
+    pub fn predict(&self, row: &[f64]) -> &[f64] {
+        &self.leaf_values[self.apply(row)]
+    }
+
+    pub fn n_leaves(&self) -> usize {
+        self.leaf_values.len()
+    }
+
+    pub fn depth(&self) -> usize {
+        fn walk(nodes: &[Node], id: usize) -> usize {
+            match &nodes[id] {
+                Node::Leaf { .. } => 0,
+                Node::Split { left, right, .. } => {
+                    1 + walk(nodes, *left).max(walk(nodes, *right))
+                }
+            }
+        }
+        walk(&self.nodes, 0)
+    }
+}
+
+/// Total SSE reduction of splitting the sorted index list at `pos`, summed
+/// over all output dimensions.
+fn variance_reduction(y: &Matrix, sorted: &[usize], pos: usize) -> f64 {
+    let t = y.cols;
+    let n = sorted.len() as f64;
+    let nl = pos as f64;
+    let nr = n - nl;
+    let mut score = 0.0;
+    for out in 0..t {
+        let mut sum_l = 0.0;
+        let mut sum_all = 0.0;
+        for (i, &s) in sorted.iter().enumerate() {
+            let v = y[(s, out)];
+            sum_all += v;
+            if i < pos {
+                sum_l += v;
+            }
+        }
+        let sum_r = sum_all - sum_l;
+        // SSE reduction = combined mean-shift term (constant total SS).
+        score += sum_l * sum_l / nl + sum_r * sum_r / nr - sum_all * sum_all / n;
+    }
+    score
+}
+
+// ---------------------------------------------------------------------------
+// Classifier.
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct TreeClassifier {
+    pub nodes: Vec<Node>,
+    /// Class-count histogram per leaf.
+    pub leaf_counts: Vec<Vec<usize>>,
+    pub n_classes: usize,
+    pub n_features: usize,
+}
+
+impl TreeClassifier {
+    pub fn fit(x: &Matrix, y: &[usize], params: &TreeParams) -> TreeClassifier {
+        assert_eq!(x.rows, y.len());
+        assert!(x.rows > 0, "empty training set");
+        let n_classes = y.iter().max().copied().unwrap_or(0) + 1;
+        let mut tree = TreeClassifier {
+            nodes: Vec::new(),
+            leaf_counts: Vec::new(),
+            n_classes,
+            n_features: x.cols,
+        };
+        let mut rng = Rng::new(params.seed);
+        let all: Vec<usize> = (0..x.rows).collect();
+        tree.build(x, y, params, all, 0, &mut rng);
+        tree
+    }
+
+    fn build(
+        &mut self,
+        x: &Matrix,
+        y: &[usize],
+        params: &TreeParams,
+        idx: Vec<usize>,
+        depth: usize,
+        rng: &mut Rng,
+    ) -> usize {
+        let pure = idx.windows(2).all(|w| y[w[0]] == y[w[1]]);
+        let stop = pure
+            || params.max_depth.map_or(false, |d| depth >= d)
+            || idx.len() < params.min_samples_split;
+        let mut split = if stop {
+            None
+        } else {
+            let feats = feature_subset(x.cols, params, rng);
+            let nc = self.n_classes;
+            find_best_split(x, &idx, &feats, params.min_samples_leaf, |sorted, pos| {
+                gini_improvement(y, sorted, pos, nc)
+            })
+        };
+        // Greedy CART can see exactly-zero improvement on every single
+        // threshold of an impure node (XOR patterns). Like scikit-learn we
+        // still split on the best balanced threshold so deeper levels can
+        // resolve the interaction.
+        if split.is_none() && !stop {
+            split = fallback_median_split(x, &idx, params.min_samples_leaf);
+        }
+        let split = split;
+        match split {
+            None => {
+                let mut counts = vec![0usize; self.n_classes];
+                for &i in &idx {
+                    counts[y[i]] += 1;
+                }
+                let payload = self.leaf_counts.len();
+                self.leaf_counts.push(counts);
+                self.nodes.push(Node::Leaf { payload });
+                self.nodes.len() - 1
+            }
+            Some(s) => {
+                let (li, ri): (Vec<usize>, Vec<usize>) =
+                    idx.iter().partition(|&&i| x[(i, s.feature)] <= s.threshold);
+                let me = self.nodes.len();
+                self.nodes.push(Node::Split {
+                    feature: s.feature,
+                    threshold: s.threshold,
+                    left: 0,
+                    right: 0,
+                });
+                let l = self.build(x, y, params, li, depth + 1, rng);
+                let r = self.build(x, y, params, ri, depth + 1, rng);
+                if let Node::Split { left, right, .. } = &mut self.nodes[me] {
+                    *left = l;
+                    *right = r;
+                }
+                me
+            }
+        }
+    }
+
+    pub fn predict(&self, row: &[f64]) -> usize {
+        let counts = self.leaf(row);
+        counts
+            .iter()
+            .enumerate()
+            .max_by_key(|&(_, &c)| c)
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+
+    pub fn leaf(&self, row: &[f64]) -> &[usize] {
+        let mut node = 0usize;
+        loop {
+            match &self.nodes[node] {
+                Node::Leaf { payload } => return &self.leaf_counts[*payload],
+                Node::Split { feature, threshold, left, right } => {
+                    node = if row[*feature] <= *threshold { *left } else { *right };
+                }
+            }
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        fn walk(nodes: &[Node], id: usize) -> usize {
+            match &nodes[id] {
+                Node::Leaf { .. } => 0,
+                Node::Split { left, right, .. } => 1 + walk(nodes, *left).max(walk(nodes, *right)),
+            }
+        }
+        if self.nodes.is_empty() {
+            0
+        } else {
+            walk(&self.nodes, 0)
+        }
+    }
+
+    pub fn n_leaves(&self) -> usize {
+        self.leaf_counts.len()
+    }
+}
+
+/// Median split on the first feature with more than one distinct value,
+/// honoring `min_leaf`; used when no threshold shows positive improvement.
+fn fallback_median_split(x: &Matrix, idx: &[usize], min_leaf: usize) -> Option<BestSplit> {
+    for f in 0..x.cols {
+        let mut vals: Vec<f64> = idx.iter().map(|&i| x[(i, f)]).collect();
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = vals.len();
+        if n < 2 * min_leaf.max(1) {
+            return None;
+        }
+        // Walk outward from the median to find a position where the value
+        // actually changes and both sides satisfy min_leaf.
+        let lo_bound = min_leaf.max(1);
+        let hi_bound = n - min_leaf.max(1);
+        let mid = n / 2;
+        for delta in 0..n {
+            for pos in [mid.saturating_sub(delta), mid + delta] {
+                if pos < lo_bound || pos > hi_bound || pos == 0 || pos >= n {
+                    continue;
+                }
+                if vals[pos] > vals[pos - 1] {
+                    return Some(BestSplit {
+                        feature: f,
+                        threshold: (vals[pos - 1] + vals[pos]) / 2.0,
+                        score: 0.0,
+                    });
+                }
+            }
+        }
+    }
+    None
+}
+
+/// Gini impurity decrease (unnormalized, weighted by counts).
+fn gini_improvement(y: &[usize], sorted: &[usize], pos: usize, n_classes: usize) -> f64 {
+    let mut left = vec![0usize; n_classes];
+    let mut all = vec![0usize; n_classes];
+    for (i, &s) in sorted.iter().enumerate() {
+        all[y[s]] += 1;
+        if i < pos {
+            left[y[s]] += 1;
+        }
+    }
+    let gini = |counts: &[usize]| -> f64 {
+        let n: usize = counts.iter().sum();
+        if n == 0 {
+            return 0.0;
+        }
+        let nf = n as f64;
+        1.0 - counts.iter().map(|&c| (c as f64 / nf).powi(2)).sum::<f64>()
+    };
+    let n = sorted.len() as f64;
+    let nl = pos as f64;
+    let nr = n - nl;
+    let right: Vec<usize> = all.iter().zip(&left).map(|(&a, &l)| a - l).collect();
+    gini(&all) - (nl / n) * gini(&left) - (nr / n) * gini(&right)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn xor_data() -> (Matrix, Vec<usize>) {
+        let mut rows = Vec::new();
+        let mut y = Vec::new();
+        for &(a, b) in &[(0.0, 0.0), (0.0, 1.0), (1.0, 0.0), (1.0, 1.0)] {
+            for i in 0..10 {
+                let jitter = i as f64 * 0.001;
+                rows.push(vec![a + jitter, b - jitter]);
+                y.push(((a as i32) ^ (b as i32)) as usize);
+            }
+        }
+        (Matrix::from_rows(&rows), y)
+    }
+
+    #[test]
+    fn classifier_fits_xor() {
+        let (x, y) = xor_data();
+        let tree = TreeClassifier::fit(&x, &y, &TreeParams::default());
+        for i in 0..x.rows {
+            assert_eq!(tree.predict(x.row(i)), y[i]);
+        }
+        assert!(tree.depth() >= 2); // XOR is not linearly separable
+    }
+
+    #[test]
+    fn classifier_depth_limit_respected() {
+        let (x, y) = xor_data();
+        let params = TreeParams { max_depth: Some(1), ..Default::default() };
+        let tree = TreeClassifier::fit(&x, &y, &params);
+        assert!(tree.depth() <= 1);
+    }
+
+    #[test]
+    fn classifier_min_leaf_respected() {
+        let (x, y) = xor_data();
+        let params = TreeParams { min_samples_leaf: 15, ..Default::default() };
+        let tree = TreeClassifier::fit(&x, &y, &params);
+        for counts in &tree.leaf_counts {
+            assert!(counts.iter().sum::<usize>() >= 15);
+        }
+    }
+
+    #[test]
+    fn regressor_exact_on_step_function() {
+        let x = Matrix::from_rows(&(0..20).map(|i| vec![i as f64]).collect::<Vec<_>>());
+        let y = Matrix::from_rows(
+            &(0..20)
+                .map(|i| vec![if i < 10 { 1.0 } else { 5.0 }, if i < 10 { -1.0 } else { 2.0 }])
+                .collect::<Vec<_>>(),
+        );
+        let tree = TreeRegressor::fit(&x, &y, &TreeParams::default());
+        assert_eq!(tree.predict(&[3.0]), &[1.0, -1.0]);
+        assert_eq!(tree.predict(&[15.0]), &[5.0, 2.0]);
+    }
+
+    #[test]
+    fn regressor_prediction_is_leaf_mean() {
+        let x = Matrix::from_rows(&(0..12).map(|i| vec![(i % 4) as f64]).collect::<Vec<_>>());
+        let y = Matrix::from_rows(
+            &(0..12).map(|i| vec![i as f64]).collect::<Vec<_>>(),
+        );
+        let params = TreeParams { max_depth: Some(2), ..Default::default() };
+        let tree = TreeRegressor::fit(&x, &y, &params);
+        for leaf in 0..tree.n_leaves() {
+            let members = &tree.leaf_members[leaf];
+            let mean: f64 =
+                members.iter().map(|&i| y[(i, 0)]).sum::<f64>() / members.len() as f64;
+            assert!((tree.leaf_values[leaf][0] - mean).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn regressor_max_leaves_exact() {
+        let x = Matrix::from_rows(&(0..40).map(|i| vec![i as f64]).collect::<Vec<_>>());
+        let y = Matrix::from_rows(&(0..40).map(|i| vec![(i * i) as f64]).collect::<Vec<_>>());
+        for budget in [2usize, 4, 6, 9] {
+            let params = TreeParams { max_leaves: Some(budget), ..Default::default() };
+            let tree = TreeRegressor::fit(&x, &y, &params);
+            assert_eq!(tree.n_leaves(), budget, "budget {budget}");
+            // Leaves partition the training set.
+            let total: usize = tree.leaf_members.iter().map(|m| m.len()).sum();
+            assert_eq!(total, 40);
+        }
+    }
+
+    #[test]
+    fn regressor_leaf_budget_caps_at_distinct_values() {
+        // Only 3 distinct x values -> at most 3 leaves even with budget 10.
+        let x = Matrix::from_rows(&(0..30).map(|i| vec![(i % 3) as f64]).collect::<Vec<_>>());
+        let y = Matrix::from_rows(&(0..30).map(|i| vec![(i % 3) as f64 * 7.0]).collect::<Vec<_>>());
+        let params = TreeParams { max_leaves: Some(10), ..Default::default() };
+        let tree = TreeRegressor::fit(&x, &y, &params);
+        assert_eq!(tree.n_leaves(), 3);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (x, y) = xor_data();
+        let params = TreeParams { max_features: Some(1), seed: 5, ..Default::default() };
+        let a = TreeClassifier::fit(&x, &y, &params);
+        let b = TreeClassifier::fit(&x, &y, &params);
+        let preds_equal = (0..x.rows).all(|i| a.predict(x.row(i)) == b.predict(x.row(i)));
+        assert!(preds_equal);
+    }
+
+    #[test]
+    fn multioutput_split_uses_all_outputs() {
+        // Output 0 is constant; output 1 steps at x=10. The tree must still
+        // find the step via output 1's variance.
+        let x = Matrix::from_rows(&(0..20).map(|i| vec![i as f64]).collect::<Vec<_>>());
+        let y = Matrix::from_rows(
+            &(0..20)
+                .map(|i| vec![1.0, if i < 10 { 0.0 } else { 9.0 }])
+                .collect::<Vec<_>>(),
+        );
+        let params = TreeParams { max_leaves: Some(2), ..Default::default() };
+        let tree = TreeRegressor::fit(&x, &y, &params);
+        assert_eq!(tree.n_leaves(), 2);
+        assert!((tree.predict(&[0.0])[1] - 0.0).abs() < 1e-12);
+        assert!((tree.predict(&[19.0])[1] - 9.0).abs() < 1e-12);
+    }
+}

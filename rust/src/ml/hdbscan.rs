@@ -1,0 +1,524 @@
+//! HDBSCAN density-based clustering (paper §4.1.4).
+//!
+//! Full pipeline from Campello/Moulavi/Sander (2013) and McInnes/Healy
+//! (2017): core distances -> mutual-reachability graph -> Prim MST ->
+//! single-linkage dendrogram -> condensed tree (min_cluster_size) ->
+//! excess-of-mass cluster extraction with stability scores.  Noise points
+//! get the label `NOISE` (-1 equivalent).
+//!
+//! HDBSCAN has no direct "number of clusters" parameter; like the paper we
+//! provide a hyperparameter sweep (`sweep_for_k`) that searches
+//! (min_cluster_size, min_samples) for a setting yielding the target count.
+
+use crate::linalg::{euclidean, Matrix};
+
+pub const NOISE: isize = -1;
+
+#[derive(Clone, Debug)]
+pub struct HdbscanParams {
+    pub min_cluster_size: usize,
+    pub min_samples: usize,
+}
+
+impl HdbscanParams {
+    pub fn new(min_cluster_size: usize, min_samples: usize) -> Self {
+        HdbscanParams { min_cluster_size, min_samples }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Hdbscan {
+    /// Per-point labels: 0..n_clusters, or NOISE.
+    pub labels: Vec<isize>,
+    pub n_clusters: usize,
+    /// Stability score per extracted cluster.
+    pub stabilities: Vec<f64>,
+}
+
+// ---------------------------------------------------------------------------
+// Dendrogram construction.
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug)]
+struct Merge {
+    left: usize,  // node id (leaf < n, internal >= n)
+    right: usize,
+    dist: f64,
+    size: usize,
+}
+
+struct UnionFind {
+    parent: Vec<usize>,
+    /// Current dendrogram node id for each set root.
+    node: Vec<usize>,
+}
+
+impl UnionFind {
+    fn new(n: usize) -> Self {
+        UnionFind { parent: (0..n).collect(), node: (0..n).collect() }
+    }
+
+    fn find(&mut self, mut x: usize) -> usize {
+        while self.parent[x] != x {
+            self.parent[x] = self.parent[self.parent[x]];
+            x = self.parent[x];
+        }
+        x
+    }
+}
+
+fn core_distances(x: &Matrix, min_samples: usize) -> Vec<f64> {
+    let n = x.rows;
+    let k = min_samples.max(1).min(n.saturating_sub(1));
+    (0..n)
+        .map(|i| {
+            let mut d: Vec<f64> =
+                (0..n).filter(|&j| j != i).map(|j| euclidean(x.row(i), x.row(j))).collect();
+            if d.is_empty() {
+                return 0.0;
+            }
+            d.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            d[k - 1]
+        })
+        .collect()
+}
+
+/// Prim's MST over the implicit complete mutual-reachability graph. O(n^2).
+fn mst_mutual_reachability(x: &Matrix, core: &[f64]) -> Vec<(usize, usize, f64)> {
+    let n = x.rows;
+    let mut in_tree = vec![false; n];
+    let mut best_dist = vec![f64::INFINITY; n];
+    let mut best_from = vec![0usize; n];
+    let mut edges = Vec::with_capacity(n.saturating_sub(1));
+    in_tree[0] = true;
+    let mut latest = 0usize;
+    for _ in 1..n {
+        // Relax edges from the latest tree vertex.
+        for j in 0..n {
+            if in_tree[j] {
+                continue;
+            }
+            let d = euclidean(x.row(latest), x.row(j))
+                .max(core[latest])
+                .max(core[j]);
+            if d < best_dist[j] {
+                best_dist[j] = d;
+                best_from[j] = latest;
+            }
+        }
+        // Pick the nearest non-tree vertex.
+        let mut pick = usize::MAX;
+        let mut pick_d = f64::INFINITY;
+        for j in 0..n {
+            if !in_tree[j] && best_dist[j] < pick_d {
+                pick_d = best_dist[j];
+                pick = j;
+            }
+        }
+        in_tree[pick] = true;
+        edges.push((best_from[pick], pick, pick_d));
+        latest = pick;
+    }
+    edges
+}
+
+fn single_linkage(mut edges: Vec<(usize, usize, f64)>, n: usize) -> Vec<Merge> {
+    edges.sort_by(|a, b| a.2.partial_cmp(&b.2).unwrap());
+    let mut uf = UnionFind::new(n);
+    let mut merges = Vec::with_capacity(n.saturating_sub(1));
+    let mut sizes = vec![1usize; n]; // indexed by node id
+    sizes.reserve(2 * n);
+    for (a, b, d) in edges {
+        let ra = uf.find(a);
+        let rb = uf.find(b);
+        let (na, nb) = (uf.node[ra], uf.node[rb]);
+        let new_node = n + merges.len();
+        let size = sizes[na] + sizes[nb];
+        merges.push(Merge { left: na, right: nb, dist: d, size });
+        sizes.push(size);
+        // Union.
+        uf.parent[ra] = rb;
+        uf.node[rb] = new_node;
+    }
+    merges
+}
+
+// ---------------------------------------------------------------------------
+// Condensed tree.
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+struct CondensedCluster {
+    parent: Option<usize>,
+    lambda_birth: f64,
+    /// (point, lambda at which the point exits this cluster).
+    points: Vec<(usize, f64)>,
+    children: Vec<usize>,
+    stability: f64,
+}
+
+fn lambda_of(dist: f64) -> f64 {
+    if dist > 0.0 {
+        1.0 / dist
+    } else {
+        f64::INFINITY
+    }
+}
+
+/// Condense a dendrogram: clusters smaller than `mcs` dissolve into their
+/// parent as per-point fall-outs at the lambda where they detach — the
+/// reference `condense_tree` algorithm of the hdbscan library.
+fn condense(merges: &[Merge], n: usize, mcs: usize) -> Vec<CondensedCluster> {
+    let node_size = |id: usize| if id < n { 1 } else { merges[id - n].size };
+    let mut clusters: Vec<CondensedCluster> = vec![CondensedCluster {
+        parent: None,
+        lambda_birth: 0.0,
+        points: Vec::new(),
+        children: Vec::new(),
+        stability: 0.0,
+    }];
+    if merges.is_empty() {
+        for p in 0..n {
+            clusters[0].points.push((p, f64::INFINITY));
+        }
+        return clusters;
+    }
+
+    enum Item {
+        /// Walk a dendrogram node that still carries cluster `cl`.
+        Walk { node: usize, cl: usize },
+        /// Everything under `node` fell out of `cl` at `lam`.
+        FallOut { node: usize, cl: usize, lam: f64 },
+    }
+
+    let root = n + merges.len() - 1;
+    let mut stack = vec![Item::Walk { node: root, cl: 0 }];
+    while let Some(item) = stack.pop() {
+        match item {
+            Item::FallOut { node, cl, lam } => {
+                if node < n {
+                    clusters[cl].points.push((node, lam));
+                } else {
+                    let m = merges[node - n];
+                    stack.push(Item::FallOut { node: m.left, cl, lam });
+                    stack.push(Item::FallOut { node: m.right, cl, lam });
+                }
+            }
+            Item::Walk { node, cl } => {
+                if node < n {
+                    // Single-point "cluster" (only at a degenerate root).
+                    clusters[cl].points.push((node, f64::INFINITY));
+                    continue;
+                }
+                let m = merges[node - n];
+                let lam = lambda_of(m.dist);
+                let (ls, rs) = (node_size(m.left), node_size(m.right));
+                if ls >= mcs && rs >= mcs {
+                    // True split: two new condensed clusters born here.
+                    for child in [m.left, m.right] {
+                        let id = clusters.len();
+                        clusters.push(CondensedCluster {
+                            parent: Some(cl),
+                            lambda_birth: lam,
+                            points: Vec::new(),
+                            children: Vec::new(),
+                            stability: 0.0,
+                        });
+                        clusters[cl].children.push(id);
+                        stack.push(Item::Walk { node: child, cl: id });
+                    }
+                } else if ls >= mcs {
+                    // Right side dissolves at this lambda; the cluster
+                    // continues through the left side.
+                    stack.push(Item::FallOut { node: m.right, cl, lam });
+                    stack.push(Item::Walk { node: m.left, cl });
+                } else if rs >= mcs {
+                    stack.push(Item::FallOut { node: m.left, cl, lam });
+                    stack.push(Item::Walk { node: m.right, cl });
+                } else {
+                    // Both sides too small: the cluster evaporates here.
+                    stack.push(Item::FallOut { node: m.left, cl, lam });
+                    stack.push(Item::FallOut { node: m.right, cl, lam });
+                }
+            }
+        }
+    }
+
+    // Stability = sum over point exits of (lambda_exit - lambda_birth) plus,
+    // for each child cluster, its point count times (lambda_child_birth -
+    // lambda_birth): points passing into children exit the parent there.
+    let mut subtree_points = vec![0usize; clusters.len()];
+    for i in (0..clusters.len()).rev() {
+        subtree_points[i] = clusters[i].points.len()
+            + clusters[i]
+                .children
+                .iter()
+                .map(|&c| subtree_points[c])
+                .sum::<usize>();
+    }
+    for i in 0..clusters.len() {
+        let birth = clusters[i].lambda_birth;
+        let max_finite = clusters[i]
+            .points
+            .iter()
+            .map(|&(_, l)| l)
+            .filter(|l| l.is_finite())
+            .fold(0.0f64, f64::max)
+            .max(birth);
+        let mut stab: f64 = clusters[i]
+            .points
+            .iter()
+            .map(|&(_, l)| {
+                let l = if l.is_finite() { l } else { max_finite };
+                (l - birth).max(0.0)
+            })
+            .sum();
+        for &c in clusters[i].children.clone().iter() {
+            stab += subtree_points[c] as f64 * (clusters[c].lambda_birth - birth).max(0.0);
+        }
+        clusters[i].stability = stab;
+    }
+    clusters
+}
+
+/// Excess-of-mass cluster extraction.
+fn extract_eom(clusters: &[CondensedCluster]) -> Vec<usize> {
+    let n = clusters.len();
+    // Children lists let us process bottom-up by index order (children are
+    // always created after parents, so reverse index order is topological).
+    let mut subtree_stability = vec![0.0f64; n];
+    let mut selected = vec![false; n];
+    for i in (0..n).rev() {
+        let child_sum: f64 = clusters[i]
+            .children
+            .iter()
+            .map(|&c| subtree_stability[c])
+            .sum();
+        if clusters[i].children.is_empty() {
+            subtree_stability[i] = clusters[i].stability;
+            selected[i] = true;
+        } else if clusters[i].stability > child_sum && clusters[i].parent.is_some() {
+            subtree_stability[i] = clusters[i].stability;
+            selected[i] = true;
+        } else {
+            subtree_stability[i] = child_sum;
+        }
+    }
+    // Never select the root (matches allow_single_cluster=False).
+    selected[0] = false;
+    // Keep only the highest selected cluster on each root-to-leaf path.
+    let mut result = Vec::new();
+    let mut stack = vec![0usize];
+    while let Some(i) = stack.pop() {
+        if selected[i] && i != 0 {
+            result.push(i);
+        } else {
+            stack.extend(clusters[i].children.iter().copied());
+        }
+    }
+    result.sort_unstable();
+    result
+}
+
+/// Run HDBSCAN on rows of `x`.
+pub fn hdbscan(x: &Matrix, params: &HdbscanParams) -> Hdbscan {
+    let n = x.rows;
+    if n == 0 {
+        return Hdbscan { labels: vec![], n_clusters: 0, stabilities: vec![] };
+    }
+    let mcs = params.min_cluster_size.max(2);
+    let core = core_distances(x, params.min_samples);
+    let mst = mst_mutual_reachability(x, &core);
+    let merges = single_linkage(mst, n);
+    let condensed = condense(&merges, n, mcs);
+    let chosen = extract_eom(&condensed);
+
+    let mut labels = vec![NOISE; n];
+    let mut stabilities = Vec::with_capacity(chosen.len());
+    for (out_label, &cl) in chosen.iter().enumerate() {
+        stabilities.push(condensed[cl].stability);
+        // All points in the subtree rooted at `cl` belong to the cluster.
+        let mut stack = vec![cl];
+        while let Some(c) = stack.pop() {
+            for &(p, _) in &condensed[c].points {
+                labels[p] = out_label as isize;
+            }
+            stack.extend(condensed[c].children.iter().copied());
+        }
+    }
+    Hdbscan { labels, n_clusters: chosen.len(), stabilities }
+}
+
+/// Sweep (min_cluster_size, min_samples) for a setting that yields exactly
+/// `k` clusters; falls back to the closest count (paper §4.1.4: "we compute
+/// the numbers of clusters for a sweep of the hyperparameters").
+pub fn sweep_for_k(x: &Matrix, k: usize) -> (Hdbscan, HdbscanParams) {
+    let n = x.rows;
+    let mut best: Option<(Hdbscan, HdbscanParams, usize)> = None;
+    let max_mcs = (n / 2).max(3);
+    let mut mcs = 2usize;
+    while mcs <= max_mcs {
+        for ms in [1usize, 2, 3, 5, 8] {
+            if ms >= n {
+                continue;
+            }
+            let params = HdbscanParams::new(mcs, ms);
+            let fit = hdbscan(x, &params);
+            let err = fit.n_clusters.abs_diff(k);
+            let better = match &best {
+                None => true,
+                Some((bf, _, berr)) => {
+                    err < *berr
+                        || (err == *berr
+                            && count_noise(&fit.labels) < count_noise(&bf.labels))
+                }
+            };
+            if better {
+                best = Some((fit, params, err));
+            }
+        }
+        mcs += 1 + mcs / 4;
+    }
+    let (fit, params, _) = best.expect("sweep_for_k: empty sweep");
+    (fit, params)
+}
+
+fn count_noise(labels: &[isize]) -> usize {
+    labels.iter().filter(|&&l| l == NOISE).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn blobs(centers: &[(f64, f64)], per: usize, spread: f64, seed: u64) -> (Matrix, Vec<usize>) {
+        let mut rng = Rng::new(seed);
+        let mut rows = Vec::new();
+        let mut truth = Vec::new();
+        for (i, (cx, cy)) in centers.iter().enumerate() {
+            for _ in 0..per {
+                rows.push(vec![cx + rng.normal() * spread, cy + rng.normal() * spread]);
+                truth.push(i);
+            }
+        }
+        (Matrix::from_rows(&rows), truth)
+    }
+
+    #[test]
+    fn finds_three_blobs() {
+        let (x, truth) = blobs(&[(0.0, 0.0), (10.0, 0.0), (0.0, 10.0)], 30, 0.4, 1);
+        let fit = hdbscan(&x, &HdbscanParams::new(5, 3));
+        assert_eq!(fit.n_clusters, 3, "labels: {:?}", fit.labels);
+        // Purity among non-noise points.
+        for c in 0..3 {
+            let members: Vec<usize> = (0..x.rows)
+                .filter(|&i| fit.labels[i] == c as isize)
+                .collect();
+            assert!(members.len() >= 25, "cluster {c} too small");
+            let t = truth[members[0]];
+            assert!(members.iter().all(|&m| truth[m] == t));
+        }
+    }
+
+    #[test]
+    fn marks_outliers_as_noise() {
+        let (mut x, _) = blobs(&[(0.0, 0.0), (10.0, 0.0)], 30, 0.3, 2);
+        // Add far-away isolated points.
+        x = Matrix::from_rows(
+            &x.data
+                .chunks(2)
+                .map(|c| c.to_vec())
+                .chain([vec![100.0, 100.0], vec![-80.0, 50.0]])
+                .collect::<Vec<_>>(),
+        );
+        let fit = hdbscan(&x, &HdbscanParams::new(5, 3));
+        assert_eq!(fit.n_clusters, 2);
+        assert_eq!(fit.labels[x.rows - 1], NOISE);
+        assert_eq!(fit.labels[x.rows - 2], NOISE);
+    }
+
+    #[test]
+    fn density_difference_detected() {
+        // A tight blob inside a diffuse background should still split out.
+        let (a, _) = blobs(&[(0.0, 0.0)], 40, 0.2, 3);
+        let (b, _) = blobs(&[(6.0, 0.0)], 40, 1.2, 4);
+        let rows: Vec<Vec<f64>> = a
+            .data
+            .chunks(2)
+            .chain(b.data.chunks(2))
+            .map(|c| c.to_vec())
+            .collect();
+        let x = Matrix::from_rows(&rows);
+        let fit = hdbscan(&x, &HdbscanParams::new(8, 4));
+        assert!(fit.n_clusters >= 2, "got {} clusters", fit.n_clusters);
+    }
+
+    #[test]
+    fn stabilities_positive() {
+        let (x, _) = blobs(&[(0.0, 0.0), (10.0, 0.0)], 25, 0.3, 5);
+        let fit = hdbscan(&x, &HdbscanParams::new(5, 3));
+        assert_eq!(fit.stabilities.len(), fit.n_clusters);
+        assert!(fit.stabilities.iter().all(|&s| s > 0.0));
+    }
+
+    #[test]
+    fn core_distance_monotone_in_min_samples() {
+        let (x, _) = blobs(&[(0.0, 0.0)], 20, 0.5, 6);
+        let c2 = core_distances(&x, 2);
+        let c5 = core_distances(&x, 5);
+        for i in 0..x.rows {
+            assert!(c5[i] >= c2[i] - 1e-12);
+        }
+    }
+
+    #[test]
+    fn mst_has_n_minus_1_edges_and_spans() {
+        let (x, _) = blobs(&[(0.0, 0.0), (5.0, 5.0)], 15, 0.4, 7);
+        let core = core_distances(&x, 3);
+        let mst = mst_mutual_reachability(&x, &core);
+        assert_eq!(mst.len(), x.rows - 1);
+        // Spanning: union-find all edges -> single component.
+        let mut uf = UnionFind::new(x.rows);
+        for &(a, b, _) in &mst {
+            let (ra, rb) = (uf.find(a), uf.find(b));
+            uf.parent[ra] = rb;
+        }
+        let root = uf.find(0);
+        for i in 1..x.rows {
+            assert_eq!(uf.find(i), root);
+        }
+    }
+
+    #[test]
+    fn mst_weight_not_above_random_spanning_tree() {
+        let (x, _) = blobs(&[(0.0, 0.0)], 25, 1.0, 8);
+        let core = core_distances(&x, 3);
+        let mst_w: f64 = mst_mutual_reachability(&x, &core)
+            .iter()
+            .map(|e| e.2)
+            .sum();
+        // Star tree rooted at 0 is a valid spanning tree.
+        let star_w: f64 = (1..x.rows)
+            .map(|j| {
+                euclidean(x.row(0), x.row(j)).max(core[0]).max(core[j])
+            })
+            .sum();
+        assert!(mst_w <= star_w + 1e-9);
+    }
+
+    #[test]
+    fn sweep_hits_target_k() {
+        let (x, _) = blobs(&[(0.0, 0.0), (10.0, 0.0), (0.0, 10.0), (10.0, 10.0)], 25, 0.4, 9);
+        let (fit, params) = sweep_for_k(&x, 4);
+        assert_eq!(fit.n_clusters, 4, "params {params:?}");
+    }
+
+    #[test]
+    fn single_point_dataset() {
+        let x = Matrix::from_rows(&[vec![1.0, 2.0]]);
+        let fit = hdbscan(&x, &HdbscanParams::new(2, 1));
+        assert_eq!(fit.labels.len(), 1);
+        assert_eq!(fit.n_clusters, 0);
+    }
+}

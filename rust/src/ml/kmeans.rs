@@ -1,0 +1,251 @@
+//! K-means clustering with k-means++ initialization (paper §4.1.1).
+
+use crate::linalg::{sq_dist, Matrix};
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct KMeans {
+    pub centroids: Matrix,
+    pub labels: Vec<usize>,
+    pub inertia: f64,
+    pub iterations: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct KMeansParams {
+    pub k: usize,
+    pub max_iter: usize,
+    pub n_init: usize,
+    pub seed: u64,
+}
+
+impl KMeansParams {
+    pub fn new(k: usize) -> Self {
+        KMeansParams { k, max_iter: 300, n_init: 8, seed: 0 }
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+/// Fit k-means on rows of `x`; best of `n_init` k-means++ restarts.
+pub fn kmeans(x: &Matrix, params: &KMeansParams) -> KMeans {
+    assert!(params.k >= 1, "k must be >= 1");
+    assert!(
+        x.rows >= params.k,
+        "k-means: k={} exceeds {} samples",
+        params.k,
+        x.rows
+    );
+    let mut base_rng = Rng::new(params.seed);
+    let mut best: Option<KMeans> = None;
+    for restart in 0..params.n_init.max(1) {
+        let mut rng = base_rng.fork(restart as u64 + 1);
+        let fit = lloyd(x, params.k, params.max_iter, &mut rng);
+        if best.as_ref().map_or(true, |b| fit.inertia < b.inertia) {
+            best = Some(fit);
+        }
+    }
+    best.unwrap()
+}
+
+fn lloyd(x: &Matrix, k: usize, max_iter: usize, rng: &mut Rng) -> KMeans {
+    let mut centroids = plus_plus_init(x, k, rng);
+    let mut labels = vec![0usize; x.rows];
+    let mut iterations = 0;
+    for iter in 0..max_iter {
+        iterations = iter + 1;
+        // Assignment step.
+        let mut changed = false;
+        for r in 0..x.rows {
+            let row = x.row(r);
+            let mut best_c = 0;
+            let mut best_d = f64::INFINITY;
+            for c in 0..k {
+                let d = sq_dist(row, centroids.row(c));
+                if d < best_d {
+                    best_d = d;
+                    best_c = c;
+                }
+            }
+            if labels[r] != best_c {
+                labels[r] = best_c;
+                changed = true;
+            }
+        }
+        if iter > 0 && !changed {
+            break;
+        }
+        // Update step.
+        let mut sums = Matrix::zeros(k, x.cols);
+        let mut counts = vec![0usize; k];
+        for r in 0..x.rows {
+            counts[labels[r]] += 1;
+            for (s, &v) in sums.row_mut(labels[r]).iter_mut().zip(x.row(r)) {
+                *s += v;
+            }
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                // Re-seed an empty cluster at the point farthest from its
+                // centroid assignment.
+                let far = farthest_point(x, &centroids, &labels);
+                centroids
+                    .row_mut(c)
+                    .copy_from_slice(x.row(far));
+            } else {
+                for (cv, sv) in centroids.row_mut(c).iter_mut().zip(sums.row(c)) {
+                    *cv = *sv / counts[c] as f64;
+                }
+            }
+        }
+    }
+    let inertia: f64 = (0..x.rows)
+        .map(|r| sq_dist(x.row(r), centroids.row(labels[r])))
+        .sum();
+    KMeans { centroids, labels, inertia, iterations }
+}
+
+fn farthest_point(x: &Matrix, centroids: &Matrix, labels: &[usize]) -> usize {
+    let mut best = 0;
+    let mut best_d = -1.0;
+    for r in 0..x.rows {
+        let d = sq_dist(x.row(r), centroids.row(labels[r]));
+        if d > best_d {
+            best_d = d;
+            best = r;
+        }
+    }
+    best
+}
+
+/// k-means++ seeding: iteratively pick points with probability proportional
+/// to squared distance from the nearest already-chosen center.
+fn plus_plus_init(x: &Matrix, k: usize, rng: &mut Rng) -> Matrix {
+    let mut centers: Vec<usize> = vec![rng.below(x.rows)];
+    let mut d2: Vec<f64> = (0..x.rows)
+        .map(|r| sq_dist(x.row(r), x.row(centers[0])))
+        .collect();
+    while centers.len() < k {
+        let total: f64 = d2.iter().sum();
+        let next = if total <= 0.0 {
+            // All remaining points coincide with a center: pick any unused.
+            (0..x.rows).find(|r| !centers.contains(r)).unwrap_or(0)
+        } else {
+            let mut target = rng.uniform() * total;
+            let mut pick = x.rows - 1;
+            for (r, &d) in d2.iter().enumerate() {
+                target -= d;
+                if target <= 0.0 {
+                    pick = r;
+                    break;
+                }
+            }
+            pick
+        };
+        centers.push(next);
+        for r in 0..x.rows {
+            let d = sq_dist(x.row(r), x.row(next));
+            if d < d2[r] {
+                d2[r] = d;
+            }
+        }
+    }
+    Matrix::from_rows(&centers.iter().map(|&c| x.row(c).to_vec()).collect::<Vec<_>>())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn three_blobs(per: usize, seed: u64) -> (Matrix, Vec<usize>) {
+        let mut rng = Rng::new(seed);
+        let centers = [(0.0, 0.0), (10.0, 0.0), (0.0, 10.0)];
+        let mut rows = Vec::new();
+        let mut truth = Vec::new();
+        for (i, (cx, cy)) in centers.iter().enumerate() {
+            for _ in 0..per {
+                rows.push(vec![cx + rng.normal() * 0.5, cy + rng.normal() * 0.5]);
+                truth.push(i);
+            }
+        }
+        (Matrix::from_rows(&rows), truth)
+    }
+
+    #[test]
+    fn recovers_separated_blobs() {
+        let (x, truth) = three_blobs(40, 1);
+        let fit = kmeans(&x, &KMeansParams::new(3).seed(2));
+        // Clusters must be pure: map each kmeans label to the majority truth.
+        for cluster in 0..3 {
+            let members: Vec<usize> = (0..x.rows)
+                .filter(|&r| fit.labels[r] == cluster)
+                .collect();
+            assert_eq!(members.len(), 40, "cluster {cluster} size");
+            let t0 = truth[members[0]];
+            assert!(members.iter().all(|&m| truth[m] == t0));
+        }
+    }
+
+    #[test]
+    fn assignments_are_nearest_centroid() {
+        let (x, _) = three_blobs(30, 3);
+        let fit = kmeans(&x, &KMeansParams::new(3).seed(4));
+        for r in 0..x.rows {
+            let assigned = sq_dist(x.row(r), fit.centroids.row(fit.labels[r]));
+            for c in 0..3 {
+                assert!(
+                    assigned <= sq_dist(x.row(r), fit.centroids.row(c)) + 1e-9
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn inertia_decreases_with_k() {
+        let (x, _) = three_blobs(30, 5);
+        let mut prev = f64::INFINITY;
+        for k in 1..=5 {
+            let fit = kmeans(&x, &KMeansParams::new(k).seed(6));
+            assert!(fit.inertia <= prev + 1e-9, "k={k}");
+            prev = fit.inertia;
+        }
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let (x, _) = three_blobs(20, 7);
+        let a = kmeans(&x, &KMeansParams::new(3).seed(8));
+        let b = kmeans(&x, &KMeansParams::new(3).seed(8));
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.inertia, b.inertia);
+    }
+
+    #[test]
+    fn k_equals_n_zero_inertia() {
+        let x = Matrix::from_rows(&[vec![0.0, 0.0], vec![1.0, 1.0], vec![2.0, 0.0]]);
+        let fit = kmeans(&x, &KMeansParams::new(3).seed(9));
+        assert!(fit.inertia < 1e-12);
+        let mut l = fit.labels.clone();
+        l.sort_unstable();
+        assert_eq!(l, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn duplicate_points_handled() {
+        let rows: Vec<Vec<f64>> = (0..10).map(|_| vec![1.0, 2.0]).collect();
+        let x = Matrix::from_rows(&rows);
+        let fit = kmeans(&x, &KMeansParams::new(3).seed(10));
+        assert_eq!(fit.labels.len(), 10);
+        assert!(fit.inertia < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn k_larger_than_n_panics() {
+        let x = Matrix::from_rows(&[vec![0.0], vec![1.0]]);
+        kmeans(&x, &KMeansParams::new(3));
+    }
+}

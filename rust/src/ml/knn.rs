@@ -1,0 +1,97 @@
+//! k-nearest-neighbor classification (paper §5.1: 1/3/7-NN comparators).
+
+use crate::linalg::{sq_dist, Matrix};
+
+#[derive(Clone, Debug)]
+pub struct Knn {
+    x: Matrix,
+    y: Vec<usize>,
+    pub k: usize,
+    pub n_classes: usize,
+}
+
+impl Knn {
+    pub fn fit(x: &Matrix, y: &[usize], k: usize) -> Knn {
+        assert_eq!(x.rows, y.len());
+        assert!(k >= 1 && k <= x.rows, "k={} for {} samples", k, x.rows);
+        let n_classes = y.iter().max().copied().unwrap_or(0) + 1;
+        Knn { x: x.clone(), y: y.to_vec(), k, n_classes }
+    }
+
+    /// Majority vote among the k nearest training points; ties break toward
+    /// the class with the nearer aggregate (then the smaller label).
+    pub fn predict(&self, row: &[f64]) -> usize {
+        let mut dists: Vec<(f64, usize)> = (0..self.x.rows)
+            .map(|i| (sq_dist(self.x.row(i), row), self.y[i]))
+            .collect();
+        dists.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut votes = vec![0usize; self.n_classes];
+        let mut nearest_rank = vec![usize::MAX; self.n_classes];
+        for (rank, &(_, cls)) in dists[..self.k].iter().enumerate() {
+            votes[cls] += 1;
+            nearest_rank[cls] = nearest_rank[cls].min(rank);
+        }
+        (0..self.n_classes)
+            .max_by(|&a, &b| {
+                votes[a]
+                    .cmp(&votes[b])
+                    .then(nearest_rank[b].cmp(&nearest_rank[a]))
+            })
+            .unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn data(seed: u64) -> (Matrix, Vec<usize>) {
+        let mut rng = Rng::new(seed);
+        let mut rows = Vec::new();
+        let mut y = Vec::new();
+        for (cls, (cx, cy)) in [(0.0, 0.0), (5.0, 5.0)].iter().enumerate() {
+            for _ in 0..30 {
+                rows.push(vec![cx + rng.normal() * 0.5, cy + rng.normal() * 0.5]);
+                y.push(cls);
+            }
+        }
+        (Matrix::from_rows(&rows), y)
+    }
+
+    #[test]
+    fn one_nn_memorizes_training_set() {
+        let (x, y) = data(1);
+        let knn = Knn::fit(&x, &y, 1);
+        for i in 0..x.rows {
+            assert_eq!(knn.predict(x.row(i)), y[i]);
+        }
+    }
+
+    #[test]
+    fn k3_and_k7_classify_blobs() {
+        let (x, y) = data(2);
+        for k in [3, 7] {
+            let knn = Knn::fit(&x, &y, k);
+            assert_eq!(knn.predict(&[0.2, -0.1]), 0, "k={k}");
+            assert_eq!(knn.predict(&[5.3, 4.8]), 1, "k={k}");
+        }
+    }
+
+    #[test]
+    fn tie_breaks_toward_nearer_class() {
+        // 2-NN with one neighbor from each class: the nearer one wins.
+        let x = Matrix::from_rows(&[vec![0.0], vec![1.0]]);
+        let y = vec![0usize, 1usize];
+        let knn = Knn::fit(&x, &y, 2);
+        assert_eq!(knn.predict(&[0.2]), 0);
+        assert_eq!(knn.predict(&[0.8]), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn k_zero_rejected() {
+        let x = Matrix::from_rows(&[vec![0.0]]);
+        Knn::fit(&x, &[0], 0);
+    }
+}

@@ -1,0 +1,285 @@
+//! Multi-layer perceptron classifier (paper §5.1 comparator).
+//!
+//! Single hidden ReLU layer + softmax cross-entropy, trained with Adam on
+//! mini-batches — mirroring scikit-learn's `MLPClassifier` defaults the
+//! paper used (hidden size 100, relu, adam).
+
+use crate::linalg::Matrix;
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct MlpParams {
+    pub hidden: usize,
+    pub epochs: usize,
+    pub batch_size: usize,
+    pub lr: f64,
+    pub l2: f64,
+    pub seed: u64,
+}
+
+impl Default for MlpParams {
+    fn default() -> Self {
+        MlpParams { hidden: 100, epochs: 200, batch_size: 32, lr: 1e-3, l2: 1e-4, seed: 0 }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    w1: Matrix, // (d x h)
+    b1: Vec<f64>,
+    w2: Matrix, // (h x c)
+    b2: Vec<f64>,
+    pub n_classes: usize,
+}
+
+struct Adam {
+    m: Vec<f64>,
+    v: Vec<f64>,
+    t: usize,
+}
+
+impl Adam {
+    fn new(n: usize) -> Adam {
+        Adam { m: vec![0.0; n], v: vec![0.0; n], t: 0 }
+    }
+
+    fn step(&mut self, params: &mut [f64], grads: &[f64], lr: f64) {
+        const B1: f64 = 0.9;
+        const B2: f64 = 0.999;
+        const EPS: f64 = 1e-8;
+        self.t += 1;
+        let bc1 = 1.0 - B1.powi(self.t as i32);
+        let bc2 = 1.0 - B2.powi(self.t as i32);
+        for i in 0..params.len() {
+            self.m[i] = B1 * self.m[i] + (1.0 - B1) * grads[i];
+            self.v[i] = B2 * self.v[i] + (1.0 - B2) * grads[i] * grads[i];
+            let mhat = self.m[i] / bc1;
+            let vhat = self.v[i] / bc2;
+            params[i] -= lr * mhat / (vhat.sqrt() + EPS);
+        }
+    }
+}
+
+impl Mlp {
+    pub fn fit(x: &Matrix, y: &[usize], params: &MlpParams) -> Mlp {
+        assert_eq!(x.rows, y.len());
+        let d = x.cols;
+        let h = params.hidden;
+        let c = y.iter().max().copied().unwrap_or(0) + 1;
+        let mut rng = Rng::new(params.seed);
+
+        // He init for relu layer, Xavier-ish for the head.
+        let mut w1 = Matrix::zeros(d, h);
+        for v in &mut w1.data {
+            *v = rng.normal() * (2.0 / d as f64).sqrt();
+        }
+        let mut w2 = Matrix::zeros(h, c);
+        for v in &mut w2.data {
+            *v = rng.normal() * (1.0 / h as f64).sqrt();
+        }
+        let mut net = Mlp { w1, b1: vec![0.0; h], w2, b2: vec![0.0; c], n_classes: c };
+
+        let mut opt_w1 = Adam::new(d * h);
+        let mut opt_b1 = Adam::new(h);
+        let mut opt_w2 = Adam::new(h * c);
+        let mut opt_b2 = Adam::new(c);
+
+        let mut order: Vec<usize> = (0..x.rows).collect();
+        for _epoch in 0..params.epochs {
+            rng.shuffle(&mut order);
+            for batch in order.chunks(params.batch_size.max(1)) {
+                let bs = batch.len() as f64;
+                let mut gw1 = vec![0.0; d * h];
+                let mut gb1 = vec![0.0; h];
+                let mut gw2 = vec![0.0; h * c];
+                let mut gb2 = vec![0.0; c];
+                for &i in batch {
+                    let row = x.row(i);
+                    // Forward.
+                    let mut hid = net.b1.clone();
+                    for (j, &xj) in row.iter().enumerate() {
+                        if xj == 0.0 {
+                            continue;
+                        }
+                        for k in 0..h {
+                            hid[k] += xj * net.w1[(j, k)];
+                        }
+                    }
+                    let act: Vec<f64> = hid.iter().map(|&v| v.max(0.0)).collect();
+                    let mut logits = net.b2.clone();
+                    for k in 0..h {
+                        if act[k] == 0.0 {
+                            continue;
+                        }
+                        for o in 0..c {
+                            logits[o] += act[k] * net.w2[(k, o)];
+                        }
+                    }
+                    let probs = softmax(&logits);
+                    // Backward (cross-entropy).
+                    let mut dlogits = probs;
+                    dlogits[y[i]] -= 1.0;
+                    for o in 0..c {
+                        gb2[o] += dlogits[o];
+                        for k in 0..h {
+                            gw2[k * c + o] += act[k] * dlogits[o];
+                        }
+                    }
+                    let mut dact = vec![0.0; h];
+                    for k in 0..h {
+                        if hid[k] <= 0.0 {
+                            continue; // relu gate
+                        }
+                        let mut s = 0.0;
+                        for o in 0..c {
+                            s += dlogits[o] * net.w2[(k, o)];
+                        }
+                        dact[k] = s;
+                        gb1[k] += s;
+                    }
+                    for (j, &xj) in row.iter().enumerate() {
+                        if xj == 0.0 {
+                            continue;
+                        }
+                        for k in 0..h {
+                            gw1[j * h + k] += xj * dact[k];
+                        }
+                    }
+                }
+                // Average + L2.
+                for (g, p) in gw1.iter_mut().zip(&net.w1.data) {
+                    *g = *g / bs + params.l2 * p;
+                }
+                for (g, p) in gw2.iter_mut().zip(&net.w2.data) {
+                    *g = *g / bs + params.l2 * p;
+                }
+                for g in &mut gb1 {
+                    *g /= bs;
+                }
+                for g in &mut gb2 {
+                    *g /= bs;
+                }
+                opt_w1.step(&mut net.w1.data, &gw1, params.lr);
+                opt_b1.step(&mut net.b1, &gb1, params.lr);
+                opt_w2.step(&mut net.w2.data, &gw2, params.lr);
+                opt_b2.step(&mut net.b2, &gb2, params.lr);
+            }
+        }
+        net
+    }
+
+    pub fn predict(&self, row: &[f64]) -> usize {
+        let probs = self.predict_proba(row);
+        crate::linalg::stats::argmax(&probs)
+    }
+
+    pub fn predict_proba(&self, row: &[f64]) -> Vec<f64> {
+        let h = self.b1.len();
+        let c = self.b2.len();
+        let mut hid = self.b1.clone();
+        for (j, &xj) in row.iter().enumerate() {
+            if xj == 0.0 {
+                continue;
+            }
+            for k in 0..h {
+                hid[k] += xj * self.w1[(j, k)];
+            }
+        }
+        for v in &mut hid {
+            *v = v.max(0.0);
+        }
+        let mut logits = self.b2.clone();
+        for k in 0..h {
+            if hid[k] == 0.0 {
+                continue;
+            }
+            for o in 0..c {
+                logits[o] += hid[k] * self.w2[(k, o)];
+            }
+        }
+        softmax(&logits)
+    }
+}
+
+fn softmax(logits: &[f64]) -> Vec<f64> {
+    let mx = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let exps: Vec<f64> = logits.iter().map(|&l| (l - mx).exp()).collect();
+    let total: f64 = exps.iter().sum();
+    exps.into_iter().map(|e| e / total).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn softmax_normalizes() {
+        let p = softmax(&[1.0, 2.0, 3.0]);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn learns_xor() {
+        let mut rows = Vec::new();
+        let mut y = Vec::new();
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            for &(a, b) in &[(0.0, 0.0), (0.0, 1.0), (1.0, 0.0), (1.0, 1.0)] {
+                rows.push(vec![a + rng.normal() * 0.05, b + rng.normal() * 0.05]);
+                y.push(((a as i32) ^ (b as i32)) as usize);
+            }
+        }
+        let x = Matrix::from_rows(&rows);
+        let mlp = Mlp::fit(
+            &x,
+            &y,
+            &MlpParams { hidden: 16, epochs: 150, lr: 5e-3, ..Default::default() },
+        );
+        let acc = (0..x.rows).filter(|&i| mlp.predict(x.row(i)) == y[i]).count() as f64
+            / x.rows as f64;
+        assert!(acc > 0.95, "XOR accuracy {acc}");
+    }
+
+    #[test]
+    fn three_class_blobs() {
+        let mut rng = Rng::new(2);
+        let mut rows = Vec::new();
+        let mut y = Vec::new();
+        for (cls, (cx, cy)) in [(0.0, 0.0), (4.0, 0.0), (0.0, 4.0)].iter().enumerate() {
+            for _ in 0..25 {
+                rows.push(vec![cx + rng.normal() * 0.4, cy + rng.normal() * 0.4]);
+                y.push(cls);
+            }
+        }
+        let x = Matrix::from_rows(&rows);
+        let mlp = Mlp::fit(
+            &x,
+            &y,
+            &MlpParams { hidden: 32, epochs: 100, lr: 3e-3, ..Default::default() },
+        );
+        let acc = (0..x.rows).filter(|&i| mlp.predict(x.row(i)) == y[i]).count() as f64
+            / x.rows as f64;
+        assert!(acc > 0.95, "blob accuracy {acc}");
+        assert_eq!(mlp.n_classes, 3);
+    }
+
+    #[test]
+    fn proba_sums_to_one() {
+        let x = Matrix::from_rows(&[vec![0.0, 0.0], vec![1.0, 1.0]]);
+        let mlp = Mlp::fit(&x, &[0, 1], &MlpParams { hidden: 4, epochs: 10, ..Default::default() });
+        let p = mlp.predict_proba(&[0.5, 0.5]);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let x = Matrix::from_rows(&[vec![0.0], vec![1.0], vec![2.0], vec![3.0]]);
+        let y = [0usize, 0, 1, 1];
+        let p = MlpParams { hidden: 8, epochs: 20, seed: 5, ..Default::default() };
+        let a = Mlp::fit(&x, &y, &p);
+        let b = Mlp::fit(&x, &y, &p);
+        assert_eq!(a.predict_proba(&[1.5]), b.predict_proba(&[1.5]));
+    }
+}

@@ -1,0 +1,30 @@
+//! Machine-learning substrate, written from scratch (the paper used
+//! scikit-learn; nothing of the sort is vendored here, and the runtime must
+//! stay Python-free anyway).
+//!
+//! Clustering (paper §4.1): [`kmeans`], [`pca`] (+k-means), [`spectral`],
+//! [`hdbscan`], and decision-tree-as-clusterer via
+//! [`decision_tree::TreeRegressor`] with a leaf budget.
+//!
+//! Classification (paper §5.1): [`decision_tree::TreeClassifier`],
+//! [`knn`], [`svm`] (linear/RBF), [`random_forest`], [`mlp`].
+
+pub mod decision_tree;
+pub mod hdbscan;
+pub mod kmeans;
+pub mod knn;
+pub mod mlp;
+pub mod pca;
+pub mod random_forest;
+pub mod spectral;
+pub mod svm;
+
+pub use decision_tree::{TreeClassifier, TreeParams, TreeRegressor};
+pub use hdbscan::{hdbscan, Hdbscan, HdbscanParams};
+pub use kmeans::{kmeans, KMeans, KMeansParams};
+pub use knn::Knn;
+pub use mlp::{Mlp, MlpParams};
+pub use pca::Pca;
+pub use random_forest::{ForestParams, RandomForest};
+pub use spectral::{spectral, Spectral, SpectralParams};
+pub use svm::{Kernel, Svm, SvmParams};

@@ -1,0 +1,148 @@
+//! Random forest classifier (paper §5.1 comparator): bagged CART trees with
+//! per-split feature subsampling and majority vote.
+
+use crate::linalg::Matrix;
+use crate::ml::decision_tree::{TreeClassifier, TreeParams};
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct ForestParams {
+    pub n_trees: usize,
+    pub max_depth: Option<usize>,
+    pub min_samples_leaf: usize,
+    /// Features per split; None = floor(sqrt(d)).
+    pub max_features: Option<usize>,
+    pub seed: u64,
+}
+
+impl Default for ForestParams {
+    fn default() -> Self {
+        ForestParams {
+            n_trees: 50,
+            max_depth: None,
+            min_samples_leaf: 1,
+            max_features: None,
+            seed: 0,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct RandomForest {
+    pub trees: Vec<TreeClassifier>,
+    pub n_classes: usize,
+}
+
+impl RandomForest {
+    pub fn fit(x: &Matrix, y: &[usize], params: &ForestParams) -> RandomForest {
+        assert_eq!(x.rows, y.len());
+        let n_classes = y.iter().max().copied().unwrap_or(0) + 1;
+        let max_features = params
+            .max_features
+            .unwrap_or_else(|| (x.cols as f64).sqrt().floor().max(1.0) as usize);
+        let mut rng = Rng::new(params.seed);
+        let mut trees = Vec::with_capacity(params.n_trees);
+        for t in 0..params.n_trees {
+            let mut tree_rng = rng.fork(t as u64 + 1);
+            // Bootstrap sample.
+            let idx: Vec<usize> = (0..x.rows).map(|_| tree_rng.below(x.rows)).collect();
+            let bx = Matrix::from_rows(&idx.iter().map(|&i| x.row(i).to_vec()).collect::<Vec<_>>());
+            let by: Vec<usize> = idx.iter().map(|&i| y[i]).collect();
+            let tp = TreeParams {
+                max_depth: params.max_depth,
+                min_samples_leaf: params.min_samples_leaf,
+                min_samples_split: 2,
+                max_leaves: None,
+                max_features: Some(max_features),
+                seed: tree_rng.next_u64(),
+            };
+            trees.push(TreeClassifier::fit(&bx, &by, &tp));
+        }
+        RandomForest { trees, n_classes }
+    }
+
+    pub fn predict(&self, row: &[f64]) -> usize {
+        let mut votes = vec![0usize; self.n_classes];
+        for tree in &self.trees {
+            let p = tree.predict(row);
+            if p < votes.len() {
+                votes[p] += 1;
+            }
+        }
+        votes
+            .iter()
+            .enumerate()
+            .max_by_key(|&(_, &v)| v)
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn noisy_blobs(seed: u64) -> (Matrix, Vec<usize>) {
+        let mut rng = Rng::new(seed);
+        let mut rows = Vec::new();
+        let mut y = Vec::new();
+        for (cls, (cx, cy)) in [(0.0, 0.0), (3.0, 3.0), (0.0, 5.0)].iter().enumerate() {
+            for _ in 0..30 {
+                rows.push(vec![
+                    cx + rng.normal() * 0.8,
+                    cy + rng.normal() * 0.8,
+                    rng.normal(), // pure-noise feature
+                ]);
+                y.push(cls);
+            }
+        }
+        (Matrix::from_rows(&rows), y)
+    }
+
+    #[test]
+    fn classifies_noisy_blobs() {
+        let (x, y) = noisy_blobs(1);
+        let rf = RandomForest::fit(&x, &y, &ForestParams { n_trees: 30, ..Default::default() });
+        let acc = (0..x.rows).filter(|&i| rf.predict(x.row(i)) == y[i]).count() as f64
+            / x.rows as f64;
+        assert!(acc > 0.9, "train accuracy {acc}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (x, y) = noisy_blobs(2);
+        let p = ForestParams { n_trees: 10, seed: 7, ..Default::default() };
+        let a = RandomForest::fit(&x, &y, &p);
+        let b = RandomForest::fit(&x, &y, &p);
+        for i in 0..x.rows {
+            assert_eq!(a.predict(x.row(i)), b.predict(x.row(i)));
+        }
+    }
+
+    #[test]
+    fn trees_differ_across_forest() {
+        let (x, y) = noisy_blobs(3);
+        let rf = RandomForest::fit(&x, &y, &ForestParams { n_trees: 8, ..Default::default() });
+        // At least two trees disagree somewhere (bagging diversity).
+        let mut diverse = false;
+        'outer: for i in 0..x.rows {
+            let p0 = rf.trees[0].predict(x.row(i));
+            for t in &rf.trees[1..] {
+                if t.predict(x.row(i)) != p0 {
+                    diverse = true;
+                    break 'outer;
+                }
+            }
+        }
+        assert!(diverse, "all trees identical — bagging broken?");
+    }
+
+    #[test]
+    fn n_classes_tracked() {
+        let (x, y) = noisy_blobs(4);
+        let rf = RandomForest::fit(&x, &y, &ForestParams { n_trees: 5, ..Default::default() });
+        assert_eq!(rf.n_classes, 3);
+        assert!(rf.predict(x.row(0)) < 3);
+    }
+}

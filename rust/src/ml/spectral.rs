@@ -1,0 +1,185 @@
+//! Spectral clustering (paper §4.1.3): RBF similarity graph -> normalized
+//! Laplacian -> smallest-eigenvector embedding -> k-means.
+
+use crate::linalg::{eigen::smallest_eigvec_embedding, sq_dist, Matrix};
+use crate::ml::kmeans::{kmeans, KMeansParams};
+
+#[derive(Clone, Debug)]
+pub struct SpectralParams {
+    pub k: usize,
+    /// RBF width; if `None`, uses the median heuristic (1 / median sq-dist).
+    pub gamma: Option<f64>,
+    pub seed: u64,
+}
+
+impl SpectralParams {
+    pub fn new(k: usize) -> Self {
+        SpectralParams { k, gamma: None, seed: 0 }
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Spectral {
+    pub labels: Vec<usize>,
+    /// The spectral embedding rows that were clustered (n x k).
+    pub embedding: Matrix,
+    /// The explicit RBF gamma, or 0.0 when self-tuning local scaling is used.
+    pub gamma: f64,
+}
+
+/// Per-point local scale: distance to the 7th nearest neighbor
+/// (Zelnik-Manor & Perona self-tuning spectral clustering).
+fn local_scales(x: &Matrix) -> Vec<f64> {
+    let n = x.rows;
+    let k = 7usize.min(n.saturating_sub(1)).max(1);
+    (0..n)
+        .map(|i| {
+            let mut d: Vec<f64> = (0..n)
+                .filter(|&j| j != i)
+                .map(|j| sq_dist(x.row(i), x.row(j)).sqrt())
+                .collect();
+            if d.is_empty() {
+                return 1.0;
+            }
+            d.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            d[k - 1].max(1e-12)
+        })
+        .collect()
+}
+
+/// Cluster rows of `x` into `params.k` groups.
+pub fn spectral(x: &Matrix, params: &SpectralParams) -> Spectral {
+    let n = x.rows;
+    assert!(n >= params.k, "spectral: k={} > n={}", params.k, n);
+
+    // Affinity W (zero diagonal) and degree D. With an explicit gamma the
+    // classic RBF kernel is used; otherwise self-tuning local scaling:
+    // A_ij = exp(-d_ij^2 / (sigma_i * sigma_j)).
+    let scales = if params.gamma.is_none() { local_scales(x) } else { vec![] };
+    let gamma = params.gamma.unwrap_or(0.0);
+    let mut w = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let d2 = sq_dist(x.row(i), x.row(j));
+            let a = if params.gamma.is_some() {
+                (-gamma * d2).exp()
+            } else {
+                (-d2 / (scales[i] * scales[j])).exp()
+            };
+            w[(i, j)] = a;
+            w[(j, i)] = a;
+        }
+    }
+    let degrees: Vec<f64> = (0..n).map(|i| w.row(i).iter().sum::<f64>()).collect();
+
+    // Normalized Laplacian: L = I - D^-1/2 W D^-1/2.
+    let mut lap = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            let norm = (degrees[i] * degrees[j]).sqrt();
+            let wij = if norm > 1e-300 { w[(i, j)] / norm } else { 0.0 };
+            lap[(i, j)] = if i == j { 1.0 - wij } else { -wij };
+        }
+    }
+
+    // Embed on the k smallest eigenvectors, row-normalize, k-means.
+    let mut emb = smallest_eigvec_embedding(&lap, params.k);
+    for r in 0..n {
+        let norm = crate::linalg::norm2(emb.row(r));
+        if norm > 1e-300 {
+            for v in emb.row_mut(r) {
+                *v /= norm;
+            }
+        }
+    }
+    let km = kmeans(&emb, &KMeansParams::new(params.k).seed(params.seed));
+    Spectral { labels: km.labels, embedding: emb, gamma }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Two concentric rings: k-means fails on these in raw coordinates,
+    /// spectral must separate them.
+    fn rings(per: usize, seed: u64) -> (Matrix, Vec<usize>) {
+        let mut rng = Rng::new(seed);
+        let mut rows = Vec::new();
+        let mut truth = Vec::new();
+        for (i, radius) in [1.0f64, 5.0].iter().enumerate() {
+            for _ in 0..per {
+                let theta = rng.uniform() * std::f64::consts::TAU;
+                let r = radius + rng.normal() * 0.05;
+                rows.push(vec![r * theta.cos(), r * theta.sin()]);
+                truth.push(i);
+            }
+        }
+        (Matrix::from_rows(&rows), truth)
+    }
+
+    fn purity(labels: &[usize], truth: &[usize], k: usize) -> f64 {
+        let mut correct = 0usize;
+        for c in 0..k {
+            let members: Vec<usize> =
+                (0..labels.len()).filter(|&i| labels[i] == c).collect();
+            if members.is_empty() {
+                continue;
+            }
+            let mut counts = std::collections::HashMap::new();
+            for &m in &members {
+                *counts.entry(truth[m]).or_insert(0usize) += 1;
+            }
+            correct += counts.values().max().copied().unwrap_or(0);
+        }
+        correct as f64 / labels.len() as f64
+    }
+
+    #[test]
+    fn separates_rings() {
+        let (x, truth) = rings(60, 1);
+        let fit = spectral(&x, &SpectralParams::new(2).seed(2));
+        let p = purity(&fit.labels, &truth, 2);
+        assert!(p > 0.95, "ring purity {p}");
+    }
+
+    #[test]
+    fn separates_blobs() {
+        let mut rng = Rng::new(3);
+        let mut rows = Vec::new();
+        let mut truth = Vec::new();
+        for (i, (cx, cy)) in [(0.0, 0.0), (8.0, 8.0)].iter().enumerate() {
+            for _ in 0..40 {
+                rows.push(vec![cx + rng.normal() * 0.3, cy + rng.normal() * 0.3]);
+                truth.push(i);
+            }
+        }
+        let x = Matrix::from_rows(&rows);
+        let fit = spectral(&x, &SpectralParams::new(2).seed(4));
+        assert!(purity(&fit.labels, &truth, 2) > 0.98);
+    }
+
+    #[test]
+    fn label_range_and_count() {
+        let (x, _) = rings(25, 5);
+        let fit = spectral(&x, &SpectralParams::new(2).seed(6));
+        assert_eq!(fit.labels.len(), x.rows);
+        assert!(fit.labels.iter().all(|&l| l < 2));
+        assert_eq!(fit.gamma, 0.0); // self-tuning mode: no single gamma
+    }
+
+    #[test]
+    fn explicit_gamma_respected() {
+        let (x, _) = rings(20, 7);
+        let fit = spectral(
+            &x,
+            &SpectralParams { k: 2, gamma: Some(0.5), seed: 8 },
+        );
+        assert_eq!(fit.gamma, 0.5);
+    }
+}

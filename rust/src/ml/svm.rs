@@ -1,0 +1,279 @@
+//! Support vector machines via simplified SMO (paper §5.1: LinearSVM and
+//! RadialSVM comparators), with one-vs-rest multiclass reduction.
+
+use crate::linalg::{dot, sq_dist, Matrix};
+use crate::util::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Kernel {
+    Linear,
+    /// RBF with bandwidth gamma.
+    Rbf(f64),
+}
+
+impl Kernel {
+    #[inline]
+    fn eval(&self, a: &[f64], b: &[f64]) -> f64 {
+        match self {
+            Kernel::Linear => dot(a, b),
+            Kernel::Rbf(gamma) => (-gamma * sq_dist(a, b)).exp(),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct SvmParams {
+    pub kernel: Kernel,
+    pub c: f64,
+    pub tol: f64,
+    pub max_passes: usize,
+    pub seed: u64,
+}
+
+impl Default for SvmParams {
+    fn default() -> Self {
+        SvmParams { kernel: Kernel::Linear, c: 1.0, tol: 1e-3, max_passes: 8, seed: 0 }
+    }
+}
+
+/// Binary SVM trained with simplified SMO (Platt / Stanford CS229 variant).
+#[derive(Clone, Debug)]
+struct BinarySvm {
+    alphas: Vec<f64>,
+    bias: f64,
+    /// Support vectors (rows) and their +-1 labels; only alphas > 0 kept.
+    support: Matrix,
+    sv_labels: Vec<f64>,
+    kernel: Kernel,
+}
+
+impl BinarySvm {
+    /// `y` in {-1.0, +1.0}.
+    fn fit(x: &Matrix, y: &[f64], params: &SvmParams) -> BinarySvm {
+        let n = x.rows;
+        let mut alphas = vec![0.0f64; n];
+        let mut bias = 0.0f64;
+        let mut rng = Rng::new(params.seed);
+
+        // Precompute the kernel matrix (n is a few hundred at most here).
+        let mut kmat = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                let v = params.kernel.eval(x.row(i), x.row(j));
+                kmat[(i, j)] = v;
+                kmat[(j, i)] = v;
+            }
+        }
+        let f = |alphas: &[f64], bias: f64, kmat: &Matrix, i: usize| -> f64 {
+            let mut s = bias;
+            for j in 0..n {
+                if alphas[j] != 0.0 {
+                    s += alphas[j] * y[j] * kmat[(j, i)];
+                }
+            }
+            s
+        };
+
+        let mut passes = 0usize;
+        let mut iters = 0usize;
+        while passes < params.max_passes && iters < 200 {
+            iters += 1;
+            let mut changed = 0usize;
+            for i in 0..n {
+                let ei = f(&alphas, bias, &kmat, i) - y[i];
+                let violates = (y[i] * ei < -params.tol && alphas[i] < params.c)
+                    || (y[i] * ei > params.tol && alphas[i] > 0.0);
+                if !violates {
+                    continue;
+                }
+                let mut j = rng.below(n - 1);
+                if j >= i {
+                    j += 1;
+                }
+                let ej = f(&alphas, bias, &kmat, j) - y[j];
+                let (ai_old, aj_old) = (alphas[i], alphas[j]);
+                let (lo, hi) = if y[i] != y[j] {
+                    ((aj_old - ai_old).max(0.0), (params.c + aj_old - ai_old).min(params.c))
+                } else {
+                    ((ai_old + aj_old - params.c).max(0.0), (ai_old + aj_old).min(params.c))
+                };
+                if (hi - lo).abs() < 1e-12 {
+                    continue;
+                }
+                let eta = 2.0 * kmat[(i, j)] - kmat[(i, i)] - kmat[(j, j)];
+                if eta >= 0.0 {
+                    continue;
+                }
+                let mut aj = aj_old - y[j] * (ei - ej) / eta;
+                aj = aj.clamp(lo, hi);
+                if (aj - aj_old).abs() < 1e-5 {
+                    continue;
+                }
+                let ai = ai_old + y[i] * y[j] * (aj_old - aj);
+                alphas[i] = ai;
+                alphas[j] = aj;
+                let b1 = bias - ei
+                    - y[i] * (ai - ai_old) * kmat[(i, i)]
+                    - y[j] * (aj - aj_old) * kmat[(i, j)];
+                let b2 = bias - ej
+                    - y[i] * (ai - ai_old) * kmat[(i, j)]
+                    - y[j] * (aj - aj_old) * kmat[(j, j)];
+                bias = if ai > 0.0 && ai < params.c {
+                    b1
+                } else if aj > 0.0 && aj < params.c {
+                    b2
+                } else {
+                    (b1 + b2) / 2.0
+                };
+                changed += 1;
+            }
+            if changed == 0 {
+                passes += 1;
+            } else {
+                passes = 0;
+            }
+        }
+
+        // Compact to support vectors.
+        let sv_idx: Vec<usize> = (0..n).filter(|&i| alphas[i] > 1e-9).collect();
+        let support = if sv_idx.is_empty() {
+            Matrix::zeros(0, x.cols)
+        } else {
+            Matrix::from_rows(&sv_idx.iter().map(|&i| x.row(i).to_vec()).collect::<Vec<_>>())
+        };
+        BinarySvm {
+            alphas: sv_idx.iter().map(|&i| alphas[i]).collect(),
+            bias,
+            support,
+            sv_labels: sv_idx.iter().map(|&i| y[i]).collect(),
+            kernel: params.kernel,
+        }
+    }
+
+    fn decision(&self, row: &[f64]) -> f64 {
+        let mut s = self.bias;
+        for i in 0..self.support.rows {
+            s += self.alphas[i] * self.sv_labels[i] * self.kernel.eval(self.support.row(i), row);
+        }
+        s
+    }
+}
+
+/// One-vs-rest multiclass SVM.
+#[derive(Clone, Debug)]
+pub struct Svm {
+    machines: Vec<BinarySvm>,
+    pub n_classes: usize,
+}
+
+impl Svm {
+    pub fn fit(x: &Matrix, y: &[usize], params: &SvmParams) -> Svm {
+        assert_eq!(x.rows, y.len());
+        let n_classes = y.iter().max().copied().unwrap_or(0) + 1;
+        let machines = (0..n_classes)
+            .map(|cls| {
+                let ypm: Vec<f64> =
+                    y.iter().map(|&l| if l == cls { 1.0 } else { -1.0 }).collect();
+                let mut p = params.clone();
+                p.seed = params.seed.wrapping_add(cls as u64);
+                BinarySvm::fit(x, &ypm, &p)
+            })
+            .collect();
+        Svm { machines, n_classes }
+    }
+
+    pub fn predict(&self, row: &[f64]) -> usize {
+        let mut best = 0usize;
+        let mut best_score = f64::NEG_INFINITY;
+        for (cls, m) in self.machines.iter().enumerate() {
+            let s = m.decision(row);
+            if s > best_score {
+                best_score = s;
+                best = cls;
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn blobs2(seed: u64, sep: f64) -> (Matrix, Vec<usize>) {
+        let mut rng = Rng::new(seed);
+        let mut rows = Vec::new();
+        let mut y = Vec::new();
+        for (cls, (cx, cy)) in [(0.0, 0.0), (sep, sep)].iter().enumerate() {
+            for _ in 0..25 {
+                rows.push(vec![cx + rng.normal() * 0.4, cy + rng.normal() * 0.4]);
+                y.push(cls);
+            }
+        }
+        (Matrix::from_rows(&rows), y)
+    }
+
+    fn accuracy(svm: &Svm, x: &Matrix, y: &[usize]) -> f64 {
+        let hits = (0..x.rows).filter(|&i| svm.predict(x.row(i)) == y[i]).count();
+        hits as f64 / x.rows as f64
+    }
+
+    #[test]
+    fn linear_separable() {
+        let (x, y) = blobs2(1, 4.0);
+        let svm = Svm::fit(&x, &y, &SvmParams::default());
+        assert!(accuracy(&svm, &x, &y) > 0.95);
+    }
+
+    #[test]
+    fn rbf_on_ring_data() {
+        // Class 0 inside radius 1, class 1 on a ring at radius 3: not
+        // linearly separable, RBF must handle it.
+        let mut rng = Rng::new(2);
+        let mut rows = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..60 {
+            let theta = rng.uniform() * std::f64::consts::TAU;
+            let (r, cls) = if i % 2 == 0 { (rng.uniform() * 0.8, 0) } else { (3.0 + rng.normal() * 0.1, 1) };
+            rows.push(vec![r * theta.cos(), r * theta.sin()]);
+            y.push(cls);
+        }
+        let x = Matrix::from_rows(&rows);
+        let rbf = Svm::fit(
+            &x,
+            &y,
+            &SvmParams { kernel: Kernel::Rbf(1.0), c: 10.0, ..Default::default() },
+        );
+        assert!(accuracy(&rbf, &x, &y) > 0.95);
+        let lin = Svm::fit(&x, &y, &SvmParams::default());
+        assert!(accuracy(&lin, &x, &y) < accuracy(&rbf, &x, &y));
+    }
+
+    #[test]
+    fn three_class_ovr() {
+        let mut rng = Rng::new(3);
+        let mut rows = Vec::new();
+        let mut y = Vec::new();
+        for (cls, (cx, cy)) in [(0.0, 0.0), (6.0, 0.0), (0.0, 6.0)].iter().enumerate() {
+            for _ in 0..20 {
+                rows.push(vec![cx + rng.normal() * 0.3, cy + rng.normal() * 0.3]);
+                y.push(cls);
+            }
+        }
+        let x = Matrix::from_rows(&rows);
+        let svm = Svm::fit(&x, &y, &SvmParams::default());
+        assert!(accuracy(&svm, &x, &y) > 0.95);
+        assert_eq!(svm.n_classes, 3);
+    }
+
+    #[test]
+    fn deterministic() {
+        let (x, y) = blobs2(4, 3.0);
+        let a = Svm::fit(&x, &y, &SvmParams::default());
+        let b = Svm::fit(&x, &y, &SvmParams::default());
+        for i in 0..x.rows {
+            assert_eq!(a.predict(x.row(i)), b.predict(x.row(i)));
+        }
+    }
+}

@@ -1,0 +1,264 @@
+//! The artifact manifest: metadata for every AOT-lowered HLO executable
+//! emitted by `python/compile/aot.py` (shapes, kernel configs, flops).
+
+use crate::util::json::{parse, Json};
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    Matmul,
+    ConvLayer,
+    FcLayer,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub path: String,
+    pub kind: ArtifactKind,
+    /// `Some(config_index)` for Pallas-kernel artifacts; `None` for the
+    /// XLA-dot comparator backend.
+    pub config_index: Option<usize>,
+    pub config_name: Option<String>,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub b: usize,
+    pub flops: f64,
+    pub network: Option<String>,
+    pub layer: Option<String>,
+    pub layer_index: Option<usize>,
+    pub pool: bool,
+    pub relu: bool,
+    /// Input tensor shapes in argument order.
+    pub inputs: Vec<Vec<usize>>,
+    pub output: Vec<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub deployed: Vec<String>,
+    pub single_best: String,
+    pub artifacts: Vec<ArtifactMeta>,
+    /// Hot-path index: (config, m, k, n, b) -> artifact position. Built at
+    /// load so per-request resolution is O(1) instead of a linear scan.
+    matmul_index:
+        std::collections::HashMap<(Option<usize>, usize, usize, usize, usize), usize>,
+}
+
+fn dims(j: &Json) -> Vec<usize> {
+    j.as_arr()
+        .map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
+        .unwrap_or_default()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| format!("reading manifest: {e}"))?;
+        let root = parse(&text)?;
+        let meta = root.get("meta").ok_or("manifest missing meta")?;
+        let deployed = meta
+            .get("deployed")
+            .and_then(|d| d.as_arr())
+            .map(|a| a.iter().filter_map(|v| v.as_str().map(String::from)).collect())
+            .unwrap_or_default();
+        let single_best = meta
+            .get("single_best")
+            .and_then(|v| v.as_str())
+            .unwrap_or_default()
+            .to_string();
+        let mut artifacts = Vec::new();
+        for a in root
+            .get("artifacts")
+            .and_then(|v| v.as_arr())
+            .ok_or("manifest missing artifacts")?
+        {
+            let kind = match a.get("kind").and_then(|v| v.as_str()) {
+                Some("matmul") => ArtifactKind::Matmul,
+                Some("conv_layer") => ArtifactKind::ConvLayer,
+                Some("fc_layer") => ArtifactKind::FcLayer,
+                other => return Err(format!("unknown artifact kind {other:?}")),
+            };
+            artifacts.push(ArtifactMeta {
+                path: a
+                    .get("path")
+                    .and_then(|v| v.as_str())
+                    .ok_or("artifact missing path")?
+                    .to_string(),
+                kind,
+                config_index: a.get("config_index").and_then(|v| v.as_usize()),
+                config_name: a
+                    .get("config")
+                    .and_then(|v| v.as_str())
+                    .map(String::from),
+                m: a.get("m").and_then(|v| v.as_usize()).unwrap_or(0),
+                k: a.get("k").and_then(|v| v.as_usize()).unwrap_or(0),
+                n: a.get("n").and_then(|v| v.as_usize()).unwrap_or(0),
+                b: a.get("b").and_then(|v| v.as_usize()).unwrap_or(1),
+                flops: a.get("flops").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                network: a.get("network").and_then(|v| v.as_str()).map(String::from),
+                layer: a.get("layer").and_then(|v| v.as_str()).map(String::from),
+                layer_index: a.get("layer_index").and_then(|v| v.as_usize()),
+                pool: a.get("pool").and_then(|v| v.as_bool()).unwrap_or(false),
+                relu: a.get("relu").and_then(|v| v.as_bool()).unwrap_or(true),
+                inputs: a
+                    .get("inputs")
+                    .and_then(|v| v.as_arr())
+                    .map(|arr| arr.iter().map(dims).collect())
+                    .unwrap_or_default(),
+                output: a.get("output").map(dims).unwrap_or_default(),
+            });
+        }
+        let mut matmul_index = std::collections::HashMap::new();
+        for (i, a) in artifacts.iter().enumerate() {
+            if a.kind == ArtifactKind::Matmul {
+                matmul_index.insert((a.config_index, a.m, a.k, a.n, a.b), i);
+            }
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            deployed,
+            single_best,
+            artifacts,
+            matmul_index,
+        })
+    }
+
+    /// Find a standalone GEMM artifact for (config, shape). `config=None`
+    /// looks for the XLA comparator backend. O(1) via the load-time index.
+    pub fn find_matmul(
+        &self,
+        config_index: Option<usize>,
+        m: usize,
+        k: usize,
+        n: usize,
+        b: usize,
+    ) -> Option<&ArtifactMeta> {
+        self.matmul_index
+            .get(&(config_index, m, k, n, b))
+            .map(|&i| &self.artifacts[i])
+    }
+
+    /// All GEMM artifacts for a shape, any backend.
+    pub fn matmuls_for_shape(&self, m: usize, k: usize, n: usize, b: usize) -> Vec<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| {
+                a.kind == ArtifactKind::Matmul && a.m == m && a.k == k && a.n == n && a.b == b
+            })
+            .collect()
+    }
+
+    /// The layer artifacts of a network for one backend choice, ordered by
+    /// layer index. `config_for_layer(layer_index, meta) -> Option<usize>`
+    /// decides the per-layer kernel (None = XLA backend).
+    pub fn network_layers(
+        &self,
+        network: &str,
+        mut config_for_layer: impl FnMut(usize, &ArtifactMeta) -> Option<usize>,
+    ) -> Result<Vec<&ArtifactMeta>, String> {
+        let n_layers = self
+            .artifacts
+            .iter()
+            .filter(|a| a.network.as_deref() == Some(network))
+            .filter_map(|a| a.layer_index)
+            .max()
+            .map(|m| m + 1)
+            .ok_or_else(|| format!("no layers for network {network}"))?;
+        let mut out = Vec::with_capacity(n_layers);
+        for li in 0..n_layers {
+            // Use any artifact of the layer to query its metadata.
+            let probe = self
+                .artifacts
+                .iter()
+                .find(|a| {
+                    a.network.as_deref() == Some(network) && a.layer_index == Some(li)
+                })
+                .ok_or_else(|| format!("{network}: missing layer {li}"))?;
+            let want = config_for_layer(li, probe);
+            let found = self
+                .artifacts
+                .iter()
+                .find(|a| {
+                    a.network.as_deref() == Some(network)
+                        && a.layer_index == Some(li)
+                        && a.config_index == want
+                })
+                .ok_or_else(|| {
+                    format!("{network} layer {li}: no artifact for config {want:?}")
+                })?;
+            out.push(found);
+        }
+        Ok(out)
+    }
+
+    /// Distinct GEMM shapes available as standalone artifacts.
+    pub fn matmul_shapes(&self) -> Vec<(usize, usize, usize, usize)> {
+        let mut shapes: Vec<(usize, usize, usize, usize)> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::Matmul)
+            .map(|a| (a.m, a.k, a.n, a.b))
+            .collect();
+        shapes.sort_unstable();
+        shapes.dedup();
+        shapes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn load() -> Manifest {
+        Manifest::load(&manifest_dir()).expect("run `make artifacts` first")
+    }
+
+    #[test]
+    fn loads_and_has_deployment() {
+        let m = load();
+        assert_eq!(m.deployed.len(), 8);
+        assert!(!m.single_best.is_empty());
+        assert!(m.artifacts.len() > 100);
+    }
+
+    #[test]
+    fn fig1_matmuls_present_for_deployed_configs() {
+        let m = load();
+        let best =
+            crate::dataset::config_by_name(&m.single_best).unwrap().index();
+        assert!(m.find_matmul(Some(best), 512, 784, 512, 16).is_some());
+        assert!(m.find_matmul(None, 512, 784, 512, 16).is_some());
+        assert!(m.find_matmul(Some(best), 1, 1, 1, 1).is_none());
+    }
+
+    #[test]
+    fn vgg16_tiny_layers_complete() {
+        let m = load();
+        let layers = m.network_layers("vgg16-tiny", |_, _| None).unwrap();
+        assert_eq!(layers.len(), 16);
+        assert_eq!(layers[0].kind, ArtifactKind::ConvLayer);
+        assert_eq!(layers[15].kind, ArtifactKind::FcLayer);
+        // Files actually exist.
+        for l in &layers {
+            assert!(m.dir.join(&l.path).exists(), "{}", l.path);
+        }
+        // Pallas-backed variant also complete for every deployed config.
+        for name in m.deployed.clone() {
+            let idx = crate::dataset::config_by_name(&name).unwrap().index();
+            let layers = m.network_layers("vgg16-tiny", |_, _| Some(idx)).unwrap();
+            assert_eq!(layers.len(), 16, "config {name}");
+        }
+    }
+
+    #[test]
+    fn missing_network_errors() {
+        let m = load();
+        assert!(m.network_layers("resnet9000", |_, _| None).is_err());
+    }
+}

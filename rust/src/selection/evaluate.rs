@@ -1,0 +1,108 @@
+//! Evaluation of a deployed-kernel selection (paper §4.3): what percentage
+//! of the optimal performance survives when only the selected kernels are
+//! available, aggregated as the geometric mean over the test size sets.
+
+use crate::dataset::PerfDataset;
+use crate::linalg::stats::geomean;
+
+/// Percentage (0..100) of optimal performance achievable on `test` when an
+/// oracle picks the best of `selected` per size set — the paper's
+/// "maximum achievable performance" for a deployment.
+pub fn achievable_percent(test: &PerfDataset, selected: &[usize]) -> f64 {
+    assert!(!selected.is_empty());
+    let rels: Vec<f64> = (0..test.n_shapes())
+        .map(|r| {
+            selected
+                .iter()
+                .map(|&c| test.relative(r, c))
+                .fold(0.0f64, f64::max)
+        })
+        .collect();
+    geomean(&rels) * 100.0
+}
+
+/// Percentage of optimal performance when a *classifier's* per-shape config
+/// choice (an index into the full config space) is used instead of the
+/// oracle.
+pub fn achieved_percent(test: &PerfDataset, choices: &[usize]) -> f64 {
+    assert_eq!(choices.len(), test.n_shapes());
+    let rels: Vec<f64> = (0..test.n_shapes())
+        .map(|r| test.relative(r, choices[r]))
+        .collect();
+    geomean(&rels) * 100.0
+}
+
+/// Full selection evaluation row: method picks on train, achievable on test.
+pub fn evaluate_selection(
+    train: &PerfDataset,
+    test: &PerfDataset,
+    method: super::Method,
+    norm: crate::dataset::Normalization,
+    k: usize,
+    seed: u64,
+) -> (Vec<usize>, f64) {
+    let picks = super::select(method, train, norm, k, seed);
+    let pct = achievable_percent(test, &picks);
+    (picks, pct)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::{GemmShape, PerfDataset, NUM_CONFIGS};
+    use crate::linalg::Matrix;
+
+    fn two_regime_dataset() -> PerfDataset {
+        // Rows 0..5 are fastest on config 0, rows 5..10 on config 1; all
+        // other configs are 10x slower.
+        let shapes: Vec<GemmShape> =
+            (0..10).map(|i| GemmShape::new(16 + i, 32, 16, 1)).collect();
+        let rows: Vec<Vec<f64>> = (0..10)
+            .map(|i| {
+                (0..NUM_CONFIGS)
+                    .map(|c| {
+                        if (i < 5 && c == 0) || (i >= 5 && c == 1) {
+                            100.0
+                        } else {
+                            10.0
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        PerfDataset::new("2regime", shapes, Matrix::from_rows(&rows))
+    }
+
+    #[test]
+    fn oracle_with_both_winners_is_100() {
+        let ds = two_regime_dataset();
+        assert!((achievable_percent(&ds, &[0, 1]) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_winner_costs_half_the_rows() {
+        let ds = two_regime_dataset();
+        let pct = achievable_percent(&ds, &[0]);
+        // Half the rows at 100%, half at 10% -> geomean = sqrt(0.1) ~ 31.6%.
+        assert!((pct - 31.62).abs() < 0.5, "pct={pct}");
+    }
+
+    #[test]
+    fn achieved_tracks_choices() {
+        let ds = two_regime_dataset();
+        let perfect: Vec<usize> = (0..10).map(|i| if i < 5 { 0 } else { 1 }).collect();
+        assert!((achieved_percent(&ds, &perfect) - 100.0).abs() < 1e-9);
+        let inverted: Vec<usize> = (0..10).map(|i| if i < 5 { 1 } else { 0 }).collect();
+        assert!((achieved_percent(&ds, &inverted) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn more_kernels_never_hurt_oracle() {
+        let ds = two_regime_dataset();
+        let p1 = achievable_percent(&ds, &[0]);
+        let p2 = achievable_percent(&ds, &[0, 1]);
+        let p3 = achievable_percent(&ds, &[0, 1, 2]);
+        assert!(p2 >= p1);
+        assert!(p3 >= p2);
+    }
+}

@@ -1,0 +1,321 @@
+//! Kernel-subset selection (paper §4): choose the k configurations a
+//! library should deploy, from the benchmark dataset alone.
+//!
+//! Implements the paper's six methods: the Top-N baseline (§4.2), K-means,
+//! PCA+K-means, spectral clustering, HDBSCAN (with the hyperparameter sweep)
+//! and the decision-tree-with-bounded-leaves clusterer (§4.1.5). Clustering
+//! methods represent each size set as its (normalized) 640-dim performance
+//! vector; each cluster contributes the configuration that maximizes the
+//! geometric mean of the cluster members' normalized performance.
+
+pub mod evaluate;
+
+pub use evaluate::{achievable_percent, achieved_percent, evaluate_selection};
+
+use crate::dataset::{Normalization, PerfDataset, NUM_CONFIGS};
+use crate::linalg::stats::argmax;
+use crate::linalg::Matrix;
+use crate::ml::decision_tree::{TreeParams, TreeRegressor};
+use crate::ml::hdbscan::sweep_for_k;
+use crate::ml::kmeans::{kmeans, KMeansParams};
+use crate::ml::pca::Pca;
+use crate::ml::spectral::{spectral, SpectralParams};
+
+/// Selection methods of paper §4.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    TopN,
+    KMeans,
+    PcaKMeans,
+    Spectral,
+    Hdbscan,
+    DecisionTree,
+}
+
+pub const ALL_METHODS: [Method; 6] = [
+    Method::TopN,
+    Method::KMeans,
+    Method::PcaKMeans,
+    Method::Spectral,
+    Method::Hdbscan,
+    Method::DecisionTree,
+];
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::TopN => "TopN",
+            Method::KMeans => "KMeans",
+            Method::PcaKMeans => "PCA+KMeans",
+            Method::Spectral => "Spectral",
+            Method::Hdbscan => "HDBScan",
+            Method::DecisionTree => "DecisionTree",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Method> {
+        ALL_METHODS.iter().copied().find(|m| m.name().eq_ignore_ascii_case(name))
+    }
+}
+
+/// Select `k` distinct configuration indices to deploy, learning only from
+/// `train` under normalization `norm`.
+pub fn select(
+    method: Method,
+    train: &PerfDataset,
+    norm: Normalization,
+    k: usize,
+    seed: u64,
+) -> Vec<usize> {
+    assert!(k >= 1 && k <= NUM_CONFIGS);
+    let normalized = train.normalized(norm);
+    let mut picks = match method {
+        Method::TopN => top_n(train, k),
+        Method::KMeans => {
+            let fit = kmeans(&normalized, &KMeansParams::new(k.min(normalized.rows)).seed(seed));
+            picks_from_labels(&normalized, &to_opt_labels(&fit.labels), k)
+        }
+        Method::PcaKMeans => {
+            let pca = Pca::fit(&normalized, 15);
+            let scores = pca.transform(&normalized);
+            let fit = kmeans(&scores, &KMeansParams::new(k.min(scores.rows)).seed(seed));
+            picks_from_labels(&normalized, &to_opt_labels(&fit.labels), k)
+        }
+        Method::Spectral => {
+            let fit = spectral(&normalized, &SpectralParams::new(k.min(normalized.rows)).seed(seed));
+            picks_from_labels(&normalized, &to_opt_labels(&fit.labels), k)
+        }
+        Method::Hdbscan => {
+            let (fit, _params) = sweep_for_k(&normalized, k);
+            let labels: Vec<Option<usize>> = fit
+                .labels
+                .iter()
+                .map(|&l| if l < 0 { None } else { Some(l as usize) })
+                .collect();
+            picks_from_labels(&normalized, &labels, k)
+        }
+        Method::DecisionTree => {
+            let features = train.features();
+            let params = TreeParams { max_leaves: Some(k), ..Default::default() };
+            let tree = TreeRegressor::fit(&features, &normalized, &params);
+            let mut picks = Vec::new();
+            for leaf in 0..tree.n_leaves() {
+                push_unique(&mut picks, ranked_configs(&tree.leaf_values[leaf]));
+            }
+            picks
+        }
+    };
+    fill_to_k(&mut picks, train, k);
+    picks.truncate(k);
+    picks
+}
+
+fn to_opt_labels(labels: &[usize]) -> Vec<Option<usize>> {
+    labels.iter().map(|&l| Some(l)).collect()
+}
+
+/// Top-N baseline: the configurations that win the most size sets
+/// (ties broken by total normalized performance).
+fn top_n(train: &PerfDataset, k: usize) -> Vec<usize> {
+    let counts = train.winner_counts();
+    let norm = train.normalized(Normalization::Standard);
+    let mut totals = vec![0.0f64; NUM_CONFIGS];
+    for r in 0..norm.rows {
+        for (t, &v) in totals.iter_mut().zip(norm.row(r)) {
+            *t += v;
+        }
+    }
+    let mut order: Vec<usize> = (0..NUM_CONFIGS).collect();
+    order.sort_by(|&a, &b| {
+        counts[b]
+            .cmp(&counts[a])
+            .then(totals[b].partial_cmp(&totals[a]).unwrap())
+    });
+    order.truncate(k);
+    order
+}
+
+/// For each cluster, rank configurations by the geometric mean of the
+/// members' normalized performance and take the best not yet chosen.
+fn picks_from_labels(
+    normalized: &Matrix,
+    labels: &[Option<usize>],
+    _k: usize,
+) -> Vec<usize> {
+    let n_clusters = labels.iter().flatten().max().map_or(0, |&m| m + 1);
+    let mut picks: Vec<usize> = Vec::new();
+    for cluster in 0..n_clusters {
+        let members: Vec<usize> = (0..normalized.rows)
+            .filter(|&r| labels[r] == Some(cluster))
+            .collect();
+        if members.is_empty() {
+            continue;
+        }
+        let gm = geomean_profile(normalized, &members);
+        push_unique(&mut picks, ranked_configs(&gm));
+    }
+    picks
+}
+
+/// Geometric-mean performance profile of a set of rows.
+fn geomean_profile(normalized: &Matrix, members: &[usize]) -> Vec<f64> {
+    let eps = 1e-6;
+    let mut log_sum = vec![0.0f64; normalized.cols];
+    for &r in members {
+        for (s, &v) in log_sum.iter_mut().zip(normalized.row(r)) {
+            *s += v.max(eps).ln();
+        }
+    }
+    log_sum
+        .into_iter()
+        .map(|s| (s / members.len() as f64).exp())
+        .collect()
+}
+
+/// Configuration indices of `profile` in descending-value order.
+fn ranked_configs(profile: &[f64]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..profile.len()).collect();
+    order.sort_by(|&a, &b| profile[b].partial_cmp(&profile[a]).unwrap());
+    order
+}
+
+/// Push the first entry of `ranked` not already in `picks`.
+fn push_unique(picks: &mut Vec<usize>, ranked: Vec<usize>) {
+    for c in ranked {
+        if !picks.contains(&c) {
+            picks.push(c);
+            return;
+        }
+    }
+}
+
+/// Pad an under-full selection with globally strong configurations (keeps
+/// every method returning exactly k distinct kernels, e.g. when HDBSCAN
+/// finds fewer clusters than requested).
+fn fill_to_k(picks: &mut Vec<usize>, train: &PerfDataset, k: usize) {
+    if picks.len() >= k {
+        return;
+    }
+    let normalized = train.normalized(Normalization::Standard);
+    let all: Vec<usize> = (0..normalized.rows).collect();
+    let gm = geomean_profile(&normalized, &all);
+    for c in ranked_configs(&gm) {
+        if picks.len() >= k {
+            break;
+        }
+        if !picks.contains(&c) {
+            picks.push(c);
+        }
+    }
+}
+
+/// Convenience: the single globally-best configuration (what a CLBlast-style
+/// tuner would deploy — used as the `single-config` comparator backend).
+pub fn single_best(train: &PerfDataset) -> usize {
+    let normalized = train.normalized(Normalization::Standard);
+    let all: Vec<usize> = (0..normalized.rows).collect();
+    argmax(&geomean_profile(&normalized, &all))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::{benchmark_shapes, GemmShape};
+    use crate::devsim::{generate_dataset, profile_by_name};
+    use crate::util::Rng;
+
+    fn small_dataset() -> PerfDataset {
+        let shapes: Vec<GemmShape> =
+            benchmark_shapes().into_iter().step_by(7).collect();
+        generate_dataset(profile_by_name("r9-nano").unwrap(), &shapes)
+    }
+
+    #[test]
+    fn all_methods_return_k_distinct_valid() {
+        let ds = small_dataset();
+        for method in ALL_METHODS {
+            for k in [4usize, 8] {
+                let picks = select(method, &ds, Normalization::Standard, k, 1);
+                assert_eq!(picks.len(), k, "{method:?} k={k}");
+                let set: std::collections::HashSet<_> = picks.iter().collect();
+                assert_eq!(set.len(), k, "{method:?} duplicates");
+                assert!(picks.iter().all(|&c| c < NUM_CONFIGS));
+            }
+        }
+    }
+
+    #[test]
+    fn property_random_datasets_yield_valid_selections() {
+        // Property-style sweep: random synthetic datasets, every method and
+        // normalization must produce k distinct in-range configs.
+        let mut rng = Rng::new(42);
+        for trial in 0..3 {
+            let n = 20 + 5 * trial;
+            let shapes: Vec<GemmShape> = (0..n)
+                .map(|i| GemmShape::new(8 << (i % 6), 16 << (i % 5), 8 << ((i + 2) % 6), 1 + (i % 4)))
+                .collect();
+            let rows: Vec<Vec<f64>> = (0..n)
+                .map(|_| (0..NUM_CONFIGS).map(|_| 1.0 + rng.uniform() * 999.0).collect())
+                .collect();
+            let ds = PerfDataset::new("prop", shapes, Matrix::from_rows(&rows));
+            for method in ALL_METHODS {
+                for norm in crate::dataset::ALL_NORMALIZATIONS {
+                    let picks = select(method, &ds, norm, 5, trial as u64);
+                    assert_eq!(picks.len(), 5, "{method:?}/{norm:?}");
+                    let set: std::collections::HashSet<_> = picks.iter().collect();
+                    assert_eq!(set.len(), 5);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn top_n_matches_winner_counts() {
+        let ds = small_dataset();
+        let picks = select(Method::TopN, &ds, Normalization::Standard, 4, 0);
+        let counts = ds.winner_counts();
+        // Every pick must have a count >= the best unpicked count (allowing
+        // tie-break reordering).
+        let min_picked = picks.iter().map(|&c| counts[c]).min().unwrap();
+        let max_unpicked = (0..NUM_CONFIGS)
+            .filter(|c| !picks.contains(c))
+            .map(|c| counts[c])
+            .max()
+            .unwrap();
+        assert!(
+            min_picked >= max_unpicked,
+            "TopN picked count {min_picked} < unpicked {max_unpicked}"
+        );
+    }
+
+    #[test]
+    fn single_best_is_strong() {
+        let ds = small_dataset();
+        let best = single_best(&ds);
+        // The single best config must beat a random config on geomean.
+        let norm = ds.normalized(Normalization::Standard);
+        let all: Vec<usize> = (0..norm.rows).collect();
+        let gm = geomean_profile(&norm, &all);
+        assert!(gm[best] >= gm[17]);
+        assert!(gm[best] >= gm[333]);
+    }
+
+    #[test]
+    fn ml_methods_beat_topn_at_small_k() {
+        // The paper's headline (§4.3): clustering beats Top-N for small k.
+        let shapes: Vec<GemmShape> =
+            benchmark_shapes().into_iter().step_by(2).collect();
+        let ds = generate_dataset(profile_by_name("r9-nano").unwrap(), &shapes);
+        let split = ds.split(0.8, 7);
+        let train = ds.subset(&split.train);
+        let test = ds.subset(&split.test);
+        let topn = select(Method::TopN, &train, Normalization::Standard, 6, 1);
+        let km = select(Method::KMeans, &train, Normalization::Standard, 6, 1);
+        let p_topn = achievable_percent(&test, &topn);
+        let p_km = achievable_percent(&test, &km);
+        assert!(
+            p_km > p_topn - 2.0,
+            "KMeans {p_km:.1}% should not trail TopN {p_topn:.1}% badly"
+        );
+    }
+}

@@ -1,0 +1,84 @@
+//! Deterministic synthetic-buffer generator, bit-identical to
+//! `python/compile/model.py::fill_buffer`.
+//!
+//! The Rust runtime and the Python build pipeline both need the *same*
+//! synthetic weights/inputs so that numerics can be cross-checked between a
+//! layer artifact executed via PJRT and the JAX reference — without shipping
+//! hundreds of megabytes of weight files.
+
+/// xorshift32 stream seeded per-buffer; values uniform in [-0.5, 0.5).
+pub fn fill_buffer(seed: u32, count: usize) -> Vec<f32> {
+    let mut state = (seed as u64).wrapping_mul(2654435761) as u32;
+    if state == 0 {
+        state = 88172645;
+    }
+    let mut out = Vec::with_capacity(count);
+    let mut x = state;
+    for _ in 0..count {
+        x ^= x << 13;
+        x ^= x >> 17;
+        x ^= x << 5;
+        out.push((x as f64 / 4294967296.0 - 0.5) as f32);
+    }
+    out
+}
+
+/// Synthetic layer weights matching `model.py::layer_weights`: `fill_buffer`
+/// scaled by 2/sqrt(fan_in); bias unscaled from `seed + 1`.
+pub fn layer_weights(seed: u32, fan_in: usize, fan_out: usize) -> (Vec<f32>, Vec<f32>) {
+    let scale = 2.0 / (fan_in as f32).sqrt();
+    let w = fill_buffer(seed, fan_in * fan_out)
+        .into_iter()
+        .map(|v| v * scale)
+        .collect();
+    let b = fill_buffer(seed.wrapping_add(1), fan_out);
+    (w, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn golden_values_match_python() {
+        // Mirrors python/tests/test_model.py::test_fill_buffer_golden.
+        let buf = fill_buffer(7, 4);
+        let mut x: u32 = ((7u64 * 2654435761) % 4294967296) as u32;
+        let mut want = Vec::new();
+        for _ in 0..4 {
+            x ^= x << 13;
+            x ^= x >> 17;
+            x ^= x << 5;
+            want.push((x as f64 / 4294967296.0 - 0.5) as f32);
+        }
+        assert_eq!(buf, want);
+    }
+
+    #[test]
+    fn deterministic_and_bounded() {
+        let a = fill_buffer(123, 1000);
+        assert_eq!(a, fill_buffer(123, 1000));
+        assert!(a.iter().all(|&v| (-0.5..0.5).contains(&v)));
+        let std = {
+            let mean: f32 = a.iter().sum::<f32>() / 1000.0;
+            (a.iter().map(|v| (v - mean).powi(2)).sum::<f32>() / 1000.0).sqrt()
+        };
+        assert!(std > 0.2, "std={std}");
+    }
+
+    #[test]
+    fn zero_seed_not_stuck() {
+        let buf = fill_buffer(0, 8);
+        assert!(buf.iter().any(|&v| v != buf[0]));
+    }
+
+    #[test]
+    fn layer_weights_scaled() {
+        let (w, b) = layer_weights(7, 100, 10);
+        assert_eq!(w.len(), 1000);
+        assert_eq!(b.len(), 10);
+        // 2/sqrt(100) = 0.2 scale keeps |w| < 0.1.
+        assert!(w.iter().all(|&v| v.abs() <= 0.1 + 1e-6));
+        assert!(b.iter().any(|&v| v.abs() > 0.1));
+    }
+}

@@ -1,0 +1,18 @@
+//! Cross-cutting substrates: deterministic RNG, the Python-mirrored buffer
+//! generator, a JSON codec, console tables and timing statistics.
+//!
+//! These exist because the offline build environment vendors no serde/clap/
+//! criterion-style crates — and because the paper's pipeline must be fully
+//! reproducible from a single seed.
+
+pub mod fill;
+pub mod json;
+pub mod rng;
+pub mod table;
+pub mod timing;
+
+pub use fill::fill_buffer;
+pub use json::Json;
+pub use rng::Rng;
+pub use table::Table;
+pub use timing::Stats;

@@ -1,0 +1,119 @@
+//! Measurement utilities shared by the bench harness and the experiment
+//! drivers: robust summary statistics over repeated timings.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics over a set of per-iteration timings.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Stats {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+}
+
+impl Stats {
+    pub fn from_secs(samples: &[f64]) -> Stats {
+        assert!(!samples.is_empty(), "Stats::from_secs on empty sample set");
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n as f64;
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| {
+            let idx = ((n as f64 - 1.0) * p).round() as usize;
+            sorted[idx]
+        };
+        Stats {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50: pct(0.5),
+            p95: pct(0.95),
+        }
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean * 1e3
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        self.mean * 1e6
+    }
+}
+
+/// Time one closure invocation in seconds.
+pub fn time_once<F: FnOnce()>(f: F) -> f64 {
+    let t0 = Instant::now();
+    f();
+    t0.elapsed().as_secs_f64()
+}
+
+/// The paper's measurement protocol (§3.1): a few warmup runs, then batches
+/// of iterations timed together until `budget` wall-clock is spent, yielding
+/// a per-iteration mean per batch.
+pub fn measure<F: FnMut()>(mut f: F, warmup: usize, budget: Duration) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    // Calibrate batch size so one batch is ~budget/10.
+    let once = time_once(&mut f).max(1e-9);
+    let per_batch = ((budget.as_secs_f64() / 10.0 / once).ceil() as usize).clamp(1, 10_000);
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < budget || samples.is_empty() {
+        let t0 = Instant::now();
+        for _ in 0..per_batch {
+            f();
+        }
+        samples.push(t0.elapsed().as_secs_f64() / per_batch as f64);
+        if samples.len() >= 200 {
+            break;
+        }
+    }
+    Stats::from_secs(&samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let s = Stats::from_secs(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+        assert!((s.std - (2.0f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn measure_counts_iterations() {
+        let mut count = 0u64;
+        let stats = measure(
+            || {
+                count += 1;
+                std::hint::black_box(count);
+            },
+            3,
+            Duration::from_millis(20),
+        );
+        assert!(count > 3);
+        assert!(stats.mean >= 0.0);
+        assert!(stats.n >= 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_stats_panics() {
+        Stats::from_secs(&[]);
+    }
+}

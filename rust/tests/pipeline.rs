@@ -1,0 +1,149 @@
+//! Integration tests: the full tuning pipeline (simulate -> select ->
+//! classify -> codegen) and the runtime/coordinator against real artifacts.
+
+use std::path::PathBuf;
+
+use kernelsel::classify::codegen::CompiledTree;
+use kernelsel::classify::{ClassifierKind, KernelClassifier};
+use kernelsel::coordinator::{BatcherConfig, Coordinator, SelectorPolicy};
+use kernelsel::dataset::{
+    benchmark_shapes, config_by_name, GemmShape, Normalization, PerfDataset,
+};
+use kernelsel::devsim::{generate_dataset, profile_by_name};
+use kernelsel::selection::{achievable_percent, achieved_percent, select, Method};
+use kernelsel::util::fill_buffer;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn small_dataset(device: &str) -> PerfDataset {
+    let shapes: Vec<GemmShape> = benchmark_shapes().into_iter().step_by(3).collect();
+    generate_dataset(profile_by_name(device).unwrap(), &shapes)
+}
+
+#[test]
+fn full_tuning_pipeline_simulate_select_classify_codegen() {
+    let ds = small_dataset("r9-nano");
+    let split = ds.split(0.8, 11);
+    let train = ds.subset(&split.train);
+    let test = ds.subset(&split.test);
+
+    // Select.
+    let deployed = select(Method::PcaKMeans, &train, Normalization::Standard, 8, 11);
+    let oracle = achievable_percent(&test, &deployed);
+    assert!(oracle > 80.0, "oracle only {oracle:.1}%");
+
+    // Classify.
+    let clf = KernelClassifier::fit(ClassifierKind::DecisionTreeB, &train, &deployed, 11);
+    let achieved = achieved_percent(&test, &clf.choices(&test));
+    assert!(achieved > 0.7 * oracle, "classifier {achieved:.1}% vs oracle {oracle:.1}%");
+
+    // Codegen round-trip.
+    let tree = CompiledTree::compile(&clf).unwrap();
+    let text = tree.serialize();
+    let back = CompiledTree::deserialize(&text).unwrap();
+    for s in &test.shapes {
+        assert_eq!(back.predict_config(&s.features()), clf.predict_config(&s.features()));
+    }
+}
+
+#[test]
+fn dataset_csv_roundtrip_through_disk() {
+    let ds = small_dataset("hd530");
+    let tmp = std::env::temp_dir().join("kernelsel_test_dataset.csv");
+    ds.save(&tmp).unwrap();
+    let back = PerfDataset::load("hd530", &tmp).unwrap();
+    assert_eq!(back.shapes, ds.shapes);
+    assert_eq!(back.n_shapes(), ds.n_shapes());
+    std::fs::remove_file(&tmp).ok();
+}
+
+#[test]
+fn coordinator_serves_tuned_policy_against_real_artifacts() {
+    let manifest = kernelsel::runtime::Manifest::load(&artifacts_dir()).unwrap();
+    let ds = small_dataset("i7-6700k");
+    let deployed: Vec<usize> = manifest
+        .deployed
+        .iter()
+        .map(|n| config_by_name(n).unwrap().index())
+        .collect();
+    let clf = KernelClassifier::fit(ClassifierKind::DecisionTreeB, &ds, &deployed, 3);
+    let policy = SelectorPolicy::Tree(CompiledTree::compile(&clf).unwrap());
+    let coord =
+        Coordinator::start(artifacts_dir(), policy, BatcherConfig::default()).unwrap();
+
+    let shapes = [
+        GemmShape::new(128, 128, 128, 1),
+        GemmShape::new(1024, 27, 64, 1),
+        GemmShape::new(512, 784, 512, 1),
+    ];
+    let mut rxs = Vec::new();
+    for (i, s) in shapes.iter().enumerate() {
+        let lhs = fill_buffer(i as u32, s.batch * s.m * s.k);
+        let rhs = fill_buffer((i + 9) as u32, s.batch * s.k * s.n);
+        rxs.push((*s, coord.submit(*s, lhs, rhs)));
+    }
+    for (s, rx) in rxs {
+        let resp = rx.recv().expect("response");
+        let out = resp.result.expect("result");
+        assert_eq!(out.len(), s.batch * s.m * s.n, "{s:?}");
+        // Tuned policy must be choosing deployed configs (or falling back
+        // to another deployed config at that bucket).
+        if let Some(cfg) = resp.config_used {
+            assert!(deployed.contains(&cfg));
+        }
+    }
+    let metrics = coord.stop();
+    assert_eq!(metrics.requests, 3);
+    assert_eq!(metrics.failures, 0);
+}
+
+#[test]
+fn selection_quality_ordering_holds_on_both_paper_devices() {
+    // The headline Fig 5/6 shape: ML selection at k=8 stays close to or
+    // above TopN, and oracle percentages rise with k.
+    for device in ["r9-nano", "i7-6700k"] {
+        let ds = small_dataset(device);
+        let split = ds.split(0.8, 5);
+        let train = ds.subset(&split.train);
+        let test = ds.subset(&split.test);
+        let p4 = achievable_percent(
+            &test,
+            &select(Method::KMeans, &train, Normalization::Standard, 4, 5),
+        );
+        let p12 = achievable_percent(
+            &test,
+            &select(Method::KMeans, &train, Normalization::Standard, 12, 5),
+        );
+        assert!(p12 >= p4 - 1.5, "{device}: k=12 {p12:.1}% < k=4 {p4:.1}%");
+        assert!(p12 > 85.0, "{device}: k=12 only {p12:.1}%");
+    }
+}
+
+#[test]
+fn deploy_json_emittable_and_reparseable() {
+    // The select --emit-deploy flow: rust picks kernels, python consumes.
+    let ds = small_dataset("mali-g71");
+    let deployed = select(Method::KMeans, &ds, Normalization::Standard, 8, 1);
+    let names: Vec<String> = deployed
+        .iter()
+        .map(|&c| {
+            format!("\"{}\"", kernelsel::dataset::config_by_index(c).name())
+        })
+        .collect();
+    let json = format!(
+        "{{\"deployed\": [{}], \"single_best\": \"{}\"}}",
+        names.join(","),
+        kernelsel::dataset::config_by_index(
+            kernelsel::selection::single_best(&ds)
+        )
+        .name()
+    );
+    let parsed = kernelsel::util::json::parse(&json).unwrap();
+    let arr = parsed.get("deployed").unwrap().as_arr().unwrap();
+    assert_eq!(arr.len(), 8);
+    for v in arr {
+        assert!(config_by_name(v.as_str().unwrap()).is_some());
+    }
+}
