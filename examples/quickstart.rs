@@ -15,10 +15,10 @@ use kernelsel::dataset::config_by_name;
 use kernelsel::runtime::{Manifest, Runtime};
 use kernelsel::util::fill_buffer;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), String> {
     let dir = PathBuf::from("artifacts");
     let runtime = Runtime::new(&dir)?;
-    let manifest = Manifest::load(&dir).map_err(anyhow::Error::msg)?;
+    let manifest = Manifest::load(&dir)?;
     println!(
         "platform: {} | {} artifacts | deployed kernels: {:?}",
         runtime.platform(),

@@ -1,11 +1,15 @@
-//! Serving demo: drive the coordinator with concurrent client threads and
-//! report latency/throughput — the library as a GEMM-serving microservice.
+//! Serving demo: drive the sharded executor pool with concurrent client
+//! threads and report latency/throughput — the library as a GEMM-serving
+//! microservice.
 //!
-//!     make artifacts && cargo run --release --example serve
+//!     cargo run --release --example serve -- --shards 4
 //!
-//! Clients submit mixed-shape GEMM requests; the executor thread resolves
-//! each to a deployed kernel via the decision-tree selector, batches
-//! same-executable requests, and runs them on PJRT.
+//! Clients submit mixed-shape GEMM requests; the submit path resolves each
+//! to a deployed kernel via the memoized decision-tree selector, routes it
+//! by shape affinity to one of N executor shards, and each shard batches
+//! same-executable requests on its own backend. Runs out of the box on the
+//! SimBackend (no artifacts, no native XLA needed); per-shard batch and
+//! fallback metrics print at shutdown.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -13,18 +17,31 @@ use std::time::Instant;
 
 use kernelsel::classify::codegen::CompiledTree;
 use kernelsel::classify::{ClassifierKind, KernelClassifier};
-use kernelsel::coordinator::{BatcherConfig, Coordinator, SelectorPolicy};
+use kernelsel::coordinator::{Coordinator, PoolConfig, SelectorPolicy};
 use kernelsel::dataset::{benchmark_shapes, config_by_name, GemmShape};
 use kernelsel::devsim::{generate_dataset, profile_by_name};
+use kernelsel::engine::EngineKind;
 use kernelsel::runtime::Manifest;
 use kernelsel::util::fill_buffer;
 
 const CLIENTS: usize = 4;
 const REQUESTS_PER_CLIENT: usize = 24;
 
+fn flag(name: &str, default: usize) -> usize {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
 fn main() -> Result<(), String> {
+    let shards = flag("--shards", 4);
     let dir = PathBuf::from("artifacts");
-    let manifest = Manifest::load(&dir)?;
+    // Real artifacts when `make artifacts` has run; synthetic deployment
+    // (served by the SimBackend) otherwise.
+    let manifest = Manifest::load_or_synthetic(&dir);
 
     // Tuned policy: decision tree over the shipped deployment.
     let ds = generate_dataset(profile_by_name("i7-6700k").unwrap(), &benchmark_shapes());
@@ -36,11 +53,17 @@ fn main() -> Result<(), String> {
     let clf = KernelClassifier::fit(ClassifierKind::DecisionTreeB, &ds, &deployed, 7);
     let policy = SelectorPolicy::Tree(CompiledTree::compile(&clf).unwrap());
 
-    println!("starting coordinator with policy={} ...", policy.name());
-    let coord = Arc::new(Coordinator::start(dir, policy, BatcherConfig::default())?);
+    let pool = PoolConfig { shards, engine: EngineKind::default(), ..PoolConfig::default() };
+    println!(
+        "starting coordinator: {} shard(s), policy={}, backend={}",
+        shards,
+        policy.name(),
+        pool.engine.name()
+    );
+    let coord = Arc::new(Coordinator::start_pool(dir, policy, pool)?);
 
     // The shape mix a DNN-serving workload would issue (vgg16-tiny GEMMs +
-    // generic buckets — all shipped as artifacts).
+    // generic buckets — all shipped as artifacts in both manifests).
     let shapes = [
         GemmShape::new(128, 128, 128, 1),
         GemmShape::new(512, 784, 512, 1),
@@ -49,7 +72,7 @@ fn main() -> Result<(), String> {
         GemmShape::new(256, 576, 128, 1),
     ];
 
-    // Warm the executable cache (first-touch compiles would otherwise
+    // Warm the executable caches (first-touch compiles would otherwise
     // dominate the latency distribution — see EXPERIMENTS.md §Perf).
     for s in shapes {
         let lhs = fill_buffer(1, s.batch * s.m * s.k);
@@ -90,12 +113,12 @@ fn main() -> Result<(), String> {
     let wall = t0.elapsed().as_secs_f64();
     let total = CLIENTS * REQUESTS_PER_CLIENT;
 
-    let metrics = Arc::try_unwrap(coord).ok().expect("sole owner").stop();
+    let report = Arc::try_unwrap(coord).ok().expect("sole owner").stop_detailed();
     println!(
         "\n{ok}/{total} requests ok in {wall:.3}s -> {:.1} req/s, mean latency {:.2} ms",
         total as f64 / wall,
         latency_sum / ok.max(1) as f64 * 1e3
     );
-    println!("coordinator metrics: {}", metrics.summary());
+    println!("{}", report.summary());
     Ok(())
 }

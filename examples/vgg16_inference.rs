@@ -21,10 +21,10 @@ use kernelsel::util::fill_buffer;
 
 const ITERS: usize = 8;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), String> {
     let dir = PathBuf::from("artifacts");
     let runtime = Runtime::new(&dir)?;
-    let manifest = Manifest::load(&dir).map_err(anyhow::Error::msg)?;
+    let manifest = Manifest::load(&dir)?;
     let network = std::env::args().nth(1).unwrap_or_else(|| "vgg16-tiny".into());
 
     // Tune the runtime selector: benchmark data -> decision tree over the
@@ -34,8 +34,7 @@ fn main() -> anyhow::Result<()> {
     let measured = std::path::Path::new("results/measured_cpu.csv");
     let ds = if measured.exists() {
         println!("tuning selector on measured local-CPU data ...");
-        kernelsel::dataset::PerfDataset::load("local-cpu", measured)
-            .map_err(anyhow::Error::msg)?
+        kernelsel::dataset::PerfDataset::load("local-cpu", measured)?
     } else {
         println!("tuning selector on simulated i7-6700k data (run `kernelsel collect` for measured tuning) ...");
         generate_dataset(profile_by_name("i7-6700k").unwrap(), &benchmark_shapes())

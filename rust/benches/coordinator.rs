@@ -1,11 +1,15 @@
 //! Bench: coordinator serving throughput and latency under different
 //! batching configurations and selector policies.
+//!
+//! Runs on the SimBackend (synthetic manifest fallback) so it needs no
+//! artifacts and no native XLA; pass `--features pjrt` plus real artifacts
+//! to exercise the native path via `benches/runtime_exec.rs` instead.
 
 use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use kernelsel::coordinator::{BatcherConfig, Coordinator, SelectorPolicy};
+use kernelsel::coordinator::{BatcherConfig, Coordinator, PoolConfig, SelectorPolicy};
 use kernelsel::dataset::{config_by_name, GemmShape};
 use kernelsel::runtime::Manifest;
 use kernelsel::util::fill_buffer;
@@ -15,7 +19,14 @@ const REQUESTS_PER_CLIENT: usize = 16;
 
 fn run_once(policy: SelectorPolicy, cfg: BatcherConfig, label: &str) {
     let dir = PathBuf::from("artifacts");
-    let coord = Arc::new(Coordinator::start(dir, policy, cfg).expect("start"));
+    let coord = Arc::new(
+        Coordinator::start_pool(
+            dir,
+            policy,
+            PoolConfig { batcher: cfg, ..PoolConfig::default() },
+        )
+        .expect("start"),
+    );
     let shapes = [
         GemmShape::new(128, 128, 128, 1),
         GemmShape::new(1024, 27, 64, 1),
@@ -63,7 +74,7 @@ fn run_once(policy: SelectorPolicy, cfg: BatcherConfig, label: &str) {
 }
 
 fn main() {
-    let manifest = Manifest::load(&PathBuf::from("artifacts")).expect("manifest");
+    let manifest = Manifest::load_or_synthetic(&PathBuf::from("artifacts"));
     let single = config_by_name(&manifest.single_best).unwrap().index();
 
     println!("== coordinator throughput ({CLIENTS} clients x {REQUESTS_PER_CLIENT} reqs) ==");

@@ -1,0 +1,111 @@
+//! Bench: executor-pool scaling — multi-shard vs single-shard throughput on
+//! a mixed-shape workload (the ISSUE-1 acceptance scenario).
+//!
+//! Eight client threads issue a five-bucket shape mix; the pool is swept
+//! over shard counts. Because requests route by shape affinity, every
+//! artifact's executable cache lives on exactly one shard at any width, so
+//! scaling comes purely from parallel execution. Per-shard batch/fallback
+//! metrics are reported at each shutdown.
+//!
+//!     cargo bench --bench coordinator_throughput
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use kernelsel::classify::codegen::CompiledTree;
+use kernelsel::classify::{ClassifierKind, KernelClassifier};
+use kernelsel::coordinator::{Coordinator, PoolConfig, SelectorPolicy};
+use kernelsel::dataset::{benchmark_shapes, config_by_name, GemmShape};
+use kernelsel::devsim::{generate_dataset, profile_by_name};
+use kernelsel::runtime::Manifest;
+use kernelsel::util::fill_buffer;
+
+const CLIENTS: usize = 8;
+const REQUESTS_PER_CLIENT: usize = 8;
+
+fn tuned_policy(manifest: &Manifest) -> SelectorPolicy {
+    let ds = generate_dataset(
+        profile_by_name("i7-6700k").unwrap(),
+        &benchmark_shapes().into_iter().step_by(3).collect::<Vec<_>>(),
+    );
+    let deployed: Vec<usize> = manifest
+        .deployed
+        .iter()
+        .map(|n| config_by_name(n).unwrap().index())
+        .collect();
+    let clf = KernelClassifier::fit(ClassifierKind::DecisionTreeB, &ds, &deployed, 7);
+    SelectorPolicy::Tree(CompiledTree::compile(&clf).unwrap())
+}
+
+/// Run the mixed-shape workload on an N-shard pool; return req/s.
+fn run_width(shards: usize, policy: SelectorPolicy) -> f64 {
+    let coord = Arc::new(
+        Coordinator::start_pool(
+            PathBuf::from("artifacts"),
+            policy,
+            PoolConfig { shards, ..PoolConfig::default() },
+        )
+        .expect("start pool"),
+    );
+    let shapes = [
+        GemmShape::new(128, 128, 128, 1),
+        GemmShape::new(512, 784, 512, 1),
+        GemmShape::new(64, 2304, 128, 1),
+        GemmShape::new(1024, 27, 64, 1),
+        GemmShape::new(256, 576, 128, 1),
+    ];
+    // Warm every executable cache so compile cost stays out of the sweep.
+    for s in shapes {
+        let lhs = fill_buffer(1, s.batch * s.m * s.k);
+        let rhs = fill_buffer(2, s.batch * s.k * s.n);
+        let _ = coord.call(s, lhs, rhs);
+    }
+
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..CLIENTS {
+        let coord = coord.clone();
+        joins.push(std::thread::spawn(move || {
+            for i in 0..REQUESTS_PER_CLIENT {
+                let s = shapes[(c + i) % shapes.len()];
+                let lhs = fill_buffer((c * 31 + i) as u32, s.batch * s.m * s.k);
+                let rhs = fill_buffer((c * 31 + i + 17) as u32, s.batch * s.k * s.n);
+                let resp = coord.call(s, lhs, rhs).expect("call");
+                assert!(resp.result.is_ok(), "{:?}", resp.result.err());
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let total = CLIENTS * REQUESTS_PER_CLIENT;
+
+    let report = Arc::try_unwrap(coord).ok().expect("sole owner").stop_detailed();
+    let reqs = total as f64 / wall;
+    println!("-- {shards} shard(s): {reqs:>8.1} req/s --");
+    println!("{}", report.summary());
+    reqs
+}
+
+fn main() {
+    let manifest = Manifest::load_or_synthetic(&PathBuf::from("artifacts"));
+    println!(
+        "== executor-pool scaling ({CLIENTS} clients x {REQUESTS_PER_CLIENT} reqs, \
+         tuned-tree policy, sim backend) ==\n"
+    );
+    let mut results = Vec::new();
+    for shards in [1usize, 2, 4] {
+        results.push((shards, run_width(shards, tuned_policy(&manifest))));
+        println!();
+    }
+    let (_, single) = results[0];
+    for &(shards, reqs) in &results[1..] {
+        println!(
+            "{shards} shards vs 1: {:.2}x throughput{}",
+            reqs / single,
+            if reqs >= single { "" } else { "  (REGRESSION)" }
+        );
+    }
+}

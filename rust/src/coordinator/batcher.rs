@@ -155,6 +155,21 @@ mod tests {
     }
 
     #[test]
+    fn next_deadline_zero_once_oldest_exceeds_max_wait() {
+        let mut b: Batcher<u32> = Batcher::new(cfg(100, 1));
+        assert!(b.next_deadline().is_none(), "idle batcher has no deadline");
+        b.push("a".into(), 1);
+        std::thread::sleep(Duration::from_millis(3));
+        // The oldest request is already past its wait budget: the deadline
+        // must saturate at zero (not underflow / panic), so the executor's
+        // poll returns immediately and the group drains.
+        assert_eq!(b.next_deadline(), Some(Duration::ZERO));
+        let (_, group) = b.drain_due().expect("expired group drains");
+        assert_eq!(group.len(), 1);
+        assert!(b.next_deadline().is_none());
+    }
+
+    #[test]
     fn not_due_when_fresh_and_underfull() {
         let mut b: Batcher<u32> = Batcher::new(cfg(10, 10_000));
         b.push("a".into(), 1);

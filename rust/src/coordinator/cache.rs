@@ -1,0 +1,164 @@
+//! Memoized selector hot path: a bounded shape -> resolved-artifact cache.
+//!
+//! The registry's resolution (decision-tree walk + deployed-set
+//! reconciliation) is cheap but not free, and it sits on every request's
+//! submit path — which, with the sharded pool, runs on *client* threads.
+//! Serving traffic is heavily repetitive in shape (a model's GEMMs recur
+//! every inference), so a small FIFO-evicted map in front of
+//! [`KernelRegistry::resolve`] turns the hot path into one hash lookup and
+//! an `Arc` clone.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::coordinator::registry::{KernelRegistry, Resolution};
+use crate::dataset::GemmShape;
+use crate::runtime::ArtifactMeta;
+
+/// A successful registry resolution, shared between the cache, the
+/// shape-affinity router and the shard that executes the request.
+#[derive(Clone, Debug)]
+pub struct ResolvedKernel {
+    pub meta: ArtifactMeta,
+    pub resolution: Resolution,
+}
+
+pub struct ResolutionCache {
+    cap: usize,
+    /// RwLock, not Mutex: the steady state is ~100% hits, and a hit only
+    /// needs a read guard — concurrent submitters must not serialize on
+    /// the map once every bucket is resolved.
+    inner: RwLock<Inner>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+#[derive(Default)]
+struct Inner {
+    map: HashMap<GemmShape, Arc<ResolvedKernel>>,
+    /// Insertion order for FIFO eviction (shapes are never re-inserted, so
+    /// FIFO == LRU-by-first-touch, which is plenty for bucketed traffic).
+    order: VecDeque<GemmShape>,
+}
+
+impl ResolutionCache {
+    pub fn new(capacity: usize) -> ResolutionCache {
+        ResolutionCache {
+            cap: capacity.max(1),
+            inner: RwLock::new(Inner::default()),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+        }
+    }
+
+    /// Cached resolution, or walk the registry and memoize the result.
+    /// Failures are not cached: unknown shapes are expected to be rare and
+    /// should re-report the registry's (possibly changing) error.
+    pub fn resolve(
+        &self,
+        registry: &KernelRegistry,
+        shape: &GemmShape,
+    ) -> Result<Arc<ResolvedKernel>, String> {
+        if let Some(hit) = self.get(shape) {
+            return Ok(hit);
+        }
+        let (meta, resolution) = registry.resolve(shape)?;
+        let resolved = Arc::new(ResolvedKernel { meta: meta.clone(), resolution });
+        self.insert(*shape, resolved.clone());
+        Ok(resolved)
+    }
+
+    pub fn get(&self, shape: &GemmShape) -> Option<Arc<ResolvedKernel>> {
+        let inner = self.inner.read().unwrap();
+        match inner.map.get(shape) {
+            Some(r) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(r.clone())
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    pub fn insert(&self, shape: GemmShape, resolved: Arc<ResolvedKernel>) {
+        let mut inner = self.inner.write().unwrap();
+        if inner.map.insert(shape, resolved).is_none() {
+            inner.order.push_back(shape);
+            while inner.order.len() > self.cap {
+                if let Some(evict) = inner.order.pop_front() {
+                    inner.map.remove(&evict);
+                }
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.read().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// (hits, misses) since construction.
+    pub fn stats(&self) -> (usize, usize) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::selector::SelectorPolicy;
+    use crate::runtime::Manifest;
+
+    fn registry() -> KernelRegistry {
+        KernelRegistry::new(Manifest::synthetic(), SelectorPolicy::Xla)
+    }
+
+    #[test]
+    fn memoizes_resolutions() {
+        let reg = registry();
+        let cache = ResolutionCache::new(16);
+        let shape = GemmShape::new(128, 128, 128, 1);
+        let a = cache.resolve(&reg, &shape).unwrap();
+        let b = cache.resolve(&reg, &shape).unwrap();
+        assert_eq!(a.meta.path, b.meta.path);
+        assert!(Arc::ptr_eq(&a, &b), "second lookup must be the cached Arc");
+        let (hits, misses) = cache.stats();
+        assert_eq!((hits, misses), (1, 1));
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn bounded_by_capacity_fifo() {
+        let reg = registry();
+        let cache = ResolutionCache::new(2);
+        let shapes = [
+            GemmShape::new(32, 32, 32, 1),
+            GemmShape::new(64, 64, 64, 1),
+            GemmShape::new(128, 128, 128, 1),
+        ];
+        for s in &shapes {
+            cache.resolve(&reg, s).unwrap();
+        }
+        assert_eq!(cache.len(), 2);
+        // The first-inserted shape was evicted; the later two remain.
+        assert!(cache.get(&shapes[0]).is_none());
+        assert!(cache.get(&shapes[1]).is_some());
+        assert!(cache.get(&shapes[2]).is_some());
+    }
+
+    #[test]
+    fn failures_not_cached() {
+        let reg = registry();
+        let cache = ResolutionCache::new(4);
+        let unknown = GemmShape::new(17, 19, 23, 1);
+        assert!(cache.resolve(&reg, &unknown).is_err());
+        assert!(cache.resolve(&reg, &unknown).is_err());
+        assert_eq!(cache.len(), 0);
+    }
+}

@@ -25,6 +25,33 @@ impl Metrics {
         self.batch_sizes.push(size);
     }
 
+    /// Count how the registry resolved a request (direct hit vs fallback).
+    /// Called once per served request by the executor shard.
+    pub fn record_resolution(&mut self, resolution: &crate::coordinator::registry::Resolution) {
+        use crate::coordinator::registry::Resolution;
+        match resolution {
+            Resolution::Direct => {}
+            Resolution::FallbackConfig => self.fallback_config += 1,
+            Resolution::FallbackXla => self.fallback_xla += 1,
+        }
+    }
+
+    /// Fold another shard's metrics into this one (per-shard aggregation at
+    /// pool shutdown). Latency and batch-size samples are concatenated, so
+    /// distribution stats remain exact across the pool.
+    pub fn merge(&mut self, other: Metrics) {
+        self.requests += other.requests;
+        self.batches += other.batches;
+        self.failures += other.failures;
+        self.fallback_config += other.fallback_config;
+        self.fallback_xla += other.fallback_xla;
+        self.latencies.extend(other.latencies);
+        self.batch_sizes.extend(other.batch_sizes);
+        for (config, count) in other.per_config {
+            *self.per_config.entry(config).or_default() += count;
+        }
+    }
+
     pub fn record_request(&mut self, latency_secs: f64, config: Option<usize>) {
         self.requests += 1;
         self.latencies.push(latency_secs);
@@ -110,5 +137,33 @@ mod tests {
         let m = Metrics::default();
         assert!(m.latency_stats().is_none());
         assert_eq!(m.mean_batch_size(), 0.0);
+    }
+
+    #[test]
+    fn merge_aggregates_everything() {
+        use crate::coordinator::registry::Resolution;
+        let mut a = Metrics::default();
+        a.record_batch(2);
+        a.record_request(0.001, Some(3));
+        a.record_request(0.002, None);
+        a.record_resolution(&Resolution::FallbackXla);
+        a.failures = 1;
+
+        let mut b = Metrics::default();
+        b.record_batch(4);
+        b.record_request(0.004, Some(3));
+        b.record_resolution(&Resolution::FallbackConfig);
+        b.record_resolution(&Resolution::Direct); // no-op
+
+        a.merge(b);
+        assert_eq!(a.requests, 3);
+        assert_eq!(a.batches, 2);
+        assert_eq!(a.failures, 1);
+        assert_eq!(a.fallback_xla, 1);
+        assert_eq!(a.fallback_config, 1);
+        assert_eq!(a.per_config[&3], 2);
+        assert_eq!(a.per_config[&XLA_BACKEND_KEY], 1);
+        assert_eq!(a.latency_stats().unwrap().n, 3);
+        assert_eq!(a.mean_batch_size(), 3.0);
     }
 }

@@ -1,23 +1,30 @@
-//! Layer-3 coordinator: the serving side of the tuned library.
+//! Layer-4 coordinator: the serving side of the tuned library.
 //!
 //! * [`selector`] — the deployed-set + decision-tree runtime selector and
 //!   the end-to-end `tune_selector` pipeline (paper §4 + §5 combined).
+//! * [`cache`] — the memoized selector hot path (bounded shape -> artifact
+//!   resolution cache on the submit path).
 //! * [`registry`] — maps GEMM requests to shipped AOT artifacts.
 //! * [`batcher`] — dynamic request batching by target executable.
-//! * [`server`] — the executor thread + channel front-end.
-//! * [`vgg`] — the VGG16 inference engine of paper §6.
-//! * [`metrics`] — serving statistics.
+//! * [`server`] — the sharded executor pool: shape-affinity router, one
+//!   engine backend + batcher + metrics per shard.
+//! * [`vgg`] — the VGG16 inference engine of paper §6 (`pjrt` feature).
+//! * [`metrics`] — serving statistics with per-shard aggregation.
 
 pub mod batcher;
+pub mod cache;
 pub mod metrics;
 pub mod registry;
 pub mod selector;
 pub mod server;
+#[cfg(feature = "pjrt")]
 pub mod vgg;
 
 pub use batcher::{Batcher, BatcherConfig};
+pub use cache::{ResolutionCache, ResolvedKernel};
 pub use metrics::Metrics;
 pub use registry::{KernelRegistry, Resolution};
 pub use selector::{tune_selector, SelectorPolicy};
-pub use server::{Coordinator, GemmRequest, GemmResponse};
+pub use server::{Coordinator, GemmRequest, GemmResponse, PoolConfig, PoolReport};
+#[cfg(feature = "pjrt")]
 pub use vgg::{LayerTiming, VggEngine};

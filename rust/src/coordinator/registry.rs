@@ -70,11 +70,12 @@ impl KernelRegistry {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::classify::codegen::CompiledTree;
+    use crate::runtime::{ArtifactKind, ArtifactMeta};
     use std::path::PathBuf;
 
     fn registry(policy: SelectorPolicy) -> KernelRegistry {
-        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        KernelRegistry::new(Manifest::load(&dir).unwrap(), policy)
+        KernelRegistry::new(Manifest::synthetic(), policy)
     }
 
     #[test]
@@ -87,7 +88,7 @@ mod tests {
 
     #[test]
     fn resolves_single_config_with_fallback() {
-        // Config index 0 is never in the deployed artifact set, so a Single
+        // Config index 0 is not in the synthetic deployment, so a Single
         // policy for it must fall back at shipped shapes.
         let reg = registry(SelectorPolicy::Single(0));
         let (_, res) = reg.resolve(&GemmShape::new(128, 128, 128, 1)).unwrap();
@@ -116,5 +117,76 @@ mod tests {
         let set: std::collections::HashSet<_> =
             buckets.iter().map(|s| s.label()).collect();
         assert_eq!(set.len(), buckets.len());
+    }
+
+    // --- full fallback-ordering coverage on a hand-built manifest ---------
+
+    fn matmul_meta(config_index: Option<usize>, m: usize, k: usize, n: usize) -> ArtifactMeta {
+        ArtifactMeta {
+            path: format!("test/{config_index:?}/m{m}k{k}n{n}.hlo.txt"),
+            kind: ArtifactKind::Matmul,
+            config_index,
+            config_name: None,
+            m,
+            k,
+            n,
+            b: 1,
+            flops: 2.0 * (m * k * n) as f64,
+            network: None,
+            layer: None,
+            layer_index: None,
+            pool: false,
+            relu: false,
+            inputs: vec![vec![1, m, k], vec![1, k, n]],
+            output: vec![1, m, n],
+        }
+    }
+
+    /// A selector that always proposes deployed config A out of {A, B}: a
+    /// single-leaf decision tree, built through the serialized form.
+    fn always_a_policy(a: usize, b: usize) -> SelectorPolicy {
+        let tree =
+            CompiledTree::deserialize(&format!("deployed {a},{b}\nleaf 0\n")).unwrap();
+        SelectorPolicy::Tree(tree)
+    }
+
+    #[test]
+    fn fallback_ordering_direct_then_config_then_xla_then_error() {
+        let a = crate::dataset::config_by_name("r8a4c4_wg16x16").unwrap().index();
+        let b = crate::dataset::config_by_name("r2a4c8_wg8x32").unwrap().index();
+        // Shape coverage: 8^3 ships A; 64^3 ships only B (+XLA); 32^3 ships
+        // only XLA; 16^3 ships nothing.
+        let manifest = Manifest::from_parts(
+            PathBuf::from("<test>"),
+            vec!["r8a4c4_wg16x16".into(), "r2a4c8_wg8x32".into()],
+            "r8a4c4_wg16x16".into(),
+            vec![
+                matmul_meta(Some(a), 8, 8, 8),
+                matmul_meta(Some(b), 64, 64, 64),
+                matmul_meta(None, 64, 64, 64),
+                matmul_meta(None, 32, 32, 32),
+            ],
+        );
+        let reg = KernelRegistry::new(manifest, always_a_policy(a, b));
+
+        // 1. The proposed config is shipped at the shape: Direct.
+        let (meta, res) = reg.resolve(&GemmShape::new(8, 8, 8, 1)).unwrap();
+        assert_eq!(res, Resolution::Direct);
+        assert_eq!(meta.config_index, Some(a));
+
+        // 2. Proposed config missing, another deployed config shipped:
+        //    FallbackConfig (preferred over the XLA artifact also present).
+        let (meta, res) = reg.resolve(&GemmShape::new(64, 64, 64, 1)).unwrap();
+        assert_eq!(res, Resolution::FallbackConfig);
+        assert_eq!(meta.config_index, Some(b));
+
+        // 3. No deployed config shipped, XLA artifact present: FallbackXla.
+        let (meta, res) = reg.resolve(&GemmShape::new(32, 32, 32, 1)).unwrap();
+        assert_eq!(res, Resolution::FallbackXla);
+        assert_eq!(meta.config_index, None);
+
+        // 4. Nothing shipped at the shape: error.
+        let err = reg.resolve(&GemmShape::new(16, 16, 16, 1)).unwrap_err();
+        assert!(err.contains("no artifact"), "{err}");
     }
 }

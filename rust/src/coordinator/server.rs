@@ -1,19 +1,32 @@
-//! The serving loop: a dedicated executor thread owns the PJRT runtime
-//! (whose handles are not `Send`) and drains a dynamic batcher; any number
-//! of client threads submit GEMM requests over a channel and receive
-//! responses on per-request channels.
+//! The serving loop: a sharded executor pool.
+//!
+//! Any number of client threads submit GEMM requests; the submit path
+//! resolves each to a shipped artifact through the memoized selector cache,
+//! routes it by **shape affinity** (hash of the resolved artifact path) to
+//! one of N executor shards, and receives the response on a per-request
+//! channel. Each shard owns a private [`Backend`] instance (PJRT handles
+//! are not `Send`, so backends are constructed on the shard's own thread
+//! from a Send-able [`EngineKind`] spec), a dynamic [`Batcher`], and its
+//! own [`Metrics`]; affinity routing keeps every executable cache hot on
+//! exactly one shard. At shutdown the per-shard metrics are collected and
+//! merged into a pool-wide total.
 
+use std::collections::hash_map::DefaultHasher;
+use std::hash::{Hash, Hasher};
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::batcher::{Batcher, BatcherConfig};
+use crate::coordinator::batcher::{Batcher, BatcherConfig, Pending};
+use crate::coordinator::cache::{ResolutionCache, ResolvedKernel};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::registry::{KernelRegistry, Resolution};
+use crate::coordinator::registry::KernelRegistry;
 use crate::coordinator::selector::SelectorPolicy;
 use crate::dataset::GemmShape;
-use crate::runtime::{Manifest, Runtime};
+use crate::engine::{Backend, EngineKind};
+use crate::runtime::Manifest;
 
 /// A GEMM request: `lhs` is (b, m, k), `rhs` is (b, k, n), row-major.
 pub struct GemmRequest {
@@ -32,34 +45,166 @@ pub struct GemmResponse {
     pub latency: Duration,
 }
 
+/// Executor-pool configuration.
+#[derive(Clone, Debug)]
+pub struct PoolConfig {
+    /// Number of executor shards (worker threads), each owning a backend.
+    pub shards: usize,
+    /// Which execution backend every shard instantiates.
+    pub engine: EngineKind,
+    pub batcher: BatcherConfig,
+    /// Capacity of the memoized shape -> artifact selector cache.
+    pub selector_cache: usize,
+}
+
+impl Default for PoolConfig {
+    fn default() -> PoolConfig {
+        PoolConfig {
+            shards: 1,
+            engine: EngineKind::default(),
+            batcher: BatcherConfig::default(),
+            selector_cache: 1024,
+        }
+    }
+}
+
+/// Shutdown report: per-shard metrics plus the merged pool totals.
+#[derive(Clone, Debug, Default)]
+pub struct PoolReport {
+    pub per_shard: Vec<Metrics>,
+    pub total: Metrics,
+    /// Selector-cache (hits, misses) over the pool's lifetime.
+    pub cache_hits: usize,
+    pub cache_misses: usize,
+}
+
+impl PoolReport {
+    pub fn summary(&self) -> String {
+        let mut out = format!(
+            "pool: {} shard(s), selector cache {}/{} hits\n  total: {}",
+            self.per_shard.len(),
+            self.cache_hits,
+            self.cache_hits + self.cache_misses,
+            self.total.summary()
+        );
+        for (i, m) in self.per_shard.iter().enumerate() {
+            out.push_str(&format!("\n  shard {i}: {}", m.summary()));
+        }
+        out
+    }
+}
+
 enum Message {
-    Request(GemmRequest, Instant),
+    Request(Job),
     Stop(Sender<Metrics>),
 }
 
-/// Handle to a running coordinator.
-pub struct Coordinator {
+struct Job {
+    req: GemmRequest,
+    t_submit: Instant,
+    resolved: Arc<ResolvedKernel>,
+}
+
+struct Shard {
     tx: Sender<Message>,
     worker: Option<JoinHandle<()>>,
 }
 
+/// Handle to a running executor pool.
+pub struct Coordinator {
+    registry: Arc<KernelRegistry>,
+    cache: ResolutionCache,
+    shards: Vec<Shard>,
+    /// Metrics for requests that never reach a shard (resolution failures).
+    front: Mutex<Metrics>,
+    engine_name: &'static str,
+}
+
 impl Coordinator {
-    /// Start the executor thread.
+    /// Start a single-shard pool with the default engine — the SimBackend,
+    /// or (with the `pjrt` feature) still the SimBackend; pass an explicit
+    /// [`PoolConfig`] to `start_pool` for native execution.
     pub fn start(
         artifacts_dir: PathBuf,
         policy: SelectorPolicy,
         batcher_cfg: BatcherConfig,
     ) -> Result<Coordinator, String> {
-        let (tx, rx) = channel::<Message>();
-        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
-        let worker = std::thread::Builder::new()
-            .name("kernelsel-executor".into())
-            .spawn(move || executor_loop(artifacts_dir, policy, batcher_cfg, rx, ready_tx))
-            .map_err(|e| e.to_string())?;
-        ready_rx
-            .recv()
-            .map_err(|_| "executor died during startup".to_string())??;
-        Ok(Coordinator { tx, worker: Some(worker) })
+        Coordinator::start_pool(
+            artifacts_dir,
+            policy,
+            PoolConfig { batcher: batcher_cfg, ..PoolConfig::default() },
+        )
+    }
+
+    /// Start the executor pool: N shard threads, each constructing its own
+    /// backend instance and reporting readiness before requests flow.
+    pub fn start_pool(
+        artifacts_dir: PathBuf,
+        policy: SelectorPolicy,
+        cfg: PoolConfig,
+    ) -> Result<Coordinator, String> {
+        // The SimBackend reads no artifacts, so a missing manifest falls
+        // back to the synthetic deployment; native backends need the real
+        // one.
+        #[cfg(feature = "pjrt")]
+        let manifest = match &cfg.engine {
+            EngineKind::Sim { .. } => Manifest::load_or_synthetic(&artifacts_dir),
+            EngineKind::Pjrt => Manifest::load(&artifacts_dir)?,
+        };
+        #[cfg(not(feature = "pjrt"))]
+        let manifest = Manifest::load_or_synthetic(&artifacts_dir);
+
+        let registry = Arc::new(KernelRegistry::new(manifest, policy));
+        let n_shards = cfg.shards.max(1);
+        let mut shards = Vec::with_capacity(n_shards);
+        for shard_id in 0..n_shards {
+            let (tx, rx) = channel::<Message>();
+            let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+            let engine = cfg.engine.clone();
+            let batcher_cfg = cfg.batcher.clone();
+            let dir = artifacts_dir.clone();
+            let worker = std::thread::Builder::new()
+                .name(format!("kernelsel-shard-{shard_id}"))
+                .spawn(move || shard_loop(dir, engine, batcher_cfg, rx, ready_tx))
+                .map_err(|e| e.to_string())?;
+            ready_rx
+                .recv()
+                .map_err(|_| format!("shard {shard_id} died during startup"))?
+                .map_err(|e| format!("shard {shard_id}: {e}"))?;
+            shards.push(Shard { tx, worker: Some(worker) });
+        }
+        Ok(Coordinator {
+            registry,
+            cache: ResolutionCache::new(cfg.selector_cache),
+            shards,
+            front: Mutex::new(Metrics::default()),
+            engine_name: cfg.engine.name(),
+        })
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn engine_name(&self) -> &'static str {
+        self.engine_name
+    }
+
+    pub fn registry(&self) -> &KernelRegistry {
+        &self.registry
+    }
+
+    /// Selector-cache (hits, misses) so far.
+    pub fn selector_cache_stats(&self) -> (usize, usize) {
+        self.cache.stats()
+    }
+
+    /// Shape-affinity router: requests resolving to the same artifact land
+    /// on the same shard, keeping its executable cache hot.
+    fn shard_for(&self, artifact: &str) -> usize {
+        let mut h = DefaultHasher::new();
+        artifact.hash(&mut h);
+        (h.finish() as usize) % self.shards.len()
     }
 
     /// Submit a request; the response arrives on the returned receiver.
@@ -70,10 +215,27 @@ impl Coordinator {
         rhs: Vec<f32>,
     ) -> Receiver<GemmResponse> {
         let (resp_tx, resp_rx) = channel();
+        let t_submit = Instant::now();
+        let resolved = match self.cache.resolve(&self.registry, &shape) {
+            Ok(r) => r,
+            Err(e) => {
+                self.front.lock().unwrap().failures += 1;
+                let _ = resp_tx.send(GemmResponse {
+                    result: Err(e),
+                    config_used: None,
+                    artifact: String::new(),
+                    latency: t_submit.elapsed(),
+                });
+                return resp_rx;
+            }
+        };
+        let shard = self.shard_for(&resolved.meta.path);
         let req = GemmRequest { shape, lhs, rhs, respond: resp_tx };
-        // A send failure means the executor is gone; the dropped resp_tx
+        // A send failure means the shard is gone; the dropped resp_tx
         // surfaces as RecvError on the caller side.
-        let _ = self.tx.send(Message::Request(req, Instant::now()));
+        let _ = self.shards[shard]
+            .tx
+            .send(Message::Request(Job { req, t_submit, resolved }));
         resp_rx
     }
 
@@ -89,56 +251,62 @@ impl Coordinator {
             .map_err(|_| "coordinator shut down".to_string())
     }
 
-    /// Stop the executor and collect final metrics.
-    pub fn stop(mut self) -> Metrics {
-        let (mtx, mrx) = channel();
-        let _ = self.tx.send(Message::Stop(mtx));
-        let metrics = mrx.recv().unwrap_or_default();
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
+    /// Stop every shard and return the merged pool metrics.
+    pub fn stop(self) -> Metrics {
+        self.stop_detailed().total
+    }
+
+    /// Stop every shard; return per-shard metrics plus merged totals.
+    pub fn stop_detailed(mut self) -> PoolReport {
+        // Signal all shards first so they drain concurrently, then join.
+        let mut replies = Vec::with_capacity(self.shards.len());
+        for shard in &self.shards {
+            let (mtx, mrx) = channel();
+            let _ = shard.tx.send(Message::Stop(mtx));
+            replies.push(mrx);
         }
-        metrics
+        let mut per_shard = Vec::with_capacity(self.shards.len());
+        for (shard, mrx) in self.shards.iter_mut().zip(replies) {
+            per_shard.push(mrx.recv().unwrap_or_default());
+            if let Some(w) = shard.worker.take() {
+                let _ = w.join();
+            }
+        }
+        let mut total = self.front.lock().map(|m| m.clone()).unwrap_or_default();
+        for m in &per_shard {
+            total.merge(m.clone());
+        }
+        let (cache_hits, cache_misses) = self.cache.stats();
+        PoolReport { per_shard, total, cache_hits, cache_misses }
     }
 }
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        if let Some(w) = self.worker.take() {
-            let (mtx, _mrx) = channel();
-            let _ = self.tx.send(Message::Stop(mtx));
-            let _ = w.join();
+        for shard in &mut self.shards {
+            if let Some(w) = shard.worker.take() {
+                let (mtx, _mrx) = channel();
+                let _ = shard.tx.send(Message::Stop(mtx));
+                let _ = w.join();
+            }
         }
     }
 }
 
-struct Job {
-    req: GemmRequest,
-    t_submit: Instant,
-    config: Option<usize>,
-}
-
-fn executor_loop(
+fn shard_loop(
     artifacts_dir: PathBuf,
-    policy: SelectorPolicy,
+    engine: EngineKind,
     batcher_cfg: BatcherConfig,
     rx: Receiver<Message>,
     ready: Sender<Result<(), String>>,
 ) {
-    let runtime = match Runtime::new(&artifacts_dir) {
-        Ok(rt) => rt,
+    let mut backend = match engine.create(&artifacts_dir) {
+        Ok(b) => b,
         Err(e) => {
-            let _ = ready.send(Err(format!("runtime init: {e}")));
+            let _ = ready.send(Err(format!("backend init: {e}")));
             return;
         }
     };
-    let manifest = match Manifest::load(&artifacts_dir) {
-        Ok(m) => m,
-        Err(e) => {
-            let _ = ready.send(Err(format!("manifest: {e}")));
-            return;
-        }
-    };
-    let registry = KernelRegistry::new(manifest, policy);
     let mut batcher: Batcher<Job> = Batcher::new(batcher_cfg);
     let mut metrics = Metrics::default();
     let _ = ready.send(Ok(()));
@@ -150,28 +318,9 @@ fn executor_loop(
             .next_deadline()
             .unwrap_or(Duration::from_millis(50));
         match rx.recv_timeout(timeout) {
-            Ok(Message::Request(req, t_submit)) => {
-                match registry.resolve(&req.shape) {
-                    Ok((meta, resolution)) => {
-                        match resolution {
-                            Resolution::FallbackConfig => metrics.fallback_config += 1,
-                            Resolution::FallbackXla => metrics.fallback_xla += 1,
-                            Resolution::Direct => {}
-                        }
-                        let artifact = meta.path.clone();
-                        let config = meta.config_index;
-                        batcher.push(artifact, Job { req, t_submit, config });
-                    }
-                    Err(e) => {
-                        metrics.failures += 1;
-                        let _ = req.respond.send(GemmResponse {
-                            result: Err(e),
-                            config_used: None,
-                            artifact: String::new(),
-                            latency: t_submit.elapsed(),
-                        });
-                    }
-                }
+            Ok(Message::Request(job)) => {
+                let artifact = job.resolved.meta.path.clone();
+                batcher.push(artifact, job);
             }
             Ok(Message::Stop(reply)) => {
                 stop_reply = Some(reply);
@@ -182,13 +331,13 @@ fn executor_loop(
         }
         // Serve every batch that is due.
         while let Some((artifact, group)) = batcher.drain_due() {
-            run_batch(&runtime, &artifact, group, &mut metrics);
+            run_batch(backend.as_mut(), &artifact, group, &mut metrics);
         }
     }
 
     // Flush outstanding work before stopping.
     for (artifact, group) in batcher.drain_all() {
-        run_batch(&runtime, &artifact, group, &mut metrics);
+        run_batch(backend.as_mut(), &artifact, group, &mut metrics);
     }
     if let Some(reply) = stop_reply {
         let _ = reply.send(metrics);
@@ -196,34 +345,34 @@ fn executor_loop(
 }
 
 fn run_batch(
-    runtime: &Runtime,
+    backend: &mut dyn Backend,
     artifact: &str,
-    group: Vec<crate::coordinator::batcher::Pending<Job>>,
+    group: Vec<Pending<Job>>,
     metrics: &mut Metrics,
 ) {
     metrics.record_batch(group.len());
-    let exe = runtime.load(artifact);
+    // One prepare per batch: first touch compiles, later batches hit the
+    // backend's executable cache (kept hot by shape-affinity routing).
+    let prepared = match group.first() {
+        Some(p) => backend.prepare(&p.payload.resolved.meta),
+        None => return,
+    };
     for pending in group {
         let job = pending.payload;
-        let (b, m, k, n) =
-            (job.req.shape.batch, job.req.shape.m, job.req.shape.k, job.req.shape.n);
-        let result = match &exe {
-            Ok(exe) => runtime
-                .execute_f32(
-                    exe,
-                    &[(&job.req.lhs, &[b, m, k]), (&job.req.rhs, &[b, k, n])],
-                )
-                .map_err(|e| e.to_string()),
-            Err(e) => Err(e.to_string()),
+        let meta = &job.resolved.meta;
+        let result = match &prepared {
+            Ok(()) => backend.execute(meta, &job.req.shape, &job.req.lhs, &job.req.rhs),
+            Err(e) => Err(e.clone()),
         };
         let latency = job.t_submit.elapsed();
         if result.is_err() {
             metrics.failures += 1;
         }
-        metrics.record_request(latency.as_secs_f64(), job.config);
+        metrics.record_resolution(&job.resolved.resolution);
+        metrics.record_request(latency.as_secs_f64(), meta.config_index);
         let _ = job.req.respond.send(GemmResponse {
             result,
-            config_used: job.config,
+            config_used: meta.config_index,
             artifact: artifact.to_string(),
             latency,
         });
@@ -233,47 +382,57 @@ fn run_batch(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dataset::config_by_name;
+    use crate::engine::sim::host_gemm;
     use crate::util::fill_buffer;
     use std::path::PathBuf;
 
-    fn artifacts() -> PathBuf {
-        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-    }
-
-    fn start_xla() -> Coordinator {
-        Coordinator::start(artifacts(), SelectorPolicy::Xla, BatcherConfig::default())
-            .expect("coordinator start")
+    fn sim_pool(shards: usize, policy: SelectorPolicy) -> Coordinator {
+        Coordinator::start_pool(
+            PathBuf::from("/nonexistent-artifacts"),
+            policy,
+            PoolConfig { shards, ..PoolConfig::default() },
+        )
+        .expect("coordinator start")
     }
 
     #[test]
-    fn serves_single_request() {
-        let coord = start_xla();
-        let shape = GemmShape::new(128, 128, 128, 1);
-        let lhs = fill_buffer(1, 128 * 128);
-        let rhs = fill_buffer(2, 128 * 128);
-        let resp = coord.call(shape, lhs, rhs).unwrap();
+    fn serves_single_request_with_correct_result() {
+        let coord = sim_pool(1, SelectorPolicy::Xla);
+        let shape = GemmShape::new(64, 64, 64, 1);
+        let lhs = fill_buffer(1, 64 * 64);
+        let rhs = fill_buffer(2, 64 * 64);
+        let resp = coord.call(shape, lhs.clone(), rhs.clone()).unwrap();
         let out = resp.result.expect("gemm result");
-        assert_eq!(out.len(), 128 * 128);
-        assert!(out.iter().all(|v| v.is_finite()));
+        assert_eq!(out, host_gemm(&shape, &lhs, &rhs).unwrap());
         let metrics = coord.stop();
         assert_eq!(metrics.requests, 1);
         assert_eq!(metrics.failures, 0);
     }
 
     #[test]
-    fn every_request_answered_exactly_once_under_concurrency() {
-        let coord = std::sync::Arc::new(start_xla());
+    fn every_request_answered_exactly_once_across_shards() {
+        let coord = std::sync::Arc::new(sim_pool(4, SelectorPolicy::Xla));
         let n_threads = 4;
         let per_thread = 6;
+        let shapes = [
+            GemmShape::new(32, 32, 32, 1),
+            GemmShape::new(64, 64, 64, 1),
+            GemmShape::new(64, 64, 64, 4),
+        ];
         let mut joins = Vec::new();
         for t in 0..n_threads {
             let coord = coord.clone();
             joins.push(std::thread::spawn(move || {
-                let shape = GemmShape::new(128, 128, 128, 1);
                 let mut got = 0;
                 for i in 0..per_thread {
-                    let lhs = fill_buffer((t * 100 + i) as u32, 128 * 128);
-                    let rhs = fill_buffer((t * 100 + i + 50) as u32, 128 * 128);
+                    let shape = shapes[(t + i) % shapes.len()];
+                    let lhs =
+                        fill_buffer((t * 100 + i) as u32, shape.batch * shape.m * shape.k);
+                    let rhs = fill_buffer(
+                        (t * 100 + i + 50) as u32,
+                        shape.batch * shape.k * shape.n,
+                    );
                     let rx = coord.submit(shape, lhs, rhs);
                     let resp = rx.recv().expect("response");
                     assert!(resp.result.is_ok());
@@ -284,46 +443,127 @@ mod tests {
         }
         let total: usize = joins.into_iter().map(|j| j.join().unwrap()).sum();
         assert_eq!(total, n_threads * per_thread);
-        let metrics =
-            std::sync::Arc::try_unwrap(coord).ok().expect("sole owner").stop();
-        assert_eq!(metrics.requests, n_threads * per_thread);
-        assert_eq!(metrics.failures, 0);
-        assert!(metrics.mean_batch_size() >= 1.0);
+        let report = std::sync::Arc::try_unwrap(coord)
+            .ok()
+            .expect("sole owner")
+            .stop_detailed();
+        assert_eq!(report.per_shard.len(), 4);
+        assert_eq!(report.total.requests, n_threads * per_thread);
+        assert_eq!(report.total.failures, 0);
+        assert!(report.total.mean_batch_size() >= 1.0);
+        // 3 distinct shapes, many lookups: the memoized selector must hit.
+        // Concurrent first touches can each count a miss (get-then-insert
+        // is not atomic), so the bound is per-thread, not global.
+        let worst_case_misses = 3 * n_threads;
+        assert!(report.cache_hits >= n_threads * per_thread - worst_case_misses);
+        assert_eq!(report.cache_hits + report.cache_misses, n_threads * per_thread);
+    }
+
+    #[test]
+    fn shape_affinity_concentrates_an_artifact_on_one_shard() {
+        let coord = sim_pool(4, SelectorPolicy::Xla);
+        let shape = GemmShape::new(32, 32, 32, 1);
+        for i in 0..8 {
+            let lhs = fill_buffer(i, 32 * 32);
+            let rhs = fill_buffer(i + 9, 32 * 32);
+            coord.call(shape, lhs, rhs).unwrap().result.unwrap();
+        }
+        let report = coord.stop_detailed();
+        let busy: Vec<usize> = report
+            .per_shard
+            .iter()
+            .filter(|m| m.requests > 0)
+            .map(|m| m.requests)
+            .collect();
+        assert_eq!(busy, vec![8], "one shape must be served by exactly one shard");
     }
 
     #[test]
     fn unknown_shape_fails_cleanly() {
-        let coord = start_xla();
+        let coord = sim_pool(2, SelectorPolicy::Xla);
         let resp = coord
             .call(GemmShape::new(17, 19, 23, 1), vec![0.0; 17 * 19], vec![0.0; 19 * 23])
             .unwrap();
         assert!(resp.result.is_err());
         let metrics = coord.stop();
         assert_eq!(metrics.failures, 1);
+        assert_eq!(metrics.requests, 0, "rejected requests never reach a shard");
     }
 
     #[test]
     fn tuned_policy_uses_deployed_config() {
-        let dir = artifacts();
-        let manifest = Manifest::load(&dir).unwrap();
-        let best = crate::dataset::config_by_name(&manifest.single_best)
-            .unwrap()
-            .index();
-        let coord = Coordinator::start(
-            dir,
-            SelectorPolicy::Single(best),
-            BatcherConfig::default(),
-        )
-        .unwrap();
+        let manifest = Manifest::synthetic();
+        let best = config_by_name(&manifest.single_best).unwrap().index();
+        let coord = sim_pool(2, SelectorPolicy::Single(best));
+        let shape = GemmShape::new(128, 128, 128, 1);
         let resp = coord
-            .call(
-                GemmShape::new(128, 128, 128, 1),
-                fill_buffer(1, 128 * 128),
-                fill_buffer(2, 128 * 128),
-            )
+            .call(shape, fill_buffer(1, 128 * 128), fill_buffer(2, 128 * 128))
             .unwrap();
         assert_eq!(resp.config_used, Some(best));
         assert!(resp.result.is_ok());
+        let metrics = coord.stop();
+        assert_eq!(metrics.fallback_config + metrics.fallback_xla, 0);
+    }
+
+    #[test]
+    fn fallback_resolutions_recorded_per_request() {
+        // r1a1c1_wg8x8 is legal but not in the synthetic deployment, so a
+        // Single policy for it must fall back to the XLA artifact at every
+        // shipped bucket — and the shard must count each fallback.
+        let undeployed = config_by_name("r1a1c1_wg8x8").unwrap().index();
+        let coord = sim_pool(2, SelectorPolicy::Single(undeployed));
+        let shape = GemmShape::new(64, 64, 64, 1);
+        for i in 0..3 {
+            let resp = coord
+                .call(shape, fill_buffer(i, 64 * 64), fill_buffer(i + 7, 64 * 64))
+                .unwrap();
+            assert!(resp.result.is_ok());
+            assert_eq!(resp.config_used, None, "served by the XLA comparator");
+        }
+        let metrics = coord.stop();
+        assert_eq!(metrics.fallback_xla, 3);
+        assert_eq!(metrics.fallback_config, 0);
+    }
+
+    #[test]
+    fn resolution_cache_serves_repeat_shapes() {
+        let coord = sim_pool(1, SelectorPolicy::Xla);
+        let shape = GemmShape::new(32, 32, 32, 1);
+        for i in 0..4 {
+            coord
+                .call(shape, fill_buffer(i, 32 * 32), fill_buffer(i + 3, 32 * 32))
+                .unwrap()
+                .result
+                .unwrap();
+        }
+        let (hits, misses) = coord.selector_cache_stats();
+        assert_eq!(misses, 1);
+        assert_eq!(hits, 3);
         coord.stop();
+    }
+
+    #[test]
+    fn multi_shard_handles_mixed_shapes_with_direct_resolutions() {
+        let manifest = Manifest::synthetic();
+        let best = config_by_name(&manifest.single_best).unwrap().index();
+        let coord = sim_pool(3, SelectorPolicy::Single(best));
+        let shapes = [
+            GemmShape::new(32, 32, 32, 1),
+            GemmShape::new(32, 32, 32, 4),
+            GemmShape::new(64, 64, 64, 1),
+            GemmShape::new(64, 64, 64, 4),
+        ];
+        for (i, shape) in shapes.iter().cycle().take(12).enumerate() {
+            let lhs = fill_buffer(i as u32, shape.batch * shape.m * shape.k);
+            let rhs = fill_buffer((i + 5) as u32, shape.batch * shape.k * shape.n);
+            let resp = coord.call(*shape, lhs, rhs).unwrap();
+            assert!(resp.result.is_ok());
+        }
+        let report = coord.stop_detailed();
+        assert_eq!(report.total.requests, 12);
+        assert_eq!(report.total.failures, 0);
+        assert!(report.summary().contains("shard 0:"));
+        // Registry resolutions were direct for a deployed config.
+        assert_eq!(report.total.fallback_config + report.total.fallback_xla, 0);
     }
 }

@@ -4,8 +4,6 @@
 
 use std::rc::Rc;
 
-use anyhow::{Context, Result};
-
 use crate::coordinator::selector::SelectorPolicy;
 use crate::dataset::GemmShape;
 use crate::runtime::{ArtifactMeta, Manifest, Runtime};
@@ -46,18 +44,16 @@ impl<'rt> VggEngine<'rt> {
         manifest: &Manifest,
         network: &str,
         policy: &SelectorPolicy,
-    ) -> Result<VggEngine<'rt>> {
-        let metas = manifest
-            .network_layers(network, |_, probe| {
-                let shape = GemmShape::new(probe.m, probe.k, probe.n, 1);
-                policy.choose(&shape)
-            })
-            .map_err(anyhow::Error::msg)?;
+    ) -> Result<VggEngine<'rt>, String> {
+        let metas = manifest.network_layers(network, |_, probe| {
+            let shape = GemmShape::new(probe.m, probe.k, probe.n, 1);
+            policy.choose(&shape)
+        })?;
         let mut layers = Vec::with_capacity(metas.len());
         for (i, meta) in metas.into_iter().enumerate() {
             let exe = runtime
                 .load(&meta.path)
-                .with_context(|| format!("loading layer {}", meta.path))?;
+                .map_err(|e| format!("loading layer {}: {e}", meta.path))?;
             // inputs = [x, w, b]; fan_in/out from the weight shape.
             let wshape = &meta.inputs[1];
             let (fan_in, fan_out) = (wshape[0], wshape[1]);
@@ -104,7 +100,7 @@ impl<'rt> VggEngine<'rt> {
     }
 
     /// Run one inference; activations stay on the device between layers.
-    pub fn infer(&self, image: &[f32]) -> Result<(Vec<f32>, Vec<LayerTiming>)> {
+    pub fn infer(&self, image: &[f32]) -> Result<(Vec<f32>, Vec<LayerTiming>), String> {
         let mut timings = Vec::with_capacity(self.layers.len());
         let mut act = self.runtime.upload(image, self.input_shape())?;
         for (i, layer) in self.layers.iter().enumerate() {
@@ -126,7 +122,7 @@ impl<'rt> VggEngine<'rt> {
             act = self
                 .runtime
                 .execute_buffers(&layer.exe, &[&act, &layer.weights, &layer.bias])
-                .with_context(|| format!("layer {}", layer.meta.path))?;
+                .map_err(|e| format!("layer {}: {e}", layer.meta.path))?;
             timings.push(LayerTiming {
                 layer: layer.meta.layer.clone().unwrap_or_default(),
                 config: layer.meta.config_index,

@@ -1,0 +1,143 @@
+//! Execution engine backends: the layer between the coordinator and
+//! whatever actually multiplies matrices.
+//!
+//! The paper's library must serve any shape a user throws at it from a
+//! small deployed kernel set; the serving stack here must equally run the
+//! ML selection pipeline anywhere — a laptop with no native XLA, CI, or a
+//! machine with a real PJRT plugin. The [`Backend`] trait captures the
+//! three obligations of an execution substrate (load/compile an AOT
+//! artifact, execute it for a [`GemmShape`], report stats), and the
+//! coordinator's executor shards each own one backend instance:
+//!
+//! * [`SimBackend`] — pure Rust: a naive f32 GEMM for correctness plus the
+//!   `devsim` analytical model for simulated device timing. Always
+//!   available; this is what `cargo test` exercises.
+//! * [`PjrtBackend`] — wraps the PJRT [`crate::runtime::Runtime`]; only
+//!   compiled with the `pjrt` cargo feature.
+//!
+//! Backends are deliberately `!Send`-friendly: PJRT handles are `Rc`-based
+//! and must stay on one thread, so shards receive a Send-able
+//! [`EngineKind`] *spec* and construct their backend on their own thread.
+
+pub mod sim;
+
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+pub use sim::SimBackend;
+
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtBackend;
+
+use std::path::Path;
+
+use crate::dataset::GemmShape;
+use crate::runtime::ArtifactMeta;
+
+/// Counters every backend reports (mirrors the old `RuntimeStats`).
+#[derive(Clone, Debug, Default)]
+pub struct BackendStats {
+    /// Artifacts compiled/loaded for the first time.
+    pub compiles: usize,
+    /// `prepare` calls satisfied by the executable cache — the currency of
+    /// the coordinator's shape-affinity routing.
+    pub cache_hits: usize,
+    pub executions: usize,
+    /// Wall-clock seconds spent executing.
+    pub execute_secs: f64,
+    /// Device-seconds predicted by the analytical model (SimBackend only;
+    /// zero for native backends).
+    pub simulated_secs: f64,
+}
+
+/// An execution substrate for AOT GEMM artifacts.
+pub trait Backend {
+    fn name(&self) -> &'static str;
+
+    /// Load/compile the artifact so later `execute` calls are warm.
+    /// Idempotent; the second call for the same artifact is a cache hit.
+    fn prepare(&mut self, meta: &ArtifactMeta) -> Result<(), String>;
+
+    /// Execute one GEMM: `lhs` is (b, m, k), `rhs` is (b, k, n), row-major.
+    fn execute(
+        &mut self,
+        meta: &ArtifactMeta,
+        shape: &GemmShape,
+        lhs: &[f32],
+        rhs: &[f32],
+    ) -> Result<Vec<f32>, String>;
+
+    fn stats(&self) -> BackendStats;
+}
+
+/// A Send-able spec for constructing a [`Backend`] on a shard thread.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Analytical-model execution on a named `devsim` device profile.
+    Sim { profile: &'static str },
+    /// Native PJRT execution of the HLO artifacts.
+    #[cfg(feature = "pjrt")]
+    Pjrt,
+}
+
+impl Default for EngineKind {
+    fn default() -> EngineKind {
+        EngineKind::Sim { profile: "i7-6700k" }
+    }
+}
+
+impl EngineKind {
+    /// Instantiate the backend. Called on the owning shard thread because
+    /// the result is not necessarily `Send`.
+    pub fn create(&self, _artifacts_dir: &Path) -> Result<Box<dyn Backend>, String> {
+        match self {
+            EngineKind::Sim { profile } => Ok(Box::new(SimBackend::new(profile)?)),
+            #[cfg(feature = "pjrt")]
+            EngineKind::Pjrt => Ok(Box::new(PjrtBackend::new(_artifacts_dir)?)),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Sim { .. } => "sim",
+            #[cfg(feature = "pjrt")]
+            EngineKind::Pjrt => "pjrt",
+        }
+    }
+
+    /// Parse a `--backend` style flag value.
+    pub fn by_name(name: &str) -> Option<EngineKind> {
+        match name {
+            "sim" => Some(EngineKind::default()),
+            #[cfg(feature = "pjrt")]
+            "pjrt" => Some(EngineKind::Pjrt),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_engine_is_sim_and_creates() {
+        let kind = EngineKind::default();
+        assert_eq!(kind.name(), "sim");
+        let backend = kind.create(Path::new("/nonexistent")).unwrap();
+        assert_eq!(backend.name(), "sim");
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        assert_eq!(EngineKind::by_name("sim"), Some(EngineKind::default()));
+        assert_eq!(EngineKind::by_name("bogus"), None);
+    }
+
+    #[test]
+    fn sim_rejects_unknown_profile() {
+        assert!(EngineKind::Sim { profile: "not-a-device" }
+            .create(Path::new("."))
+            .is_err());
+    }
+}

@@ -1,0 +1,64 @@
+//! Native execution backend: PJRT via [`crate::runtime::Runtime`].
+//!
+//! A thin adapter — the `Runtime` keeps its executable cache and stats, the
+//! trait impl just maps artifact metadata onto load/execute calls. Not
+//! `Send`: the coordinator constructs one per shard thread from the
+//! Send-able [`EngineKind`](crate::engine::EngineKind) spec.
+
+use std::path::Path;
+
+use crate::dataset::GemmShape;
+use crate::engine::{Backend, BackendStats};
+use crate::runtime::{ArtifactKind, ArtifactMeta, Runtime};
+
+pub struct PjrtBackend {
+    rt: Runtime,
+}
+
+impl PjrtBackend {
+    pub fn new(artifacts_dir: &Path) -> Result<PjrtBackend, String> {
+        Ok(PjrtBackend { rt: Runtime::new(artifacts_dir)? })
+    }
+
+    /// Borrow the underlying runtime (e.g. for VGG layer chaining).
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn prepare(&mut self, meta: &ArtifactMeta) -> Result<(), String> {
+        self.rt.load(&meta.path).map(|_| ())
+    }
+
+    fn execute(
+        &mut self,
+        meta: &ArtifactMeta,
+        shape: &GemmShape,
+        lhs: &[f32],
+        rhs: &[f32],
+    ) -> Result<Vec<f32>, String> {
+        if meta.kind != ArtifactKind::Matmul {
+            return Err(format!("pjrt backend: {} is not a matmul artifact", meta.path));
+        }
+        let exe = self.rt.load(&meta.path)?;
+        let (b, m, k, n) = (shape.batch, shape.m, shape.k, shape.n);
+        self.rt
+            .execute_f32(&exe, &[(lhs, &[b, m, k]), (rhs, &[b, k, n])])
+    }
+
+    fn stats(&self) -> BackendStats {
+        let s = self.rt.stats();
+        BackendStats {
+            compiles: s.compiles,
+            cache_hits: s.cache_hits,
+            executions: s.executions,
+            execute_secs: s.execute_secs,
+            simulated_secs: 0.0,
+        }
+    }
+}

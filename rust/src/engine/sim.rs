@@ -1,0 +1,221 @@
+//! Pure-Rust execution backend: correctness from a naive host GEMM,
+//! timing from the `devsim` analytical device model.
+//!
+//! This is the backend that makes the serving stack run everywhere the
+//! tuning pipeline runs: no PJRT, no artifacts on disk (paths in the
+//! manifest are treated as opaque cache keys). "Compilation" is simulated —
+//! first touch of an artifact counts a compile, later touches count cache
+//! hits — so the coordinator's shape-affinity routing has the same cache
+//! locality story as the native backend it stands in for.
+
+use std::collections::HashSet;
+
+use crate::dataset::{config_by_index, config_by_name, GemmShape, KernelConfig};
+use crate::devsim::{profile_by_name, simulate, DeviceProfile};
+use crate::engine::{Backend, BackendStats};
+use crate::runtime::{ArtifactKind, ArtifactMeta};
+
+pub struct SimBackend {
+    profile: &'static DeviceProfile,
+    /// The devsim space only covers the Pallas configs; the XLA-dot
+    /// comparator artifact is timed as this well-rounded proxy config.
+    xla_proxy: KernelConfig,
+    compiled: HashSet<String>,
+    stats: BackendStats,
+}
+
+impl SimBackend {
+    pub fn new(profile_name: &str) -> Result<SimBackend, String> {
+        let profile = profile_by_name(profile_name)
+            .ok_or_else(|| format!("unknown device profile {profile_name:?}"))?;
+        Ok(SimBackend {
+            profile,
+            xla_proxy: config_by_name("r4a4c4_wg16x16").expect("proxy config"),
+            compiled: HashSet::new(),
+            stats: BackendStats::default(),
+        })
+    }
+
+    pub fn profile_name(&self) -> &'static str {
+        self.profile.name
+    }
+
+    /// Device-seconds the analytical model predicts for this dispatch.
+    fn simulated_secs(&self, meta: &ArtifactMeta, shape: &GemmShape) -> f64 {
+        let cfg = meta
+            .config_index
+            .map(config_by_index)
+            .unwrap_or(self.xla_proxy);
+        let gflops = simulate(self.profile, shape, &cfg).max(1e-3);
+        shape.flops() / (gflops * 1e9)
+    }
+}
+
+/// Reference batched GEMM: out(b, m, n) = lhs(b, m, k) x rhs(b, k, n).
+pub fn host_gemm(
+    shape: &GemmShape,
+    lhs: &[f32],
+    rhs: &[f32],
+) -> Result<Vec<f32>, String> {
+    let (b, m, k, n) = (shape.batch, shape.m, shape.k, shape.n);
+    if lhs.len() != b * m * k {
+        return Err(format!(
+            "sim gemm: lhs has {} elements, want {} for {:?}",
+            lhs.len(),
+            b * m * k,
+            shape
+        ));
+    }
+    if rhs.len() != b * k * n {
+        return Err(format!(
+            "sim gemm: rhs has {} elements, want {} for {:?}",
+            rhs.len(),
+            b * k * n,
+            shape
+        ));
+    }
+    let mut out = vec![0.0f32; b * m * n];
+    for bi in 0..b {
+        let (lo, ro, oo) = (bi * m * k, bi * k * n, bi * m * n);
+        for i in 0..m {
+            let lhs_row = &lhs[lo + i * k..lo + (i + 1) * k];
+            let out_row = &mut out[oo + i * n..oo + (i + 1) * n];
+            for (kk, &a) in lhs_row.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let rhs_row = &rhs[ro + kk * n..ro + (kk + 1) * n];
+                for (o, &r) in out_row.iter_mut().zip(rhs_row) {
+                    *o += a * r;
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+impl Backend for SimBackend {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn prepare(&mut self, meta: &ArtifactMeta) -> Result<(), String> {
+        if self.compiled.insert(meta.path.clone()) {
+            self.stats.compiles += 1;
+        } else {
+            self.stats.cache_hits += 1;
+        }
+        Ok(())
+    }
+
+    fn execute(
+        &mut self,
+        meta: &ArtifactMeta,
+        shape: &GemmShape,
+        lhs: &[f32],
+        rhs: &[f32],
+    ) -> Result<Vec<f32>, String> {
+        if meta.kind != ArtifactKind::Matmul {
+            return Err(format!("sim backend: {} is not a matmul artifact", meta.path));
+        }
+        if !self.compiled.contains(&meta.path) {
+            self.prepare(meta)?;
+        }
+        let t0 = std::time::Instant::now();
+        let out = host_gemm(shape, lhs, rhs)?;
+        let predicted = self.simulated_secs(meta, shape);
+        self.stats.executions += 1;
+        self.stats.execute_secs += t0.elapsed().as_secs_f64();
+        self.stats.simulated_secs += predicted;
+        Ok(out)
+    }
+
+    fn stats(&self) -> BackendStats {
+        self.stats.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+    use crate::util::fill_buffer;
+
+    fn backend() -> SimBackend {
+        SimBackend::new("i7-6700k").unwrap()
+    }
+
+    fn meta_for(m: &Manifest, cfg: Option<usize>, shape: &GemmShape) -> ArtifactMeta {
+        m.find_matmul(cfg, shape.m, shape.k, shape.n, shape.batch)
+            .expect("synthetic artifact")
+            .clone()
+    }
+
+    #[test]
+    fn identity_matmul_exact() {
+        let shape = GemmShape::new(4, 4, 4, 1);
+        let mut eye = vec![0.0f32; 16];
+        for i in 0..4 {
+            eye[i * 4 + i] = 1.0;
+        }
+        let rhs: Vec<f32> = (0..16).map(|v| v as f32).collect();
+        let out = host_gemm(&shape, &eye, &rhs).unwrap();
+        assert_eq!(out, rhs);
+    }
+
+    #[test]
+    fn batched_gemm_matches_per_batch() {
+        let shape = GemmShape::new(3, 5, 2, 2);
+        let lhs = fill_buffer(1, 2 * 3 * 5);
+        let rhs = fill_buffer(2, 2 * 5 * 2);
+        let out = host_gemm(&shape, &lhs, &rhs).unwrap();
+        let single = GemmShape::new(3, 5, 2, 1);
+        let out0 = host_gemm(&single, &lhs[..15], &rhs[..10]).unwrap();
+        let out1 = host_gemm(&single, &lhs[15..], &rhs[10..]).unwrap();
+        assert_eq!(&out[..6], &out0[..]);
+        assert_eq!(&out[6..], &out1[..]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let shape = GemmShape::new(4, 4, 4, 1);
+        assert!(host_gemm(&shape, &[0.0; 3], &[0.0; 16]).is_err());
+        assert!(host_gemm(&shape, &[0.0; 16], &[0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn executes_synthetic_artifacts_with_cache_accounting() {
+        let manifest = Manifest::synthetic();
+        let mut be = backend();
+        let shape = GemmShape::new(64, 64, 64, 1);
+        let meta = meta_for(&manifest, None, &shape);
+        let lhs = fill_buffer(1, 64 * 64);
+        let rhs = fill_buffer(2, 64 * 64);
+        let out = be.execute(&meta, &shape, &lhs, &rhs).unwrap();
+        assert_eq!(out.len(), 64 * 64);
+        assert!(out.iter().all(|v| v.is_finite()));
+        be.prepare(&meta).unwrap();
+        let stats = be.stats();
+        assert_eq!(stats.compiles, 1);
+        assert_eq!(stats.cache_hits, 1);
+        assert_eq!(stats.executions, 1);
+        assert!(stats.simulated_secs > 0.0);
+    }
+
+    #[test]
+    fn pallas_and_xla_artifacts_agree_numerically() {
+        let manifest = Manifest::synthetic();
+        let mut be = backend();
+        let shape = GemmShape::new(32, 32, 32, 1);
+        let best = config_by_name(&manifest.single_best).unwrap().index();
+        let lhs = fill_buffer(3, 32 * 32);
+        let rhs = fill_buffer(4, 32 * 32);
+        let xla = be
+            .execute(&meta_for(&manifest, None, &shape), &shape, &lhs, &rhs)
+            .unwrap();
+        let pallas = be
+            .execute(&meta_for(&manifest, Some(best), &shape), &shape, &lhs, &rhs)
+            .unwrap();
+        assert_eq!(xla, pallas);
+    }
+}

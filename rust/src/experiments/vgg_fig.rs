@@ -19,10 +19,12 @@ use std::path::Path;
 
 use crate::classify::codegen::CompiledTree;
 use crate::classify::{ClassifierKind, KernelClassifier};
+#[cfg(feature = "pjrt")]
 use crate::coordinator::{SelectorPolicy, VggEngine};
 use crate::dataset::shapes::vgg16_gemms;
 use crate::dataset::{all_configs, GemmShape, KernelConfig};
 use crate::devsim::{profile_by_name, simulate, DeviceProfile};
+#[cfg(feature = "pjrt")]
 use crate::runtime::{Manifest, Runtime};
 use crate::selection::{select, Method};
 use crate::util::table::{fnum, Table};
@@ -141,8 +143,16 @@ fn simulated_table(ctx: &Context) -> Table {
     t
 }
 
+/// Without native PJRT there is nothing to measure; fig7 renders the skip
+/// reason in place of the measured table.
+#[cfg(not(feature = "pjrt"))]
+fn measured_table(_ctx: &Context, _artifacts_dir: &Path) -> Result<Table, String> {
+    Err("built without the `pjrt` feature".to_string())
+}
+
+#[cfg(feature = "pjrt")]
 fn measured_table(ctx: &Context, artifacts_dir: &Path) -> Result<Table, String> {
-    let runtime = Runtime::new(artifacts_dir).map_err(|e| e.to_string())?;
+    let runtime = Runtime::new(artifacts_dir)?;
     let manifest = Manifest::load(artifacts_dir)?;
     let image = crate::util::fill_buffer(99, 32 * 32 * 3);
 

@@ -2,21 +2,29 @@
 //!
 //! A reproduction of *"Performance portability through machine learning
 //! guided kernel selection in SYCL libraries"* (Lawson, 2020) as a
-//! three-layer Rust + JAX/Pallas + PJRT stack:
+//! four-layer Rust + JAX/Pallas stack:
 //!
-//! * **Layer 1** (`python/compile/kernels/`): the paper's parameterized GEMM
-//!   as a Pallas kernel — 640 configurations of micro-tile and work-group
-//!   parameters, AOT-lowered to HLO-text artifacts.
-//! * **Layer 2** (`python/compile/model.py`): JAX compute graphs (VGG16 via
-//!   im2col) calling the kernel; lowered once at build time.
-//! * **Layer 3** (this crate): everything at runtime — the benchmark data
-//!   pipeline, the unsupervised kernel-subset selection, the runtime
-//!   classifier, the PJRT executor, and the serving coordinator.
+//! * **Layer 1 — kernels** (`python/compile/kernels/`): the paper's
+//!   parameterized GEMM as a Pallas kernel — 640 configurations of
+//!   micro-tile and work-group parameters, AOT-lowered to HLO-text
+//!   artifacts.
+//! * **Layer 2 — graphs** (`python/compile/model.py`): JAX compute graphs
+//!   (VGG16 via im2col) calling the kernel; lowered once at build time.
+//! * **Layer 3 — engine backends** ([`engine`]): the [`engine::Backend`]
+//!   trait over load/compile/execute of an AOT artifact, with the
+//!   pure-Rust devsim-driven [`engine::SimBackend`] always available and
+//!   the native PJRT backend behind the `pjrt` cargo feature
+//!   ([`runtime`] holds the manifest and the PJRT wrapper).
+//! * **Layer 4 — coordinator shards** ([`coordinator`]): the serving side —
+//!   benchmark data pipeline, unsupervised kernel-subset selection, the
+//!   runtime classifier with its memoized hot path, and a sharded executor
+//!   pool with per-shard batching and metrics.
 
 pub mod classify;
 pub mod coordinator;
 pub mod dataset;
 pub mod devsim;
+pub mod engine;
 pub mod experiments;
 pub mod linalg;
 pub mod ml;

@@ -15,13 +15,18 @@ use std::path::PathBuf;
 
 use kernelsel::classify::codegen::{to_rust_source, CompiledTree};
 use kernelsel::classify::{ClassifierKind, KernelClassifier, ALL_CLASSIFIERS};
-use kernelsel::coordinator::{BatcherConfig, Coordinator, SelectorPolicy, VggEngine};
+#[cfg(feature = "pjrt")]
+use kernelsel::coordinator::VggEngine;
+use kernelsel::coordinator::{Coordinator, PoolConfig, SelectorPolicy};
 use kernelsel::dataset::{
     benchmark_shapes, config_by_index, config_by_name, GemmShape, Normalization,
 };
 use kernelsel::devsim::{all_profiles, generate_dataset, profile_by_name};
+use kernelsel::engine::EngineKind;
 use kernelsel::experiments;
-use kernelsel::runtime::{Manifest, Runtime};
+use kernelsel::runtime::Manifest;
+#[cfg(feature = "pjrt")]
+use kernelsel::runtime::Runtime;
 use kernelsel::selection::{achievable_percent, select, Method};
 use kernelsel::util::fill_buffer;
 
@@ -124,7 +129,8 @@ USAGE: kernelsel <command> [flags]
   codegen    --device D [--k K]                            nested-if Rust
   eval       --device D [--k K]                            full pipeline eval
   experiment <fig1..fig7|tab1|tab2|tpu-est|all> [--out results/]
-  serve      [--requests N --policy tuned|single|xla]      coordinator demo
+  serve      [--requests N --shards S --policy tuned|single|xla
+              --backend sim|pjrt]                          executor-pool demo
   infer      [--network vgg16-tiny --policy tuned|single|xla --iters N]
   tpu-est                                                   TPU estimates
 
@@ -137,10 +143,17 @@ Common flags: --device {}, --artifacts DIR, --seed S, --data CSV",
     );
 }
 
+/// Without native PJRT there is no hardware to measure.
+#[cfg(not(feature = "pjrt"))]
+fn cmd_collect(_args: &Args) {
+    fail("`collect` measures real artifacts and requires the `pjrt` feature");
+}
+
 /// Measure every shipped (config, shape) GEMM artifact on the local CPU
 /// PJRT backend — the paper's data-collection protocol (§3.1: warmup, then
 /// batched timed iterations) on real hardware. Unmeasured configs stay 0,
 /// which downstream training over the deployed set never reads.
+#[cfg(feature = "pjrt")]
 fn cmd_collect(args: &Args) {
     use kernelsel::dataset::{PerfDataset, NUM_CONFIGS};
     use kernelsel::linalg::Matrix;
@@ -356,11 +369,23 @@ fn cmd_experiment(args: &Args) {
 
 fn cmd_serve(args: &Args) {
     let n = args.get_usize("requests", 64);
+    let shards = args.get_usize("shards", 2);
     let dir = artifacts_dir(args);
     let policy = policy_from_flag(args, &dir);
-    println!("starting coordinator (policy={}) ...", policy.name());
-    let coord = Coordinator::start(dir, policy, BatcherConfig::default())
-        .unwrap_or_else(|e| fail(&e));
+    let engine = EngineKind::by_name(&args.get("backend", "sim"))
+        .unwrap_or_else(|| fail("unknown backend (sim, or pjrt with the feature)"));
+    println!(
+        "starting coordinator ({} shard(s), policy={}, backend={}) ...",
+        shards,
+        policy.name(),
+        engine.name()
+    );
+    let coord = Coordinator::start_pool(
+        dir,
+        policy,
+        PoolConfig { shards, engine, ..PoolConfig::default() },
+    )
+    .unwrap_or_else(|e| fail(&e));
     let shapes = [
         GemmShape::new(128, 128, 128, 1),
         GemmShape::new(512, 784, 512, 1),
@@ -381,16 +406,18 @@ fn cmd_serve(args: &Args) {
         }
     }
     let secs = t0.elapsed().as_secs_f64();
-    let metrics = coord.stop();
+    let report = coord.stop_detailed();
     println!(
         "{ok}/{n} ok in {secs:.3}s ({:.1} req/s)\n{}",
         n as f64 / secs,
-        metrics.summary()
+        report.summary()
     );
 }
 
 fn policy_from_flag(args: &Args, dir: &std::path::Path) -> SelectorPolicy {
-    let manifest = Manifest::load(dir).unwrap_or_else(|e| fail(&e));
+    // Missing artifacts fall back to the synthetic deployment, which is
+    // what the SimBackend serves.
+    let manifest = Manifest::load_or_synthetic(dir);
     match args.get("policy", "tuned").as_str() {
         "xla" => SelectorPolicy::Xla,
         "single" => SelectorPolicy::Single(
@@ -429,6 +456,13 @@ fn policy_from_flag(args: &Args, dir: &std::path::Path) -> SelectorPolicy {
     }
 }
 
+/// VGG inference chains device-resident PJRT buffers; no sim equivalent.
+#[cfg(not(feature = "pjrt"))]
+fn cmd_infer(_args: &Args) {
+    fail("`infer` runs network layers on PJRT and requires the `pjrt` feature");
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_infer(args: &Args) {
     let dir = artifacts_dir(args);
     let network = args.get("network", "vgg16-tiny");

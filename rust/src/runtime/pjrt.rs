@@ -1,0 +1,254 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile them once, execute
+//! them from the request path.
+//!
+//! PJRT handles are `Rc`-based and must stay on one thread; the coordinator
+//! gives each executor shard its own backend instance (and therefore its
+//! own `Runtime`) and talks to it over channels.
+//!
+//! Only compiled with the `pjrt` cargo feature. In the default offline
+//! build the `xla` dependency is the in-tree stub crate, so everything here
+//! type-checks but fails at client creation; swap the path dependency for
+//! real bindings to execute natively.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+use crate::runtime::manifest::{ArtifactKind, ArtifactMeta};
+
+/// Runtime statistics (compiles, cache hits, executions, wall time).
+#[derive(Clone, Debug, Default)]
+pub struct RuntimeStats {
+    pub compiles: usize,
+    pub cache_hits: usize,
+    pub executions: usize,
+    pub compile_secs: f64,
+    pub execute_secs: f64,
+}
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    stats: RefCell<RuntimeStats>,
+}
+
+impl Runtime {
+    /// Create a CPU-PJRT runtime rooted at the artifacts directory.
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime, String> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| format!("creating PJRT CPU client: {e}"))?;
+        Ok(Runtime {
+            client,
+            dir: artifacts_dir.to_path_buf(),
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+
+    /// Load (and cache) the executable for an artifact-relative path.
+    pub fn load(&self, rel_path: &str) -> Result<Rc<xla::PjRtLoadedExecutable>, String> {
+        if let Some(exe) = self.cache.borrow().get(rel_path) {
+            self.stats.borrow_mut().cache_hits += 1;
+            return Ok(exe.clone());
+        }
+        let t0 = Instant::now();
+        let full = self.dir.join(rel_path);
+        let full_str = full.to_str().ok_or_else(|| "non-utf8 path".to_string())?;
+        let proto = xla::HloModuleProto::from_text_file(full_str)
+            .map_err(|e| format!("parsing HLO text {rel_path}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .map_err(|e| format!("compiling {rel_path}: {e}"))?,
+        );
+        {
+            let mut stats = self.stats.borrow_mut();
+            stats.compiles += 1;
+            stats.compile_secs += t0.elapsed().as_secs_f64();
+        }
+        self.cache
+            .borrow_mut()
+            .insert(rel_path.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Upload an f32 host buffer to the device.
+    pub fn upload(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer, String> {
+        let count: usize = dims.iter().product();
+        if count != data.len() {
+            return Err(format!(
+                "upload: {} elements for dims {dims:?}",
+                data.len()
+            ));
+        }
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| format!("uploading host buffer: {e}"))
+    }
+
+    /// Execute with device buffers, returning the single (tuple-unwrapped)
+    /// output buffer — the zero-copy path used for chained layers.
+    pub fn execute_buffers(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<xla::PjRtBuffer, String> {
+        let t0 = Instant::now();
+        let mut outs = exe
+            .execute_b(args)
+            .map_err(|e| format!("executing (buffers): {e}"))?;
+        {
+            let mut stats = self.stats.borrow_mut();
+            stats.executions += 1;
+            stats.execute_secs += t0.elapsed().as_secs_f64();
+        }
+        outs.pop()
+            .and_then(|mut r| if r.is_empty() { None } else { Some(r.remove(0)) })
+            .ok_or_else(|| "empty execution result".to_string())
+    }
+
+    /// Read an output buffer back to the host. Artifacts are lowered with
+    /// `return_tuple=False`, so outputs are plain arrays.
+    pub fn download(&self, buf: &xla::PjRtBuffer) -> Result<Vec<f32>, String> {
+        let lit = buf
+            .to_literal_sync()
+            .map_err(|e| format!("downloading result: {e}"))?;
+        lit.to_vec::<f32>()
+            .map_err(|e| format!("converting result to f32: {e}"))
+    }
+
+    /// Convenience: upload f32 inputs, execute, download the f32 output.
+    pub fn execute_f32(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[(&[f32], &[usize])],
+    ) -> Result<Vec<f32>, String> {
+        let bufs: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|(data, dims)| self.upload(data, dims))
+            .collect::<Result<_, String>>()?;
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        let out = self.execute_buffers(exe, &refs)?;
+        self.download(&out)
+    }
+
+    /// Load a GEMM artifact and run it on (lhs, rhs).
+    pub fn run_matmul(
+        &self,
+        meta: &ArtifactMeta,
+        lhs: &[f32],
+        rhs: &[f32],
+    ) -> Result<Vec<f32>, String> {
+        if meta.kind != ArtifactKind::Matmul {
+            return Err("not a matmul artifact".to_string());
+        }
+        let exe = self.load(&meta.path)?;
+        let (b, m, k, n) = (meta.b, meta.m, meta.k, meta.n);
+        self.execute_f32(&exe, &[(lhs, &[b, m, k]), (rhs, &[b, k, n])])
+    }
+}
+
+/// Tests below require real PJRT bindings plus a `make artifacts` run; they
+/// are compiled with `--features pjrt` and fail fast against the stub.
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+    use crate::util::fill_buffer;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn setup() -> (Runtime, Manifest) {
+        let dir = artifacts_dir();
+        let rt = Runtime::new(&dir).expect("PJRT CPU client");
+        let mf = Manifest::load(&dir).expect("run `make artifacts` first");
+        (rt, mf)
+    }
+
+    #[test]
+    fn pallas_artifact_matches_host_reference() {
+        let (rt, mf) = setup();
+        let meta = mf
+            .find_matmul(None, 128, 128, 128, 1)
+            .expect("xla 128^3 artifact")
+            .clone();
+        let lhs = fill_buffer(11, 128 * 128);
+        let rhs = fill_buffer(12, 128 * 128);
+        let got = rt.run_matmul(&meta, &lhs, &rhs).unwrap();
+        // Shared reference GEMM: the same oracle the SimBackend tests use.
+        let want = crate::engine::sim::host_gemm(
+            &crate::dataset::GemmShape::new(128, 128, 128, 1),
+            &lhs,
+            &rhs,
+        )
+        .unwrap();
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-3, "{g} vs {w}");
+        }
+
+        // And the Pallas single-best config artifact gives the same result.
+        let best = crate::dataset::config_by_name(&mf.single_best).unwrap().index();
+        let meta_p = mf.find_matmul(Some(best), 128, 128, 128, 1).unwrap().clone();
+        let got_p = rt.run_matmul(&meta_p, &lhs, &rhs).unwrap();
+        for (g, w) in got_p.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-3, "pallas {g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn executable_cache_hits() {
+        let (rt, mf) = setup();
+        let meta = mf.find_matmul(None, 128, 128, 128, 1).unwrap().clone();
+        let _ = rt.load(&meta.path).unwrap();
+        let _ = rt.load(&meta.path).unwrap();
+        let stats = rt.stats();
+        assert_eq!(stats.compiles, 1);
+        assert!(stats.cache_hits >= 1);
+    }
+
+    #[test]
+    fn buffer_chaining_executes() {
+        // Run one fc layer with device-resident buffers.
+        let (rt, mf) = setup();
+        let layers = mf.network_layers("vgg16-tiny", |_, _| None).unwrap();
+        let fc = layers[13].clone(); // fc6 of vgg16-tiny
+        assert_eq!(fc.kind, ArtifactKind::FcLayer);
+        let exe = rt.load(&fc.path).unwrap();
+        let x = rt
+            .upload(&fill_buffer(1, fc.inputs[0].iter().product()), &fc.inputs[0])
+            .unwrap();
+        let w = rt
+            .upload(&fill_buffer(2, fc.inputs[1].iter().product()), &fc.inputs[1])
+            .unwrap();
+        let bias = rt
+            .upload(&fill_buffer(3, fc.inputs[2].iter().product()), &fc.inputs[2])
+            .unwrap();
+        let out = rt.execute_buffers(&exe, &[&x, &w, &bias]).unwrap();
+        let host = rt.download(&out).unwrap();
+        assert_eq!(host.len(), fc.output.iter().product::<usize>());
+        assert!(host.iter().all(|v| v.is_finite()));
+        // ReLU applied.
+        assert!(host.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn upload_validates_shape() {
+        let (rt, _) = setup();
+        assert!(rt.upload(&[1.0, 2.0], &[3]).is_err());
+    }
+}

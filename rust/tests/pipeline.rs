@@ -5,7 +5,7 @@ use std::path::PathBuf;
 
 use kernelsel::classify::codegen::CompiledTree;
 use kernelsel::classify::{ClassifierKind, KernelClassifier};
-use kernelsel::coordinator::{BatcherConfig, Coordinator, SelectorPolicy};
+use kernelsel::coordinator::{Coordinator, PoolConfig, SelectorPolicy};
 use kernelsel::dataset::{
     benchmark_shapes, config_by_name, GemmShape, Normalization, PerfDataset,
 };
@@ -60,8 +60,11 @@ fn dataset_csv_roundtrip_through_disk() {
 }
 
 #[test]
-fn coordinator_serves_tuned_policy_against_real_artifacts() {
-    let manifest = kernelsel::runtime::Manifest::load(&artifacts_dir()).unwrap();
+fn coordinator_serves_tuned_policy_on_executor_pool() {
+    // Real artifacts when `make artifacts` has run; the synthetic
+    // deployment (served by the SimBackend) otherwise — the test passes on
+    // a clean machine either way.
+    let manifest = kernelsel::runtime::Manifest::load_or_synthetic(&artifacts_dir());
     let ds = small_dataset("i7-6700k");
     let deployed: Vec<usize> = manifest
         .deployed
@@ -70,13 +73,17 @@ fn coordinator_serves_tuned_policy_against_real_artifacts() {
         .collect();
     let clf = KernelClassifier::fit(ClassifierKind::DecisionTreeB, &ds, &deployed, 3);
     let policy = SelectorPolicy::Tree(CompiledTree::compile(&clf).unwrap());
-    let coord =
-        Coordinator::start(artifacts_dir(), policy, BatcherConfig::default()).unwrap();
+    let coord = Coordinator::start_pool(
+        artifacts_dir(),
+        policy,
+        PoolConfig { shards: 2, ..PoolConfig::default() },
+    )
+    .unwrap();
 
     let shapes = [
         GemmShape::new(128, 128, 128, 1),
         GemmShape::new(1024, 27, 64, 1),
-        GemmShape::new(512, 784, 512, 1),
+        GemmShape::new(64, 2304, 128, 1),
     ];
     let mut rxs = Vec::new();
     for (i, s) in shapes.iter().enumerate() {
@@ -89,14 +96,15 @@ fn coordinator_serves_tuned_policy_against_real_artifacts() {
         let out = resp.result.expect("result");
         assert_eq!(out.len(), s.batch * s.m * s.n, "{s:?}");
         // Tuned policy must be choosing deployed configs (or falling back
-        // to another deployed config at that bucket).
+        // to another deployed config / the XLA comparator at that bucket).
         if let Some(cfg) = resp.config_used {
             assert!(deployed.contains(&cfg));
         }
     }
-    let metrics = coord.stop();
-    assert_eq!(metrics.requests, 3);
-    assert_eq!(metrics.failures, 0);
+    let report = coord.stop_detailed();
+    assert_eq!(report.per_shard.len(), 2);
+    assert_eq!(report.total.requests, 3);
+    assert_eq!(report.total.failures, 0);
 }
 
 #[test]

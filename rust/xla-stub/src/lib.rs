@@ -1,0 +1,103 @@
+//! Compile-time stub of the `xla` PJRT bindings.
+//!
+//! The offline build environment ships no native XLA, so the `pjrt` cargo
+//! feature of `kernelsel` links against this crate instead: the API surface
+//! the runtime uses exists and type-checks, and every entry point fails at
+//! runtime with a clear message. To run against real PJRT, point the `xla`
+//! path dependency in `rust/Cargo.toml` at the actual bindings — the
+//! signatures below mirror the subset of that API the runtime calls.
+
+use std::fmt;
+
+/// Error type matching the `Display + Debug` bound the runtime relies on.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn stub_err(what: &str) -> Error {
+    Error(format!(
+        "xla stub: {what} unavailable — this binary was built against the \
+         in-tree xla stub; point rust/Cargo.toml's `xla` path dependency at \
+         real PJRT bindings to enable native execution"
+    ))
+}
+
+/// Parsed HLO module (stub: retains nothing).
+pub struct HloModuleProto {}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(stub_err("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation (stub: uninhabited behavior, constructible type).
+pub struct XlaComputation {}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {}
+    }
+}
+
+/// A PJRT device buffer (stub).
+pub struct PjRtBuffer {}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(stub_err("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A host literal (stub).
+pub struct Literal {}
+
+impl Literal {
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(stub_err("Literal::to_vec"))
+    }
+}
+
+/// A compiled, loaded executable (stub).
+pub struct PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(stub_err("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// A PJRT client (stub: creation always fails, so no other method runs).
+pub struct PjRtClient {}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(stub_err("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(stub_err("PjRtClient::compile"))
+    }
+
+    pub fn buffer_from_host_buffer(
+        &self,
+        _data: &[f32],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(stub_err("PjRtClient::buffer_from_host_buffer"))
+    }
+}
