@@ -3,13 +3,19 @@
 //! microservice.
 //!
 //!     cargo run --release --example serve -- --shards 4
+//!     cargo run --release --example serve -- --shards 4 --routing affinity
+//!     cargo run --release --example serve -- --routing load-aware --imbalance 2
 //!
 //! Clients submit mixed-shape GEMM requests; the submit path resolves each
-//! to a deployed kernel via the memoized decision-tree selector, routes it
-//! by shape affinity to one of N executor shards, and each shard batches
+//! to a deployed kernel via the memoized decision-tree selector and routes
+//! it to one of N executor shards — by shape affinity alone
+//! (`--routing affinity`), or load-aware (the default): affinity as a
+//! preference, spilling to the least-loaded shard when the preferred
+//! shard's load gauge exceeds `--imbalance N` times the minimum, with idle
+//! shards stealing ready batches from overloaded peers. Each shard batches
 //! same-executable requests on its own backend. Runs out of the box on the
-//! SimBackend (no artifacts, no native XLA needed); per-shard batch and
-//! fallback metrics print at shutdown.
+//! SimBackend (no artifacts, no native XLA needed); per-shard batch,
+//! fallback, spill and steal metrics print at shutdown.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -17,7 +23,7 @@ use std::time::Instant;
 
 use kernelsel::classify::codegen::CompiledTree;
 use kernelsel::classify::{ClassifierKind, KernelClassifier};
-use kernelsel::coordinator::{Coordinator, PoolConfig, SelectorPolicy};
+use kernelsel::coordinator::{Coordinator, PoolConfig, Routing, SelectorPolicy};
 use kernelsel::dataset::{benchmark_shapes, config_by_name, GemmShape};
 use kernelsel::devsim::{generate_dataset, profile_by_name};
 use kernelsel::engine::EngineKind;
@@ -27,17 +33,31 @@ use kernelsel::util::fill_buffer;
 const CLIENTS: usize = 4;
 const REQUESTS_PER_CLIENT: usize = 24;
 
-fn flag(name: &str, default: usize) -> usize {
+fn flag_str(name: &str) -> Option<String> {
     let args: Vec<String> = std::env::args().collect();
     args.iter()
         .position(|a| a == name)
         .and_then(|i| args.get(i + 1))
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(default)
+        .cloned()
+}
+
+fn flag(name: &str, default: usize) -> usize {
+    flag_str(name).and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
 fn main() -> Result<(), String> {
     let shards = flag("--shards", 4);
+    let routing = match flag_str("--routing") {
+        Some(v) => Routing::by_name(&v)
+            .ok_or_else(|| format!("unknown --routing {v:?} (affinity|load-aware)"))?,
+        None => Routing::default(),
+    };
+    let imbalance = match flag_str("--imbalance") {
+        Some(v) => v
+            .parse::<f64>()
+            .map_err(|_| format!("invalid --imbalance {v:?} (want a number, e.g. 4)"))?,
+        None => 4.0,
+    };
     let dir = PathBuf::from("artifacts");
     // Real artifacts when `make artifacts` has run; synthetic deployment
     // (served by the SimBackend) otherwise.
@@ -53,12 +73,20 @@ fn main() -> Result<(), String> {
     let clf = KernelClassifier::fit(ClassifierKind::DecisionTreeB, &ds, &deployed, 7);
     let policy = SelectorPolicy::Tree(CompiledTree::compile(&clf).unwrap());
 
-    let pool = PoolConfig { shards, engine: EngineKind::default(), ..PoolConfig::default() };
+    let pool = PoolConfig {
+        shards,
+        engine: EngineKind::default(),
+        routing,
+        imbalance,
+        ..PoolConfig::default()
+    };
     println!(
-        "starting coordinator: {} shard(s), policy={}, backend={}",
+        "starting coordinator: {} shard(s), policy={}, backend={}, routing={} (imbalance {:.1})",
         shards,
         policy.name(),
-        pool.engine.name()
+        pool.engine.name(),
+        pool.routing.name(),
+        pool.imbalance,
     );
     let coord = Arc::new(Coordinator::start_pool(dir, policy, pool)?);
 

@@ -1,0 +1,301 @@
+//! Bench: scheduling under shape skew — the load-aware router + work
+//! stealing pool vs the pure shape-affinity pool (PR-1 behavior: hash
+//! routing, no spills, no steals), swept over shard counts on a uniform
+//! and a 90/10-skewed shape mix.
+//!
+//! Each cell submits the whole workload asynchronously (open backlog, the
+//! worst case for a pinned hot shape), then drains every response:
+//! throughput is requests / makespan, latency percentiles come from the
+//! per-request end-to-end latencies.
+//!
+//!     cargo bench --bench coordinator_skew
+//!     cargo bench --bench coordinator_skew -- --smoke \
+//!         --json BENCH_pool.json --check-against ci/BENCH_pool.json
+//!
+//! `--smoke` shrinks the sweep for CI. `--json PATH` writes the
+//! machine-readable `BENCH_pool.json` (schema in ARCHITECTURE.md).
+//! `--check-against PATH` compares throughput per (mix, routing, shards)
+//! cell against a previously committed run and exits non-zero on a >20%
+//! regression — the CI perf gate.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use kernelsel::coordinator::{Coordinator, PoolConfig, Routing, SelectorPolicy};
+use kernelsel::dataset::GemmShape;
+use kernelsel::util::json::{parse, Json};
+use kernelsel::util::{fill_buffer, Stats};
+
+/// Throughput may regress by at most this factor vs the committed baseline.
+const REGRESSION_TOLERANCE: f64 = 0.80;
+
+struct Cell {
+    mix: &'static str,
+    routing: &'static str,
+    shards: usize,
+    requests: usize,
+    throughput_rps: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    spilled: usize,
+    steals: usize,
+}
+
+fn flag_value(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).cloned()
+}
+
+/// The request mix: `hot_share` of requests use the hot shape, the rest
+/// cycle through the cold shapes. All shapes ship in both manifests.
+fn workload(n: usize, hot_share: f64) -> Vec<GemmShape> {
+    let hot = GemmShape::new(128, 128, 128, 1);
+    let cold = [
+        GemmShape::new(32, 32, 32, 1),
+        GemmShape::new(64, 64, 64, 1),
+        GemmShape::new(32, 32, 32, 4),
+        GemmShape::new(64, 64, 64, 4),
+    ];
+    let period = 10usize;
+    let hot_per_period = ((hot_share * period as f64).round() as usize).min(period);
+    (0..n)
+        .map(|i| {
+            if i % period < hot_per_period {
+                hot
+            } else {
+                cold[(i / period + i % period) % cold.len()]
+            }
+        })
+        .collect()
+}
+
+/// Run one cell: async-submit the whole mix, drain everything, report.
+fn run_cell(
+    mix: &'static str,
+    hot_share: f64,
+    routing_name: &'static str,
+    shards: usize,
+    n: usize,
+) -> Cell {
+    let (routing, steal_min) = match routing_name {
+        // PR-1 pure affinity: hash routing, stealing effectively disabled.
+        "affinity" => (Routing::Affinity, usize::MAX),
+        _ => (Routing::LoadAware, 2),
+    };
+    let coord = Coordinator::start_pool(
+        PathBuf::from("artifacts"),
+        SelectorPolicy::Xla,
+        PoolConfig { shards, routing, steal_min, ..PoolConfig::default() },
+    )
+    .expect("start pool");
+
+    let shapes = workload(n, hot_share);
+    // Warm every executable cache so first-touch compiles stay out of the
+    // measurement, then pre-generate inputs so the submit loop is tight.
+    for s in [GemmShape::new(128, 128, 128, 1)]
+        .iter()
+        .chain(shapes.iter().take(40))
+    {
+        let lhs = fill_buffer(1, s.batch * s.m * s.k);
+        let rhs = fill_buffer(2, s.batch * s.k * s.n);
+        let _ = coord.call(*s, lhs, rhs);
+    }
+    let inputs: Vec<(GemmShape, Vec<f32>, Vec<f32>)> = shapes
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            (
+                *s,
+                fill_buffer(i as u32, s.batch * s.m * s.k),
+                fill_buffer((i + 31) as u32, s.batch * s.k * s.n),
+            )
+        })
+        .collect();
+
+    let t0 = Instant::now();
+    let rxs: Vec<_> = inputs
+        .into_iter()
+        .map(|(s, lhs, rhs)| coord.submit(s, lhs, rhs))
+        .collect();
+    let mut latencies = Vec::with_capacity(n);
+    for rx in rxs {
+        let resp = rx.recv().expect("response");
+        assert!(resp.result.is_ok(), "{:?}", resp.result.err());
+        latencies.push(resp.latency.as_secs_f64());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let report = coord.stop_detailed();
+    let stats = Stats::from_secs(&latencies);
+    Cell {
+        mix,
+        routing: routing_name,
+        shards,
+        requests: n,
+        throughput_rps: n as f64 / wall,
+        p50_ms: stats.p50 * 1e3,
+        p99_ms: stats.p99 * 1e3,
+        spilled: report.total.spilled,
+        steals: report.total.steals,
+    }
+}
+
+fn cells_to_json(cells: &[Cell], mode: &str) -> Json {
+    let entries: Vec<Json> = cells
+        .iter()
+        .map(|c| {
+            Json::obj(vec![
+                ("mix", Json::Str(c.mix.to_string())),
+                ("routing", Json::Str(c.routing.to_string())),
+                ("shards", Json::Num(c.shards as f64)),
+                ("requests", Json::Num(c.requests as f64)),
+                ("throughput_rps", Json::Num(c.throughput_rps)),
+                ("p50_ms", Json::Num(c.p50_ms)),
+                ("p99_ms", Json::Num(c.p99_ms)),
+                ("spilled", Json::Num(c.spilled as f64)),
+                ("steals", Json::Num(c.steals as f64)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("schema", Json::Str("kernelsel-bench-pool-v1".to_string())),
+        ("mode", Json::Str(mode.to_string())),
+        ("entries", Json::Arr(entries)),
+    ])
+}
+
+/// Compare against a committed baseline; list every matching cell whose
+/// throughput dropped below `REGRESSION_TOLERANCE x` baseline.
+fn regressions(cells: &[Cell], baseline: &Json) -> Vec<String> {
+    let mut out = Vec::new();
+    let Some(entries) = baseline.get("entries").and_then(|e| e.as_arr()) else {
+        out.push("baseline has no entries array".to_string());
+        return out;
+    };
+    for b in entries {
+        let (Some(mix), Some(routing), Some(shards), Some(rps)) = (
+            b.get("mix").and_then(|v| v.as_str()),
+            b.get("routing").and_then(|v| v.as_str()),
+            b.get("shards").and_then(|v| v.as_usize()),
+            b.get("throughput_rps").and_then(|v| v.as_f64()),
+        ) else {
+            continue;
+        };
+        let Some(cell) = cells
+            .iter()
+            .find(|c| c.mix == mix && c.routing == routing && c.shards == shards)
+        else {
+            println!("  (baseline cell {mix}/{routing}/{shards} not in this sweep — skipped)");
+            continue;
+        };
+        let floor = rps * REGRESSION_TOLERANCE;
+        if cell.throughput_rps < floor {
+            out.push(format!(
+                "{mix}/{routing}/{shards} shards: {:.1} req/s < {:.1} \
+                 (baseline {:.1} x {:.0}% tolerance)",
+                cell.throughput_rps,
+                floor,
+                rps,
+                REGRESSION_TOLERANCE * 100.0
+            ));
+        }
+    }
+    out
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let json_path = flag_value(&args, "--json");
+    let baseline_path = flag_value(&args, "--check-against");
+
+    let (n, shard_counts): (usize, &[usize]) =
+        if smoke { (200, &[1, 2, 4]) } else { (600, &[1, 2, 4, 8]) };
+    let mode = if smoke { "smoke" } else { "full" };
+    println!(
+        "== coordinator_skew ({mode}): {n} reqs/cell, shards {shard_counts:?}, \
+         sim backend ==\n"
+    );
+
+    let mut cells = Vec::new();
+    for &(mix, hot_share) in &[("uniform", 0.0), ("skew90", 0.9)] {
+        for &routing in &["affinity", "load-aware"] {
+            for &shards in shard_counts {
+                let cell = run_cell(mix, hot_share, routing, shards, n);
+                println!(
+                    "{:>8} {:>10} {} shard(s): {:>8.1} req/s  p50 {:>7.2} ms  \
+                     p99 {:>7.2} ms  spilled {:>4}  steals {:>3}",
+                    cell.mix,
+                    cell.routing,
+                    cell.shards,
+                    cell.throughput_rps,
+                    cell.p50_ms,
+                    cell.p99_ms,
+                    cell.spilled,
+                    cell.steals,
+                );
+                cells.push(cell);
+            }
+        }
+        println!();
+    }
+
+    // Acceptance verdict: at the widest sweep point, load-aware must beat
+    // pure affinity on the skewed mix (throughput and p99) and must not
+    // regress the uniform mix.
+    let widest = *shard_counts.last().unwrap();
+    let find = |mix: &str, routing: &str| {
+        cells
+            .iter()
+            .find(|c| c.mix == mix && c.routing == routing && c.shards == widest)
+            .unwrap()
+    };
+    let (sa, sl) = (find("skew90", "affinity"), find("skew90", "load-aware"));
+    let (ua, ul) = (find("uniform", "affinity"), find("uniform", "load-aware"));
+    println!(
+        "skew90 @ {widest} shards: load-aware {:.2}x throughput, p99 {:.2} -> {:.2} ms  [{}]",
+        sl.throughput_rps / sa.throughput_rps,
+        sa.p99_ms,
+        sl.p99_ms,
+        if sl.throughput_rps > sa.throughput_rps && sl.p99_ms < sa.p99_ms {
+            "OK"
+        } else {
+            "NOT BEATING AFFINITY"
+        }
+    );
+    println!(
+        "uniform @ {widest} shards: load-aware {:.2}x throughput  [{}]",
+        ul.throughput_rps / ua.throughput_rps,
+        if ul.throughput_rps >= 0.9 * ua.throughput_rps { "OK" } else { "REGRESSION" }
+    );
+
+    if let Some(path) = json_path {
+        let doc = cells_to_json(&cells, mode);
+        std::fs::write(&path, doc.to_string() + "\n").expect("write BENCH_pool.json");
+        println!("\nwrote {path}");
+    }
+
+    if let Some(path) = baseline_path {
+        match std::fs::read_to_string(&path) {
+            Ok(text) => {
+                let baseline = parse(&text).expect("parse baseline BENCH_pool.json");
+                let regs = regressions(&cells, &baseline);
+                if regs.is_empty() {
+                    println!(
+                        "no throughput regression vs {path} ({:.0}% floor kept)",
+                        REGRESSION_TOLERANCE * 100.0
+                    );
+                } else {
+                    eprintln!("\nTHROUGHPUT REGRESSIONS vs {path}:");
+                    for r in &regs {
+                        eprintln!("  {r}");
+                    }
+                    std::process::exit(1);
+                }
+            }
+            Err(e) => {
+                // First run on a branch with no committed baseline yet: the
+                // gate records instead of failing.
+                println!("no baseline at {path} ({e}); skipping regression check");
+            }
+        }
+    }
+}

@@ -39,7 +39,15 @@ impl<T> Batcher<T> {
     }
 
     pub fn push(&mut self, artifact: String, payload: T) {
-        self.queue.push_back(Pending { artifact, enqueued: Instant::now(), payload });
+        self.push_pending(Pending { artifact, enqueued: Instant::now(), payload });
+    }
+
+    /// Enqueue a unit whose wait-clock is already running — the
+    /// work-stealing handoff. The original `enqueued` stamp is preserved so
+    /// a batch migrating between shards keeps its deadline instead of
+    /// re-arming it; entries may therefore arrive out of age order.
+    pub fn push_pending(&mut self, pending: Pending<T>) {
+        self.queue.push_back(pending);
     }
 
     pub fn len(&self) -> usize {
@@ -51,18 +59,23 @@ impl<T> Batcher<T> {
     }
 
     /// Time until the oldest request exceeds its wait budget (drives the
-    /// executor's poll timeout). `None` when idle.
+    /// executor's poll timeout). `None` when idle. Scans the whole queue,
+    /// not just the front: stolen handoffs keep their original enqueue
+    /// stamps, so the oldest entry need not sit at the front.
     pub fn next_deadline(&self) -> Option<Duration> {
-        self.queue.front().map(|p| {
-            self.cfg
-                .max_wait
-                .saturating_sub(p.enqueued.elapsed())
-        })
+        self.queue
+            .iter()
+            .map(|p| self.cfg.max_wait.saturating_sub(p.enqueued.elapsed()))
+            .min()
     }
 
     /// Drain a batch if one is due: either some group reached `max_batch`
-    /// or the oldest request timed out (then its group drains, preserving
-    /// FIFO order within the group).
+    /// or a request anywhere in the queue exceeded its wait budget (then
+    /// the *oldest* expired entry's group drains, preserving FIFO order
+    /// within the group). The expiry check must cover the whole queue: a
+    /// group whose deadline passed while another artifact's batch was
+    /// executing — or that arrived pre-aged via a work-stealing handoff —
+    /// drains on the very next call, not after a fresh `max_wait` re-arm.
     pub fn drain_due(&mut self) -> Option<(String, Vec<Pending<T>>)> {
         if self.queue.is_empty() {
             return None;
@@ -73,17 +86,18 @@ impl<T> Batcher<T> {
         for p in &self.queue {
             *counts.entry(p.artifact.as_str()).or_default() += 1;
         }
-        let oldest_expired =
-            self.queue.front().map(|p| p.enqueued.elapsed() >= self.cfg.max_wait);
         let full_group = counts
             .iter()
             .find(|(_, &c)| c >= self.cfg.max_batch)
             .map(|(k, _)| k.to_string());
-        let target = match (full_group, oldest_expired) {
-            (Some(g), _) => g,
-            (None, Some(true)) => self.queue.front().unwrap().artifact.clone(),
-            _ => return None,
+        let expired_group = || {
+            self.queue
+                .iter()
+                .filter(|p| p.enqueued.elapsed() >= self.cfg.max_wait)
+                .min_by_key(|p| p.enqueued)
+                .map(|p| p.artifact.clone())
         };
+        let target = full_group.or_else(expired_group)?;
         Some((target.clone(), self.take_group(&target)))
     }
 
@@ -167,6 +181,57 @@ mod tests {
         let (_, group) = b.drain_due().expect("expired group drains");
         assert_eq!(group.len(), 1);
         assert!(b.next_deadline().is_none());
+    }
+
+    #[test]
+    fn deadline_passed_during_foreign_batch_drains_immediately() {
+        // Regression: group "b" must drain on the loop iteration right
+        // after its deadline passes, even though that deadline expired
+        // while the executor was busy running group "a"'s batch — the
+        // batcher must not re-arm "b" with a fresh max_wait.
+        let mut b: Batcher<u32> = Batcher::new(cfg(2, 5));
+        b.push("a".into(), 1);
+        b.push("b".into(), 2);
+        b.push("a".into(), 3);
+        // "a" reached max_batch and drains first (the "executing" batch).
+        let (art, group) = b.drain_due().unwrap();
+        assert_eq!(art, "a");
+        assert_eq!(group.len(), 2);
+        // The deadline of "b" passes while "a" executes.
+        std::thread::sleep(Duration::from_millis(6));
+        assert_eq!(
+            b.next_deadline(),
+            Some(Duration::ZERO),
+            "expired leftover must make the next poll immediate"
+        );
+        let (art, group) = b.drain_due().expect("b is overdue, must drain now");
+        assert_eq!(art, "b");
+        assert_eq!(group.iter().map(|p| p.payload).collect::<Vec<_>>(), vec![2]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn stolen_handoff_keeps_original_deadline() {
+        // A pre-aged entry arriving via push_pending sits *behind* a fresh
+        // front entry; both the deadline and the drain decision must still
+        // honor the older stamp.
+        let mut b: Batcher<u32> = Batcher::new(cfg(10, 50));
+        b.push("fresh".into(), 1);
+        b.push_pending(Pending {
+            artifact: "stolen".into(),
+            enqueued: Instant::now() - Duration::from_millis(60),
+            payload: 2,
+        });
+        assert_eq!(
+            b.next_deadline(),
+            Some(Duration::ZERO),
+            "the stolen entry is already past its wait budget"
+        );
+        let (art, group) = b.drain_due().expect("overdue stolen group drains");
+        assert_eq!(art, "stolen");
+        assert_eq!(group.len(), 1);
+        assert_eq!(b.len(), 1, "the fresh entry stays queued");
+        assert!(b.next_deadline().unwrap() > Duration::ZERO);
     }
 
     #[test]

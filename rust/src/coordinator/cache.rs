@@ -13,19 +13,52 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, RwLock};
 
 use crate::coordinator::registry::{KernelRegistry, Resolution};
-use crate::dataset::GemmShape;
+use crate::dataset::{config_by_index, config_by_name, GemmShape};
+use crate::devsim::{profile_by_name, simulate, DeviceProfile};
 use crate::runtime::ArtifactMeta;
 
 /// A successful registry resolution, shared between the cache, the
-/// shape-affinity router and the shard that executes the request.
+/// load-aware router and the shard that executes the request.
 #[derive(Clone, Debug)]
 pub struct ResolvedKernel {
     pub meta: ArtifactMeta,
     pub resolution: Resolution,
+    /// Estimated execution cost of one dispatch (seconds), from the devsim
+    /// analytical model. Feeds the router's per-shard load gauges; a hint,
+    /// not a promise — only relative magnitudes matter for load balancing.
+    pub cost_hint_secs: f64,
+}
+
+impl ResolvedKernel {
+    /// The cost hint in integer nanoseconds, the unit the shard load
+    /// gauges accumulate atomically. Clamped to at least 1ns so every
+    /// queued request registers on the gauge.
+    pub fn cost_hint_ns(&self) -> u64 {
+        (self.cost_hint_secs * 1e9).max(1.0) as u64
+    }
+}
+
+/// Estimate the device-seconds one dispatch of `meta` at `shape` costs,
+/// using the same analytical model the SimBackend executes against. The
+/// XLA comparator artifact (no config index) is priced as a well-rounded
+/// proxy configuration, mirroring `SimBackend::simulated_secs`.
+pub fn estimate_cost_secs(
+    profile: &DeviceProfile,
+    meta: &ArtifactMeta,
+    shape: &GemmShape,
+) -> f64 {
+    let cfg = meta
+        .config_index
+        .map(config_by_index)
+        .unwrap_or_else(|| config_by_name("r4a4c4_wg16x16").expect("proxy config"));
+    let gflops = simulate(profile, shape, &cfg).max(1e-3);
+    shape.flops() / (gflops * 1e9)
 }
 
 pub struct ResolutionCache {
     cap: usize,
+    /// Device profile used to price resolutions for the load gauges.
+    profile: &'static DeviceProfile,
     /// RwLock, not Mutex: the steady state is ~100% hits, and a hit only
     /// needs a read guard — concurrent submitters must not serialize on
     /// the map once every bucket is resolved.
@@ -44,8 +77,19 @@ struct Inner {
 
 impl ResolutionCache {
     pub fn new(capacity: usize) -> ResolutionCache {
+        ResolutionCache::with_profile(capacity, "i7-6700k")
+    }
+
+    /// A cache whose cost hints are priced against a specific devsim
+    /// profile (falls back to the default profile for unknown names —
+    /// hints only need to be relatively consistent, not exact).
+    pub fn with_profile(capacity: usize, profile_name: &str) -> ResolutionCache {
+        let profile = profile_by_name(profile_name)
+            .or_else(|| profile_by_name("i7-6700k"))
+            .expect("default devsim profile exists");
         ResolutionCache {
             cap: capacity.max(1),
+            profile,
             inner: RwLock::new(Inner::default()),
             hits: AtomicUsize::new(0),
             misses: AtomicUsize::new(0),
@@ -64,7 +108,12 @@ impl ResolutionCache {
             return Ok(hit);
         }
         let (meta, resolution) = registry.resolve(shape)?;
-        let resolved = Arc::new(ResolvedKernel { meta: meta.clone(), resolution });
+        let cost_hint_secs = estimate_cost_secs(self.profile, meta, shape);
+        let resolved = Arc::new(ResolvedKernel {
+            meta: meta.clone(),
+            resolution,
+            cost_hint_secs,
+        });
         self.insert(*shape, resolved.clone());
         Ok(resolved)
     }
@@ -150,6 +199,31 @@ mod tests {
         assert!(cache.get(&shapes[0]).is_none());
         assert!(cache.get(&shapes[1]).is_some());
         assert!(cache.get(&shapes[2]).is_some());
+    }
+
+    #[test]
+    fn cost_hints_positive_and_grow_with_shape() {
+        let reg = registry();
+        let cache = ResolutionCache::new(16);
+        let small = cache.resolve(&reg, &GemmShape::new(32, 32, 32, 1)).unwrap();
+        let large = cache.resolve(&reg, &GemmShape::new(512, 784, 512, 1)).unwrap();
+        assert!(small.cost_hint_secs > 0.0);
+        assert!(small.cost_hint_ns() >= 1);
+        assert!(
+            large.cost_hint_secs > small.cost_hint_secs,
+            "a 512x784x512 GEMM must be priced above a 32^3 one \
+             ({} vs {})",
+            large.cost_hint_secs,
+            small.cost_hint_secs
+        );
+    }
+
+    #[test]
+    fn unknown_profile_falls_back_to_default() {
+        let reg = registry();
+        let cache = ResolutionCache::with_profile(16, "not-a-device");
+        let r = cache.resolve(&reg, &GemmShape::new(64, 64, 64, 1)).unwrap();
+        assert!(r.cost_hint_secs > 0.0);
     }
 
     #[test]

@@ -1,7 +1,12 @@
-//! Serving metrics: request counts, latency distribution, batch sizes and
-//! per-configuration dispatch counts.
+//! Serving metrics: request counts, latency distribution, batch sizes,
+//! per-configuration dispatch counts and the pool's scheduling counters
+//! (spilled routes, stolen batches, per-shard occupancy histogram).
 
 use std::collections::HashMap;
+
+/// Upper edges of the occupancy-histogram buckets: queue depths
+/// `0, 1, 2-3, 4-7, 8-15, 16-31, 32-63, 64+` observed at batch-drain time.
+pub const OCCUPANCY_BUCKETS: usize = 8;
 
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
@@ -10,6 +15,16 @@ pub struct Metrics {
     pub failures: usize,
     pub fallback_config: usize,
     pub fallback_xla: usize,
+    /// Requests routed off their shape-affinity shard because the preferred
+    /// shard's load gauge exceeded the imbalance threshold.
+    pub spilled: usize,
+    /// Ready batches this shard stole from an overloaded peer's injector.
+    pub steals: usize,
+    /// Individual requests that arrived via those stolen batches.
+    pub stolen_requests: usize,
+    /// Shard queue depth sampled at every batch drain, bucketed
+    /// logarithmically (see [`OCCUPANCY_BUCKETS`]).
+    pub occupancy: [usize; OCCUPANCY_BUCKETS],
     /// End-to-end latency samples (seconds).
     latencies: Vec<f64>,
     batch_sizes: Vec<usize>,
@@ -23,6 +38,22 @@ impl Metrics {
     pub fn record_batch(&mut self, size: usize) {
         self.batches += 1;
         self.batch_sizes.push(size);
+    }
+
+    /// Sample the shard's queue depth (queued + in-flight requests) into the
+    /// occupancy histogram. Called once per drained batch.
+    pub fn record_occupancy(&mut self, depth: usize) {
+        let bucket = match depth {
+            0 => 0,
+            1 => 1,
+            2..=3 => 2,
+            4..=7 => 3,
+            8..=15 => 4,
+            16..=31 => 5,
+            32..=63 => 6,
+            _ => 7,
+        };
+        self.occupancy[bucket] += 1;
     }
 
     /// Count how the registry resolved a request (direct hit vs fallback).
@@ -45,6 +76,12 @@ impl Metrics {
         self.failures += other.failures;
         self.fallback_config += other.fallback_config;
         self.fallback_xla += other.fallback_xla;
+        self.spilled += other.spilled;
+        self.steals += other.steals;
+        self.stolen_requests += other.stolen_requests;
+        for (mine, theirs) in self.occupancy.iter_mut().zip(other.occupancy) {
+            *mine += theirs;
+        }
         self.latencies.extend(other.latencies);
         self.batch_sizes.extend(other.batch_sizes);
         for (config, count) in other.per_config {
@@ -90,23 +127,29 @@ impl Metrics {
             .latency_stats()
             .map(|s| {
                 format!(
-                    "p50={:.1}us p95={:.1}us mean={:.1}us",
+                    "p50={:.1}us p95={:.1}us p99={:.1}us mean={:.1}us",
                     s.p50 * 1e6,
                     s.p95 * 1e6,
+                    s.p99 * 1e6,
                     s.mean * 1e6
                 )
             })
             .unwrap_or_else(|| "n/a".into());
         format!(
             "requests={} batches={} mean_batch={:.2} failures={} \
-             fallbacks(config/xla)={}/{} distinct_configs={} latency[{}]",
+             fallbacks(config/xla)={}/{} spilled={} steals={}/{} \
+             distinct_configs={} occupancy={:?} latency[{}]",
             self.requests,
             self.batches,
             self.mean_batch_size(),
             self.failures,
             self.fallback_config,
             self.fallback_xla,
+            self.spilled,
+            self.steals,
+            self.stolen_requests,
             self.distinct_configs(),
+            self.occupancy,
             lat
         )
     }
@@ -154,6 +197,11 @@ mod tests {
         b.record_request(0.004, Some(3));
         b.record_resolution(&Resolution::FallbackConfig);
         b.record_resolution(&Resolution::Direct); // no-op
+        b.spilled = 2;
+        b.steals = 1;
+        b.stolen_requests = 4;
+        b.record_occupancy(0);
+        b.record_occupancy(5);
 
         a.merge(b);
         assert_eq!(a.requests, 3);
@@ -161,9 +209,23 @@ mod tests {
         assert_eq!(a.failures, 1);
         assert_eq!(a.fallback_xla, 1);
         assert_eq!(a.fallback_config, 1);
+        assert_eq!(a.spilled, 2);
+        assert_eq!(a.steals, 1);
+        assert_eq!(a.stolen_requests, 4);
+        assert_eq!(a.occupancy[0], 1);
+        assert_eq!(a.occupancy[3], 1);
         assert_eq!(a.per_config[&3], 2);
         assert_eq!(a.per_config[&XLA_BACKEND_KEY], 1);
         assert_eq!(a.latency_stats().unwrap().n, 3);
         assert_eq!(a.mean_batch_size(), 3.0);
+    }
+
+    #[test]
+    fn occupancy_buckets_are_logarithmic() {
+        let mut m = Metrics::default();
+        for depth in [0, 1, 2, 3, 4, 7, 8, 16, 32, 64, 1000] {
+            m.record_occupancy(depth);
+        }
+        assert_eq!(m.occupancy, [1, 1, 2, 2, 1, 1, 1, 2]);
     }
 }

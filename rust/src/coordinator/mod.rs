@@ -5,11 +5,14 @@
 //! * [`cache`] — the memoized selector hot path (bounded shape -> artifact
 //!   resolution cache on the submit path).
 //! * [`registry`] — maps GEMM requests to shipped AOT artifacts.
-//! * [`batcher`] — dynamic request batching by target executable.
-//! * [`server`] — the sharded executor pool: shape-affinity router, one
-//!   engine backend + batcher + metrics per shard.
+//! * [`batcher`] — dynamic request batching by target executable, with
+//!   deadline-preserving handoff for stolen batches.
+//! * [`server`] — the executor pool: load-aware router (shape affinity as
+//!   a preference, spill on imbalance), work-stealing shards, one engine
+//!   backend + batcher + metrics per shard.
 //! * [`vgg`] — the VGG16 inference engine of paper §6 (`pjrt` feature).
-//! * [`metrics`] — serving statistics with per-shard aggregation.
+//! * [`metrics`] — serving statistics (incl. spill/steal counters and
+//!   occupancy histograms) with exact per-shard aggregation.
 
 pub mod batcher;
 pub mod cache;
@@ -25,6 +28,8 @@ pub use cache::{ResolutionCache, ResolvedKernel};
 pub use metrics::Metrics;
 pub use registry::{KernelRegistry, Resolution};
 pub use selector::{tune_selector, SelectorPolicy};
-pub use server::{Coordinator, GemmRequest, GemmResponse, PoolConfig, PoolReport};
+pub use server::{
+    Coordinator, GemmRequest, GemmResponse, PoolConfig, PoolReport, Routing, ShardLoad,
+};
 #[cfg(feature = "pjrt")]
 pub use vgg::{LayerTiming, VggEngine};

@@ -1,21 +1,34 @@
-//! The serving loop: a sharded executor pool.
+//! The serving loop: a load-aware, work-stealing executor pool.
 //!
 //! Any number of client threads submit GEMM requests; the submit path
-//! resolves each to a shipped artifact through the memoized selector cache,
-//! routes it by **shape affinity** (hash of the resolved artifact path) to
-//! one of N executor shards, and receives the response on a per-request
-//! channel. Each shard owns a private [`Backend`] instance (PJRT handles
-//! are not `Send`, so backends are constructed on the shard's own thread
-//! from a Send-able [`EngineKind`] spec), a dynamic [`Batcher`], and its
-//! own [`Metrics`]; affinity routing keeps every executable cache hot on
-//! exactly one shard. At shutdown the per-shard metrics are collected and
-//! merged into a pool-wide total.
+//! resolves each to a shipped artifact through the memoized selector cache
+//! (which also attaches a devsim-informed per-dispatch cost hint), then
+//! routes it to one of N executor shards. Routing keeps **shape affinity**
+//! (hash of the resolved artifact path) as a *preference* — it is what
+//! keeps every executable cache hot on exactly one shard — but each shard
+//! exposes an atomic [`ShardLoad`] gauge (queue depth + estimated
+//! in-flight cost), and when the preferred shard's load exceeds a
+//! configurable imbalance threshold the request **spills** to the
+//! least-loaded shard instead. Independently, an idle shard **steals** a
+//! whole ready batch (one artifact group) from the most loaded peer's
+//! injector deque, so tail latency stops tracking the hottest shape even
+//! when the spill heuristic lags a bursty mix.
+//!
+//! Each shard owns a private [`Backend`] instance (PJRT handles are not
+//! `Send`, so backends are constructed on the shard's own thread from a
+//! Send-able [`EngineKind`] spec), a dynamic [`Batcher`], and its own
+//! [`Metrics`]. Stolen work keeps its original submit stamp, so batch
+//! deadlines survive migration. At shutdown the per-shard metrics are
+//! collected and merged into a pool-wide total; the merge is exact, so the
+//! pool totals equal the per-shard sums whatever spilled or was stolen.
 
 use std::collections::hash_map::DefaultHasher;
+use std::collections::VecDeque;
 use std::hash::{Hash, Hasher};
 use std::path::PathBuf;
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -45,6 +58,86 @@ pub struct GemmResponse {
     pub latency: Duration,
 }
 
+/// Router policy of the executor pool.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Routing {
+    /// Pure shape affinity: the artifact hash alone picks the shard.
+    Affinity,
+    /// Shape affinity as a preference, spilling to the least-loaded shard
+    /// when the preferred shard's load gauge exceeds the imbalance
+    /// threshold (the default).
+    #[default]
+    LoadAware,
+}
+
+impl Routing {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Routing::Affinity => "affinity",
+            Routing::LoadAware => "load-aware",
+        }
+    }
+
+    /// Parse a `--routing` style flag value.
+    pub fn by_name(name: &str) -> Option<Routing> {
+        match name {
+            "affinity" => Some(Routing::Affinity),
+            "load-aware" | "load_aware" => Some(Routing::LoadAware),
+            _ => None,
+        }
+    }
+}
+
+/// Fixed per-request dispatch overhead (ns) folded into the load score for
+/// every queued request, so many cheap requests register as load just like
+/// one expensive one.
+const QUEUED_OVERHEAD_NS: u64 = 20_000;
+
+/// Minimum absolute load (ns) on the preferred shard before the router
+/// even considers spilling — keeps a near-idle pool on the pure-affinity
+/// fast path and stops spill ping-pong at trivial depths.
+const SPILL_MIN_EXCESS_NS: u64 = 50_000;
+
+/// How long an idle shard sleeps between steal attempts when the whole
+/// pool is quiet. Short enough that a suddenly-overloaded peer is relieved
+/// promptly, long enough to keep idle wakeups negligible.
+const IDLE_POLL: Duration = Duration::from_millis(5);
+
+/// Atomic load gauge of one executor shard: how many requests it owns
+/// (injector + batcher + currently executing) and their summed estimated
+/// cost. Written by the router on submit, by the shard on completion, and
+/// transferred wholesale on steals.
+#[derive(Debug, Default)]
+pub struct ShardLoad {
+    queued: AtomicUsize,
+    cost_ns: AtomicU64,
+}
+
+impl ShardLoad {
+    fn add(&self, n: usize, cost_ns: u64) {
+        self.queued.fetch_add(n, Ordering::Relaxed);
+        self.cost_ns.fetch_add(cost_ns, Ordering::Relaxed);
+    }
+
+    fn sub(&self, n: usize, cost_ns: u64) {
+        self.queued.fetch_sub(n, Ordering::Relaxed);
+        self.cost_ns.fetch_sub(cost_ns, Ordering::Relaxed);
+    }
+
+    /// Requests currently owned by the shard.
+    pub fn depth(&self) -> usize {
+        self.queued.load(Ordering::Relaxed)
+    }
+
+    /// The scalar the router compares: estimated in-flight cost plus a
+    /// fixed dispatch overhead per queued request, in nanoseconds.
+    pub fn score_ns(&self) -> u64 {
+        self.cost_ns
+            .load(Ordering::Relaxed)
+            .saturating_add(self.depth() as u64 * QUEUED_OVERHEAD_NS)
+    }
+}
+
 /// Executor-pool configuration.
 #[derive(Clone, Debug)]
 pub struct PoolConfig {
@@ -55,6 +148,15 @@ pub struct PoolConfig {
     pub batcher: BatcherConfig,
     /// Capacity of the memoized shape -> artifact selector cache.
     pub selector_cache: usize,
+    /// Router policy: pure shape affinity, or affinity with load spill.
+    pub routing: Routing,
+    /// Spill threshold: the preferred shard's load score must exceed
+    /// `imbalance x` the least-loaded shard's score (plus a small absolute
+    /// slack) before a request leaves its affinity shard.
+    pub imbalance: f64,
+    /// Minimum jobs a victim's injector must hold before an idle shard
+    /// steals a batch from it.
+    pub steal_min: usize,
 }
 
 impl Default for PoolConfig {
@@ -64,6 +166,9 @@ impl Default for PoolConfig {
             engine: EngineKind::default(),
             batcher: BatcherConfig::default(),
             selector_cache: 1024,
+            routing: Routing::default(),
+            imbalance: 4.0,
+            steal_min: 2,
         }
     }
 }
@@ -94,30 +199,82 @@ impl PoolReport {
     }
 }
 
-enum Message {
-    Request(Job),
-    Stop(Sender<Metrics>),
-}
-
 struct Job {
     req: GemmRequest,
     t_submit: Instant,
     resolved: Arc<ResolvedKernel>,
+    /// Cost hint frozen at submit time; the exact amount later subtracted
+    /// from whichever gauge ends up owning the job.
+    cost_ns: u64,
+    /// True when the router sent this job off its affinity shard.
+    spilled: bool,
 }
 
-struct Shard {
-    tx: Sender<Message>,
-    worker: Option<JoinHandle<()>>,
+#[derive(Default)]
+struct QueueInner {
+    jobs: VecDeque<Job>,
+    stop: Option<Sender<Metrics>>,
+}
+
+/// One shard's injector: the deque the router pushes into, the shard
+/// drains from, and idle peers steal ready batches out of.
+struct ShardQueue {
+    inner: Mutex<QueueInner>,
+    cv: Condvar,
+    load: ShardLoad,
+    /// Cleared (via [`AliveGuard`], so panics count too) when the owning
+    /// worker exits. Peers relax the steal threshold to 1 for dead queues
+    /// so orphaned jobs are rescued instead of hanging their callers.
+    alive: AtomicBool,
+}
+
+/// Marks the shard's queue dead when the worker leaves `shard_loop` for
+/// any reason — a normal stop, a backend-init failure, or an unwind.
+struct AliveGuard(Arc<ShardQueue>);
+
+impl Drop for AliveGuard {
+    fn drop(&mut self) {
+        self.0.alive.store(false, Ordering::Relaxed);
+    }
+}
+
+impl ShardQueue {
+    fn new() -> ShardQueue {
+        ShardQueue {
+            inner: Mutex::new(QueueInner::default()),
+            cv: Condvar::new(),
+            load: ShardLoad::default(),
+            alive: AtomicBool::new(true),
+        }
+    }
+
+    fn push(&self, job: Job) {
+        self.load.add(1, job.cost_ns);
+        let mut inner = self.inner.lock().unwrap();
+        inner.jobs.push_back(job);
+        drop(inner);
+        self.cv.notify_one();
+    }
+
+    fn signal_stop(&self, reply: Sender<Metrics>) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.stop = Some(reply);
+        drop(inner);
+        self.cv.notify_one();
+    }
 }
 
 /// Handle to a running executor pool.
 pub struct Coordinator {
     registry: Arc<KernelRegistry>,
     cache: ResolutionCache,
-    shards: Vec<Shard>,
+    queues: Arc<Vec<Arc<ShardQueue>>>,
+    workers: Vec<Option<JoinHandle<()>>>,
     /// Metrics for requests that never reach a shard (resolution failures).
     front: Mutex<Metrics>,
     engine_name: &'static str,
+    routing: Routing,
+    imbalance: f64,
 }
 
 impl Coordinator {
@@ -154,40 +311,79 @@ impl Coordinator {
         #[cfg(not(feature = "pjrt"))]
         let manifest = Manifest::load_or_synthetic(&artifacts_dir);
 
+        // Price cost hints against the profile the shards will simulate on
+        // (native backends just need relatively consistent hints).
+        let profile_name = match &cfg.engine {
+            EngineKind::Sim { profile } => *profile,
+            #[cfg(feature = "pjrt")]
+            EngineKind::Pjrt => "i7-6700k",
+        };
+
         let registry = Arc::new(KernelRegistry::new(manifest, policy));
         let n_shards = cfg.shards.max(1);
-        let mut shards = Vec::with_capacity(n_shards);
+        let queues: Arc<Vec<Arc<ShardQueue>>> =
+            Arc::new((0..n_shards).map(|_| Arc::new(ShardQueue::new())).collect());
+        let mut workers: Vec<Option<JoinHandle<()>>> = Vec::with_capacity(n_shards);
         for shard_id in 0..n_shards {
-            let (tx, rx) = channel::<Message>();
             let (ready_tx, ready_rx) = channel::<Result<(), String>>();
             let engine = cfg.engine.clone();
             let batcher_cfg = cfg.batcher.clone();
             let dir = artifacts_dir.clone();
-            let worker = std::thread::Builder::new()
+            let queues_for_shard = queues.clone();
+            let steal_min = cfg.steal_min.max(1);
+            let spawned = std::thread::Builder::new()
                 .name(format!("kernelsel-shard-{shard_id}"))
-                .spawn(move || shard_loop(dir, engine, batcher_cfg, rx, ready_tx))
-                .map_err(|e| e.to_string())?;
-            ready_rx
-                .recv()
-                .map_err(|_| format!("shard {shard_id} died during startup"))?
-                .map_err(|e| format!("shard {shard_id}: {e}"))?;
-            shards.push(Shard { tx, worker: Some(worker) });
+                .spawn(move || {
+                    shard_loop(
+                        shard_id,
+                        dir,
+                        engine,
+                        batcher_cfg,
+                        queues_for_shard,
+                        steal_min,
+                        ready_tx,
+                    )
+                })
+                .map_err(|e| e.to_string());
+            let readiness = match spawned {
+                Ok(worker) => {
+                    workers.push(Some(worker));
+                    ready_rx
+                        .recv()
+                        .map_err(|_| format!("shard {shard_id} died during startup"))
+                        .and_then(|r| r.map_err(|e| format!("shard {shard_id}: {e}")))
+                }
+                Err(e) => Err(e),
+            };
+            if let Err(e) = readiness {
+                // Stop and join the shards that did start; otherwise they
+                // idle-poll forever on queues nobody will ever use.
+                shutdown_workers(&queues, &mut workers);
+                return Err(e);
+            }
         }
         Ok(Coordinator {
             registry,
-            cache: ResolutionCache::new(cfg.selector_cache),
-            shards,
+            cache: ResolutionCache::with_profile(cfg.selector_cache, profile_name),
+            queues,
+            workers,
             front: Mutex::new(Metrics::default()),
             engine_name: cfg.engine.name(),
+            routing: cfg.routing,
+            imbalance: cfg.imbalance.max(1.0),
         })
     }
 
     pub fn n_shards(&self) -> usize {
-        self.shards.len()
+        self.queues.len()
     }
 
     pub fn engine_name(&self) -> &'static str {
         self.engine_name
+    }
+
+    pub fn routing(&self) -> Routing {
+        self.routing
     }
 
     pub fn registry(&self) -> &KernelRegistry {
@@ -199,12 +395,64 @@ impl Coordinator {
         self.cache.stats()
     }
 
-    /// Shape-affinity router: requests resolving to the same artifact land
-    /// on the same shard, keeping its executable cache hot.
+    /// Live per-shard (queue depth, load score ns) snapshot.
+    pub fn shard_loads(&self) -> Vec<(usize, u64)> {
+        self.queues
+            .iter()
+            .map(|q| (q.load.depth(), q.load.score_ns()))
+            .collect()
+    }
+
+    /// Whether a shard's worker thread is still running. A worker that
+    /// panicked leaves its queue alive but will never serve it.
+    fn worker_alive(&self, shard: usize) -> bool {
+        self.workers[shard].as_ref().is_some_and(|w| !w.is_finished())
+    }
+
+    /// The least-loaded shard whose worker is still alive, if any.
+    fn least_loaded_alive(&self) -> Option<usize> {
+        (0..self.queues.len())
+            .filter(|&i| self.worker_alive(i))
+            .min_by_key(|&i| self.queues[i].load.score_ns())
+    }
+
+    /// Shape-affinity preference: requests resolving to the same artifact
+    /// prefer the same shard, keeping its executable cache hot.
     fn shard_for(&self, artifact: &str) -> usize {
         let mut h = DefaultHasher::new();
         artifact.hash(&mut h);
-        (h.finish() as usize) % self.shards.len()
+        (h.finish() as usize) % self.queues.len()
+    }
+
+    /// Pick the shard for a resolved request. Returns `(shard, spilled)`:
+    /// affinity preference first; under [`Routing::LoadAware`], spill to
+    /// the least-loaded shard once the preferred shard's gauge exceeds
+    /// `imbalance x` the minimum plus an absolute slack.
+    fn route(&self, resolved: &ResolvedKernel) -> (usize, bool) {
+        let preferred = self.shard_for(&resolved.meta.path);
+        if self.queues.len() == 1 || self.routing == Routing::Affinity {
+            return (preferred, false);
+        }
+        let pref_score = self.queues[preferred].load.score_ns();
+        if pref_score < SPILL_MIN_EXCESS_NS {
+            // Near-idle preferred shard: stay on the affinity fast path.
+            return (preferred, false);
+        }
+        let mut min_shard = preferred;
+        let mut min_score = pref_score;
+        for (i, q) in self.queues.iter().enumerate() {
+            let s = q.load.score_ns();
+            if s < min_score {
+                min_shard = i;
+                min_score = s;
+            }
+        }
+        let threshold = min_score as f64 * self.imbalance + SPILL_MIN_EXCESS_NS as f64;
+        if min_shard != preferred && pref_score as f64 > threshold {
+            (min_shard, true)
+        } else {
+            (preferred, false)
+        }
     }
 
     /// Submit a request; the response arrives on the returned receiver.
@@ -229,13 +477,31 @@ impl Coordinator {
                 return resp_rx;
             }
         };
-        let shard = self.shard_for(&resolved.meta.path);
+        let (shard, spilled) = self.route(&resolved);
+        // A panicked worker leaves its queue alive but unserved: reroute
+        // new work to the least-loaded live shard (work already queued on
+        // the dead shard can still be rescued by the steal path), and fail
+        // fast instead of hanging the caller when no shard is left.
+        let (shard, spilled) = if self.worker_alive(shard) {
+            (shard, spilled)
+        } else {
+            match self.least_loaded_alive() {
+                Some(alt) => (alt, true),
+                None => {
+                    self.front.lock().unwrap().failures += 1;
+                    let _ = resp_tx.send(GemmResponse {
+                        result: Err("executor pool: every shard worker is dead".to_string()),
+                        config_used: None,
+                        artifact: String::new(),
+                        latency: t_submit.elapsed(),
+                    });
+                    return resp_rx;
+                }
+            }
+        };
+        let cost_ns = resolved.cost_hint_ns();
         let req = GemmRequest { shape, lhs, rhs, respond: resp_tx };
-        // A send failure means the shard is gone; the dropped resp_tx
-        // surfaces as RecvError on the caller side.
-        let _ = self.shards[shard]
-            .tx
-            .send(Message::Request(Job { req, t_submit, resolved }));
+        self.queues[shard].push(Job { req, t_submit, resolved, cost_ns, spilled });
         resp_rx
     }
 
@@ -259,18 +525,22 @@ impl Coordinator {
     /// Stop every shard; return per-shard metrics plus merged totals.
     pub fn stop_detailed(mut self) -> PoolReport {
         // Signal all shards first so they drain concurrently, then join.
-        let mut replies = Vec::with_capacity(self.shards.len());
-        for shard in &self.shards {
+        let mut replies = Vec::with_capacity(self.queues.len());
+        for q in self.queues.iter() {
             let (mtx, mrx) = channel();
-            let _ = shard.tx.send(Message::Stop(mtx));
+            q.signal_stop(mtx);
             replies.push(mrx);
         }
-        let mut per_shard = Vec::with_capacity(self.shards.len());
-        for (shard, mrx) in self.shards.iter_mut().zip(replies) {
-            per_shard.push(mrx.recv().unwrap_or_default());
-            if let Some(w) = shard.worker.take() {
+        let mut per_shard = Vec::with_capacity(self.queues.len());
+        for (worker, mrx) in self.workers.iter_mut().zip(replies) {
+            // Join before reading the reply: a worker that died without
+            // taking its stop signal never sends, and its reply Sender sits
+            // parked inside the queue — a blocking recv() would deadlock.
+            // After the join, the flushed metrics (if any) are buffered.
+            if let Some(w) = worker.take() {
                 let _ = w.join();
             }
+            per_shard.push(mrx.try_recv().unwrap_or_default());
         }
         let mut total = self.front.lock().map(|m| m.clone()).unwrap_or_default();
         for m in &per_shard {
@@ -283,23 +553,118 @@ impl Coordinator {
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        for shard in &mut self.shards {
-            if let Some(w) = shard.worker.take() {
-                let (mtx, _mrx) = channel();
-                let _ = shard.tx.send(Message::Stop(mtx));
-                let _ = w.join();
-            }
+        shutdown_workers(&self.queues, &mut self.workers);
+    }
+}
+
+/// Signal stop to every queue with a live worker handle and join it.
+/// Shared by `Drop` and the partial-startup failure path.
+fn shutdown_workers(queues: &[Arc<ShardQueue>], workers: &mut [Option<JoinHandle<()>>]) {
+    for (q, worker) in queues.iter().zip(workers.iter_mut()) {
+        if let Some(w) = worker.take() {
+            let (mtx, _mrx) = channel();
+            q.signal_stop(mtx);
+            let _ = w.join();
         }
     }
 }
 
+/// Drain everything the injector currently holds, plus a pending stop
+/// signal if one arrived. Never blocks.
+fn take_injector(q: &ShardQueue) -> (Vec<Job>, Option<Sender<Metrics>>) {
+    let mut inner = q.inner.lock().unwrap();
+    let jobs = inner.jobs.drain(..).collect();
+    let stop = inner.stop.take();
+    (jobs, stop)
+}
+
+/// Block until new work or a stop signal lands in the injector, bounded by
+/// `timeout` (the batcher's next deadline). Spurious wakeups simply loop.
+fn wait_for_work(q: &ShardQueue, timeout: Duration) {
+    let inner = q.inner.lock().unwrap();
+    if inner.jobs.is_empty() && inner.stop.is_none() {
+        let _unused = q.cv.wait_timeout(inner, timeout).unwrap();
+    }
+}
+
+/// Steal one whole ready batch (the oldest artifact group, up to
+/// `max_batch` jobs) from the most loaded peer whose injector holds at
+/// least `steal_min` jobs. Transfers the stolen jobs' load-gauge share
+/// from the victim to the thief. Returns `None` when there is nothing
+/// worth stealing (or the best victim's lock is contended — next idle poll
+/// retries).
+fn try_steal(
+    queues: &[Arc<ShardQueue>],
+    my_id: usize,
+    steal_min: usize,
+    max_batch: usize,
+) -> Option<Vec<Job>> {
+    // Rank peers by load score, but probe them in descending order rather
+    // than committing to the top one: the gauge overstates *stealable*
+    // work (it includes jobs a victim already drained into its private
+    // batcher), so the busiest-looking shard may have an empty injector
+    // while a lower-scored peer's injector backlog goes unrelieved.
+    // A dead queue (worker exited/panicked) is stealable down to a single
+    // job — orphaned work must be rescued, not left to hang its callers.
+    let mut candidates: Vec<(u64, usize)> = Vec::new();
+    for (i, q) in queues.iter().enumerate() {
+        if i == my_id {
+            continue;
+        }
+        let min_jobs = if q.alive.load(Ordering::Relaxed) { steal_min } else { 1 };
+        if q.load.depth() >= min_jobs {
+            candidates.push((q.load.score_ns(), i));
+        }
+    }
+    candidates.sort_unstable_by(|a, b| b.0.cmp(&a.0));
+    for (_, victim_id) in candidates {
+        let victim = &queues[victim_id];
+        let min_jobs = if victim.alive.load(Ordering::Relaxed) { steal_min } else { 1 };
+        let Ok(mut inner) = victim.inner.try_lock() else {
+            continue; // contended: try the next victim, re-poll soon
+        };
+        if inner.jobs.len() < min_jobs {
+            continue;
+        }
+        // The oldest group is the batch closest to its deadline; taking
+        // the whole group keeps the executable-cache story intact on both
+        // sides.
+        let anchor =
+            inner.jobs.front().expect("len >= min_jobs >= 1").resolved.meta.path.clone();
+        let mut stolen = Vec::new();
+        let mut rest = VecDeque::with_capacity(inner.jobs.len());
+        while let Some(job) = inner.jobs.pop_front() {
+            if stolen.len() < max_batch && job.resolved.meta.path == anchor {
+                stolen.push(job);
+            } else {
+                rest.push_back(job);
+            }
+        }
+        inner.jobs = rest;
+        drop(inner);
+        let cost: u64 = stolen.iter().map(|j| j.cost_ns).sum();
+        victim.load.sub(stolen.len(), cost);
+        queues[my_id].load.add(stolen.len(), cost);
+        return Some(stolen);
+    }
+    None
+}
+
+#[allow(clippy::too_many_arguments)]
 fn shard_loop(
+    shard_id: usize,
     artifacts_dir: PathBuf,
     engine: EngineKind,
     batcher_cfg: BatcherConfig,
-    rx: Receiver<Message>,
+    queues: Arc<Vec<Arc<ShardQueue>>>,
+    steal_min: usize,
     ready: Sender<Result<(), String>>,
 ) {
+    let my = queues[shard_id].clone();
+    // Clears `my.alive` on every exit path — normal stop, failed backend
+    // init, or a panic unwinding — so the router and the steal path know
+    // this queue is orphaned.
+    let _alive = AliveGuard(my.clone());
     let mut backend = match engine.create(&artifacts_dir) {
         Ok(b) => b,
         Err(e) => {
@@ -307,37 +672,59 @@ fn shard_loop(
             return;
         }
     };
+    let max_batch = batcher_cfg.max_batch.max(1);
     let mut batcher: Batcher<Job> = Batcher::new(batcher_cfg);
     let mut metrics = Metrics::default();
     let _ = ready.send(Ok(()));
 
     let mut stop_reply: Option<Sender<Metrics>> = None;
-    'outer: loop {
-        // Wait for work, bounded by the batcher's next deadline.
-        let timeout = batcher
-            .next_deadline()
-            .unwrap_or(Duration::from_millis(50));
-        match rx.recv_timeout(timeout) {
-            Ok(Message::Request(job)) => {
-                let artifact = job.resolved.meta.path.clone();
-                batcher.push(artifact, job);
-            }
-            Ok(Message::Stop(reply)) => {
-                stop_reply = Some(reply);
-                break 'outer;
-            }
-            Err(RecvTimeoutError::Timeout) => {}
-            Err(RecvTimeoutError::Disconnected) => break 'outer,
+    loop {
+        // Pull everything the injector holds; stolen or fresh, a job's
+        // wait-clock starts at submit, so deadlines survive the handoff.
+        let (jobs, stop) = take_injector(&my);
+        for job in jobs {
+            let artifact = job.resolved.meta.path.clone();
+            batcher.push_pending(Pending { artifact, enqueued: job.t_submit, payload: job });
         }
+        if let Some(reply) = stop {
+            stop_reply = Some(reply);
+            break;
+        }
+
         // Serve every batch that is due.
+        let mut ran = false;
         while let Some((artifact, group)) = batcher.drain_due() {
-            run_batch(backend.as_mut(), &artifact, group, &mut metrics);
+            run_batch(backend.as_mut(), &my.load, &artifact, group, &mut metrics);
+            ran = true;
         }
+        if ran {
+            continue; // re-check the injector before sleeping
+        }
+
+        // Fully idle: relieve the most loaded peer before going to sleep.
+        if batcher.is_empty() {
+            if let Some(stolen) = try_steal(&queues, shard_id, steal_min, max_batch) {
+                metrics.steals += 1;
+                metrics.stolen_requests += stolen.len();
+                for job in stolen {
+                    let artifact = job.resolved.meta.path.clone();
+                    batcher.push_pending(Pending {
+                        artifact,
+                        enqueued: job.t_submit,
+                        payload: job,
+                    });
+                }
+                continue; // aged entries: drain_due fires immediately
+            }
+        }
+
+        let timeout = batcher.next_deadline().unwrap_or(IDLE_POLL);
+        wait_for_work(&my, timeout);
     }
 
     // Flush outstanding work before stopping.
     for (artifact, group) in batcher.drain_all() {
-        run_batch(backend.as_mut(), &artifact, group, &mut metrics);
+        run_batch(backend.as_mut(), &my.load, &artifact, group, &mut metrics);
     }
     if let Some(reply) = stop_reply {
         let _ = reply.send(metrics);
@@ -346,13 +733,15 @@ fn shard_loop(
 
 fn run_batch(
     backend: &mut dyn Backend,
+    load: &ShardLoad,
     artifact: &str,
     group: Vec<Pending<Job>>,
     metrics: &mut Metrics,
 ) {
     metrics.record_batch(group.len());
+    metrics.record_occupancy(load.depth());
     // One prepare per batch: first touch compiles, later batches hit the
-    // backend's executable cache (kept hot by shape-affinity routing).
+    // backend's executable cache (kept hot by the affinity preference).
     let prepared = match group.first() {
         Some(p) => backend.prepare(&p.payload.resolved.meta),
         None => return,
@@ -368,8 +757,14 @@ fn run_batch(
         if result.is_err() {
             metrics.failures += 1;
         }
+        if job.spilled {
+            metrics.spilled += 1;
+        }
         metrics.record_resolution(&job.resolved.resolution);
         metrics.record_request(latency.as_secs_f64(), meta.config_index);
+        // Release the gauge before responding: a blocking caller must see
+        // an up-to-date load when it submits its next request.
+        load.sub(1, job.cost_ns);
         let _ = job.req.respond.send(GemmResponse {
             result,
             config_used: meta.config_index,
@@ -461,6 +856,9 @@ mod tests {
 
     #[test]
     fn shape_affinity_concentrates_an_artifact_on_one_shard() {
+        // Sequential blocking calls keep every gauge at zero at submit
+        // time, so even the default load-aware router must stay on the
+        // affinity fast path — the common case keeps caches hot.
         let coord = sim_pool(4, SelectorPolicy::Xla);
         let shape = GemmShape::new(32, 32, 32, 1);
         for i in 0..8 {
@@ -469,6 +867,7 @@ mod tests {
             coord.call(shape, lhs, rhs).unwrap().result.unwrap();
         }
         let report = coord.stop_detailed();
+        assert_eq!(report.total.spilled, 0);
         let busy: Vec<usize> = report
             .per_shard
             .iter()
@@ -565,5 +964,126 @@ mod tests {
         assert!(report.summary().contains("shard 0:"));
         // Registry resolutions were direct for a deployed config.
         assert_eq!(report.total.fallback_config + report.total.fallback_xla, 0);
+    }
+
+    #[test]
+    fn routing_flag_roundtrip() {
+        assert_eq!(Routing::by_name("affinity"), Some(Routing::Affinity));
+        assert_eq!(Routing::by_name("load-aware"), Some(Routing::LoadAware));
+        assert_eq!(Routing::by_name("load_aware"), Some(Routing::LoadAware));
+        assert_eq!(Routing::by_name("bogus"), None);
+        assert_eq!(Routing::default().name(), "load-aware");
+    }
+
+    /// Submit `n` requests of a 90/10 skewed mix asynchronously (all
+    /// receivers collected first, then drained), returning every result
+    /// in submission order plus the shutdown report.
+    fn run_skewed(n: usize, shards: usize, routing: Routing) -> (Vec<Vec<f32>>, PoolReport) {
+        let hot = GemmShape::new(32, 32, 32, 1);
+        let cold = [
+            GemmShape::new(64, 64, 64, 1),
+            GemmShape::new(32, 32, 32, 4),
+            GemmShape::new(128, 128, 128, 1),
+        ];
+        let coord = Coordinator::start_pool(
+            PathBuf::from("/nonexistent-artifacts"),
+            SelectorPolicy::Xla,
+            PoolConfig { shards, routing, imbalance: 1.0, ..PoolConfig::default() },
+        )
+        .expect("coordinator start");
+        let mut rxs = Vec::with_capacity(n);
+        for i in 0..n {
+            let shape = if i % 10 == 9 { cold[(i / 10) % cold.len()] } else { hot };
+            let lhs = fill_buffer(i as u32, shape.batch * shape.m * shape.k);
+            let rhs = fill_buffer((i + 13) as u32, shape.batch * shape.k * shape.n);
+            rxs.push(coord.submit(shape, lhs, rhs));
+        }
+        let results: Vec<Vec<f32>> = rxs
+            .into_iter()
+            .map(|rx| rx.recv().expect("response").result.expect("gemm ok"))
+            .collect();
+        (results, coord.stop_detailed())
+    }
+
+    #[test]
+    fn skewed_pool_results_bit_identical_to_single_shard() {
+        // 1000 requests, 90% one shape: the 4-shard load-aware pool must
+        // return bit-identical results to the 1-shard run, and the merged
+        // PoolReport counters must equal the per-shard sums (steals and
+        // spills included).
+        let n = 1000;
+        let (base, base_report) = run_skewed(n, 1, Routing::Affinity);
+        let (wide, report) = run_skewed(n, 4, Routing::LoadAware);
+        assert_eq!(base.len(), n);
+        assert_eq!(base, wide, "results must not depend on pool width or routing");
+        assert_eq!(base_report.total.requests, n);
+        assert_eq!(report.total.requests, n);
+        assert_eq!(report.total.failures, 0);
+        assert_eq!(report.per_shard.len(), 4);
+
+        // Exact aggregation: merged totals == per-shard sums, field by field.
+        let sum = |f: fn(&Metrics) -> usize| -> usize {
+            report.per_shard.iter().map(f).sum()
+        };
+        assert_eq!(report.total.requests, sum(|m| m.requests));
+        assert_eq!(report.total.batches, sum(|m| m.batches));
+        assert_eq!(report.total.failures, sum(|m| m.failures));
+        assert_eq!(report.total.spilled, sum(|m| m.spilled));
+        assert_eq!(report.total.steals, sum(|m| m.steals));
+        assert_eq!(report.total.stolen_requests, sum(|m| m.stolen_requests));
+        assert_eq!(
+            report.total.occupancy.iter().sum::<usize>(),
+            report
+                .per_shard
+                .iter()
+                .map(|m| m.occupancy.iter().sum::<usize>())
+                .sum::<usize>()
+        );
+
+        // The burst dwarfs a single shard: the tight imbalance threshold
+        // must have spilled part of the hot shape to idle shards.
+        assert!(
+            report.total.spilled > 0,
+            "a 90% hot-shape burst at imbalance=1.0 must spill\n{}",
+            report.summary()
+        );
+    }
+
+    #[test]
+    fn idle_shards_steal_from_overloaded_peer_under_pure_affinity() {
+        // Pure affinity routing pins one expensive shape to one shard; an
+        // async burst must be partially drained by the idle shards through
+        // the steal path alone (spills are disabled).
+        let coord = Coordinator::start_pool(
+            PathBuf::from("/nonexistent-artifacts"),
+            SelectorPolicy::Xla,
+            PoolConfig { shards: 4, routing: Routing::Affinity, ..PoolConfig::default() },
+        )
+        .expect("coordinator start");
+        let shape = GemmShape::new(128, 128, 128, 1);
+        let n = 100;
+        let mut rxs = Vec::with_capacity(n);
+        for i in 0..n {
+            let lhs = fill_buffer(i as u32, 128 * 128);
+            let rhs = fill_buffer((i + 5) as u32, 128 * 128);
+            rxs.push(coord.submit(shape, lhs, rhs));
+        }
+        for rx in rxs {
+            assert!(rx.recv().expect("response").result.is_ok());
+        }
+        let report = coord.stop_detailed();
+        assert_eq!(report.total.requests, n);
+        assert_eq!(report.total.spilled, 0, "affinity routing never spills");
+        assert!(
+            report.total.steals > 0,
+            "idle shards must steal from the overloaded peer\n{}",
+            report.summary()
+        );
+        assert_eq!(
+            report.total.stolen_requests,
+            report.per_shard.iter().map(|m| m.stolen_requests).sum::<usize>()
+        );
+        let busy = report.per_shard.iter().filter(|m| m.requests > 0).count();
+        assert!(busy >= 2, "stolen batches must execute on other shards");
     }
 }

@@ -17,8 +17,8 @@
 //!   ([`runtime`] holds the manifest and the PJRT wrapper).
 //! * **Layer 4 — coordinator shards** ([`coordinator`]): the serving side —
 //!   benchmark data pipeline, unsupervised kernel-subset selection, the
-//!   runtime classifier with its memoized hot path, and a sharded executor
-//!   pool with per-shard batching and metrics.
+//!   runtime classifier with its memoized hot path, and a load-aware,
+//!   work-stealing executor pool with per-shard batching and metrics.
 
 pub mod classify;
 pub mod coordinator;

@@ -13,6 +13,7 @@ pub struct Stats {
     pub max: f64,
     pub p50: f64,
     pub p95: f64,
+    pub p99: f64,
 }
 
 impl Stats {
@@ -36,6 +37,7 @@ impl Stats {
             max: sorted[n - 1],
             p50: pct(0.5),
             p95: pct(0.95),
+            p99: pct(0.99),
         }
     }
 
@@ -92,6 +94,7 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 5.0);
         assert_eq!(s.p50, 3.0);
+        assert_eq!(s.p99, 5.0);
         assert!((s.std - (2.0f64).sqrt()).abs() < 1e-12);
     }
 
