@@ -5,6 +5,8 @@
 //!     cargo run --release --example serve -- --shards 4
 //!     cargo run --release --example serve -- --shards 4 --routing affinity
 //!     cargo run --release --example serve -- --routing load-aware --imbalance 2
+//!     cargo run --release --example serve -- --profile r9-nano \
+//!         --retune-interval 150 --drift-threshold 1.2 --require-swap
 //!
 //! Clients submit mixed-shape GEMM requests; the submit path resolves each
 //! to a deployed kernel via the memoized decision-tree selector and routes
@@ -16,10 +18,18 @@
 //! same-executable requests on its own backend. Runs out of the box on the
 //! SimBackend (no artifacts, no native XLA needed); per-shard batch,
 //! fallback, spill and steal metrics print at shutdown.
+//!
+//! With `--retune-interval MS` a background retuner watches the
+//! measured-cost telemetry and hot-swaps re-tuned selectors under
+//! traffic. `--profile NAME` picks the simulated serving device — serving
+//! a different device than the i7-6700k the selector was tuned on is what
+//! makes drift (and a swap) happen. `--require-swap` keeps serving extra
+//! traffic rounds until a swap is observed and exits non-zero if none
+//! lands (the CI tuning smoke).
 
 use std::path::PathBuf;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use kernelsel::classify::codegen::CompiledTree;
 use kernelsel::classify::{ClassifierKind, KernelClassifier};
@@ -28,6 +38,7 @@ use kernelsel::dataset::{benchmark_shapes, config_by_name, GemmShape};
 use kernelsel::devsim::{generate_dataset, profile_by_name};
 use kernelsel::engine::EngineKind;
 use kernelsel::runtime::Manifest;
+use kernelsel::tuning::RetuneConfig;
 use kernelsel::util::fill_buffer;
 
 const CLIENTS: usize = 4;
@@ -45,6 +56,10 @@ fn flag(name: &str, default: usize) -> usize {
     flag_str(name).and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
+fn has_flag(name: &str) -> bool {
+    std::env::args().any(|a| a == name)
+}
+
 fn main() -> Result<(), String> {
     let shards = flag("--shards", 4);
     let routing = match flag_str("--routing") {
@@ -58,6 +73,39 @@ fn main() -> Result<(), String> {
             .map_err(|_| format!("invalid --imbalance {v:?} (want a number, e.g. 4)"))?,
         None => 4.0,
     };
+    // The simulated serving device. The selector below is tuned on the
+    // i7-6700k, so serving any *other* profile makes the measured costs
+    // drift from the predictions — what online retuning exists to fix.
+    let profile = match flag_str("--profile") {
+        Some(v) => {
+            profile_by_name(&v)
+                .ok_or_else(|| format!("unknown --profile {v:?}"))?
+                .name
+        }
+        None => "i7-6700k",
+    };
+    let drift_threshold = match flag_str("--drift-threshold") {
+        Some(v) => v
+            .parse::<f64>()
+            .map_err(|_| format!("invalid --drift-threshold {v:?} (want a factor > 1)"))?,
+        None => 1.25,
+    };
+    let retune = flag_str("--retune-interval")
+        .map(|v| {
+            v.parse::<u64>()
+                .map_err(|_| format!("invalid --retune-interval {v:?} (want millis)"))
+        })
+        .transpose()?
+        .map(|millis| RetuneConfig {
+            interval: Duration::from_millis(millis.max(1)),
+            drift_threshold,
+            min_cell_samples: 2,
+            ..RetuneConfig::default()
+        });
+    let require_swap = has_flag("--require-swap");
+    if require_swap && retune.is_none() {
+        return Err("--require-swap needs --retune-interval".to_string());
+    }
     let dir = PathBuf::from("artifacts");
     // Real artifacts when `make artifacts` has run; synthetic deployment
     // (served by the SimBackend) otherwise.
@@ -75,18 +123,28 @@ fn main() -> Result<(), String> {
 
     let pool = PoolConfig {
         shards,
-        engine: EngineKind::default(),
+        engine: EngineKind::Sim { profile },
         routing,
         imbalance,
+        retune: retune.clone(),
+        // The policy above is tuned on the i7-6700k dataset; pricing the
+        // hints on the same device makes serving any other --profile show
+        // up as measurable drift.
+        pricing_profile: Some("i7-6700k"),
         ..PoolConfig::default()
     };
     println!(
-        "starting coordinator: {} shard(s), policy={}, backend={}, routing={} (imbalance {:.1})",
+        "starting coordinator: {} shard(s), policy={}, backend={} ({profile}), \
+         routing={} (imbalance {:.1}), retune={}",
         shards,
         policy.name(),
         pool.engine.name(),
         pool.routing.name(),
         pool.imbalance,
+        match &retune {
+            Some(cfg) => format!("every {:?} (drift > {:.2}x)", cfg.interval, cfg.drift_threshold),
+            None => "off".to_string(),
+        },
     );
     let coord = Arc::new(Coordinator::start_pool(dir, policy, pool)?);
 
@@ -141,6 +199,27 @@ fn main() -> Result<(), String> {
     let wall = t0.elapsed().as_secs_f64();
     let total = CLIENTS * REQUESTS_PER_CLIENT;
 
+    // Keep trickling traffic until the background retuner lands a swap
+    // (the CI tuning smoke asserts adaptivity, not just liveness).
+    if require_swap {
+        let deadline = Instant::now() + Duration::from_secs(20);
+        while coord.retune_stats().swaps == 0 && Instant::now() < deadline {
+            // Trickle the two host-cheap shapes; telemetry already covers
+            // the full mix from the main run.
+            for (i, s) in [shapes[0], shapes[3]].iter().enumerate() {
+                let lhs = fill_buffer(i as u32, s.batch * s.m * s.k);
+                let rhs = fill_buffer(i as u32 + 3, s.batch * s.k * s.n);
+                let _ = coord.call(*s, lhs, rhs);
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        let stats = coord.retune_stats();
+        println!(
+            "retune wait: swaps={} retunes={} drift_trips={} generation={}",
+            stats.swaps, stats.retunes, stats.drift_trips, stats.generation
+        );
+    }
+
     let report = Arc::try_unwrap(coord).ok().expect("sole owner").stop_detailed();
     println!(
         "\n{ok}/{total} requests ok in {wall:.3}s -> {:.1} req/s, mean latency {:.2} ms",
@@ -148,5 +227,8 @@ fn main() -> Result<(), String> {
         latency_sum / ok.max(1) as f64 * 1e3
     );
     println!("{}", report.summary());
+    if require_swap && report.total.selector_swaps == 0 {
+        return Err("no selector swap observed (drift never retuned the pool)".to_string());
+    }
     Ok(())
 }

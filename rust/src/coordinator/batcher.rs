@@ -69,35 +69,36 @@ impl<T> Batcher<T> {
             .min()
     }
 
-    /// Drain a batch if one is due: either some group reached `max_batch`
-    /// or a request anywhere in the queue exceeded its wait budget (then
-    /// the *oldest* expired entry's group drains, preserving FIFO order
-    /// within the group). The expiry check must cover the whole queue: a
-    /// group whose deadline passed while another artifact's batch was
-    /// executing — or that arrived pre-aged via a work-stealing handoff —
-    /// drains on the very next call, not after a fresh `max_wait` re-arm.
+    /// Drain a batch if one is due — a group is due when it reached
+    /// `max_batch` or any of its requests exceeded the wait budget — and
+    /// pick among due groups in **EDF order**: the group holding the
+    /// oldest enqueue stamp (the earliest deadline) drains first, not
+    /// whichever group a scan happened to find. A pre-aged group arriving
+    /// via a work-stealing handoff therefore jumps ahead of a younger
+    /// group that merely filled up, and a group whose deadline passed
+    /// while another artifact's batch was executing drains on the very
+    /// next call instead of being re-armed with a fresh `max_wait`.
     pub fn drain_due(&mut self) -> Option<(String, Vec<Pending<T>>)> {
         if self.queue.is_empty() {
             return None;
         }
-        // Group sizes by artifact.
-        let mut counts: std::collections::HashMap<&str, usize> =
+        // Per artifact group: (size, oldest enqueue stamp).
+        let mut groups: std::collections::HashMap<&str, (usize, Instant)> =
             std::collections::HashMap::new();
         for p in &self.queue {
-            *counts.entry(p.artifact.as_str()).or_default() += 1;
+            let entry = groups
+                .entry(p.artifact.as_str())
+                .or_insert((0, p.enqueued));
+            entry.0 += 1;
+            entry.1 = entry.1.min(p.enqueued);
         }
-        let full_group = counts
-            .iter()
-            .find(|(_, &c)| c >= self.cfg.max_batch)
-            .map(|(k, _)| k.to_string());
-        let expired_group = || {
-            self.queue
-                .iter()
-                .filter(|p| p.enqueued.elapsed() >= self.cfg.max_wait)
-                .min_by_key(|p| p.enqueued)
-                .map(|p| p.artifact.clone())
-        };
-        let target = full_group.or_else(expired_group)?;
+        let target = groups
+            .into_iter()
+            .filter(|(_, (size, oldest))| {
+                *size >= self.cfg.max_batch || oldest.elapsed() >= self.cfg.max_wait
+            })
+            .min_by_key(|&(_, (_, oldest))| oldest)
+            .map(|(artifact, _)| artifact.to_string())?;
         Some((target.clone(), self.take_group(&target)))
     }
 
@@ -232,6 +233,46 @@ mod tests {
         assert_eq!(group.len(), 1);
         assert_eq!(b.len(), 1, "the fresh entry stays queued");
         assert!(b.next_deadline().unwrap() > Duration::ZERO);
+    }
+
+    #[test]
+    fn edf_preaged_stolen_group_jumps_a_full_group() {
+        // EDF drain order: a stolen group whose deadline already passed
+        // must drain before a younger group that merely hit max_batch —
+        // the full group is not the earliest deadline in the queue.
+        let mut b: Batcher<u32> = Batcher::new(cfg(2, 50));
+        b.push("fresh".into(), 1);
+        b.push("fresh".into(), 2); // "fresh" reaches max_batch = 2
+        b.push_pending(Pending {
+            artifact: "stolen".into(),
+            enqueued: Instant::now() - Duration::from_millis(60),
+            payload: 3,
+        });
+        let (art, group) = b.drain_due().expect("stolen group is overdue");
+        assert_eq!(art, "stolen", "EDF: oldest deadline drains first");
+        assert_eq!(group.iter().map(|p| p.payload).collect::<Vec<_>>(), vec![3]);
+        // The full group drains right after.
+        let (art, group) = b.drain_due().expect("full group still due");
+        assert_eq!(art, "fresh");
+        assert_eq!(group.len(), 2);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn edf_orders_two_expired_groups_by_age() {
+        let mut b: Batcher<u32> = Batcher::new(cfg(10, 5));
+        b.push("young".into(), 1);
+        b.push_pending(Pending {
+            artifact: "old".into(),
+            enqueued: Instant::now() - Duration::from_millis(30),
+            payload: 2,
+        });
+        std::thread::sleep(Duration::from_millis(6));
+        // Both groups are now past the wait budget; the older drains first.
+        let (art, _) = b.drain_due().unwrap();
+        assert_eq!(art, "old");
+        let (art, _) = b.drain_due().unwrap();
+        assert_eq!(art, "young");
     }
 
     #[test]

@@ -7,19 +7,35 @@
 //! every inference), so a small FIFO-evicted map in front of
 //! [`KernelRegistry::resolve`] turns the hot path into one hash lookup and
 //! an `Arc` clone.
+//!
+//! Entries are tagged with the selector generation they were resolved
+//! under. A hot swap bumps the registry's generation, so stale entries
+//! turn into misses on their next lookup (and are purged eagerly by
+//! [`ResolutionCache::invalidate_stale`]) — a resolution from an old
+//! deployment is never served after a swap.
+//!
+//! Cost hints follow a measured-over-modeled handoff: once the telemetry
+//! sink has enough samples for a (shape, config) cell, the EWMA of
+//! measured dispatch times replaces the devsim estimate feeding the
+//! router's load gauges; cold cells keep the devsim prior.
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, RwLock};
 
 use crate::coordinator::registry::{KernelRegistry, Resolution};
 use crate::dataset::{config_by_index, config_by_name, GemmShape};
 use crate::devsim::{profile_by_name, simulate, DeviceProfile};
 use crate::runtime::ArtifactMeta;
+use crate::tuning::telemetry::TelemetrySink;
+
+/// Submits between telemetry refreshes of a resolved kernel's cached
+/// dispatch-cost hint (see [`ResolutionCache::dispatch_cost_ns`]).
+pub const COST_REFRESH_PERIOD: u64 = 32;
 
 /// A successful registry resolution, shared between the cache, the
 /// load-aware router and the shard that executes the request.
-#[derive(Clone, Debug)]
+#[derive(Debug)]
 pub struct ResolvedKernel {
     pub meta: ArtifactMeta,
     pub resolution: Resolution,
@@ -27,6 +43,28 @@ pub struct ResolvedKernel {
     /// analytical model. Feeds the router's per-shard load gauges; a hint,
     /// not a promise — only relative magnitudes matter for load balancing.
     pub cost_hint_secs: f64,
+    /// Selector generation this resolution was produced under.
+    pub generation: u64,
+    /// Memoized dispatch-cost hint (ns; 0 = not yet computed), refreshed
+    /// from telemetry every [`COST_REFRESH_PERIOD`] submits so the hot
+    /// submit path reads one atomic instead of locking a telemetry stripe
+    /// that executors are writing into.
+    cached_cost_ns: AtomicU64,
+    /// Submit counter driving the periodic refresh.
+    hint_tick: AtomicU64,
+}
+
+impl Clone for ResolvedKernel {
+    fn clone(&self) -> ResolvedKernel {
+        ResolvedKernel {
+            meta: self.meta.clone(),
+            resolution: self.resolution.clone(),
+            cost_hint_secs: self.cost_hint_secs,
+            generation: self.generation,
+            cached_cost_ns: AtomicU64::new(self.cached_cost_ns.load(Ordering::Relaxed)),
+            hint_tick: AtomicU64::new(0),
+        }
+    }
 }
 
 impl ResolvedKernel {
@@ -38,27 +76,38 @@ impl ResolvedKernel {
     }
 }
 
-/// Estimate the device-seconds one dispatch of `meta` at `shape` costs,
-/// using the same analytical model the SimBackend executes against. The
-/// XLA comparator artifact (no config index) is priced as a well-rounded
-/// proxy configuration, mirroring `SimBackend::simulated_secs`.
-pub fn estimate_cost_secs(
+/// Predict the device-seconds one dispatch of `config` at `shape` costs on
+/// `profile`, via the devsim analytical model. `None` (the XLA comparator
+/// artifact) is priced as a well-rounded proxy configuration, mirroring
+/// `SimBackend::simulated_secs`. Shared by cost-hint pricing and the
+/// tuning subsystem's drift/prior math.
+pub fn predict_dispatch_secs(
     profile: &DeviceProfile,
-    meta: &ArtifactMeta,
     shape: &GemmShape,
+    config: Option<usize>,
 ) -> f64 {
-    let cfg = meta
-        .config_index
+    let cfg = config
         .map(config_by_index)
         .unwrap_or_else(|| config_by_name("r4a4c4_wg16x16").expect("proxy config"));
     let gflops = simulate(profile, shape, &cfg).max(1e-3);
     shape.flops() / (gflops * 1e9)
 }
 
+/// Estimate the device-seconds one dispatch of `meta` at `shape` costs.
+pub fn estimate_cost_secs(
+    profile: &DeviceProfile,
+    meta: &ArtifactMeta,
+    shape: &GemmShape,
+) -> f64 {
+    predict_dispatch_secs(profile, shape, meta.config_index)
+}
+
 pub struct ResolutionCache {
     cap: usize,
     /// Device profile used to price resolutions for the load gauges.
     profile: &'static DeviceProfile,
+    /// Measured-time source for the cost-hint handoff (None = devsim only).
+    telemetry: Option<Arc<TelemetrySink>>,
     /// RwLock, not Mutex: the steady state is ~100% hits, and a hit only
     /// needs a read guard — concurrent submitters must not serialize on
     /// the map once every bucket is resolved.
@@ -70,8 +119,9 @@ pub struct ResolutionCache {
 #[derive(Default)]
 struct Inner {
     map: HashMap<GemmShape, Arc<ResolvedKernel>>,
-    /// Insertion order for FIFO eviction (shapes are never re-inserted, so
-    /// FIFO == LRU-by-first-touch, which is plenty for bucketed traffic).
+    /// Insertion order for FIFO eviction (shapes are re-inserted only on a
+    /// generation refresh, which keeps their original slot, so FIFO ==
+    /// LRU-by-first-touch, which is plenty for bucketed traffic).
     order: VecDeque<GemmShape>,
 }
 
@@ -90,34 +140,95 @@ impl ResolutionCache {
         ResolutionCache {
             cap: capacity.max(1),
             profile,
+            telemetry: None,
             inner: RwLock::new(Inner::default()),
             hits: AtomicUsize::new(0),
             misses: AtomicUsize::new(0),
         }
     }
 
+    /// Attach a telemetry sink: measured EWMA dispatch times override the
+    /// devsim cost hints once warm.
+    pub fn with_telemetry(mut self, telemetry: Arc<TelemetrySink>) -> ResolutionCache {
+        self.telemetry = Some(telemetry);
+        self
+    }
+
+    /// The devsim profile cost hints are priced against.
+    pub fn pricing_profile(&self) -> &'static DeviceProfile {
+        self.profile
+    }
+
     /// Cached resolution, or walk the registry and memoize the result.
-    /// Failures are not cached: unknown shapes are expected to be rare and
-    /// should re-report the registry's (possibly changing) error.
+    /// Entries from an older selector generation are treated as misses and
+    /// re-resolved. Failures are not cached: unknown shapes are expected
+    /// to be rare and should re-report the registry's (possibly changing)
+    /// error.
     pub fn resolve(
         &self,
         registry: &KernelRegistry,
         shape: &GemmShape,
     ) -> Result<Arc<ResolvedKernel>, String> {
-        if let Some(hit) = self.get(shape) {
+        if let Some(hit) = self.lookup(shape, registry.generation()) {
             return Ok(hit);
         }
-        let (meta, resolution) = registry.resolve(shape)?;
+        let (meta, resolution, generation) = registry.resolve(shape)?;
         let cost_hint_secs = estimate_cost_secs(self.profile, meta, shape);
         let resolved = Arc::new(ResolvedKernel {
             meta: meta.clone(),
             resolution,
             cost_hint_secs,
+            generation,
+            cached_cost_ns: AtomicU64::new(0),
+            hint_tick: AtomicU64::new(0),
         });
         self.insert(*shape, resolved.clone());
         Ok(resolved)
     }
 
+    /// The per-dispatch cost hint (ns) the router should charge for a
+    /// resolved request: the measured EWMA once the telemetry cell is
+    /// warm, the devsim estimate while cold. The hint is memoized on the
+    /// `ResolvedKernel` and re-read from telemetry only every
+    /// [`COST_REFRESH_PERIOD`] submits, keeping the hot submit path to a
+    /// pair of relaxed atomics instead of a stripe lock shared with the
+    /// executors.
+    pub fn dispatch_cost_ns(&self, resolved: &ResolvedKernel) -> u64 {
+        let tick = resolved.hint_tick.fetch_add(1, Ordering::Relaxed);
+        let cached = resolved.cached_cost_ns.load(Ordering::Relaxed);
+        if cached != 0 && tick % COST_REFRESH_PERIOD != 0 {
+            return cached;
+        }
+        let meta = &resolved.meta;
+        let shape = GemmShape::new(meta.m, meta.k, meta.n, meta.b);
+        let hint = self
+            .telemetry
+            .as_ref()
+            .and_then(|t| t.measured_cost_secs(&shape, meta.config_index))
+            .map(|secs| (secs * 1e9).max(1.0) as u64)
+            .unwrap_or_else(|| resolved.cost_hint_ns());
+        resolved.cached_cost_ns.store(hint, Ordering::Relaxed);
+        hint
+    }
+
+    /// Fresh cached entry for `shape`, counting a hit; stale-generation
+    /// entries count as misses (the caller re-resolves and replaces them).
+    fn lookup(&self, shape: &GemmShape, generation: u64) -> Option<Arc<ResolvedKernel>> {
+        let inner = self.inner.read().unwrap();
+        match inner.map.get(shape) {
+            Some(r) if r.generation == generation => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(r.clone())
+            }
+            _ => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Cached entry regardless of generation (tests/inspection; counts
+    /// hits and misses like a lookup).
     pub fn get(&self, shape: &GemmShape) -> Option<Arc<ResolvedKernel>> {
         let inner = self.inner.read().unwrap();
         match inner.map.get(shape) {
@@ -134,14 +245,34 @@ impl ResolutionCache {
 
     pub fn insert(&self, shape: GemmShape, resolved: Arc<ResolvedKernel>) {
         let mut inner = self.inner.write().unwrap();
-        if inner.map.insert(shape, resolved).is_none() {
-            inner.order.push_back(shape);
-            while inner.order.len() > self.cap {
-                if let Some(evict) = inner.order.pop_front() {
-                    inner.map.remove(&evict);
+        match inner.map.get(&shape).map(|existing| existing.generation) {
+            // Never let a racing stale resolution clobber a fresher one.
+            Some(existing_gen) if existing_gen > resolved.generation => {}
+            Some(_) => {
+                // Generation refresh: replace in place, keep the FIFO slot.
+                inner.map.insert(shape, resolved);
+            }
+            None => {
+                inner.map.insert(shape, resolved);
+                inner.order.push_back(shape);
+                while inner.order.len() > self.cap {
+                    if let Some(evict) = inner.order.pop_front() {
+                        inner.map.remove(&evict);
+                    }
                 }
             }
         }
+    }
+
+    /// Drop every entry resolved under a generation older than
+    /// `generation`. Called after a hot swap; lazy generation checks on
+    /// lookup make this a memory-hygiene step rather than a correctness
+    /// requirement.
+    pub fn invalidate_stale(&self, generation: u64) {
+        let mut inner = self.inner.write().unwrap();
+        let Inner { map, order } = &mut *inner;
+        map.retain(|_, r| r.generation >= generation);
+        order.retain(|s| map.contains_key(s));
     }
 
     pub fn len(&self) -> usize {
@@ -234,5 +365,81 @@ mod tests {
         assert!(cache.resolve(&reg, &unknown).is_err());
         assert!(cache.resolve(&reg, &unknown).is_err());
         assert_eq!(cache.len(), 0);
+    }
+
+    #[test]
+    fn swap_invalidates_stale_entries() {
+        let best = crate::dataset::config_by_name("r8a4c4_wg16x16").unwrap().index();
+        let reg = registry();
+        let cache = ResolutionCache::new(16);
+        let shape = GemmShape::new(64, 64, 64, 1);
+        let old = cache.resolve(&reg, &shape).unwrap();
+        assert_eq!(old.generation, 0);
+        assert_eq!(old.meta.config_index, None, "XLA policy");
+
+        // Hot swap: the stale entry must never be served again.
+        let generation = reg.swap_policy(SelectorPolicy::Single(best));
+        let fresh = cache.resolve(&reg, &shape).unwrap();
+        assert_eq!(fresh.generation, generation);
+        assert_eq!(fresh.meta.config_index, Some(best));
+        // The refreshed entry replaced the stale one in place.
+        assert_eq!(cache.len(), 1);
+        assert!(Arc::ptr_eq(&cache.resolve(&reg, &shape).unwrap(), &fresh));
+    }
+
+    #[test]
+    fn invalidate_stale_purges_old_generations() {
+        let best = crate::dataset::config_by_name("r8a4c4_wg16x16").unwrap().index();
+        let reg = registry();
+        let cache = ResolutionCache::new(16);
+        let shapes = [GemmShape::new(32, 32, 32, 1), GemmShape::new(64, 64, 64, 1)];
+        for s in &shapes {
+            cache.resolve(&reg, s).unwrap();
+        }
+        assert_eq!(cache.len(), 2);
+        let generation = reg.swap_policy(SelectorPolicy::Single(best));
+        // Refresh one shape under the new generation, then purge.
+        cache.resolve(&reg, &shapes[0]).unwrap();
+        cache.invalidate_stale(generation);
+        assert_eq!(cache.len(), 1, "only the refreshed entry survives");
+        assert!(cache.get(&shapes[0]).is_some());
+        assert!(cache.get(&shapes[1]).is_none());
+    }
+
+    #[test]
+    fn stale_insert_never_clobbers_fresh_entry() {
+        let best = crate::dataset::config_by_name("r8a4c4_wg16x16").unwrap().index();
+        let reg = registry();
+        let cache = ResolutionCache::new(16);
+        let shape = GemmShape::new(64, 64, 64, 1);
+        let stale = cache.resolve(&reg, &shape).unwrap();
+        reg.swap_policy(SelectorPolicy::Single(best));
+        let fresh = cache.resolve(&reg, &shape).unwrap();
+        // A racing thread re-inserting its old resolution must lose.
+        cache.insert(shape, stale);
+        let now = cache.get(&shape).unwrap();
+        assert!(Arc::ptr_eq(&now, &fresh));
+    }
+
+    #[test]
+    fn measured_cost_hint_overrides_devsim_once_warm() {
+        let reg = registry();
+        let telemetry = Arc::new(TelemetrySink::new(2, 1.0));
+        let cache = ResolutionCache::with_profile(16, "i7-6700k")
+            .with_telemetry(telemetry.clone());
+        let shape = GemmShape::new(64, 64, 64, 1);
+        let resolved = cache.resolve(&reg, &shape).unwrap();
+        // Cold: devsim estimate (first call computes and memoizes it).
+        assert_eq!(cache.dispatch_cost_ns(&resolved), resolved.cost_hint_ns());
+        // One sample is below min_samples: still devsim.
+        telemetry.record(shape, resolved.meta.config_index, 5e-3);
+        assert_eq!(cache.dispatch_cost_ns(&resolved), resolved.cost_hint_ns());
+        // Warm: within one refresh period the measured EWMA takes over.
+        telemetry.record(shape, resolved.meta.config_index, 5e-3);
+        let warmed = (0..=COST_REFRESH_PERIOD)
+            .map(|_| cache.dispatch_cost_ns(&resolved))
+            .last()
+            .unwrap();
+        assert_eq!(warmed, 5_000_000);
     }
 }

@@ -22,6 +22,13 @@ pub struct Metrics {
     pub steals: usize,
     /// Individual requests that arrived via those stolen batches.
     pub stolen_requests: usize,
+    /// Selector hot-swaps published (pool-level: background retuner plus
+    /// explicit `swap_selector` calls; shards never count these).
+    pub selector_swaps: usize,
+    /// Full selection+classification reruns on measured data (pool-level).
+    pub retunes: usize,
+    /// Retune ticks where the drift detector tripped (pool-level).
+    pub drift_trips: usize,
     /// Shard queue depth sampled at every batch drain, bucketed
     /// logarithmically (see [`OCCUPANCY_BUCKETS`]).
     pub occupancy: [usize; OCCUPANCY_BUCKETS],
@@ -79,6 +86,9 @@ impl Metrics {
         self.spilled += other.spilled;
         self.steals += other.steals;
         self.stolen_requests += other.stolen_requests;
+        self.selector_swaps += other.selector_swaps;
+        self.retunes += other.retunes;
+        self.drift_trips += other.drift_trips;
         for (mine, theirs) in self.occupancy.iter_mut().zip(other.occupancy) {
             *mine += theirs;
         }
@@ -138,6 +148,7 @@ impl Metrics {
         format!(
             "requests={} batches={} mean_batch={:.2} failures={} \
              fallbacks(config/xla)={}/{} spilled={} steals={}/{} \
+             selector_swaps={} retunes={} drift_trips={} \
              distinct_configs={} occupancy={:?} latency[{}]",
             self.requests,
             self.batches,
@@ -148,6 +159,9 @@ impl Metrics {
             self.spilled,
             self.steals,
             self.stolen_requests,
+            self.selector_swaps,
+            self.retunes,
+            self.drift_trips,
             self.distinct_configs(),
             self.occupancy,
             lat
@@ -200,6 +214,9 @@ mod tests {
         b.spilled = 2;
         b.steals = 1;
         b.stolen_requests = 4;
+        b.selector_swaps = 2;
+        b.retunes = 3;
+        b.drift_trips = 1;
         b.record_occupancy(0);
         b.record_occupancy(5);
 
@@ -212,6 +229,10 @@ mod tests {
         assert_eq!(a.spilled, 2);
         assert_eq!(a.steals, 1);
         assert_eq!(a.stolen_requests, 4);
+        assert_eq!(a.selector_swaps, 2);
+        assert_eq!(a.retunes, 3);
+        assert_eq!(a.drift_trips, 1);
+        assert!(a.summary().contains("selector_swaps=2"));
         assert_eq!(a.occupancy[0], 1);
         assert_eq!(a.occupancy[3], 1);
         assert_eq!(a.per_config[&3], 2);

@@ -9,10 +9,12 @@
 //!   deadline-preserving handoff for stolen batches.
 //! * [`server`] — the executor pool: load-aware router (shape affinity as
 //!   a preference, spill on imbalance), work-stealing shards, one engine
-//!   backend + batcher + metrics per shard.
+//!   backend + batcher + metrics per shard, plus the optional background
+//!   retuner wiring (measured telemetry in, hot-swapped selectors out —
+//!   see [`crate::tuning`]).
 //! * [`vgg`] — the VGG16 inference engine of paper §6 (`pjrt` feature).
-//! * [`metrics`] — serving statistics (incl. spill/steal counters and
-//!   occupancy histograms) with exact per-shard aggregation.
+//! * [`metrics`] — serving statistics (incl. spill/steal/retune counters
+//!   and occupancy histograms) with exact per-shard aggregation.
 
 pub mod batcher;
 pub mod cache;
@@ -27,7 +29,7 @@ pub use batcher::{Batcher, BatcherConfig};
 pub use cache::{ResolutionCache, ResolvedKernel};
 pub use metrics::Metrics;
 pub use registry::{KernelRegistry, Resolution};
-pub use selector::{tune_selector, SelectorPolicy};
+pub use selector::{tune_selector, tune_selector_with, SelectorPolicy};
 pub use server::{
     Coordinator, GemmRequest, GemmResponse, PoolConfig, PoolReport, Routing, ShardLoad,
 };

@@ -6,14 +6,24 @@
 //! shape -> the XLA-dot backend at the shape. Shapes with no artifact at
 //! all are rejected — like a SYCL library, we can only run what was
 //! compiled in.
+//!
+//! The policy lives behind a generation-counted [`SelectorHandle`] so the
+//! background retuner can hot-swap it under traffic. Every resolution
+//! reads exactly one policy snapshot — the proposed config and the
+//! deployed fallback set always come from the same deployment, never a
+//! torn mix — and reports the snapshot's generation so the selector cache
+//! can tag (and later invalidate) what it memoized.
+
+use std::sync::Arc;
 
 use crate::coordinator::selector::SelectorPolicy;
 use crate::dataset::GemmShape;
 use crate::runtime::{ArtifactMeta, Manifest};
+use crate::tuning::swap::{DeployedSelector, SelectorHandle};
 
 pub struct KernelRegistry {
     pub manifest: Manifest,
-    pub policy: SelectorPolicy,
+    selector: SelectorHandle,
 }
 
 /// The outcome of a resolution, for metrics/inspection.
@@ -29,26 +39,52 @@ pub enum Resolution {
 
 impl KernelRegistry {
     pub fn new(manifest: Manifest, policy: SelectorPolicy) -> KernelRegistry {
-        KernelRegistry { manifest, policy }
+        KernelRegistry { manifest, selector: SelectorHandle::new(policy) }
     }
 
-    /// Resolve a GEMM shape to an artifact.
-    pub fn resolve(&self, shape: &GemmShape) -> Result<(&ArtifactMeta, Resolution), String> {
+    /// The current policy deployment snapshot.
+    pub fn policy(&self) -> Arc<DeployedSelector> {
+        self.selector.load()
+    }
+
+    /// The current deployment generation (0 = the boot policy).
+    pub fn generation(&self) -> u64 {
+        self.selector.generation()
+    }
+
+    /// Hot-swap the selector policy; returns the new generation. Callers
+    /// that also hold the selector cache should go through
+    /// [`crate::tuning::swap::deploy_policy`] so stale cache entries are
+    /// invalidated in the same step.
+    pub fn swap_policy(&self, policy: SelectorPolicy) -> u64 {
+        self.selector.swap(policy)
+    }
+
+    /// Resolve a GEMM shape to an artifact. Returns the artifact, how the
+    /// resolution fell back, and the generation of the policy snapshot
+    /// that produced it.
+    pub fn resolve(
+        &self,
+        shape: &GemmShape,
+    ) -> Result<(&ArtifactMeta, Resolution, u64), String> {
         let (m, k, n, b) = (shape.m, shape.k, shape.n, shape.batch);
-        let want = self.policy.choose(shape);
+        // One snapshot for the whole resolution: `want` and the fallback
+        // set can never come from different deployments.
+        let snapshot = self.selector.load();
+        let want = snapshot.policy.choose(shape);
         if let Some(meta) = self.manifest.find_matmul(want, m, k, n, b) {
-            return Ok((meta, Resolution::Direct));
+            return Ok((meta, Resolution::Direct, snapshot.generation));
         }
         // Any other deployed config at this shape.
-        for cfg in self.policy.deployed() {
+        for cfg in snapshot.policy.deployed() {
             if Some(cfg) != want {
                 if let Some(meta) = self.manifest.find_matmul(Some(cfg), m, k, n, b) {
-                    return Ok((meta, Resolution::FallbackConfig));
+                    return Ok((meta, Resolution::FallbackConfig, snapshot.generation));
                 }
             }
         }
         if let Some(meta) = self.manifest.find_matmul(None, m, k, n, b) {
-            return Ok((meta, Resolution::FallbackXla));
+            return Ok((meta, Resolution::FallbackXla, snapshot.generation));
         }
         Err(format!(
             "no artifact for GEMM {m}x{k}x{n} (batch {b}); \
@@ -81,9 +117,11 @@ mod tests {
     #[test]
     fn resolves_xla_backend() {
         let reg = registry(SelectorPolicy::Xla);
-        let (meta, res) = reg.resolve(&GemmShape::new(128, 128, 128, 1)).unwrap();
+        let (meta, res, generation) =
+            reg.resolve(&GemmShape::new(128, 128, 128, 1)).unwrap();
         assert_eq!(res, Resolution::Direct);
         assert!(meta.config_index.is_none());
+        assert_eq!(generation, 0);
     }
 
     #[test]
@@ -91,14 +129,14 @@ mod tests {
         // Config index 0 is not in the synthetic deployment, so a Single
         // policy for it must fall back at shipped shapes.
         let reg = registry(SelectorPolicy::Single(0));
-        let (_, res) = reg.resolve(&GemmShape::new(128, 128, 128, 1)).unwrap();
+        let (_, res, _) = reg.resolve(&GemmShape::new(128, 128, 128, 1)).unwrap();
         assert_eq!(res, Resolution::FallbackXla);
         // The shipped single-best config resolves directly.
         let best = crate::dataset::config_by_name(&reg.manifest.single_best)
             .unwrap()
             .index();
         let reg2 = registry(SelectorPolicy::Single(best));
-        let (meta, res) = reg2.resolve(&GemmShape::new(128, 128, 128, 1)).unwrap();
+        let (meta, res, _) = reg2.resolve(&GemmShape::new(128, 128, 128, 1)).unwrap();
         assert_eq!(res, Resolution::Direct);
         assert_eq!(meta.config_index, Some(best));
     }
@@ -117,6 +155,23 @@ mod tests {
         let set: std::collections::HashSet<_> =
             buckets.iter().map(|s| s.label()).collect();
         assert_eq!(set.len(), buckets.len());
+    }
+
+    #[test]
+    fn swap_changes_resolution_and_generation() {
+        let best = crate::dataset::config_by_name("r8a4c4_wg16x16").unwrap().index();
+        let reg = registry(SelectorPolicy::Xla);
+        let shape = GemmShape::new(64, 64, 64, 1);
+        let (meta, _, generation) = reg.resolve(&shape).unwrap();
+        assert_eq!(meta.config_index, None);
+        assert_eq!(generation, 0);
+        assert_eq!(reg.swap_policy(SelectorPolicy::Single(best)), 1);
+        assert_eq!(reg.generation(), 1);
+        let (meta, res, generation) = reg.resolve(&shape).unwrap();
+        assert_eq!(meta.config_index, Some(best));
+        assert_eq!(res, Resolution::Direct);
+        assert_eq!(generation, 1);
+        assert_eq!(reg.policy().policy.name(), "single-config");
     }
 
     // --- full fallback-ordering coverage on a hand-built manifest ---------
@@ -170,18 +225,18 @@ mod tests {
         let reg = KernelRegistry::new(manifest, always_a_policy(a, b));
 
         // 1. The proposed config is shipped at the shape: Direct.
-        let (meta, res) = reg.resolve(&GemmShape::new(8, 8, 8, 1)).unwrap();
+        let (meta, res, _) = reg.resolve(&GemmShape::new(8, 8, 8, 1)).unwrap();
         assert_eq!(res, Resolution::Direct);
         assert_eq!(meta.config_index, Some(a));
 
         // 2. Proposed config missing, another deployed config shipped:
         //    FallbackConfig (preferred over the XLA artifact also present).
-        let (meta, res) = reg.resolve(&GemmShape::new(64, 64, 64, 1)).unwrap();
+        let (meta, res, _) = reg.resolve(&GemmShape::new(64, 64, 64, 1)).unwrap();
         assert_eq!(res, Resolution::FallbackConfig);
         assert_eq!(meta.config_index, Some(b));
 
         // 3. No deployed config shipped, XLA artifact present: FallbackXla.
-        let (meta, res) = reg.resolve(&GemmShape::new(32, 32, 32, 1)).unwrap();
+        let (meta, res, _) = reg.resolve(&GemmShape::new(32, 32, 32, 1)).unwrap();
         assert_eq!(res, Resolution::FallbackXla);
         assert_eq!(meta.config_index, None);
 

@@ -53,10 +53,26 @@ pub fn tune_selector(
     norm: Normalization,
     seed: u64,
 ) -> (Vec<usize>, CompiledTree) {
-    let deployed = select(Method::PcaKMeans, train, norm, k, seed);
-    let clf = KernelClassifier::fit(ClassifierKind::DecisionTreeB, train, &deployed, seed);
-    let tree = CompiledTree::compile(&clf).expect("decision tree compiles");
-    (deployed, tree)
+    tune_selector_with(Method::PcaKMeans, ClassifierKind::DecisionTreeB, train, k, norm, seed)
+        .expect("decision tree compiles")
+}
+
+/// [`tune_selector`] with the selection method and classifier kind
+/// exposed — the knobs the online retuner turns (it defaults to the
+/// unbounded DecisionTreeA so the tiny live dataset is fitted exactly).
+/// Returns `None` when `classifier` is not a compilable decision tree.
+pub fn tune_selector_with(
+    method: Method,
+    classifier: ClassifierKind,
+    train: &PerfDataset,
+    k: usize,
+    norm: Normalization,
+    seed: u64,
+) -> Option<(Vec<usize>, CompiledTree)> {
+    let deployed = select(method, train, norm, k, seed);
+    let clf = KernelClassifier::fit(classifier, train, &deployed, seed);
+    let tree = CompiledTree::compile(&clf)?;
+    Some((deployed, tree))
 }
 
 #[cfg(test)]
@@ -77,6 +93,55 @@ mod tests {
             let cfg = policy.choose(s).unwrap();
             assert!(deployed.contains(&cfg));
         }
+    }
+
+    #[test]
+    fn tune_with_exact_tree_fits_training_set() {
+        // DecisionTreeA (unbounded) must reproduce the per-shape argmax of
+        // the training data exactly — the property online retuning relies
+        // on to converge to measured-best picks.
+        let shapes: Vec<GemmShape> =
+            benchmark_shapes().into_iter().step_by(23).collect();
+        let ds = generate_dataset(profile_by_name("r9-nano").unwrap(), &shapes);
+        let (deployed, tree) = tune_selector_with(
+            Method::PcaKMeans,
+            crate::classify::ClassifierKind::DecisionTreeA,
+            &ds,
+            4,
+            Normalization::Standard,
+            3,
+        )
+        .unwrap();
+        assert_eq!(deployed.len(), 4);
+        for (i, s) in ds.shapes.iter().enumerate() {
+            let best_deployed = *deployed
+                .iter()
+                .max_by(|&&a, &&b| {
+                    ds.gflops[(i, a)].partial_cmp(&ds.gflops[(i, b)]).unwrap()
+                })
+                .unwrap();
+            assert_eq!(
+                tree.predict_config(&s.features()),
+                best_deployed,
+                "shape {s:?} not fitted exactly"
+            );
+        }
+    }
+
+    #[test]
+    fn non_tree_classifier_returns_none() {
+        let shapes: Vec<GemmShape> =
+            benchmark_shapes().into_iter().step_by(23).collect();
+        let ds = generate_dataset(profile_by_name("i7-6700k").unwrap(), &shapes);
+        assert!(tune_selector_with(
+            Method::TopN,
+            crate::classify::ClassifierKind::NearestNeighbor1,
+            &ds,
+            2,
+            Normalization::Standard,
+            1,
+        )
+        .is_none());
     }
 
     #[test]

@@ -40,6 +40,9 @@ use crate::coordinator::selector::SelectorPolicy;
 use crate::dataset::GemmShape;
 use crate::engine::{Backend, EngineKind};
 use crate::runtime::Manifest;
+use crate::tuning::retuner::{retune_once, RetuneConfig, RetuneOutcome, Retuner, RetunerStats};
+use crate::tuning::swap::deploy_policy;
+use crate::tuning::telemetry::TelemetrySink;
 
 /// A GEMM request: `lhs` is (b, m, k), `rhs` is (b, k, n), row-major.
 pub struct GemmRequest {
@@ -157,6 +160,19 @@ pub struct PoolConfig {
     /// Minimum jobs a victim's injector must hold before an idle shard
     /// steals a batch from it.
     pub steal_min: usize,
+    /// Online retuning: when set, a background thread watches the
+    /// measured-cost telemetry for drift and hot-swaps re-tuned selectors
+    /// (see [`crate::tuning`]). `None` = frozen-at-startup selector, but
+    /// telemetry still accumulates and measured cost hints still apply.
+    pub retune: Option<RetuneConfig>,
+    /// Devsim profile cost hints (and drift predictions) are priced on.
+    /// `None` (the default) derives it from the engine — a sim pool
+    /// prices on the profile it serves, preserving the pre-retuning
+    /// routing behavior. Set it explicitly to the device the deployed
+    /// selector was *tuned* against when that differs from the serving
+    /// device: the measured-vs-predicted gap between the two is exactly
+    /// the drift signal the retuner watches.
+    pub pricing_profile: Option<&'static str>,
 }
 
 impl Default for PoolConfig {
@@ -169,6 +185,8 @@ impl Default for PoolConfig {
             routing: Routing::default(),
             imbalance: 4.0,
             steal_min: 2,
+            retune: None,
+            pricing_profile: None,
         }
     }
 }
@@ -181,6 +199,8 @@ pub struct PoolReport {
     /// Selector-cache (hits, misses) over the pool's lifetime.
     pub cache_hits: usize,
     pub cache_misses: usize,
+    /// Retuner counters (background thread + explicit `retune_now` calls).
+    pub tuning: RetunerStats,
 }
 
 impl PoolReport {
@@ -194,6 +214,18 @@ impl PoolReport {
         );
         for (i, m) in self.per_shard.iter().enumerate() {
             out.push_str(&format!("\n  shard {i}: {}", m.summary()));
+        }
+        if self.tuning.ticks > 0 {
+            out.push_str(&format!(
+                "\n  tuning: swaps={} retunes={} drift_trips={} ticks={} \
+                 last_drift={:.2}x generation={}",
+                self.tuning.swaps,
+                self.tuning.retunes,
+                self.tuning.drift_trips,
+                self.tuning.ticks,
+                self.tuning.last_drift_deviation,
+                self.tuning.generation,
+            ));
         }
         out
     }
@@ -267,10 +299,17 @@ impl ShardQueue {
 /// Handle to a running executor pool.
 pub struct Coordinator {
     registry: Arc<KernelRegistry>,
-    cache: ResolutionCache,
+    cache: Arc<ResolutionCache>,
+    telemetry: Arc<TelemetrySink>,
+    /// Background retuner (when `PoolConfig::retune` was set).
+    retuner: Option<Retuner>,
+    /// Single store for all retuner counters — the background thread and
+    /// explicit `retune_now` calls accumulate into the same place.
+    retune_stats: Arc<Mutex<RetunerStats>>,
     queues: Arc<Vec<Arc<ShardQueue>>>,
     workers: Vec<Option<JoinHandle<()>>>,
-    /// Metrics for requests that never reach a shard (resolution failures).
+    /// Metrics for requests that never reach a shard (resolution failures),
+    /// plus pool-level tuning counters folded in at shutdown.
     front: Mutex<Metrics>,
     engine_name: &'static str,
     routing: Routing,
@@ -305,21 +344,26 @@ impl Coordinator {
         // one.
         #[cfg(feature = "pjrt")]
         let manifest = match &cfg.engine {
-            EngineKind::Sim { .. } => Manifest::load_or_synthetic(&artifacts_dir),
+            EngineKind::Sim { .. } | EngineKind::SimPaced { .. } => {
+                Manifest::load_or_synthetic(&artifacts_dir)
+            }
             EngineKind::Pjrt => Manifest::load(&artifacts_dir)?,
         };
         #[cfg(not(feature = "pjrt"))]
         let manifest = Manifest::load_or_synthetic(&artifacts_dir);
 
-        // Price cost hints against the profile the shards will simulate on
-        // (native backends just need relatively consistent hints).
-        let profile_name = match &cfg.engine {
-            EngineKind::Sim { profile } => *profile,
+        // Pricing profile for cost hints and drift predictions: explicit
+        // override, else derived from the engine (sim pools price on the
+        // profile they serve; native backends default to the repo's
+        // reference tuning device).
+        let pricing_profile = cfg.pricing_profile.unwrap_or(match &cfg.engine {
+            EngineKind::Sim { profile } | EngineKind::SimPaced { profile, .. } => *profile,
             #[cfg(feature = "pjrt")]
             EngineKind::Pjrt => "i7-6700k",
-        };
+        });
 
         let registry = Arc::new(KernelRegistry::new(manifest, policy));
+        let telemetry = Arc::new(TelemetrySink::default());
         let n_shards = cfg.shards.max(1);
         let queues: Arc<Vec<Arc<ShardQueue>>> =
             Arc::new((0..n_shards).map(|_| Arc::new(ShardQueue::new())).collect());
@@ -331,6 +375,7 @@ impl Coordinator {
             let dir = artifacts_dir.clone();
             let queues_for_shard = queues.clone();
             let steal_min = cfg.steal_min.max(1);
+            let telemetry_for_shard = telemetry.clone();
             let spawned = std::thread::Builder::new()
                 .name(format!("kernelsel-shard-{shard_id}"))
                 .spawn(move || {
@@ -341,6 +386,7 @@ impl Coordinator {
                         batcher_cfg,
                         queues_for_shard,
                         steal_min,
+                        telemetry_for_shard,
                         ready_tx,
                     )
                 })
@@ -362,9 +408,26 @@ impl Coordinator {
                 return Err(e);
             }
         }
+        let cache = Arc::new(
+            ResolutionCache::with_profile(cfg.selector_cache, pricing_profile)
+                .with_telemetry(telemetry.clone()),
+        );
+        let retune_stats = Arc::new(Mutex::new(RetunerStats::default()));
+        let retuner = cfg.retune.clone().map(|retune_cfg| {
+            Retuner::start(
+                retune_cfg,
+                registry.clone(),
+                cache.clone(),
+                telemetry.clone(),
+                retune_stats.clone(),
+            )
+        });
         Ok(Coordinator {
             registry,
-            cache: ResolutionCache::with_profile(cfg.selector_cache, profile_name),
+            cache,
+            telemetry,
+            retuner,
+            retune_stats,
             queues,
             workers,
             front: Mutex::new(Metrics::default()),
@@ -393,6 +456,41 @@ impl Coordinator {
     /// Selector-cache (hits, misses) so far.
     pub fn selector_cache_stats(&self) -> (usize, usize) {
         self.cache.stats()
+    }
+
+    /// The measured-cost telemetry sink the shards report into.
+    pub fn telemetry(&self) -> &Arc<TelemetrySink> {
+        &self.telemetry
+    }
+
+    /// Generation of the currently deployed selector (0 = boot policy).
+    pub fn selector_generation(&self) -> u64 {
+        self.registry.generation()
+    }
+
+    /// Hot-swap the selector policy under traffic: in-flight requests keep
+    /// the snapshot they resolved under, new requests see only the new
+    /// deployment, and stale selector-cache entries are invalidated.
+    /// Returns the new generation.
+    pub fn swap_selector(&self, policy: SelectorPolicy) -> u64 {
+        let generation = deploy_policy(&self.registry, &self.cache, policy);
+        self.front.lock().unwrap().selector_swaps += 1;
+        generation
+    }
+
+    /// Run one synchronous retune attempt against the live telemetry (the
+    /// deterministic alternative to the background thread — benches drive
+    /// explicit measure/retune/measure cycles with it).
+    pub fn retune_now(&self, cfg: &RetuneConfig) -> RetuneOutcome {
+        let mut stats = self.retune_stats.lock().unwrap();
+        retune_once(cfg, true, &self.registry, &self.cache, &self.telemetry, &mut stats)
+    }
+
+    /// Retuner counters so far (background thread + `retune_now`; swaps
+    /// made via [`Coordinator::swap_selector`] are counted in the pool
+    /// metrics, not here).
+    pub fn retune_stats(&self) -> RetunerStats {
+        self.retune_stats.lock().unwrap().clone()
     }
 
     /// Live per-shard (queue depth, load score ns) snapshot.
@@ -499,7 +597,8 @@ impl Coordinator {
                 }
             }
         };
-        let cost_ns = resolved.cost_hint_ns();
+        // Measured EWMA once telemetry is warm, devsim estimate while cold.
+        let cost_ns = self.cache.dispatch_cost_ns(&resolved);
         let req = GemmRequest { shape, lhs, rhs, respond: resp_tx };
         self.queues[shard].push(Job { req, t_submit, resolved, cost_ns, spilled });
         resp_rx
@@ -524,6 +623,18 @@ impl Coordinator {
 
     /// Stop every shard; return per-shard metrics plus merged totals.
     pub fn stop_detailed(mut self) -> PoolReport {
+        // Stop the retuner first so the selector is frozen while the
+        // shards drain, then fold the counters into the pool totals.
+        if let Some(retuner) = self.retuner.take() {
+            let _ = retuner.finish();
+        }
+        let tuning = self.retune_stats.lock().unwrap().clone();
+        {
+            let mut front = self.front.lock().unwrap();
+            front.selector_swaps += tuning.swaps;
+            front.retunes += tuning.retunes;
+            front.drift_trips += tuning.drift_trips;
+        }
         // Signal all shards first so they drain concurrently, then join.
         let mut replies = Vec::with_capacity(self.queues.len());
         for q in self.queues.iter() {
@@ -547,7 +658,7 @@ impl Coordinator {
             total.merge(m.clone());
         }
         let (cache_hits, cache_misses) = self.cache.stats();
-        PoolReport { per_shard, total, cache_hits, cache_misses }
+        PoolReport { per_shard, total, cache_hits, cache_misses, tuning }
     }
 }
 
@@ -658,6 +769,7 @@ fn shard_loop(
     batcher_cfg: BatcherConfig,
     queues: Arc<Vec<Arc<ShardQueue>>>,
     steal_min: usize,
+    telemetry: Arc<TelemetrySink>,
     ready: Sender<Result<(), String>>,
 ) {
     let my = queues[shard_id].clone();
@@ -694,7 +806,7 @@ fn shard_loop(
         // Serve every batch that is due.
         let mut ran = false;
         while let Some((artifact, group)) = batcher.drain_due() {
-            run_batch(backend.as_mut(), &my.load, &artifact, group, &mut metrics);
+            run_batch(backend.as_mut(), &my.load, &artifact, group, &telemetry, &mut metrics);
             ran = true;
         }
         if ran {
@@ -724,7 +836,7 @@ fn shard_loop(
 
     // Flush outstanding work before stopping.
     for (artifact, group) in batcher.drain_all() {
-        run_batch(backend.as_mut(), &my.load, &artifact, group, &mut metrics);
+        run_batch(backend.as_mut(), &my.load, &artifact, group, &telemetry, &mut metrics);
     }
     if let Some(reply) = stop_reply {
         let _ = reply.send(metrics);
@@ -736,6 +848,7 @@ fn run_batch(
     load: &ShardLoad,
     artifact: &str,
     group: Vec<Pending<Job>>,
+    telemetry: &TelemetrySink,
     metrics: &mut Metrics,
 ) {
     metrics.record_batch(group.len());
@@ -750,7 +863,19 @@ fn run_batch(
         let job = pending.payload;
         let meta = &job.resolved.meta;
         let result = match &prepared {
-            Ok(()) => backend.execute(meta, &job.req.shape, &job.req.lhs, &job.req.rhs),
+            Ok(()) => {
+                match backend.execute_timed(meta, &job.req.shape, &job.req.lhs, &job.req.rhs)
+                {
+                    Ok((out, measured_secs)) => {
+                        // Close the loop: the measured execution time of
+                        // this (shape, config) cell feeds cost hints and
+                        // the background retuner.
+                        telemetry.record(job.req.shape, meta.config_index, measured_secs);
+                        Ok(out)
+                    }
+                    Err(e) => Err(e),
+                }
+            }
             Err(e) => Err(e.clone()),
         };
         let latency = job.t_submit.elapsed();
@@ -1047,6 +1172,131 @@ mod tests {
             "a 90% hot-shape burst at imbalance=1.0 must spill\n{}",
             report.summary()
         );
+    }
+
+    #[test]
+    fn hot_swap_under_traffic_serves_old_or_new_never_torn_or_stale() {
+        // Satellite: N client threads submitting across a swap must only
+        // ever observe the old deployment or the new one (never a mix),
+        // and once the swap + cache invalidation completed, no resolution
+        // from the stale generation may be served.
+        let a = config_by_name("r8a4c4_wg16x16").unwrap().index();
+        let b = config_by_name("r2a4c8_wg8x32").unwrap().index();
+        let coord = std::sync::Arc::new(Coordinator::start_pool(
+            PathBuf::from("/nonexistent-artifacts"),
+            SelectorPolicy::Single(a),
+            PoolConfig { shards: 4, ..PoolConfig::default() },
+        )
+        .expect("coordinator start"));
+        let swapped = std::sync::Arc::new(AtomicBool::new(false));
+        let shape = GemmShape::new(64, 64, 64, 1);
+        let mut joins = Vec::new();
+        for t in 0..4u32 {
+            let coord = coord.clone();
+            let swapped = swapped.clone();
+            joins.push(std::thread::spawn(move || {
+                let mut stale_after_swap = 0usize;
+                for i in 0..60u32 {
+                    // Read the marker *before* submitting: if the swap
+                    // completed before this request was even created, a
+                    // stale resolution would prove the invalidation leaky.
+                    let swap_was_done = swapped.load(Ordering::SeqCst);
+                    let lhs = fill_buffer(t * 1000 + i, 64 * 64);
+                    let rhs = fill_buffer(t * 1000 + i + 7, 64 * 64);
+                    let resp = coord.call(shape, lhs, rhs).expect("response");
+                    assert!(resp.result.is_ok());
+                    let served = resp.config_used.expect("direct resolution");
+                    assert!(
+                        served == a || served == b,
+                        "torn deployment: config {served} is neither old nor new"
+                    );
+                    if swap_was_done && served == a {
+                        stale_after_swap += 1;
+                    }
+                }
+                stale_after_swap
+            }));
+        }
+        std::thread::sleep(Duration::from_millis(3));
+        let generation = coord.swap_selector(SelectorPolicy::Single(b));
+        assert_eq!(generation, 1);
+        swapped.store(true, Ordering::SeqCst);
+        let stale: usize = joins.into_iter().map(|j| j.join().unwrap()).sum();
+        assert_eq!(stale, 0, "stale-generation resolutions served after invalidation");
+        // New traffic resolves under the new deployment.
+        let resp = coord
+            .call(shape, fill_buffer(1, 64 * 64), fill_buffer(2, 64 * 64))
+            .unwrap();
+        assert_eq!(resp.config_used, Some(b));
+        let report = std::sync::Arc::try_unwrap(coord)
+            .ok()
+            .expect("sole owner")
+            .stop_detailed();
+        assert_eq!(report.total.selector_swaps, 1);
+        assert_eq!(report.total.failures, 0);
+        // Pool totals still equal the per-shard sums for shard counters.
+        assert_eq!(
+            report.total.requests,
+            report.per_shard.iter().map(|m| m.requests).sum::<usize>()
+        );
+    }
+
+    #[test]
+    fn pool_retunes_from_measured_telemetry_and_reports_swaps() {
+        // Hints priced on the i7 profile (the "tuning device"), serving
+        // simulated on the R9 Nano: drift must trip, and an explicit
+        // retune must hot-swap a selector trained on the measured data.
+        let manifest = Manifest::synthetic();
+        let best = config_by_name(&manifest.single_best).unwrap().index();
+        let coord = Coordinator::start_pool(
+            PathBuf::from("/nonexistent-artifacts"),
+            SelectorPolicy::Single(best),
+            PoolConfig {
+                shards: 2,
+                engine: EngineKind::Sim { profile: "r9-nano" },
+                pricing_profile: Some("i7-6700k"),
+                ..PoolConfig::default()
+            },
+        )
+        .expect("coordinator start");
+        let shapes = [
+            GemmShape::new(32, 32, 32, 1),
+            GemmShape::new(64, 64, 64, 1),
+            GemmShape::new(128, 128, 128, 1),
+        ];
+        for round in 0..3u32 {
+            for (si, shape) in shapes.iter().enumerate() {
+                let seed = round * 10 + si as u32;
+                let lhs = fill_buffer(seed, shape.batch * shape.m * shape.k);
+                let rhs = fill_buffer(seed + 5, shape.batch * shape.k * shape.n);
+                assert!(coord.call(*shape, lhs, rhs).unwrap().result.is_ok());
+            }
+        }
+        assert_eq!(coord.telemetry().total_samples(), 9);
+        let cfg = RetuneConfig { min_cell_samples: 2, ..RetuneConfig::default() };
+        let outcome = coord.retune_now(&cfg);
+        let RetuneOutcome::Swapped { generation, deployed } = outcome else {
+            panic!("expected a swap, got {outcome:?}");
+        };
+        assert_eq!(generation, 1);
+        assert_eq!(coord.selector_generation(), 1);
+        let pool = coord.registry().manifest.shipped_configs();
+        assert!(deployed.iter().all(|c| pool.contains(c)));
+        assert!(coord.retune_stats().drift_trips >= 1);
+        // The swapped selector keeps serving correct results.
+        for shape in &shapes {
+            let lhs = fill_buffer(91, shape.batch * shape.m * shape.k);
+            let rhs = fill_buffer(92, shape.batch * shape.k * shape.n);
+            let resp = coord.call(*shape, lhs.clone(), rhs.clone()).unwrap();
+            let out = resp.result.expect("post-swap gemm");
+            assert_eq!(out, host_gemm(shape, &lhs, &rhs).unwrap());
+        }
+        let report = coord.stop_detailed();
+        assert!(report.total.selector_swaps >= 1);
+        assert!(report.total.retunes >= 1);
+        assert!(report.total.drift_trips >= 1);
+        assert_eq!(report.tuning.swaps, report.total.selector_swaps);
+        assert!(report.summary().contains("tuning:"));
     }
 
     #[test]

@@ -92,7 +92,7 @@ impl DeviceProfile {
 }
 
 /// AMD R9 Nano (Fiji): 64 CUs, 8.19 TFLOP/s fp32, 512 GB/s HBM.
-fn r9_nano() -> DeviceProfile {
+const fn r9_nano() -> DeviceProfile {
     DeviceProfile {
         name: "r9-nano",
         kind: DeviceKind::DiscreteGpu,
@@ -116,7 +116,7 @@ fn r9_nano() -> DeviceProfile {
 
 /// Intel i7-6700K (Skylake, 4c/8t @ 4.0 GHz, AVX2 FMA): ~512 GFLOP/s fp32,
 /// ~34 GB/s DDR4.
-fn i7_6700k() -> DeviceProfile {
+const fn i7_6700k() -> DeviceProfile {
     DeviceProfile {
         name: "i7-6700k",
         kind: DeviceKind::Cpu,
@@ -139,7 +139,7 @@ fn i7_6700k() -> DeviceProfile {
 }
 
 /// Intel HD Graphics 530 (Gen9, 24 EUs): ~440 GFLOP/s, shared ~34 GB/s.
-fn hd530() -> DeviceProfile {
+const fn hd530() -> DeviceProfile {
     DeviceProfile {
         name: "hd530",
         kind: DeviceKind::IntegratedGpu,
@@ -162,7 +162,7 @@ fn hd530() -> DeviceProfile {
 }
 
 /// ARM Mali G71 (Bifrost, ~8 cores): ~265 GFLOP/s, ~15 GB/s LPDDR4.
-fn mali_g71() -> DeviceProfile {
+const fn mali_g71() -> DeviceProfile {
     DeviceProfile {
         name: "mali-g71",
         kind: DeviceKind::MobileGpu,
@@ -185,9 +185,7 @@ fn mali_g71() -> DeviceProfile {
 }
 
 pub fn all_profiles() -> &'static [DeviceProfile] {
-    use once_cell::sync::Lazy;
-    static PROFILES: Lazy<Vec<DeviceProfile>> =
-        Lazy::new(|| vec![r9_nano(), i7_6700k(), hd530(), mali_g71()]);
+    static PROFILES: [DeviceProfile; 4] = [r9_nano(), i7_6700k(), hd530(), mali_g71()];
     &PROFILES
 }
 

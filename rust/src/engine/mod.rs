@@ -67,6 +67,23 @@ pub trait Backend {
         rhs: &[f32],
     ) -> Result<Vec<f32>, String>;
 
+    /// Execute one GEMM and report its measured execution time in seconds
+    /// — the telemetry signal online retuning learns from. The default
+    /// wraps [`Backend::execute`] in a wall clock; the SimBackend
+    /// overrides it to report the analytical model's device time (its
+    /// host GEMM wall time says nothing about the simulated kernel).
+    fn execute_timed(
+        &mut self,
+        meta: &ArtifactMeta,
+        shape: &GemmShape,
+        lhs: &[f32],
+        rhs: &[f32],
+    ) -> Result<(Vec<f32>, f64), String> {
+        let t0 = std::time::Instant::now();
+        let out = self.execute(meta, shape, lhs, rhs)?;
+        Ok((out, t0.elapsed().as_secs_f64()))
+    }
+
     fn stats(&self) -> BackendStats;
 }
 
@@ -75,6 +92,11 @@ pub trait Backend {
 pub enum EngineKind {
     /// Analytical-model execution on a named `devsim` device profile.
     Sim { profile: &'static str },
+    /// Like [`EngineKind::Sim`], but each execute also sleeps
+    /// `permille/1000 x` the simulated device time, so end-to-end wall
+    /// latency tracks predicted kernel quality — what the
+    /// `retune_convergence` bench measures.
+    SimPaced { profile: &'static str, permille: u32 },
     /// Native PJRT execution of the HLO artifacts.
     #[cfg(feature = "pjrt")]
     Pjrt,
@@ -92,6 +114,9 @@ impl EngineKind {
     pub fn create(&self, _artifacts_dir: &Path) -> Result<Box<dyn Backend>, String> {
         match self {
             EngineKind::Sim { profile } => Ok(Box::new(SimBackend::new(profile)?)),
+            EngineKind::SimPaced { profile, permille } => {
+                Ok(Box::new(SimBackend::with_pacing(profile, *permille)?))
+            }
             #[cfg(feature = "pjrt")]
             EngineKind::Pjrt => Ok(Box::new(PjrtBackend::new(_artifacts_dir)?)),
         }
@@ -100,6 +125,7 @@ impl EngineKind {
     pub fn name(&self) -> &'static str {
         match self {
             EngineKind::Sim { .. } => "sim",
+            EngineKind::SimPaced { .. } => "sim-paced",
             #[cfg(feature = "pjrt")]
             EngineKind::Pjrt => "pjrt",
         }
@@ -132,6 +158,14 @@ mod tests {
     fn by_name_roundtrip() {
         assert_eq!(EngineKind::by_name("sim"), Some(EngineKind::default()));
         assert_eq!(EngineKind::by_name("bogus"), None);
+    }
+
+    #[test]
+    fn paced_engine_creates_and_names() {
+        let kind = EngineKind::SimPaced { profile: "r9-nano", permille: 1000 };
+        assert_eq!(kind.name(), "sim-paced");
+        let backend = kind.create(Path::new("/nonexistent")).unwrap();
+        assert_eq!(backend.name(), "sim");
     }
 
     #[test]

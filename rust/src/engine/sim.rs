@@ -20,17 +20,28 @@ pub struct SimBackend {
     /// The devsim space only covers the Pallas configs; the XLA-dot
     /// comparator artifact is timed as this well-rounded proxy config.
     xla_proxy: KernelConfig,
+    /// Pacing factor: each execute sleeps `permille/1000 x` the simulated
+    /// device time, so wall latency tracks kernel quality. 0 = no pacing.
+    pace_permille: u32,
     compiled: HashSet<String>,
     stats: BackendStats,
 }
 
 impl SimBackend {
     pub fn new(profile_name: &str) -> Result<SimBackend, String> {
+        SimBackend::with_pacing(profile_name, 0)
+    }
+
+    /// A SimBackend whose executes sleep `permille/1000 x` the simulated
+    /// device time (1000 = real-time pacing, 20000 = 20x amplification for
+    /// benches where the paced sleep must dominate host-GEMM wall time).
+    pub fn with_pacing(profile_name: &str, pace_permille: u32) -> Result<SimBackend, String> {
         let profile = profile_by_name(profile_name)
             .ok_or_else(|| format!("unknown device profile {profile_name:?}"))?;
         Ok(SimBackend {
             profile,
             xla_proxy: config_by_name("r4a4c4_wg16x16").expect("proxy config"),
+            pace_permille,
             compiled: HashSet::new(),
             stats: BackendStats::default(),
         })
@@ -124,10 +135,28 @@ impl Backend for SimBackend {
         let t0 = std::time::Instant::now();
         let out = host_gemm(shape, lhs, rhs)?;
         let predicted = self.simulated_secs(meta, shape);
+        if self.pace_permille > 0 {
+            let sleep = predicted * self.pace_permille as f64 / 1000.0;
+            std::thread::sleep(std::time::Duration::from_secs_f64(sleep));
+        }
         self.stats.executions += 1;
         self.stats.execute_secs += t0.elapsed().as_secs_f64();
         self.stats.simulated_secs += predicted;
         Ok(out)
+    }
+
+    /// The measured time of a simulated execution is the analytical
+    /// model's device time — the host GEMM's wall clock measures this
+    /// machine, not the simulated device.
+    fn execute_timed(
+        &mut self,
+        meta: &ArtifactMeta,
+        shape: &GemmShape,
+        lhs: &[f32],
+        rhs: &[f32],
+    ) -> Result<(Vec<f32>, f64), String> {
+        let out = self.execute(meta, shape, lhs, rhs)?;
+        Ok((out, self.simulated_secs(meta, shape)))
     }
 
     fn stats(&self) -> BackendStats {
@@ -200,6 +229,38 @@ mod tests {
         assert_eq!(stats.cache_hits, 1);
         assert_eq!(stats.executions, 1);
         assert!(stats.simulated_secs > 0.0);
+    }
+
+    #[test]
+    fn execute_timed_reports_simulated_device_time() {
+        let manifest = Manifest::synthetic();
+        let mut be = backend();
+        let shape = GemmShape::new(64, 64, 64, 1);
+        let meta = meta_for(&manifest, None, &shape);
+        let lhs = fill_buffer(1, 64 * 64);
+        let rhs = fill_buffer(2, 64 * 64);
+        let (out, measured) = be.execute_timed(&meta, &shape, &lhs, &rhs).unwrap();
+        assert_eq!(out.len(), 64 * 64);
+        // The reported time is the analytical model's device time, exactly
+        // what one execute accumulated into the stats.
+        assert!((measured - be.stats().simulated_secs).abs() < 1e-15);
+        assert!(measured > 0.0);
+    }
+
+    #[test]
+    fn paced_backend_sleeps_at_least_the_scaled_time() {
+        let manifest = Manifest::synthetic();
+        let mut be = SimBackend::with_pacing("r9-nano", 1000).unwrap();
+        let shape = GemmShape::new(32, 32, 32, 1);
+        let meta = meta_for(&manifest, None, &shape);
+        let lhs = fill_buffer(1, 32 * 32);
+        let rhs = fill_buffer(2, 32 * 32);
+        let t0 = std::time::Instant::now();
+        let (_, predicted) = be.execute_timed(&meta, &shape, &lhs, &rhs).unwrap();
+        assert!(
+            t0.elapsed().as_secs_f64() >= predicted,
+            "paced execute must sleep the simulated time"
+        );
     }
 
     #[test]

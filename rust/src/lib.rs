@@ -19,6 +19,12 @@
 //!   benchmark data pipeline, unsupervised kernel-subset selection, the
 //!   runtime classifier with its memoized hot path, and a load-aware,
 //!   work-stealing executor pool with per-shard batching and metrics.
+//!
+//! Cutting across layers 3 and 4, the [`tuning`] subsystem closes the
+//! loop at runtime: shards feed measured execution times into a telemetry
+//! sink, a drift detector compares them against the devsim predictions,
+//! and a background retuner re-runs selection + classification on the
+//! measured data and hot-swaps the selector without pausing traffic.
 
 pub mod classify;
 pub mod coordinator;
@@ -30,4 +36,5 @@ pub mod linalg;
 pub mod ml;
 pub mod runtime;
 pub mod selection;
+pub mod tuning;
 pub mod util;

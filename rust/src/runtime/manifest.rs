@@ -292,6 +292,21 @@ impl Manifest {
         Ok(out)
     }
 
+    /// Distinct kernel configurations with at least one shipped GEMM
+    /// artifact, sorted — the candidate pool online retuning may select
+    /// from (a selector cannot deploy a kernel the binary does not carry).
+    pub fn shipped_configs(&self) -> Vec<usize> {
+        let mut configs: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::Matmul)
+            .filter_map(|a| a.config_index)
+            .collect();
+        configs.sort_unstable();
+        configs.dedup();
+        configs
+    }
+
     /// Distinct GEMM shapes available as standalone artifacts.
     pub fn matmul_shapes(&self) -> Vec<(usize, usize, usize, usize)> {
         let mut shapes: Vec<(usize, usize, usize, usize)> = self
@@ -339,6 +354,22 @@ mod tests {
         }
         // Unknown shapes stay unknown.
         assert!(m.find_matmul(None, 17, 19, 23, 1).is_none());
+    }
+
+    #[test]
+    fn shipped_configs_match_deployment() {
+        let m = Manifest::synthetic();
+        let pool = m.shipped_configs();
+        assert_eq!(pool.len(), 8, "synthetic deployment ships 8 configs");
+        let mut expected: Vec<usize> = m
+            .deployed
+            .iter()
+            .map(|n| crate::dataset::config_by_name(n).unwrap().index())
+            .collect();
+        expected.sort_unstable();
+        assert_eq!(pool, expected);
+        // Sorted and deduplicated.
+        assert!(pool.windows(2).all(|w| w[0] < w[1]));
     }
 
     #[test]

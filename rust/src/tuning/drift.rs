@@ -1,0 +1,241 @@
+//! Drift detection: measured serving cost vs the devsim predictions the
+//! deployment was tuned against.
+//!
+//! For every telemetry cell with enough samples the detector computes the
+//! ratio of measured to predicted dispatch time, folds the ratios into a
+//! per-configuration geometric mean (and one global geometric mean), and
+//! trips when any configuration's ratio deviates from 1.0 by more than a
+//! configurable threshold in either direction. A perfectly-predicting
+//! model (serving the same device profile the hints are priced against)
+//! yields ratios of exactly 1.0 and never trips.
+//!
+//! The ratios double as calibration: the retuner uses them to correct the
+//! devsim prior for cells it has no measurements on, so the live dataset
+//! mixes measured truth with drift-corrected estimates instead of raw
+//! stale predictions.
+
+use crate::coordinator::cache::predict_dispatch_secs;
+use crate::devsim::DeviceProfile;
+use crate::tuning::telemetry::TelemetrySnapshot;
+
+/// Measured/predicted time ratio of one configuration (geometric mean over
+/// its measured cells). `ratio > 1` = the device runs it slower than the
+/// pricing model predicts.
+#[derive(Clone, Debug)]
+pub struct ConfigDrift {
+    pub config: usize,
+    /// Cells (distinct shapes) the ratio is estimated from.
+    pub cells: usize,
+    pub samples: u64,
+    pub ratio: f64,
+}
+
+/// Pool-wide drift verdict.
+#[derive(Clone, Debug)]
+pub struct DriftReport {
+    pub per_config: Vec<ConfigDrift>,
+    /// Geometric-mean ratio over every measured cell (any config).
+    pub global_ratio: f64,
+    /// The largest per-config deviation, as `max(ratio, 1/ratio) >= 1`.
+    pub max_deviation: f64,
+    /// Measured cells that contributed.
+    pub cells: usize,
+}
+
+impl Default for DriftReport {
+    fn default() -> DriftReport {
+        DriftReport { per_config: Vec::new(), global_ratio: 1.0, max_deviation: 1.0, cells: 0 }
+    }
+}
+
+impl DriftReport {
+    /// Whether any configuration drifted beyond `threshold` (> 1), e.g.
+    /// 1.25 trips on a >25% gap between measured and predicted cost.
+    /// This is the absolute check — equivalent to
+    /// [`DriftReport::triggered_relative`] against a pristine baseline.
+    pub fn triggered(&self, threshold: f64) -> bool {
+        self.triggered_relative(1.0, threshold)
+    }
+
+    /// Whether the worst deviation moved by more than `threshold` (> 1)
+    /// *relative to* `baseline` — the deviation a previous retune already
+    /// incorporated (pass 1.0, or 0.0 meaning "none yet", before the
+    /// first retune). This is the retuner's trip predicate: a permanently
+    /// mispredicting device trips once, not on every tick after the
+    /// retune absorbed the measurements.
+    pub fn triggered_relative(&self, baseline: f64, threshold: f64) -> bool {
+        if self.cells == 0 {
+            return false;
+        }
+        // Deviations are >= 1 by construction; 0/negative = no baseline.
+        let baseline = baseline.max(1.0);
+        let current = self.max_deviation.max(1.0);
+        (current / baseline).max(baseline / current) > threshold.max(1.0)
+    }
+
+    /// Calibration ratio for a configuration: its own geomean ratio when
+    /// measured anywhere, the global ratio otherwise.
+    pub fn ratio_for(&self, config: usize) -> f64 {
+        self.per_config
+            .iter()
+            .find(|c| c.config == config)
+            .map(|c| c.ratio)
+            .unwrap_or(self.global_ratio)
+    }
+}
+
+/// Compare a telemetry snapshot against the devsim predictions priced on
+/// `profile`. Only cells with a concrete configuration and at least
+/// `min_cell_samples` samples participate (the XLA comparator has no
+/// devsim point, so it is excluded).
+pub fn evaluate_drift(
+    snapshot: &TelemetrySnapshot,
+    profile: &DeviceProfile,
+    min_cell_samples: u64,
+) -> DriftReport {
+    struct Acc {
+        log_sum: f64,
+        cells: usize,
+        samples: u64,
+    }
+    let mut by_config: Vec<(usize, Acc)> = Vec::new();
+    let mut global_log_sum = 0.0;
+    let mut global_cells = 0usize;
+    for cell in &snapshot.cells {
+        let Some(config) = cell.config else { continue };
+        if cell.count < min_cell_samples {
+            continue;
+        }
+        let predicted = predict_dispatch_secs(profile, &cell.shape, Some(config));
+        if predicted <= 0.0 {
+            continue;
+        }
+        let log_ratio = (cell.ewma_secs / predicted).ln();
+        global_log_sum += log_ratio;
+        global_cells += 1;
+        match by_config.iter().position(|(c, _)| *c == config) {
+            Some(i) => {
+                let acc = &mut by_config[i].1;
+                acc.log_sum += log_ratio;
+                acc.cells += 1;
+                acc.samples += cell.count;
+            }
+            None => by_config.push((
+                config,
+                Acc { log_sum: log_ratio, cells: 1, samples: cell.count },
+            )),
+        }
+    }
+    if global_cells == 0 {
+        return DriftReport::default();
+    }
+    let mut per_config: Vec<ConfigDrift> = by_config
+        .into_iter()
+        .map(|(config, acc)| ConfigDrift {
+            config,
+            cells: acc.cells,
+            samples: acc.samples,
+            ratio: (acc.log_sum / acc.cells as f64).exp(),
+        })
+        .collect();
+    per_config.sort_by_key(|c| c.config);
+    let max_deviation = per_config
+        .iter()
+        .map(|c| c.ratio.max(1.0 / c.ratio))
+        .fold(1.0f64, f64::max);
+    DriftReport {
+        per_config,
+        global_ratio: (global_log_sum / global_cells as f64).exp(),
+        max_deviation,
+        cells: global_cells,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::GemmShape;
+    use crate::devsim::profile_by_name;
+    use crate::tuning::telemetry::TelemetrySink;
+
+    fn shapes() -> Vec<GemmShape> {
+        vec![
+            GemmShape::new(32, 32, 32, 1),
+            GemmShape::new(64, 64, 64, 1),
+            GemmShape::new(128, 128, 128, 1),
+        ]
+    }
+
+    #[test]
+    fn no_drift_when_predictions_are_exact() {
+        // Feed the detector the pricing model's own predictions: every
+        // ratio must be exactly 1 and nothing may trip.
+        let profile = profile_by_name("i7-6700k").unwrap();
+        let sink = TelemetrySink::new(1, 1.0);
+        for s in shapes() {
+            for cfg in [100usize, 200, 300] {
+                let t = predict_dispatch_secs(profile, &s, Some(cfg));
+                sink.record(s, Some(cfg), t);
+            }
+        }
+        let report = evaluate_drift(&sink.snapshot(), profile, 1);
+        assert_eq!(report.cells, 9);
+        assert!((report.global_ratio - 1.0).abs() < 1e-9, "{}", report.global_ratio);
+        assert!((report.max_deviation - 1.0).abs() < 1e-9);
+        assert!(!report.triggered(1.05));
+    }
+
+    #[test]
+    fn cross_device_serving_trips_the_detector() {
+        // Priced on the CPU, measured on the GPU simulator: ratios diverge
+        // far beyond any reasonable threshold.
+        let cpu = profile_by_name("i7-6700k").unwrap();
+        let gpu = profile_by_name("r9-nano").unwrap();
+        let sink = TelemetrySink::new(1, 1.0);
+        for s in shapes() {
+            for cfg in [100usize, 300] {
+                sink.record(s, Some(cfg), predict_dispatch_secs(gpu, &s, Some(cfg)));
+            }
+        }
+        let report = evaluate_drift(&sink.snapshot(), cpu, 1);
+        assert!(report.triggered(1.25), "max deviation {}", report.max_deviation);
+        assert_eq!(report.per_config.len(), 2);
+        // Calibration: measured configs use their own ratio, unmeasured
+        // configs fall back to the global geomean.
+        let own = report.ratio_for(100);
+        assert!((own - report.per_config[0].ratio).abs() < 1e-12);
+        assert!((report.ratio_for(555) - report.global_ratio).abs() < 1e-12);
+    }
+
+    #[test]
+    fn undersampled_and_xla_cells_excluded() {
+        let profile = profile_by_name("i7-6700k").unwrap();
+        let sink = TelemetrySink::new(1, 1.0);
+        let s = GemmShape::new(64, 64, 64, 1);
+        sink.record(s, Some(5), 1.0); // one sample < min of 2
+        sink.record(s, None, 1.0); // XLA comparator: no devsim point
+        sink.record(s, None, 1.0);
+        let report = evaluate_drift(&sink.snapshot(), profile, 2);
+        assert_eq!(report.cells, 0);
+        assert!(!report.triggered(1.0001));
+        assert_eq!(report.global_ratio, 1.0);
+    }
+
+    #[test]
+    fn relative_trigger_is_quiet_once_baseline_absorbed() {
+        let cpu = profile_by_name("i7-6700k").unwrap();
+        let gpu = profile_by_name("r9-nano").unwrap();
+        let sink = TelemetrySink::new(1, 1.0);
+        for s in shapes() {
+            sink.record(s, Some(100), predict_dispatch_secs(gpu, &s, Some(100)));
+        }
+        let report = evaluate_drift(&sink.snapshot(), cpu, 1);
+        // Fresh deployment (no baseline): the big deviation trips.
+        assert!(report.triggered_relative(0.0, 1.25));
+        assert!(report.triggered_relative(1.0, 1.25));
+        // A retune that already incorporated this deviation: quiet.
+        assert!(!report.triggered_relative(report.max_deviation, 1.25));
+        // Deviation moving well past the absorbed baseline trips again.
+        assert!(report.triggered_relative(report.max_deviation * 2.0, 1.25));
+    }
+}

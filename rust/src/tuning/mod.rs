@@ -1,0 +1,34 @@
+//! Online retuning: measured-cost telemetry, drift detection, background
+//! re-selection and hot-swappable selector deployment.
+//!
+//! The offline pipeline (paper §4 + §5) tunes once against devsim
+//! benchmark data and freezes the selector at startup. This subsystem
+//! closes the loop on the serving path:
+//!
+//! ```text
+//!   shards measure ──▶ [telemetry]  ──▶ [drift detector] ──trip/timer──▶
+//!   [retuner: live PerfDataset ▶ PCA+K-means ▶ decision tree] ──▶
+//!   [generation-counted hot swap] ──▶ selector cache invalidation
+//! ```
+//!
+//! * [`telemetry`] — lock-light striped (shape, config) → measured-time
+//!   accumulator; also powers the measured cost-hint handoff for the
+//!   router's load gauges.
+//! * [`drift`] — per-config geometric-mean measured/predicted ratios with
+//!   a configurable trip threshold, doubling as prior calibration.
+//! * [`retuner`] — the background thread plus the synchronous
+//!   [`retuner::retune_once`] step it (and benches) drive.
+//! * [`swap`] — the generation-counted selector handle and the shared
+//!   swap-then-invalidate deployment path.
+
+pub mod drift;
+pub mod retuner;
+pub mod swap;
+pub mod telemetry;
+
+pub use drift::{evaluate_drift, ConfigDrift, DriftReport};
+pub use retuner::{
+    live_dataset, retune_once, RetuneConfig, RetuneOutcome, Retuner, RetunerStats,
+};
+pub use swap::{deploy_policy, DeployedSelector, SelectorHandle};
+pub use telemetry::{TelemetryCell, TelemetrySink, TelemetrySnapshot};

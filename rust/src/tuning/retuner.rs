@@ -1,0 +1,518 @@
+//! The background retuner: re-runs the paper's §4 selection and §5
+//! classification on *measured* serving data and hot-swaps the result.
+//!
+//! The loop is the adaptive-library closing of the paper's "fully
+//! automated, relying only on benchmark data" claim: telemetry accumulates
+//! a live benchmark dataset on the serving path, the drift detector
+//! decides when the deployed selector's assumptions went stale, and a
+//! retune re-selects + retrains against the measured data, publishing the
+//! new decision tree through the generation-counted selector handle.
+//!
+//! Measured cells are truth; unmeasured cells of the shipped pool are
+//! filled with the devsim prior *calibrated by the drift ratios* (a
+//! config's own measured/predicted geomean where it was observed, the
+//! global geomean otherwise). Selection is implicitly restricted to the
+//! shipped artifact pool — cells outside it stay zero, so no pick can
+//! name a kernel the library cannot actually serve (the paper's
+//! binary-size constraint survives online retuning).
+//!
+//! One retune step ([`retune_once`]) is a plain synchronous function so
+//! benches and tests can drive deterministic retune cycles; [`Retuner`]
+//! wraps it in a timer/drift-triggered background thread for serving.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::classify::ClassifierKind;
+use crate::coordinator::cache::{predict_dispatch_secs, ResolutionCache};
+use crate::coordinator::registry::KernelRegistry;
+use crate::coordinator::selector::{tune_selector_with, SelectorPolicy};
+use crate::dataset::{Normalization, PerfDataset, NUM_CONFIGS};
+use crate::devsim::DeviceProfile;
+use crate::linalg::Matrix;
+use crate::selection::Method;
+use crate::tuning::drift::{evaluate_drift, DriftReport};
+use crate::tuning::swap::deploy_policy;
+use crate::tuning::telemetry::{TelemetrySink, TelemetrySnapshot};
+
+/// Background-retuning policy knobs.
+#[derive(Clone, Debug)]
+pub struct RetuneConfig {
+    /// Timer cadence: retune at least this often once data exists (drift
+    /// can trigger a retune earlier).
+    pub interval: Duration,
+    /// Drift trigger: retune when any config's measured/predicted ratio
+    /// deviates beyond this factor (> 1), e.g. 1.25 = 25%.
+    pub drift_threshold: f64,
+    /// Distinct measured shapes required before the first retune.
+    pub min_shapes: usize,
+    /// Samples a telemetry cell needs to count as measured.
+    pub min_cell_samples: u64,
+    /// Deployed-set size to re-select; `None` = the whole shipped pool.
+    pub k: Option<usize>,
+    pub norm: Normalization,
+    /// Classifier retrained on the live dataset. Must be one of the
+    /// decision-tree kinds (only trees compile to a deployable
+    /// [`crate::classify::codegen::CompiledTree`]); anything else makes
+    /// every retune return [`RetuneOutcome::UnsupportedClassifier`]. The
+    /// default is the unbounded tree (paper's DecisionTreeA): the live
+    /// dataset is the serving distribution itself, so exact fit is what
+    /// we want.
+    pub classifier: ClassifierKind,
+    pub seed: u64,
+}
+
+impl Default for RetuneConfig {
+    fn default() -> RetuneConfig {
+        RetuneConfig {
+            interval: Duration::from_secs(2),
+            drift_threshold: 1.25,
+            min_shapes: 2,
+            min_cell_samples: 3,
+            k: None,
+            norm: Normalization::Standard,
+            classifier: ClassifierKind::DecisionTreeA,
+            seed: 17,
+        }
+    }
+}
+
+/// Counters the retuner accumulates (folded into the pool metrics at
+/// shutdown).
+#[derive(Clone, Debug, Default)]
+pub struct RetunerStats {
+    /// Retune attempts (timer ticks plus explicit `retune_now` calls).
+    pub ticks: usize,
+    /// Ticks where the drift detector tripped.
+    pub drift_trips: usize,
+    /// Full selection+classification reruns that produced a tree.
+    pub retunes: usize,
+    /// Reruns whose tree differed and was hot-swapped in.
+    pub swaps: usize,
+    /// The worst per-config drift deviation seen on the last tick.
+    pub last_drift_deviation: f64,
+    /// Deviation the most recent retune already incorporated (0 = none
+    /// yet). Drift only *re*-triggers when it moves relative to this: a
+    /// permanently mispredicting device (cross-device serving) must not
+    /// re-trip on every tick after a retune absorbed the measurements.
+    pub baseline_deviation: f64,
+    /// Generation of the most recent swap (0 = never swapped).
+    pub generation: u64,
+}
+
+/// What one retune attempt did.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RetuneOutcome {
+    /// `RetuneConfig::classifier` cannot compile to a deployable tree —
+    /// a misconfiguration, not a data problem; retuning will never land
+    /// until the config changes.
+    UnsupportedClassifier,
+    /// Not enough measured data yet.
+    Insufficient,
+    /// Data exists but neither drift nor the timer asked for a retune.
+    NotDue,
+    /// Re-ran the pipeline; the tree was identical, nothing swapped.
+    NoChange,
+    /// Published a new selector.
+    Swapped { generation: u64, deployed: Vec<usize> },
+}
+
+/// Fold a telemetry snapshot into a live [`PerfDataset`]: rows are the
+/// measured shapes, measured cells carry measured GFLOP/s, unmeasured
+/// cells of the shipped `pool` carry the drift-calibrated devsim prior,
+/// and everything outside the pool stays zero (unselectable).
+pub fn live_dataset(
+    snapshot: &TelemetrySnapshot,
+    profile: &DeviceProfile,
+    drift: &DriftReport,
+    pool: &[usize],
+    min_cell_samples: u64,
+) -> Option<PerfDataset> {
+    let shapes = snapshot.measured_shapes(min_cell_samples);
+    if shapes.is_empty() || pool.is_empty() {
+        return None;
+    }
+    // Index the snapshot once: the cell lookups below would otherwise
+    // linear-scan the whole snapshot per (shape, config) pair.
+    let by_key: std::collections::HashMap<(crate::dataset::GemmShape, usize), f64> = snapshot
+        .cells
+        .iter()
+        .filter(|c| c.count >= min_cell_samples)
+        .filter_map(|c| c.config.map(|config| ((c.shape, config), c.gflops())))
+        .collect();
+    let mut gflops = Matrix::zeros(shapes.len(), NUM_CONFIGS);
+    for (row, shape) in shapes.iter().enumerate() {
+        for &config in pool {
+            let value = match by_key.get(&(*shape, config)) {
+                Some(&measured_gflops) => measured_gflops,
+                None => {
+                    let secs = predict_dispatch_secs(profile, shape, Some(config))
+                        * drift.ratio_for(config);
+                    shape.flops() / (secs.max(1e-12) * 1e9)
+                }
+            };
+            gflops[(row, config)] = value;
+        }
+    }
+    Some(PerfDataset::new(
+        &format!("live-{}", profile.name),
+        shapes,
+        gflops,
+    ))
+}
+
+/// Run one synchronous retune attempt against the pool's live state.
+///
+/// `timer_due` says whether the caller's retune timer elapsed; drift can
+/// force a retune regardless. Explicit callers (benches,
+/// `Coordinator::retune_now`) pass `true` to always retune when data
+/// exists.
+pub fn retune_once(
+    cfg: &RetuneConfig,
+    timer_due: bool,
+    registry: &KernelRegistry,
+    cache: &ResolutionCache,
+    telemetry: &TelemetrySink,
+    stats: &mut RetunerStats,
+) -> RetuneOutcome {
+    stats.ticks += 1;
+    if !matches!(
+        cfg.classifier,
+        ClassifierKind::DecisionTreeA
+            | ClassifierKind::DecisionTreeB
+            | ClassifierKind::DecisionTreeC
+    ) {
+        return RetuneOutcome::UnsupportedClassifier;
+    }
+    let snapshot = telemetry.snapshot();
+    let shapes = snapshot.measured_shapes(cfg.min_cell_samples);
+    if shapes.len() < cfg.min_shapes.max(1) {
+        return RetuneOutcome::Insufficient;
+    }
+    let profile = cache.pricing_profile();
+    let drift = evaluate_drift(&snapshot, profile, cfg.min_cell_samples);
+    stats.last_drift_deviation = drift.max_deviation;
+    // Drift triggers *relative to the last retune's* deviation: absolute
+    // drift stays high forever on a mispredicted device even after the
+    // retune incorporated every measurement — only a change in drift is
+    // actionable before the timer; slow creep is the timer's job.
+    let tripped = drift.triggered_relative(stats.baseline_deviation, cfg.drift_threshold);
+    if tripped {
+        stats.drift_trips += 1;
+    }
+    if !tripped && !timer_due {
+        return RetuneOutcome::NotDue;
+    }
+    let pool = registry.manifest.shipped_configs();
+    let Some(dataset) = live_dataset(&snapshot, profile, &drift, &pool, cfg.min_cell_samples)
+    else {
+        return RetuneOutcome::Insufficient;
+    };
+    let k = cfg.k.unwrap_or(pool.len()).clamp(1, pool.len());
+    let Some((deployed, tree)) =
+        tune_selector_with(Method::PcaKMeans, cfg.classifier, &dataset, k, cfg.norm, cfg.seed)
+    else {
+        // Unreachable with the kinds admitted above, but keep the
+        // misconfiguration signal if the compile path ever grows gaps.
+        return RetuneOutcome::UnsupportedClassifier;
+    };
+    stats.retunes += 1;
+    stats.baseline_deviation = drift.max_deviation;
+    if let SelectorPolicy::Tree(current) = &registry.policy().policy {
+        if current.deployed == tree.deployed && current.serialize() == tree.serialize() {
+            return RetuneOutcome::NoChange;
+        }
+    }
+    let generation = deploy_policy(registry, cache, SelectorPolicy::Tree(tree));
+    stats.swaps += 1;
+    stats.generation = generation;
+    RetuneOutcome::Swapped { generation, deployed }
+}
+
+struct RetunerShared {
+    stop: AtomicBool,
+    wake: Mutex<()>,
+    cv: Condvar,
+}
+
+/// Background retune thread: wakes every `interval / 4` to check drift,
+/// retunes on drift *change* or when the full interval elapsed since the
+/// last retune. The counters live in a caller-provided shared store so
+/// explicit `retune_now` calls and the thread accumulate into one place.
+pub struct Retuner {
+    shared: Arc<RetunerShared>,
+    stats: Arc<Mutex<RetunerStats>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Retuner {
+    pub fn start(
+        cfg: RetuneConfig,
+        registry: Arc<KernelRegistry>,
+        cache: Arc<ResolutionCache>,
+        telemetry: Arc<TelemetrySink>,
+        stats: Arc<Mutex<RetunerStats>>,
+    ) -> Retuner {
+        let shared = Arc::new(RetunerShared {
+            stop: AtomicBool::new(false),
+            wake: Mutex::new(()),
+            cv: Condvar::new(),
+        });
+        let thread_shared = shared.clone();
+        let thread_stats = stats.clone();
+        let handle = std::thread::Builder::new()
+            .name("kernelsel-retuner".to_string())
+            .spawn(move || {
+                let tick = (cfg.interval / 4).max(Duration::from_millis(10));
+                let mut last_retune = Instant::now();
+                loop {
+                    // Check stop *before* waiting, with the wake lock
+                    // held: shutdown stores the flag and then takes this
+                    // lock to notify, so either we see the flag here or
+                    // we are already waiting when the notify lands — the
+                    // wakeup can't fall between the check and the wait.
+                    // The lock is released before the retune work below.
+                    {
+                        let guard = thread_shared.wake.lock().unwrap();
+                        if thread_shared.stop.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        let _unused =
+                            thread_shared.cv.wait_timeout(guard, tick).unwrap();
+                    }
+                    if thread_shared.stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let timer_due = last_retune.elapsed() >= cfg.interval;
+                    // The lock is held across the attempt, but the drift
+                    // gate makes the common tick cheap (snapshot + ratio
+                    // math); the expensive selection+training stage only
+                    // runs on a drift change or the timer, so readers of
+                    // the shared stats stall at most once per retune.
+                    let mut stats = thread_stats.lock().unwrap();
+                    let outcome = retune_once(
+                        &cfg,
+                        timer_due,
+                        &registry,
+                        &cache,
+                        &telemetry,
+                        &mut stats,
+                    );
+                    drop(stats);
+                    match outcome {
+                        RetuneOutcome::Swapped { .. } | RetuneOutcome::NoChange => {
+                            last_retune = Instant::now();
+                        }
+                        RetuneOutcome::UnsupportedClassifier
+                        | RetuneOutcome::Insufficient
+                        | RetuneOutcome::NotDue => {}
+                    }
+                }
+            })
+            .expect("spawn retuner thread");
+        Retuner { shared, stats, handle: Some(handle) }
+    }
+
+    /// Point-in-time copy of the retuner's counters.
+    pub fn stats(&self) -> RetunerStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    fn shutdown(&mut self) {
+        if let Some(handle) = self.handle.take() {
+            self.shared.stop.store(true, Ordering::Relaxed);
+            let _guard = self.shared.wake.lock().unwrap();
+            self.shared.cv.notify_all();
+            drop(_guard);
+            let _ = handle.join();
+        }
+    }
+
+    /// Stop the thread and return the final counters.
+    pub fn finish(mut self) -> RetunerStats {
+        self.shutdown();
+        self.stats()
+    }
+}
+
+impl Drop for Retuner {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::registry::Resolution;
+    use crate::dataset::GemmShape;
+    use crate::devsim::profile_by_name;
+    use crate::runtime::Manifest;
+
+    fn fixture() -> (KernelRegistry, ResolutionCache, TelemetrySink) {
+        let manifest = Manifest::synthetic();
+        let best = crate::dataset::config_by_name(&manifest.single_best).unwrap().index();
+        let registry = KernelRegistry::new(manifest, SelectorPolicy::Single(best));
+        let cache = ResolutionCache::with_profile(64, "i7-6700k");
+        let telemetry = TelemetrySink::new(1, 1.0);
+        (registry, cache, telemetry)
+    }
+
+    /// Feed nano-measured times for every pool config at a few buckets.
+    fn feed_nano(telemetry: &TelemetrySink, registry: &KernelRegistry) {
+        let gpu = profile_by_name("r9-nano").unwrap();
+        let buckets = [
+            GemmShape::new(32, 32, 32, 1),
+            GemmShape::new(64, 64, 64, 1),
+            GemmShape::new(128, 128, 128, 1),
+            GemmShape::new(256, 256, 256, 1),
+        ];
+        for shape in buckets {
+            for config in registry.manifest.shipped_configs() {
+                let secs = predict_dispatch_secs(gpu, &shape, Some(config));
+                telemetry.record(shape, Some(config), secs);
+            }
+        }
+    }
+
+    #[test]
+    fn live_dataset_mixes_measured_and_calibrated_prior() {
+        let (registry, cache, telemetry) = fixture();
+        let profile = cache.pricing_profile();
+        let pool = registry.manifest.shipped_configs();
+        assert_eq!(pool.len(), 8);
+        let shape = GemmShape::new(64, 64, 64, 1);
+        // Measure exactly one pool config, 2x slower than predicted.
+        let predicted = predict_dispatch_secs(profile, &shape, Some(pool[0]));
+        telemetry.record(shape, Some(pool[0]), predicted * 2.0);
+        let snapshot = telemetry.snapshot();
+        let drift = evaluate_drift(&snapshot, profile, 1);
+        assert!((drift.global_ratio - 2.0).abs() < 1e-9);
+        let ds = live_dataset(&snapshot, profile, &drift, &pool, 1).unwrap();
+        assert_eq!(ds.n_shapes(), 1);
+        // Measured cell: measured gflops (half the predicted rate).
+        let measured_gflops = shape.flops() / (predicted * 2.0 * 1e9);
+        assert!((ds.gflops[(0, pool[0])] - measured_gflops).abs() < 1e-9);
+        // Unmeasured pool cell: prior corrected by the global 2x ratio.
+        let prior = predict_dispatch_secs(profile, &shape, Some(pool[1]));
+        let corrected = shape.flops() / (prior * 2.0 * 1e9);
+        assert!((ds.gflops[(0, pool[1])] - corrected).abs() < 1e-9);
+        // Outside the pool: zero, unselectable.
+        let outside = (0..NUM_CONFIGS).find(|c| !pool.contains(c)).unwrap();
+        assert_eq!(ds.gflops[(0, outside)], 0.0);
+    }
+
+    #[test]
+    fn retune_skips_without_data_and_swaps_on_drift() {
+        let (registry, cache, telemetry) = fixture();
+        let cfg = RetuneConfig { min_cell_samples: 1, ..RetuneConfig::default() };
+        let mut stats = RetunerStats::default();
+        assert_eq!(
+            retune_once(&cfg, true, &registry, &cache, &telemetry, &mut stats),
+            RetuneOutcome::Insufficient
+        );
+        feed_nano(&telemetry, &registry);
+        let outcome = retune_once(&cfg, true, &registry, &cache, &telemetry, &mut stats);
+        let RetuneOutcome::Swapped { generation, deployed } = outcome else {
+            panic!("expected swap, got {outcome:?}");
+        };
+        assert_eq!(generation, 1);
+        assert_eq!(registry.generation(), 1);
+        assert_eq!(stats.swaps, 1);
+        assert_eq!(stats.drift_trips, 1, "cross-device serving must trip drift");
+        // Every pick is a shipped config.
+        let pool = registry.manifest.shipped_configs();
+        assert!(deployed.iter().all(|c| pool.contains(c)));
+        // The swapped policy resolves directly (artifacts exist for it).
+        let (_, resolution, generation) =
+            registry.resolve(&GemmShape::new(64, 64, 64, 1)).unwrap();
+        assert_eq!(resolution, Resolution::Direct);
+        assert_eq!(generation, 1);
+    }
+
+    #[test]
+    fn identical_retraining_is_nochange_not_a_swap() {
+        let (registry, cache, telemetry) = fixture();
+        let cfg = RetuneConfig { min_cell_samples: 1, ..RetuneConfig::default() };
+        let mut stats = RetunerStats::default();
+        feed_nano(&telemetry, &registry);
+        let first = retune_once(&cfg, true, &registry, &cache, &telemetry, &mut stats);
+        assert!(matches!(first, RetuneOutcome::Swapped { .. }));
+        // Same telemetry, same config: the rerun reproduces the same tree.
+        let second = retune_once(&cfg, true, &registry, &cache, &telemetry, &mut stats);
+        assert_eq!(second, RetuneOutcome::NoChange);
+        assert_eq!(stats.swaps, 1);
+        assert_eq!(stats.retunes, 2);
+        assert_eq!(registry.generation(), 1, "no churn on identical trees");
+    }
+
+    #[test]
+    fn non_tree_classifier_reports_misconfiguration() {
+        let (registry, cache, telemetry) = fixture();
+        feed_nano(&telemetry, &registry);
+        let cfg = RetuneConfig {
+            min_cell_samples: 1,
+            classifier: ClassifierKind::NearestNeighbor1,
+            ..RetuneConfig::default()
+        };
+        let mut stats = RetunerStats::default();
+        let outcome = retune_once(&cfg, true, &registry, &cache, &telemetry, &mut stats);
+        assert_eq!(outcome, RetuneOutcome::UnsupportedClassifier);
+        assert_eq!(stats.retunes, 0);
+        assert_eq!(stats.drift_trips, 0, "misconfig must not masquerade as drift");
+        assert_eq!(registry.generation(), 0);
+    }
+
+    #[test]
+    fn not_due_without_timer_or_drift() {
+        let (registry, cache, telemetry) = fixture();
+        // Measured == predicted on the pricing profile: zero drift.
+        let profile = cache.pricing_profile();
+        for shape in [GemmShape::new(32, 32, 32, 1), GemmShape::new(64, 64, 64, 1)] {
+            for config in registry.manifest.shipped_configs() {
+                telemetry.record(
+                    shape,
+                    Some(config),
+                    predict_dispatch_secs(profile, &shape, Some(config)),
+                );
+            }
+        }
+        let cfg = RetuneConfig { min_cell_samples: 1, ..RetuneConfig::default() };
+        let mut stats = RetunerStats::default();
+        let outcome = retune_once(&cfg, false, &registry, &cache, &telemetry, &mut stats);
+        assert_eq!(outcome, RetuneOutcome::NotDue);
+        assert_eq!(stats.drift_trips, 0);
+        assert_eq!(registry.generation(), 0);
+    }
+
+    #[test]
+    fn background_thread_swaps_and_stops_cleanly() {
+        let (registry, cache, telemetry) = fixture();
+        let registry = Arc::new(registry);
+        let cache = Arc::new(cache);
+        let telemetry = Arc::new(telemetry);
+        feed_nano(&telemetry, &registry);
+        let cfg = RetuneConfig {
+            interval: Duration::from_millis(40),
+            min_cell_samples: 1,
+            ..RetuneConfig::default()
+        };
+        let stats_store = Arc::new(Mutex::new(RetunerStats::default()));
+        let retuner = Retuner::start(
+            cfg,
+            registry.clone(),
+            cache.clone(),
+            telemetry.clone(),
+            stats_store,
+        );
+        let t0 = Instant::now();
+        while registry.generation() == 0 && t0.elapsed() < Duration::from_secs(5) {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let stats = retuner.finish();
+        assert!(stats.swaps >= 1, "thread never swapped: {stats:?}");
+        assert!(registry.generation() >= 1);
+    }
+}

@@ -1,0 +1,338 @@
+//! Measured-cost telemetry: the serving-path feedback the offline tuning
+//! pipeline never had.
+//!
+//! Every executor shard reports the measured execution time of each request
+//! into a lock-light striped accumulator keyed by (shape bucket, kernel
+//! configuration). Two consumers read it back:
+//!
+//! * the submit path, which prefers an EWMA of measured dispatch times over
+//!   the devsim estimate once a cell has enough samples (the measured
+//!   cost-hint handoff, falling back to devsim while cold), and
+//! * the background retuner, which folds a snapshot into a live
+//!   [`PerfDataset`] compatible with `selection::select` and
+//!   `KernelClassifier::fit` (paper §4 + §5 re-run on measured data).
+//!
+//! Stripes are independent mutexes selected by shape hash, so concurrent
+//! shards rarely contend; a shard touches exactly one stripe per request.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::dataset::GemmShape;
+use crate::util::json::Json;
+
+/// Telemetry key: the shape bucket plus the configuration that served it
+/// (`None` = the XLA comparator artifact).
+pub type TelemetryKey = (GemmShape, Option<usize>);
+
+const STRIPES: usize = 16;
+
+/// Safety valve against unbounded growth: cells per stripe. Real serving
+/// traffic is bounded by the manifest (shape buckets x shipped configs,
+/// ~100 cells), so the cap only binds on pathological/adversarial shape
+/// streams — new keys beyond it are dropped, existing cells keep
+/// updating.
+const MAX_CELLS_PER_STRIPE: usize = 512;
+
+#[derive(Clone, Copy, Debug, Default)]
+struct Cell {
+    count: u64,
+    sum_secs: f64,
+    ewma_secs: f64,
+}
+
+/// Lock-light accumulator of measured per-(shape, config) execution times.
+#[derive(Debug)]
+pub struct TelemetrySink {
+    stripes: Vec<Mutex<HashMap<TelemetryKey, Cell>>>,
+    total: AtomicU64,
+    /// Samples a cell needs before its EWMA overrides the devsim hint.
+    min_samples: u64,
+    /// EWMA smoothing factor in (0, 1]; 1.0 = last sample wins.
+    alpha: f64,
+}
+
+impl Default for TelemetrySink {
+    fn default() -> TelemetrySink {
+        TelemetrySink::new(3, 0.25)
+    }
+}
+
+impl TelemetrySink {
+    pub fn new(min_samples: u64, alpha: f64) -> TelemetrySink {
+        TelemetrySink {
+            stripes: (0..STRIPES).map(|_| Mutex::new(HashMap::new())).collect(),
+            total: AtomicU64::new(0),
+            min_samples: min_samples.max(1),
+            alpha: alpha.clamp(0.01, 1.0),
+        }
+    }
+
+    fn stripe(&self, shape: &GemmShape) -> usize {
+        let mut h = DefaultHasher::new();
+        shape.hash(&mut h);
+        (h.finish() as usize) % self.stripes.len()
+    }
+
+    /// Record one measured execution (seconds) for a served request.
+    pub fn record(&self, shape: GemmShape, config: Option<usize>, secs: f64) {
+        if !secs.is_finite() || secs <= 0.0 {
+            return;
+        }
+        let mut stripe = self.stripes[self.stripe(&shape)].lock().unwrap();
+        if stripe.len() >= MAX_CELLS_PER_STRIPE && !stripe.contains_key(&(shape, config)) {
+            return; // safety cap: drop new keys, keep updating known cells
+        }
+        let cell = stripe.entry((shape, config)).or_default();
+        cell.count += 1;
+        cell.sum_secs += secs;
+        cell.ewma_secs = if cell.count == 1 {
+            secs
+        } else {
+            self.alpha * secs + (1.0 - self.alpha) * cell.ewma_secs
+        };
+        drop(stripe);
+        self.total.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total samples recorded since construction.
+    pub fn total_samples(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    /// The measured dispatch cost (EWMA seconds) for a cell, once it has
+    /// at least `min_samples` samples; `None` while cold.
+    pub fn measured_cost_secs(&self, shape: &GemmShape, config: Option<usize>) -> Option<f64> {
+        let stripe = self.stripes[self.stripe(shape)].lock().unwrap();
+        stripe
+            .get(&(*shape, config))
+            .filter(|c| c.count >= self.min_samples)
+            .map(|c| c.ewma_secs)
+    }
+
+    /// Consistent point-in-time copy of every cell, deterministically
+    /// ordered (by shape dims, then config). Stripes are locked one at a
+    /// time, so a snapshot never blocks the serving path for long.
+    pub fn snapshot(&self) -> TelemetrySnapshot {
+        let mut cells = Vec::new();
+        for stripe in &self.stripes {
+            let guard = stripe.lock().unwrap();
+            for (&(shape, config), cell) in guard.iter() {
+                cells.push(TelemetryCell {
+                    shape,
+                    config,
+                    count: cell.count,
+                    mean_secs: cell.sum_secs / cell.count as f64,
+                    ewma_secs: cell.ewma_secs,
+                });
+            }
+        }
+        cells.sort_by_key(|c| {
+            (c.shape.m, c.shape.k, c.shape.n, c.shape.batch, c.config.map_or(0, |i| i + 1))
+        });
+        TelemetrySnapshot { cells }
+    }
+}
+
+/// One (shape, config) telemetry cell at snapshot time.
+#[derive(Clone, Debug)]
+pub struct TelemetryCell {
+    pub shape: GemmShape,
+    pub config: Option<usize>,
+    pub count: u64,
+    pub mean_secs: f64,
+    pub ewma_secs: f64,
+}
+
+impl TelemetryCell {
+    /// Measured GFLOP/s of this cell (from the EWMA time).
+    pub fn gflops(&self) -> f64 {
+        self.shape.flops() / (self.ewma_secs.max(1e-12) * 1e9)
+    }
+}
+
+/// Point-in-time view of the telemetry sink.
+#[derive(Clone, Debug, Default)]
+pub struct TelemetrySnapshot {
+    pub cells: Vec<TelemetryCell>,
+}
+
+impl TelemetrySnapshot {
+    /// Distinct shapes with at least one cell of `min_samples` samples on
+    /// a concrete (non-XLA) configuration, in deterministic order.
+    pub fn measured_shapes(&self, min_samples: u64) -> Vec<GemmShape> {
+        let mut shapes: Vec<GemmShape> = self
+            .cells
+            .iter()
+            .filter(|c| c.config.is_some() && c.count >= min_samples)
+            .map(|c| c.shape)
+            .collect();
+        shapes.sort_by_key(|s| (s.m, s.k, s.n, s.batch));
+        shapes.dedup();
+        shapes
+    }
+
+    /// Look one cell up.
+    pub fn cell(&self, shape: &GemmShape, config: Option<usize>) -> Option<&TelemetryCell> {
+        self.cells.iter().find(|c| c.shape == *shape && c.config == config)
+    }
+
+    /// The snapshot as JSON (`kernelsel-telemetry-v1`; schema documented in
+    /// ARCHITECTURE.md).
+    pub fn to_json(&self) -> Json {
+        let cells: Vec<Json> = self
+            .cells
+            .iter()
+            .map(|c| {
+                Json::obj(vec![
+                    ("m", Json::Num(c.shape.m as f64)),
+                    ("k", Json::Num(c.shape.k as f64)),
+                    ("n", Json::Num(c.shape.n as f64)),
+                    ("batch", Json::Num(c.shape.batch as f64)),
+                    (
+                        "config",
+                        match c.config {
+                            Some(i) => Json::Num(i as f64),
+                            None => Json::Null,
+                        },
+                    ),
+                    ("count", Json::Num(c.count as f64)),
+                    ("mean_secs", Json::Num(c.mean_secs)),
+                    ("ewma_secs", Json::Num(c.ewma_secs)),
+                    ("gflops", Json::Num(c.gflops())),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema", Json::Str("kernelsel-telemetry-v1".to_string())),
+            ("cells", Json::Arr(cells)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape() -> GemmShape {
+        GemmShape::new(64, 64, 64, 1)
+    }
+
+    #[test]
+    fn ewma_handoff_requires_min_samples() {
+        let sink = TelemetrySink::new(3, 0.5);
+        assert!(sink.measured_cost_secs(&shape(), Some(5)).is_none());
+        sink.record(shape(), Some(5), 1e-3);
+        sink.record(shape(), Some(5), 1e-3);
+        assert!(sink.measured_cost_secs(&shape(), Some(5)).is_none(), "still cold");
+        sink.record(shape(), Some(5), 1e-3);
+        let ewma = sink.measured_cost_secs(&shape(), Some(5)).expect("warm");
+        assert!((ewma - 1e-3).abs() < 1e-12);
+        assert_eq!(sink.total_samples(), 3);
+    }
+
+    #[test]
+    fn ewma_tracks_recent_samples() {
+        let sink = TelemetrySink::new(1, 0.5);
+        sink.record(shape(), None, 1.0);
+        sink.record(shape(), None, 2.0);
+        // 0.5 * 2 + 0.5 * 1 = 1.5
+        let ewma = sink.measured_cost_secs(&shape(), None).unwrap();
+        assert!((ewma - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_nonpositive_and_nonfinite() {
+        let sink = TelemetrySink::default();
+        sink.record(shape(), Some(1), 0.0);
+        sink.record(shape(), Some(1), -1.0);
+        sink.record(shape(), Some(1), f64::NAN);
+        assert_eq!(sink.total_samples(), 0);
+        assert!(sink.snapshot().cells.is_empty());
+    }
+
+    #[test]
+    fn snapshot_deterministic_and_complete() {
+        let sink = TelemetrySink::new(1, 0.25);
+        let a = GemmShape::new(32, 32, 32, 1);
+        let b = GemmShape::new(64, 64, 64, 1);
+        sink.record(b, Some(2), 2e-3);
+        sink.record(a, Some(1), 1e-3);
+        sink.record(a, None, 3e-3);
+        let snap = sink.snapshot();
+        assert_eq!(snap.cells.len(), 3);
+        // Sorted: (32..) before (64..); XLA (None) before configs.
+        assert_eq!(snap.cells[0].shape, a);
+        assert_eq!(snap.cells[0].config, None);
+        assert_eq!(snap.cells[1].config, Some(1));
+        assert_eq!(snap.cells[2].shape, b);
+        assert_eq!(snap.measured_shapes(1), vec![a, b]);
+        assert_eq!(snap.measured_shapes(2), Vec::<GemmShape>::new());
+        assert!(snap.cell(&a, Some(1)).is_some());
+        assert!(snap.cell(&b, None).is_none());
+    }
+
+    #[test]
+    fn json_schema_fields() {
+        let sink = TelemetrySink::new(1, 0.25);
+        sink.record(shape(), Some(7), 1e-3);
+        sink.record(shape(), None, 2e-3);
+        let doc = sink.snapshot().to_json();
+        assert_eq!(doc.get("schema").and_then(|s| s.as_str()), Some("kernelsel-telemetry-v1"));
+        let cells = doc.get("cells").and_then(|c| c.as_arr()).unwrap();
+        assert_eq!(cells.len(), 2);
+        assert!(cells[0].get("config").unwrap().is_null(), "XLA cell sorts first");
+        assert_eq!(cells[1].get("config").and_then(|v| v.as_usize()), Some(7));
+        for cell in cells {
+            for key in ["m", "k", "n", "batch", "count", "mean_secs", "ewma_secs", "gflops"] {
+                assert!(cell.get(key).is_some(), "missing {key}");
+            }
+        }
+    }
+
+    #[test]
+    fn cell_count_is_capped_but_known_cells_keep_updating() {
+        let sink = TelemetrySink::new(1, 1.0);
+        // Hammer one stripe's worth of distinct configs at one shape (all
+        // land in the same stripe: the stripe key is the shape).
+        let s = shape();
+        for cfg in 0..(super::MAX_CELLS_PER_STRIPE + 50) {
+            sink.record(s, Some(cfg), 1e-3);
+        }
+        let snap = sink.snapshot();
+        assert!(snap.cells.len() <= super::MAX_CELLS_PER_STRIPE);
+        // A pre-cap cell still updates after the cap is hit.
+        sink.record(s, Some(0), 3e-3);
+        assert_eq!(sink.measured_cost_secs(&s, Some(0)), Some(3e-3));
+    }
+
+    #[test]
+    fn concurrent_recording_loses_nothing() {
+        let sink = std::sync::Arc::new(TelemetrySink::new(1, 0.25));
+        let shapes = [
+            GemmShape::new(32, 32, 32, 1),
+            GemmShape::new(64, 64, 64, 1),
+            GemmShape::new(128, 128, 128, 1),
+        ];
+        let mut joins = Vec::new();
+        for t in 0..4 {
+            let sink = sink.clone();
+            joins.push(std::thread::spawn(move || {
+                for i in 0..500 {
+                    let s = shapes[(t + i) % shapes.len()];
+                    sink.record(s, Some(t), 1e-4);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(sink.total_samples(), 2000);
+        let snap = sink.snapshot();
+        let total: u64 = snap.cells.iter().map(|c| c.count).sum();
+        assert_eq!(total, 2000);
+    }
+}

@@ -1,0 +1,256 @@
+#!/usr/bin/env python3
+"""Python port of rust/src/devsim to de-risk the retune_convergence bench design.
+
+Simulates: initial selector = per-shape best shipped config under devsim(i7);
+serving measures devsim(nano) times; greedy retune cycles with per-config
+geometric-mean drift correction on devsim(i7) priors. Checks the post-swap
+selector strictly beats the cold one in mean simulated latency on a mix.
+"""
+import math
+
+MASK = (1 << 64) - 1
+
+def rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & MASK
+
+class Rng:
+    def __init__(self, seed):
+        s = []
+        sm = seed & MASK
+        for _ in range(4):
+            sm = (sm + 0x9E3779B97F4A7C15) & MASK
+            z = sm
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+            s.append(z ^ (z >> 31))
+        self.s = s
+        self.spare = None
+
+    def next_u64(self):
+        s = self.s
+        result = (rotl((s[0] + s[3]) & MASK, 23) + s[0]) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = rotl(s[3], 45)
+        return result
+
+    def uniform(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def normal(self):
+        if self.spare is not None:
+            z, self.spare = self.spare, None
+            return z
+        while True:
+            u1 = self.uniform()
+            if u1 <= 2.2250738585072014e-308:
+                continue
+            u2 = self.uniform()
+            r = math.sqrt(-2.0 * math.log(u1))
+            theta = 2.0 * math.pi * u2
+            self.spare = r * math.sin(theta)
+            return r * math.cos(theta)
+
+TILE_SIZES = [1, 2, 4, 8]
+WORKGROUPS = [(1, 64), (1, 128), (8, 8), (8, 16), (8, 32), (16, 8), (16, 16), (32, 8), (64, 1), (128, 1)]
+
+def config_by_index(idx):
+    ti, wi = idx // 10, idx % 10
+    ri, ai, ci = ti // 16, (ti // 4) % 4, ti % 4
+    wr, wc = WORKGROUPS[wi]
+    return dict(acc_r=TILE_SIZES[ri], acc_a=TILE_SIZES[ai], acc_c=TILE_SIZES[ci], wg_r=wr, wg_c=wc)
+
+def config_name(c):
+    return f"r{c['acc_r']}a{c['acc_a']}c{c['acc_c']}_wg{c['wg_r']}x{c['wg_c']}"
+
+NAME_TO_INDEX = {config_name(config_by_index(i)): i for i in range(640)}
+
+PROFILES = {
+    "r9-nano": dict(kind="gpu", compute_units=64.0, peak_gflops=8192.0, mem_bw_gbs=512.0,
+                    cache_bw_gbs=1024.0, cache_kb=2048.0, threads_for_peak=512.0,
+                    regs_per_thread=160.0, spill_exponent=1.6, ilp_for_peak=16.0,
+                    intensity_half=1.15, vec_width=2.0, kernel_launch_us=8.0,
+                    wg_overhead_us=0.10, cache_pressure=0.18, noise_sigma=0.055),
+    "i7-6700k": dict(kind="cpu", compute_units=4.0, peak_gflops=512.0, mem_bw_gbs=34.0,
+                     cache_bw_gbs=300.0, cache_kb=8192.0, threads_for_peak=16.0,
+                     regs_per_thread=224.0, spill_exponent=0.8, ilp_for_peak=8.0,
+                     intensity_half=0.7, vec_width=8.0, kernel_launch_us=25.0,
+                     wg_overhead_us=0.4, cache_pressure=0.5, noise_sigma=0.06),
+}
+
+def vector_eff(p, a, c):
+    pref = p["vec_width"]
+    def one(w):
+        if w <= pref:
+            return min(0.55 + 0.45 * (w / pref), 1.0)
+        return 1.0 - 0.08 * (w / pref - 1.0)
+    return min(max(one(a) * one(c), 0.2), 1.0)
+
+def wg_shape_eff(p, wr, wc):
+    if p["kind"] == "cpu":
+        return 1.0 - 0.02 * ((wr * wc) / 256.0)
+    aspect = max(wr / wc, wc / wr)
+    return min(max(1.0 - 0.035 * math.log2(aspect), 0.6), 1.0)
+
+def coalesce_eff(p, wr, wc, a, c):
+    if p["kind"] == "cpu":
+        width = (max(a, c) * 4.0) / (p["vec_width"] * 4.0)
+        return min(max(0.5 + 0.5 * min(width, 1.0), 0.3), 1.0)
+    row_span = min(wc * c, 64.0) / 64.0
+    col_pen = 1.0 - 0.1 * (wr / (wr + 16.0))
+    return (0.35 + 0.65 * row_span) * col_pen
+
+def noise_seed(device, shape, cfg_index):
+    h = 0xcbf29ce484222325
+    def eat(x):
+        nonlocal h
+        h ^= x
+        h = (h * 0x100000001b3) & MASK
+    for b in device.encode():
+        eat(b)
+    m, k, n, batch = shape
+    for v in [m, k, n, batch, cfg_index]:
+        eat(v)
+    return h
+
+def simulate(pname, shape, cfg_index):
+    p = PROFILES[pname]
+    cfg = config_by_index(cfg_index)
+    m, k, n, b = [float(x) for x in shape]
+    r, a, c = float(cfg["acc_r"]), float(cfg["acc_a"]), float(cfg["acc_c"])
+    wr, wc = float(cfg["wg_r"]), float(cfg["wg_c"])
+
+    tiles_m = math.ceil(m / r)
+    tiles_n = math.ceil(n / c)
+    threads = b * tiles_m * tiles_n
+    wgs_m = math.ceil(tiles_m / wr)
+    wgs_n = math.ceil(tiles_n / wc)
+    wgs = b * wgs_m * wgs_n
+
+    padded_m = wgs_m * wr * r
+    padded_n = wgs_n * wc * c
+    useful_flops = 2.0 * b * m * k * n
+    padded_flops = 2.0 * b * padded_m * k * padded_n
+
+    regs = r * c + 2.0 * r * a + 2.0 * a * c + 8.0
+    if regs <= p["regs_per_thread"]:
+        spill = 1.0
+    else:
+        spill = (p["regs_per_thread"] / regs) ** p["spill_exponent"]
+    ilp = min(r * c / p["ilp_for_peak"], 1.0) ** 0.5
+    intensity = r * c / (r + c)
+    intensity_eff = intensity / (intensity + p["intensity_half"])
+    vec = vector_eff(p, a, c)
+    compute_rate = p["peak_gflops"] * 1e9 * ilp * intensity_eff * spill * vec
+
+    hw_threads = p["compute_units"] * p["threads_for_peak"]
+    par = min(threads / hw_threads, 1.0)
+    waves = math.ceil(wgs / p["compute_units"])
+    tail = min(max(wgs / (waves * p["compute_units"]), 0.05), 1.0)
+    wg_fit = wg_shape_eff(p, wr, wc)
+    rate = compute_rate * par * (tail ** 0.5) * wg_fit
+    t_compute = padded_flops / max(rate, 1.0)
+
+    blocks_m = wgs_m
+    blocks_n = wgs_n
+    bytes_ = 4.0 * b * (padded_m * k * blocks_n + k * padded_n * blocks_m + m * n)
+    working_set = 4.0 * b * (m * k + k * n + m * n)
+    bw = (p["cache_bw_gbs"] if working_set <= p["cache_kb"] * 1024.0 else p["mem_bw_gbs"]) * 1e9
+    bw_eff = coalesce_eff(p, wr, wc, a, c)
+    block_ws = 4.0 * (wr * r * k + k * wc * c)
+    cache_per_cu = p["cache_kb"] * 1024.0 / p["compute_units"]
+    cache_eff = 1.0 if block_ws <= cache_per_cu else (cache_per_cu / block_ws) ** p["cache_pressure"]
+    t_mem = bytes_ / (bw * bw_eff * cache_eff)
+
+    t_overhead = p["kernel_launch_us"] * 1e-6 + (wgs / p["compute_units"]) * p["wg_overhead_us"] * 1e-6
+    t = max(t_compute, t_mem) + t_overhead
+    gflops = useful_flops / t / 1e9
+    eps = Rng(noise_seed(pname, shape, cfg_index)).normal()
+    gflops *= math.exp(p["noise_sigma"] * eps)
+    return max(gflops, 0.05)
+
+def secs(pname, shape, cfg_index):
+    m, k, n, b = shape
+    flops = 2.0 * b * m * k * n
+    g = max(simulate(pname, shape, cfg_index), 1e-3)
+    return flops / (g * 1e9)
+
+SHIPPED = ["r8a4c4_wg16x16", "r4a4c4_wg8x16", "r4a8c4_wg16x16", "r2a4c8_wg8x32",
+           "r8a2c2_wg8x8", "r1a4c2_wg1x128", "r2a8c2_wg32x8", "r4a2c8_wg16x8"]
+POOL = [NAME_TO_INDEX[s] for s in SHIPPED]
+
+BUCKETS = [(32, 32, 32, 1), (32, 32, 32, 4), (64, 64, 64, 1), (64, 64, 64, 4),
+           (128, 128, 128, 1), (256, 256, 256, 1), (512, 784, 512, 1), (512, 784, 512, 16),
+           (64, 2304, 128, 1), (1024, 27, 64, 1), (256, 576, 128, 1), (196, 4608, 512, 1),
+           (32, 12321, 27, 1), (1, 4096, 1000, 1)]
+
+print(f"{'shape':>22} {'i7-best':>18} {'nano-best':>18}  t_nano(i7pick)  t_nano(nanopick)  ratio")
+diverge = 0
+for s in BUCKETS:
+    t_i7 = {c: secs("i7-6700k", s, c) for c in POOL}
+    t_nano = {c: secs("r9-nano", s, c) for c in POOL}
+    i7_best = min(POOL, key=lambda c: t_i7[c])
+    nano_best = min(POOL, key=lambda c: t_nano[c])
+    r = t_nano[i7_best] / t_nano[nano_best]
+    if i7_best != nano_best:
+        diverge += 1
+    print(f"{str(s):>22} {config_name(config_by_index(i7_best)):>18} "
+          f"{config_name(config_by_index(nano_best)):>18}  {t_nano[i7_best]*1e6:10.1f}us  "
+          f"{t_nano[nano_best]*1e6:10.1f}us  {r:6.2f}x")
+print(f"\n{diverge}/{len(BUCKETS)} buckets where i7-best != nano-best on the shipped pool\n")
+
+# ---- greedy retune-loop simulation ------------------------------------------
+# Mirrors rust/benches/retune_convergence.rs: cold picks = per-shape best
+# shipped config under devsim(i7); serving measures devsim(nano); each cycle
+# retunes on measured cells + drift-corrected i7 priors, iterating until the
+# pick set stabilizes (measured-backed picks can never be worse than cold).
+MIX = {(32, 32, 32, 1): 6, (64, 64, 64, 1): 2, (32, 32, 32, 4): 2,
+       (64, 64, 64, 4): 4, (128, 128, 128, 1): 2, (1024, 27, 64, 1): 2}
+
+shapes = list(MIX)
+t_i7 = {s: {c: secs("i7-6700k", s, c) for c in POOL} for s in shapes}
+t_nano = {s: {c: secs("r9-nano", s, c) for c in POOL} for s in shapes}
+
+picks = {s: min(POOL, key=lambda c: t_i7[s][c]) for s in shapes}
+measured = {}  # (shape, cfg) -> t_nano
+
+def mean_latency(p):
+    return sum(MIX[s] * t_nano[s][p[s]] for s in shapes) / sum(MIX.values())
+
+L0 = mean_latency(picks)
+print(f"phase 0 (cold, i7-tuned) mean simulated latency: {L0*1e6:.1f} us")
+
+for cycle in range(1, 25):
+    for s in shapes:
+        measured[(s, picks[s])] = t_nano[s][picks[s]]
+    ratios, all_logs = {}, []
+    for (s, c), tm in measured.items():
+        lr = math.log(tm / t_i7[s][c])
+        ratios.setdefault(c, []).append(lr)
+        all_logs.append(lr)
+    per_cfg = {c: math.exp(sum(v) / len(v)) for c, v in ratios.items()}
+    global_ratio = math.exp(sum(all_logs) / len(all_logs))
+    new_picks = {}
+    for s in shapes:
+        def value(c):
+            if (s, c) in measured:
+                return measured[(s, c)]
+            return t_i7[s][c] * per_cfg.get(c, global_ratio)
+        new_picks[s] = min(POOL, key=value)
+    changed = sum(1 for s in shapes if new_picks[s] != picks[s])
+    picks = new_picks
+    print(f"cycle {cycle}: {changed} picks changed, mean latency "
+          f"{mean_latency(picks)*1e6:.1f} us (global drift ratio {global_ratio:.2f})")
+    if changed == 0:
+        break
+
+L_final = mean_latency(picks)
+L_opt = mean_latency({s: min(POOL, key=lambda c: t_nano[s][c]) for s in shapes})
+print(f"\nfinal {L_final*1e6:.1f} us vs cold {L0*1e6:.1f} us "
+      f"({L0/L_final:.2f}x better); oracle {L_opt*1e6:.1f} us")
+assert L_final < L0, "converged retune must strictly improve mean latency"
+print("OK: retune loop strictly improves mean latency at convergence")
