@@ -7,6 +7,8 @@
 //!     cargo run --release --example serve -- --routing load-aware --imbalance 2
 //!     cargo run --release --example serve -- --profile r9-nano \
 //!         --retune-interval 150 --drift-threshold 1.2 --require-swap
+//!     cargo run --release --example serve -- --telemetry-out /tmp/telemetry.json
+//!     cargo run --release --example serve -- --telemetry-in /tmp/telemetry.json
 //!
 //! Clients submit mixed-shape GEMM requests; the submit path resolves each
 //! to a deployed kernel via the memoized decision-tree selector and routes
@@ -26,6 +28,11 @@
 //! makes drift (and a swap) happen. `--require-swap` keeps serving extra
 //! traffic rounds until a swap is observed and exits non-zero if none
 //! lands (the CI tuning smoke).
+//!
+//! `--telemetry-out PATH` writes the final telemetry snapshot as
+//! `kernelsel-telemetry-v1` JSON at shutdown, and `--telemetry-in PATH`
+//! seeds the sink from such a file at startup — measured cost hints and
+//! retune state survive restarts instead of re-warming from nothing.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -38,7 +45,7 @@ use kernelsel::dataset::{benchmark_shapes, config_by_name, GemmShape};
 use kernelsel::devsim::{generate_dataset, profile_by_name};
 use kernelsel::engine::EngineKind;
 use kernelsel::runtime::Manifest;
-use kernelsel::tuning::RetuneConfig;
+use kernelsel::tuning::{RetuneConfig, TelemetrySnapshot};
 use kernelsel::util::fill_buffer;
 
 const CLIENTS: usize = 4;
@@ -148,6 +155,23 @@ fn main() -> Result<(), String> {
     );
     let coord = Arc::new(Coordinator::start_pool(dir, policy, pool)?);
 
+    // Restore persisted telemetry before traffic flows: measured cost
+    // hints and retune state pick up where the previous run stopped.
+    if let Some(path) = flag_str("--telemetry-in") {
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("reading --telemetry-in {path}: {e}"))?;
+        let doc = kernelsel::util::json::parse(&text)
+            .map_err(|e| format!("parsing --telemetry-in {path}: {e}"))?;
+        let snapshot = TelemetrySnapshot::from_json(&doc)
+            .map_err(|e| format!("--telemetry-in {path}: {e}"))?;
+        coord.telemetry().absorb(&snapshot);
+        println!(
+            "seeded telemetry from {path}: {} cells, {} samples",
+            snapshot.cells.len(),
+            coord.telemetry().total_samples()
+        );
+    }
+
     // The shape mix a DNN-serving workload would issue (vgg16-tiny GEMMs +
     // generic buckets — all shipped as artifacts in both manifests).
     let shapes = [
@@ -218,6 +242,15 @@ fn main() -> Result<(), String> {
             "retune wait: swaps={} retunes={} drift_trips={} generation={}",
             stats.swaps, stats.retunes, stats.drift_trips, stats.generation
         );
+    }
+
+    // Persist the telemetry snapshot before shutdown so the next run can
+    // seed itself with --telemetry-in.
+    if let Some(path) = flag_str("--telemetry-out") {
+        let snapshot = coord.telemetry().snapshot();
+        let text = snapshot.to_json().to_string() + "\n";
+        std::fs::write(&path, text).map_err(|e| format!("writing --telemetry-out {path}: {e}"))?;
+        println!("wrote telemetry snapshot ({} cells) to {path}", snapshot.cells.len());
     }
 
     let report = Arc::try_unwrap(coord).ok().expect("sole owner").stop_detailed();

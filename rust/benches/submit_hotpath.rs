@@ -1,0 +1,311 @@
+//! Bench: the submit hot path — striped resolution cache + pooled
+//! completion slots vs the pre-fast-path dispatch machinery.
+//!
+//! The tentpole claim of the lock-light submit rework is that a warm
+//! cache-hit dispatch costs a handful of atomics instead of a heap
+//! allocation and a pool-global lock. This bench measures it two ways:
+//!
+//! * **dispatch cycle** (phase A): the per-request dispatch machinery in
+//!   isolation, single- and multi-threaded. `baseline` reconstructs the
+//!   pre-change path faithfully — resolve through a single
+//!   `RwLock<HashMap>` (every submitter on one reader-count cache line)
+//!   plus a fresh `mpsc::channel()` pair per request. `fastpath` is the
+//!   shipped path — striped snapshot cache hit plus a pooled completion
+//!   slot. Queue push, routing and input handling are identical in both
+//!   designs and are deliberately excluded from both cells.
+//! * **end-to-end** (phase B): `submit_many` against a live 2-shard
+//!   SimBackend pool from 4 client threads — the CI throughput floor.
+//!
+//!     cargo bench --bench submit_hotpath
+//!     cargo bench --bench submit_hotpath -- --smoke --json BENCH_hotpath.json \
+//!         --min-ratio 1.5 --min-e2e-rps 2000
+//!
+//! `--min-ratio F` fails the run when the multi-threaded fastpath/baseline
+//! ratio drops below `F`; `--min-e2e-rps F` is an absolute floor on the
+//! phase-B request rate. The acceptance target for this rework is a >= 2x
+//! multi-threaded dispatch-cycle ratio; CI gates at 1.5x to leave headroom
+//! for throttled shared runners.
+
+use std::collections::HashMap;
+use std::hint::black_box;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::{Arc, Barrier, RwLock};
+use std::time::{Duration, Instant};
+
+use kernelsel::coordinator::{
+    Completion, CompletionPool, Coordinator, GemmResponse, KernelRegistry, PoolConfig,
+    ResolutionCache, ResolvedKernel, SelectorPolicy,
+};
+use kernelsel::dataset::GemmShape;
+use kernelsel::runtime::Manifest;
+use kernelsel::util::fill_buffer;
+use kernelsel::util::json::Json;
+
+/// One measured cell.
+struct Cell {
+    bench: &'static str,
+    path: &'static str,
+    threads: usize,
+    ops_per_sec: f64,
+}
+
+/// Shared fixture for the dispatch-cycle cells.
+struct Fixture {
+    registry: KernelRegistry,
+    cache: ResolutionCache,
+    /// The pre-change design: one RwLock around one map.
+    legacy: RwLock<HashMap<GemmShape, Arc<ResolvedKernel>>>,
+    shapes: Vec<GemmShape>,
+}
+
+impl Fixture {
+    fn new() -> Arc<Fixture> {
+        let registry = KernelRegistry::new(Manifest::synthetic(), SelectorPolicy::Xla);
+        let cache = ResolutionCache::new(1024);
+        let shapes = registry.buckets();
+        let mut legacy = HashMap::new();
+        for shape in &shapes {
+            let resolved = cache.resolve(&registry, shape).expect("bucket resolves");
+            legacy.insert(*shape, resolved);
+        }
+        Arc::new(Fixture { registry, cache, legacy: RwLock::new(legacy), shapes })
+    }
+
+    /// Disjoint warm shape slice for one bench thread, so the striped
+    /// cache's scaling (distinct stripes per thread) is actually exercised.
+    fn shapes_for(&self, thread: usize, threads: usize) -> Vec<GemmShape> {
+        let per = (self.shapes.len() / threads).max(1);
+        let start = (thread * per) % self.shapes.len();
+        (0..per).map(|i| self.shapes[(start + i) % self.shapes.len()]).collect()
+    }
+}
+
+fn dummy_response(resolved: &ResolvedKernel) -> GemmResponse {
+    GemmResponse {
+        result: Ok(Vec::new()),
+        config_used: resolved.meta.config_index,
+        artifact: resolved.artifact().clone(),
+        latency: Duration::ZERO,
+    }
+}
+
+/// One pre-change dispatch cycle: single-lock map hit + fresh channel.
+fn baseline_op(fixture: &Fixture, shape: &GemmShape) {
+    let resolved = fixture.legacy.read().unwrap().get(shape).cloned().expect("warm legacy map");
+    let cost = resolved.cost_hint_ns();
+    let (tx, rx) = mpsc::channel();
+    tx.send(dummy_response(&resolved)).expect("send");
+    let resp = rx.recv().expect("recv");
+    black_box(&resp);
+    black_box(cost);
+}
+
+/// One shipped dispatch cycle: striped snapshot hit + pooled slot.
+fn fastpath_op(fixture: &Fixture, completions: &Arc<CompletionPool>, shape: &GemmShape) {
+    let resolved = fixture.cache.resolve(&fixture.registry, shape).expect("warm cache");
+    let cost = fixture.cache.dispatch_cost_ns(&resolved);
+    let (completion, ticket) =
+        CompletionPool::checkout(completions).unwrap_or_else(Completion::oneshot);
+    completion.complete(dummy_response(&resolved));
+    let resp = ticket.wait();
+    black_box(&resp);
+    black_box(cost);
+}
+
+/// Run `iters_per_thread` dispatch cycles on each of `threads` threads,
+/// returning aggregate ops/s. `fast` selects the measured path.
+fn dispatch_cell(fixture: &Arc<Fixture>, threads: usize, iters: usize, fast: bool) -> Cell {
+    let completions = CompletionPool::new(1024);
+    let barrier = Arc::new(Barrier::new(threads + 1));
+    let mut joins = Vec::with_capacity(threads);
+    for t in 0..threads {
+        let fixture = fixture.clone();
+        let completions = completions.clone();
+        let barrier = barrier.clone();
+        joins.push(std::thread::spawn(move || {
+            let shapes = fixture.shapes_for(t, threads);
+            // Warmup outside the barrier: touch every shape on both paths.
+            for shape in &shapes {
+                if fast {
+                    fastpath_op(&fixture, &completions, shape);
+                } else {
+                    baseline_op(&fixture, shape);
+                }
+            }
+            barrier.wait();
+            for i in 0..iters {
+                let shape = &shapes[i % shapes.len()];
+                if fast {
+                    fastpath_op(&fixture, &completions, shape);
+                } else {
+                    baseline_op(&fixture, shape);
+                }
+            }
+        }));
+    }
+    barrier.wait();
+    let t0 = Instant::now();
+    for join in joins {
+        join.join().expect("bench thread");
+    }
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    Cell {
+        bench: "dispatch",
+        path: if fast { "fastpath" } else { "baseline" },
+        threads,
+        ops_per_sec: (threads * iters) as f64 / wall,
+    }
+}
+
+/// Phase B: `submit_many` runs of a warm hot shape against a live pool.
+fn e2e_cell(threads: usize, rounds: usize, batch: usize) -> Cell {
+    let coord = Arc::new(
+        Coordinator::start_pool(
+            PathBuf::from("artifacts"),
+            SelectorPolicy::Xla,
+            PoolConfig { shards: 2, ..PoolConfig::default() },
+        )
+        .expect("start pool"),
+    );
+    let hot = GemmShape::new(32, 32, 32, 1);
+    // Warm the executable cache, the resolution cache and the telemetry
+    // cells so the measured region is pure steady state.
+    for i in 0..8u32 {
+        let lhs = fill_buffer(i, 32 * 32);
+        let rhs = fill_buffer(i + 3, 32 * 32);
+        coord.call(hot, lhs, rhs).expect("warm call").result.expect("warm gemm");
+    }
+    let barrier = Arc::new(Barrier::new(threads + 1));
+    let mut joins = Vec::with_capacity(threads);
+    for t in 0..threads {
+        let coord = coord.clone();
+        let barrier = barrier.clone();
+        joins.push(std::thread::spawn(move || {
+            barrier.wait();
+            for round in 0..rounds {
+                let requests: Vec<(GemmShape, Vec<f32>, Vec<f32>)> = (0..batch)
+                    .map(|i| {
+                        let seed = (t * 100_000 + round * 1000 + i) as u32;
+                        (hot, fill_buffer(seed, 32 * 32), fill_buffer(seed + 7, 32 * 32))
+                    })
+                    .collect();
+                for ticket in coord.submit_many(requests) {
+                    ticket.wait().result.expect("gemm ok");
+                }
+            }
+        }));
+    }
+    barrier.wait();
+    let t0 = Instant::now();
+    for join in joins {
+        join.join().expect("client thread");
+    }
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    let total = threads * rounds * batch;
+    Arc::try_unwrap(coord).ok().expect("sole owner").stop();
+    Cell {
+        bench: "submit_many_e2e",
+        path: "e2e",
+        threads,
+        ops_per_sec: total as f64 / wall,
+    }
+}
+
+fn flag_value(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).cloned()
+}
+
+fn cells_to_json(cells: &[Cell], mode: &str) -> Json {
+    let entries: Vec<Json> = cells
+        .iter()
+        .map(|c| {
+            Json::obj(vec![
+                ("bench", Json::Str(c.bench.to_string())),
+                ("path", Json::Str(c.path.to_string())),
+                ("threads", Json::Num(c.threads as f64)),
+                ("ops_per_sec", Json::Num(c.ops_per_sec)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("schema", Json::Str("kernelsel-bench-hotpath-v1".to_string())),
+        ("mode", Json::Str(mode.to_string())),
+        ("entries", Json::Arr(entries)),
+    ])
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let json_path = flag_value(&args, "--json");
+    let min_ratio: Option<f64> = flag_value(&args, "--min-ratio").and_then(|v| v.parse().ok());
+    let min_e2e_rps: Option<f64> = flag_value(&args, "--min-e2e-rps").and_then(|v| v.parse().ok());
+
+    let (iters, rounds) = if smoke { (150_000, 8) } else { (600_000, 30) };
+    let mode = if smoke { "smoke" } else { "full" };
+    let mt = 4usize;
+    println!("== submit_hotpath ({mode}): {iters} dispatch cycles/thread ==\n");
+
+    let fixture = Fixture::new();
+    let mut cells = Vec::new();
+    for &threads in &[1usize, mt] {
+        for &fast in &[false, true] {
+            let cell = dispatch_cell(&fixture, threads, iters, fast);
+            println!(
+                "dispatch {:>9} {} thread(s): {:>12.0} ops/s",
+                cell.path, cell.threads, cell.ops_per_sec
+            );
+            cells.push(cell);
+        }
+    }
+
+    let find = |path: &str, threads: usize| {
+        cells
+            .iter()
+            .find(|c| c.path == path && c.threads == threads)
+            .map(|c| c.ops_per_sec)
+            .unwrap_or(0.0)
+    };
+    let st_ratio = find("fastpath", 1) / find("baseline", 1).max(1e-9);
+    let mt_ratio = find("fastpath", mt) / find("baseline", mt).max(1e-9);
+    println!(
+        "\nfastpath vs baseline: {st_ratio:.2}x single-threaded, {mt_ratio:.2}x at {mt} \
+         threads  [{}]",
+        if mt_ratio >= 2.0 { "OK, >= 2x target" } else { "BELOW the 2x target" }
+    );
+
+    let e2e = e2e_cell(mt, rounds, 32);
+    println!(
+        "\nsubmit_many end-to-end: {:.0} req/s ({} client threads, 2 shards, sim backend)",
+        e2e.ops_per_sec, e2e.threads
+    );
+    cells.push(e2e);
+
+    if let Some(path) = json_path {
+        let doc = cells_to_json(&cells, mode);
+        std::fs::write(&path, doc.to_string() + "\n").expect("write BENCH_hotpath.json");
+        println!("\nwrote {path}");
+    }
+
+    let mut failed = false;
+    if let Some(floor) = min_ratio {
+        if mt_ratio < floor {
+            eprintln!(
+                "FAIL: multi-threaded fastpath/baseline ratio {mt_ratio:.2}x < floor \
+                 {floor:.2}x"
+            );
+            failed = true;
+        }
+    }
+    if let Some(floor) = min_e2e_rps {
+        let got = cells.last().map(|c| c.ops_per_sec).unwrap_or(0.0);
+        if got < floor {
+            eprintln!("FAIL: end-to-end {got:.0} req/s < floor {floor:.0} req/s");
+            failed = true;
+        }
+    }
+    if failed {
+        std::process::exit(1);
+    }
+}

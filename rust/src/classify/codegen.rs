@@ -11,15 +11,27 @@
 
 use crate::classify::{KernelClassifier, Standardizer};
 use crate::dataset::shapes::FEATURE_NAMES;
-use crate::ml::decision_tree::{Node, TreeClassifier};
+use crate::ml::decision_tree::{FlatTree, TreeClassifier};
 
-/// Flat decision-tree selector: nodes in preorder, features pre-standardized
-/// at build time so the hot path needs no allocation and no division.
+/// Leaf marker in the flattened `feat` array; mirrors
+/// `ml::decision_tree::FlatTree`.
+const LEAF: u32 = u32::MAX;
+
+/// Flat decision-tree selector in structure-of-arrays layout: node
+/// features, destandardized thresholds and child pairs live in three
+/// parallel arrays, and descent indexes the child pair with the comparison
+/// result instead of branching — the branch-predictable walk the submit
+/// path runs on every cache miss and the retuner runs when scoring
+/// candidate deployments. Features are pre-standardized at build time so
+/// the hot path needs no allocation and no division.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CompiledTree {
-    /// (feature, threshold_destandardized, left, right); leaves encoded as
-    /// feature == usize::MAX with `left` holding the deployed-set class.
-    nodes: Vec<(usize, f64, u32, u32)>,
+    /// Split feature per node; `LEAF` marks a leaf.
+    feat: Vec<u32>,
+    /// Destandardized split threshold per node (0.0 at leaves).
+    thr: Vec<f64>,
+    /// `[left, right]` child indices; at a leaf, `[class, class]`.
+    kids: Vec<[u32; 2]>,
     /// Deployed configuration indices; classes index into this.
     pub deployed: Vec<usize>,
 }
@@ -30,10 +42,7 @@ impl CompiledTree {
     /// the z-score transform entirely.
     pub fn compile(clf: &KernelClassifier) -> Option<CompiledTree> {
         let tree = clf.tree()?;
-        Some(CompiledTree {
-            nodes: flatten(tree, &clf.standardizer),
-            deployed: clf.deployed.clone(),
-        })
+        Some(flatten(tree, &clf.standardizer, clf.deployed.clone()))
     }
 
     /// Deployed-set class for raw (unstandardized) shape features.
@@ -41,11 +50,12 @@ impl CompiledTree {
     pub fn predict_class(&self, raw: &[f64]) -> usize {
         let mut i = 0usize;
         loop {
-            let (feat, thr, left, right) = self.nodes[i];
-            if feat == usize::MAX {
-                return left as usize;
+            let f = self.feat[i];
+            if f == LEAF {
+                return self.kids[i][0] as usize;
             }
-            i = if raw[feat] <= thr { left as usize } else { right as usize };
+            let right = (raw[f as usize] > self.thr[i]) as usize;
+            i = self.kids[i][right] as usize;
         }
     }
 
@@ -56,7 +66,18 @@ impl CompiledTree {
     }
 
     pub fn n_nodes(&self) -> usize {
-        self.nodes.len()
+        self.feat.len()
+    }
+
+    /// One node as `(feature, threshold, left, right)`; leaves report
+    /// `feature == usize::MAX` with `left` holding the class. Serialization
+    /// and codegen iterate this view.
+    fn node(&self, i: usize) -> (usize, f64, u32, u32) {
+        if self.feat[i] == LEAF {
+            (usize::MAX, 0.0, self.kids[i][0], 0)
+        } else {
+            (self.feat[i] as usize, self.thr[i], self.kids[i][0], self.kids[i][1])
+        }
     }
 
     // -- serialization (one line per node; human-auditable) ----------------
@@ -71,7 +92,8 @@ impl CompiledTree {
                 .collect::<Vec<_>>()
                 .join(",")
         ));
-        for &(feat, thr, left, right) in &self.nodes {
+        for i in 0..self.n_nodes() {
+            let (feat, thr, left, right) = self.node(i);
             if feat == usize::MAX {
                 out.push_str(&format!("leaf {left}\n"));
             } else {
@@ -90,55 +112,53 @@ impl CompiledTree {
             .split(',')
             .map(|s| s.parse().map_err(|_| format!("bad config index {s}")))
             .collect::<Result<_, String>>()?;
-        let mut nodes = Vec::new();
+        let mut tree =
+            CompiledTree { feat: Vec::new(), thr: Vec::new(), kids: Vec::new(), deployed };
         for line in lines {
             let parts: Vec<&str> = line.split_whitespace().collect();
             match parts.as_slice() {
-                ["leaf", cls] => nodes.push((
-                    usize::MAX,
-                    0.0,
-                    cls.parse::<u32>().map_err(|e| e.to_string())?,
-                    0,
-                )),
-                ["split", f, t, l, r] => nodes.push((
-                    f.parse().map_err(|_| "bad feature")?,
-                    t.parse().map_err(|_| "bad threshold")?,
-                    l.parse().map_err(|_| "bad left")?,
-                    r.parse().map_err(|_| "bad right")?,
-                )),
+                ["leaf", cls] => {
+                    let cls: u32 = cls.parse().map_err(|_| "bad leaf class".to_string())?;
+                    tree.feat.push(LEAF);
+                    tree.thr.push(0.0);
+                    tree.kids.push([cls, cls]);
+                }
+                ["split", f, t, l, r] => {
+                    let f: usize = f.parse().map_err(|_| "bad feature")?;
+                    if f >= LEAF as usize {
+                        return Err(format!("feature index {f} out of range"));
+                    }
+                    tree.feat.push(f as u32);
+                    tree.thr.push(t.parse().map_err(|_| "bad threshold")?);
+                    tree.kids.push([
+                        l.parse().map_err(|_| "bad left")?,
+                        r.parse().map_err(|_| "bad right")?,
+                    ]);
+                }
                 [] => {}
                 _ => return Err(format!("bad tree line: {line}")),
             }
         }
-        if nodes.is_empty() {
+        if tree.feat.is_empty() {
             return Err("tree has no nodes".into());
         }
-        Ok(CompiledTree { nodes, deployed })
+        Ok(tree)
     }
 }
 
-fn flatten(tree: &TreeClassifier, st: &Standardizer) -> Vec<(usize, f64, u32, u32)> {
-    let mut out = Vec::with_capacity(tree.nodes.len());
-    for node in &tree.nodes {
-        match node {
-            Node::Leaf { payload } => {
-                let counts = &tree.leaf_counts[*payload];
-                let cls = counts
-                    .iter()
-                    .enumerate()
-                    .max_by_key(|&(_, &c)| c)
-                    .map(|(i, _)| i)
-                    .unwrap_or(0);
-                out.push((usize::MAX, 0.0, cls as u32, 0));
-            }
-            Node::Split { feature, threshold, left, right } => {
-                // Destandardize: z <= t  <=>  raw <= t * std + mean.
-                let thr = threshold * st.std[*feature] + st.mean[*feature];
-                out.push((*feature, thr, *left as u32, *right as u32));
-            }
+fn flatten(tree: &TreeClassifier, st: &Standardizer, deployed: Vec<usize>) -> CompiledTree {
+    // Reuse the SoA flattening (and its leaf-majority, last-max collapse)
+    // from `ml::decision_tree` — one implementation to keep
+    // prediction-identical — then rebase the split thresholds into raw
+    // feature space: z <= t  <=>  raw <= t * std + mean.
+    let (feat, mut thr, kids) = FlatTree::from_classifier(tree).into_parts();
+    for (f, t) in feat.iter().zip(thr.iter_mut()) {
+        if *f != LEAF {
+            let fi = *f as usize;
+            *t = *t * st.std[fi] + st.mean[fi];
         }
     }
-    out
+    CompiledTree { feat, thr, kids, deployed }
 }
 
 /// Generated Rust source: nested ifs over the raw feature names, as a
@@ -161,7 +181,7 @@ pub fn to_rust_source(ct: &CompiledTree, fn_name: &str) -> String {
 
 fn emit(ct: &CompiledTree, node: usize, depth: usize, out: &mut String) {
     let pad = "    ".repeat(depth);
-    let (feat, thr, left, right) = ct.nodes[node];
+    let (feat, thr, left, right) = ct.node(node);
     if feat == usize::MAX {
         out.push_str(&format!("{pad}{left} // {:?}\n", ct.deployed.get(left as usize)));
         return;
@@ -201,6 +221,22 @@ mod tests {
                 clf.predict_config(&f),
                 "mismatch on {s:?}"
             );
+        }
+    }
+
+    #[test]
+    fn compiled_tree_a_matches_classifier_on_full_grid() {
+        // Acceptance: the SoA compiled selector must return the identical
+        // config to the DecisionTreeA classifier at *every* benchmark
+        // shape (the destandardized thresholds and the branchless child
+        // select must not move a single boundary).
+        let shapes = benchmark_shapes();
+        let ds = generate_dataset(profile_by_name("r9-nano").unwrap(), &shapes);
+        let clf = KernelClassifier::fit(ClassifierKind::DecisionTreeA, &ds, &[3, 77, 205, 611], 1);
+        let ct = CompiledTree::compile(&clf).unwrap();
+        for s in &shapes {
+            let f = s.features();
+            assert_eq!(ct.predict_config(&f), clf.predict_config(&f), "mismatch on {s:?}");
         }
     }
 

@@ -14,7 +14,7 @@ pub mod codegen;
 use crate::dataset::PerfDataset;
 use crate::linalg::stats::argmax;
 use crate::linalg::Matrix;
-use crate::ml::decision_tree::{TreeClassifier, TreeParams};
+use crate::ml::decision_tree::{FlatTree, TreeClassifier, TreeParams};
 use crate::ml::knn::Knn;
 use crate::ml::mlp::{Mlp, MlpParams};
 use crate::ml::random_forest::{ForestParams, RandomForest};
@@ -113,11 +113,21 @@ pub struct KernelClassifier {
 }
 
 enum Model {
-    Tree(TreeClassifier),
+    /// The reference arena walk plus its flattened (SoA) evaluator; all
+    /// predictions run through the flat form, the arena stays for
+    /// codegen and exact-match verification.
+    Tree(TreeClassifier, FlatTree),
     Knn(Knn),
     Svm(Svm),
     Forest(RandomForest),
     Mlp(Mlp),
+}
+
+/// Fit a tree and pre-flatten it for branch-predictable inference.
+fn tree_model(x: &Matrix, y: &[usize], params: &TreeParams) -> Model {
+    let tree = TreeClassifier::fit(x, y, params);
+    let flat = FlatTree::from_classifier(&tree);
+    Model::Tree(tree, flat)
 }
 
 /// Labels for training: per size set, the best config among `deployed`.
@@ -145,12 +155,10 @@ impl KernelClassifier {
         let x = standardizer.transform(&features_raw);
         let y = deployment_labels(train, deployed);
         let model = match kind {
-            ClassifierKind::DecisionTreeA => Model::Tree(TreeClassifier::fit(
-                &x,
-                &y,
-                &TreeParams { seed, ..Default::default() },
-            )),
-            ClassifierKind::DecisionTreeB => Model::Tree(TreeClassifier::fit(
+            ClassifierKind::DecisionTreeA => {
+                tree_model(&x, &y, &TreeParams { seed, ..Default::default() })
+            }
+            ClassifierKind::DecisionTreeB => tree_model(
                 &x,
                 &y,
                 &TreeParams {
@@ -159,8 +167,8 @@ impl KernelClassifier {
                     seed,
                     ..Default::default()
                 },
-            )),
-            ClassifierKind::DecisionTreeC => Model::Tree(TreeClassifier::fit(
+            ),
+            ClassifierKind::DecisionTreeC => tree_model(
                 &x,
                 &y,
                 &TreeParams {
@@ -169,7 +177,7 @@ impl KernelClassifier {
                     seed,
                     ..Default::default()
                 },
-            )),
+            ),
             ClassifierKind::NearestNeighbor1 => Model::Knn(Knn::fit(&x, &y, 1)),
             ClassifierKind::NearestNeighbor3 => {
                 Model::Knn(Knn::fit(&x, &y, 3.min(x.rows)))
@@ -205,7 +213,10 @@ impl KernelClassifier {
     pub fn predict_class(&self, raw_features: &[f64]) -> usize {
         let row = self.standardizer.transform_row(raw_features);
         let cls = match &self.model {
-            Model::Tree(t) => t.predict(&row),
+            // The flat evaluator is prediction-identical to the arena
+            // walk (asserted by tests); it is what serving-path inference
+            // and the retuner's candidate scoring run.
+            Model::Tree(_, flat) => flat.predict(&row),
             Model::Knn(k) => k.predict(&row),
             Model::Svm(s) => s.predict(&row),
             Model::Forest(f) => f.predict(&row),
@@ -230,7 +241,15 @@ impl KernelClassifier {
     /// The underlying decision tree, when the classifier is one (codegen).
     pub fn tree(&self) -> Option<&TreeClassifier> {
         match &self.model {
-            Model::Tree(t) => Some(t),
+            Model::Tree(tree, _) => Some(tree),
+            _ => None,
+        }
+    }
+
+    /// The flattened evaluator, when the classifier is a tree.
+    pub fn flat_tree(&self) -> Option<&FlatTree> {
+        match &self.model {
+            Model::Tree(_, flat) => Some(flat),
             _ => None,
         }
     }
@@ -321,6 +340,33 @@ mod tests {
             dt > 0.75 * oracle,
             "DT {dt:.1}% far below oracle {oracle:.1}%"
         );
+    }
+
+    #[test]
+    fn flat_evaluator_matches_reference_tree_on_full_grid() {
+        // Acceptance: the flattened (SoA) evaluator must agree with the
+        // reference DecisionTreeA arena walk on *every* benchmark shape —
+        // class for class, config for config — not just a subsample.
+        let shapes = benchmark_shapes();
+        let ds = generate_dataset(profile_by_name("r9-nano").unwrap(), &shapes);
+        let deployed = select(Method::PcaKMeans, &ds, Normalization::Standard, 8, 1);
+        let clf = KernelClassifier::fit(ClassifierKind::DecisionTreeA, &ds, &deployed, 7);
+        let tree = clf.tree().expect("tree classifier");
+        let flat = clf.flat_tree().expect("flattened evaluator");
+        for s in &shapes {
+            let row = clf.standardizer.transform_row(&s.features());
+            let reference = tree.predict(&row).min(deployed.len() - 1);
+            assert_eq!(
+                flat.predict(&row).min(deployed.len() - 1),
+                reference,
+                "flat walk diverges from the reference tree at {s:?}"
+            );
+            assert_eq!(
+                clf.predict_config(&s.features()),
+                deployed[reference],
+                "classifier inference diverges at {s:?}"
+            );
+        }
     }
 
     #[test]

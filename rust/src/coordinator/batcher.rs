@@ -4,12 +4,15 @@
 //! to this library's needs).
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-/// A queued unit of work, tagged with the executable it resolved to.
+/// A queued unit of work, tagged with the executable it resolved to. The
+/// tag is a shared `Arc<str>` (cloned from the resolution), so tagging and
+/// regrouping never copy path strings.
 #[derive(Debug)]
 pub struct Pending<T> {
-    pub artifact: String,
+    pub artifact: Arc<str>,
     pub enqueued: Instant,
     pub payload: T,
 }
@@ -38,7 +41,7 @@ impl<T> Batcher<T> {
         Batcher { cfg, queue: VecDeque::new() }
     }
 
-    pub fn push(&mut self, artifact: String, payload: T) {
+    pub fn push(&mut self, artifact: Arc<str>, payload: T) {
         self.push_pending(Pending { artifact, enqueued: Instant::now(), payload });
     }
 
@@ -78,16 +81,17 @@ impl<T> Batcher<T> {
     /// group that merely filled up, and a group whose deadline passed
     /// while another artifact's batch was executing drains on the very
     /// next call instead of being re-armed with a fresh `max_wait`.
-    pub fn drain_due(&mut self) -> Option<(String, Vec<Pending<T>>)> {
+    pub fn drain_due(&mut self) -> Option<(Arc<str>, Vec<Pending<T>>)> {
         if self.queue.is_empty() {
             return None;
         }
-        // Per artifact group: (size, oldest enqueue stamp).
-        let mut groups: std::collections::HashMap<&str, (usize, Instant)> =
+        // Per artifact group: (size, oldest enqueue stamp). Keys are `Arc`
+        // clones of the shared tags — no string copies.
+        let mut groups: std::collections::HashMap<Arc<str>, (usize, Instant)> =
             std::collections::HashMap::new();
         for p in &self.queue {
             let entry = groups
-                .entry(p.artifact.as_str())
+                .entry(p.artifact.clone())
                 .or_insert((0, p.enqueued));
             entry.0 += 1;
             entry.1 = entry.1.min(p.enqueued);
@@ -98,12 +102,13 @@ impl<T> Batcher<T> {
                 *size >= self.cfg.max_batch || oldest.elapsed() >= self.cfg.max_wait
             })
             .min_by_key(|&(_, (_, oldest))| oldest)
-            .map(|(artifact, _)| artifact.to_string())?;
-        Some((target.clone(), self.take_group(&target)))
+            .map(|(artifact, _)| artifact)?;
+        let group = self.take_group(&target);
+        Some((target, group))
     }
 
     /// Drain everything (flush/shutdown), grouped, FIFO by oldest group.
-    pub fn drain_all(&mut self) -> Vec<(String, Vec<Pending<T>>)> {
+    pub fn drain_all(&mut self) -> Vec<(Arc<str>, Vec<Pending<T>>)> {
         let mut out = Vec::new();
         while let Some(front) = self.queue.front() {
             let artifact = front.artifact.clone();
@@ -116,7 +121,7 @@ impl<T> Batcher<T> {
         let mut group = Vec::new();
         let mut rest = VecDeque::with_capacity(self.queue.len());
         while let Some(p) = self.queue.pop_front() {
-            if p.artifact == artifact && group.len() < self.cfg.max_batch {
+            if &*p.artifact == artifact && group.len() < self.cfg.max_batch {
                 group.push(p);
             } else {
                 rest.push_back(p);
@@ -143,7 +148,7 @@ mod tests {
         b.push("a".into(), 3);
         // Group "a" reached max_batch=2.
         let (artifact, group) = b.drain_due().unwrap();
-        assert_eq!(artifact, "a");
+        assert_eq!(&*artifact, "a");
         assert_eq!(group.iter().map(|p| p.payload).collect::<Vec<_>>(), vec![1, 3]);
         assert_eq!(b.len(), 1);
     }
@@ -165,7 +170,7 @@ mod tests {
         b.push("a".into(), 1);
         std::thread::sleep(Duration::from_millis(1));
         let (artifact, group) = b.drain_due().unwrap();
-        assert_eq!(artifact, "a");
+        assert_eq!(&*artifact, "a");
         assert_eq!(group.len(), 1);
     }
 
@@ -196,7 +201,7 @@ mod tests {
         b.push("a".into(), 3);
         // "a" reached max_batch and drains first (the "executing" batch).
         let (art, group) = b.drain_due().unwrap();
-        assert_eq!(art, "a");
+        assert_eq!(&*art, "a");
         assert_eq!(group.len(), 2);
         // The deadline of "b" passes while "a" executes.
         std::thread::sleep(Duration::from_millis(6));
@@ -206,7 +211,7 @@ mod tests {
             "expired leftover must make the next poll immediate"
         );
         let (art, group) = b.drain_due().expect("b is overdue, must drain now");
-        assert_eq!(art, "b");
+        assert_eq!(&*art, "b");
         assert_eq!(group.iter().map(|p| p.payload).collect::<Vec<_>>(), vec![2]);
         assert!(b.is_empty());
     }
@@ -229,7 +234,7 @@ mod tests {
             "the stolen entry is already past its wait budget"
         );
         let (art, group) = b.drain_due().expect("overdue stolen group drains");
-        assert_eq!(art, "stolen");
+        assert_eq!(&*art, "stolen");
         assert_eq!(group.len(), 1);
         assert_eq!(b.len(), 1, "the fresh entry stays queued");
         assert!(b.next_deadline().unwrap() > Duration::ZERO);
@@ -249,11 +254,11 @@ mod tests {
             payload: 3,
         });
         let (art, group) = b.drain_due().expect("stolen group is overdue");
-        assert_eq!(art, "stolen", "EDF: oldest deadline drains first");
+        assert_eq!(&*art, "stolen", "EDF: oldest deadline drains first");
         assert_eq!(group.iter().map(|p| p.payload).collect::<Vec<_>>(), vec![3]);
         // The full group drains right after.
         let (art, group) = b.drain_due().expect("full group still due");
-        assert_eq!(art, "fresh");
+        assert_eq!(&*art, "fresh");
         assert_eq!(group.len(), 2);
         assert!(b.is_empty());
     }
@@ -270,9 +275,9 @@ mod tests {
         std::thread::sleep(Duration::from_millis(6));
         // Both groups are now past the wait budget; the older drains first.
         let (art, _) = b.drain_due().unwrap();
-        assert_eq!(art, "old");
+        assert_eq!(&*art, "old");
         let (art, _) = b.drain_due().unwrap();
-        assert_eq!(art, "young");
+        assert_eq!(&*art, "young");
     }
 
     #[test]
@@ -292,7 +297,7 @@ mod tests {
         let all = b.drain_all();
         assert!(b.is_empty());
         assert_eq!(all.len(), 3);
-        assert_eq!(all[0].0, "a"); // oldest group first
+        assert_eq!(&*all[0].0, "a"); // oldest group first
         assert_eq!(all[0].1.len(), 2);
         // Every payload appears exactly once.
         let total: usize = all.iter().map(|(_, g)| g.len()).sum();

@@ -1,4 +1,5 @@
-//! Memoized selector hot path: a bounded shape -> resolved-artifact cache.
+//! Memoized selector hot path: a bounded, striped shape -> resolved-artifact
+//! cache.
 //!
 //! The registry's resolution (decision-tree walk + deployed-set
 //! reconciliation) is cheap but not free, and it sits on every request's
@@ -7,6 +8,17 @@
 //! every inference), so a small FIFO-evicted map in front of
 //! [`KernelRegistry::resolve`] turns the hot path into one hash lookup and
 //! an `Arc` clone.
+//!
+//! The map is **striped**: entries land in one of 16 independent
+//! stripes by shape hash, and each stripe publishes an immutable snapshot
+//! (`Arc<HashMap>`) behind a briefly-held `RwLock` — the same hand-rolled
+//! `ArcSwap` stand-in as [`crate::tuning::swap::SelectorHandle`]. A hit
+//! clones the stripe's snapshot `Arc` (one refcount bump, no allocation)
+//! and looks the shape up lock-free, so concurrent hits on different
+//! shapes touch disjoint cache lines and scale with the submitter count
+//! instead of serializing on one reader-count word. Writes (misses,
+//! generation refreshes, invalidation) are copy-on-write per stripe and
+//! serialize on a global FIFO-order mutex that the hit path never takes.
 //!
 //! Entries are tagged with the selector generation they were resolved
 //! under. A hot swap bumps the registry's generation, so stale entries
@@ -19,10 +31,13 @@
 //! measured dispatch times replaces the devsim estimate feeding the
 //! router's load gauges; cold cells keep the devsim prior.
 
+use std::collections::hash_map::DefaultHasher;
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, RwLock};
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 
+use crate::coordinator::metrics::StripedCounter;
 use crate::coordinator::registry::{KernelRegistry, Resolution};
 use crate::dataset::{config_by_index, config_by_name, GemmShape};
 use crate::devsim::{profile_by_name, simulate, DeviceProfile};
@@ -33,11 +48,16 @@ use crate::tuning::telemetry::TelemetrySink;
 /// dispatch-cost hint (see [`ResolutionCache::dispatch_cost_ns`]).
 pub const COST_REFRESH_PERIOD: u64 = 32;
 
+/// Independent stripes of the resolution map.
+const STRIPES: usize = 16;
+
 /// A successful registry resolution, shared between the cache, the
-/// load-aware router and the shard that executes the request.
+/// load-aware router and the shard that executes the request. `meta` sits
+/// behind an `Arc`, so cloning a `ResolvedKernel` (and the route/steal
+/// paths that used to deep-copy artifact paths) is allocation-free.
 #[derive(Debug)]
 pub struct ResolvedKernel {
-    pub meta: ArtifactMeta,
+    pub meta: Arc<ArtifactMeta>,
     pub resolution: Resolution,
     /// Estimated execution cost of one dispatch (seconds), from the devsim
     /// analytical model. Feeds the router's per-shard load gauges; a hint,
@@ -45,6 +65,12 @@ pub struct ResolvedKernel {
     pub cost_hint_secs: f64,
     /// Selector generation this resolution was produced under.
     pub generation: u64,
+    /// Shared batching key (the artifact path), cloned per job without
+    /// allocating.
+    artifact: Arc<str>,
+    /// Memoized hash of the artifact path: the router's shape-affinity
+    /// preference, computed once per resolution instead of per submit.
+    affinity: u64,
     /// Memoized dispatch-cost hint (ns; 0 = not yet computed), refreshed
     /// from telemetry every [`COST_REFRESH_PERIOD`] submits so the hot
     /// submit path reads one atomic instead of locking a telemetry stripe
@@ -58,9 +84,11 @@ impl Clone for ResolvedKernel {
     fn clone(&self) -> ResolvedKernel {
         ResolvedKernel {
             meta: self.meta.clone(),
-            resolution: self.resolution.clone(),
+            resolution: self.resolution,
             cost_hint_secs: self.cost_hint_secs,
             generation: self.generation,
+            artifact: self.artifact.clone(),
+            affinity: self.affinity,
             cached_cost_ns: AtomicU64::new(self.cached_cost_ns.load(Ordering::Relaxed)),
             hint_tick: AtomicU64::new(0),
         }
@@ -73,6 +101,17 @@ impl ResolvedKernel {
     /// queued request registers on the gauge.
     pub fn cost_hint_ns(&self) -> u64 {
         (self.cost_hint_secs * 1e9).max(1.0) as u64
+    }
+
+    /// The shared batching key: the artifact path this request resolved to.
+    pub fn artifact(&self) -> &Arc<str> {
+        &self.artifact
+    }
+
+    /// Memoized hash of the artifact path (the router's shape-affinity
+    /// preference).
+    pub fn affinity(&self) -> u64 {
+        self.affinity
     }
 }
 
@@ -102,27 +141,25 @@ pub fn estimate_cost_secs(
     predict_dispatch_secs(profile, shape, meta.config_index)
 }
 
+type StripeMap = HashMap<GemmShape, Arc<ResolvedKernel>>;
+
 pub struct ResolutionCache {
     cap: usize,
     /// Device profile used to price resolutions for the load gauges.
     profile: &'static DeviceProfile,
     /// Measured-time source for the cost-hint handoff (None = devsim only).
     telemetry: Option<Arc<TelemetrySink>>,
-    /// RwLock, not Mutex: the steady state is ~100% hits, and a hit only
-    /// needs a read guard — concurrent submitters must not serialize on
-    /// the map once every bucket is resolved.
-    inner: RwLock<Inner>,
-    hits: AtomicUsize,
-    misses: AtomicUsize,
-}
-
-#[derive(Default)]
-struct Inner {
-    map: HashMap<GemmShape, Arc<ResolvedKernel>>,
-    /// Insertion order for FIFO eviction (shapes are re-inserted only on a
+    /// Striped read-mostly map; see the module docs for the epoch scheme.
+    stripes: Vec<RwLock<Arc<StripeMap>>>,
+    /// Global FIFO insertion order (shapes are re-inserted only on a
     /// generation refresh, which keeps their original slot, so FIFO ==
-    /// LRU-by-first-touch, which is plenty for bucketed traffic).
-    order: VecDeque<GemmShape>,
+    /// LRU-by-first-touch, which is plenty for bucketed traffic). Only
+    /// the write paths take this mutex; hits never do.
+    order: Mutex<VecDeque<GemmShape>>,
+    /// Hit/miss counters are per-thread-striped: a warm hit must not
+    /// bounce one shared counter cache line between submitter cores.
+    hits: StripedCounter,
+    misses: StripedCounter,
 }
 
 impl ResolutionCache {
@@ -141,9 +178,10 @@ impl ResolutionCache {
             cap: capacity.max(1),
             profile,
             telemetry: None,
-            inner: RwLock::new(Inner::default()),
-            hits: AtomicUsize::new(0),
-            misses: AtomicUsize::new(0),
+            stripes: (0..STRIPES).map(|_| RwLock::new(Arc::new(StripeMap::new()))).collect(),
+            order: Mutex::new(VecDeque::new()),
+            hits: StripedCounter::new(),
+            misses: StripedCounter::new(),
         }
     }
 
@@ -157,6 +195,28 @@ impl ResolutionCache {
     /// The devsim profile cost hints are priced against.
     pub fn pricing_profile(&self) -> &'static DeviceProfile {
         self.profile
+    }
+
+    fn stripe_of(&self, shape: &GemmShape) -> usize {
+        let mut hasher = DefaultHasher::new();
+        shape.hash(&mut hasher);
+        (hasher.finish() as usize) % STRIPES
+    }
+
+    /// The stripe's current immutable snapshot (brief read lock + `Arc`
+    /// clone — the hit path's only synchronization).
+    fn snapshot(&self, stripe: usize) -> Arc<StripeMap> {
+        self.stripes[stripe].read().unwrap().clone()
+    }
+
+    /// Copy-on-write edit of one stripe: clone the snapshot, apply the
+    /// edit, publish the new snapshot. Caller holds the `order` mutex, so
+    /// concurrent edits never interleave.
+    fn rebuild(&self, stripe: usize, edit: impl FnOnce(&mut StripeMap)) {
+        let mut slot = self.stripes[stripe].write().unwrap();
+        let mut map = (**slot).clone();
+        edit(&mut map);
+        *slot = Arc::new(map);
     }
 
     /// Cached resolution, or walk the registry and memoize the result.
@@ -174,11 +234,16 @@ impl ResolutionCache {
         }
         let (meta, resolution, generation) = registry.resolve(shape)?;
         let cost_hint_secs = estimate_cost_secs(self.profile, meta, shape);
+        let artifact: Arc<str> = Arc::from(meta.path.as_str());
+        let mut hasher = DefaultHasher::new();
+        meta.path.hash(&mut hasher);
         let resolved = Arc::new(ResolvedKernel {
-            meta: meta.clone(),
+            meta: Arc::new(meta.clone()),
             resolution,
             cost_hint_secs,
             generation,
+            artifact,
+            affinity: hasher.finish(),
             cached_cost_ns: AtomicU64::new(0),
             hint_tick: AtomicU64::new(0),
         });
@@ -214,14 +279,14 @@ impl ResolutionCache {
     /// Fresh cached entry for `shape`, counting a hit; stale-generation
     /// entries count as misses (the caller re-resolves and replaces them).
     fn lookup(&self, shape: &GemmShape, generation: u64) -> Option<Arc<ResolvedKernel>> {
-        let inner = self.inner.read().unwrap();
-        match inner.map.get(shape) {
+        let map = self.snapshot(self.stripe_of(shape));
+        match map.get(shape) {
             Some(r) if r.generation == generation => {
-                self.hits.fetch_add(1, Ordering::Relaxed);
+                self.hits.incr();
                 Some(r.clone())
             }
             _ => {
-                self.misses.fetch_add(1, Ordering::Relaxed);
+                self.misses.incr();
                 None
             }
         }
@@ -230,34 +295,41 @@ impl ResolutionCache {
     /// Cached entry regardless of generation (tests/inspection; counts
     /// hits and misses like a lookup).
     pub fn get(&self, shape: &GemmShape) -> Option<Arc<ResolvedKernel>> {
-        let inner = self.inner.read().unwrap();
-        match inner.map.get(shape) {
+        let map = self.snapshot(self.stripe_of(shape));
+        match map.get(shape) {
             Some(r) => {
-                self.hits.fetch_add(1, Ordering::Relaxed);
+                self.hits.incr();
                 Some(r.clone())
             }
             None => {
-                self.misses.fetch_add(1, Ordering::Relaxed);
+                self.misses.incr();
                 None
             }
         }
     }
 
     pub fn insert(&self, shape: GemmShape, resolved: Arc<ResolvedKernel>) {
-        let mut inner = self.inner.write().unwrap();
-        match inner.map.get(&shape).map(|existing| existing.generation) {
+        let mut order = self.order.lock().unwrap();
+        let stripe = self.stripe_of(&shape);
+        match self.snapshot(stripe).get(&shape).map(|existing| existing.generation) {
             // Never let a racing stale resolution clobber a fresher one.
             Some(existing_gen) if existing_gen > resolved.generation => {}
             Some(_) => {
                 // Generation refresh: replace in place, keep the FIFO slot.
-                inner.map.insert(shape, resolved);
+                self.rebuild(stripe, |map| {
+                    map.insert(shape, resolved);
+                });
             }
             None => {
-                inner.map.insert(shape, resolved);
-                inner.order.push_back(shape);
-                while inner.order.len() > self.cap {
-                    if let Some(evict) = inner.order.pop_front() {
-                        inner.map.remove(&evict);
+                self.rebuild(stripe, |map| {
+                    map.insert(shape, resolved);
+                });
+                order.push_back(shape);
+                while order.len() > self.cap {
+                    if let Some(evict) = order.pop_front() {
+                        self.rebuild(self.stripe_of(&evict), |map| {
+                            map.remove(&evict);
+                        });
                     }
                 }
             }
@@ -269,23 +341,26 @@ impl ResolutionCache {
     /// lookup make this a memory-hygiene step rather than a correctness
     /// requirement.
     pub fn invalidate_stale(&self, generation: u64) {
-        let mut inner = self.inner.write().unwrap();
-        let Inner { map, order } = &mut *inner;
-        map.retain(|_, r| r.generation >= generation);
-        order.retain(|s| map.contains_key(s));
+        let mut order = self.order.lock().unwrap();
+        for stripe in 0..STRIPES {
+            if self.snapshot(stripe).values().any(|r| r.generation < generation) {
+                self.rebuild(stripe, |map| map.retain(|_, r| r.generation >= generation));
+            }
+        }
+        order.retain(|shape| self.snapshot(self.stripe_of(shape)).contains_key(shape));
     }
 
     pub fn len(&self) -> usize {
-        self.inner.read().unwrap().map.len()
+        (0..STRIPES).map(|stripe| self.snapshot(stripe).len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// (hits, misses) since construction.
+    /// (hits, misses) since construction (striped cells folded at read).
     pub fn stats(&self) -> (usize, usize) {
-        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+        (self.hits.sum(), self.misses.sum())
     }
 }
 
@@ -326,7 +401,8 @@ mod tests {
             cache.resolve(&reg, s).unwrap();
         }
         assert_eq!(cache.len(), 2);
-        // The first-inserted shape was evicted; the later two remain.
+        // The first-inserted shape was evicted (the FIFO order is global,
+        // not per stripe); the later two remain.
         assert!(cache.get(&shapes[0]).is_none());
         assert!(cache.get(&shapes[1]).is_some());
         assert!(cache.get(&shapes[2]).is_some());
@@ -347,6 +423,18 @@ mod tests {
             large.cost_hint_secs,
             small.cost_hint_secs
         );
+    }
+
+    #[test]
+    fn resolved_kernel_clone_shares_meta_and_artifact() {
+        let reg = registry();
+        let cache = ResolutionCache::new(16);
+        let resolved = cache.resolve(&reg, &GemmShape::new(64, 64, 64, 1)).unwrap();
+        let cloned = resolved.as_ref().clone();
+        assert!(Arc::ptr_eq(&resolved.meta, &cloned.meta), "meta must be shared, not deep-copied");
+        assert!(Arc::ptr_eq(resolved.artifact(), cloned.artifact()));
+        assert_eq!(resolved.affinity(), cloned.affinity());
+        assert_eq!(&**resolved.artifact(), resolved.meta.path.as_str());
     }
 
     #[test]
@@ -419,6 +507,39 @@ mod tests {
         cache.insert(shape, stale);
         let now = cache.get(&shape).unwrap();
         assert!(Arc::ptr_eq(&now, &fresh));
+    }
+
+    #[test]
+    fn concurrent_hits_share_the_cached_entry() {
+        let reg = std::sync::Arc::new(registry());
+        let cache = std::sync::Arc::new(ResolutionCache::new(16));
+        let shapes = [
+            GemmShape::new(32, 32, 32, 1),
+            GemmShape::new(64, 64, 64, 1),
+            GemmShape::new(128, 128, 128, 1),
+            GemmShape::new(64, 64, 64, 4),
+        ];
+        let warm: Vec<Arc<ResolvedKernel>> =
+            shapes.iter().map(|s| cache.resolve(&reg, s).unwrap()).collect();
+        let mut joins = Vec::new();
+        for t in 0..4usize {
+            let reg = reg.clone();
+            let cache = cache.clone();
+            let expected = warm[t].clone();
+            let shape = shapes[t];
+            joins.push(std::thread::spawn(move || {
+                for _ in 0..2000 {
+                    let hit = cache.resolve(&reg, &shape).unwrap();
+                    assert!(Arc::ptr_eq(&hit, &expected), "hit must be the cached Arc");
+                }
+            }));
+        }
+        for join in joins {
+            join.join().unwrap();
+        }
+        let (hits, misses) = cache.stats();
+        assert_eq!(hits, 4 * 2000);
+        assert_eq!(misses, 4);
     }
 
     #[test]

@@ -1,0 +1,424 @@
+//! Pooled completion slots: the allocation-free replacement for the
+//! per-request `mpsc::channel()` pair on the submit hot path.
+//!
+//! Every submitted request needs a rendezvous between the client thread
+//! (which waits for the response) and whichever executor shard ends up
+//! serving it. A fresh channel per request costs a heap allocation and a
+//! teardown per dispatch; at serving rates that is pure coordination
+//! overhead. This module keeps a fixed slab of reusable slots instead:
+//! checking one out, completing it and waiting on it touch only atomics,
+//! a briefly-held per-slot mutex and `thread::park`/`unpark` — no heap
+//! traffic at all once the pool exists.
+//!
+//! Free slots are tracked in per-lane Treiber stacks (version-tagged
+//! `AtomicU64` heads, so the classic ABA race cannot double-lease a
+//! slot). Each client thread is assigned a home lane round-robin, so in
+//! steady state checkout/release traffic stays on thread-private cache
+//! lines — the same striping idea `TelemetrySink` uses for its mutexes.
+//!
+//! Delivery protocol per use (all safe code):
+//!
+//! 1. the producer stores the response and takes the registered waiter
+//!    under the slot mutex, publishes `READY`, drops the lock, then
+//!    unparks the waiter from a local handle — after the unlock it never
+//!    touches the slot again;
+//! 2. the consumer re-acquires the same mutex to take the value, so its
+//!    release of the slot is ordered strictly after the producer's last
+//!    touch;
+//! 3. `park` wakeups are re-checked against the state word, so banked
+//!    unpark permits from earlier uses are harmless.
+//!
+//! Dropping a [`Completion`] without completing it delivers a synthetic
+//! failure response (the worker died mid-batch), so a [`Ticket`] can
+//! never wait forever — the same liveness the dropped-`Sender` error of
+//! the old channel pair provided.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::Thread;
+use std::time::Duration;
+
+use crate::coordinator::metrics::thread_stripe;
+use crate::coordinator::server::GemmResponse;
+
+/// Free-list lanes; checkout prefers the calling thread's home lane.
+const LANES: usize = 8;
+
+/// Free-list terminator (no slot index is ever `u32::MAX`).
+const NIL: u32 = u32::MAX;
+
+/// Slot states: checked out, response not yet delivered.
+const PENDING: u32 = 0;
+/// Response delivered; the waiter may consume and release the slot.
+const READY: u32 = 1;
+
+struct SlotInner {
+    value: Option<GemmResponse>,
+    waiter: Option<Thread>,
+    /// Set when the consumer dropped its [`Ticket`] before the producer
+    /// delivered: the producer then recycles the slot itself, so a
+    /// fire-and-forget submit never leaks slab capacity.
+    abandoned: bool,
+}
+
+struct Slot {
+    /// `PENDING` until the producer stores a response, `READY` after.
+    state: AtomicU32,
+    /// Free-list link: index of the next free slot in this slot's lane.
+    next_free: AtomicU32,
+    inner: Mutex<SlotInner>,
+}
+
+impl Slot {
+    fn new() -> Slot {
+        Slot {
+            state: AtomicU32::new(PENDING),
+            next_free: AtomicU32::new(NIL),
+            inner: Mutex::new(SlotInner { value: None, waiter: None, abandoned: false }),
+        }
+    }
+}
+
+/// A fixed slab of reusable completion slots.
+pub struct CompletionPool {
+    slots: Vec<Slot>,
+    /// Per-lane free stacks. Each head packs `(version << 32) | index`;
+    /// the version bumps on every successful push and pop, which defeats
+    /// the ABA race a plain index-CAS Treiber stack would suffer.
+    lanes: Vec<AtomicU64>,
+}
+
+impl CompletionPool {
+    /// A pool of `capacity` reusable slots (at least one per lane).
+    pub fn new(capacity: usize) -> Arc<CompletionPool> {
+        let capacity = capacity.max(LANES);
+        let slots: Vec<Slot> = (0..capacity).map(|_| Slot::new()).collect();
+        let lanes: Vec<AtomicU64> = (0..LANES).map(|_| AtomicU64::new(NIL as u64)).collect();
+        let pool = CompletionPool { slots, lanes };
+        for idx in (0..capacity as u32).rev() {
+            pool.push_free(idx);
+        }
+        Arc::new(pool)
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    fn push_free(&self, idx: u32) {
+        let lane = &self.lanes[idx as usize % LANES];
+        loop {
+            let head = lane.load(Ordering::Relaxed);
+            self.slots[idx as usize].next_free.store(head as u32, Ordering::Relaxed);
+            let tagged = (((head >> 32).wrapping_add(1)) << 32) | idx as u64;
+            let done = lane
+                .compare_exchange_weak(head, tagged, Ordering::Release, Ordering::Relaxed)
+                .is_ok();
+            if done {
+                return;
+            }
+        }
+    }
+
+    fn pop_free(&self, lane_idx: usize) -> Option<u32> {
+        let lane = &self.lanes[lane_idx];
+        loop {
+            let head = lane.load(Ordering::Acquire);
+            let idx = head as u32;
+            if idx == NIL {
+                return None;
+            }
+            let next = self.slots[idx as usize].next_free.load(Ordering::Relaxed);
+            let tagged = (((head >> 32).wrapping_add(1)) << 32) | next as u64;
+            let done = lane
+                .compare_exchange_weak(head, tagged, Ordering::Acquire, Ordering::Relaxed)
+                .is_ok();
+            if done {
+                return Some(idx);
+            }
+        }
+    }
+
+    /// Check a slot out of the pool: the producer half goes to the shard,
+    /// the consumer half to the caller. `None` when every slot is in
+    /// flight (the caller falls back to a one-shot heap slot).
+    /// (An associated fn, not a method: the halves each hold an
+    /// `Arc` to the pool, and `&Arc<Self>` is not a stable receiver.)
+    pub fn checkout(pool: &Arc<CompletionPool>) -> Option<(Completion, Ticket)> {
+        let start = thread_stripe(LANES);
+        for k in 0..LANES {
+            if let Some(idx) = pool.pop_free((start + k) % LANES) {
+                let completion =
+                    Completion { slot: SlotRef::Pooled { pool: pool.clone(), idx }, done: false };
+                let ticket = Ticket { slot: Some(SlotRef::Pooled { pool: pool.clone(), idx }) };
+                return Some((completion, ticket));
+            }
+        }
+        None
+    }
+}
+
+enum SlotRef {
+    /// A slab slot, returned to the free list after `wait`.
+    Pooled { pool: Arc<CompletionPool>, idx: u32 },
+    /// Overflow fallback: a one-shot heap slot (pool exhausted).
+    Owned(Arc<Slot>),
+}
+
+impl SlotRef {
+    fn slot(&self) -> &Slot {
+        match self {
+            SlotRef::Pooled { pool, idx } => &pool.slots[*idx as usize],
+            SlotRef::Owned(slot) => slot,
+        }
+    }
+}
+
+/// Producer half: delivers exactly one [`GemmResponse`]. Dropping it
+/// undelivered completes the slot with a synthetic failure instead, so
+/// the paired [`Ticket`] never hangs.
+pub struct Completion {
+    slot: SlotRef,
+    done: bool,
+}
+
+impl Completion {
+    /// A detached (non-pooled) pair, used when the pool is exhausted.
+    pub fn oneshot() -> (Completion, Ticket) {
+        let slot = Arc::new(Slot::new());
+        let completion = Completion { slot: SlotRef::Owned(slot.clone()), done: false };
+        (completion, Ticket { slot: Some(SlotRef::Owned(slot)) })
+    }
+
+    /// Deliver the response and wake the waiter, if one is parked.
+    pub fn complete(mut self, value: GemmResponse) {
+        self.deliver(value);
+    }
+
+    fn deliver(&mut self, value: GemmResponse) {
+        self.done = true;
+        let slot = self.slot.slot();
+        let mut inner = slot.inner.lock().unwrap();
+        if inner.abandoned {
+            // The consumer dropped its ticket before delivery: nobody
+            // will ever wait, so the producer recycles the slot and the
+            // response is discarded (state is still PENDING).
+            inner.abandoned = false;
+            inner.waiter = None;
+            drop(inner);
+            if let SlotRef::Pooled { pool, idx } = &self.slot {
+                pool.push_free(*idx);
+            }
+            return;
+        }
+        inner.value = Some(value);
+        let waiter = inner.waiter.take();
+        // Publish READY while still holding the lock: the consumer only
+        // recycles the slot after re-acquiring this mutex, which orders
+        // the recycle strictly after our final touch of the slot.
+        slot.state.store(READY, Ordering::Release);
+        drop(inner);
+        if let Some(thread) = waiter {
+            thread.unpark();
+        }
+    }
+}
+
+impl Drop for Completion {
+    fn drop(&mut self) {
+        if !self.done {
+            self.deliver(GemmResponse {
+                result: Err("request dropped before completion (worker died)".to_string()),
+                config_used: None,
+                artifact: Arc::from(""),
+                latency: Duration::ZERO,
+            });
+        }
+    }
+}
+
+/// Consumer half: blocks until the paired [`Completion`] delivers.
+/// Dropping a ticket without waiting is safe and leak-free: the slot is
+/// recycled immediately when the response already arrived, or marked
+/// abandoned so the producer recycles it on delivery — fire-and-forget
+/// submits never shrink the slab.
+pub struct Ticket {
+    /// `Some` until consumed by [`Ticket::wait`] (`Drop` then no-ops).
+    slot: Option<SlotRef>,
+}
+
+impl Ticket {
+    /// Block until the response arrives. Always returns — an undelivered
+    /// producer completes with a failure response on drop.
+    pub fn wait(mut self) -> GemmResponse {
+        let slot_ref = self.slot.take().expect("ticket consumed once");
+        let slot = slot_ref.slot();
+        if slot.state.load(Ordering::Acquire) != READY {
+            {
+                let mut inner = slot.inner.lock().unwrap();
+                inner.waiter = Some(std::thread::current());
+            }
+            // Banked unpark permits from earlier slot uses make park
+            // return spuriously; the state word is the source of truth.
+            while slot.state.load(Ordering::Acquire) != READY {
+                std::thread::park();
+            }
+        }
+        let value = {
+            let mut inner = slot.inner.lock().unwrap();
+            inner.waiter = None;
+            inner.value.take().expect("completed slot holds a response")
+        };
+        if let SlotRef::Pooled { pool, idx } = &slot_ref {
+            slot.state.store(PENDING, Ordering::Relaxed);
+            pool.push_free(*idx);
+        }
+        value
+    }
+
+    /// `Receiver::recv`-shaped convenience so existing call sites keep
+    /// their `.recv().expect(..)` form. Never returns `Err` — a dropped
+    /// producer surfaces as a failure inside the response instead.
+    pub fn recv(self) -> Result<GemmResponse, String> {
+        Ok(self.wait())
+    }
+}
+
+impl Drop for Ticket {
+    fn drop(&mut self) {
+        let Some(slot_ref) = self.slot.take() else { return };
+        let slot = slot_ref.slot();
+        let mut inner = slot.inner.lock().unwrap();
+        if inner.value.is_some() {
+            // Delivered but never waited on: consume and recycle now.
+            inner.value = None;
+            inner.waiter = None;
+            drop(inner);
+            if let SlotRef::Pooled { pool, idx } = &slot_ref {
+                slot.state.store(PENDING, Ordering::Relaxed);
+                pool.push_free(*idx);
+            }
+        } else {
+            // Not delivered yet: the producer recycles on delivery.
+            inner.abandoned = true;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn response(tag: usize) -> GemmResponse {
+        GemmResponse {
+            result: Ok(vec![tag as f32]),
+            config_used: Some(tag),
+            artifact: Arc::from("test-artifact"),
+            latency: Duration::ZERO,
+        }
+    }
+
+    #[test]
+    fn roundtrip_same_thread() {
+        let pool = CompletionPool::new(4);
+        let (completion, ticket) = CompletionPool::checkout(&pool).unwrap();
+        completion.complete(response(7));
+        let resp = ticket.wait();
+        assert_eq!(resp.config_used, Some(7));
+        assert_eq!(resp.result.unwrap(), vec![7.0]);
+    }
+
+    #[test]
+    fn wait_parks_until_a_late_producer_delivers() {
+        let pool = CompletionPool::new(4);
+        let (completion, ticket) = CompletionPool::checkout(&pool).unwrap();
+        let producer = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            completion.complete(response(3));
+        });
+        let resp = ticket.wait();
+        assert_eq!(resp.config_used, Some(3));
+        producer.join().unwrap();
+    }
+
+    #[test]
+    fn dropped_completion_delivers_a_failure() {
+        let pool = CompletionPool::new(4);
+        let (completion, ticket) = CompletionPool::checkout(&pool).unwrap();
+        drop(completion);
+        let resp = ticket.wait();
+        assert!(resp.result.is_err());
+        assert!(resp.result.unwrap_err().contains("dropped"));
+    }
+
+    #[test]
+    fn slots_recycle_far_past_capacity() {
+        let pool = CompletionPool::new(8);
+        for round in 0..1000usize {
+            let (completion, ticket) =
+                CompletionPool::checkout(&pool).expect("recycled slot available");
+            completion.complete(response(round));
+            assert_eq!(ticket.wait().config_used, Some(round));
+        }
+        assert_eq!(pool.capacity(), 8);
+    }
+
+    #[test]
+    fn exhausted_pool_reports_none_and_oneshot_fallback_works() {
+        let pool = CompletionPool::new(LANES); // minimum size
+        let held: Vec<(Completion, Ticket)> =
+            (0..LANES).map(|_| CompletionPool::checkout(&pool).expect("slot")).collect();
+        assert!(CompletionPool::checkout(&pool).is_none(), "every slot is in flight");
+        let (completion, ticket) = Completion::oneshot();
+        completion.complete(response(1));
+        assert_eq!(ticket.wait().config_used, Some(1));
+        for (completion, ticket) in held {
+            completion.complete(response(2));
+            ticket.wait();
+        }
+        assert!(CompletionPool::checkout(&pool).is_some(), "slots returned to the free list");
+    }
+
+    #[test]
+    fn dropped_tickets_do_not_leak_slab_capacity() {
+        let pool = CompletionPool::new(LANES); // minimum size: leaks would bite fast
+        // Abandon before delivery: the producer recycles on complete().
+        for round in 0..100usize {
+            let (completion, ticket) = CompletionPool::checkout(&pool).expect("slot");
+            drop(ticket);
+            completion.complete(response(round));
+        }
+        // Abandon after delivery: the consumer-side drop recycles.
+        for round in 0..100usize {
+            let (completion, ticket) = CompletionPool::checkout(&pool).expect("slot");
+            completion.complete(response(round));
+            drop(ticket);
+        }
+        // Every slot is back on the free lists.
+        let held: Vec<(Completion, Ticket)> =
+            (0..LANES).map(|_| CompletionPool::checkout(&pool).expect("slot")).collect();
+        assert_eq!(held.len(), LANES);
+    }
+
+    #[test]
+    fn concurrent_producers_and_consumers_lose_nothing() {
+        let pool = CompletionPool::new(16);
+        let mut joins = Vec::new();
+        for t in 0..4usize {
+            let pool = pool.clone();
+            joins.push(std::thread::spawn(move || {
+                for i in 0..500usize {
+                    let tag = t * 1000 + i;
+                    let (completion, ticket) =
+                        CompletionPool::checkout(&pool).expect("slot available");
+                    let producer = std::thread::spawn(move || completion.complete(response(tag)));
+                    assert_eq!(ticket.wait().config_used, Some(tag));
+                    producer.join().unwrap();
+                }
+            }));
+        }
+        for join in joins {
+            join.join().unwrap();
+        }
+    }
+}

@@ -1,8 +1,78 @@
 //! Serving metrics: request counts, latency distribution, batch sizes,
 //! per-configuration dispatch counts and the pool's scheduling counters
-//! (spilled routes, stolen batches, per-shard occupancy histogram).
+//! (spilled routes, stolen batches, per-shard occupancy histogram) —
+//! plus [`StripedCounter`], the lock-free per-thread-striped cell the
+//! coordinator frontend counts with on the submit path.
 
+use std::cell::Cell;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Cells per [`StripedCounter`]; also the lane count reused by the
+/// completion pool's free lists.
+const COUNTER_STRIPES: usize = 8;
+
+static NEXT_THREAD_STRIPE: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static THREAD_STRIPE: Cell<usize> = const { Cell::new(usize::MAX) };
+}
+
+/// Stable per-thread stripe index in `[0, modulus)`, assigned round-robin
+/// on a thread's first use. Shared by the striped frontend counters and
+/// the completion pool's free-list lanes so steady-state traffic from one
+/// thread stays on (mostly) thread-private cache lines.
+pub(crate) fn thread_stripe(modulus: usize) -> usize {
+    THREAD_STRIPE.with(|cell| {
+        let mut v = cell.get();
+        if v == usize::MAX {
+            v = NEXT_THREAD_STRIPE.fetch_add(1, Ordering::Relaxed);
+            cell.set(v);
+        }
+        v % modulus
+    })
+}
+
+/// One cache line per cell so concurrent writers never false-share.
+#[repr(align(64))]
+#[derive(Debug, Default)]
+struct CounterCell(AtomicUsize);
+
+/// A per-thread-striped counter: increments land on the calling thread's
+/// home cell and `sum()` folds the stripes at read time — the same
+/// write-local/fold-at-report structure `TelemetrySink` uses for its
+/// stripes, shrunk to a single integer. The coordinator frontend counts
+/// resolution failures with it instead of taking a `Mutex<Metrics>` on
+/// the submit path.
+#[derive(Debug)]
+pub struct StripedCounter {
+    cells: Vec<CounterCell>,
+}
+
+impl StripedCounter {
+    pub fn new() -> StripedCounter {
+        StripedCounter { cells: (0..COUNTER_STRIPES).map(|_| CounterCell::default()).collect() }
+    }
+
+    pub fn incr(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: usize) {
+        self.cells[thread_stripe(COUNTER_STRIPES)].0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Fold every stripe; exact once concurrent writers have quiesced.
+    pub fn sum(&self) -> usize {
+        self.cells.iter().map(|cell| cell.0.load(Ordering::Relaxed)).sum()
+    }
+}
+
+impl Default for StripedCounter {
+    fn default() -> StripedCounter {
+        StripedCounter::new()
+    }
+}
 
 /// Upper edges of the occupancy-histogram buckets: queue depths
 /// `0, 1, 2-3, 4-7, 8-15, 16-31, 32-63, 64+` observed at batch-drain time.
@@ -239,6 +309,25 @@ mod tests {
         assert_eq!(a.per_config[&XLA_BACKEND_KEY], 1);
         assert_eq!(a.latency_stats().unwrap().n, 3);
         assert_eq!(a.mean_batch_size(), 3.0);
+    }
+
+    #[test]
+    fn striped_counter_folds_exactly_across_threads() {
+        let counter = std::sync::Arc::new(StripedCounter::new());
+        let mut joins = Vec::new();
+        for _ in 0..4 {
+            let counter = counter.clone();
+            joins.push(std::thread::spawn(move || {
+                for _ in 0..10_000 {
+                    counter.incr();
+                }
+            }));
+        }
+        for join in joins {
+            join.join().unwrap();
+        }
+        counter.add(5);
+        assert_eq!(counter.sum(), 40_005);
     }
 
     #[test]

@@ -2,8 +2,10 @@
 //!
 //! * [`selector`] — the deployed-set + decision-tree runtime selector and
 //!   the end-to-end `tune_selector` pipeline (paper §4 + §5 combined).
-//! * [`cache`] — the memoized selector hot path (bounded shape -> artifact
-//!   resolution cache on the submit path).
+//! * [`cache`] — the memoized selector hot path (bounded, striped shape ->
+//!   artifact resolution cache on the submit path).
+//! * [`completion`] — pooled completion slots (atomic state + park/unpark),
+//!   the allocation-free replacement for per-request channels.
 //! * [`registry`] — maps GEMM requests to shipped AOT artifacts.
 //! * [`batcher`] — dynamic request batching by target executable, with
 //!   deadline-preserving handoff for stolen batches.
@@ -18,6 +20,7 @@
 
 pub mod batcher;
 pub mod cache;
+pub mod completion;
 pub mod metrics;
 pub mod registry;
 pub mod selector;
@@ -27,7 +30,8 @@ pub mod vgg;
 
 pub use batcher::{Batcher, BatcherConfig};
 pub use cache::{ResolutionCache, ResolvedKernel};
-pub use metrics::Metrics;
+pub use completion::{Completion, CompletionPool, Ticket};
+pub use metrics::{Metrics, StripedCounter};
 pub use registry::{KernelRegistry, Resolution};
 pub use selector::{tune_selector, tune_selector_with, SelectorPolicy};
 pub use server::{

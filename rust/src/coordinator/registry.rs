@@ -26,8 +26,9 @@ pub struct KernelRegistry {
     selector: SelectorHandle,
 }
 
-/// The outcome of a resolution, for metrics/inspection.
-#[derive(Clone, Debug, PartialEq, Eq)]
+/// The outcome of a resolution, for metrics/inspection. `Copy`: cloning a
+/// [`crate::coordinator::cache::ResolvedKernel`] must stay allocation-free.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Resolution {
     /// The selector's first choice was shipped.
     Direct,

@@ -1,18 +1,30 @@
-//! The serving loop: a load-aware, work-stealing executor pool.
+//! The serving loop: a load-aware, work-stealing executor pool with a
+//! lock-light submit fast path.
 //!
 //! Any number of client threads submit GEMM requests; the submit path
-//! resolves each to a shipped artifact through the memoized selector cache
-//! (which also attaches a devsim-informed per-dispatch cost hint), then
-//! routes it to one of N executor shards. Routing keeps **shape affinity**
-//! (hash of the resolved artifact path) as a *preference* — it is what
-//! keeps every executable cache hot on exactly one shard — but each shard
-//! exposes an atomic [`ShardLoad`] gauge (queue depth + estimated
-//! in-flight cost), and when the preferred shard's load exceeds a
-//! configurable imbalance threshold the request **spills** to the
-//! least-loaded shard instead. Independently, an idle shard **steals** a
-//! whole ready batch (one artifact group) from the most loaded peer's
-//! injector deque, so tail latency stops tracking the hottest shape even
-//! when the spill heuristic lags a bursty mix.
+//! resolves each to a shipped artifact through the striped memoized
+//! selector cache (which also attaches a devsim-informed per-dispatch cost
+//! hint), then routes it to one of N executor shards. A warm cache-hit
+//! submit touches no pool-global lock and performs **zero heap
+//! allocations** on the client thread: the resolution is an `Arc` clone
+//! out of a striped snapshot map, the response rendezvous is a reusable
+//! [`CompletionPool`] slot (atomic state + park/unpark) instead of a fresh
+//! `mpsc::channel` pair, frontend counters are striped atomic cells
+//! instead of a `Mutex<Metrics>`, and the shard injector pre-reserves its
+//! deque. [`Coordinator::submit_many`] batches the resolution, cost
+//! pricing, routing and gauge update across consecutive requests sharing a
+//! shape.
+//!
+//! Routing keeps **shape affinity** (memoized hash of the resolved
+//! artifact path) as a *preference* — it is what keeps every executable
+//! cache hot on exactly one shard — but each shard exposes an atomic
+//! [`ShardLoad`] gauge (queue depth + estimated in-flight cost), and when
+//! the preferred shard's load exceeds a configurable imbalance threshold
+//! the request **spills** to the least-loaded shard instead.
+//! Independently, an idle shard **steals** a whole ready batch (one
+//! artifact group) from the most loaded peer's injector deque, so tail
+//! latency stops tracking the hottest shape even when the spill heuristic
+//! lags a bursty mix.
 //!
 //! Each shard owns a private [`Backend`] instance (PJRT handles are not
 //! `Send`, so backends are constructed on the shard's own thread from a
@@ -22,19 +34,18 @@
 //! collected and merged into a pool-wide total; the merge is exact, so the
 //! pool totals equal the per-shard sums whatever spilled or was stolen.
 
-use std::collections::hash_map::DefaultHasher;
 use std::collections::VecDeque;
-use std::hash::{Hash, Hasher};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::batcher::{Batcher, BatcherConfig, Pending};
 use crate::coordinator::cache::{ResolutionCache, ResolvedKernel};
-use crate::coordinator::metrics::Metrics;
+use crate::coordinator::completion::{Completion, CompletionPool, Ticket};
+use crate::coordinator::metrics::{Metrics, StripedCounter};
 use crate::coordinator::registry::KernelRegistry;
 use crate::coordinator::selector::SelectorPolicy;
 use crate::dataset::GemmShape;
@@ -49,7 +60,6 @@ pub struct GemmRequest {
     pub shape: GemmShape,
     pub lhs: Vec<f32>,
     pub rhs: Vec<f32>,
-    pub respond: Sender<GemmResponse>,
 }
 
 #[derive(Debug)]
@@ -57,7 +67,8 @@ pub struct GemmResponse {
     pub result: Result<Vec<f32>, String>,
     /// The configuration that served the request (None = XLA backend).
     pub config_used: Option<usize>,
-    pub artifact: String,
+    /// The artifact path that served it (shared, not copied per response).
+    pub artifact: Arc<str>,
     pub latency: Duration,
 }
 
@@ -106,6 +117,10 @@ const SPILL_MIN_EXCESS_NS: u64 = 50_000;
 /// promptly, long enough to keep idle wakeups negligible.
 const IDLE_POLL: Duration = Duration::from_millis(5);
 
+/// Injector capacity pre-reserved per shard so steady-state pushes never
+/// reallocate on the client thread (the zero-allocation hit path).
+const INJECTOR_RESERVE: usize = 32;
+
 /// Atomic load gauge of one executor shard: how many requests it owns
 /// (injector + batcher + currently executing) and their summed estimated
 /// cost. Written by the router on submit, by the shard on completion, and
@@ -151,6 +166,9 @@ pub struct PoolConfig {
     pub batcher: BatcherConfig,
     /// Capacity of the memoized shape -> artifact selector cache.
     pub selector_cache: usize,
+    /// Completion slots pre-allocated for in-flight requests; submits
+    /// beyond this depth fall back to per-request heap slots.
+    pub completion_slots: usize,
     /// Router policy: pure shape affinity, or affinity with load spill.
     pub routing: Routing,
     /// Spill threshold: the preferred shard's load score must exceed
@@ -182,6 +200,7 @@ impl Default for PoolConfig {
             engine: EngineKind::default(),
             batcher: BatcherConfig::default(),
             selector_cache: 1024,
+            completion_slots: 1024,
             routing: Routing::default(),
             imbalance: 4.0,
             steal_min: 2,
@@ -240,9 +259,12 @@ struct Job {
     cost_ns: u64,
     /// True when the router sent this job off its affinity shard.
     spilled: bool,
+    /// The response rendezvous: a pooled slot (or a one-shot fallback).
+    /// Dropping it undelivered — a worker panic — delivers a synthetic
+    /// failure, so callers never hang.
+    completion: Completion,
 }
 
-#[derive(Default)]
 struct QueueInner {
     jobs: VecDeque<Job>,
     stop: Option<Sender<Metrics>>,
@@ -273,7 +295,10 @@ impl Drop for AliveGuard {
 impl ShardQueue {
     fn new() -> ShardQueue {
         ShardQueue {
-            inner: Mutex::new(QueueInner::default()),
+            inner: Mutex::new(QueueInner {
+                jobs: VecDeque::with_capacity(INJECTOR_RESERVE),
+                stop: None,
+            }),
             cv: Condvar::new(),
             load: ShardLoad::default(),
             alive: AtomicBool::new(true),
@@ -288,6 +313,20 @@ impl ShardQueue {
         self.cv.notify_one();
     }
 
+    /// Enqueue a whole run of jobs under one lock acquisition and one
+    /// load-gauge update — the `submit_many` amortization.
+    fn push_batch(&self, jobs: Vec<Job>) {
+        if jobs.is_empty() {
+            return;
+        }
+        let cost: u64 = jobs.iter().map(|j| j.cost_ns).sum();
+        self.load.add(jobs.len(), cost);
+        let mut inner = self.inner.lock().unwrap();
+        inner.jobs.extend(jobs);
+        drop(inner);
+        self.cv.notify_one();
+    }
+
     fn signal_stop(&self, reply: Sender<Metrics>) {
         let mut inner = self.inner.lock().unwrap();
         inner.stop = Some(reply);
@@ -296,11 +335,27 @@ impl ShardQueue {
     }
 }
 
+/// Frontend counters bumped on client threads at submit time: striped /
+/// atomic cells instead of a `Mutex<Metrics>`, because the submit path
+/// must not take a pool-global lock. Folded into the pool totals at
+/// shutdown.
+#[derive(Default)]
+struct FrontCounters {
+    /// Requests rejected before reaching a shard (resolution failures,
+    /// dead pool).
+    failures: StripedCounter,
+    /// Selector hot-swaps published via `swap_selector` (the background
+    /// retuner counts its own swaps in [`RetunerStats`]).
+    selector_swaps: AtomicUsize,
+}
+
 /// Handle to a running executor pool.
 pub struct Coordinator {
     registry: Arc<KernelRegistry>,
     cache: Arc<ResolutionCache>,
     telemetry: Arc<TelemetrySink>,
+    /// Reusable completion slots for in-flight requests.
+    completions: Arc<CompletionPool>,
     /// Background retuner (when `PoolConfig::retune` was set).
     retuner: Option<Retuner>,
     /// Single store for all retuner counters — the background thread and
@@ -308,12 +363,22 @@ pub struct Coordinator {
     retune_stats: Arc<Mutex<RetunerStats>>,
     queues: Arc<Vec<Arc<ShardQueue>>>,
     workers: Vec<Option<JoinHandle<()>>>,
-    /// Metrics for requests that never reach a shard (resolution failures),
-    /// plus pool-level tuning counters folded in at shutdown.
-    front: Mutex<Metrics>,
+    /// Striped frontend counters (requests that never reach a shard, plus
+    /// explicit swap counts); folded into the totals at shutdown.
+    front: FrontCounters,
     engine_name: &'static str,
     routing: Routing,
     imbalance: f64,
+}
+
+/// The synthetic response for a request rejected on the submit path.
+fn failure_response(error: String, t_submit: Instant) -> GemmResponse {
+    GemmResponse {
+        result: Err(error),
+        config_used: None,
+        artifact: Arc::from(""),
+        latency: t_submit.elapsed(),
+    }
 }
 
 impl Coordinator {
@@ -426,11 +491,12 @@ impl Coordinator {
             registry,
             cache,
             telemetry,
+            completions: CompletionPool::new(cfg.completion_slots),
             retuner,
             retune_stats,
             queues,
             workers,
-            front: Mutex::new(Metrics::default()),
+            front: FrontCounters::default(),
             engine_name: cfg.engine.name(),
             routing: cfg.routing,
             imbalance: cfg.imbalance.max(1.0),
@@ -474,7 +540,7 @@ impl Coordinator {
     /// Returns the new generation.
     pub fn swap_selector(&self, policy: SelectorPolicy) -> u64 {
         let generation = deploy_policy(&self.registry, &self.cache, policy);
-        self.front.lock().unwrap().selector_swaps += 1;
+        self.front.selector_swaps.fetch_add(1, Ordering::Relaxed);
         generation
     }
 
@@ -515,11 +581,10 @@ impl Coordinator {
     }
 
     /// Shape-affinity preference: requests resolving to the same artifact
-    /// prefer the same shard, keeping its executable cache hot.
-    fn shard_for(&self, artifact: &str) -> usize {
-        let mut h = DefaultHasher::new();
-        artifact.hash(&mut h);
-        (h.finish() as usize) % self.queues.len()
+    /// prefer the same shard, keeping its executable cache hot. The hash
+    /// is memoized on the resolution, so this is one modulo.
+    fn shard_for(&self, resolved: &ResolvedKernel) -> usize {
+        (resolved.affinity() as usize) % self.queues.len()
     }
 
     /// Pick the shard for a resolved request. Returns `(shard, spilled)`:
@@ -527,7 +592,7 @@ impl Coordinator {
     /// the least-loaded shard once the preferred shard's gauge exceeds
     /// `imbalance x` the minimum plus an absolute slack.
     fn route(&self, resolved: &ResolvedKernel) -> (usize, bool) {
-        let preferred = self.shard_for(&resolved.meta.path);
+        let preferred = self.shard_for(resolved);
         if self.queues.len() == 1 || self.routing == Routing::Affinity {
             return (preferred, false);
         }
@@ -553,67 +618,133 @@ impl Coordinator {
         }
     }
 
-    /// Submit a request; the response arrives on the returned receiver.
-    pub fn submit(
-        &self,
-        shape: GemmShape,
-        lhs: Vec<f32>,
-        rhs: Vec<f32>,
-    ) -> Receiver<GemmResponse> {
-        let (resp_tx, resp_rx) = channel();
+    /// Route a resolved request to a live shard. A panicked worker leaves
+    /// its queue alive but unserved: reroute new work to the least-loaded
+    /// live shard (work already queued on the dead shard can still be
+    /// rescued by the steal path). `None` when no live shard is left.
+    fn pick_shard(&self, resolved: &ResolvedKernel) -> Option<(usize, bool)> {
+        let (shard, spilled) = self.route(resolved);
+        if self.worker_alive(shard) {
+            Some((shard, spilled))
+        } else {
+            self.least_loaded_alive().map(|alt| (alt, true))
+        }
+    }
+
+    /// A pooled completion pair, falling back to a one-shot heap slot when
+    /// every pooled slot is in flight.
+    fn checkout_completion(&self) -> (Completion, Ticket) {
+        CompletionPool::checkout(&self.completions).unwrap_or_else(Completion::oneshot)
+    }
+
+    /// Submit a request; the response arrives on the returned ticket.
+    pub fn submit(&self, shape: GemmShape, lhs: Vec<f32>, rhs: Vec<f32>) -> Ticket {
         let t_submit = Instant::now();
+        let (completion, ticket) = self.checkout_completion();
         let resolved = match self.cache.resolve(&self.registry, &shape) {
             Ok(r) => r,
             Err(e) => {
-                self.front.lock().unwrap().failures += 1;
-                let _ = resp_tx.send(GemmResponse {
-                    result: Err(e),
-                    config_used: None,
-                    artifact: String::new(),
-                    latency: t_submit.elapsed(),
-                });
-                return resp_rx;
+                self.front.failures.incr();
+                completion.complete(failure_response(e, t_submit));
+                return ticket;
             }
         };
-        let (shard, spilled) = self.route(&resolved);
-        // A panicked worker leaves its queue alive but unserved: reroute
-        // new work to the least-loaded live shard (work already queued on
-        // the dead shard can still be rescued by the steal path), and fail
-        // fast instead of hanging the caller when no shard is left.
-        let (shard, spilled) = if self.worker_alive(shard) {
-            (shard, spilled)
-        } else {
-            match self.least_loaded_alive() {
-                Some(alt) => (alt, true),
-                None => {
-                    self.front.lock().unwrap().failures += 1;
-                    let _ = resp_tx.send(GemmResponse {
-                        result: Err("executor pool: every shard worker is dead".to_string()),
-                        config_used: None,
-                        artifact: String::new(),
-                        latency: t_submit.elapsed(),
-                    });
-                    return resp_rx;
-                }
+        let (shard, spilled) = match self.pick_shard(&resolved) {
+            Some(pick) => pick,
+            None => {
+                self.front.failures.incr();
+                completion.complete(failure_response(
+                    "executor pool: every shard worker is dead".to_string(),
+                    t_submit,
+                ));
+                return ticket;
             }
         };
         // Measured EWMA once telemetry is warm, devsim estimate while cold.
         let cost_ns = self.cache.dispatch_cost_ns(&resolved);
-        let req = GemmRequest { shape, lhs, rhs, respond: resp_tx };
-        self.queues[shard].push(Job { req, t_submit, resolved, cost_ns, spilled });
-        resp_rx
+        let req = GemmRequest { shape, lhs, rhs };
+        self.queues[shard].push(Job { req, t_submit, resolved, cost_ns, spilled, completion });
+        ticket
     }
 
-    /// Blocking convenience call.
+    /// Submit a batch of requests in one call; returns one [`Ticket`] per
+    /// request, in submission order. Consecutive requests sharing a shape
+    /// are resolved, cost-priced and routed **once**, and land on their
+    /// shard under a single lock acquisition with a single load-gauge
+    /// update — the batched fast path for callers that naturally produce
+    /// runs of equal shapes (a model replaying its GEMM sequence).
+    pub fn submit_many(&self, requests: Vec<(GemmShape, Vec<f32>, Vec<f32>)>) -> Vec<Ticket> {
+        let mut tickets = Vec::with_capacity(requests.len());
+        let mut iter = requests.into_iter().peekable();
+        while let Some((shape, lhs, rhs)) = iter.next() {
+            // Per-run stamp, not per-call: a later run must not arrive at
+            // the batcher pre-aged by the time earlier runs took to
+            // resolve and enqueue (its latency epoch and its max_wait
+            // deadline both derive from this instant).
+            let t_submit = Instant::now();
+            let mut run = vec![(lhs, rhs)];
+            while iter.peek().map_or(false, |(next, _, _)| *next == shape) {
+                let (_, lhs, rhs) = iter.next().expect("peeked");
+                run.push((lhs, rhs));
+            }
+            let resolved = match self.cache.resolve(&self.registry, &shape) {
+                Ok(r) => r,
+                Err(e) => {
+                    self.fail_requests(run.len(), &e, t_submit, &mut tickets);
+                    continue;
+                }
+            };
+            let (shard, spilled) = match self.pick_shard(&resolved) {
+                Some(pick) => pick,
+                None => {
+                    self.fail_requests(
+                        run.len(),
+                        "executor pool: every shard worker is dead",
+                        t_submit,
+                        &mut tickets,
+                    );
+                    continue;
+                }
+            };
+            let cost_ns = self.cache.dispatch_cost_ns(&resolved);
+            let mut jobs = Vec::with_capacity(run.len());
+            for (lhs, rhs) in run {
+                let (completion, ticket) = self.checkout_completion();
+                tickets.push(ticket);
+                jobs.push(Job {
+                    req: GemmRequest { shape, lhs, rhs },
+                    t_submit,
+                    resolved: resolved.clone(),
+                    cost_ns,
+                    spilled,
+                    completion,
+                });
+            }
+            self.queues[shard].push_batch(jobs);
+        }
+        tickets
+    }
+
+    /// Complete `n` tickets immediately with a submit-time failure.
+    fn fail_requests(&self, n: usize, error: &str, t_submit: Instant, tickets: &mut Vec<Ticket>) {
+        for _ in 0..n {
+            self.front.failures.incr();
+            let (completion, ticket) = self.checkout_completion();
+            completion.complete(failure_response(error.to_string(), t_submit));
+            tickets.push(ticket);
+        }
+    }
+
+    /// Blocking convenience call. Always returns `Ok`: submit-time and
+    /// execution failures surface inside [`GemmResponse::result`]. The
+    /// `Result` shell is kept for call-site compatibility.
     pub fn call(
         &self,
         shape: GemmShape,
         lhs: Vec<f32>,
         rhs: Vec<f32>,
     ) -> Result<GemmResponse, String> {
-        self.submit(shape, lhs, rhs)
-            .recv()
-            .map_err(|_| "coordinator shut down".to_string())
+        Ok(self.submit(shape, lhs, rhs).wait())
     }
 
     /// Stop every shard and return the merged pool metrics.
@@ -629,12 +760,6 @@ impl Coordinator {
             let _ = retuner.finish();
         }
         let tuning = self.retune_stats.lock().unwrap().clone();
-        {
-            let mut front = self.front.lock().unwrap();
-            front.selector_swaps += tuning.swaps;
-            front.retunes += tuning.retunes;
-            front.drift_trips += tuning.drift_trips;
-        }
         // Signal all shards first so they drain concurrently, then join.
         let mut replies = Vec::with_capacity(self.queues.len());
         for q in self.queues.iter() {
@@ -653,10 +778,16 @@ impl Coordinator {
             }
             per_shard.push(mrx.try_recv().unwrap_or_default());
         }
-        let mut total = self.front.lock().map(|m| m.clone()).unwrap_or_default();
+        let mut total = Metrics::default();
         for m in &per_shard {
             total.merge(m.clone());
         }
+        // Fold the striped frontend cells and the retuner's counters into
+        // the totals (shards never see these).
+        total.failures += self.front.failures.sum();
+        total.selector_swaps += self.front.selector_swaps.load(Ordering::Relaxed) + tuning.swaps;
+        total.retunes += tuning.retunes;
+        total.drift_trips += tuning.drift_trips;
         let (cache_hits, cache_misses) = self.cache.stats();
         PoolReport { per_shard, total, cache_hits, cache_misses, tuning }
     }
@@ -740,12 +871,11 @@ fn try_steal(
         // The oldest group is the batch closest to its deadline; taking
         // the whole group keeps the executable-cache story intact on both
         // sides.
-        let anchor =
-            inner.jobs.front().expect("len >= min_jobs >= 1").resolved.meta.path.clone();
+        let anchor = inner.jobs.front().expect("len >= min_jobs >= 1").resolved.artifact().clone();
         let mut stolen = Vec::new();
         let mut rest = VecDeque::with_capacity(inner.jobs.len());
         while let Some(job) = inner.jobs.pop_front() {
-            if stolen.len() < max_batch && job.resolved.meta.path == anchor {
+            if stolen.len() < max_batch && job.resolved.artifact() == &anchor {
                 stolen.push(job);
             } else {
                 rest.push_back(job);
@@ -795,7 +925,7 @@ fn shard_loop(
         // wait-clock starts at submit, so deadlines survive the handoff.
         let (jobs, stop) = take_injector(&my);
         for job in jobs {
-            let artifact = job.resolved.meta.path.clone();
+            let artifact = job.resolved.artifact().clone();
             batcher.push_pending(Pending { artifact, enqueued: job.t_submit, payload: job });
         }
         if let Some(reply) = stop {
@@ -819,7 +949,7 @@ fn shard_loop(
                 metrics.steals += 1;
                 metrics.stolen_requests += stolen.len();
                 for job in stolen {
-                    let artifact = job.resolved.meta.path.clone();
+                    let artifact = job.resolved.artifact().clone();
                     batcher.push_pending(Pending {
                         artifact,
                         enqueued: job.t_submit,
@@ -846,7 +976,7 @@ fn shard_loop(
 fn run_batch(
     backend: &mut dyn Backend,
     load: &ShardLoad,
-    artifact: &str,
+    artifact: &Arc<str>,
     group: Vec<Pending<Job>>,
     telemetry: &TelemetrySink,
     metrics: &mut Metrics,
@@ -861,16 +991,24 @@ fn run_batch(
     };
     for pending in group {
         let job = pending.payload;
-        let meta = &job.resolved.meta;
         let result = match &prepared {
             Ok(()) => {
-                match backend.execute_timed(meta, &job.req.shape, &job.req.lhs, &job.req.rhs)
-                {
+                let run = backend.execute_timed(
+                    &job.resolved.meta,
+                    &job.req.shape,
+                    &job.req.lhs,
+                    &job.req.rhs,
+                );
+                match run {
                     Ok((out, measured_secs)) => {
                         // Close the loop: the measured execution time of
                         // this (shape, config) cell feeds cost hints and
                         // the background retuner.
-                        telemetry.record(job.req.shape, meta.config_index, measured_secs);
+                        telemetry.record(
+                            job.req.shape,
+                            job.resolved.meta.config_index,
+                            measured_secs,
+                        );
                         Ok(out)
                     }
                     Err(e) => Err(e),
@@ -886,14 +1024,15 @@ fn run_batch(
             metrics.spilled += 1;
         }
         metrics.record_resolution(&job.resolved.resolution);
-        metrics.record_request(latency.as_secs_f64(), meta.config_index);
+        let config_used = job.resolved.meta.config_index;
+        metrics.record_request(latency.as_secs_f64(), config_used);
         // Release the gauge before responding: a blocking caller must see
         // an up-to-date load when it submits its next request.
         load.sub(1, job.cost_ns);
-        let _ = job.req.respond.send(GemmResponse {
+        job.completion.complete(GemmResponse {
             result,
-            config_used: meta.config_index,
-            artifact: artifact.to_string(),
+            config_used,
+            artifact: artifact.clone(),
             latency,
         });
     }
@@ -1100,16 +1239,24 @@ mod tests {
         assert_eq!(Routing::default().name(), "load-aware");
     }
 
-    /// Submit `n` requests of a 90/10 skewed mix asynchronously (all
-    /// receivers collected first, then drained), returning every result
-    /// in submission order plus the shutdown report.
-    fn run_skewed(n: usize, shards: usize, routing: Routing) -> (Vec<Vec<f32>>, PoolReport) {
+    /// Deterministic 90/10-skew request by global submission index.
+    fn skewed_input(i: usize) -> (GemmShape, Vec<f32>, Vec<f32>) {
         let hot = GemmShape::new(32, 32, 32, 1);
         let cold = [
             GemmShape::new(64, 64, 64, 1),
             GemmShape::new(32, 32, 32, 4),
             GemmShape::new(128, 128, 128, 1),
         ];
+        let shape = if i % 10 == 9 { cold[(i / 10) % cold.len()] } else { hot };
+        let lhs = fill_buffer(i as u32, shape.batch * shape.m * shape.k);
+        let rhs = fill_buffer((i + 13) as u32, shape.batch * shape.k * shape.n);
+        (shape, lhs, rhs)
+    }
+
+    /// Submit `n` requests of the 90/10 skewed mix asynchronously (all
+    /// tickets collected first, then drained), returning every result
+    /// in submission order plus the shutdown report.
+    fn run_skewed(n: usize, shards: usize, routing: Routing) -> (Vec<Vec<f32>>, PoolReport) {
         let coord = Coordinator::start_pool(
             PathBuf::from("/nonexistent-artifacts"),
             SelectorPolicy::Xla,
@@ -1118,9 +1265,7 @@ mod tests {
         .expect("coordinator start");
         let mut rxs = Vec::with_capacity(n);
         for i in 0..n {
-            let shape = if i % 10 == 9 { cold[(i / 10) % cold.len()] } else { hot };
-            let lhs = fill_buffer(i as u32, shape.batch * shape.m * shape.k);
-            let rhs = fill_buffer((i + 13) as u32, shape.batch * shape.k * shape.n);
+            let (shape, lhs, rhs) = skewed_input(i);
             rxs.push(coord.submit(shape, lhs, rhs));
         }
         let results: Vec<Vec<f32>> = rxs
@@ -1172,6 +1317,91 @@ mod tests {
             "a 90% hot-shape burst at imbalance=1.0 must spill\n{}",
             report.summary()
         );
+    }
+
+    #[test]
+    fn concurrent_submit_many_bit_identical_to_sequential_submit() {
+        // Tentpole acceptance: the same 1000-request 90/10 workload,
+        // submitted as four concurrent `submit_many` batches, must be
+        // bit-identical to sequential `submit`, and the folded (striped
+        // frontend + per-shard) counters must equal the per-shard sums.
+        let n = 1000;
+        let per_thread = n / 4;
+
+        // Sequential reference on a single shard.
+        let coord = sim_pool(1, SelectorPolicy::Xla);
+        let rxs: Vec<Ticket> = (0..n)
+            .map(|i| {
+                let (shape, lhs, rhs) = skewed_input(i);
+                coord.submit(shape, lhs, rhs)
+            })
+            .collect();
+        let base: Vec<Vec<f32>> =
+            rxs.into_iter().map(|t| t.wait().result.expect("gemm ok")).collect();
+        coord.stop();
+
+        // Concurrent submit_many on a 4-shard pool.
+        let coord = std::sync::Arc::new(sim_pool(4, SelectorPolicy::Xla));
+        let mut joins = Vec::new();
+        for t in 0..4usize {
+            let coord = coord.clone();
+            joins.push(std::thread::spawn(move || {
+                let chunk: Vec<(GemmShape, Vec<f32>, Vec<f32>)> =
+                    (t * per_thread..(t + 1) * per_thread).map(skewed_input).collect();
+                let tickets = coord.submit_many(chunk);
+                assert_eq!(tickets.len(), per_thread);
+                tickets
+                    .into_iter()
+                    .map(|ticket| ticket.wait().result.expect("gemm ok"))
+                    .collect::<Vec<Vec<f32>>>()
+            }));
+        }
+        let mut wide: Vec<Vec<f32>> = Vec::with_capacity(n);
+        for join in joins {
+            wide.extend(join.join().unwrap());
+        }
+        assert_eq!(base, wide, "submit_many must not change any result");
+
+        let report = std::sync::Arc::try_unwrap(coord)
+            .ok()
+            .expect("sole owner")
+            .stop_detailed();
+        assert_eq!(report.total.requests, n);
+        assert_eq!(report.total.failures, 0);
+        let sum = |f: fn(&Metrics) -> usize| -> usize {
+            report.per_shard.iter().map(f).sum()
+        };
+        assert_eq!(report.total.requests, sum(|m| m.requests));
+        assert_eq!(report.total.batches, sum(|m| m.batches));
+        assert_eq!(report.total.failures, sum(|m| m.failures));
+        assert_eq!(report.total.spilled, sum(|m| m.spilled));
+        assert_eq!(report.total.steals, sum(|m| m.steals));
+        assert_eq!(report.total.stolen_requests, sum(|m| m.stolen_requests));
+    }
+
+    #[test]
+    fn submit_many_preserves_order_and_reports_failures_inline() {
+        let coord = sim_pool(2, SelectorPolicy::Xla);
+        let ok_shape = GemmShape::new(64, 64, 64, 1);
+        let bad_shape = GemmShape::new(17, 19, 23, 1); // no artifact
+        let requests = vec![
+            (ok_shape, fill_buffer(1, 64 * 64), fill_buffer(2, 64 * 64)),
+            (ok_shape, fill_buffer(3, 64 * 64), fill_buffer(4, 64 * 64)),
+            (bad_shape, vec![0.0; 17 * 19], vec![0.0; 19 * 23]),
+            (ok_shape, fill_buffer(5, 64 * 64), fill_buffer(6, 64 * 64)),
+        ];
+        let tickets = coord.submit_many(requests);
+        assert_eq!(tickets.len(), 4);
+        let responses: Vec<GemmResponse> = tickets.into_iter().map(|t| t.wait()).collect();
+        assert!(responses[0].result.is_ok());
+        assert!(responses[1].result.is_ok());
+        assert!(responses[2].result.is_err(), "unknown shape fails in place");
+        assert!(responses[3].result.is_ok());
+        // Same-shape runs share one resolution: 2 requests in the first
+        // run hit the cache at most once past the initial miss.
+        let metrics = coord.stop();
+        assert_eq!(metrics.requests, 3, "only resolvable requests reach shards");
+        assert_eq!(metrics.failures, 1);
     }
 
     #[test]

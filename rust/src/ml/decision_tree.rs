@@ -475,6 +475,94 @@ impl TreeClassifier {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Flattened (SoA) inference.
+// ---------------------------------------------------------------------------
+
+/// Leaf marker in the flattened `feat` arrays.
+const FLAT_LEAF: u32 = u32::MAX;
+
+/// Flattened structure-of-arrays evaluator for a trained
+/// [`TreeClassifier`]: node features, thresholds and child pairs live in
+/// three parallel arrays, and descent picks the child by indexing with the
+/// comparison result instead of branching on enum variants. The per-node
+/// work is one bounds-checked load per array and one compare — the
+/// branch-predictable walk the serving hot path (cache misses, retuner
+/// candidate scoring) runs instead of matching on [`Node`].
+///
+/// Predictions are defined to be bit-identical to
+/// [`TreeClassifier::predict`] (same splits, same `<=` orientation, same
+/// last-max tie-break on leaf counts); `classify/codegen.rs` applies the
+/// same layout to destandardized thresholds for the compiled selector.
+#[derive(Clone, Debug)]
+pub struct FlatTree {
+    /// Split feature per node; `FLAT_LEAF` marks a leaf.
+    feat: Vec<u32>,
+    /// Split threshold per node (0.0 at leaves).
+    thr: Vec<f64>,
+    /// `[left, right]` child indices per node; at a leaf, `[class, class]`.
+    kids: Vec<[u32; 2]>,
+}
+
+impl FlatTree {
+    /// Flatten a trained classifier. Leaf payloads collapse to their
+    /// majority class with the same last-max tie-break as
+    /// [`TreeClassifier::predict`].
+    pub fn from_classifier(tree: &TreeClassifier) -> FlatTree {
+        let mut feat = Vec::with_capacity(tree.nodes.len());
+        let mut thr = Vec::with_capacity(tree.nodes.len());
+        let mut kids = Vec::with_capacity(tree.nodes.len());
+        for node in &tree.nodes {
+            match node {
+                Node::Leaf { payload } => {
+                    let cls = tree.leaf_counts[*payload]
+                        .iter()
+                        .enumerate()
+                        .max_by_key(|&(_, &c)| c)
+                        .map(|(i, _)| i)
+                        .unwrap_or(0) as u32;
+                    feat.push(FLAT_LEAF);
+                    thr.push(0.0);
+                    kids.push([cls, cls]);
+                }
+                Node::Split { feature, threshold, left, right } => {
+                    feat.push(*feature as u32);
+                    thr.push(*threshold);
+                    kids.push([*left as u32, *right as u32]);
+                }
+            }
+        }
+        FlatTree { feat, thr, kids }
+    }
+
+    /// Predicted class for a (standardized) feature row; identical to
+    /// [`TreeClassifier::predict`] on the classifier this was built from.
+    #[inline]
+    pub fn predict(&self, row: &[f64]) -> usize {
+        let mut i = 0usize;
+        loop {
+            let f = self.feat[i];
+            if f == FLAT_LEAF {
+                return self.kids[i][0] as usize;
+            }
+            let right = (row[f as usize] > self.thr[i]) as usize;
+            i = self.kids[i][right] as usize;
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.feat.len()
+    }
+
+    /// Decompose into the parallel arrays (feature, threshold, children);
+    /// `u32::MAX` in the feature array marks a leaf whose children both
+    /// hold the class. `classify::codegen` uses this to rebase thresholds
+    /// into raw-feature space without re-implementing the flattening.
+    pub fn into_parts(self) -> (Vec<u32>, Vec<f64>, Vec<[u32; 2]>) {
+        (self.feat, self.thr, self.kids)
+    }
+}
+
 /// Median split on the first feature with more than one distinct value,
 /// honoring `min_leaf`; used when no threshold shows positive improvement.
 fn fallback_median_split(x: &Matrix, idx: &[usize], min_leaf: usize) -> Option<BestSplit> {
@@ -639,6 +727,33 @@ mod tests {
         let b = TreeClassifier::fit(&x, &y, &params);
         let preds_equal = (0..x.rows).all(|i| a.predict(x.row(i)) == b.predict(x.row(i)));
         assert!(preds_equal);
+    }
+
+    #[test]
+    fn flat_tree_matches_reference_walk_on_xor() {
+        let (x, y) = xor_data();
+        let tree = TreeClassifier::fit(&x, &y, &TreeParams::default());
+        let flat = FlatTree::from_classifier(&tree);
+        assert_eq!(flat.n_nodes(), tree.nodes.len());
+        for i in 0..x.rows {
+            assert_eq!(flat.predict(x.row(i)), tree.predict(x.row(i)), "row {i}");
+        }
+        // Off-grid probes exercise both branch directions at every split.
+        for probe in [[-0.5, -0.5], [0.5, 0.5], [1.5, -0.2], [0.2, 1.5]] {
+            assert_eq!(flat.predict(&probe), tree.predict(&probe), "{probe:?}");
+        }
+    }
+
+    #[test]
+    fn flat_tree_single_leaf_tree() {
+        // A pure training set yields a single-leaf tree; the flat walk
+        // must terminate immediately with that class.
+        let x = Matrix::from_rows(&[vec![0.0], vec![1.0], vec![2.0]]);
+        let y = vec![4usize, 4, 4];
+        let tree = TreeClassifier::fit(&x, &y, &TreeParams::default());
+        let flat = FlatTree::from_classifier(&tree);
+        assert_eq!(flat.n_nodes(), 1);
+        assert_eq!(flat.predict(&[7.0]), 4);
     }
 
     #[test]

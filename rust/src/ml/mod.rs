@@ -19,7 +19,7 @@ pub mod random_forest;
 pub mod spectral;
 pub mod svm;
 
-pub use decision_tree::{TreeClassifier, TreeParams, TreeRegressor};
+pub use decision_tree::{FlatTree, TreeClassifier, TreeParams, TreeRegressor};
 pub use hdbscan::{hdbscan, Hdbscan, HdbscanParams};
 pub use kmeans::{kmeans, KMeans, KMeansParams};
 pub use knn::Knn;

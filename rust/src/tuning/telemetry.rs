@@ -113,6 +113,43 @@ impl TelemetrySink {
             .map(|c| c.ewma_secs)
     }
 
+    /// Seed the sink from a persisted snapshot — telemetry persistence
+    /// across restarts. Each absorbed cell is installed with its saved
+    /// count / mean / EWMA, so cost-hint handoff and retune state resume
+    /// where the previous process left off. Cells already measured in
+    /// *this* process win over the snapshot (live data is fresher), and
+    /// the per-stripe safety cap applies as usual.
+    pub fn absorb(&self, snapshot: &TelemetrySnapshot) {
+        for cell in &snapshot.cells {
+            if cell.count == 0
+                || !cell.ewma_secs.is_finite()
+                || cell.ewma_secs <= 0.0
+                || !cell.mean_secs.is_finite()
+                || cell.mean_secs <= 0.0
+            {
+                continue;
+            }
+            let key = (cell.shape, cell.config);
+            let mut stripe = self.stripes[self.stripe(&cell.shape)].lock().unwrap();
+            if stripe.contains_key(&key) {
+                continue; // live measurements win over persisted state
+            }
+            if stripe.len() >= MAX_CELLS_PER_STRIPE {
+                continue; // safety cap, as in record()
+            }
+            stripe.insert(
+                key,
+                Cell {
+                    count: cell.count,
+                    sum_secs: cell.mean_secs * cell.count as f64,
+                    ewma_secs: cell.ewma_secs,
+                },
+            );
+            drop(stripe);
+            self.total.fetch_add(cell.count, Ordering::Relaxed);
+        }
+    }
+
     /// Consistent point-in-time copy of every cell, deterministically
     /// ordered (by shape dims, then config). Stripes are locked one at a
     /// time, so a snapshot never blocks the serving path for long.
@@ -178,6 +215,48 @@ impl TelemetrySnapshot {
     /// Look one cell up.
     pub fn cell(&self, shape: &GemmShape, config: Option<usize>) -> Option<&TelemetryCell> {
         self.cells.iter().find(|c| c.shape == *shape && c.config == config)
+    }
+
+    /// Parse a `kernelsel-telemetry-v1` document (the inverse of
+    /// [`TelemetrySnapshot::to_json`]); the derived `gflops` field is
+    /// ignored on input. Feed the result to [`TelemetrySink::absorb`] to
+    /// restore retune state across restarts.
+    pub fn from_json(doc: &Json) -> Result<TelemetrySnapshot, String> {
+        if doc.get("schema").and_then(|s| s.as_str()) != Some("kernelsel-telemetry-v1") {
+            return Err("not a kernelsel-telemetry-v1 document".to_string());
+        }
+        let raw_cells = doc
+            .get("cells")
+            .and_then(|c| c.as_arr())
+            .ok_or_else(|| "telemetry document has no cells array".to_string())?;
+        let mut cells = Vec::with_capacity(raw_cells.len());
+        for (i, cell) in raw_cells.iter().enumerate() {
+            let dim = |key: &str| {
+                cell.get(key)
+                    .and_then(|v| v.as_usize())
+                    .ok_or_else(|| format!("cell {i}: missing/invalid {key}"))
+            };
+            let num = |key: &str| {
+                cell.get(key)
+                    .and_then(|v| v.as_f64())
+                    .ok_or_else(|| format!("cell {i}: missing/invalid {key}"))
+            };
+            let config = match cell.get("config") {
+                Some(v) if v.is_null() => None,
+                Some(v) => {
+                    Some(v.as_usize().ok_or_else(|| format!("cell {i}: invalid config"))?)
+                }
+                None => return Err(format!("cell {i}: missing config")),
+            };
+            cells.push(TelemetryCell {
+                shape: GemmShape::new(dim("m")?, dim("k")?, dim("n")?, dim("batch")?),
+                config,
+                count: dim("count")? as u64,
+                mean_secs: num("mean_secs")?,
+                ewma_secs: num("ewma_secs")?,
+            });
+        }
+        Ok(TelemetrySnapshot { cells })
     }
 
     /// The snapshot as JSON (`kernelsel-telemetry-v1`; schema documented in
@@ -291,6 +370,101 @@ mod tests {
                 assert!(cell.get(key).is_some(), "missing {key}");
             }
         }
+    }
+
+    #[test]
+    fn snapshot_json_roundtrip_restores_the_sink() {
+        // Satellite acceptance: snapshot -> JSON text -> parse -> absorb
+        // must reproduce every cell exactly (counts, means, EWMAs), so
+        // retune state survives a restart.
+        let sink = TelemetrySink::new(2, 0.25);
+        let a = GemmShape::new(32, 32, 32, 1);
+        let b = GemmShape::new(512, 784, 512, 1);
+        sink.record(a, Some(3), 1.25e-4);
+        sink.record(a, Some(3), 2.5e-4);
+        sink.record(a, None, 7.5e-3);
+        sink.record(b, Some(610), 3.3e-3);
+        let before = sink.snapshot();
+        let text = before.to_json().to_string();
+
+        let parsed = crate::util::json::parse(&text).expect("well-formed JSON");
+        let restored_snapshot = TelemetrySnapshot::from_json(&parsed).expect("valid schema");
+        let fresh = TelemetrySink::new(2, 0.25);
+        fresh.absorb(&restored_snapshot);
+        assert_eq!(fresh.total_samples(), sink.total_samples());
+        let after = fresh.snapshot();
+        assert_eq!(after.cells.len(), before.cells.len());
+        for (x, y) in before.cells.iter().zip(after.cells.iter()) {
+            assert_eq!(x.shape, y.shape);
+            assert_eq!(x.config, y.config);
+            assert_eq!(x.count, y.count);
+            assert!((x.mean_secs - y.mean_secs).abs() <= 1e-15 * x.mean_secs.abs());
+            assert_eq!(x.ewma_secs, y.ewma_secs, "f64 JSON round-trip is exact");
+        }
+        // The restored EWMA drives cost hints exactly as before.
+        assert_eq!(fresh.measured_cost_secs(&a, Some(3)), sink.measured_cost_secs(&a, Some(3)));
+    }
+
+    #[test]
+    fn absorb_prefers_live_cells_and_skips_garbage() {
+        let sink = TelemetrySink::new(1, 1.0);
+        sink.record(shape(), Some(5), 2e-3); // live measurement
+        let snapshot = TelemetrySnapshot {
+            cells: vec![
+                // Conflicts with the live cell: must lose.
+                TelemetryCell {
+                    shape: shape(),
+                    config: Some(5),
+                    count: 99,
+                    mean_secs: 1e-3,
+                    ewma_secs: 1e-3,
+                },
+                // Fresh cell: must install.
+                TelemetryCell {
+                    shape: GemmShape::new(32, 32, 32, 1),
+                    config: Some(7),
+                    count: 4,
+                    mean_secs: 5e-4,
+                    ewma_secs: 6e-4,
+                },
+                // Garbage: dropped silently.
+                TelemetryCell {
+                    shape: shape(),
+                    config: Some(8),
+                    count: 0,
+                    mean_secs: 1e-3,
+                    ewma_secs: 1e-3,
+                },
+                TelemetryCell {
+                    shape: shape(),
+                    config: Some(9),
+                    count: 2,
+                    mean_secs: -1.0,
+                    ewma_secs: 1e-3,
+                },
+            ],
+        };
+        sink.absorb(&snapshot);
+        assert_eq!(sink.measured_cost_secs(&shape(), Some(5)), Some(2e-3), "live wins");
+        let restored = sink.measured_cost_secs(&GemmShape::new(32, 32, 32, 1), Some(7));
+        assert_eq!(restored, Some(6e-4));
+        assert!(sink.measured_cost_secs(&shape(), Some(8)).is_none());
+        assert!(sink.measured_cost_secs(&shape(), Some(9)).is_none());
+        assert_eq!(sink.total_samples(), 1 + 4);
+    }
+
+    #[test]
+    fn from_json_rejects_bad_documents() {
+        let bad_schema = crate::util::json::parse(r#"{"schema":"nope","cells":[]}"#).unwrap();
+        assert!(TelemetrySnapshot::from_json(&bad_schema).is_err());
+        let no_cells =
+            crate::util::json::parse(r#"{"schema":"kernelsel-telemetry-v1"}"#).unwrap();
+        assert!(TelemetrySnapshot::from_json(&no_cells).is_err());
+        let bad_cell = crate::util::json::parse(
+            r#"{"schema":"kernelsel-telemetry-v1","cells":[{"m":1,"k":1,"n":1}]}"#,
+        )
+        .unwrap();
+        assert!(TelemetrySnapshot::from_json(&bad_cell).is_err());
     }
 
     #[test]

@@ -254,3 +254,123 @@ print(f"\nfinal {L_final*1e6:.1f} us vs cold {L0*1e6:.1f} us "
       f"({L0/L_final:.2f}x better); oracle {L_opt*1e6:.1f} us")
 assert L_final < L0, "converged retune must strictly improve mean latency"
 print("OK: retune loop strictly improves mean latency at convergence")
+
+# ---- flattened-tree evaluator sanity check ----------------------------------
+# Mirrors rust/src/ml/decision_tree.rs: an exact-fit CART classifier
+# (DecisionTreeA: unbounded depth, gini splits, last-max tie-break) trained on
+# the shipped selector's labels (per-bucket best shipped config under
+# devsim(i7)), then flattened into the SoA arrays (feat / thr / kids) the
+# serving hot path walks. The flat branchless walk must agree with the
+# recursive reference on every bucket, and the exact-fit property means both
+# must reproduce the training labels.
+
+def features(shape):
+    m, k, n, b = [float(x) for x in shape]
+    return [math.log2(m), math.log2(k), math.log2(n), math.log2(b),
+            math.log2(m * n * b), math.log2(m * k * n * b),
+            math.log2(m / n), math.log2(k / math.sqrt(m * n))]
+
+def gini(counts):
+    total = sum(counts.values())
+    if total == 0:
+        return 0.0
+    return 1.0 - sum((c / total) ** 2 for c in counts.values())
+
+def best_split(rows, labels):
+    """Best (feature, threshold) by gini improvement; None when pure."""
+    n = len(rows)
+    if n < 2 or len(set(labels)) == 1:
+        return None
+    from collections import Counter
+    parent = gini(Counter(labels))
+    best = None
+    for f in range(len(rows[0])):
+        order = sorted(range(n), key=lambda i: rows[i][f])
+        for pos in range(1, n):
+            lo, hi = rows[order[pos - 1]][f], rows[order[pos]][f]
+            if hi <= lo:
+                continue
+            left = Counter(labels[i] for i in order[:pos])
+            right = Counter(labels[i] for i in order[pos:])
+            score = parent - (pos / n) * gini(left) - ((n - pos) / n) * gini(right)
+            if best is None or score > best[0] + 1e-12:
+                best = (score, f, (lo + hi) / 2.0)
+    if best is None or best[0] <= 1e-12:
+        return None
+    return best[1], best[2]
+
+def build_tree(rows, labels):
+    """Nodes as dicts; exact fit (distinct rows, min_leaf=1)."""
+    nodes = []
+
+    def rec(idx):
+        me = len(nodes)
+        nodes.append(None)
+        sub_rows = [rows[i] for i in idx]
+        sub_labels = [labels[i] for i in idx]
+        split = best_split(sub_rows, sub_labels)
+        if split is None:
+            from collections import Counter
+            counts = Counter(sub_labels)
+            top = max(counts.values())
+            # Last-max tie-break, mirroring max_by_key in Rust.
+            cls = [c for c in counts if counts[c] == top][-1]
+            nodes[me] = dict(leaf=True, cls=cls)
+            return me
+        f, t = split
+        left = [i for i in idx if rows[i][f] <= t]
+        right = [i for i in idx if rows[i][f] > t]
+        nodes[me] = dict(leaf=False, f=f, t=t,
+                         l=rec(left), r=rec(right))
+        return me
+
+    rec(list(range(len(rows))))
+    return nodes
+
+def predict_recursive(nodes, row):
+    i = 0
+    while True:
+        node = nodes[i]
+        if node["leaf"]:
+            return node["cls"]
+        i = node["l"] if row[node["f"]] <= node["t"] else node["r"]
+
+def flatten_tree(nodes):
+    """SoA arrays exactly like FlatTree: feat (None=leaf), thr, kids."""
+    LEAF = None
+    feat, thr, kids = [], [], []
+    for node in nodes:
+        if node["leaf"]:
+            feat.append(LEAF)
+            thr.append(0.0)
+            kids.append((node["cls"], node["cls"]))
+        else:
+            feat.append(node["f"])
+            thr.append(node["t"])
+            kids.append((node["l"], node["r"]))
+    return feat, thr, kids
+
+def predict_flat(flat, row):
+    feat, thr, kids = flat
+    i = 0
+    while True:
+        f = feat[i]
+        if f is None:
+            return kids[i][0]
+        i = kids[i][1 if row[f] > thr[i] else 0]
+
+shipped_labels = [min(POOL, key=lambda c: secs("i7-6700k", s, c)) for s in BUCKETS]
+rows = [features(s) for s in BUCKETS]
+tree_nodes = build_tree(rows, shipped_labels)
+flat = flatten_tree(tree_nodes)
+mismatch = 0
+for s, row, label in zip(BUCKETS, rows, shipped_labels):
+    rec_pick = predict_recursive(tree_nodes, row)
+    flat_pick = predict_flat(flat, row)
+    assert flat_pick == rec_pick, f"flat walk diverges from recursive at {s}"
+    if rec_pick != label:
+        mismatch += 1
+assert mismatch == 0, f"exact-fit tree missed {mismatch}/{len(BUCKETS)} training buckets"
+n_leaves = sum(1 for f in flat[0] if f is None)
+print(f"OK: flattened SoA evaluator == recursive CART on all {len(BUCKETS)} buckets "
+      f"({len(flat[0])} nodes, {n_leaves} leaves, exact fit on the shipped selector)")
