@@ -9,6 +9,10 @@
 //!         --retune-interval 150 --drift-threshold 1.2 --require-swap
 //!     cargo run --release --example serve -- --telemetry-out /tmp/telemetry.json
 //!     cargo run --release --example serve -- --telemetry-in /tmp/telemetry.json
+//!     cargo run --release --example serve -- --admission bounded \
+//!         --max-inflight 64 --max-queue-us 5000
+//!     cargo run --release --example serve -- --admission deadline-shed \
+//!         --max-queue-us 2000
 //!
 //! Clients submit mixed-shape GEMM requests; the submit path resolves each
 //! to a deployed kernel via the memoized decision-tree selector and routes
@@ -33,6 +37,13 @@
 //! `kernelsel-telemetry-v1` JSON at shutdown, and `--telemetry-in PATH`
 //! seeds the sink from such a file at startup — measured cost hints and
 //! retune state survive restarts instead of re-warming from nothing.
+//!
+//! `--admission unbounded|bounded|deadline-shed` picks the overload
+//! policy (default unbounded — accept everything). `--max-inflight N`
+//! caps pool-wide in-flight requests for `bounded`; `--max-queue-us N`
+//! is the shared budget knob: the per-shard queue-time budget for
+//! `bounded` (admit + shed-on-drain) and the end-to-end deadline for
+//! `deadline-shed`. Rejected and shed counts print at shutdown.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -40,7 +51,7 @@ use std::time::{Duration, Instant};
 
 use kernelsel::classify::codegen::CompiledTree;
 use kernelsel::classify::{ClassifierKind, KernelClassifier};
-use kernelsel::coordinator::{Coordinator, PoolConfig, Routing, SelectorPolicy};
+use kernelsel::coordinator::{AdmissionPolicy, Coordinator, PoolConfig, Routing, SelectorPolicy};
 use kernelsel::dataset::{benchmark_shapes, config_by_name, GemmShape};
 use kernelsel::devsim::{generate_dataset, profile_by_name};
 use kernelsel::engine::EngineKind;
@@ -113,6 +124,15 @@ fn main() -> Result<(), String> {
     if require_swap && retune.is_none() {
         return Err("--require-swap needs --retune-interval".to_string());
     }
+    let max_inflight = flag("--max-inflight", 256);
+    let max_queue_us = flag("--max-queue-us", 5_000) as u64;
+    let admission = match flag_str("--admission") {
+        Some(v) => AdmissionPolicy::by_name(&v, max_inflight, max_queue_us * 1_000)
+            .ok_or_else(|| {
+                format!("unknown --admission {v:?} (unbounded|bounded|deadline-shed)")
+            })?,
+        None => AdmissionPolicy::Unbounded,
+    };
     let dir = PathBuf::from("artifacts");
     // Real artifacts when `make artifacts` has run; synthetic deployment
     // (served by the SimBackend) otherwise.
@@ -133,6 +153,7 @@ fn main() -> Result<(), String> {
         engine: EngineKind::Sim { profile },
         routing,
         imbalance,
+        admission,
         retune: retune.clone(),
         // The policy above is tuned on the i7-6700k dataset; pricing the
         // hints on the same device makes serving any other --profile show
@@ -142,12 +163,13 @@ fn main() -> Result<(), String> {
     };
     println!(
         "starting coordinator: {} shard(s), policy={}, backend={} ({profile}), \
-         routing={} (imbalance {:.1}), retune={}",
+         routing={} (imbalance {:.1}), admission={}, retune={}",
         shards,
         policy.name(),
         pool.engine.name(),
         pool.routing.name(),
         pool.imbalance,
+        pool.admission.name(),
         match &retune {
             Some(cfg) => format!("every {:?} (drift > {:.2}x)", cfg.interval, cfg.drift_threshold),
             None => "off".to_string(),
@@ -260,6 +282,15 @@ fn main() -> Result<(), String> {
         latency_sum / ok.max(1) as f64 * 1e3
     );
     println!("{}", report.summary());
+    if !admission.is_unbounded() {
+        println!(
+            "admission ({}): rejected={} shed={} inflight_peak={}",
+            admission.name(),
+            report.total.rejected,
+            report.total.shed,
+            report.total.inflight_peak
+        );
+    }
     if require_swap && report.total.selector_swaps == 0 {
         return Err("no selector swap observed (drift never retuned the pool)".to_string());
     }

@@ -11,11 +11,12 @@
 
 use crate::classify::{KernelClassifier, Standardizer};
 use crate::dataset::shapes::FEATURE_NAMES;
-use crate::ml::decision_tree::{FlatTree, TreeClassifier};
+use crate::ml::decision_tree::{FLAT_LEAF, FlatTree, TreeClassifier};
 
-/// Leaf marker in the flattened `feat` array; mirrors
-/// `ml::decision_tree::FlatTree`.
-const LEAF: u32 = u32::MAX;
+/// Leaf marker in the flattened `feat` array — the shared
+/// [`FlatTree::into_parts`] wire contract, under the module's historical
+/// local name.
+const LEAF: u32 = FLAT_LEAF;
 
 /// Flat decision-tree selector in structure-of-arrays layout: node
 /// features, destandardized thresholds and child pairs live in three

@@ -1,0 +1,379 @@
+//! Admission control and overload shedding for the executor pool.
+//!
+//! The serving story of the paper — a small deployed kernel set plus a
+//! cheap learned selector — only holds in production if the dispatch
+//! layer stays predictable when offered load exceeds capacity. Without
+//! admission control an open burst queues without bound: every request is
+//! eventually served, but every request also waits behind the whole
+//! backlog, so latency collapses for all of them (classic congestion
+//! collapse). This module bounds the damage by refusing work the pool
+//! cannot serve in time, *before* it costs anything:
+//!
+//! * admission runs on the submit path **after** routing picked a shard
+//!   (so the backlog estimate is the gauge of the shard that would serve
+//!   the request) and **before** a completion slot is taken — a rejected
+//!   request allocates nothing, takes no slab capacity and never touches
+//!   an injector;
+//! * rejections surface as a typed [`SubmitError`] carried inside the
+//!   returned [`crate::coordinator::completion::Ticket`], so callers get
+//!   per-request outcomes (including from `submit_many` partial
+//!   admission) and a `retry_after_hint` they can feed into client-side
+//!   backoff;
+//! * work that was admitted but then aged past its queue budget while
+//!   waiting is **shed** by the owning shard at drain time (see
+//!   [`crate::coordinator::batcher::Batcher::shed_overdue`]) instead of
+//!   being served pointlessly late.
+//!
+//! All cost/backlog arithmetic is integer nanoseconds on the same scale
+//! as the [`crate::coordinator::server::ShardLoad`] gauges (devsim-priced
+//! hints, measured-EWMA once telemetry warms). The [`DeadlineShed`]
+//! predicate is a pure function ([`deadline_would_shed`]) so the
+//! toolchain-free Python port in `tools/devsim_check.py` can verify it on
+//! a grid of synthetic gauge states.
+//!
+//! [`DeadlineShed`]: AdmissionPolicy::DeadlineShed
+
+use std::time::Duration;
+
+/// Floor for `retry_after_hint` values so a hint is never zero (a zero
+/// hint reads as "retry immediately", which defeats backoff).
+pub const MIN_RETRY_HINT_NS: u64 = 1_000;
+
+/// Why the admission policy refused a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The pool-wide in-flight count or the routed shard's queue-time
+    /// budget is exhausted ([`AdmissionPolicy::BoundedQueue`]).
+    QueueFull,
+    /// The routed shard's backlog plus this request's own cost already
+    /// exceeds the deadline budget ([`AdmissionPolicy::DeadlineShed`]):
+    /// even if admitted now, the response would arrive too late.
+    DeadlineUnmeetable,
+}
+
+impl RejectReason {
+    /// Stable lower-case label (metrics, logs, bench JSON).
+    pub fn name(&self) -> &'static str {
+        match self {
+            RejectReason::QueueFull => "queue-full",
+            RejectReason::DeadlineUnmeetable => "deadline-unmeetable",
+        }
+    }
+}
+
+/// A typed submit-path refusal, delivered through the returned
+/// [`crate::coordinator::completion::Ticket`] without allocating.
+///
+/// `Copy` is deliberate: constructing and returning a rejection must not
+/// disturb the PR-4 zero-allocation submit fast path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The admission policy refused the request before it was queued.
+    Rejected {
+        /// Which budget was exhausted.
+        reason: RejectReason,
+        /// Rough estimate of when the refused budget may have drained
+        /// enough for a retry to be admitted. A hint, not a promise —
+        /// derived from the same gauge estimates admission itself uses.
+        retry_after_hint: Option<Duration>,
+    },
+}
+
+impl SubmitError {
+    /// The rejection reason.
+    pub fn reason(&self) -> RejectReason {
+        match self {
+            SubmitError::Rejected { reason, .. } => *reason,
+        }
+    }
+
+    /// The backoff hint, if the policy could estimate one.
+    pub fn retry_after_hint(&self) -> Option<Duration> {
+        match self {
+            SubmitError::Rejected { retry_after_hint, .. } => *retry_after_hint,
+        }
+    }
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Rejected { reason, retry_after_hint } => {
+                write!(f, "admission rejected: {}", reason.name())?;
+                if let Some(hint) = retry_after_hint {
+                    write!(f, " (retry after ~{}us)", hint.as_micros())?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// The pure [`AdmissionPolicy::DeadlineShed`] reject predicate: a request
+/// whose routed shard already owes `backlog_ns` of estimated work cannot
+/// finish its own `cost_ns` dispatch within `deadline_ns`. Saturating, so
+/// pathological gauge values reject rather than wrap.
+///
+/// Kept as a free function so `tools/devsim_check.py` can port and verify
+/// it bit-for-bit on a grid of synthetic gauge states.
+pub fn deadline_would_shed(cost_ns: u64, backlog_ns: u64, deadline_ns: u64) -> bool {
+    backlog_ns.saturating_add(cost_ns) > deadline_ns
+}
+
+/// How the pool decides whether to accept a request at submit time.
+///
+/// Budgets are integer nanoseconds on the shard-load-gauge scale: the
+/// devsim-priced dispatch cost hints (measured EWMA once telemetry is
+/// warm) plus the fixed per-queued-request overhead the gauges charge.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum AdmissionPolicy {
+    /// Accept everything — the pre-admission behavior and the default.
+    /// The submit path takes a zero-cost early exit: no gauge scans, no
+    /// peak tracking, bit-identical dispatch to a pool without admission.
+    #[default]
+    Unbounded,
+    /// Bound both the pool-wide in-flight count and the routed shard's
+    /// estimated queue time. Work that was admitted but has waited longer
+    /// than `max_queue_ns` *wall-clock* by the time its shard drains it
+    /// is shed there instead of served late (the drain-side half of the
+    /// same budget). The shards clamp the shed budget to at least twice
+    /// the batcher's `max_wait`: time spent inside the deliberate
+    /// batching window is never treated as overload.
+    BoundedQueue {
+        /// Pool-wide cap on requests in flight (queued + executing).
+        max_inflight: usize,
+        /// Per-shard backlog budget: compared against the *gauge* score
+        /// at admit and against *wall-clock* wait at shed-on-drain. For
+        /// native backends the two scales coincide once telemetry warms
+        /// (measured wall EWMAs feed the gauges); under the unpaced
+        /// `SimBackend` they deliberately diverge — gauges carry
+        /// simulated device-seconds while the host GEMM sets wall time —
+        /// so budgets there bound the two halves on different clocks.
+        max_queue_ns: u64,
+    },
+    /// Reject any request whose estimated completion time — the routed
+    /// shard's backlog plus the request's own cost hint — already exceeds
+    /// this deadline. The admitted subset is therefore latency-bounded
+    /// *to the accuracy of the backlog estimate*: the gauge is read
+    /// without a reservation (that is what keeps this policy at one
+    /// atomic load per submit), so N submitters racing through admission
+    /// — or one `submit_many` run, which judges its requests against a
+    /// per-run snapshot advanced locally — can each admit against the
+    /// same snapshot and overshoot the deadline by up to the other
+    /// racers' admitted work. Everything else fails fast with a retry
+    /// hint; there is no drain-side shed (see
+    /// [`AdmissionPolicy::queue_budget`]).
+    DeadlineShed {
+        /// End-to-end deadline budget (gauge ns).
+        deadline_ns: u64,
+    },
+}
+
+impl AdmissionPolicy {
+    /// Stable policy label (flags, metrics, bench JSON).
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdmissionPolicy::Unbounded => "unbounded",
+            AdmissionPolicy::BoundedQueue { .. } => "bounded-queue",
+            AdmissionPolicy::DeadlineShed { .. } => "deadline-shed",
+        }
+    }
+
+    /// Parse a `--admission` style flag value; `max_inflight` and
+    /// `budget_ns` fill the knobs of the bounded policies (`budget_ns` is
+    /// `max_queue_ns` for `bounded-queue`, `deadline_ns` for
+    /// `deadline-shed`).
+    pub fn by_name(name: &str, max_inflight: usize, budget_ns: u64) -> Option<AdmissionPolicy> {
+        match name {
+            "unbounded" => Some(AdmissionPolicy::Unbounded),
+            "bounded" | "bounded-queue" | "bounded_queue" => {
+                Some(AdmissionPolicy::BoundedQueue { max_inflight, max_queue_ns: budget_ns })
+            }
+            "deadline-shed" | "deadline_shed" => {
+                Some(AdmissionPolicy::DeadlineShed { deadline_ns: budget_ns })
+            }
+            _ => None,
+        }
+    }
+
+    /// Whether this policy ever rejects anything. `Unbounded` pools use
+    /// this to skip admission bookkeeping entirely on the hot path.
+    pub fn is_unbounded(&self) -> bool {
+        matches!(self, AdmissionPolicy::Unbounded)
+    }
+
+    /// Whether this policy reads the pool-wide in-flight count. Only
+    /// `BoundedQueue` does — the coordinator maintains its reservation
+    /// counter (and the `inflight_peak` metric) exclusively for such
+    /// policies, so `DeadlineShed` costs one gauge read per submit, not
+    /// a contended pool-global RMW pair.
+    pub fn caps_inflight(&self) -> bool {
+        matches!(self, AdmissionPolicy::BoundedQueue { .. })
+    }
+
+    /// The wall-clock queue-time budget the owning shard sheds against at
+    /// drain time, if this policy defines one. Only `BoundedQueue` does:
+    /// `DeadlineShed` enforces its budget at admit time alone, accepting
+    /// the estimate races documented on the variant in exchange for a
+    /// submit path that never touches shared admission state.
+    pub fn queue_budget(&self) -> Option<Duration> {
+        match self {
+            AdmissionPolicy::BoundedQueue { max_queue_ns, .. } => {
+                Some(Duration::from_nanos(*max_queue_ns))
+            }
+            _ => None,
+        }
+    }
+
+    /// Decide one request: `cost_ns` is its dispatch-cost hint,
+    /// `backlog_ns` the routed shard's load-gauge score, `inflight` the
+    /// pool-wide in-flight count *before* this request (the coordinator
+    /// reserves a slot atomically before asking, so concurrent
+    /// submitters cannot race past `max_inflight`). Pure — all side
+    /// effects (reservation, peak tracking, counters) belong to the
+    /// caller.
+    pub fn admit(
+        &self,
+        cost_ns: u64,
+        backlog_ns: u64,
+        inflight: usize,
+    ) -> Result<(), SubmitError> {
+        match self {
+            AdmissionPolicy::Unbounded => Ok(()),
+            AdmissionPolicy::BoundedQueue { max_inflight, max_queue_ns } => {
+                if inflight >= *max_inflight {
+                    // Retry once one "slot" of the current backlog drains:
+                    // the mean per-request share of the estimated backlog.
+                    let hint = (backlog_ns / inflight.max(1) as u64).max(MIN_RETRY_HINT_NS);
+                    return Err(SubmitError::Rejected {
+                        reason: RejectReason::QueueFull,
+                        retry_after_hint: Some(Duration::from_nanos(hint)),
+                    });
+                }
+                if backlog_ns > *max_queue_ns {
+                    let hint = (backlog_ns - *max_queue_ns).max(MIN_RETRY_HINT_NS);
+                    return Err(SubmitError::Rejected {
+                        reason: RejectReason::QueueFull,
+                        retry_after_hint: Some(Duration::from_nanos(hint)),
+                    });
+                }
+                Ok(())
+            }
+            AdmissionPolicy::DeadlineShed { deadline_ns } => {
+                if deadline_would_shed(cost_ns, backlog_ns, *deadline_ns) {
+                    let hint = backlog_ns
+                        .saturating_add(cost_ns)
+                        .saturating_sub(*deadline_ns)
+                        .max(MIN_RETRY_HINT_NS);
+                    return Err(SubmitError::Rejected {
+                        reason: RejectReason::DeadlineUnmeetable,
+                        retry_after_hint: Some(Duration::from_nanos(hint)),
+                    });
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_unbounded_and_always_admits() {
+        let policy = AdmissionPolicy::default();
+        assert!(policy.is_unbounded());
+        assert_eq!(policy.name(), "unbounded");
+        assert_eq!(policy.queue_budget(), None);
+        assert_eq!(policy.admit(u64::MAX, u64::MAX, usize::MAX), Ok(()));
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        assert_eq!(
+            AdmissionPolicy::by_name("unbounded", 9, 9),
+            Some(AdmissionPolicy::Unbounded)
+        );
+        assert_eq!(
+            AdmissionPolicy::by_name("bounded", 64, 1_000),
+            Some(AdmissionPolicy::BoundedQueue { max_inflight: 64, max_queue_ns: 1_000 })
+        );
+        assert_eq!(
+            AdmissionPolicy::by_name("bounded-queue", 1, 2),
+            Some(AdmissionPolicy::BoundedQueue { max_inflight: 1, max_queue_ns: 2 })
+        );
+        assert_eq!(
+            AdmissionPolicy::by_name("deadline-shed", 0, 5_000),
+            Some(AdmissionPolicy::DeadlineShed { deadline_ns: 5_000 })
+        );
+        assert_eq!(AdmissionPolicy::by_name("bogus", 0, 0), None);
+    }
+
+    #[test]
+    fn bounded_queue_rejects_on_inflight_then_on_backlog() {
+        let policy = AdmissionPolicy::BoundedQueue { max_inflight: 4, max_queue_ns: 100_000 };
+        assert_eq!(policy.admit(10_000, 0, 0), Ok(()));
+        assert_eq!(policy.admit(10_000, 100_000, 3), Ok(()), "at the backlog edge");
+        let full = policy.admit(10_000, 50_000, 4).unwrap_err();
+        assert_eq!(full.reason(), RejectReason::QueueFull);
+        assert!(full.retry_after_hint().unwrap() >= Duration::from_nanos(MIN_RETRY_HINT_NS));
+        let deep = policy.admit(10_000, 100_001, 1).unwrap_err();
+        assert_eq!(deep.reason(), RejectReason::QueueFull);
+        assert_eq!(policy.queue_budget(), Some(Duration::from_nanos(100_000)));
+    }
+
+    #[test]
+    fn zero_inflight_cap_rejects_everything_deterministically() {
+        let policy = AdmissionPolicy::BoundedQueue { max_inflight: 0, max_queue_ns: u64::MAX };
+        for backlog in [0u64, 1, 1 << 40] {
+            let err = policy.admit(1, backlog, 0).unwrap_err();
+            assert_eq!(err.reason(), RejectReason::QueueFull);
+        }
+    }
+
+    #[test]
+    fn deadline_shed_predicate_matches_policy_decisions() {
+        let policy = AdmissionPolicy::DeadlineShed { deadline_ns: 200_000 };
+        // The policy must agree with the pure predicate on a grid of
+        // synthetic gauge states — the same grid tools/devsim_check.py
+        // walks against its Python port.
+        for cost in [1u64, 20_000, 44_000, 150_000, 300_000] {
+            for backlog in [0u64, 44_000, 64_000, 199_999, 200_000, 1 << 40] {
+                let want_shed = deadline_would_shed(cost, backlog, 200_000);
+                assert_eq!(
+                    policy.admit(cost, backlog, 7).is_err(),
+                    want_shed,
+                    "cost={cost} backlog={backlog}"
+                );
+            }
+        }
+        // No drain-side budget: the admitted subset is feasible already.
+        assert_eq!(policy.queue_budget(), None);
+        let err = policy.admit(150_000, 100_000, 0).unwrap_err();
+        assert_eq!(err.reason(), RejectReason::DeadlineUnmeetable);
+        assert_eq!(err.retry_after_hint(), Some(Duration::from_nanos(50_000)));
+    }
+
+    #[test]
+    fn deadline_shed_saturates_instead_of_wrapping() {
+        // Pathological gauges must never wrap into a false admit; a
+        // u64::MAX deadline is effectively unbounded (the saturating sum
+        // reaches it, never exceeds it).
+        assert!(deadline_would_shed(u64::MAX, u64::MAX, u64::MAX - 1));
+        assert!(!deadline_would_shed(u64::MAX, u64::MAX, u64::MAX));
+        assert!(!deadline_would_shed(0, 0, 0));
+        assert!(deadline_would_shed(1, 0, 0));
+    }
+
+    #[test]
+    fn submit_error_display_names_reason_and_hint() {
+        let err = SubmitError::Rejected {
+            reason: RejectReason::QueueFull,
+            retry_after_hint: Some(Duration::from_micros(250)),
+        };
+        let text = err.to_string();
+        assert!(text.contains("queue-full"), "{text}");
+        assert!(text.contains("250us"), "{text}");
+    }
+}

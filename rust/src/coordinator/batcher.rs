@@ -12,11 +12,17 @@ use std::time::{Duration, Instant};
 /// regrouping never copy path strings.
 #[derive(Debug)]
 pub struct Pending<T> {
+    /// The executable this unit resolved to (the batching key).
     pub artifact: Arc<str>,
+    /// When the request was submitted; deadlines derive from this stamp
+    /// and survive work-stealing handoffs.
     pub enqueued: Instant,
+    /// The queued unit itself (the server's `Job`).
     pub payload: T,
 }
 
+/// Batching knobs: how large a batch may grow and how long a request may
+/// wait for peers before its group is drained anyway.
 #[derive(Clone, Debug)]
 pub struct BatcherConfig {
     /// Max requests per drained batch.
@@ -31,16 +37,20 @@ impl Default for BatcherConfig {
     }
 }
 
+/// Groups queued work by target executable and decides when each group is
+/// due (full batch or oldest-entry deadline), draining in EDF order.
 pub struct Batcher<T> {
     cfg: BatcherConfig,
     queue: VecDeque<Pending<T>>,
 }
 
 impl<T> Batcher<T> {
+    /// An empty batcher with the given knobs.
     pub fn new(cfg: BatcherConfig) -> Batcher<T> {
         Batcher { cfg, queue: VecDeque::new() }
     }
 
+    /// Enqueue a fresh unit; its wait-clock starts now.
     pub fn push(&mut self, artifact: Arc<str>, payload: T) {
         self.push_pending(Pending { artifact, enqueued: Instant::now(), payload });
     }
@@ -53,12 +63,42 @@ impl<T> Batcher<T> {
         self.queue.push_back(pending);
     }
 
+    /// Queued units not yet drained.
     pub fn len(&self) -> usize {
         self.queue.len()
     }
 
+    /// Whether nothing is queued.
     pub fn is_empty(&self) -> bool {
         self.queue.is_empty()
+    }
+
+    /// The overload-shedding hook: remove and return every queued unit
+    /// that has already waited longer than `budget` — work the admission
+    /// policy's queue-time budget declares not worth serving anymore.
+    /// Order within the returned vec is queue order. The caller (the
+    /// executor shard, at drain time) owns completing the shed units with
+    /// a rejection and releasing their load-gauge share.
+    pub fn shed_overdue(&mut self, budget: Duration) -> Vec<Pending<T>> {
+        // One clock snapshot for both passes: cheaper than per-entry
+        // `elapsed()` on this per-batch path, and the pre-scan and the
+        // rebuild can never disagree about a boundary entry.
+        let now = Instant::now();
+        let blown = |p: &Pending<T>| now.saturating_duration_since(p.enqueued) > budget;
+        if !self.queue.iter().any(blown) {
+            return Vec::new(); // common case: nothing blown, no rebuild
+        }
+        let mut shed = Vec::new();
+        let mut rest = VecDeque::with_capacity(self.queue.len());
+        while let Some(p) = self.queue.pop_front() {
+            if blown(&p) {
+                shed.push(p);
+            } else {
+                rest.push_back(p);
+            }
+        }
+        self.queue = rest;
+        shed
     }
 
     /// Time until the oldest request exceeds its wait budget (drives the
@@ -107,14 +147,15 @@ impl<T> Batcher<T> {
         Some((target, group))
     }
 
-    /// Drain everything (flush/shutdown), grouped, FIFO by oldest group.
-    pub fn drain_all(&mut self) -> Vec<(Arc<str>, Vec<Pending<T>>)> {
-        let mut out = Vec::new();
-        while let Some(front) = self.queue.front() {
-            let artifact = front.artifact.clone();
-            out.push((artifact.clone(), self.take_group(&artifact)));
-        }
-        out
+    /// Remove and return the oldest group unconditionally (up to
+    /// `max_batch` units), due or not — the flush/shutdown path. Callers
+    /// flushing a whole queue loop this one batch at a time, interleaving
+    /// the shed hook, so budget-blown work is never served late just
+    /// because a flush was in progress.
+    pub fn drain_next(&mut self) -> Option<(Arc<str>, Vec<Pending<T>>)> {
+        let artifact = self.queue.front()?.artifact.clone();
+        let group = self.take_group(&artifact);
+        Some((artifact, group))
     }
 
     fn take_group(&mut self, artifact: &str) -> Vec<Pending<T>> {
@@ -281,6 +322,32 @@ mod tests {
     }
 
     #[test]
+    fn shed_overdue_takes_only_blown_entries_in_queue_order() {
+        let mut b: Batcher<u32> = Batcher::new(cfg(10, 10_000));
+        b.push("fresh".into(), 1);
+        b.push_pending(Pending {
+            artifact: "old".into(),
+            enqueued: Instant::now() - Duration::from_millis(30),
+            payload: 2,
+        });
+        b.push_pending(Pending {
+            artifact: "older".into(),
+            enqueued: Instant::now() - Duration::from_millis(60),
+            payload: 3,
+        });
+        // Generous budget: nothing shed, queue untouched.
+        assert!(b.shed_overdue(Duration::from_secs(1)).is_empty());
+        assert_eq!(b.len(), 3);
+        // 10ms budget: both pre-aged entries shed, fresh one stays.
+        let shed = b.shed_overdue(Duration::from_millis(10));
+        assert_eq!(shed.iter().map(|p| p.payload).collect::<Vec<_>>(), vec![2, 3]);
+        assert_eq!(b.len(), 1);
+        assert_eq!(b.queue.front().unwrap().payload, 1);
+        // The survivor still drains normally.
+        assert!(b.drain_due().is_none(), "fresh underfull entry not due");
+    }
+
+    #[test]
     fn not_due_when_fresh_and_underfull() {
         let mut b: Batcher<u32> = Batcher::new(cfg(10, 10_000));
         b.push("a".into(), 1);
@@ -289,19 +356,34 @@ mod tests {
     }
 
     #[test]
-    fn drain_all_empties_fifo() {
+    fn drain_next_empties_fifo_by_oldest_group() {
         let mut b: Batcher<u32> = Batcher::new(cfg(10, 10_000));
         for (art, v) in [("a", 1u32), ("b", 2), ("a", 3), ("c", 4)] {
             b.push(art.into(), v);
         }
-        let all = b.drain_all();
+        let mut all = Vec::new();
+        while let Some(group) = b.drain_next() {
+            all.push(group);
+        }
         assert!(b.is_empty());
+        assert!(b.drain_next().is_none());
         assert_eq!(all.len(), 3);
         assert_eq!(&*all[0].0, "a"); // oldest group first
         assert_eq!(all[0].1.len(), 2);
         // Every payload appears exactly once.
         let total: usize = all.iter().map(|(_, g)| g.len()).sum();
         assert_eq!(total, 4);
+    }
+
+    #[test]
+    fn drain_next_respects_max_batch_leaving_the_rest_queued() {
+        let mut b: Batcher<u32> = Batcher::new(cfg(2, 10_000));
+        for i in 0..5 {
+            b.push("a".into(), i);
+        }
+        let (_, group) = b.drain_next().unwrap();
+        assert_eq!(group.iter().map(|p| p.payload).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(b.len(), 3, "the overflow stays queued for the next flush step");
     }
 
     #[test]

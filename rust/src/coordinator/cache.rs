@@ -57,7 +57,9 @@ const STRIPES: usize = 16;
 /// paths that used to deep-copy artifact paths) is allocation-free.
 #[derive(Debug)]
 pub struct ResolvedKernel {
+    /// The shipped artifact serving this resolution (shared, not copied).
     pub meta: Arc<ArtifactMeta>,
+    /// How the registry resolved it (direct hit vs fallback).
     pub resolution: Resolution,
     /// Estimated execution cost of one dispatch (seconds), from the devsim
     /// analytical model. Feeds the router's per-shard load gauges; a hint,
@@ -143,6 +145,9 @@ pub fn estimate_cost_secs(
 
 type StripeMap = HashMap<GemmShape, Arc<ResolvedKernel>>;
 
+/// The memoized selector hot path: a bounded, striped shape ->
+/// resolved-artifact map with generation-tagged entries and
+/// measured-over-modeled cost hints (see the module docs).
 pub struct ResolutionCache {
     cap: usize,
     /// Device profile used to price resolutions for the load gauges.
@@ -163,6 +168,7 @@ pub struct ResolutionCache {
 }
 
 impl ResolutionCache {
+    /// A cache of `capacity` entries priced on the default devsim profile.
     pub fn new(capacity: usize) -> ResolutionCache {
         ResolutionCache::with_profile(capacity, "i7-6700k")
     }
@@ -308,6 +314,9 @@ impl ResolutionCache {
         }
     }
 
+    /// Memoize a resolution for `shape`, FIFO-evicting past capacity. A
+    /// racing stale-generation insert never clobbers a fresher entry; a
+    /// same-shape generation refresh keeps its original FIFO slot.
     pub fn insert(&self, shape: GemmShape, resolved: Arc<ResolvedKernel>) {
         let mut order = self.order.lock().unwrap();
         let stripe = self.stripe_of(&shape);
@@ -350,10 +359,12 @@ impl ResolutionCache {
         order.retain(|shape| self.snapshot(self.stripe_of(shape)).contains_key(shape));
     }
 
+    /// Entries currently cached across every stripe.
     pub fn len(&self) -> usize {
         (0..STRIPES).map(|stripe| self.snapshot(stripe).len()).sum()
     }
 
+    /// Whether no entry is cached.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

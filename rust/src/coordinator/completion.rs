@@ -38,6 +38,7 @@ use std::sync::{Arc, Mutex};
 use std::thread::Thread;
 use std::time::Duration;
 
+use crate::coordinator::admission::SubmitError;
 use crate::coordinator::metrics::thread_stripe;
 use crate::coordinator::server::GemmResponse;
 
@@ -101,6 +102,7 @@ impl CompletionPool {
         Arc::new(pool)
     }
 
+    /// Number of reusable slots in the slab (fixed at construction).
     pub fn capacity(&self) -> usize {
         self.slots.len()
     }
@@ -150,7 +152,10 @@ impl CompletionPool {
             if let Some(idx) = pool.pop_free((start + k) % LANES) {
                 let completion =
                     Completion { slot: SlotRef::Pooled { pool: pool.clone(), idx }, done: false };
-                let ticket = Ticket { slot: Some(SlotRef::Pooled { pool: pool.clone(), idx }) };
+                let ticket = Ticket {
+                    slot: Some(SlotRef::Pooled { pool: pool.clone(), idx }),
+                    rejected: None,
+                };
                 return Some((completion, ticket));
             }
         }
@@ -187,7 +192,7 @@ impl Completion {
     pub fn oneshot() -> (Completion, Ticket) {
         let slot = Arc::new(Slot::new());
         let completion = Completion { slot: SlotRef::Owned(slot.clone()), done: false };
-        (completion, Ticket { slot: Some(SlotRef::Owned(slot)) })
+        (completion, Ticket { slot: Some(SlotRef::Owned(slot)), rejected: None })
     }
 
     /// Deliver the response and wake the waiter, if one is parked.
@@ -242,15 +247,45 @@ impl Drop for Completion {
 /// recycled immediately when the response already arrived, or marked
 /// abandoned so the producer recycles it on delivery — fire-and-forget
 /// submits never shrink the slab.
+///
+/// A ticket can also be born **rejected** by the admission policy
+/// ([`Ticket::rejection`]): such a ticket owns no slot at all — the
+/// refusal cost neither a heap allocation nor slab capacity — and
+/// [`Ticket::wait`] materializes the typed error into a failure response.
 pub struct Ticket {
     /// `Some` until consumed by [`Ticket::wait`] (`Drop` then no-ops).
     slot: Option<SlotRef>,
+    /// Set when admission refused the request before it was queued; the
+    /// ticket then has no slot and resolves immediately.
+    rejected: Option<SubmitError>,
 }
 
 impl Ticket {
+    /// A slot-less ticket carrying an admission refusal. Allocation-free
+    /// (`SubmitError` is `Copy`), preserving the zero-alloc submit path.
+    pub(crate) fn rejected(err: SubmitError) -> Ticket {
+        Ticket { slot: None, rejected: Some(err) }
+    }
+
+    /// The admission refusal this ticket carries, if it was rejected at
+    /// submit time (`None` for a dispatched request — including one that
+    /// later fails execution; those report through the response).
+    pub fn rejection(&self) -> Option<SubmitError> {
+        self.rejected
+    }
+
     /// Block until the response arrives. Always returns — an undelivered
-    /// producer completes with a failure response on drop.
+    /// producer completes with a failure response on drop, and a rejected
+    /// ticket resolves immediately with the admission error.
     pub fn wait(mut self) -> GemmResponse {
+        if let Some(err) = self.rejected.take() {
+            return GemmResponse {
+                result: Err(err.to_string()),
+                config_used: None,
+                artifact: Arc::from(""),
+                latency: Duration::ZERO,
+            };
+        }
         let slot_ref = self.slot.take().expect("ticket consumed once");
         let slot = slot_ref.slot();
         if slot.state.load(Ordering::Acquire) != READY {
@@ -398,6 +433,23 @@ mod tests {
         let held: Vec<(Completion, Ticket)> =
             (0..LANES).map(|_| CompletionPool::checkout(&pool).expect("slot")).collect();
         assert_eq!(held.len(), LANES);
+    }
+
+    #[test]
+    fn rejected_ticket_owns_no_slot_and_resolves_immediately() {
+        use crate::coordinator::admission::{RejectReason, SubmitError};
+        let err = SubmitError::Rejected {
+            reason: RejectReason::QueueFull,
+            retry_after_hint: Some(Duration::from_micros(10)),
+        };
+        let ticket = Ticket::rejected(err);
+        assert_eq!(ticket.rejection(), Some(err));
+        let resp = ticket.wait();
+        let msg = resp.result.unwrap_err();
+        assert!(msg.contains("queue-full"), "{msg}");
+        // Dropping an unconsumed rejected ticket is a no-op (no slot).
+        let ticket = Ticket::rejected(err);
+        drop(ticket);
     }
 
     #[test]

@@ -50,14 +50,17 @@ pub struct StripedCounter {
 }
 
 impl StripedCounter {
+    /// An all-zero counter with one cache-line-padded cell per stripe.
     pub fn new() -> StripedCounter {
         StripedCounter { cells: (0..COUNTER_STRIPES).map(|_| CounterCell::default()).collect() }
     }
 
+    /// Add 1 to the calling thread's home cell.
     pub fn incr(&self) {
         self.add(1);
     }
 
+    /// Add `n` to the calling thread's home cell.
     pub fn add(&self, n: usize) {
         self.cells[thread_stripe(COUNTER_STRIPES)].0.fetch_add(n, Ordering::Relaxed);
     }
@@ -78,13 +81,35 @@ impl Default for StripedCounter {
 /// `0, 1, 2-3, 4-7, 8-15, 16-31, 32-63, 64+` observed at batch-drain time.
 pub const OCCUPANCY_BUCKETS: usize = 8;
 
+/// Serving counters and distributions for one executor shard (or, after
+/// [`Metrics::merge`], the whole pool). `requests` counts work actually
+/// served by a shard; submit-time refusals live in `failures` (resolution
+/// errors, dead pool) and `rejected` (admission), and `shed` counts work
+/// admitted but dropped at drain time for blowing its queue budget.
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
+    /// Requests served to completion (success or execution failure).
     pub requests: usize,
+    /// Batches drained (each batch serves one artifact group).
     pub batches: usize,
+    /// Requests that failed: execution errors on a shard, plus submit-path
+    /// failures (resolution errors, dead pool) counted by the frontend.
     pub failures: usize,
+    /// Resolutions that fell back to another deployed configuration.
     pub fallback_config: usize,
+    /// Resolutions that fell back to the XLA comparator artifact.
     pub fallback_xla: usize,
+    /// Requests refused by the admission policy at submit time (they never
+    /// took a completion slot or touched a shard).
+    pub rejected: usize,
+    /// Admitted requests dropped at drain time because they had already
+    /// waited past the admission queue budget.
+    pub shed: usize,
+    /// Peak pool-wide in-flight count observed at admit time. Only
+    /// tracked while an inflight-capping admission policy (`BoundedQueue`)
+    /// is active — `Unbounded` and `DeadlineShed` never touch the
+    /// counter, so it stays 0 for them; merged by `max`.
+    pub inflight_peak: usize,
     /// Requests routed off their shape-affinity shard because the preferred
     /// shard's load gauge exceeded the imbalance threshold.
     pub spilled: usize,
@@ -109,9 +134,12 @@ pub struct Metrics {
     pub per_config: HashMap<usize, usize>,
 }
 
+/// Key under which XLA-comparator dispatches are counted in
+/// [`Metrics::per_config`] (no Pallas configuration index applies).
 pub const XLA_BACKEND_KEY: usize = usize::MAX;
 
 impl Metrics {
+    /// Record one drained batch of `size` requests.
     pub fn record_batch(&mut self, size: usize) {
         self.batches += 1;
         self.batch_sizes.push(size);
@@ -153,6 +181,9 @@ impl Metrics {
         self.failures += other.failures;
         self.fallback_config += other.fallback_config;
         self.fallback_xla += other.fallback_xla;
+        self.rejected += other.rejected;
+        self.shed += other.shed;
+        self.inflight_peak = self.inflight_peak.max(other.inflight_peak);
         self.spilled += other.spilled;
         self.steals += other.steals;
         self.stolen_requests += other.stolen_requests;
@@ -169,6 +200,8 @@ impl Metrics {
         }
     }
 
+    /// Record one served request's end-to-end latency and the
+    /// configuration that served it (`None` = XLA backend).
     pub fn record_request(&mut self, latency_secs: f64, config: Option<usize>) {
         self.requests += 1;
         self.latencies.push(latency_secs);
@@ -178,6 +211,8 @@ impl Metrics {
             .or_default() += 1;
     }
 
+    /// Distribution stats over every recorded end-to-end latency sample,
+    /// or `None` before the first served request.
     pub fn latency_stats(&self) -> Option<crate::util::Stats> {
         if self.latencies.is_empty() {
             None
@@ -186,6 +221,7 @@ impl Metrics {
         }
     }
 
+    /// Mean requests per drained batch (0.0 before the first batch).
     pub fn mean_batch_size(&self) -> f64 {
         if self.batch_sizes.is_empty() {
             0.0
@@ -202,6 +238,7 @@ impl Metrics {
             .count()
     }
 
+    /// One-line human-readable rendering of every counter.
     pub fn summary(&self) -> String {
         let lat = self
             .latency_stats()
@@ -217,6 +254,7 @@ impl Metrics {
             .unwrap_or_else(|| "n/a".into());
         format!(
             "requests={} batches={} mean_batch={:.2} failures={} \
+             rejected={} shed={} inflight_peak={} \
              fallbacks(config/xla)={}/{} spilled={} steals={}/{} \
              selector_swaps={} retunes={} drift_trips={} \
              distinct_configs={} occupancy={:?} latency[{}]",
@@ -224,6 +262,9 @@ impl Metrics {
             self.batches,
             self.mean_batch_size(),
             self.failures,
+            self.rejected,
+            self.shed,
+            self.inflight_peak,
             self.fallback_config,
             self.fallback_xla,
             self.spilled,
@@ -275,12 +316,17 @@ mod tests {
         a.record_request(0.002, None);
         a.record_resolution(&Resolution::FallbackXla);
         a.failures = 1;
+        a.rejected = 2;
+        a.inflight_peak = 9;
 
         let mut b = Metrics::default();
         b.record_batch(4);
         b.record_request(0.004, Some(3));
         b.record_resolution(&Resolution::FallbackConfig);
         b.record_resolution(&Resolution::Direct); // no-op
+        b.rejected = 3;
+        b.shed = 5;
+        b.inflight_peak = 4;
         b.spilled = 2;
         b.steals = 1;
         b.stolen_requests = 4;
@@ -296,6 +342,9 @@ mod tests {
         assert_eq!(a.failures, 1);
         assert_eq!(a.fallback_xla, 1);
         assert_eq!(a.fallback_config, 1);
+        assert_eq!(a.rejected, 5);
+        assert_eq!(a.shed, 5);
+        assert_eq!(a.inflight_peak, 9, "peaks merge by max, not sum");
         assert_eq!(a.spilled, 2);
         assert_eq!(a.steals, 1);
         assert_eq!(a.stolen_requests, 4);
@@ -303,6 +352,7 @@ mod tests {
         assert_eq!(a.retunes, 3);
         assert_eq!(a.drift_trips, 1);
         assert!(a.summary().contains("selector_swaps=2"));
+        assert!(a.summary().contains("rejected=5 shed=5 inflight_peak=9"));
         assert_eq!(a.occupancy[0], 1);
         assert_eq!(a.occupancy[3], 1);
         assert_eq!(a.per_config[&3], 2);

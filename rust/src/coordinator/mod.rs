@@ -6,18 +6,24 @@
 //!   artifact resolution cache on the submit path).
 //! * [`completion`] — pooled completion slots (atomic state + park/unpark),
 //!   the allocation-free replacement for per-request channels.
+//! * [`admission`] — admission control and overload shedding: typed
+//!   submit-path rejections with retry hints, plus the queue-time budget
+//!   the shards shed against when the pool is saturated.
 //! * [`registry`] — maps GEMM requests to shipped AOT artifacts.
 //! * [`batcher`] — dynamic request batching by target executable, with
-//!   deadline-preserving handoff for stolen batches.
+//!   deadline-preserving handoff for stolen batches and the overload
+//!   shed hook.
 //! * [`server`] — the executor pool: load-aware router (shape affinity as
 //!   a preference, spill on imbalance), work-stealing shards, one engine
 //!   backend + batcher + metrics per shard, plus the optional background
 //!   retuner wiring (measured telemetry in, hot-swapped selectors out —
 //!   see [`crate::tuning`]).
 //! * [`vgg`] — the VGG16 inference engine of paper §6 (`pjrt` feature).
-//! * [`metrics`] — serving statistics (incl. spill/steal/retune counters
-//!   and occupancy histograms) with exact per-shard aggregation.
+//! * [`metrics`] — serving statistics (incl. rejection/shed and
+//!   spill/steal/retune counters and occupancy histograms) with exact
+//!   per-shard aggregation.
 
+pub mod admission;
 pub mod batcher;
 pub mod cache;
 pub mod completion;
@@ -28,6 +34,7 @@ pub mod server;
 #[cfg(feature = "pjrt")]
 pub mod vgg;
 
+pub use admission::{AdmissionPolicy, RejectReason, SubmitError};
 pub use batcher::{Batcher, BatcherConfig};
 pub use cache::{ResolutionCache, ResolvedKernel};
 pub use completion::{Completion, CompletionPool, Ticket};

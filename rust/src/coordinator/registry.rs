@@ -21,7 +21,10 @@ use crate::dataset::GemmShape;
 use crate::runtime::{ArtifactMeta, Manifest};
 use crate::tuning::swap::{DeployedSelector, SelectorHandle};
 
+/// Maps GEMM requests to shipped AOT artifacts through the current
+/// selector deployment (see the module docs for the fallback order).
 pub struct KernelRegistry {
+    /// The shipped deployment: artifact paths, deployed configs, buckets.
     pub manifest: Manifest,
     selector: SelectorHandle,
 }
@@ -39,6 +42,7 @@ pub enum Resolution {
 }
 
 impl KernelRegistry {
+    /// A registry serving `manifest` through `policy` (generation 0).
     pub fn new(manifest: Manifest, policy: SelectorPolicy) -> KernelRegistry {
         KernelRegistry { manifest, selector: SelectorHandle::new(policy) }
     }

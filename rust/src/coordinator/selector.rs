@@ -27,6 +27,8 @@ impl SelectorPolicy {
         }
     }
 
+    /// The configuration indices this policy can pick from (the deployed
+    /// set; empty for the pure-XLA comparator).
     pub fn deployed(&self) -> Vec<usize> {
         match self {
             SelectorPolicy::Tree(tree) => tree.deployed.clone(),
@@ -35,6 +37,7 @@ impl SelectorPolicy {
         }
     }
 
+    /// Stable policy label (flags, logs, reports).
     pub fn name(&self) -> &'static str {
         match self {
             SelectorPolicy::Tree(_) => "tuned-tree",

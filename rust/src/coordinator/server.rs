@@ -33,6 +33,14 @@
 //! deadlines survive migration. At shutdown the per-shard metrics are
 //! collected and merged into a pool-wide total; the merge is exact, so the
 //! pool totals equal the per-shard sums whatever spilled or was stolen.
+//!
+//! When offered load exceeds capacity, the optional [`AdmissionPolicy`]
+//! keeps the pool predictable instead of letting latency collapse: the
+//! submit path may refuse a request before it takes a completion slot
+//! (the ticket then carries a typed rejection with a retry hint), and the
+//! shards shed already-admitted work that blew its queue budget at drain
+//! time. The default policy, [`AdmissionPolicy::Unbounded`], bypasses all
+//! of it with a zero-cost early exit — see [`crate::coordinator::admission`].
 
 use std::collections::VecDeque;
 use std::path::PathBuf;
@@ -42,6 +50,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::coordinator::admission::{AdmissionPolicy, SubmitError};
 use crate::coordinator::batcher::{Batcher, BatcherConfig, Pending};
 use crate::coordinator::cache::{ResolutionCache, ResolvedKernel};
 use crate::coordinator::completion::{Completion, CompletionPool, Ticket};
@@ -57,18 +66,26 @@ use crate::tuning::telemetry::TelemetrySink;
 
 /// A GEMM request: `lhs` is (b, m, k), `rhs` is (b, k, n), row-major.
 pub struct GemmRequest {
+    /// The GEMM dimensions (must match a shipped artifact bucket).
     pub shape: GemmShape,
+    /// Left operand, (b, m, k) row-major.
     pub lhs: Vec<f32>,
+    /// Right operand, (b, k, n) row-major.
     pub rhs: Vec<f32>,
 }
 
+/// What a submitted request resolves to: the result (or the error that
+/// stopped it), plus how and how fast it was served.
 #[derive(Debug)]
 pub struct GemmResponse {
+    /// The (b, m, n) output, or the failure that stopped the request
+    /// (resolution error, execution error, admission rejection, shed).
     pub result: Result<Vec<f32>, String>,
     /// The configuration that served the request (None = XLA backend).
     pub config_used: Option<usize>,
     /// The artifact path that served it (shared, not copied per response).
     pub artifact: Arc<str>,
+    /// End-to-end latency from submit to completion.
     pub latency: Duration,
 }
 
@@ -85,6 +102,7 @@ pub enum Routing {
 }
 
 impl Routing {
+    /// Stable policy label (flags, metrics, bench JSON).
     pub fn name(&self) -> &'static str {
         match self {
             Routing::Affinity => "affinity",
@@ -163,6 +181,7 @@ pub struct PoolConfig {
     pub shards: usize,
     /// Which execution backend every shard instantiates.
     pub engine: EngineKind,
+    /// Per-shard dynamic-batching knobs.
     pub batcher: BatcherConfig,
     /// Capacity of the memoized shape -> artifact selector cache.
     pub selector_cache: usize,
@@ -178,6 +197,12 @@ pub struct PoolConfig {
     /// Minimum jobs a victim's injector must hold before an idle shard
     /// steals a batch from it.
     pub steal_min: usize,
+    /// Admission control: when and whether the submit path refuses work
+    /// instead of queueing it (see [`AdmissionPolicy`]). The default,
+    /// [`AdmissionPolicy::Unbounded`], is the pre-admission behavior:
+    /// everything is accepted and the submit path takes a zero-cost early
+    /// exit around all admission bookkeeping.
+    pub admission: AdmissionPolicy,
     /// Online retuning: when set, a background thread watches the
     /// measured-cost telemetry for drift and hot-swaps re-tuned selectors
     /// (see [`crate::tuning`]). `None` = frozen-at-startup selector, but
@@ -204,6 +229,7 @@ impl Default for PoolConfig {
             routing: Routing::default(),
             imbalance: 4.0,
             steal_min: 2,
+            admission: AdmissionPolicy::default(),
             retune: None,
             pricing_profile: None,
         }
@@ -211,18 +237,24 @@ impl Default for PoolConfig {
 }
 
 /// Shutdown report: per-shard metrics plus the merged pool totals.
+/// Frontend counters (submit-path failures, admission rejections, the
+/// in-flight peak) and retuner counters are folded into `total`.
 #[derive(Clone, Debug, Default)]
 pub struct PoolReport {
+    /// Each shard's own metrics, in shard order.
     pub per_shard: Vec<Metrics>,
+    /// Exact merge of every shard plus the frontend/tuning counters.
     pub total: Metrics,
     /// Selector-cache (hits, misses) over the pool's lifetime.
     pub cache_hits: usize,
+    /// Selector-cache misses over the pool's lifetime.
     pub cache_misses: usize,
     /// Retuner counters (background thread + explicit `retune_now` calls).
     pub tuning: RetunerStats,
 }
 
 impl PoolReport {
+    /// Multi-line human-readable rendering (totals, then each shard).
     pub fn summary(&self) -> String {
         let mut out = format!(
             "pool: {} shard(s), selector cache {}/{} hits\n  total: {}",
@@ -250,6 +282,22 @@ impl PoolReport {
     }
 }
 
+/// RAII admission reservation: one slot on the pool-wide in-flight
+/// counter, released exactly once when dropped. Riding on the [`Job`]
+/// itself means every exit path releases it — normal completion, a shed,
+/// or a panicking worker unwinding its local batcher — so a crashed
+/// shard can never leak `max_inflight` capacity. `None` for policies
+/// that don't cap in-flight (no counter traffic at all).
+struct InflightSlot(Option<Arc<AtomicUsize>>);
+
+impl Drop for InflightSlot {
+    fn drop(&mut self) {
+        if let Some(counter) = self.0.take() {
+            counter.fetch_sub(1, Ordering::Release);
+        }
+    }
+}
+
 struct Job {
     req: GemmRequest,
     t_submit: Instant,
@@ -263,6 +311,8 @@ struct Job {
     /// Dropping it undelivered — a worker panic — delivers a synthetic
     /// failure, so callers never hang.
     completion: Completion,
+    /// The admission reservation this job holds (see [`InflightSlot`]).
+    reservation: InflightSlot,
 }
 
 struct QueueInner {
@@ -341,15 +391,52 @@ impl ShardQueue {
 /// shutdown.
 #[derive(Default)]
 struct FrontCounters {
-    /// Requests rejected before reaching a shard (resolution failures,
+    /// Requests that failed before reaching a shard (resolution failures,
     /// dead pool).
     failures: StripedCounter,
+    /// Requests refused by the admission policy (no slot, no shard).
+    rejected: StripedCounter,
+    /// Peak pool-wide in-flight count observed at admit time. Only
+    /// maintained while a bounding admission policy is active — the
+    /// `Unbounded` fast path must not scan gauges per submit.
+    inflight_peak: AtomicUsize,
     /// Selector hot-swaps published via `swap_selector` (the background
     /// retuner counts its own swaps in [`RetunerStats`]).
     selector_swaps: AtomicUsize,
 }
 
 /// Handle to a running executor pool.
+///
+/// The 60-second tour (the `quickstart` example as a doc-test): start a
+/// pool — a missing artifacts directory falls back to the synthetic
+/// deployment served by the pure-Rust [`SimBackend`], so this runs
+/// anywhere — submit a GEMM, check the result, read the report.
+///
+/// ```
+/// use std::path::PathBuf;
+/// use kernelsel::coordinator::{Coordinator, PoolConfig, SelectorPolicy};
+/// use kernelsel::dataset::GemmShape;
+///
+/// let coord = Coordinator::start_pool(
+///     PathBuf::from("artifacts"), // missing dir -> synthetic deployment
+///     SelectorPolicy::Xla,        // serve via the XLA-dot comparator
+///     PoolConfig { shards: 2, ..PoolConfig::default() },
+/// )
+/// .expect("pool start");
+///
+/// let shape = GemmShape::new(64, 64, 64, 1); // (m, k, n, batch)
+/// let ticket = coord.submit(shape, vec![1.0; 64 * 64], vec![1.0; 64 * 64]);
+/// let resp = ticket.wait();
+/// let out = resp.result.expect("gemm result");
+/// assert_eq!(out.len(), 64 * 64);
+/// assert_eq!(out[0], 64.0); // all-ones GEMM: every cell is k
+///
+/// let report = coord.stop_detailed();
+/// assert_eq!(report.total.requests, 1);
+/// assert_eq!(report.total.failures, 0);
+/// ```
+///
+/// [`SimBackend`]: crate::engine::SimBackend
 pub struct Coordinator {
     registry: Arc<KernelRegistry>,
     cache: Arc<ResolutionCache>,
@@ -366,9 +453,18 @@ pub struct Coordinator {
     /// Striped frontend counters (requests that never reach a shard, plus
     /// explicit swap counts); folded into the totals at shutdown.
     front: FrontCounters,
+    /// Pool-wide in-flight reservation counter, maintained only under an
+    /// inflight-capping admission policy: admission *reserves* a slot
+    /// with one `fetch_add` before deciding (undone on reject), and the
+    /// job carries an RAII [`InflightSlot`] that releases it exactly once
+    /// — on completion, on shed, or when a panicking worker unwinds — so
+    /// `max_inflight` is a real cap even under concurrent submitters,
+    /// and a crashed shard can never leak capacity.
+    inflight: Arc<AtomicUsize>,
     engine_name: &'static str,
     routing: Routing,
     imbalance: f64,
+    admission: AdmissionPolicy,
 }
 
 /// The synthetic response for a request rejected on the submit path.
@@ -429,6 +525,7 @@ impl Coordinator {
 
         let registry = Arc::new(KernelRegistry::new(manifest, policy));
         let telemetry = Arc::new(TelemetrySink::default());
+        let inflight = Arc::new(AtomicUsize::new(0));
         let n_shards = cfg.shards.max(1);
         let queues: Arc<Vec<Arc<ShardQueue>>> =
             Arc::new((0..n_shards).map(|_| Arc::new(ShardQueue::new())).collect());
@@ -441,6 +538,16 @@ impl Coordinator {
             let queues_for_shard = queues.clone();
             let steal_min = cfg.steal_min.max(1);
             let telemetry_for_shard = telemetry.clone();
+            // The shed budget is wall-clock wait since submit, which
+            // includes the batcher's *deliberate* max_wait batching delay
+            // — a budget below it would shed underfull traffic on an idle
+            // pool. Clamp so only time beyond the intended batching
+            // window (with slack for the batch then being served) ever
+            // counts as overload.
+            let queue_budget = cfg
+                .admission
+                .queue_budget()
+                .map(|b| b.max(cfg.batcher.max_wait * 2));
             let spawned = std::thread::Builder::new()
                 .name(format!("kernelsel-shard-{shard_id}"))
                 .spawn(move || {
@@ -451,6 +558,7 @@ impl Coordinator {
                         batcher_cfg,
                         queues_for_shard,
                         steal_min,
+                        queue_budget,
                         telemetry_for_shard,
                         ready_tx,
                     )
@@ -497,24 +605,35 @@ impl Coordinator {
             queues,
             workers,
             front: FrontCounters::default(),
+            inflight,
             engine_name: cfg.engine.name(),
             routing: cfg.routing,
             imbalance: cfg.imbalance.max(1.0),
+            admission: cfg.admission,
         })
     }
 
+    /// Number of executor shards (worker threads).
     pub fn n_shards(&self) -> usize {
         self.queues.len()
     }
 
+    /// Name of the backend every shard runs.
     pub fn engine_name(&self) -> &'static str {
         self.engine_name
     }
 
+    /// The router policy this pool was started with.
     pub fn routing(&self) -> Routing {
         self.routing
     }
 
+    /// The admission policy this pool was started with.
+    pub fn admission(&self) -> AdmissionPolicy {
+        self.admission
+    }
+
+    /// The kernel registry resolving requests to shipped artifacts.
     pub fn registry(&self) -> &KernelRegistry {
         &self.registry
     }
@@ -637,14 +756,59 @@ impl Coordinator {
         CompletionPool::checkout(&self.completions).unwrap_or_else(Completion::oneshot)
     }
 
+    /// Consult the admission policy for one request routed to `shard`.
+    /// `Unbounded` (the default) exits before touching any counter, so
+    /// the uncontended fast path is bit-identical to the pre-admission
+    /// pool. Under a bounding policy the pool-wide in-flight slot is
+    /// *reserved* (one `fetch_add`) before the decision — concurrent
+    /// submitters cannot race past `max_inflight` — and released either
+    /// here on reject or by the serving shard on completion/shed.
+    fn admit(&self, shard: usize, cost_ns: u64) -> Result<InflightSlot, SubmitError> {
+        if self.admission.is_unbounded() {
+            return Ok(InflightSlot(None));
+        }
+        self.admit_at(cost_ns, self.queues[shard].load.score_ns())
+    }
+
+    /// The shared reservation protocol for a known-bounding policy and an
+    /// already-computed backlog estimate (`submit_many` advances its own
+    /// local estimate per admitted request; `admit` reads the gauge). On
+    /// success the reservation IS the returned [`InflightSlot`] — the
+    /// caller moves it into the job, so acquire and release are paired
+    /// structurally and no code path can take one without the other.
+    fn admit_at(&self, cost_ns: u64, backlog_ns: u64) -> Result<InflightSlot, SubmitError> {
+        if !self.admission.caps_inflight() {
+            // DeadlineShed never reads the in-flight count: no
+            // pool-global RMW traffic on its submit path.
+            self.admission.admit(cost_ns, backlog_ns, 0)?;
+            return Ok(InflightSlot(None));
+        }
+        let reserved = self.inflight.fetch_add(1, Ordering::AcqRel);
+        match self.admission.admit(cost_ns, backlog_ns, reserved) {
+            Ok(()) => {
+                self.front.inflight_peak.fetch_max(reserved + 1, Ordering::Relaxed);
+                Ok(InflightSlot(Some(self.inflight.clone())))
+            }
+            Err(err) => {
+                self.inflight.fetch_sub(1, Ordering::Release);
+                Err(err)
+            }
+        }
+    }
+
     /// Submit a request; the response arrives on the returned ticket.
+    ///
+    /// Under a bounding [`AdmissionPolicy`] the request may be refused
+    /// *before* taking a completion slot: the returned ticket then carries
+    /// the typed rejection ([`Ticket::rejection`]) and resolves
+    /// immediately — no allocation, no slab capacity, no shard traffic.
     pub fn submit(&self, shape: GemmShape, lhs: Vec<f32>, rhs: Vec<f32>) -> Ticket {
         let t_submit = Instant::now();
-        let (completion, ticket) = self.checkout_completion();
         let resolved = match self.cache.resolve(&self.registry, &shape) {
             Ok(r) => r,
             Err(e) => {
                 self.front.failures.incr();
+                let (completion, ticket) = self.checkout_completion();
                 completion.complete(failure_response(e, t_submit));
                 return ticket;
             }
@@ -653,6 +817,7 @@ impl Coordinator {
             Some(pick) => pick,
             None => {
                 self.front.failures.incr();
+                let (completion, ticket) = self.checkout_completion();
                 completion.complete(failure_response(
                     "executor pool: every shard worker is dead".to_string(),
                     t_submit,
@@ -662,8 +827,17 @@ impl Coordinator {
         };
         // Measured EWMA once telemetry is warm, devsim estimate while cold.
         let cost_ns = self.cache.dispatch_cost_ns(&resolved);
+        let reservation = match self.admit(shard, cost_ns) {
+            Ok(slot) => slot,
+            Err(err) => {
+                self.front.rejected.incr();
+                return Ticket::rejected(err);
+            }
+        };
+        let (completion, ticket) = self.checkout_completion();
         let req = GemmRequest { shape, lhs, rhs };
-        self.queues[shard].push(Job { req, t_submit, resolved, cost_ns, spilled, completion });
+        self.queues[shard]
+            .push(Job { req, t_submit, resolved, cost_ns, spilled, completion, reservation });
         ticket
     }
 
@@ -673,6 +847,12 @@ impl Coordinator {
     /// shard under a single lock acquisition with a single load-gauge
     /// update — the batched fast path for callers that naturally produce
     /// runs of equal shapes (a model replaying its GEMM sequence).
+    ///
+    /// Admission is **partial**: under a bounding policy each request in a
+    /// run is judged against the backlog estimate *including the requests
+    /// admitted ahead of it in the same call*, so a burst can be half
+    /// admitted and half refused. Every ticket reports its own outcome —
+    /// check [`Ticket::rejection`] per ticket.
     pub fn submit_many(&self, requests: Vec<(GemmShape, Vec<f32>, Vec<f32>)>) -> Vec<Ticket> {
         let mut tickets = Vec::with_capacity(requests.len());
         let mut iter = requests.into_iter().peekable();
@@ -707,8 +887,34 @@ impl Coordinator {
                 }
             };
             let cost_ns = self.cache.dispatch_cost_ns(&resolved);
+            // Admission state for the run: the shard backlog is read once,
+            // then advanced locally per admitted request (the jobs only
+            // hit the shard's gauge at push_batch below, so without this
+            // the whole run would be judged against the pre-run backlog).
+            // In-flight slots are individually reserved, exactly as in
+            // `admit` — concurrent submitters cannot race past the cap.
+            let bounding = !self.admission.is_unbounded();
+            let mut backlog_ns =
+                if bounding { self.queues[shard].load.score_ns() } else { 0 };
             let mut jobs = Vec::with_capacity(run.len());
             for (lhs, rhs) in run {
+                let reservation = if bounding {
+                    match self.admit_at(cost_ns, backlog_ns) {
+                        Ok(slot) => {
+                            backlog_ns = backlog_ns
+                                .saturating_add(cost_ns)
+                                .saturating_add(QUEUED_OVERHEAD_NS);
+                            slot
+                        }
+                        Err(err) => {
+                            self.front.rejected.incr();
+                            tickets.push(Ticket::rejected(err));
+                            continue;
+                        }
+                    }
+                } else {
+                    InflightSlot(None)
+                };
                 let (completion, ticket) = self.checkout_completion();
                 tickets.push(ticket);
                 jobs.push(Job {
@@ -718,6 +924,7 @@ impl Coordinator {
                     cost_ns,
                     spilled,
                     completion,
+                    reservation,
                 });
             }
             self.queues[shard].push_batch(jobs);
@@ -785,6 +992,9 @@ impl Coordinator {
         // Fold the striped frontend cells and the retuner's counters into
         // the totals (shards never see these).
         total.failures += self.front.failures.sum();
+        total.rejected += self.front.rejected.sum();
+        total.inflight_peak =
+            total.inflight_peak.max(self.front.inflight_peak.load(Ordering::Relaxed));
         total.selector_swaps += self.front.selector_swaps.load(Ordering::Relaxed) + tuning.swaps;
         total.retunes += tuning.retunes;
         total.drift_trips += tuning.drift_trips;
@@ -891,6 +1101,50 @@ fn try_steal(
     None
 }
 
+/// Complete every job the shed hook pulled out of the batcher with a
+/// rejection, releasing its load-gauge share and its admission
+/// reservation. Runs on the shard thread at drain time — the
+/// "shed-on-drain" stage of the admission state machine.
+fn shed_jobs(shed: Vec<Pending<Job>>, budget: Duration, load: &ShardLoad, metrics: &mut Metrics) {
+    for pending in shed {
+        // The handoff stamps `enqueued` with the submit instant, so the
+        // wait measured here — and the latency `failure_response` derives
+        // from the same stamp — is time since submit.
+        let waited = pending.enqueued.elapsed();
+        let job = pending.payload;
+        metrics.shed += 1;
+        load.sub(1, job.cost_ns);
+        // Release the reservation before responding, like the gauge: a
+        // blocking caller must be admittable as soon as it wakes.
+        drop(job.reservation);
+        job.completion.complete(failure_response(
+            format!(
+                "shed: queued {}us, past the {}us admission queue budget",
+                waited.as_micros(),
+                budget.as_micros()
+            ),
+            pending.enqueued,
+        ));
+    }
+}
+
+/// One shed pass over a shard's batcher: remove and reject everything
+/// past the queue budget (no-op without one). Shared by the serve loop
+/// and the shutdown flush so the two can never diverge.
+fn shed_pass(
+    batcher: &mut Batcher<Job>,
+    queue_budget: Option<Duration>,
+    load: &ShardLoad,
+    metrics: &mut Metrics,
+) {
+    if let Some(budget) = queue_budget {
+        let shed = batcher.shed_overdue(budget);
+        if !shed.is_empty() {
+            shed_jobs(shed, budget, load, metrics);
+        }
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn shard_loop(
     shard_id: usize,
@@ -899,6 +1153,7 @@ fn shard_loop(
     batcher_cfg: BatcherConfig,
     queues: Arc<Vec<Arc<ShardQueue>>>,
     steal_min: usize,
+    queue_budget: Option<Duration>,
     telemetry: Arc<TelemetrySink>,
     ready: Sender<Result<(), String>>,
 ) {
@@ -933,9 +1188,17 @@ fn shard_loop(
             break;
         }
 
-        // Serve every batch that is due.
+        // Serve every batch that is due, shedding first: work that has
+        // already waited past the admission queue budget is not worth
+        // serving — completing it now with a rejection is cheaper for
+        // everyone than serving it late and delaying everything queued
+        // behind it. The shed check re-runs before *every* batch, because
+        // a batch's own execution time is exactly what pushes the work
+        // queued behind it over the budget.
         let mut ran = false;
-        while let Some((artifact, group)) = batcher.drain_due() {
+        loop {
+            shed_pass(&mut batcher, queue_budget, &my.load, &mut metrics);
+            let Some((artifact, group)) = batcher.drain_due() else { break };
             run_batch(backend.as_mut(), &my.load, &artifact, group, &telemetry, &mut metrics);
             ran = true;
         }
@@ -964,8 +1227,13 @@ fn shard_loop(
         wait_for_work(&my, timeout);
     }
 
-    // Flush outstanding work before stopping.
-    for (artifact, group) in batcher.drain_all() {
+    // Flush outstanding work before stopping (still shedding what the
+    // queue budget already wrote off — shutdown must not serve it late,
+    // and each flushed batch's execution time can push the work queued
+    // behind it over the budget, so the check re-runs per batch here too).
+    loop {
+        shed_pass(&mut batcher, queue_budget, &my.load, &mut metrics);
+        let Some((artifact, group)) = batcher.drain_next() else { break };
         run_batch(backend.as_mut(), &my.load, &artifact, group, &telemetry, &mut metrics);
     }
     if let Some(reply) = stop_reply {
@@ -1026,9 +1294,11 @@ fn run_batch(
         metrics.record_resolution(&job.resolved.resolution);
         let config_used = job.resolved.meta.config_index;
         metrics.record_request(latency.as_secs_f64(), config_used);
-        // Release the gauge before responding: a blocking caller must see
-        // an up-to-date load when it submits its next request.
+        // Release the gauge (and the admission reservation) before
+        // responding: a blocking caller must see an up-to-date load when
+        // it submits its next request.
         load.sub(1, job.cost_ns);
+        drop(job.reservation);
         job.completion.complete(GemmResponse {
             result,
             config_used,
@@ -1257,10 +1527,19 @@ mod tests {
     /// tickets collected first, then drained), returning every result
     /// in submission order plus the shutdown report.
     fn run_skewed(n: usize, shards: usize, routing: Routing) -> (Vec<Vec<f32>>, PoolReport) {
+        run_skewed_with(n, shards, routing, AdmissionPolicy::default())
+    }
+
+    fn run_skewed_with(
+        n: usize,
+        shards: usize,
+        routing: Routing,
+        admission: AdmissionPolicy,
+    ) -> (Vec<Vec<f32>>, PoolReport) {
         let coord = Coordinator::start_pool(
             PathBuf::from("/nonexistent-artifacts"),
             SelectorPolicy::Xla,
-            PoolConfig { shards, routing, imbalance: 1.0, ..PoolConfig::default() },
+            PoolConfig { shards, routing, imbalance: 1.0, admission, ..PoolConfig::default() },
         )
         .expect("coordinator start");
         let mut rxs = Vec::with_capacity(n);
@@ -1317,6 +1596,270 @@ mod tests {
             "a 90% hot-shape burst at imbalance=1.0 must spill\n{}",
             report.summary()
         );
+
+        // The default pool has no admission: nothing rejected or shed,
+        // and the in-flight peak is never even tracked.
+        assert_eq!(report.total.rejected, 0);
+        assert_eq!(report.total.shed, 0);
+        assert_eq!(report.total.inflight_peak, 0);
+    }
+
+    #[test]
+    fn explicit_unbounded_admission_bit_identical_to_default_pool() {
+        // Satellite acceptance: `AdmissionPolicy::Unbounded` must be the
+        // pre-admission behavior exactly — same 1000-request 90/10 mix,
+        // same results bit-for-bit, same counter totals, nothing rejected
+        // or shed, and the merged counters still equal the per-shard sums.
+        let n = 1000;
+        let (base, base_report) = run_skewed(n, 4, Routing::LoadAware);
+        let (explicit, report) =
+            run_skewed_with(n, 4, Routing::LoadAware, AdmissionPolicy::Unbounded);
+        assert_eq!(base, explicit, "explicit Unbounded must not change any result");
+        assert_eq!(base_report.total.requests, report.total.requests);
+        assert_eq!(base_report.total.failures, report.total.failures);
+        assert_eq!(report.total.rejected, 0);
+        assert_eq!(report.total.shed, 0);
+        assert_eq!(report.total.inflight_peak, 0, "Unbounded never scans the gauges");
+        let sum = |f: fn(&Metrics) -> usize| -> usize {
+            report.per_shard.iter().map(f).sum()
+        };
+        assert_eq!(report.total.requests, sum(|m| m.requests));
+        assert_eq!(report.total.shed, sum(|m| m.shed));
+    }
+
+    #[test]
+    fn zero_inflight_cap_rejects_everything_without_touching_shards() {
+        let coord = Coordinator::start_pool(
+            PathBuf::from("/nonexistent-artifacts"),
+            SelectorPolicy::Xla,
+            PoolConfig {
+                shards: 2,
+                admission: AdmissionPolicy::BoundedQueue {
+                    max_inflight: 0,
+                    max_queue_ns: u64::MAX,
+                },
+                ..PoolConfig::default()
+            },
+        )
+        .expect("coordinator start");
+        let shape = GemmShape::new(64, 64, 64, 1);
+        for i in 0..50u32 {
+            let ticket = coord.submit(shape, fill_buffer(i, 64 * 64), fill_buffer(i + 1, 64 * 64));
+            let err = ticket.rejection().expect("every submit must be rejected");
+            assert_eq!(
+                err.reason(),
+                crate::coordinator::admission::RejectReason::QueueFull
+            );
+            assert!(err.retry_after_hint().is_some());
+            let resp = ticket.wait();
+            assert!(resp.result.unwrap_err().contains("queue-full"));
+        }
+        let report = coord.stop_detailed();
+        assert_eq!(report.total.rejected, 50);
+        assert_eq!(report.total.requests, 0, "rejected requests never reach a shard");
+        assert_eq!(report.total.failures, 0, "rejections are not failures");
+    }
+
+    #[test]
+    fn bounded_queue_rejects_overload_burst_with_typed_outcomes() {
+        // An open 40-request burst against max_inflight=2 on one shard:
+        // a couple admitted, the rest refused fast with a typed error.
+        let coord = Coordinator::start_pool(
+            PathBuf::from("/nonexistent-artifacts"),
+            SelectorPolicy::Xla,
+            PoolConfig {
+                shards: 1,
+                admission: AdmissionPolicy::BoundedQueue {
+                    max_inflight: 2,
+                    max_queue_ns: u64::MAX,
+                },
+                ..PoolConfig::default()
+            },
+        )
+        .expect("coordinator start");
+        let shape = GemmShape::new(128, 128, 128, 1);
+        let tickets: Vec<Ticket> = (0..40u32)
+            .map(|i| {
+                coord.submit(shape, fill_buffer(i, 128 * 128), fill_buffer(i + 3, 128 * 128))
+            })
+            .collect();
+        let mut ok = 0usize;
+        let mut rejected = 0usize;
+        for ticket in tickets {
+            if ticket.rejection().is_some() {
+                rejected += 1;
+                assert!(ticket.wait().result.is_err());
+            } else {
+                assert!(ticket.wait().result.is_ok());
+                ok += 1;
+            }
+        }
+        assert_eq!(ok + rejected, 40);
+        assert!(ok >= 2, "at least the first two must be admitted");
+        assert!(rejected >= 1, "an open burst against max_inflight=2 must reject");
+        let report = coord.stop_detailed();
+        assert_eq!(report.total.requests, ok);
+        assert_eq!(report.total.rejected, rejected);
+        assert_eq!(report.total.failures, 0);
+        assert!(
+            (1..=2).contains(&report.total.inflight_peak),
+            "peak {} must respect max_inflight=2",
+            report.total.inflight_peak
+        );
+    }
+
+    #[test]
+    fn submit_many_partial_admission_returns_per_request_outcomes() {
+        // One same-shape run of 40 against max_inflight=4: the run is
+        // judged incrementally against its own admitted prefix, and the
+        // jobs only land on the shard after the run is built — so exactly
+        // the first 4 are admitted, deterministically.
+        let coord = Coordinator::start_pool(
+            PathBuf::from("/nonexistent-artifacts"),
+            SelectorPolicy::Xla,
+            PoolConfig {
+                shards: 1,
+                admission: AdmissionPolicy::BoundedQueue {
+                    max_inflight: 4,
+                    max_queue_ns: u64::MAX,
+                },
+                ..PoolConfig::default()
+            },
+        )
+        .expect("coordinator start");
+        let shape = GemmShape::new(64, 64, 64, 1);
+        let requests: Vec<(GemmShape, Vec<f32>, Vec<f32>)> = (0..40u32)
+            .map(|i| (shape, fill_buffer(i, 64 * 64), fill_buffer(i + 9, 64 * 64)))
+            .collect();
+        let tickets = coord.submit_many(requests);
+        assert_eq!(tickets.len(), 40, "every request gets a ticket, admitted or not");
+        for (i, ticket) in tickets.into_iter().enumerate() {
+            if i < 4 {
+                assert!(ticket.rejection().is_none(), "request {i} must be admitted");
+                assert!(ticket.wait().result.is_ok());
+            } else {
+                let err = ticket
+                    .rejection()
+                    .unwrap_or_else(|| panic!("request {i} must be rejected"));
+                assert_eq!(
+                    err.reason(),
+                    crate::coordinator::admission::RejectReason::QueueFull
+                );
+            }
+        }
+        let report = coord.stop_detailed();
+        assert_eq!(report.total.requests, 4);
+        assert_eq!(report.total.rejected, 36);
+        assert_eq!(report.total.inflight_peak, 4);
+    }
+
+    #[test]
+    fn deadline_shed_rejects_unmeetable_and_admits_feasible() {
+        // A 1ns deadline can never be met (every cost hint exceeds it).
+        let coord = Coordinator::start_pool(
+            PathBuf::from("/nonexistent-artifacts"),
+            SelectorPolicy::Xla,
+            PoolConfig {
+                shards: 1,
+                admission: AdmissionPolicy::DeadlineShed { deadline_ns: 1 },
+                ..PoolConfig::default()
+            },
+        )
+        .expect("coordinator start");
+        let shape = GemmShape::new(64, 64, 64, 1);
+        let ticket = coord.submit(shape, fill_buffer(1, 64 * 64), fill_buffer(2, 64 * 64));
+        let err = ticket.rejection().expect("1ns deadline is unmeetable");
+        assert_eq!(
+            err.reason(),
+            crate::coordinator::admission::RejectReason::DeadlineUnmeetable
+        );
+        let report = coord.stop_detailed();
+        assert_eq!(report.total.rejected, 1);
+        assert_eq!(report.total.requests, 0);
+
+        // A generous deadline admits sequential traffic entirely.
+        let coord = Coordinator::start_pool(
+            PathBuf::from("/nonexistent-artifacts"),
+            SelectorPolicy::Xla,
+            PoolConfig {
+                shards: 1,
+                admission: AdmissionPolicy::DeadlineShed { deadline_ns: u64::MAX / 2 },
+                ..PoolConfig::default()
+            },
+        )
+        .expect("coordinator start");
+        for i in 0..8u32 {
+            let resp = coord
+                .call(shape, fill_buffer(i, 64 * 64), fill_buffer(i + 5, 64 * 64))
+                .unwrap();
+            assert!(resp.result.is_ok());
+        }
+        let report = coord.stop_detailed();
+        assert_eq!(report.total.requests, 8);
+        assert_eq!(report.total.rejected, 0);
+        assert_eq!(
+            report.total.inflight_peak, 0,
+            "DeadlineShed never reads the in-flight count, so no peak is tracked"
+        );
+    }
+
+    #[test]
+    fn queued_work_past_budget_is_shed_at_drain_not_served_late() {
+        // Paced backend: each 128^3 execute sleeps >= ~0.9ms of simulated
+        // device time, so a 12-deep queue against a 2ms wall budget and
+        // max_batch=4 guarantees that everything behind the first batch
+        // has blown the budget by the time the shard drains again. The
+        // admit-side gauge backlog stays under max_queue_ns (12 requests
+        // x ~64k gauge-ns < 2M), so all 12 are admitted — this test
+        // isolates the shed-on-drain stage.
+        let coord = Coordinator::start_pool(
+            PathBuf::from("/nonexistent-artifacts"),
+            SelectorPolicy::Xla,
+            PoolConfig {
+                shards: 1,
+                engine: EngineKind::SimPaced { profile: "i7-6700k", permille: 20_000 },
+                batcher: BatcherConfig {
+                    max_batch: 4,
+                    max_wait: Duration::from_millis(1),
+                },
+                admission: AdmissionPolicy::BoundedQueue {
+                    max_inflight: 1000,
+                    max_queue_ns: 2_000_000, // 2ms
+                },
+                ..PoolConfig::default()
+            },
+        )
+        .expect("coordinator start");
+        let shape = GemmShape::new(128, 128, 128, 1);
+        let tickets: Vec<Ticket> = (0..12u32)
+            .map(|i| {
+                coord.submit(shape, fill_buffer(i, 128 * 128), fill_buffer(i + 7, 128 * 128))
+            })
+            .collect();
+        let mut served = 0usize;
+        let mut shed = 0usize;
+        for ticket in tickets {
+            assert!(ticket.rejection().is_none(), "the whole burst fits the admit budget");
+            let resp = ticket.wait();
+            match resp.result {
+                Ok(_) => served += 1,
+                Err(e) => {
+                    assert!(e.contains("shed"), "only shed errors expected, got: {e}");
+                    shed += 1;
+                }
+            }
+        }
+        assert_eq!(served + shed, 12, "every ticket resolves exactly once");
+        // No `served >= 1` assert: on a heavily descheduled runner the
+        // shard's first drain can itself come later than the 2ms wall
+        // budget, legitimately shedding everything. `shed >= 1` holds
+        // either way — 12 admitted jobs can never all fit the first
+        // max_batch=4 batch.
+        assert!(shed >= 1, "work behind the first batch must be shed, not served late");
+        let report = coord.stop_detailed();
+        assert_eq!(report.total.requests, served);
+        assert_eq!(report.total.shed, shed);
+        assert_eq!(report.total.rejected, 0);
     }
 
     #[test]

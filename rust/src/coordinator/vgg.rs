@@ -12,12 +12,18 @@ use crate::util::fill::layer_weights;
 /// Per-layer timing of one inference.
 #[derive(Clone, Debug)]
 pub struct LayerTiming {
+    /// Layer label (e.g. `conv1_1`).
     pub layer: String,
+    /// Kernel configuration that served the layer (None = XLA backend).
     pub config: Option<usize>,
+    /// The im2col GEMM the layer lowered to.
     pub gemm_shape: GemmShape,
+    /// Wall-clock execution seconds for the layer.
     pub secs: f64,
 }
 
+/// The VGG16 inference engine: per-layer AOT executables chained over
+/// device-resident activations on one PJRT runtime.
 pub struct VggEngine<'rt> {
     runtime: &'rt Runtime,
     network: String,
@@ -70,14 +76,17 @@ impl<'rt> VggEngine<'rt> {
         })
     }
 
+    /// Name of the loaded network (from the manifest).
     pub fn network(&self) -> &str {
         &self.network
     }
 
+    /// Label of the selector policy the layers were resolved with.
     pub fn backend(&self) -> &'static str {
         self.policy_name
     }
 
+    /// Number of chained layers.
     pub fn n_layers(&self) -> usize {
         self.layers.len()
     }

@@ -42,6 +42,7 @@ pub struct BackendStats {
     /// `prepare` calls satisfied by the executable cache — the currency of
     /// the coordinator's shape-affinity routing.
     pub cache_hits: usize,
+    /// GEMM executions performed.
     pub executions: usize,
     /// Wall-clock seconds spent executing.
     pub execute_secs: f64,
@@ -52,6 +53,7 @@ pub struct BackendStats {
 
 /// An execution substrate for AOT GEMM artifacts.
 pub trait Backend {
+    /// Stable backend label (reports, flags).
     fn name(&self) -> &'static str;
 
     /// Load/compile the artifact so later `execute` calls are warm.
@@ -84,6 +86,7 @@ pub trait Backend {
         Ok((out, t0.elapsed().as_secs_f64()))
     }
 
+    /// Lifetime counters of this backend instance.
     fn stats(&self) -> BackendStats;
 }
 
@@ -91,12 +94,20 @@ pub trait Backend {
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum EngineKind {
     /// Analytical-model execution on a named `devsim` device profile.
-    Sim { profile: &'static str },
+    Sim {
+        /// The `devsim` device profile to simulate.
+        profile: &'static str,
+    },
     /// Like [`EngineKind::Sim`], but each execute also sleeps
     /// `permille/1000 x` the simulated device time, so end-to-end wall
     /// latency tracks predicted kernel quality — what the
     /// `retune_convergence` bench measures.
-    SimPaced { profile: &'static str, permille: u32 },
+    SimPaced {
+        /// The `devsim` device profile to simulate.
+        profile: &'static str,
+        /// Pacing factor in permille (1000 = real-time device pacing).
+        permille: u32,
+    },
     /// Native PJRT execution of the HLO artifacts.
     #[cfg(feature = "pjrt")]
     Pjrt,
@@ -122,6 +133,7 @@ impl EngineKind {
         }
     }
 
+    /// Stable engine label (flags, reports).
     pub fn name(&self) -> &'static str {
         match self {
             EngineKind::Sim { .. } => "sim",

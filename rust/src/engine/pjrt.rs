@@ -11,11 +11,14 @@ use crate::dataset::GemmShape;
 use crate::engine::{Backend, BackendStats};
 use crate::runtime::{ArtifactKind, ArtifactMeta, Runtime};
 
+/// Native execution of the shipped HLO artifacts through the PJRT
+/// runtime (`pjrt` cargo feature).
 pub struct PjrtBackend {
     rt: Runtime,
 }
 
 impl PjrtBackend {
+    /// A backend over the PJRT runtime rooted at `artifacts_dir`.
     pub fn new(artifacts_dir: &Path) -> Result<PjrtBackend, String> {
         Ok(PjrtBackend { rt: Runtime::new(artifacts_dir)? })
     }

@@ -15,6 +15,9 @@ use crate::devsim::{profile_by_name, simulate, DeviceProfile};
 use crate::engine::{Backend, BackendStats};
 use crate::runtime::{ArtifactKind, ArtifactMeta};
 
+/// Pure-Rust simulation backend: a naive host GEMM for correctness plus
+/// the devsim analytical model for simulated device timing (optionally
+/// paced, so wall latency tracks predicted kernel quality).
 pub struct SimBackend {
     profile: &'static DeviceProfile,
     /// The devsim space only covers the Pallas configs; the XLA-dot
@@ -28,6 +31,7 @@ pub struct SimBackend {
 }
 
 impl SimBackend {
+    /// An unpaced backend simulating the named devsim device profile.
     pub fn new(profile_name: &str) -> Result<SimBackend, String> {
         SimBackend::with_pacing(profile_name, 0)
     }
@@ -47,6 +51,7 @@ impl SimBackend {
         })
     }
 
+    /// Name of the simulated device profile.
     pub fn profile_name(&self) -> &'static str {
         self.profile.name
     }

@@ -26,15 +26,31 @@
 //! and a background retuner re-runs selection + classification on the
 //! measured data and hot-swaps the selector without pausing traffic.
 
+// Every public item must carry rustdoc. The serving-stack modules
+// (`coordinator`, `tuning`, `engine`) are fully documented and gated;
+// the offline pipeline modules below carry an explicit module-level
+// `allow` until their own documentation pass lands (ROADMAP item) —
+// the allows are the worklist, not an exemption.
+#![warn(missing_docs)]
+
+#[allow(missing_docs)]
 pub mod classify;
 pub mod coordinator;
+#[allow(missing_docs)]
 pub mod dataset;
+#[allow(missing_docs)]
 pub mod devsim;
 pub mod engine;
+#[allow(missing_docs)]
 pub mod experiments;
+#[allow(missing_docs)]
 pub mod linalg;
+#[allow(missing_docs)]
 pub mod ml;
+#[allow(missing_docs)]
 pub mod runtime;
+#[allow(missing_docs)]
 pub mod selection;
 pub mod tuning;
+#[allow(missing_docs)]
 pub mod util;

@@ -479,8 +479,10 @@ impl TreeClassifier {
 // Flattened (SoA) inference.
 // ---------------------------------------------------------------------------
 
-/// Leaf marker in the flattened `feat` arrays.
-const FLAT_LEAF: u32 = u32::MAX;
+/// Leaf marker in the flattened `feat` arrays — the wire contract of
+/// [`FlatTree::into_parts`], shared with `classify::codegen`'s
+/// `CompiledTree` so the two flattenings can never drift apart.
+pub const FLAT_LEAF: u32 = u32::MAX;
 
 /// Flattened structure-of-arrays evaluator for a trained
 /// [`TreeClassifier`]: node features, thresholds and child pairs live in

@@ -23,16 +23,20 @@ use crate::tuning::telemetry::TelemetrySnapshot;
 /// pricing model predicts.
 #[derive(Clone, Debug)]
 pub struct ConfigDrift {
+    /// The kernel configuration index the ratio describes.
     pub config: usize,
     /// Cells (distinct shapes) the ratio is estimated from.
     pub cells: usize,
+    /// Telemetry samples behind those cells.
     pub samples: u64,
+    /// Geometric-mean measured/predicted dispatch-time ratio.
     pub ratio: f64,
 }
 
 /// Pool-wide drift verdict.
 #[derive(Clone, Debug)]
 pub struct DriftReport {
+    /// Per-configuration drift ratios over the measured cells.
     pub per_config: Vec<ConfigDrift>,
     /// Geometric-mean ratio over every measured cell (any config).
     pub global_ratio: f64,

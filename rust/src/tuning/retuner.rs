@@ -52,6 +52,7 @@ pub struct RetuneConfig {
     pub min_cell_samples: u64,
     /// Deployed-set size to re-select; `None` = the whole shipped pool.
     pub k: Option<usize>,
+    /// Feature normalization applied before PCA+K-means re-selection.
     pub norm: Normalization,
     /// Classifier retrained on the live dataset. Must be one of the
     /// decision-tree kinds (only trees compile to a deployable
@@ -61,6 +62,7 @@ pub struct RetuneConfig {
     /// dataset is the serving distribution itself, so exact fit is what
     /// we want.
     pub classifier: ClassifierKind,
+    /// RNG seed for the re-selection pipeline (deterministic retunes).
     pub seed: u64,
 }
 
@@ -116,7 +118,12 @@ pub enum RetuneOutcome {
     /// Re-ran the pipeline; the tree was identical, nothing swapped.
     NoChange,
     /// Published a new selector.
-    Swapped { generation: u64, deployed: Vec<usize> },
+    Swapped {
+        /// Generation of the newly deployed selector.
+        generation: u64,
+        /// Configuration indices the new selector picks from.
+        deployed: Vec<usize>,
+    },
 }
 
 /// Fold a telemetry snapshot into a live [`PerfDataset`]: rows are the
@@ -248,6 +255,9 @@ pub struct Retuner {
 }
 
 impl Retuner {
+    /// Spawn the background thread; it watches `telemetry` for drift and
+    /// deploys re-tuned selectors through `registry`/`cache`, counting
+    /// into the shared `stats` store. Stop it with [`Retuner::finish`].
     pub fn start(
         cfg: RetuneConfig,
         registry: Arc<KernelRegistry>,

@@ -23,6 +23,7 @@ use crate::coordinator::selector::SelectorPolicy;
 /// swaps can never be observed torn.
 #[derive(Clone, Debug)]
 pub struct DeployedSelector {
+    /// The selector policy of this deployment.
     pub policy: SelectorPolicy,
     /// Monotonic deployment counter; 0 is the policy the pool booted with.
     pub generation: u64,
@@ -38,6 +39,7 @@ pub struct SelectorHandle {
 }
 
 impl SelectorHandle {
+    /// A handle booted with `policy` at generation 0.
     pub fn new(policy: SelectorPolicy) -> SelectorHandle {
         SelectorHandle {
             current: RwLock::new(Arc::new(DeployedSelector { policy, generation: 0 })),

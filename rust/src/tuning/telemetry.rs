@@ -62,6 +62,8 @@ impl Default for TelemetrySink {
 }
 
 impl TelemetrySink {
+    /// A sink whose cells need `min_samples` samples before their EWMA
+    /// (smoothing factor `alpha`) overrides the devsim cost hint.
     pub fn new(min_samples: u64, alpha: f64) -> TelemetrySink {
         TelemetrySink {
             stripes: (0..STRIPES).map(|_| Mutex::new(HashMap::new())).collect(),
@@ -177,10 +179,15 @@ impl TelemetrySink {
 /// One (shape, config) telemetry cell at snapshot time.
 #[derive(Clone, Debug)]
 pub struct TelemetryCell {
+    /// The GEMM shape of the cell.
     pub shape: GemmShape,
+    /// The configuration that served it (None = XLA backend).
     pub config: Option<usize>,
+    /// Samples recorded for the cell.
     pub count: u64,
+    /// Arithmetic-mean measured execution seconds.
     pub mean_secs: f64,
+    /// Exponentially-weighted moving average of the measured seconds.
     pub ewma_secs: f64,
 }
 
@@ -194,6 +201,7 @@ impl TelemetryCell {
 /// Point-in-time view of the telemetry sink.
 #[derive(Clone, Debug, Default)]
 pub struct TelemetrySnapshot {
+    /// Every cell, deterministically ordered (shape dims, then config).
     pub cells: Vec<TelemetryCell>,
 }
 

@@ -16,7 +16,7 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
 use std::path::PathBuf;
 
-use kernelsel::coordinator::{Coordinator, PoolConfig, SelectorPolicy};
+use kernelsel::coordinator::{AdmissionPolicy, Coordinator, PoolConfig, SelectorPolicy};
 use kernelsel::dataset::GemmShape;
 use kernelsel::util::fill_buffer;
 
@@ -113,6 +113,134 @@ fn warm_hit_path_submit_allocates_nothing_on_the_client_thread() {
     let metrics = coord.stop();
     assert_eq!(metrics.requests, 40 + n);
     assert_eq!(metrics.failures, 0);
+}
+
+#[test]
+fn rejected_submits_allocate_nothing() {
+    // A zero-capacity BoundedQueue rejects every submit deterministically.
+    // The rejection path must cost nothing: no completion slot, no heap
+    // allocation — the ticket is a slot-less Copy of the typed error.
+    let coord = Coordinator::start_pool(
+        PathBuf::from("/nonexistent-artifacts"),
+        SelectorPolicy::Xla,
+        PoolConfig {
+            shards: 1,
+            admission: AdmissionPolicy::BoundedQueue { max_inflight: 0, max_queue_ns: u64::MAX },
+            ..PoolConfig::default()
+        },
+    )
+    .expect("coordinator start");
+    let shape = GemmShape::new(64, 64, 64, 1);
+    // Warm the resolution cache (the resolve hit must precede admission
+    // for the cost hint) — these warming submits are themselves rejected.
+    for i in 0..8u32 {
+        let ticket = coord.submit(shape, fill_buffer(i, 64 * 64), fill_buffer(i + 1, 64 * 64));
+        assert!(ticket.rejection().is_some());
+    }
+    let n = 64usize;
+    let inputs: Vec<(Vec<f32>, Vec<f32>)> = (0..n)
+        .map(|i| (fill_buffer(i as u32, 64 * 64), fill_buffer(i as u32 + 3, 64 * 64)))
+        .collect();
+
+    TRACKING.with(|t| t.set(true));
+    ALLOCS.with(|a| a.set(0));
+    let mut rejected = 0usize;
+    for (lhs, rhs) in inputs {
+        let ticket = coord.submit(shape, lhs, rhs);
+        if ticket.rejection().is_some() {
+            rejected += 1;
+        }
+        // Dropping the unconsumed rejected ticket is a no-op (no slot).
+    }
+    TRACKING.with(|t| t.set(false));
+    let allocs = ALLOCS.with(|a| a.get());
+
+    assert_eq!(rejected, n, "a zero-capacity policy must reject everything");
+    assert_eq!(
+        allocs, 0,
+        "rejected submits allocated {allocs} times over {n} requests; \
+         admission refusals must stay off the heap"
+    );
+    let report = coord.stop_detailed();
+    assert_eq!(report.total.rejected, 8 + n);
+    assert_eq!(report.total.requests, 0);
+}
+
+#[test]
+fn rejection_storms_leak_no_completion_slots() {
+    // A minimum-size completion slab plus heavy mixed admit/reject
+    // traffic: if a rejection ever checked out (and lost) a slot, the
+    // 8-slot slab would drain and warm submits would silently fall back
+    // to one-shot heap slots — which the zero-alloc assertion below
+    // would catch immediately.
+    let coord = Coordinator::start_pool(
+        PathBuf::from("/nonexistent-artifacts"),
+        SelectorPolicy::Xla,
+        PoolConfig {
+            shards: 1,
+            completion_slots: 8, // the CompletionPool minimum (one per lane)
+            admission: AdmissionPolicy::DeadlineShed { deadline_ns: 200_000 },
+            ..PoolConfig::default()
+        },
+    )
+    .expect("coordinator start");
+    let shape = GemmShape::new(64, 64, 64, 1);
+    // Warm sequentially (an idle gauge always admits under this deadline).
+    for i in 0..40u32 {
+        let resp = coord.call(shape, fill_buffer(i, 64 * 64), fill_buffer(i + 7, 64 * 64));
+        assert!(resp.expect("warm call").result.is_ok());
+    }
+    // Hammer: async bursts where the deadline rejects most of the tail,
+    // then drain. Every admitted ticket returns its slot; every rejected
+    // ticket never had one.
+    let mut rejected_total = 0usize;
+    for round in 0..50u32 {
+        // Prebuild the round's inputs so the submits land back-to-back —
+        // far faster than the shard can drain a ~4-deep deadline budget.
+        let inputs: Vec<(Vec<f32>, Vec<f32>)> = (0..10u32)
+            .map(|i| {
+                let seed = round * 16 + i;
+                (fill_buffer(seed, 64 * 64), fill_buffer(seed + 3, 64 * 64))
+            })
+            .collect();
+        let tickets: Vec<_> =
+            inputs.into_iter().map(|(lhs, rhs)| coord.submit(shape, lhs, rhs)).collect();
+        for ticket in tickets {
+            if ticket.rejection().is_some() {
+                rejected_total += 1;
+            } else {
+                assert!(ticket.wait().result.is_ok());
+            }
+        }
+    }
+    assert!(
+        rejected_total > 0,
+        "10-deep instantaneous bursts against a ~4-deep deadline budget must reject"
+    );
+
+    // The slab must be fully intact: warm sequential submits still take
+    // pooled slots (a one-shot fallback would heap-allocate and fail the
+    // zero-alloc assertion).
+    let _ = std::thread::current();
+    let n = 32usize;
+    let inputs: Vec<(Vec<f32>, Vec<f32>)> = (0..n)
+        .map(|i| (fill_buffer(i as u32, 64 * 64), fill_buffer(i as u32 + 5, 64 * 64)))
+        .collect();
+    TRACKING.with(|t| t.set(true));
+    ALLOCS.with(|a| a.set(0));
+    for (lhs, rhs) in inputs {
+        let ticket = coord.submit(shape, lhs, rhs);
+        assert!(ticket.rejection().is_none(), "sequential traffic is always feasible");
+        assert!(ticket.wait().result.is_ok());
+    }
+    TRACKING.with(|t| t.set(false));
+    let allocs = ALLOCS.with(|a| a.get());
+    assert_eq!(
+        allocs, 0,
+        "warm submits after a rejection storm allocated {allocs} times; \
+         the slab must not have leaked slots to rejections"
+    );
+    coord.stop();
 }
 
 #[test]

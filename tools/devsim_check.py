@@ -313,8 +313,11 @@ def build_tree(rows, labels):
             from collections import Counter
             counts = Counter(sub_labels)
             top = max(counts.values())
-            # Last-max tie-break, mirroring max_by_key in Rust.
-            cls = [c for c in counts if counts[c] == top][-1]
+            # Rust's max_by_key keeps the LAST maximal element while
+            # enumerating a dense per-class counts array by index, i.e.
+            # ties resolve to the HIGHEST class index — not to Counter
+            # insertion order.
+            cls = max(c for c in counts if counts[c] == top)
             nodes[me] = dict(leaf=True, cls=cls)
             return me
         f, t = split
@@ -374,3 +377,106 @@ assert mismatch == 0, f"exact-fit tree missed {mismatch}/{len(BUCKETS)} training
 n_leaves = sum(1 for f in flat[0] if f is None)
 print(f"OK: flattened SoA evaluator == recursive CART on all {len(BUCKETS)} buckets "
       f"({len(flat[0])} nodes, {n_leaves} leaves, exact fit on the shipped selector)")
+
+# ---- admission-control predicate check --------------------------------------
+# Port of rust/src/coordinator/admission.rs: the DeadlineShed reject
+# predicate (deadline_would_shed) and the BoundedQueue / DeadlineShed admit
+# decisions with their retry-after hints, verified on a grid of synthetic
+# gauge states built from the same devsim cost hints the router prices
+# with (cost + 20k ns fixed overhead per queued request, exactly
+# ShardLoad::score_ns). All arithmetic is saturating u64, mirrored here.
+
+U64_MAX = (1 << 64) - 1
+QUEUED_OVERHEAD_NS = 20_000      # server.rs QUEUED_OVERHEAD_NS
+MIN_RETRY_HINT_NS = 1_000        # admission.rs MIN_RETRY_HINT_NS
+
+def sat_add(a, b):
+    return min(a + b, U64_MAX)
+
+def deadline_would_shed(cost_ns, backlog_ns, deadline_ns):
+    """Port of admission::deadline_would_shed (saturating add)."""
+    return sat_add(backlog_ns, cost_ns) > deadline_ns
+
+def admit_bounded(max_inflight, max_queue_ns, cost_ns, backlog_ns, inflight):
+    """Port of AdmissionPolicy::BoundedQueue::admit.
+    Returns None on admit, else ('queue-full', retry_hint_ns)."""
+    if inflight >= max_inflight:
+        return ("queue-full", max(backlog_ns // max(inflight, 1), MIN_RETRY_HINT_NS))
+    if backlog_ns > max_queue_ns:
+        return ("queue-full", max(backlog_ns - max_queue_ns, MIN_RETRY_HINT_NS))
+    return None
+
+def admit_deadline(deadline_ns, cost_ns, backlog_ns):
+    """Port of AdmissionPolicy::DeadlineShed::admit.
+    Returns None on admit, else ('deadline-unmeetable', retry_hint_ns)."""
+    if deadline_would_shed(cost_ns, backlog_ns, deadline_ns):
+        hint = max(sat_add(backlog_ns, cost_ns) - deadline_ns, 0)
+        return ("deadline-unmeetable", max(hint, MIN_RETRY_HINT_NS))
+    return None
+
+# Synthetic gauge states: shard backlogs built from real devsim cost hints
+# for the shipped hot shapes at queue depths 0..24, exactly as the gauges
+# accumulate them (sum of per-request cost + fixed overhead per queued).
+hot_shapes = [(128, 128, 128, 1), (64, 64, 64, 1), (32, 32, 32, 4), (256, 256, 256, 1)]
+proxy = NAME_TO_INDEX["r4a4c4_wg16x16"]  # the XLA-comparator pricing proxy
+costs_ns = {s: int(secs("i7-6700k", s, proxy) * 1e9) for s in hot_shapes}
+
+checked = 0
+for s, cost in costs_ns.items():
+    for depth in range(25):
+        backlog = depth * (cost + QUEUED_OVERHEAD_NS)
+        for deadline in [1, cost, 200_000, 384_000, 2_000_000, U64_MAX]:
+            shed = deadline_would_shed(cost, backlog, deadline)
+            # Feasibility is exactly "fits the deadline": admitted iff
+            # backlog + own cost <= deadline.
+            assert shed == (backlog + cost > deadline), (s, depth, deadline)
+            verdict = admit_deadline(deadline, cost, backlog)
+            assert (verdict is not None) == shed
+            if verdict is not None:
+                reason, hint = verdict
+                assert reason == "deadline-unmeetable"
+                assert hint >= MIN_RETRY_HINT_NS
+                if backlog + cost - deadline >= MIN_RETRY_HINT_NS:
+                    assert hint == backlog + cost - deadline
+            checked += 1
+        # BoundedQueue: the two limbs trip independently, and the
+        # retry-after hints follow the documented formulas (inflight limb
+        # checked first, both floored at MIN_RETRY_HINT_NS).
+        for max_inflight, max_queue in [(0, U64_MAX), (8, U64_MAX), (1000, 384_000)]:
+            verdict = admit_bounded(max_inflight, max_queue, cost, backlog, depth)
+            want_reject = depth >= max_inflight or backlog > max_queue
+            assert (verdict is not None) == want_reject, (s, depth, max_inflight, max_queue)
+            if verdict is not None:
+                reason, hint = verdict
+                assert reason == "queue-full"
+                if depth >= max_inflight:
+                    assert hint == max(backlog // max(depth, 1), MIN_RETRY_HINT_NS)
+                else:
+                    assert hint == max(backlog - max_queue, MIN_RETRY_HINT_NS)
+            checked += 1
+
+# Monotonicity: growing backlog can only flip admit -> reject, never back.
+for deadline in [200_000, 2_000_000]:
+    prev_rejected = False
+    cost = costs_ns[(128, 128, 128, 1)]
+    for depth in range(40):
+        backlog = depth * (cost + QUEUED_OVERHEAD_NS)
+        rejected = admit_deadline(deadline, cost, backlog) is not None
+        assert not (prev_rejected and not rejected), "reject must be monotone in backlog"
+        prev_rejected = rejected
+
+# Saturation: pathological gauges never wrap into a false admit; a
+# u64::MAX deadline is effectively unbounded (the sum saturates *to* it,
+# not past it).
+assert deadline_would_shed(U64_MAX, U64_MAX, U64_MAX - 1)
+assert not deadline_would_shed(U64_MAX, U64_MAX, U64_MAX)
+assert not deadline_would_shed(0, 0, 0)
+assert deadline_would_shed(1, 0, 0)
+
+# The worked example pinned by the Rust unit test
+# (admission.rs deadline_shed_predicate_matches_policy_decisions).
+assert admit_deadline(200_000, 150_000, 100_000) == ("deadline-unmeetable", 50_000)
+
+print(f"OK: admission predicates (DeadlineShed + BoundedQueue) match the Rust "
+      f"contract on {checked} synthetic gauge states "
+      f"(hot-shape cost hints {sorted(v // 1000 for v in costs_ns.values())} us)")
