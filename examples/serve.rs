@@ -13,6 +13,8 @@
 //!         --max-inflight 64 --max-queue-us 5000
 //!     cargo run --release --example serve -- --admission deadline-shed \
 //!         --max-queue-us 2000
+//!     cargo run --release --example serve -- --engine cpu \
+//!         --retune-interval 150 --require-swap
 //!
 //! Clients submit mixed-shape GEMM requests; the submit path resolves each
 //! to a deployed kernel via the memoized decision-tree selector and routes
@@ -44,6 +46,15 @@
 //! is the shared budget knob: the per-shard queue-time budget for
 //! `bounded` (admit + shed-on-drain) and the end-to-end deadline for
 //! `deadline-shed`. Rejected and shed counts print at shutdown.
+//!
+//! `--engine sim|cpu` picks the backend (default sim). With `cpu` the
+//! pool executes real f32 GEMM on the host through the `engine::cpu`
+//! variant family: traffic drives the CPU manifest's bounded shape
+//! buckets, costs are priced by the analytic CPU model, and the run
+//! starts from a deliberately naive selector (the scalar single-threaded
+//! variant pinned for every shape) so the measured-telemetry retuner has
+//! real ground to win back — the `--require-swap` smoke then asserts a
+//! hot-swap lands on real hardware, not just in simulation.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -54,6 +65,7 @@ use kernelsel::classify::{ClassifierKind, KernelClassifier};
 use kernelsel::coordinator::{AdmissionPolicy, Coordinator, PoolConfig, Routing, SelectorPolicy};
 use kernelsel::dataset::{benchmark_shapes, config_by_name, GemmShape};
 use kernelsel::devsim::{generate_dataset, profile_by_name};
+use kernelsel::engine::cpu::cpu_variants;
 use kernelsel::engine::EngineKind;
 use kernelsel::runtime::Manifest;
 use kernelsel::tuning::{RetuneConfig, TelemetrySnapshot};
@@ -133,40 +145,78 @@ fn main() -> Result<(), String> {
             })?,
         None => AdmissionPolicy::Unbounded,
     };
+    let engine_name = flag_str("--engine").unwrap_or_else(|| "sim".to_string());
     let dir = PathBuf::from("artifacts");
-    // Real artifacts when `make artifacts` has run; synthetic deployment
-    // (served by the SimBackend) otherwise.
-    let manifest = Manifest::load_or_synthetic(&dir);
 
-    // Tuned policy: decision tree over the shipped deployment.
-    let ds = generate_dataset(profile_by_name("i7-6700k").unwrap(), &benchmark_shapes());
-    let deployed: Vec<usize> = manifest
-        .deployed
-        .iter()
-        .map(|n| config_by_name(n).unwrap().index())
-        .collect();
-    let clf = KernelClassifier::fit(ClassifierKind::DecisionTreeB, &ds, &deployed, 7);
-    let policy = SelectorPolicy::Tree(CompiledTree::compile(&clf).unwrap());
+    // Engine-specific setup: selector policy, engine spec, hint pricing
+    // and the traffic shape mix.
+    let (policy, engine, pricing_profile, shapes) = match engine_name.as_str() {
+        "sim" => {
+            // Real artifacts when `make artifacts` has run; synthetic
+            // deployment (served by the SimBackend) otherwise.
+            let manifest = Manifest::load_or_synthetic(&dir);
+            // Tuned policy: decision tree over the shipped deployment.
+            let ds = generate_dataset(profile_by_name("i7-6700k").unwrap(), &benchmark_shapes());
+            let deployed: Vec<usize> = manifest
+                .deployed
+                .iter()
+                .map(|n| config_by_name(n).unwrap().index())
+                .collect();
+            let clf = KernelClassifier::fit(ClassifierKind::DecisionTreeB, &ds, &deployed, 7);
+            let policy = SelectorPolicy::Tree(CompiledTree::compile(&clf).unwrap());
+            // The shape mix a DNN-serving workload would issue (vgg16-tiny
+            // GEMMs + generic buckets — all shipped in both manifests).
+            let shapes = vec![
+                GemmShape::new(128, 128, 128, 1),
+                GemmShape::new(512, 784, 512, 1),
+                GemmShape::new(64, 2304, 128, 1),
+                GemmShape::new(1024, 27, 64, 1),
+                GemmShape::new(256, 576, 128, 1),
+            ];
+            // The policy above is tuned on the i7-6700k dataset; pricing
+            // the hints on the same device makes serving any other
+            // --profile show up as measurable drift.
+            (policy, EngineKind::Sim { profile }, Some("i7-6700k"), shapes)
+        }
+        "cpu" => {
+            // Start from the worst reasonable prior — the scalar
+            // single-threaded variant pinned for every shape — so the
+            // measured-telemetry retuner has real performance to win back.
+            let naive = cpu_variants()
+                .into_iter()
+                .find(|v| v.name() == "cpu_small_pa_sc_t1")
+                .expect("scalar single-threaded variant exists");
+            // CPU traffic drives the manifest's bounded shape buckets
+            // (these execute for real on the host per request). Leaving
+            // pricing_profile unset selects the analytic CPU cost model.
+            let shapes: Vec<GemmShape> = Manifest::synthetic_cpu_shapes()
+                .into_iter()
+                .map(|(m, k, n, b)| GemmShape::new(m, k, n, b))
+                .collect();
+            (SelectorPolicy::Single(naive.index), EngineKind::Cpu { threads: 0 }, None, shapes)
+        }
+        other => return Err(format!("unknown --engine {other:?} (sim|cpu)")),
+    };
 
+    let backend_desc = match &engine {
+        EngineKind::Sim { .. } => format!("{} ({profile})", engine.name()),
+        _ => engine.name().to_string(),
+    };
     let pool = PoolConfig {
         shards,
-        engine: EngineKind::Sim { profile },
+        engine,
         routing,
         imbalance,
         admission,
         retune: retune.clone(),
-        // The policy above is tuned on the i7-6700k dataset; pricing the
-        // hints on the same device makes serving any other --profile show
-        // up as measurable drift.
-        pricing_profile: Some("i7-6700k"),
+        pricing_profile,
         ..PoolConfig::default()
     };
     println!(
-        "starting coordinator: {} shard(s), policy={}, backend={} ({profile}), \
+        "starting coordinator: {} shard(s), policy={}, backend={backend_desc}, \
          routing={} (imbalance {:.1}), admission={}, retune={}",
         shards,
         policy.name(),
-        pool.engine.name(),
         pool.routing.name(),
         pool.imbalance,
         pool.admission.name(),
@@ -194,19 +244,9 @@ fn main() -> Result<(), String> {
         );
     }
 
-    // The shape mix a DNN-serving workload would issue (vgg16-tiny GEMMs +
-    // generic buckets — all shipped as artifacts in both manifests).
-    let shapes = [
-        GemmShape::new(128, 128, 128, 1),
-        GemmShape::new(512, 784, 512, 1),
-        GemmShape::new(64, 2304, 128, 1),
-        GemmShape::new(1024, 27, 64, 1),
-        GemmShape::new(256, 576, 128, 1),
-    ];
-
     // Warm the executable caches (first-touch compiles would otherwise
     // dominate the latency distribution — see EXPERIMENTS.md §Perf).
-    for s in shapes {
+    for &s in &shapes {
         let lhs = fill_buffer(1, s.batch * s.m * s.k);
         let rhs = fill_buffer(2, s.batch * s.k * s.n);
         let _ = coord.call(s, lhs, rhs);
@@ -216,6 +256,7 @@ fn main() -> Result<(), String> {
     let mut joins = Vec::new();
     for client in 0..CLIENTS {
         let coord = coord.clone();
+        let shapes = shapes.clone();
         joins.push(std::thread::spawn(move || {
             let mut ok = 0usize;
             let mut total_latency = 0.0f64;
@@ -250,8 +291,8 @@ fn main() -> Result<(), String> {
     if require_swap {
         let deadline = Instant::now() + Duration::from_secs(20);
         while coord.retune_stats().swaps == 0 && Instant::now() < deadline {
-            // Trickle the two host-cheap shapes; telemetry already covers
-            // the full mix from the main run.
+            // Trickle two cheap shapes; telemetry already covers the
+            // full mix from the main run.
             for (i, s) in [shapes[0], shapes[3]].iter().enumerate() {
                 let lhs = fill_buffer(i as u32, s.batch * s.m * s.k);
                 let rhs = fill_buffer(i as u32 + 3, s.batch * s.k * s.n);

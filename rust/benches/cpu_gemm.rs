@@ -1,0 +1,258 @@
+//! Bench: the native CPU GEMM variant family on real hardware — does
+//! kernel selection earn its keep when the timings are measured, not
+//! simulated?
+//!
+//! Two acceptance gates, both exit-code enforced:
+//!
+//! 1. **Variant spread** — in every shape regime (small / skinny / large)
+//!    at least one grid cell must show the best variant >= 2x the worst:
+//!    if every variant performs the same, selection has nothing to earn.
+//! 2. **Selection regret** — a selector tuned on the collected dataset
+//!    (PCA+K-means deployment, exact-fit decision tree; k swept over a
+//!    small range) must achieve >= 85% of the oracle-best variant's
+//!    throughput, as a geometric mean across the grid.
+//!
+//!     cargo bench --bench cpu_gemm
+//!     cargo bench --bench cpu_gemm -- --smoke --json BENCH_cpu.json
+//!
+//! `--smoke` shrinks the grid and rep count for CI. `--json PATH` writes
+//! the machine-readable `BENCH_cpu.json` (schema `kernelsel-bench-cpu-v1`,
+//! documented in ARCHITECTURE.md). `--threads N` caps the worker budget
+//! for the thread-parallel variants; `--reps N` sets best-of-N timing.
+
+use kernelsel::classify::ClassifierKind;
+use kernelsel::coordinator::tune_selector_with;
+use kernelsel::dataset::Normalization;
+use kernelsel::engine::cpu::{collect_dataset, grid_cells, variant_by_index, GridCell};
+use kernelsel::selection::Method;
+use kernelsel::util::json::Json;
+
+/// Gate 1: best/worst variant ratio required on >= 1 cell per regime.
+const SPREAD_MIN: f64 = 2.0;
+
+/// Gate 2: geomean of (chosen / oracle-best) throughput across the grid.
+const REGRET_MIN: f64 = 0.85;
+
+/// Deployment sizes swept for the selection-regret gate.
+const K_SWEEP: [usize; 3] = [4, 6, 8];
+
+fn flag_value(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).cloned()
+}
+
+fn variant_name(index: usize) -> String {
+    variant_by_index(index).map_or_else(|| format!("cfg{index}"), |v| v.name())
+}
+
+struct CellReport {
+    cell: GridCell,
+    best_index: usize,
+    best_gflops: f64,
+    worst_index: usize,
+    worst_gflops: f64,
+    spread: f64,
+    chosen_index: usize,
+    chosen_gflops: f64,
+    ratio: f64,
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let json_path = flag_value(&args, "--json");
+    let threads = flag_value(&args, "--threads")
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map_or(2, |n| n.get()).min(4)
+        });
+    let reps = flag_value(&args, "--reps")
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(if smoke { 2 } else { 3 });
+    let mode = if smoke { "smoke" } else { "full" };
+
+    let cells = grid_cells(smoke);
+    println!(
+        "== cpu_gemm ({mode}): {} grid cells, {} threads, best-of-{reps} timing ==\n",
+        cells.len(),
+        threads
+    );
+
+    // Collect the real PerfDataset: every variant timed on every cell.
+    let ds = collect_dataset(&cells, threads, reps);
+
+    // Tune on the measured data, sweeping the deployment size; keep the
+    // k whose tree achieves the best geomean ratio vs the oracle.
+    let variant_count = kernelsel::engine::cpu::NUM_CPU_VARIANTS;
+    let mut best_k = K_SWEEP[0];
+    let mut best_geomean = 0.0f64;
+    let mut best_choices: Vec<usize> = Vec::new();
+    for k in K_SWEEP {
+        let Some((_deployed, tree)) = tune_selector_with(
+            Method::PcaKMeans,
+            ClassifierKind::DecisionTreeA,
+            &ds,
+            k,
+            Normalization::Standard,
+            7,
+        ) else {
+            continue;
+        };
+        let choices: Vec<usize> =
+            ds.shapes.iter().map(|s| tree.predict_config(&s.features())).collect();
+        let mut log_sum = 0.0f64;
+        for (i, &chosen) in choices.iter().enumerate() {
+            let oracle = (0..variant_count)
+                .map(|v| ds.gflops[(i, v)])
+                .fold(0.0f64, f64::max);
+            let got = ds.gflops[(i, chosen)];
+            log_sum += (got.max(1e-12) / oracle.max(1e-12)).ln();
+        }
+        let geomean = (log_sum / choices.len() as f64).exp();
+        println!("k={k}: selection geomean {:.1}% of oracle", geomean * 100.0);
+        if geomean > best_geomean {
+            best_geomean = geomean;
+            best_k = k;
+            best_choices = choices;
+        }
+    }
+
+    // Per-cell report under the winning k.
+    let mut reports: Vec<CellReport> = Vec::with_capacity(cells.len());
+    for (i, cell) in cells.iter().enumerate() {
+        let mut best_index = 0usize;
+        let mut worst_index = 0usize;
+        for v in 0..variant_count {
+            if ds.gflops[(i, v)] > ds.gflops[(i, best_index)] {
+                best_index = v;
+            }
+            if ds.gflops[(i, v)] < ds.gflops[(i, worst_index)] {
+                worst_index = v;
+            }
+        }
+        let best_gflops = ds.gflops[(i, best_index)];
+        let worst_gflops = ds.gflops[(i, worst_index)];
+        let chosen_index = best_choices.get(i).copied().unwrap_or(best_index);
+        let chosen_gflops = ds.gflops[(i, chosen_index)];
+        reports.push(CellReport {
+            cell: *cell,
+            best_index,
+            best_gflops,
+            worst_index,
+            worst_gflops,
+            spread: if worst_gflops > 0.0 { best_gflops / worst_gflops } else { 0.0 },
+            chosen_index,
+            chosen_gflops,
+            ratio: if best_gflops > 0.0 { chosen_gflops / best_gflops } else { 0.0 },
+        });
+    }
+
+    println!();
+    for r in &reports {
+        let s = r.cell.shape;
+        println!(
+            "{:>6} {:>4}x{:>4}x{:>4}b{}: best {:>22} {:>7.2} GF/s  worst {:>22} \
+             {:>6.2} GF/s  spread {:>5.2}x  chosen {:>22} ({:>5.1}% of best)",
+            r.cell.regime,
+            s.m,
+            s.k,
+            s.n,
+            s.batch,
+            variant_name(r.best_index),
+            r.best_gflops,
+            variant_name(r.worst_index),
+            r.worst_gflops,
+            r.spread,
+            variant_name(r.chosen_index),
+            r.ratio * 100.0,
+        );
+    }
+
+    // Gate 1: spread per regime.
+    let mut regimes: Vec<(&'static str, f64)> = Vec::new();
+    for r in &reports {
+        match regimes.iter_mut().find(|(name, _)| *name == r.cell.regime) {
+            Some((_, max)) => *max = max.max(r.spread),
+            None => regimes.push((r.cell.regime, r.spread)),
+        }
+    }
+    println!();
+    let mut spread_failed = false;
+    for (regime, max_spread) in &regimes {
+        let ok = *max_spread >= SPREAD_MIN;
+        println!(
+            "{regime}: max best/worst spread {max_spread:.2}x  [{}]",
+            if ok { "OK" } else { "BELOW GATE" }
+        );
+        spread_failed |= !ok;
+    }
+
+    // Gate 2: selection regret.
+    let regret_ok = best_geomean >= REGRET_MIN;
+    println!(
+        "selection (k={best_k}): geomean {:.1}% of oracle-best  [{}]",
+        best_geomean * 100.0,
+        if regret_ok { "OK" } else { "BELOW GATE" }
+    );
+
+    if let Some(path) = json_path {
+        let entries: Vec<Json> = reports
+            .iter()
+            .map(|r| {
+                let s = r.cell.shape;
+                Json::obj(vec![
+                    ("regime", Json::Str(r.cell.regime.to_string())),
+                    ("m", Json::Num(s.m as f64)),
+                    ("k", Json::Num(s.k as f64)),
+                    ("n", Json::Num(s.n as f64)),
+                    ("batch", Json::Num(s.batch as f64)),
+                    ("best_variant", Json::Str(variant_name(r.best_index))),
+                    ("best_gflops", Json::Num(r.best_gflops)),
+                    ("worst_variant", Json::Str(variant_name(r.worst_index))),
+                    ("worst_gflops", Json::Num(r.worst_gflops)),
+                    ("spread", Json::Num(r.spread)),
+                    ("chosen_variant", Json::Str(variant_name(r.chosen_index))),
+                    ("chosen_gflops", Json::Num(r.chosen_gflops)),
+                    ("ratio_to_best", Json::Num(r.ratio)),
+                ])
+            })
+            .collect();
+        let regime_entries: Vec<Json> = regimes
+            .iter()
+            .map(|(name, max_spread)| {
+                Json::obj(vec![
+                    ("regime", Json::Str(name.to_string())),
+                    ("max_spread", Json::Num(*max_spread)),
+                ])
+            })
+            .collect();
+        let doc = Json::obj(vec![
+            ("schema", Json::Str("kernelsel-bench-cpu-v1".to_string())),
+            ("mode", Json::Str(mode.to_string())),
+            ("threads", Json::Num(threads as f64)),
+            ("reps", Json::Num(reps as f64)),
+            ("k_best", Json::Num(best_k as f64)),
+            ("regret_geomean", Json::Num(best_geomean)),
+            ("entries", Json::Arr(entries)),
+            ("regimes", Json::Arr(regime_entries)),
+        ]);
+        std::fs::write(&path, doc.to_string() + "\n").expect("write BENCH_cpu.json");
+        println!("\nwrote {path}");
+    }
+
+    if spread_failed {
+        eprintln!(
+            "\nSPREAD GATE FAILED: every regime needs >= 1 cell with best/worst >= \
+             {SPREAD_MIN}x (see the per-regime lines above)"
+        );
+        std::process::exit(1);
+    }
+    if !regret_ok {
+        eprintln!(
+            "\nREGRET GATE FAILED: the tuned selector must achieve >= {:.0}% of the \
+             oracle-best throughput geomean (got {:.1}%)",
+            REGRET_MIN * 100.0,
+            best_geomean * 100.0
+        );
+        std::process::exit(1);
+    }
+}

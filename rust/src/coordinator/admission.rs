@@ -232,26 +232,70 @@ impl AdmissionPolicy {
     /// submitters cannot race past `max_inflight`). Pure — all side
     /// effects (reservation, peak tracking, counters) belong to the
     /// caller.
+    ///
+    /// Retry hints from this entry point are priced on the *gauge*
+    /// estimate alone — equivalent to [`AdmissionPolicy::admit_with_drain`]
+    /// with no measured drain rate.
     pub fn admit(
         &self,
         cost_ns: u64,
         backlog_ns: u64,
         inflight: usize,
     ) -> Result<(), SubmitError> {
+        self.admit_with_drain(cost_ns, backlog_ns, inflight, 0, 0.0)
+    }
+
+    /// [`AdmissionPolicy::admit`] with the routed shard's measured drain
+    /// rate. The accept/reject *decision* is identical; only the
+    /// `retry_after_hint` on rejections changes. With `drain_per_sec > 0`
+    /// (the shard's EWMA of completions per second over served batches)
+    /// each limb converts "how many completions must drain before a retry
+    /// can be admitted" into wall-clock at the measured rate — a hint
+    /// grounded in how fast the shard actually drains, not in the gauge's
+    /// cost estimates (which the drift detector exists to distrust).
+    /// `queued_depth` is the routed shard's queue depth behind
+    /// `backlog_ns`, used to estimate the backlog's per-job share. With
+    /// `drain_per_sec == 0.0` (no batch served yet) the hints fall back
+    /// to the gauge-estimate formulas bit-for-bit.
+    pub fn admit_with_drain(
+        &self,
+        cost_ns: u64,
+        backlog_ns: u64,
+        inflight: usize,
+        queued_depth: usize,
+        drain_per_sec: f64,
+    ) -> Result<(), SubmitError> {
+        let measured = drain_per_sec > 0.0;
         match self {
             AdmissionPolicy::Unbounded => Ok(()),
             AdmissionPolicy::BoundedQueue { max_inflight, max_queue_ns } => {
                 if inflight >= *max_inflight {
-                    // Retry once one "slot" of the current backlog drains:
-                    // the mean per-request share of the estimated backlog.
-                    let hint = (backlog_ns / inflight.max(1) as u64).max(MIN_RETRY_HINT_NS);
+                    // Retry once enough in-flight slots have drained for
+                    // this request to fit under the cap: measured rate
+                    // when available, else the mean per-request share of
+                    // the estimated backlog.
+                    let hint = if measured {
+                        let jobs = (inflight - *max_inflight + 1) as u64;
+                        drain_hint_ns(jobs, drain_per_sec)
+                    } else {
+                        (backlog_ns / inflight.max(1) as u64).max(MIN_RETRY_HINT_NS)
+                    };
                     return Err(SubmitError::Rejected {
                         reason: RejectReason::QueueFull,
                         retry_after_hint: Some(Duration::from_nanos(hint)),
                     });
                 }
                 if backlog_ns > *max_queue_ns {
-                    let hint = (backlog_ns - *max_queue_ns).max(MIN_RETRY_HINT_NS);
+                    // Gauge ns over budget, converted to "jobs to drain"
+                    // via the backlog's mean per-job share, then to
+                    // wall-clock at the measured rate.
+                    let hint = if measured {
+                        let per_job = (backlog_ns / queued_depth.max(1) as u64).max(1);
+                        let jobs = (backlog_ns - *max_queue_ns).div_ceil(per_job).max(1);
+                        drain_hint_ns(jobs, drain_per_sec)
+                    } else {
+                        (backlog_ns - *max_queue_ns).max(MIN_RETRY_HINT_NS)
+                    };
                     return Err(SubmitError::Rejected {
                         reason: RejectReason::QueueFull,
                         retry_after_hint: Some(Duration::from_nanos(hint)),
@@ -261,10 +305,22 @@ impl AdmissionPolicy {
             }
             AdmissionPolicy::DeadlineShed { deadline_ns } => {
                 if deadline_would_shed(cost_ns, backlog_ns, *deadline_ns) {
-                    let hint = backlog_ns
+                    let excess = backlog_ns
                         .saturating_add(cost_ns)
-                        .saturating_sub(*deadline_ns)
-                        .max(MIN_RETRY_HINT_NS);
+                        .saturating_sub(*deadline_ns);
+                    // The queued fraction of the estimated completion time
+                    // that must drain before the deadline becomes
+                    // meetable, as a job count at the measured rate.
+                    let hint = if measured {
+                        let total = backlog_ns.saturating_add(cost_ns).max(1);
+                        let jobs = (queued_depth.max(1) as u64)
+                            .saturating_mul(excess)
+                            .div_ceil(total)
+                            .max(1);
+                        drain_hint_ns(jobs, drain_per_sec)
+                    } else {
+                        excess.max(MIN_RETRY_HINT_NS)
+                    };
                     return Err(SubmitError::Rejected {
                         reason: RejectReason::DeadlineUnmeetable,
                         retry_after_hint: Some(Duration::from_nanos(hint)),
@@ -273,6 +329,19 @@ impl AdmissionPolicy {
                 Ok(())
             }
         }
+    }
+}
+
+/// Convert "wait for `jobs` completions at `drain_per_sec`" into a retry
+/// hint in nanoseconds, floored at [`MIN_RETRY_HINT_NS`]. Saturates on
+/// non-finite or overflowing products (a pathological rate must never
+/// wrap into a tiny hint).
+fn drain_hint_ns(jobs: u64, drain_per_sec: f64) -> u64 {
+    let ns = jobs.max(1) as f64 * 1e9 / drain_per_sec;
+    if ns.is_finite() && ns < u64::MAX as f64 {
+        (ns as u64).max(MIN_RETRY_HINT_NS)
+    } else {
+        u64::MAX
     }
 }
 
@@ -364,6 +433,68 @@ mod tests {
         assert!(!deadline_would_shed(u64::MAX, u64::MAX, u64::MAX));
         assert!(!deadline_would_shed(0, 0, 0));
         assert!(deadline_would_shed(1, 0, 0));
+    }
+
+    #[test]
+    fn zero_drain_rate_matches_plain_admit_bit_for_bit() {
+        // Until a shard serves its first batch the drain EWMA is 0.0 and
+        // the measured-hint path must be a no-op: same decisions, same
+        // hints as the gauge-estimate formulas.
+        let policies = [
+            AdmissionPolicy::Unbounded,
+            AdmissionPolicy::BoundedQueue { max_inflight: 4, max_queue_ns: 100_000 },
+            AdmissionPolicy::DeadlineShed { deadline_ns: 200_000 },
+        ];
+        for policy in policies {
+            for cost in [1u64, 20_000, 150_000] {
+                for backlog in [0u64, 64_000, 199_999, 1 << 40] {
+                    for inflight in [0usize, 3, 4, 9] {
+                        assert_eq!(
+                            policy.admit(cost, backlog, inflight),
+                            policy.admit_with_drain(cost, backlog, inflight, 7, 0.0),
+                            "{policy:?} cost={cost} backlog={backlog} inflight={inflight}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn measured_drain_prices_inflight_hint_in_jobs_over_rate() {
+        let policy = AdmissionPolicy::BoundedQueue { max_inflight: 4, max_queue_ns: 100_000 };
+        // 6 in flight over a cap of 4: 3 completions must drain (2 excess
+        // plus this request's own slot) at 1000 jobs/sec = 3ms.
+        let err = policy.admit_with_drain(10_000, 50_000, 6, 5, 1000.0).unwrap_err();
+        assert_eq!(err.reason(), RejectReason::QueueFull);
+        assert_eq!(err.retry_after_hint(), Some(Duration::from_nanos(3_000_000)));
+        // The decision itself is unchanged: under the cap still admits.
+        assert_eq!(policy.admit_with_drain(10_000, 50_000, 3, 5, 1000.0), Ok(()));
+    }
+
+    #[test]
+    fn measured_drain_prices_backlog_hint_from_queue_depth() {
+        let policy = AdmissionPolicy::BoundedQueue { max_inflight: 64, max_queue_ns: 100_000 };
+        // 150k gauge ns over 5 queued jobs = 30k per job; 50k of excess
+        // needs ceil(50/30) = 2 drains at 1000 jobs/sec = 2ms.
+        let err = policy.admit_with_drain(10_000, 150_000, 1, 5, 1000.0).unwrap_err();
+        assert_eq!(err.reason(), RejectReason::QueueFull);
+        assert_eq!(err.retry_after_hint(), Some(Duration::from_nanos(2_000_000)));
+    }
+
+    #[test]
+    fn measured_drain_prices_deadline_hint_and_floors_it() {
+        let policy = AdmissionPolicy::DeadlineShed { deadline_ns: 200_000 };
+        // Excess 50k of a 250k completion estimate over 4 queued jobs:
+        // ceil(4 * 50/250) = 1 drain. At 1e6 jobs/sec that is 1000ns —
+        // exactly the MIN_RETRY_HINT_NS floor.
+        let err = policy.admit_with_drain(150_000, 100_000, 0, 4, 1_000_000.0).unwrap_err();
+        assert_eq!(err.reason(), RejectReason::DeadlineUnmeetable);
+        assert_eq!(err.retry_after_hint(), Some(Duration::from_nanos(MIN_RETRY_HINT_NS)));
+        // A slow measured drain stretches the same rejection's hint far
+        // past what the gauge formula (excess = 50us) would claim.
+        let slow = policy.admit_with_drain(150_000, 100_000, 0, 4, 10.0).unwrap_err();
+        assert_eq!(slow.retry_after_hint(), Some(Duration::from_nanos(100_000_000)));
     }
 
     #[test]

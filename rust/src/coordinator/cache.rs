@@ -143,6 +143,52 @@ pub fn estimate_cost_secs(
     predict_dispatch_secs(profile, shape, meta.config_index)
 }
 
+/// How dispatches are priced before telemetry warms up: the model behind
+/// resolution cost hints, drift detection and the retuner's prior on
+/// unmeasured cells. Each backend family has its own notion of "predicted
+/// cost" — devsim profiles for the simulated backends, the analytic CPU
+/// prior for the native backend — and everything downstream of the cache
+/// prices through this enum instead of assuming a device profile exists.
+#[derive(Clone, Copy, Debug)]
+pub enum CostModel {
+    /// The devsim analytical model on a device profile (simulated
+    /// backends, or native backends priced against a reference device).
+    Devsim(&'static DeviceProfile),
+    /// The analytic prior for the native CPU backend's GEMM variant
+    /// family ([`crate::engine::cpu::predict_cpu_secs`]).
+    CpuAnalytic,
+}
+
+impl CostModel {
+    /// The devsim model for a named profile, falling back to the default
+    /// profile for unknown names (hints only need to be relatively
+    /// consistent, not exact).
+    pub fn devsim(profile_name: &str) -> CostModel {
+        let profile = profile_by_name(profile_name)
+            .or_else(|| profile_by_name("i7-6700k"))
+            .expect("default devsim profile exists");
+        CostModel::Devsim(profile)
+    }
+
+    /// Predicted device-seconds of one dispatch of `config` at `shape`.
+    /// Total: `None` configs price as the comparator backend; always
+    /// positive and finite.
+    pub fn predict_secs(&self, shape: &GemmShape, config: Option<usize>) -> f64 {
+        match self {
+            CostModel::Devsim(profile) => predict_dispatch_secs(profile, shape, config),
+            CostModel::CpuAnalytic => crate::engine::cpu::predict_cpu_secs(shape, config),
+        }
+    }
+
+    /// Stable label (reports, logs).
+    pub fn name(&self) -> &'static str {
+        match self {
+            CostModel::Devsim(_) => "devsim",
+            CostModel::CpuAnalytic => "cpu-analytic",
+        }
+    }
+}
+
 type StripeMap = HashMap<GemmShape, Arc<ResolvedKernel>>;
 
 /// The memoized selector hot path: a bounded, striped shape ->
@@ -150,8 +196,8 @@ type StripeMap = HashMap<GemmShape, Arc<ResolvedKernel>>;
 /// measured-over-modeled cost hints (see the module docs).
 pub struct ResolutionCache {
     cap: usize,
-    /// Device profile used to price resolutions for the load gauges.
-    profile: &'static DeviceProfile,
+    /// Cost model used to price resolutions for the load gauges.
+    model: CostModel,
     /// Measured-time source for the cost-hint handoff (None = devsim only).
     telemetry: Option<Arc<TelemetrySink>>,
     /// Striped read-mostly map; see the module docs for the epoch scheme.
@@ -177,12 +223,16 @@ impl ResolutionCache {
     /// profile (falls back to the default profile for unknown names —
     /// hints only need to be relatively consistent, not exact).
     pub fn with_profile(capacity: usize, profile_name: &str) -> ResolutionCache {
-        let profile = profile_by_name(profile_name)
-            .or_else(|| profile_by_name("i7-6700k"))
-            .expect("default devsim profile exists");
+        ResolutionCache::with_model(capacity, CostModel::devsim(profile_name))
+    }
+
+    /// A cache whose cost hints are priced by an explicit [`CostModel`]
+    /// (how CPU-backed pools avoid pricing native kernels on a simulated
+    /// GPU).
+    pub fn with_model(capacity: usize, model: CostModel) -> ResolutionCache {
         ResolutionCache {
             cap: capacity.max(1),
-            profile,
+            model,
             telemetry: None,
             stripes: (0..STRIPES).map(|_| RwLock::new(Arc::new(StripeMap::new()))).collect(),
             order: Mutex::new(VecDeque::new()),
@@ -198,9 +248,10 @@ impl ResolutionCache {
         self
     }
 
-    /// The devsim profile cost hints are priced against.
-    pub fn pricing_profile(&self) -> &'static DeviceProfile {
-        self.profile
+    /// The cost model hints are priced against (also the drift baseline
+    /// and the retuner's prior for unmeasured cells).
+    pub fn cost_model(&self) -> CostModel {
+        self.model
     }
 
     fn stripe_of(&self, shape: &GemmShape) -> usize {
@@ -239,7 +290,7 @@ impl ResolutionCache {
             return Ok(hit);
         }
         let (meta, resolution, generation) = registry.resolve(shape)?;
-        let cost_hint_secs = estimate_cost_secs(self.profile, meta, shape);
+        let cost_hint_secs = self.model.predict_secs(shape, meta.config_index);
         let artifact: Arc<str> = Arc::from(meta.path.as_str());
         let mut hasher = DefaultHasher::new();
         meta.path.hash(&mut hasher);
@@ -454,6 +505,17 @@ mod tests {
         let cache = ResolutionCache::with_profile(16, "not-a-device");
         let r = cache.resolve(&reg, &GemmShape::new(64, 64, 64, 1)).unwrap();
         assert!(r.cost_hint_secs > 0.0);
+    }
+
+    #[test]
+    fn cpu_model_prices_cpu_manifest_resolutions() {
+        let reg = KernelRegistry::new(Manifest::synthetic_cpu(), SelectorPolicy::Xla);
+        let cache = ResolutionCache::with_model(16, CostModel::CpuAnalytic);
+        assert_eq!(cache.cost_model().name(), "cpu-analytic");
+        let small = cache.resolve(&reg, &GemmShape::new(16, 16, 16, 1)).unwrap();
+        let large = cache.resolve(&reg, &GemmShape::new(192, 192, 192, 1)).unwrap();
+        assert!(small.cost_hint_secs > 0.0);
+        assert!(large.cost_hint_secs > small.cost_hint_secs);
     }
 
     #[test]

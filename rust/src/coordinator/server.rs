@@ -52,7 +52,7 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::admission::{AdmissionPolicy, SubmitError};
 use crate::coordinator::batcher::{Batcher, BatcherConfig, Pending};
-use crate::coordinator::cache::{ResolutionCache, ResolvedKernel};
+use crate::coordinator::cache::{CostModel, ResolutionCache, ResolvedKernel};
 use crate::coordinator::completion::{Completion, CompletionPool, Ticket};
 use crate::coordinator::metrics::{Metrics, StripedCounter};
 use crate::coordinator::registry::KernelRegistry;
@@ -139,14 +139,26 @@ const IDLE_POLL: Duration = Duration::from_millis(5);
 /// reallocate on the client thread (the zero-allocation hit path).
 const INJECTOR_RESERVE: usize = 32;
 
+/// EWMA smoothing factor for the measured per-shard drain rate. Biased
+/// toward history (new sample weighted 1/4) because batch-to-batch
+/// throughput is noisy — one unusually small or large batch should nudge
+/// the retry hints, not whipsaw them.
+const DRAIN_EWMA_ALPHA: f64 = 0.25;
+
 /// Atomic load gauge of one executor shard: how many requests it owns
 /// (injector + batcher + currently executing) and their summed estimated
 /// cost. Written by the router on submit, by the shard on completion, and
-/// transferred wholesale on steals.
+/// transferred wholesale on steals. Also carries the shard's measured
+/// drain rate (completions per second, EWMA over served batches) — the
+/// signal admission retry hints are priced on once it is warm.
 #[derive(Debug, Default)]
 pub struct ShardLoad {
     queued: AtomicUsize,
     cost_ns: AtomicU64,
+    /// Measured drain rate as `f64` bits (0 bits == 0.0 == unmeasured).
+    /// Written only by the owning shard thread after each served batch;
+    /// read lock-free by the submit path.
+    drain_rate_bits: AtomicU64,
 }
 
 impl ShardLoad {
@@ -160,9 +172,30 @@ impl ShardLoad {
         self.cost_ns.fetch_sub(cost_ns, Ordering::Relaxed);
     }
 
+    /// Fold `n` completions served over `secs` of wall clock into the
+    /// drain-rate EWMA. Called only by the owning shard thread at the end
+    /// of each batch, so the load-modify-store needs no CAS loop. The
+    /// first sample seeds the EWMA directly.
+    fn note_completions(&self, n: usize, secs: f64) {
+        if n == 0 || !(secs > 0.0) {
+            return;
+        }
+        let sample = n as f64 / secs;
+        let prev = f64::from_bits(self.drain_rate_bits.load(Ordering::Relaxed));
+        let next =
+            if prev > 0.0 { prev + DRAIN_EWMA_ALPHA * (sample - prev) } else { sample };
+        self.drain_rate_bits.store(next.to_bits(), Ordering::Relaxed);
+    }
+
     /// Requests currently owned by the shard.
     pub fn depth(&self) -> usize {
         self.queued.load(Ordering::Relaxed)
+    }
+
+    /// Measured drain rate in completions per second (EWMA over served
+    /// batches); `0.0` until the shard completes its first batch.
+    pub fn drain_rate_per_sec(&self) -> f64 {
+        f64::from_bits(self.drain_rate_bits.load(Ordering::Relaxed))
     }
 
     /// The scalar the router compares: estimated in-flight cost plus a
@@ -209,12 +242,13 @@ pub struct PoolConfig {
     /// telemetry still accumulates and measured cost hints still apply.
     pub retune: Option<RetuneConfig>,
     /// Devsim profile cost hints (and drift predictions) are priced on.
-    /// `None` (the default) derives it from the engine — a sim pool
-    /// prices on the profile it serves, preserving the pre-retuning
-    /// routing behavior. Set it explicitly to the device the deployed
-    /// selector was *tuned* against when that differs from the serving
-    /// device: the measured-vs-predicted gap between the two is exactly
-    /// the drift signal the retuner watches.
+    /// `None` (the default) derives the [`CostModel`] from the engine —
+    /// a sim pool prices on the profile it serves (preserving the
+    /// pre-retuning routing behavior) and a CPU pool prices on the
+    /// native backend's analytic prior. Set it explicitly to the device
+    /// the deployed selector was *tuned* against when that differs from
+    /// the serving device: the measured-vs-predicted gap between the two
+    /// is exactly the drift signal the retuner watches.
     pub pricing_profile: Option<&'static str>,
 }
 
@@ -501,38 +535,65 @@ impl Coordinator {
         cfg: PoolConfig,
     ) -> Result<Coordinator, String> {
         // The SimBackend reads no artifacts, so a missing manifest falls
-        // back to the synthetic deployment; native backends need the real
-        // one.
+        // back to the synthetic deployment; the CPU backend falls back to
+        // the synthetic deployment of its own variant family; PJRT needs
+        // real artifacts.
         #[cfg(feature = "pjrt")]
         let manifest = match &cfg.engine {
             EngineKind::Sim { .. } | EngineKind::SimPaced { .. } => {
                 Manifest::load_or_synthetic(&artifacts_dir)
             }
+            EngineKind::Cpu { .. } => {
+                Manifest::load(&artifacts_dir).unwrap_or_else(|_| Manifest::synthetic_cpu())
+            }
             EngineKind::Pjrt => Manifest::load(&artifacts_dir)?,
         };
         #[cfg(not(feature = "pjrt"))]
-        let manifest = Manifest::load_or_synthetic(&artifacts_dir);
+        let manifest = match &cfg.engine {
+            EngineKind::Cpu { .. } => {
+                Manifest::load(&artifacts_dir).unwrap_or_else(|_| Manifest::synthetic_cpu())
+            }
+            _ => Manifest::load_or_synthetic(&artifacts_dir),
+        };
 
-        // Pricing profile for cost hints and drift predictions: explicit
-        // override, else derived from the engine (sim pools price on the
-        // profile they serve; native backends default to the repo's
-        // reference tuning device).
-        let pricing_profile = cfg.pricing_profile.unwrap_or(match &cfg.engine {
-            EngineKind::Sim { profile } | EngineKind::SimPaced { profile, .. } => *profile,
-            #[cfg(feature = "pjrt")]
-            EngineKind::Pjrt => "i7-6700k",
-        });
+        // Cost model for dispatch hints and drift predictions: an
+        // explicit profile override wins, else it derives from the engine
+        // — sim pools price on the profile they serve, the native CPU
+        // backend prices on its analytic prior, PJRT defaults to the
+        // repo's reference tuning device.
+        let model = match cfg.pricing_profile {
+            Some(name) => CostModel::devsim(name),
+            None => match &cfg.engine {
+                EngineKind::Sim { profile } | EngineKind::SimPaced { profile, .. } => {
+                    CostModel::devsim(profile)
+                }
+                EngineKind::Cpu { .. } => CostModel::CpuAnalytic,
+                #[cfg(feature = "pjrt")]
+                EngineKind::Pjrt => CostModel::devsim("i7-6700k"),
+            },
+        };
+
+        let n_shards = cfg.shards.max(1);
+        // Resolve the CPU engine's thread budget up front: 0 means "one
+        // worker per available core", divided across the shards so a
+        // multi-shard pool does not oversubscribe the host.
+        let mut engine_spec = cfg.engine.clone();
+        if let EngineKind::Cpu { threads } = &mut engine_spec {
+            if *threads == 0 {
+                let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
+                *threads = (cores / n_shards).max(1);
+            }
+        }
 
         let registry = Arc::new(KernelRegistry::new(manifest, policy));
         let telemetry = Arc::new(TelemetrySink::default());
         let inflight = Arc::new(AtomicUsize::new(0));
-        let n_shards = cfg.shards.max(1);
         let queues: Arc<Vec<Arc<ShardQueue>>> =
             Arc::new((0..n_shards).map(|_| Arc::new(ShardQueue::new())).collect());
         let mut workers: Vec<Option<JoinHandle<()>>> = Vec::with_capacity(n_shards);
         for shard_id in 0..n_shards {
             let (ready_tx, ready_rx) = channel::<Result<(), String>>();
-            let engine = cfg.engine.clone();
+            let engine = engine_spec.clone();
             let batcher_cfg = cfg.batcher.clone();
             let dir = artifacts_dir.clone();
             let queues_for_shard = queues.clone();
@@ -582,7 +643,7 @@ impl Coordinator {
             }
         }
         let cache = Arc::new(
-            ResolutionCache::with_profile(cfg.selector_cache, pricing_profile)
+            ResolutionCache::with_model(cfg.selector_cache, model)
                 .with_telemetry(telemetry.clone()),
         );
         let retune_stats = Arc::new(Mutex::new(RetunerStats::default()));
@@ -767,7 +828,8 @@ impl Coordinator {
         if self.admission.is_unbounded() {
             return Ok(InflightSlot(None));
         }
-        self.admit_at(cost_ns, self.queues[shard].load.score_ns())
+        let load = &self.queues[shard].load;
+        self.admit_at(cost_ns, load.score_ns(), load.depth(), load.drain_rate_per_sec())
     }
 
     /// The shared reservation protocol for a known-bounding policy and an
@@ -776,15 +838,27 @@ impl Coordinator {
     /// success the reservation IS the returned [`InflightSlot`] — the
     /// caller moves it into the job, so acquire and release are paired
     /// structurally and no code path can take one without the other.
-    fn admit_at(&self, cost_ns: u64, backlog_ns: u64) -> Result<InflightSlot, SubmitError> {
+    /// `queued_depth` and `drain_per_sec` come from the routed shard's
+    /// gauge: they only shape rejection retry hints, never the decision.
+    fn admit_at(
+        &self,
+        cost_ns: u64,
+        backlog_ns: u64,
+        queued_depth: usize,
+        drain_per_sec: f64,
+    ) -> Result<InflightSlot, SubmitError> {
         if !self.admission.caps_inflight() {
             // DeadlineShed never reads the in-flight count: no
             // pool-global RMW traffic on its submit path.
-            self.admission.admit(cost_ns, backlog_ns, 0)?;
+            self.admission
+                .admit_with_drain(cost_ns, backlog_ns, 0, queued_depth, drain_per_sec)?;
             return Ok(InflightSlot(None));
         }
         let reserved = self.inflight.fetch_add(1, Ordering::AcqRel);
-        match self.admission.admit(cost_ns, backlog_ns, reserved) {
+        match self
+            .admission
+            .admit_with_drain(cost_ns, backlog_ns, reserved, queued_depth, drain_per_sec)
+        {
             Ok(()) => {
                 self.front.inflight_peak.fetch_max(reserved + 1, Ordering::Relaxed);
                 Ok(InflightSlot(Some(self.inflight.clone())))
@@ -894,16 +968,21 @@ impl Coordinator {
             // In-flight slots are individually reserved, exactly as in
             // `admit` — concurrent submitters cannot race past the cap.
             let bounding = !self.admission.is_unbounded();
-            let mut backlog_ns =
-                if bounding { self.queues[shard].load.score_ns() } else { 0 };
+            let (mut backlog_ns, mut queued_depth, drain_per_sec) = if bounding {
+                let load = &self.queues[shard].load;
+                (load.score_ns(), load.depth(), load.drain_rate_per_sec())
+            } else {
+                (0, 0, 0.0)
+            };
             let mut jobs = Vec::with_capacity(run.len());
             for (lhs, rhs) in run {
                 let reservation = if bounding {
-                    match self.admit_at(cost_ns, backlog_ns) {
+                    match self.admit_at(cost_ns, backlog_ns, queued_depth, drain_per_sec) {
                         Ok(slot) => {
                             backlog_ns = backlog_ns
                                 .saturating_add(cost_ns)
                                 .saturating_add(QUEUED_OVERHEAD_NS);
+                            queued_depth += 1;
                             slot
                         }
                         Err(err) => {
@@ -1249,6 +1328,8 @@ fn run_batch(
     telemetry: &TelemetrySink,
     metrics: &mut Metrics,
 ) {
+    let t_batch = Instant::now();
+    let n_jobs = group.len();
     metrics.record_batch(group.len());
     metrics.record_occupancy(load.depth());
     // One prepare per batch: first touch compiles, later batches hit the
@@ -1306,6 +1387,9 @@ fn run_batch(
             latency,
         });
     }
+    // Fold this batch into the shard's measured drain rate — the signal
+    // admission retry hints are priced on once it is warm.
+    load.note_completions(n_jobs, t_batch.elapsed().as_secs_f64());
 }
 
 #[cfg(test)]
@@ -2108,5 +2192,86 @@ mod tests {
         );
         let busy = report.per_shard.iter().filter(|m| m.requests > 0).count();
         assert!(busy >= 2, "stolen batches must execute on other shards");
+    }
+
+    #[test]
+    fn cpu_pool_serves_bit_identical_results_through_variant_family() {
+        // Tentpole: a native CPU pool (synthetic CPU deployment, thread
+        // budget auto-divided across shards) serving through a threaded
+        // vectorized variant must return bit-identical results to the
+        // reference host GEMM at every shape regime.
+        let threaded = crate::engine::cpu::cpu_variants()
+            .into_iter()
+            .find(|v| v.name() == "cpu_large_pb_vec_tp")
+            .expect("variant family member");
+        let coord = Coordinator::start_pool(
+            PathBuf::from("/nonexistent-artifacts"),
+            SelectorPolicy::Single(threaded.index),
+            PoolConfig {
+                shards: 2,
+                engine: EngineKind::Cpu { threads: 0 },
+                ..PoolConfig::default()
+            },
+        )
+        .expect("coordinator start");
+        assert_eq!(coord.engine_name(), "cpu");
+        let shapes = [
+            GemmShape::new(16, 16, 16, 1),
+            GemmShape::new(64, 64, 64, 1),
+            GemmShape::new(32, 1024, 24, 1),
+        ];
+        for (i, shape) in shapes.iter().enumerate() {
+            let lhs = fill_buffer(i as u32 + 1, shape.batch * shape.m * shape.k);
+            let rhs = fill_buffer(i as u32 + 9, shape.batch * shape.k * shape.n);
+            let resp = coord.call(*shape, lhs.clone(), rhs.clone()).unwrap();
+            assert_eq!(resp.config_used, Some(threaded.index));
+            let out = resp.result.expect("cpu gemm");
+            assert_eq!(out, host_gemm(shape, &lhs, &rhs).unwrap(), "bit-exact vs reference");
+        }
+        let metrics = coord.stop();
+        assert_eq!(metrics.requests, 3);
+        assert_eq!(metrics.failures, 0);
+    }
+
+    #[test]
+    fn drain_rate_ewma_warms_from_served_batches() {
+        // Unit: the EWMA seeds on the first sample and blends at 1/4.
+        let load = ShardLoad::default();
+        assert_eq!(load.drain_rate_per_sec(), 0.0);
+        load.note_completions(4, 2.0); // 2 jobs/sec seeds directly
+        assert!((load.drain_rate_per_sec() - 2.0).abs() < 1e-12);
+        load.note_completions(6, 1.0); // blend toward 6/sec: 2 + (6-2)/4
+        assert!((load.drain_rate_per_sec() - 3.0).abs() < 1e-12);
+        load.note_completions(0, 1.0); // no completions: unchanged
+        load.note_completions(3, 0.0); // no elapsed time: unchanged
+        assert!((load.drain_rate_per_sec() - 3.0).abs() < 1e-12);
+
+        // Pool: served batches must warm the shard's measured rate — the
+        // signal bounded rejections price their retry hints on.
+        let coord = Coordinator::start_pool(
+            PathBuf::from("/nonexistent-artifacts"),
+            SelectorPolicy::Xla,
+            PoolConfig {
+                shards: 1,
+                admission: AdmissionPolicy::BoundedQueue {
+                    max_inflight: 1000,
+                    max_queue_ns: u64::MAX,
+                },
+                ..PoolConfig::default()
+            },
+        )
+        .expect("coordinator start");
+        let shape = GemmShape::new(64, 64, 64, 1);
+        for i in 0..6u32 {
+            let resp = coord
+                .call(shape, fill_buffer(i, 64 * 64), fill_buffer(i + 3, 64 * 64))
+                .unwrap();
+            assert!(resp.result.is_ok());
+        }
+        assert!(
+            coord.queues[0].load.drain_rate_per_sec() > 0.0,
+            "served batches must warm the measured drain rate"
+        );
+        coord.stop();
     }
 }

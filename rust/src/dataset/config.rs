@@ -3,6 +3,8 @@
 //! geometry and the VMEM-footprint estimate. A golden test pins the two
 //! implementations together via the artifact manifest.
 
+/// Legal per-axis micro-tile parameter values (paper §3: powers of two
+/// up to 8 on each of the three accumulator axes).
 pub const TILE_SIZES: [usize; 4] = [1, 2, 4, 8];
 
 /// The ten legal work-group pairings of the paper.
@@ -23,15 +25,22 @@ pub const WORKGROUPS: [(usize, usize); 10] = [
 /// `config.py::K_UNIT`).
 pub const K_UNIT: usize = 32;
 
+/// Size of the full configuration space: 4^3 tile triples x 10 legal
+/// work-group pairings = 640 (the paper's kernel count).
 pub const NUM_CONFIGS: usize = TILE_SIZES.len().pow(3) * WORKGROUPS.len();
 
 /// One point in the kernel configuration space.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct KernelConfig {
+    /// Micro-tile rows accumulated per work-item (`rows` in the paper).
     pub acc_r: usize,
+    /// K-depth tile parameter; one unit is [`K_UNIT`] elements of K.
     pub acc_a: usize,
+    /// Micro-tile cols accumulated per work-item (`cols` in the paper).
     pub acc_c: usize,
+    /// Work-group rows (first element of the legal [`WORKGROUPS`] pair).
     pub wg_r: usize,
+    /// Work-group cols (second element of the legal [`WORKGROUPS`] pair).
     pub wg_c: usize,
 }
 
@@ -51,6 +60,7 @@ impl KernelConfig {
         self.acc_a * K_UNIT
     }
 
+    /// Canonical name, e.g. `r4a8c4_wg16x16` — the artifact/manifest key.
     pub fn name(&self) -> String {
         format!(
             "r{}a{}c{}_wg{}x{}",

@@ -9,9 +9,13 @@ use crate::linalg::stats::argmax;
 use crate::linalg::Matrix;
 use crate::util::Rng;
 
+/// One device's benchmark matrix: GFLOP/s for every (size set, config)
+/// pair — the substrate of selection (§4) and classification (§5).
 #[derive(Clone, Debug)]
 pub struct PerfDataset {
+    /// Device label the measurements came from (profile name or host tag).
     pub device: String,
+    /// The size sets (rows of the matrix), in measurement order.
     pub shapes: Vec<GemmShape>,
     /// Raw GFLOP/s: gflops[(shape_idx, config_idx)].
     pub gflops: Matrix,
@@ -20,17 +24,21 @@ pub struct PerfDataset {
 /// A train/test split as index lists into `PerfDataset::shapes`.
 #[derive(Clone, Debug)]
 pub struct Split {
+    /// Row indices in the training fold.
     pub train: Vec<usize>,
+    /// Row indices in the held-out fold.
     pub test: Vec<usize>,
 }
 
 impl PerfDataset {
+    /// Wrap a measured matrix; panics unless it is shapes x NUM_CONFIGS.
     pub fn new(device: &str, shapes: Vec<GemmShape>, gflops: Matrix) -> PerfDataset {
         assert_eq!(gflops.rows, shapes.len());
         assert_eq!(gflops.cols, NUM_CONFIGS);
         PerfDataset { device: device.to_string(), shapes, gflops }
     }
 
+    /// Number of size sets (matrix rows).
     pub fn n_shapes(&self) -> usize {
         self.shapes.len()
     }
@@ -98,6 +106,8 @@ impl PerfDataset {
 
     // -- CSV codec ----------------------------------------------------------
 
+    /// Serialize as CSV: an `m,k,n,batch` prefix plus one column per
+    /// config in canonical name order.
     pub fn to_csv(&self) -> String {
         let mut out = String::new();
         out.push_str("m,k,n,batch");
@@ -116,6 +126,8 @@ impl PerfDataset {
         out
     }
 
+    /// Parse the [`Self::to_csv`] format, validating the header against
+    /// the canonical config space (order included).
     pub fn from_csv(device: &str, text: &str) -> Result<PerfDataset, String> {
         let mut lines = text.lines();
         let header = lines.next().ok_or("empty csv")?;
@@ -167,10 +179,12 @@ impl PerfDataset {
         Ok(PerfDataset::new(device, shapes, Matrix::from_rows(&rows)))
     }
 
+    /// Write the CSV form to `path`.
     pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
         std::fs::write(path, self.to_csv())
     }
 
+    /// Read a dataset back from a [`Self::save`]d CSV file.
     pub fn load(device: &str, path: &std::path::Path) -> Result<PerfDataset, String> {
         let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
         PerfDataset::from_csv(device, &text)

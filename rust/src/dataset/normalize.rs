@@ -11,14 +11,20 @@
 
 use crate::linalg::Matrix;
 
+/// One of the paper's §3.4 row-normalization schemes (module docs).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Normalization {
+    /// Divide by the row max; the best kernel maps to exactly 1.0.
     Standard,
+    /// Standard, then clamp values under [`CUTOFF`] to 0 (no rescale).
     RawCutoff,
+    /// Clamp under [`CUTOFF`] then rescale the survivors to [0, 1].
     Cutoff,
+    /// Steep logistic on the standard values: 85% of peak maps to 0.5.
     Sigmoid,
 }
 
+/// Every scheme, in the paper's presentation order (sweep helper).
 pub const ALL_NORMALIZATIONS: [Normalization; 4] = [
     Normalization::Standard,
     Normalization::RawCutoff,
@@ -26,9 +32,11 @@ pub const ALL_NORMALIZATIONS: [Normalization; 4] = [
     Normalization::Sigmoid,
 ];
 
+/// Relative-performance threshold of the two cutoff schemes (paper: 0.9).
 pub const CUTOFF: f64 = 0.9;
 
 impl Normalization {
+    /// Stable CLI/JSON name (`standard`, `raw-cutoff`, `cutoff`, `sigmoid`).
     pub fn name(&self) -> &'static str {
         match self {
             Normalization::Standard => "standard",
@@ -38,6 +46,7 @@ impl Normalization {
         }
     }
 
+    /// Inverse of [`Self::name`].
     pub fn by_name(name: &str) -> Option<Normalization> {
         ALL_NORMALIZATIONS.iter().copied().find(|n| n.name() == name)
     }

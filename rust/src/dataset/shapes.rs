@@ -8,17 +8,23 @@
 /// One benchmarked GEMM problem: out = lhs (b, m, k) x rhs (b, k, n).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct GemmShape {
+    /// Output rows (im2col: out_h * out_w).
     pub m: usize,
+    /// Reduction depth (im2col: kh * kw * cin).
     pub k: usize,
+    /// Output cols (im2col: cout).
     pub n: usize,
+    /// Independent GEMMs sharing the shape (leading batch dimension).
     pub batch: usize,
 }
 
 impl GemmShape {
+    /// Construct a shape from its four dimensions.
     pub fn new(m: usize, k: usize, n: usize, batch: usize) -> GemmShape {
         GemmShape { m, k, n, batch }
     }
 
+    /// Total floating-point work: 2 * batch * m * k * n.
     pub fn flops(&self) -> f64 {
         2.0 * self.batch as f64 * self.m as f64 * self.k as f64 * self.n as f64
     }
@@ -39,11 +45,13 @@ impl GemmShape {
         ]
     }
 
+    /// Compact display/file label, e.g. `m512k784n512b16`.
     pub fn label(&self) -> String {
         format!("m{}k{}n{}b{}", self.m, self.k, self.n, self.batch)
     }
 }
 
+/// Names of [`GemmShape::features`] components, index-aligned.
 pub const FEATURE_NAMES: [&str; 8] = [
     "log2_m",
     "log2_k",

@@ -6,28 +6,42 @@
 //! register budget, overheads) are calibrated so the simulated datasets hit
 //! the paper's qualitative landmarks (see devsim::tests).
 
+/// Broad device class; switches which efficiency heuristics apply.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DeviceKind {
+    /// Dedicated-memory GPU (paper's R9 Nano class).
     DiscreteGpu,
+    /// Host CPU running SIMD kernels (paper's i7-6700K class).
     Cpu,
+    /// GPU sharing system memory with the host (HD 530 class).
     IntegratedGpu,
+    /// Power-constrained mobile GPU (Mali G71 class).
     MobileGpu,
 }
 
+/// One simulated device: datasheet figures plus calibrated efficiency
+/// knobs consumed by the analytical cost model in [`crate::devsim`].
 #[derive(Clone, Debug)]
 pub struct DeviceProfile {
+    /// Stable profile name (`--profile` flag, dataset device label).
     pub name: &'static str,
+    /// Device class; selects the per-kind efficiency heuristics.
     pub kind: DeviceKind,
+    /// Parallel compute units (CUs / cores / EUs).
     pub compute_units: f64,
+    /// Peak f32 throughput in GFLOP/s.
     pub peak_gflops: f64,
+    /// Sustained main-memory bandwidth in GB/s.
     pub mem_bw_gbs: f64,
     /// Effective bandwidth when the whole working set fits in cache.
     pub cache_bw_gbs: f64,
+    /// Last-level cache size in KiB.
     pub cache_kb: f64,
     /// Resident work-items per CU needed to hide latency at peak.
     pub threads_for_peak: f64,
     /// Per-work-item register budget before spilling.
     pub regs_per_thread: f64,
+    /// Severity of the performance cliff once registers spill.
     pub spill_exponent: f64,
     /// Independent accumulators needed per work-item for full FMA pipe.
     pub ilp_for_peak: f64,
@@ -35,10 +49,13 @@ pub struct DeviceProfile {
     pub intensity_half: f64,
     /// Preferred f32 vector width for loads.
     pub vec_width: f64,
+    /// Fixed kernel-launch latency in microseconds.
     pub kernel_launch_us: f64,
+    /// Per-work-group scheduling overhead in microseconds.
     pub wg_overhead_us: f64,
     /// Exponent of the cache-overflow bandwidth penalty (0 disables).
     pub cache_pressure: f64,
+    /// Lognormal measurement-noise sigma applied to simulated timings.
     pub noise_sigma: f64,
 }
 
@@ -184,11 +201,14 @@ const fn mali_g71() -> DeviceProfile {
     }
 }
 
+/// The four shipped profiles: the paper's two benchmark devices plus the
+/// two §6 deployment targets, in presentation order.
 pub fn all_profiles() -> &'static [DeviceProfile] {
     static PROFILES: [DeviceProfile; 4] = [r9_nano(), i7_6700k(), hd530(), mali_g71()];
     &PROFILES
 }
 
+/// Look a profile up by its stable [`DeviceProfile::name`].
 pub fn profile_by_name(name: &str) -> Option<&'static DeviceProfile> {
     all_profiles().iter().find(|p| p.name == name)
 }

@@ -1,0 +1,116 @@
+//! The CPU benchmark grid: measure every variant on regime-labelled GEMM
+//! shapes and package the numbers as a [`PerfDataset`], so the existing
+//! subset-selection and classifier pipeline trains on *measured* CPU
+//! performance exactly the way it trains on devsim datasets.
+
+use std::time::Instant;
+
+use crate::dataset::{GemmShape, PerfDataset, NUM_CONFIGS};
+use crate::linalg::Matrix;
+use crate::util::fill_buffer;
+
+use super::{cpu_variants, gemm_variant};
+
+/// One benchmark grid cell: a GEMM shape plus the shape regime it
+/// represents (`"small"`, `"skinny"` or `"large"`).
+#[derive(Clone, Copy, Debug)]
+pub struct GridCell {
+    /// The GEMM problem measured in this cell.
+    pub shape: GemmShape,
+    /// Regime label, used by the bench's per-regime spread gates.
+    pub regime: &'static str,
+}
+
+impl GridCell {
+    fn new(m: usize, k: usize, n: usize, b: usize, regime: &'static str) -> GridCell {
+        GridCell { shape: GemmShape::new(m, k, n, b), regime }
+    }
+}
+
+/// The measurement grid. Smoke mode keeps two cells per regime (seconds
+/// of wall clock in CI); full mode adds larger and batched cells.
+pub fn grid_cells(smoke: bool) -> Vec<GridCell> {
+    let mut cells = vec![
+        GridCell::new(16, 16, 16, 1, "small"),
+        GridCell::new(32, 32, 32, 2, "small"),
+        GridCell::new(16, 2048, 16, 1, "skinny"),
+        GridCell::new(32, 1024, 24, 1, "skinny"),
+        GridCell::new(128, 128, 128, 1, "large"),
+        GridCell::new(192, 192, 192, 1, "large"),
+    ];
+    if !smoke {
+        cells.push(GridCell::new(24, 24, 24, 4, "small"));
+        cells.push(GridCell::new(48, 48, 48, 1, "small"));
+        cells.push(GridCell::new(8, 4096, 32, 1, "skinny"));
+        cells.push(GridCell::new(64, 1536, 48, 2, "skinny"));
+        cells.push(GridCell::new(256, 256, 256, 1, "large"));
+        cells.push(GridCell::new(96, 384, 192, 2, "large"));
+    }
+    cells
+}
+
+/// Measure every CPU variant on every cell and return a [`PerfDataset`]
+/// on device `"cpu-native"`: one row per cell, the first
+/// [`super::NUM_CPU_VARIANTS`] of the [`NUM_CONFIGS`] columns holding
+/// best-of-`reps` measured GFLOP/s (remaining columns stay 0, i.e.
+/// unselectable). `threads` is the worker budget handed to the
+/// thread-parallel variants.
+pub fn collect_dataset(cells: &[GridCell], threads: usize, reps: usize) -> PerfDataset {
+    let variants = cpu_variants();
+    let mut rows: Vec<Vec<f64>> = vec![vec![0.0; NUM_CONFIGS]; cells.len()];
+    for (ci, cell) in cells.iter().enumerate() {
+        let s = cell.shape;
+        let lhs = fill_buffer(ci as u32 * 7 + 1, s.batch * s.m * s.k);
+        let rhs = fill_buffer(ci as u32 * 7 + 2, s.batch * s.k * s.n);
+        for v in &variants {
+            // Warm caches (and surface any variant bug loudly).
+            let _ = gemm_variant(v, threads, &s, &lhs, &rhs).expect("cpu variant executes");
+            let mut best = f64::INFINITY;
+            for _ in 0..reps.max(1) {
+                let start = Instant::now();
+                let out = gemm_variant(v, threads, &s, &lhs, &rhs).expect("cpu variant executes");
+                let secs = start.elapsed().as_secs_f64().max(1e-9);
+                std::hint::black_box(&out);
+                best = best.min(secs);
+            }
+            rows[ci][v.index] = s.flops() / best / 1e9;
+        }
+    }
+    PerfDataset::new(
+        "cpu-native",
+        cells.iter().map(|c| c.shape).collect(),
+        Matrix::from_rows(&rows),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::cpu::NUM_CPU_VARIANTS;
+
+    #[test]
+    fn grid_covers_every_regime() {
+        for smoke in [true, false] {
+            let cells = grid_cells(smoke);
+            for regime in ["small", "skinny", "large"] {
+                assert!(
+                    cells.iter().filter(|c| c.regime == regime).count() >= 2,
+                    "regime {regime} underrepresented (smoke={smoke})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn collect_dataset_fills_variant_columns() {
+        // One tiny cell keeps this fast in debug test runs.
+        let cells = vec![GridCell::new(8, 8, 8, 1, "small")];
+        let ds = collect_dataset(&cells, 2, 1);
+        assert_eq!(ds.n_shapes(), 1);
+        for idx in 0..NUM_CPU_VARIANTS {
+            assert!(ds.gflops[(0, idx)] > 0.0, "variant {idx} unmeasured");
+        }
+        assert_eq!(ds.gflops[(0, NUM_CPU_VARIANTS)], 0.0);
+        assert_eq!(ds.device, "cpu-native");
+    }
+}

@@ -1,0 +1,422 @@
+//! Native CPU backend: a family of real single-precision GEMM kernels
+//! generated from orthogonal knobs.
+//!
+//! Where [`crate::engine::sim`] prices dispatches with an analytical
+//! device model, this backend actually computes the GEMM on the host —
+//! through [`NUM_CPU_VARIANTS`] distinct variants spanning:
+//!
+//! - **cache blocking** ([`Tiling`]): three committed MC/KC/NC panel
+//!   schemes with MR x NR register micro-tiles, one per shape regime
+//!   (small / skinny / large),
+//! - **loop order** ([`LoopOrder`]): which packed panel stays resident in
+//!   the outer loop,
+//! - **inner-kernel style** ([`MicroKernel`]): scalar reference vs
+//!   unrolled auto-vectorizable micro-kernel with tail handling,
+//! - **threading** ([`Threading`]): single-threaded vs hand-rolled
+//!   `std::thread` column-panel parallelism honoring the shard's budget.
+//!
+//! Each variant registers as a distinct kernel configuration: its
+//! [`KernelMeta::index`] doubles as the `config_index` in artifact
+//! manifests and as the column in a [`crate::dataset::PerfDataset`], so
+//! the whole dataset -> subset selection -> classifier -> registry
+//! pipeline runs unchanged on measured CPU numbers. Variants have real,
+//! input-dependent crossover (small shapes favor small tiles and a single
+//! thread; large shapes favor big panels and column-panel threads), which
+//! is what makes runtime selection worth anything on this backend.
+//!
+//! All variants are bit-exact against a k-ordered reference GEMM — see
+//! the invariant note in [`gemm`].
+
+pub mod gemm;
+pub mod grid;
+
+use std::collections::HashSet;
+use std::time::Instant;
+
+use crate::dataset::GemmShape;
+use crate::engine::sim::host_gemm;
+use crate::engine::{Backend, BackendStats};
+use crate::runtime::{ArtifactKind, ArtifactMeta};
+
+pub use gemm::gemm_variant;
+pub use grid::{collect_dataset, grid_cells, GridCell};
+
+/// Cache-blocking scheme of one CPU GEMM variant: macro-panel sizes for
+/// the three blocked loops plus the register micro-tile.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Tiling {
+    /// Stable name used in variant names (also the shape regime it targets).
+    pub name: &'static str,
+    /// Rows of the packed lhs macro-panel (the MC loop).
+    pub mc: usize,
+    /// Depth of one packed k block (the KC loop).
+    pub kc: usize,
+    /// Columns of the packed rhs macro-panel (the NC loop).
+    pub nc: usize,
+    /// Rows of the register micro-tile (MR).
+    pub mr: usize,
+    /// Columns of the register micro-tile (NR).
+    pub nr: usize,
+}
+
+/// The three committed tilings, one per shape regime. Kept as a plain
+/// literal: `tools/devsim_check.py` parses this table to verify the
+/// variant family covers every axis without duplicates.
+pub const CPU_TILINGS: [Tiling; 3] = [
+    Tiling { name: "small", mc: 32, kc: 64, nc: 64, mr: 4, nr: 4 },
+    Tiling { name: "skinny", mc: 16, kc: 256, nc: 32, mr: 2, nr: 8 },
+    Tiling { name: "large", mc: 128, kc: 128, nc: 256, mr: 8, nr: 8 },
+];
+
+/// Which packed panel the blocked GEMM keeps resident in its outer loop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LoopOrder {
+    /// The packed lhs panel is the outer-loop resident; rhs panels are
+    /// repacked per (row-panel, k-block) pair.
+    PackAOuter,
+    /// BLIS-style: the packed rhs panel is the outer-loop resident; lhs
+    /// panels are repacked per (column-panel, k-block) pair.
+    PackBOuter,
+}
+
+impl LoopOrder {
+    /// Short name fragment used in variant names.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            LoopOrder::PackAOuter => "pa",
+            LoopOrder::PackBOuter => "pb",
+        }
+    }
+}
+
+/// Inner-kernel style of one CPU GEMM variant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MicroKernel {
+    /// One element at a time, sequential k chain — cannot vectorize.
+    Scalar,
+    /// Unrolled MR x NR register tile whose independent output lanes
+    /// auto-vectorize; edge tiles fall back to the scalar tail path.
+    Unrolled,
+}
+
+impl MicroKernel {
+    /// Short name fragment used in variant names.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            MicroKernel::Scalar => "sc",
+            MicroKernel::Unrolled => "vec",
+        }
+    }
+}
+
+/// Threading mode of one CPU GEMM variant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Threading {
+    /// Everything on the calling thread.
+    Single,
+    /// Disjoint column panels fanned out over scoped `std::thread`
+    /// workers, bounded by the backend's thread budget.
+    ColumnPanels,
+}
+
+impl Threading {
+    /// Short name fragment used in variant names.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Threading::Single => "t1",
+            Threading::ColumnPanels => "tp",
+        }
+    }
+}
+
+/// Number of CPU GEMM variants: every combination of the knob axes.
+pub const NUM_CPU_VARIANTS: usize = CPU_TILINGS.len() * 2 * 2 * 2;
+
+/// Full knob assignment of one CPU GEMM variant — the CPU backend's
+/// analogue of a `dataset::KernelConfig`. The `index` is the variant's
+/// kernel-configuration index throughout the pipeline (manifest
+/// `config_index`, dataset column, selector class).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KernelMeta {
+    /// Kernel-configuration index of this variant (0..[`NUM_CPU_VARIANTS`]).
+    pub index: usize,
+    /// Cache-blocking scheme.
+    pub tiling: Tiling,
+    /// Packing loop order.
+    pub loop_order: LoopOrder,
+    /// Inner-kernel style.
+    pub micro_kernel: MicroKernel,
+    /// Threading mode.
+    pub threading: Threading,
+}
+
+impl KernelMeta {
+    /// Stable variant name, e.g. `cpu_small_pa_vec_t1`: tiling regime,
+    /// loop order, micro-kernel, threading.
+    pub fn name(&self) -> String {
+        format!(
+            "cpu_{}_{}_{}_{}",
+            self.tiling.name,
+            self.loop_order.tag(),
+            self.micro_kernel.tag(),
+            self.threading.tag()
+        )
+    }
+}
+
+/// Decode a kernel-configuration index into its CPU variant. Returns
+/// `None` for indices outside the family (the CPU backend serves those
+/// only through the reference-GEMM comparator, `config_index = None`).
+///
+/// Index layout: `tiling * 8 + loop_order * 4 + micro_kernel * 2 +
+/// threading`, matching the iteration order of [`cpu_variants`].
+pub fn variant_by_index(index: usize) -> Option<KernelMeta> {
+    if index >= NUM_CPU_VARIANTS {
+        return None;
+    }
+    let tiling = CPU_TILINGS[index / 8];
+    let loop_order =
+        if (index / 4) % 2 == 0 { LoopOrder::PackAOuter } else { LoopOrder::PackBOuter };
+    let micro_kernel =
+        if (index / 2) % 2 == 0 { MicroKernel::Scalar } else { MicroKernel::Unrolled };
+    let threading = if index % 2 == 0 { Threading::Single } else { Threading::ColumnPanels };
+    Some(KernelMeta { index, tiling, loop_order, micro_kernel, threading })
+}
+
+/// All CPU variants in index order.
+pub fn cpu_variants() -> Vec<KernelMeta> {
+    (0..NUM_CPU_VARIANTS).filter_map(variant_by_index).collect()
+}
+
+/// Analytic cost prior for one CPU dispatch, in seconds — the CPU
+/// backend's substitute for the devsim pricing model. Used for admission
+/// cost hints and for the retuner's prior on unmeasured cells; real
+/// `execute_timed` telemetry overrides it as soon as cells warm up.
+///
+/// Total over every input: a `config` outside the variant family (or
+/// `None`, the reference comparator) prices as the scalar reference GEMM.
+/// Never panics, always returns a positive finite value.
+pub fn predict_cpu_secs(shape: &GemmShape, config: Option<usize>) -> f64 {
+    // Nominal single-core rates and memory/setup costs. Deliberately
+    // coarse — this is a prior, not a model to be trusted once telemetry
+    // exists — but shaped so the knobs trade off the way the real
+    // kernels do (vector >> scalar, threads help only when the column
+    // space amortizes spawn cost, tails and repacking tax bad tilings).
+    const SCALAR_FLOPS: f64 = 1.2e9;
+    const VECTOR_FLOPS: f64 = 7.0e9;
+    const PACK_BYTES_PER_SEC: f64 = 8.0e9;
+    const L2_BYTES: f64 = 1024.0 * 1024.0;
+    const MODEL_THREADS: f64 = 4.0;
+    const SPAWN_SECS: f64 = 25e-6;
+    const CALL_SECS: f64 = 1.5e-6;
+
+    let flops = shape.flops();
+    let Some(v) = config.and_then(variant_by_index) else {
+        return (flops / SCALAR_FLOPS + CALL_SECS).max(1e-9);
+    };
+    let t = v.tiling;
+    let (m, k, n) = (shape.m as f64, shape.k as f64, shape.n as f64);
+    let batch = shape.batch.max(1) as f64;
+
+    // Fraction of micro-tile lanes doing useful work (tail waste).
+    let pad = |dim: f64, tile: f64| (dim / tile).ceil().max(1.0) * tile;
+    let tail_eff = (m * n) / (pad(m, t.mr as f64) * pad(n, t.nr as f64));
+    let mut rate = match v.micro_kernel {
+        MicroKernel::Scalar => SCALAR_FLOPS,
+        MicroKernel::Unrolled => VECTOR_FLOPS,
+    } * tail_eff.clamp(0.05, 1.0);
+
+    // Packed working set spilling past L2 taxes the streaming rate.
+    let working_set = (t.mc * t.kc + t.kc * t.nc) as f64 * 4.0;
+    if working_set > L2_BYTES {
+        rate *= 0.7;
+    }
+
+    let mut overhead = CALL_SECS;
+    if v.threading == Threading::ColumnPanels {
+        let workers = MODEL_THREADS.min((n / t.nr as f64).ceil()).max(1.0);
+        overhead += batch * workers * SPAWN_SECS;
+        rate *= workers * 0.9;
+    }
+
+    // Packing traffic: the non-resident panel is repacked once per
+    // resident outer block.
+    let repack_elems = match v.loop_order {
+        LoopOrder::PackBOuter => k * n + m * k * (n / t.nc as f64).ceil(),
+        LoopOrder::PackAOuter => m * k + k * n * (m / t.mc as f64).ceil(),
+    };
+    let pack_secs = batch * repack_elems * 4.0 / PACK_BYTES_PER_SEC;
+
+    (flops / rate.max(1.0) + pack_secs + overhead).max(1e-9)
+}
+
+/// Native CPU backend executing batched f32 GEMM through the variant
+/// family. Artifact `config_index` values map to [`variant_by_index`];
+/// `None` runs the k-ordered reference GEMM (the comparator arm). The
+/// wall-clock `execute_timed` default is exactly what this backend wants:
+/// telemetry sees real measured time.
+pub struct CpuBackend {
+    threads: usize,
+    compiled: HashSet<String>,
+    stats: BackendStats,
+}
+
+impl CpuBackend {
+    /// Build a backend with a worker budget for thread-parallel variants.
+    /// `threads == 0` means one worker per available core.
+    pub fn new(threads: usize) -> CpuBackend {
+        let threads = if threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            threads
+        };
+        CpuBackend { threads, compiled: HashSet::new(), stats: BackendStats::default() }
+    }
+
+    /// The resolved worker budget (never 0).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+}
+
+impl Backend for CpuBackend {
+    fn name(&self) -> &'static str {
+        "cpu"
+    }
+
+    fn prepare(&mut self, meta: &ArtifactMeta) -> Result<(), String> {
+        if meta.kind != ArtifactKind::Matmul {
+            return Err(format!("cpu backend only executes matmul artifacts, got {:?}", meta.kind));
+        }
+        if let Some(idx) = meta.config_index {
+            if variant_by_index(idx).is_none() {
+                return Err(format!("cpu backend: config index {idx} has no CPU variant"));
+            }
+        }
+        if self.compiled.insert(meta.path.clone()) {
+            self.stats.compiles += 1;
+        } else {
+            self.stats.cache_hits += 1;
+        }
+        Ok(())
+    }
+
+    fn execute(
+        &mut self,
+        meta: &ArtifactMeta,
+        shape: &GemmShape,
+        lhs: &[f32],
+        rhs: &[f32],
+    ) -> Result<Vec<f32>, String> {
+        if meta.kind != ArtifactKind::Matmul {
+            return Err(format!("cpu backend only executes matmul artifacts, got {:?}", meta.kind));
+        }
+        if !self.compiled.contains(&meta.path) {
+            self.prepare(meta)?;
+        }
+        let start = Instant::now();
+        let out = match meta.config_index {
+            None => host_gemm(shape, lhs, rhs)?,
+            Some(idx) => {
+                let v = variant_by_index(idx)
+                    .ok_or_else(|| format!("cpu backend: config index {idx} has no CPU variant"))?;
+                gemm_variant(&v, self.threads, shape, lhs, rhs)?
+            }
+        };
+        let secs = start.elapsed().as_secs_f64();
+        self.stats.executions += 1;
+        self.stats.execute_secs += secs;
+        Ok(out)
+    }
+
+    fn stats(&self) -> BackendStats {
+        self.stats.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::fill_buffer;
+    use std::collections::HashSet as Set;
+
+    #[test]
+    fn variant_family_is_complete_and_distinct() {
+        let variants = cpu_variants();
+        assert_eq!(variants.len(), NUM_CPU_VARIANTS);
+        assert_eq!(NUM_CPU_VARIANTS, 24);
+        let names: Set<String> = variants.iter().map(|v| v.name()).collect();
+        assert_eq!(names.len(), NUM_CPU_VARIANTS, "variant names must be distinct");
+        for (i, v) in variants.iter().enumerate() {
+            assert_eq!(v.index, i);
+            assert_eq!(variant_by_index(i).unwrap(), *v);
+        }
+        assert!(variant_by_index(NUM_CPU_VARIANTS).is_none());
+        // Every axis value appears somewhere.
+        assert_eq!(variants.iter().map(|v| v.tiling.name).collect::<Set<_>>().len(), 3);
+        assert_eq!(variants.iter().map(|v| v.loop_order.tag()).collect::<Set<_>>().len(), 2);
+        assert_eq!(variants.iter().map(|v| v.micro_kernel.tag()).collect::<Set<_>>().len(), 2);
+        assert_eq!(variants.iter().map(|v| v.threading.tag()).collect::<Set<_>>().len(), 2);
+    }
+
+    #[test]
+    fn predict_is_total_positive_and_finite() {
+        let shapes = [
+            GemmShape::new(1, 1, 1, 1),
+            GemmShape::new(16, 2048, 16, 1),
+            GemmShape::new(192, 192, 192, 4),
+        ];
+        for s in &shapes {
+            for cfg in (0..NUM_CPU_VARIANTS).map(Some).chain([None, Some(9999)]) {
+                let t = predict_cpu_secs(s, cfg);
+                assert!(t.is_finite() && t > 0.0, "predict({s:?}, {cfg:?}) = {t}");
+            }
+        }
+        // The prior must at least know vectorized beats scalar on a big
+        // square shape, all else equal.
+        let big = GemmShape::new(192, 192, 192, 1);
+        assert!(predict_cpu_secs(&big, Some(22)) < predict_cpu_secs(&big, Some(20)));
+    }
+
+    #[test]
+    fn backend_executes_variants_and_reference_with_cache_accounting() {
+        let mut backend = CpuBackend::new(2);
+        let shape = GemmShape::new(17, 9, 13, 2);
+        let lhs = fill_buffer(3, shape.batch * shape.m * shape.k);
+        let rhs = fill_buffer(4, shape.batch * shape.k * shape.n);
+        let want = host_gemm(&shape, &lhs, &rhs).unwrap();
+
+        let meta = |idx: Option<usize>, path: &str| ArtifactMeta {
+            path: path.to_string(),
+            kind: ArtifactKind::Matmul,
+            config_index: idx,
+            config_name: idx.and_then(variant_by_index).map(|v| v.name()),
+            m: shape.m,
+            k: shape.k,
+            n: shape.n,
+            b: shape.batch,
+            flops: shape.flops(),
+            network: None,
+            layer: None,
+            layer_index: None,
+            pool: false,
+            relu: false,
+            inputs: vec![],
+            output: vec![],
+        };
+        let got = backend.execute(&meta(Some(5), "cpu/v5"), &shape, &lhs, &rhs).unwrap();
+        assert_eq!(got, want);
+        let got = backend.execute(&meta(None, "cpu/ref"), &shape, &lhs, &rhs).unwrap();
+        assert_eq!(got, want);
+        // Re-executing a prepared artifact is a cache hit, not a compile.
+        backend.execute(&meta(Some(5), "cpu/v5"), &shape, &lhs, &rhs).unwrap();
+        backend.prepare(&meta(Some(5), "cpu/v5")).unwrap();
+        let stats = backend.stats();
+        assert_eq!(stats.compiles, 2);
+        assert_eq!(stats.cache_hits, 1);
+        assert_eq!(stats.executions, 3);
+        assert!(stats.execute_secs > 0.0);
+        // Out-of-family config indices are rejected, not silently served.
+        assert!(backend.execute(&meta(Some(640), "cpu/bad"), &shape, &lhs, &rhs).is_err());
+    }
+}

@@ -12,6 +12,10 @@
 //! * [`SimBackend`] — pure Rust: a naive f32 GEMM for correctness plus the
 //!   `devsim` analytical model for simulated device timing. Always
 //!   available; this is what `cargo test` exercises.
+//! * [`CpuBackend`] — native host execution through the parametrized
+//!   GEMM variant family in [`cpu`]: real measured performance with real
+//!   input-dependent crossover between kernel configurations. Always
+//!   compiled, no external deps.
 //! * [`PjrtBackend`] — wraps the PJRT [`crate::runtime::Runtime`]; only
 //!   compiled with the `pjrt` cargo feature.
 //!
@@ -19,11 +23,13 @@
 //! and must stay on one thread, so shards receive a Send-able
 //! [`EngineKind`] *spec* and construct their backend on their own thread.
 
+pub mod cpu;
 pub mod sim;
 
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
+pub use cpu::CpuBackend;
 pub use sim::SimBackend;
 
 #[cfg(feature = "pjrt")]
@@ -108,6 +114,15 @@ pub enum EngineKind {
         /// Pacing factor in permille (1000 = real-time device pacing).
         permille: u32,
     },
+    /// Native CPU execution through the parametrized GEMM variant family
+    /// in [`cpu`]. Always available; the only backend whose telemetry is
+    /// real measured time on every build.
+    Cpu {
+        /// Worker-thread budget for the thread-parallel variants; 0 means
+        /// one worker per available core (the pool divides cores among
+        /// shards at startup).
+        threads: usize,
+    },
     /// Native PJRT execution of the HLO artifacts.
     #[cfg(feature = "pjrt")]
     Pjrt,
@@ -128,6 +143,7 @@ impl EngineKind {
             EngineKind::SimPaced { profile, permille } => {
                 Ok(Box::new(SimBackend::with_pacing(profile, *permille)?))
             }
+            EngineKind::Cpu { threads } => Ok(Box::new(CpuBackend::new(*threads))),
             #[cfg(feature = "pjrt")]
             EngineKind::Pjrt => Ok(Box::new(PjrtBackend::new(_artifacts_dir)?)),
         }
@@ -138,6 +154,7 @@ impl EngineKind {
         match self {
             EngineKind::Sim { .. } => "sim",
             EngineKind::SimPaced { .. } => "sim-paced",
+            EngineKind::Cpu { .. } => "cpu",
             #[cfg(feature = "pjrt")]
             EngineKind::Pjrt => "pjrt",
         }
@@ -147,6 +164,7 @@ impl EngineKind {
     pub fn by_name(name: &str) -> Option<EngineKind> {
         match name {
             "sim" => Some(EngineKind::default()),
+            "cpu" => Some(EngineKind::Cpu { threads: 0 }),
             #[cfg(feature = "pjrt")]
             "pjrt" => Some(EngineKind::Pjrt),
             _ => None,
@@ -178,6 +196,15 @@ mod tests {
         assert_eq!(kind.name(), "sim-paced");
         let backend = kind.create(Path::new("/nonexistent")).unwrap();
         assert_eq!(backend.name(), "sim");
+    }
+
+    #[test]
+    fn cpu_engine_creates_and_names() {
+        let kind = EngineKind::by_name("cpu").unwrap();
+        assert_eq!(kind, EngineKind::Cpu { threads: 0 });
+        assert_eq!(kind.name(), "cpu");
+        let backend = kind.create(Path::new("/nonexistent")).unwrap();
+        assert_eq!(backend.name(), "cpu");
     }
 
     #[test]

@@ -27,18 +27,17 @@
 //! measured data and hot-swaps the selector without pausing traffic.
 
 // Every public item must carry rustdoc. The serving-stack modules
-// (`coordinator`, `tuning`, `engine`) are fully documented and gated;
-// the offline pipeline modules below carry an explicit module-level
-// `allow` until their own documentation pass lands (ROADMAP item) —
-// the allows are the worklist, not an exemption.
+// (`coordinator`, `tuning`, `engine`) and the data substrate (`dataset`,
+// `devsim`) are fully documented and gated; the remaining modules below
+// carry an explicit module-level `allow` until their own documentation
+// pass lands (ROADMAP item) — the allows are the worklist, not an
+// exemption.
 #![warn(missing_docs)]
 
 #[allow(missing_docs)]
 pub mod classify;
 pub mod coordinator;
-#[allow(missing_docs)]
 pub mod dataset;
-#[allow(missing_docs)]
 pub mod devsim;
 pub mod engine;
 #[allow(missing_docs)]

@@ -215,6 +215,64 @@ impl Manifest {
         )
     }
 
+    /// The serving shape buckets of the CPU synthetic manifest: bounded,
+    /// CPU-scale GEMMs spanning the small/skinny/large regimes the native
+    /// backend's tilings target (no devsim-scale 512x784x512 monsters —
+    /// these actually execute on the host per request).
+    pub fn synthetic_cpu_shapes() -> Vec<(usize, usize, usize, usize)> {
+        vec![
+            (16, 16, 16, 1),
+            (32, 32, 32, 1),
+            (32, 32, 32, 4),
+            (48, 48, 48, 1),
+            (64, 64, 64, 1),
+            (16, 2048, 16, 1),
+            (32, 1024, 24, 1),
+            (8, 4096, 32, 1),
+            (96, 96, 96, 1),
+            (128, 128, 128, 1),
+            (192, 192, 192, 1),
+        ]
+    }
+
+    /// An in-memory manifest for the native CPU backend: every CPU bucket
+    /// ships all `engine::cpu` GEMM variants (their variant indices are
+    /// the `config_index` values) plus the reference-GEMM comparator
+    /// (`config_index = None`), with artifact paths that are never opened.
+    pub fn synthetic_cpu() -> Manifest {
+        let variants = crate::engine::cpu::cpu_variants();
+        let deployed: Vec<String> = variants.iter().map(|v| v.name()).collect();
+        let configs: Vec<(Option<usize>, String)> = std::iter::once((None, "ref".to_string()))
+            .chain(variants.iter().map(|v| (Some(v.index), v.name())))
+            .collect();
+        let mut artifacts = Vec::new();
+        for (m, k, n, b) in Self::synthetic_cpu_shapes() {
+            for (config_index, name) in &configs {
+                artifacts.push(ArtifactMeta {
+                    path: format!("cpu/{name}/m{m}k{k}n{n}b{b}.kernel"),
+                    kind: ArtifactKind::Matmul,
+                    config_index: *config_index,
+                    config_name: config_index.map(|_| name.clone()),
+                    m,
+                    k,
+                    n,
+                    b,
+                    flops: 2.0 * (b * m * k * n) as f64,
+                    network: None,
+                    layer: None,
+                    layer_index: None,
+                    pool: false,
+                    relu: false,
+                    inputs: vec![vec![b, m, k], vec![b, k, n]],
+                    output: vec![b, m, n],
+                });
+            }
+        }
+        let single_best = "cpu_large_pb_vec_tp".to_string();
+        debug_assert!(deployed.contains(&single_best));
+        Manifest::from_parts(PathBuf::from("<synthetic-cpu>"), deployed, single_best, artifacts)
+    }
+
     /// Load the on-disk manifest when one exists, otherwise fall back to
     /// the synthetic deployment (the no-artifacts serving path).
     pub fn load_or_synthetic(dir: &Path) -> Manifest {
@@ -370,6 +428,25 @@ mod tests {
         assert_eq!(pool, expected);
         // Sorted and deduplicated.
         assert!(pool.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn synthetic_cpu_manifest_ships_every_variant_everywhere() {
+        let m = Manifest::synthetic_cpu();
+        let variants = crate::engine::cpu::cpu_variants();
+        assert_eq!(m.deployed.len(), variants.len());
+        assert_eq!(m.shipped_configs(), (0..variants.len()).collect::<Vec<_>>());
+        assert!(m.deployed.contains(&m.single_best));
+        for (mm, k, n, b) in Manifest::synthetic_cpu_shapes() {
+            assert!(m.find_matmul(None, mm, k, n, b).is_some(), "ref {mm}x{k}x{n}");
+            for v in &variants {
+                assert!(
+                    m.find_matmul(Some(v.index), mm, k, n, b).is_some(),
+                    "{} missing for {mm}x{k}x{n}b{b}",
+                    v.name()
+                );
+            }
+        }
     }
 
     #[test]

@@ -14,8 +14,7 @@
 //! mixes measured truth with drift-corrected estimates instead of raw
 //! stale predictions.
 
-use crate::coordinator::cache::predict_dispatch_secs;
-use crate::devsim::DeviceProfile;
+use crate::coordinator::cache::CostModel;
 use crate::tuning::telemetry::TelemetrySnapshot;
 
 /// Measured/predicted time ratio of one configuration (geometric mean over
@@ -88,13 +87,14 @@ impl DriftReport {
     }
 }
 
-/// Compare a telemetry snapshot against the devsim predictions priced on
-/// `profile`. Only cells with a concrete configuration and at least
-/// `min_cell_samples` samples participate (the XLA comparator has no
-/// devsim point, so it is excluded).
+/// Compare a telemetry snapshot against the predictions of the pool's
+/// pricing [`CostModel`] (devsim profile or the CPU analytic prior). Only
+/// cells with a concrete configuration and at least `min_cell_samples`
+/// samples participate (the comparator backend has no model point, so it
+/// is excluded).
 pub fn evaluate_drift(
     snapshot: &TelemetrySnapshot,
-    profile: &DeviceProfile,
+    model: &CostModel,
     min_cell_samples: u64,
 ) -> DriftReport {
     struct Acc {
@@ -110,7 +110,7 @@ pub fn evaluate_drift(
         if cell.count < min_cell_samples {
             continue;
         }
-        let predicted = predict_dispatch_secs(profile, &cell.shape, Some(config));
+        let predicted = model.predict_secs(&cell.shape, Some(config));
         if predicted <= 0.0 {
             continue;
         }
@@ -158,6 +158,7 @@ pub fn evaluate_drift(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::cache::predict_dispatch_secs;
     use crate::dataset::GemmShape;
     use crate::devsim::profile_by_name;
     use crate::tuning::telemetry::TelemetrySink;
@@ -182,11 +183,27 @@ mod tests {
                 sink.record(s, Some(cfg), t);
             }
         }
-        let report = evaluate_drift(&sink.snapshot(), profile, 1);
+        let report = evaluate_drift(&sink.snapshot(), &CostModel::Devsim(profile), 1);
         assert_eq!(report.cells, 9);
         assert!((report.global_ratio - 1.0).abs() < 1e-9, "{}", report.global_ratio);
         assert!((report.max_deviation - 1.0).abs() < 1e-9);
         assert!(!report.triggered(1.05));
+    }
+
+    #[test]
+    fn cpu_analytic_model_is_self_consistent() {
+        // The native backend's drift loop prices against the CPU analytic
+        // prior; feeding it its own predictions must never trip.
+        let model = CostModel::CpuAnalytic;
+        let sink = TelemetrySink::new(1, 1.0);
+        for s in shapes() {
+            for cfg in [0usize, 7, 23] {
+                sink.record(s, Some(cfg), model.predict_secs(&s, Some(cfg)));
+            }
+        }
+        let report = evaluate_drift(&sink.snapshot(), &model, 1);
+        assert_eq!(report.cells, 9);
+        assert!(!report.triggered(1.05), "max deviation {}", report.max_deviation);
     }
 
     #[test]
@@ -201,7 +218,7 @@ mod tests {
                 sink.record(s, Some(cfg), predict_dispatch_secs(gpu, &s, Some(cfg)));
             }
         }
-        let report = evaluate_drift(&sink.snapshot(), cpu, 1);
+        let report = evaluate_drift(&sink.snapshot(), &CostModel::Devsim(cpu), 1);
         assert!(report.triggered(1.25), "max deviation {}", report.max_deviation);
         assert_eq!(report.per_config.len(), 2);
         // Calibration: measured configs use their own ratio, unmeasured
@@ -219,7 +236,7 @@ mod tests {
         sink.record(s, Some(5), 1.0); // one sample < min of 2
         sink.record(s, None, 1.0); // XLA comparator: no devsim point
         sink.record(s, None, 1.0);
-        let report = evaluate_drift(&sink.snapshot(), profile, 2);
+        let report = evaluate_drift(&sink.snapshot(), &CostModel::Devsim(profile), 2);
         assert_eq!(report.cells, 0);
         assert!(!report.triggered(1.0001));
         assert_eq!(report.global_ratio, 1.0);
@@ -233,7 +250,7 @@ mod tests {
         for s in shapes() {
             sink.record(s, Some(100), predict_dispatch_secs(gpu, &s, Some(100)));
         }
-        let report = evaluate_drift(&sink.snapshot(), cpu, 1);
+        let report = evaluate_drift(&sink.snapshot(), &CostModel::Devsim(cpu), 1);
         // Fresh deployment (no baseline): the big deviation trips.
         assert!(report.triggered_relative(0.0, 1.25));
         assert!(report.triggered_relative(1.0, 1.25));

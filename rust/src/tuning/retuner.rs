@@ -26,11 +26,10 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::classify::ClassifierKind;
-use crate::coordinator::cache::{predict_dispatch_secs, ResolutionCache};
+use crate::coordinator::cache::{CostModel, ResolutionCache};
 use crate::coordinator::registry::KernelRegistry;
 use crate::coordinator::selector::{tune_selector_with, SelectorPolicy};
 use crate::dataset::{Normalization, PerfDataset, NUM_CONFIGS};
-use crate::devsim::DeviceProfile;
 use crate::linalg::Matrix;
 use crate::selection::Method;
 use crate::tuning::drift::{evaluate_drift, DriftReport};
@@ -128,11 +127,12 @@ pub enum RetuneOutcome {
 
 /// Fold a telemetry snapshot into a live [`PerfDataset`]: rows are the
 /// measured shapes, measured cells carry measured GFLOP/s, unmeasured
-/// cells of the shipped `pool` carry the drift-calibrated devsim prior,
-/// and everything outside the pool stays zero (unselectable).
+/// cells of the shipped `pool` carry the drift-calibrated prior from the
+/// pool's pricing [`CostModel`], and everything outside the pool stays
+/// zero (unselectable).
 pub fn live_dataset(
     snapshot: &TelemetrySnapshot,
-    profile: &DeviceProfile,
+    model: &CostModel,
     drift: &DriftReport,
     pool: &[usize],
     min_cell_samples: u64,
@@ -155,19 +155,19 @@ pub fn live_dataset(
             let value = match by_key.get(&(*shape, config)) {
                 Some(&measured_gflops) => measured_gflops,
                 None => {
-                    let secs = predict_dispatch_secs(profile, shape, Some(config))
-                        * drift.ratio_for(config);
+                    let secs =
+                        model.predict_secs(shape, Some(config)) * drift.ratio_for(config);
                     shape.flops() / (secs.max(1e-12) * 1e9)
                 }
             };
             gflops[(row, config)] = value;
         }
     }
-    Some(PerfDataset::new(
-        &format!("live-{}", profile.name),
-        shapes,
-        gflops,
-    ))
+    let device = match model {
+        CostModel::Devsim(profile) => format!("live-{}", profile.name),
+        CostModel::CpuAnalytic => "live-cpu-native".to_string(),
+    };
+    Some(PerfDataset::new(&device, shapes, gflops))
 }
 
 /// Run one synchronous retune attempt against the pool's live state.
@@ -198,8 +198,8 @@ pub fn retune_once(
     if shapes.len() < cfg.min_shapes.max(1) {
         return RetuneOutcome::Insufficient;
     }
-    let profile = cache.pricing_profile();
-    let drift = evaluate_drift(&snapshot, profile, cfg.min_cell_samples);
+    let model = cache.cost_model();
+    let drift = evaluate_drift(&snapshot, &model, cfg.min_cell_samples);
     stats.last_drift_deviation = drift.max_deviation;
     // Drift triggers *relative to the last retune's* deviation: absolute
     // drift stays high forever on a mispredicted device even after the
@@ -213,7 +213,7 @@ pub fn retune_once(
         return RetuneOutcome::NotDue;
     }
     let pool = registry.manifest.shipped_configs();
-    let Some(dataset) = live_dataset(&snapshot, profile, &drift, &pool, cfg.min_cell_samples)
+    let Some(dataset) = live_dataset(&snapshot, &model, &drift, &pool, cfg.min_cell_samples)
     else {
         return RetuneOutcome::Insufficient;
     };
@@ -356,6 +356,7 @@ impl Drop for Retuner {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::cache::predict_dispatch_secs;
     use crate::coordinator::registry::Resolution;
     use crate::dataset::GemmShape;
     use crate::devsim::profile_by_name;
@@ -389,8 +390,9 @@ mod tests {
 
     #[test]
     fn live_dataset_mixes_measured_and_calibrated_prior() {
-        let (registry, cache, telemetry) = fixture();
-        let profile = cache.pricing_profile();
+        let (registry, _cache, telemetry) = fixture();
+        let profile = profile_by_name("i7-6700k").unwrap();
+        let model = CostModel::Devsim(profile);
         let pool = registry.manifest.shipped_configs();
         assert_eq!(pool.len(), 8);
         let shape = GemmShape::new(64, 64, 64, 1);
@@ -398,9 +400,9 @@ mod tests {
         let predicted = predict_dispatch_secs(profile, &shape, Some(pool[0]));
         telemetry.record(shape, Some(pool[0]), predicted * 2.0);
         let snapshot = telemetry.snapshot();
-        let drift = evaluate_drift(&snapshot, profile, 1);
+        let drift = evaluate_drift(&snapshot, &model, 1);
         assert!((drift.global_ratio - 2.0).abs() < 1e-9);
-        let ds = live_dataset(&snapshot, profile, &drift, &pool, 1).unwrap();
+        let ds = live_dataset(&snapshot, &model, &drift, &pool, 1).unwrap();
         assert_eq!(ds.n_shapes(), 1);
         // Measured cell: measured gflops (half the predicted rate).
         let measured_gflops = shape.flops() / (predicted * 2.0 * 1e9);
@@ -479,7 +481,7 @@ mod tests {
     fn not_due_without_timer_or_drift() {
         let (registry, cache, telemetry) = fixture();
         // Measured == predicted on the pricing profile: zero drift.
-        let profile = cache.pricing_profile();
+        let profile = profile_by_name("i7-6700k").unwrap();
         for shape in [GemmShape::new(32, 32, 32, 1), GemmShape::new(64, 64, 64, 1)] {
             for config in registry.manifest.shipped_configs() {
                 telemetry.record(

@@ -1,0 +1,181 @@
+//! Correctness suite for the native CPU GEMM variant family.
+//!
+//! Every variant is checked against two independent references: the f64
+//! `linalg::Matrix::matmul` (on small-integer operands, where any
+//! accumulation order is exact in both precisions) over an odd-shape grid
+//! that exercises every micro-kernel tail edge, and the f32 `host_gemm`
+//! (on arbitrary float operands, the *bitwise* accumulation-order claim).
+//! Threaded variants must additionally be bit-identical across thread
+//! budgets — the column-panel split may never change a single bit.
+
+use kernelsel::dataset::GemmShape;
+use kernelsel::engine::cpu::{cpu_variants, gemm_variant, NUM_CPU_VARIANTS};
+use kernelsel::engine::sim::host_gemm;
+use kernelsel::linalg::Matrix;
+use kernelsel::util::fill_buffer;
+
+/// Deterministic small-integer operand in [-4, 4]: every product and every
+/// partial sum over the grid's k range is exactly representable in f32 and
+/// f64 alike, so the f64 Matrix reference checks the f32 kernels exactly,
+/// independent of accumulation order.
+fn int_buffer(seed: u32, count: usize) -> Vec<f32> {
+    let mut state = seed.wrapping_mul(2_654_435_761).wrapping_add(12_345);
+    (0..count)
+        .map(|_| {
+            state = state.wrapping_mul(1_664_525).wrapping_add(1_013_904_223);
+            ((state >> 16) % 9) as f32 - 4.0
+        })
+        .collect()
+}
+
+/// Batch-by-batch f64 reference through `linalg::Matrix::matmul`.
+fn matrix_reference(shape: &GemmShape, lhs: &[f32], rhs: &[f32]) -> Vec<f32> {
+    let (m, k, n) = (shape.m, shape.k, shape.n);
+    let mut out = Vec::with_capacity(shape.batch * m * n);
+    for b in 0..shape.batch {
+        let a = Matrix::from_rows(
+            &(0..m)
+                .map(|i| {
+                    (0..k).map(|j| lhs[b * m * k + i * k + j] as f64).collect::<Vec<f64>>()
+                })
+                .collect::<Vec<_>>(),
+        );
+        let bm = Matrix::from_rows(
+            &(0..k)
+                .map(|i| {
+                    (0..n).map(|j| rhs[b * k * n + i * n + j] as f64).collect::<Vec<f64>>()
+                })
+                .collect::<Vec<_>>(),
+        );
+        let c = a.matmul(&bm);
+        for i in 0..m {
+            for j in 0..n {
+                out.push(c[(i, j)] as f32);
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn every_variant_matches_f64_matrix_reference_on_odd_grid() {
+    // The odd grid hits every tail edge of every tiling: dims below the
+    // micro-tile (1, 3), just past it (17), exactly on panel boundaries
+    // (64) and one past a power of two (129) — with batch 2 throughout so
+    // the per-batch offsets are exercised too.
+    let dims = [1usize, 3, 17, 64, 129];
+    let variants = cpu_variants();
+    assert_eq!(variants.len(), NUM_CPU_VARIANTS);
+    for &m in &dims {
+        for &k in &dims {
+            for &n in &dims {
+                let shape = GemmShape::new(m, k, n, 2);
+                let seed = (m * 31 + k * 7 + n) as u32;
+                let lhs = int_buffer(seed, shape.batch * m * k);
+                let rhs = int_buffer(seed + 1, shape.batch * k * n);
+                let want = matrix_reference(&shape, &lhs, &rhs);
+                for v in &variants {
+                    let got = gemm_variant(v, 3, &shape, &lhs, &rhs)
+                        .unwrap_or_else(|e| panic!("{} on {m}x{k}x{n}: {e}", v.name()));
+                    assert_eq!(
+                        got,
+                        want,
+                        "variant {} diverges from the f64 reference on {m}x{k}x{n}b2",
+                        v.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn every_variant_bitwise_equals_host_gemm_on_float_operands() {
+    // The stronger claim on arbitrary floats: every variant accumulates
+    // each output element in the same strictly ascending k order as the
+    // reference host GEMM, so the f32 results match bit for bit — packing,
+    // blocking, loop order, vector width and threading included.
+    let shapes = [
+        GemmShape::new(17, 129, 3, 2),
+        GemmShape::new(64, 64, 64, 1),
+        GemmShape::new(33, 65, 47, 2),
+        GemmShape::new(129, 17, 64, 1),
+    ];
+    for (si, shape) in shapes.iter().enumerate() {
+        let lhs = fill_buffer(si as u32 * 2 + 1, shape.batch * shape.m * shape.k);
+        let rhs = fill_buffer(si as u32 * 2 + 2, shape.batch * shape.k * shape.n);
+        let want = host_gemm(shape, &lhs, &rhs).unwrap();
+        for v in cpu_variants() {
+            let got = gemm_variant(&v, 4, shape, &lhs, &rhs).unwrap();
+            assert_eq!(
+                got.len(),
+                want.len(),
+                "variant {} output length on shape {si}",
+                v.name()
+            );
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    g.to_bits() == w.to_bits(),
+                    "variant {} differs from host_gemm at element {i} of shape {si}: \
+                     {g} vs {w}",
+                    v.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn threaded_variants_are_deterministic_across_thread_budgets() {
+    // The column-panel split assigns disjoint output panels, so the result
+    // must be bit-identical whatever the worker count — including budgets
+    // that do not divide the panel count evenly.
+    let shape = GemmShape::new(67, 33, 101, 2);
+    let lhs = fill_buffer(11, shape.batch * shape.m * shape.k);
+    let rhs = fill_buffer(12, shape.batch * shape.k * shape.n);
+    let threaded: Vec<_> = cpu_variants()
+        .into_iter()
+        .filter(|v| v.name().ends_with("_tp"))
+        .collect();
+    assert_eq!(threaded.len(), NUM_CPU_VARIANTS / 2, "half the family is threaded");
+    for v in &threaded {
+        let base = gemm_variant(v, 1, &shape, &lhs, &rhs).unwrap();
+        for threads in [2usize, 4, 7] {
+            let wide = gemm_variant(v, threads, &shape, &lhs, &rhs).unwrap();
+            assert_eq!(
+                base,
+                wide,
+                "variant {} changed bits between 1 and {threads} threads",
+                v.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn batches_are_independent_per_variant() {
+    // A batch-3 call must equal three batch-1 calls concatenated, bitwise,
+    // for a representative variant of each tiling.
+    let (m, k, n) = (17, 29, 13);
+    let lhs = fill_buffer(21, 3 * m * k);
+    let rhs = fill_buffer(22, 3 * k * n);
+    let batched = GemmShape::new(m, k, n, 3);
+    let single = GemmShape::new(m, k, n, 1);
+    for v in cpu_variants().iter().step_by(5) {
+        let got = gemm_variant(v, 2, &batched, &lhs, &rhs).unwrap();
+        let mut want = Vec::with_capacity(3 * m * n);
+        for b in 0..3 {
+            want.extend(
+                gemm_variant(
+                    v,
+                    2,
+                    &single,
+                    &lhs[b * m * k..(b + 1) * m * k],
+                    &rhs[b * k * n..(b + 1) * k * n],
+                )
+                .unwrap(),
+            );
+        }
+        assert_eq!(got, want, "variant {} mixes batches", v.name());
+    }
+}

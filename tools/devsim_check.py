@@ -480,3 +480,159 @@ assert admit_deadline(200_000, 150_000, 100_000) == ("deadline-unmeetable", 50_0
 print(f"OK: admission predicates (DeadlineShed + BoundedQueue) match the Rust "
       f"contract on {checked} synthetic gauge states "
       f"(hot-shape cost hints {sorted(v // 1000 for v in costs_ns.values())} us)")
+
+# ---- measured-drain retry-hint check ----------------------------------------
+# Port of AdmissionPolicy::admit_with_drain: when a shard has served at
+# least one batch, its EWMA drain rate (completions/sec) re-prices every
+# retry-after hint in "jobs to drain / measured rate" instead of the gauge
+# estimate. The admit/reject DECISION is identical to the drain=0 paths
+# ported above — only the hints change — and drain=0 must reproduce the
+# plain formulas bit for bit.
+
+def drain_hint_ns(jobs, drain_per_sec):
+    """Port of admission::drain_hint_ns (saturating, floored)."""
+    ns = max(jobs, 1) * 1e9 / drain_per_sec
+    if math.isfinite(ns) and ns < U64_MAX:
+        return max(int(ns), MIN_RETRY_HINT_NS)
+    return U64_MAX
+
+def admit_bounded_drain(max_inflight, max_queue_ns, cost_ns, backlog_ns,
+                        inflight, queued_depth, drain_per_sec):
+    """Port of BoundedQueue::admit_with_drain."""
+    measured = drain_per_sec > 0.0
+    if inflight >= max_inflight:
+        if measured:
+            hint = drain_hint_ns(inflight - max_inflight + 1, drain_per_sec)
+        else:
+            hint = max(backlog_ns // max(inflight, 1), MIN_RETRY_HINT_NS)
+        return ("queue-full", hint)
+    if backlog_ns > max_queue_ns:
+        if measured:
+            per_job = max(backlog_ns // max(queued_depth, 1), 1)
+            jobs = max(-(-(backlog_ns - max_queue_ns) // per_job), 1)
+            hint = drain_hint_ns(jobs, drain_per_sec)
+        else:
+            hint = max(backlog_ns - max_queue_ns, MIN_RETRY_HINT_NS)
+        return ("queue-full", hint)
+    return None
+
+def admit_deadline_drain(deadline_ns, cost_ns, backlog_ns, queued_depth,
+                         drain_per_sec):
+    """Port of DeadlineShed::admit_with_drain."""
+    measured = drain_per_sec > 0.0
+    if deadline_would_shed(cost_ns, backlog_ns, deadline_ns):
+        excess = max(sat_add(backlog_ns, cost_ns) - deadline_ns, 0)
+        if measured:
+            total = max(sat_add(backlog_ns, cost_ns), 1)
+            jobs = max(-(-(max(queued_depth, 1) * excess) // total), 1)
+            hint = drain_hint_ns(jobs, drain_per_sec)
+        else:
+            hint = max(excess, MIN_RETRY_HINT_NS)
+        return ("deadline-unmeetable", hint)
+    return None
+
+# drain=0 reproduces the plain ports bit for bit across the same grid.
+drain_checked = 0
+for s, cost in costs_ns.items():
+    for depth in range(25):
+        backlog = depth * (cost + QUEUED_OVERHEAD_NS)
+        for max_inflight, max_queue in [(0, U64_MAX), (8, U64_MAX), (1000, 384_000)]:
+            assert admit_bounded_drain(max_inflight, max_queue, cost, backlog,
+                                       depth, depth, 0.0) \
+                == admit_bounded(max_inflight, max_queue, cost, backlog, depth)
+            drain_checked += 1
+        for deadline in [1, cost, 200_000, 2_000_000, U64_MAX]:
+            assert admit_deadline_drain(deadline, cost, backlog, depth, 0.0) \
+                == admit_deadline(deadline, cost, backlog)
+            drain_checked += 1
+
+# The worked examples pinned by the Rust unit tests (admission.rs
+# measured_drain_* tests): 1000 jobs/s makes hints easy to read.
+#  - inflight limb: 3 jobs over the cap at 1000/s -> 3 ms.
+assert admit_bounded_drain(4, 100_000, 10_000, 50_000, 6, 5, 1000.0) \
+    == ("queue-full", 3_000_000)
+#  - backlog limb: 50k ns over budget / 30k ns per queued job -> 2 jobs -> 2 ms.
+assert admit_bounded_drain(64, 100_000, 10_000, 150_000, 1, 5, 1000.0) \
+    == ("queue-full", 2_000_000)
+#  - deadline limb: 4 queued * 50k excess / 250k total = 1 job at 1e6/s,
+#    floored to MIN_RETRY_HINT_NS.
+assert admit_deadline_drain(200_000, 150_000, 100_000, 4, 1e6) \
+    == ("deadline-unmeetable", MIN_RETRY_HINT_NS)
+#  - same state at a slow 10/s rate -> 1 job / 10 per sec = 100 ms.
+assert admit_deadline_drain(200_000, 150_000, 100_000, 4, 10.0) \
+    == ("deadline-unmeetable", 100_000_000)
+# Decisions never change with the rate, only hints.
+for s, cost in costs_ns.items():
+    for depth in range(25):
+        backlog = depth * (cost + QUEUED_OVERHEAD_NS)
+        for rate in [0.0, 1.0, 250.0, 1e6]:
+            plain = admit_bounded(8, 384_000, cost, backlog, depth)
+            drained = admit_bounded_drain(8, 384_000, cost, backlog, depth,
+                                          depth, rate)
+            assert (plain is None) == (drained is None)
+            drain_checked += 1
+
+print(f"OK: measured-drain hints match the Rust contract ({drain_checked} "
+      f"states; drain=0 reproduces the gauge formulas bit for bit)")
+
+# ---- CPU GEMM variant-family knob check -------------------------------------
+# Toolchain-free check of rust/src/engine/cpu: parse the CPU_TILINGS
+# literal straight out of the source, recompute the 24-variant cross
+# product with the same index encoding (tiling*8 + loop*4 + micro*2 +
+# threading) and naming scheme, and assert the family is distinct and
+# covers every declared knob axis.
+import os
+import re
+
+CPU_MOD = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       os.pardir, "rust", "src", "engine", "cpu", "mod.rs")
+with open(CPU_MOD) as f:
+    cpu_src = f.read()
+
+tiling_re = re.compile(
+    r'Tiling\s*\{\s*name:\s*"(\w+)",\s*mc:\s*(\d+),\s*kc:\s*(\d+),'
+    r'\s*nc:\s*(\d+),\s*mr:\s*(\d+),\s*nr:\s*(\d+)\s*\}')
+tilings_block = cpu_src.split("CPU_TILINGS")[1].split("];")[0]
+tilings = [dict(name=m[0], mc=int(m[1]), kc=int(m[2]), nc=int(m[3]),
+                mr=int(m[4]), nr=int(m[5]))
+           for m in tiling_re.findall(tilings_block)]
+assert len(tilings) == 3, f"expected 3 tilings in CPU_TILINGS, parsed {len(tilings)}"
+assert len({t["name"] for t in tilings}) == 3, "tiling names must be distinct"
+for t in tilings:
+    assert t["mc"] % t["mr"] == 0 and t["nc"] % t["nr"] == 0, \
+        f"tiling {t['name']}: cache blocks must be micro-tile multiples"
+
+LOOP_TAGS = ["pa", "pb"]
+MICRO_TAGS = ["sc", "vec"]
+THREAD_TAGS = ["t1", "tp"]
+variants = {}
+for ti, t in enumerate(tilings):
+    for li, loop in enumerate(LOOP_TAGS):
+        for mi, micro in enumerate(MICRO_TAGS):
+            for hi, thr in enumerate(THREAD_TAGS):
+                index = ti * 8 + li * 4 + mi * 2 + hi
+                name = f"cpu_{t['name']}_{loop}_{micro}_{thr}"
+                knobs = (t["name"], loop, micro, thr)
+                assert index not in variants, f"index collision at {index}"
+                variants[index] = (name, knobs)
+
+assert len(variants) == 24, f"expected 24 variants, built {len(variants)}"
+assert sorted(variants) == list(range(24)), "indices must be dense 0..24"
+names = [v[0] for v in variants.values()]
+knob_tuples = [v[1] for v in variants.values()]
+assert len(set(names)) == 24, "variant names must be distinct"
+assert len(set(knob_tuples)) == 24, "knob assignments must be distinct"
+# Axis coverage: every knob value appears, and each axis splits the
+# family evenly (8 per tiling, 12 per binary knob).
+for axis, values, share in [(0, [t["name"] for t in tilings], 8),
+                            (1, LOOP_TAGS, 12), (2, MICRO_TAGS, 12),
+                            (3, THREAD_TAGS, 12)]:
+    for val in values:
+        got = sum(1 for kt in knob_tuples if kt[axis] == val)
+        assert got == share, f"axis {axis} value {val}: {got} != {share}"
+# The source must declare the same family size and naming scheme.
+assert "NUM_CPU_VARIANTS: usize = CPU_TILINGS.len() * 2 * 2 * 2" in cpu_src
+assert '"cpu_{}_{}_{}_{}"' in cpu_src
+print(f"OK: CPU variant family — {len(tilings)} tilings x 2 loop orders x "
+      f"2 micro-kernels x 2 threading modes = 24 distinct variants, dense "
+      f"indices, every axis covered")
