@@ -15,6 +15,8 @@
 //!         --max-queue-us 2000
 //!     cargo run --release --example serve -- --engine cpu \
 //!         --retune-interval 150 --require-swap
+//!     cargo run --release --example serve -- --tenants 3 --quota 32 \
+//!         --slo interactive --admission bounded
 //!
 //! Clients submit mixed-shape GEMM requests; the submit path resolves each
 //! to a deployed kernel via the memoized decision-tree selector and routes
@@ -47,6 +49,16 @@
 //! `bounded` (admit + shed-on-drain) and the end-to-end deadline for
 //! `deadline-shed`. Rejected and shed counts print at shutdown.
 //!
+//! `--tenants N` registers N equal-weight tenants and round-robins the
+//! client threads across them (`--tenants 0`, the default, serves
+//! everything anonymously — the pre-tenant behavior). `--quota Q` caps
+//! tenant-attributed in-flight requests pool-wide at Q slots, split into
+//! weighted-fair reserved shares; past-share submits reject with
+//! `quota-exceeded` and a retry hint. `--slo interactive|standard|batch`
+//! sets every registered tenant's SLO class, scaling its admission
+//! latency budgets. Per-tenant goodput/rejected/shed/p99 lanes print in
+//! the shutdown report.
+//!
 //! `--engine sim|cpu` picks the backend (default sim). With `cpu` the
 //! pool executes real f32 GEMM on the host through the `engine::cpu`
 //! variant family: traffic drives the CPU manifest's bounded shape
@@ -62,7 +74,10 @@ use std::time::{Duration, Instant};
 
 use kernelsel::classify::codegen::CompiledTree;
 use kernelsel::classify::{ClassifierKind, KernelClassifier};
-use kernelsel::coordinator::{AdmissionPolicy, Coordinator, PoolConfig, Routing, SelectorPolicy};
+use kernelsel::coordinator::{
+    AdmissionPolicy, Coordinator, PoolConfig, Routing, SelectorPolicy, SloClass, TenantId,
+    TenantSpec,
+};
 use kernelsel::dataset::{benchmark_shapes, config_by_name, GemmShape};
 use kernelsel::devsim::{generate_dataset, profile_by_name};
 use kernelsel::engine::cpu::cpu_variants;
@@ -145,6 +160,16 @@ fn main() -> Result<(), String> {
             })?,
         None => AdmissionPolicy::Unbounded,
     };
+    let n_tenants = flag("--tenants", 0);
+    let quota_slots = flag("--quota", 0);
+    let slo = match flag_str("--slo") {
+        Some(v) => SloClass::by_name(&v)
+            .ok_or_else(|| format!("unknown --slo {v:?} (interactive|standard|batch)"))?,
+        None => SloClass::Standard,
+    };
+    let tenants: Vec<TenantSpec> = (1..=n_tenants)
+        .map(|i| TenantSpec::new(TenantId(i as u32), format!("tenant{i}"), 1, slo))
+        .collect();
     let engine_name = flag_str("--engine").unwrap_or_else(|| "sim".to_string());
     let dir = PathBuf::from("artifacts");
 
@@ -210,11 +235,13 @@ fn main() -> Result<(), String> {
         admission,
         retune: retune.clone(),
         pricing_profile,
+        tenants,
+        quota_slots,
         ..PoolConfig::default()
     };
     println!(
         "starting coordinator: {} shard(s), policy={}, backend={backend_desc}, \
-         routing={} (imbalance {:.1}), admission={}, retune={}",
+         routing={} (imbalance {:.1}), admission={}, retune={}, tenants={}",
         shards,
         policy.name(),
         pool.routing.name(),
@@ -223,6 +250,10 @@ fn main() -> Result<(), String> {
         match &retune {
             Some(cfg) => format!("every {:?} (drift > {:.2}x)", cfg.interval, cfg.drift_threshold),
             None => "off".to_string(),
+        },
+        match n_tenants {
+            0 => "off (anonymous)".to_string(),
+            n => format!("{n} x {} (quota {quota_slots})", slo.name()),
         },
     );
     let coord = Arc::new(Coordinator::start_pool(dir, policy, pool)?);
@@ -257,6 +288,13 @@ fn main() -> Result<(), String> {
     for client in 0..CLIENTS {
         let coord = coord.clone();
         let shapes = shapes.clone();
+        // Round-robin the client threads across the registered tenants;
+        // with --tenants 0 everything stays anonymous.
+        let tenant = if n_tenants > 0 {
+            TenantId((client % n_tenants + 1) as u32)
+        } else {
+            TenantId::ANONYMOUS
+        };
         joins.push(std::thread::spawn(move || {
             let mut ok = 0usize;
             let mut total_latency = 0.0f64;
@@ -264,7 +302,7 @@ fn main() -> Result<(), String> {
                 let s = shapes[(client + i) % shapes.len()];
                 let lhs = fill_buffer((client * 1000 + i) as u32, s.batch * s.m * s.k);
                 let rhs = fill_buffer((client * 1000 + i + 500) as u32, s.batch * s.k * s.n);
-                match coord.call(s, lhs, rhs) {
+                match coord.call_as(tenant, s, lhs, rhs) {
                     Ok(resp) if resp.result.is_ok() => {
                         ok += 1;
                         total_latency += resp.latency.as_secs_f64();

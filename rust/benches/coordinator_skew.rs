@@ -18,6 +18,15 @@
 //! `DeadlineShed` refuse the infeasible tail up front, so what they admit
 //! completes in bounded time and goodput stays at capacity.
 //!
+//! The **tenants** scenario is the adversarial-fairness gate for the
+//! multi-tenant quota layer: three in-quota tenants send paced traffic
+//! while a hostile tenant floods the same pool at ~10x its fair share.
+//! With weighted-fair quotas on (`quota-fair`), every in-quota tenant
+//! must keep p99 inside its SLO and hold >= 90% of the goodput it gets
+//! running alone (`isolated`); the same run with quotas off
+//! (`quota-off`) must demonstrably violate that — proving the quota
+//! layer, not luck, is what isolates the tenants.
+//!
 //!     cargo bench --bench coordinator_skew
 //!     cargo bench --bench coordinator_skew -- --smoke \
 //!         --json BENCH_pool.json --check-against ci/BENCH_pool.json
@@ -29,10 +38,13 @@
 //! on a >20% regression — the CI perf gate.
 
 use std::path::PathBuf;
-use std::time::Instant;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use kernelsel::coordinator::{
-    AdmissionPolicy, Coordinator, PoolConfig, Routing, SelectorPolicy,
+    AdmissionPolicy, Coordinator, PoolConfig, Routing, SelectorPolicy, SloClass, SubmitError,
+    TenantId, TenantSpec,
 };
 use kernelsel::dataset::GemmShape;
 use kernelsel::util::json::{parse, Json};
@@ -59,7 +71,8 @@ struct Cell {
     requests: usize,
     throughput_rps: f64,
     /// SLO-qualified successes per second of makespan. Equal to
-    /// `throughput_rps` outside the overload scenario (no SLO applies).
+    /// `throughput_rps` outside the overload/tenants scenarios (no SLO
+    /// applies).
     goodput_rps: f64,
     p50_ms: f64,
     /// p99 latency over *successful* responses (rejected/shed excluded).
@@ -68,6 +81,9 @@ struct Cell {
     steals: usize,
     rejected: usize,
     shed: usize,
+    /// Tenant name for the per-tenant cells of the adversarial scenario
+    /// (`None` everywhere else; the JSON key is omitted when absent).
+    tenant: Option<&'static str>,
 }
 
 fn flag_value(args: &[String], name: &str) -> Option<String> {
@@ -168,6 +184,7 @@ fn run_cell(
         steals: report.total.steals,
         rejected: 0,
         shed: 0,
+        tenant: None,
     }
 }
 
@@ -239,6 +256,7 @@ fn run_overload_cell(
         steals: report.total.steals,
         rejected,
         shed,
+        tenant: None,
     }
 }
 
@@ -268,11 +286,233 @@ fn measure_service_secs() -> f64 {
     samples[samples.len() / 2]
 }
 
+/// In-quota tenants of the adversarial scenario.
+const IN_QUOTA_TENANTS: [&str; 3] = ["alpha", "beta", "gamma"];
+/// The hostile tenant's id (in-quota tenants take 1..=3).
+const HOSTILE_ID: u32 = 4;
+/// Adversarial-scenario quota: with 4 equal-weight tenants each reserves
+/// 3 admission-guaranteed slots (floor(12/4), remainder 0).
+const TENANT_QUOTA_SLOTS: usize = 12;
+/// In-quota goodput in the fair run must hold this fraction of the
+/// tenant's isolated-run goodput.
+const TENANT_ISOLATION_TOLERANCE: f64 = 0.90;
+
+/// Pool for the adversarial scenario: 2 load-aware shards, the overload
+/// bounded-queue policy, 3 in-quota tenants + 1 hostile tenant at equal
+/// weight. `quota_slots = 0` turns the weighted-fair quota layer off
+/// while keeping the lanes tracked — the "what PR 7 buys" control.
+fn tenant_pool(quota_slots: usize, slo_secs: f64) -> Coordinator {
+    let slo_wall = Duration::from_secs_f64(slo_secs);
+    let mut tenants: Vec<TenantSpec> = IN_QUOTA_TENANTS
+        .iter()
+        .enumerate()
+        .map(|(i, name)| {
+            TenantSpec::new(TenantId(i as u32 + 1), *name, 1, SloClass::Standard)
+                .with_slo_wall(slo_wall)
+        })
+        .collect();
+    tenants.push(
+        TenantSpec::new(TenantId(HOSTILE_ID), "hostile", 1, SloClass::Standard)
+            .with_slo_wall(slo_wall),
+    );
+    Coordinator::start_pool(
+        PathBuf::from("artifacts"),
+        SelectorPolicy::Xla,
+        PoolConfig {
+            shards: 2,
+            admission: AdmissionPolicy::BoundedQueue {
+                max_inflight: 12,
+                max_queue_ns: 50_000_000,
+            },
+            tenants,
+            quota_slots,
+            ..PoolConfig::default()
+        },
+    )
+    .expect("start pool")
+}
+
+/// One paced in-quota client: `n` hot-shape requests at a fixed interval
+/// (open loop — a late response never delays the next submit), drained
+/// after the submit loop. Returns (ok latencies, rejected count).
+fn paced_tenant_traffic(
+    coord: &Coordinator,
+    tenant: TenantId,
+    n: usize,
+    interval: Duration,
+) -> (Vec<f64>, usize) {
+    let hot = GemmShape::new(128, 128, 128, 1);
+    let lhs = fill_buffer(tenant.0, 128 * 128);
+    let rhs = fill_buffer(tenant.0 + 7, 128 * 128);
+    let start = Instant::now();
+    let mut tickets = Vec::with_capacity(n);
+    for i in 0..n {
+        let target = start + interval * i as u32;
+        let now = Instant::now();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        tickets.push(coord.submit_as(tenant, hot, lhs.clone(), rhs.clone()));
+    }
+    let mut latencies = Vec::with_capacity(n);
+    let mut rejected = 0usize;
+    for ticket in tickets {
+        if ticket.rejection().is_some() {
+            rejected += 1;
+            continue;
+        }
+        let resp = ticket.wait();
+        if resp.result.is_ok() {
+            latencies.push(resp.latency.as_secs_f64());
+        }
+    }
+    (latencies, rejected)
+}
+
+/// The hostile tenant: a closed-loop flood at concurrency 32 — far past
+/// its fair share — that refills freed slots instantly until `stop` is
+/// set. Rejections back off by the pool's own retry-after hint (capped at
+/// 1 ms), so the flood is relentless without starving the shard threads
+/// of CPU. Returns (admitted, rejected) counts.
+fn hostile_flood(coord: &Coordinator, stop: &AtomicBool) -> (usize, usize) {
+    let hot = GemmShape::new(128, 128, 128, 1);
+    let lhs = fill_buffer(99, 128 * 128);
+    let rhs = fill_buffer(101, 128 * 128);
+    let mut inflight = std::collections::VecDeque::with_capacity(32);
+    let mut admitted = 0usize;
+    let mut rejected = 0usize;
+    while !stop.load(Ordering::Acquire) {
+        let ticket = coord.submit_as(TenantId(HOSTILE_ID), hot, lhs.clone(), rhs.clone());
+        match ticket.rejection() {
+            Some(SubmitError::Rejected { retry_after_hint, .. }) => {
+                rejected += 1;
+                let nap = retry_after_hint
+                    .unwrap_or(Duration::from_micros(100))
+                    .min(Duration::from_millis(1));
+                std::thread::sleep(nap);
+            }
+            None => {
+                admitted += 1;
+                inflight.push_back(ticket);
+                if inflight.len() >= 32 {
+                    let _ = inflight.pop_front().expect("nonempty").wait();
+                }
+            }
+        }
+    }
+    for ticket in inflight {
+        let _ = ticket.wait();
+    }
+    (admitted, rejected)
+}
+
+/// Run the adversarial scenario on one pool configuration: 3 paced
+/// in-quota tenants + the hostile flood, all concurrent. Returns one Cell
+/// per in-quota tenant (hostile admit/reject totals go to stdout only —
+/// its "goodput" is meaningless by construction).
+fn run_adversarial(
+    admission_name: &'static str,
+    quota_slots: usize,
+    n: usize,
+    interval: Duration,
+    slo_secs: f64,
+) -> Vec<Cell> {
+    let coord = Arc::new(tenant_pool(quota_slots, slo_secs));
+    // Warm the executable caches and the drain-rate EWMA before anything
+    // is measured or flooded.
+    let hot = GemmShape::new(128, 128, 128, 1);
+    for i in 0..8u32 {
+        let _ = coord.call(hot, fill_buffer(i, 128 * 128), fill_buffer(i + 3, 128 * 128));
+    }
+    let stop = Arc::new(AtomicBool::new(false));
+    let flood = {
+        let coord = coord.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || hostile_flood(&coord, &stop))
+    };
+    let t0 = Instant::now();
+    let mut clients = Vec::new();
+    for i in 0..IN_QUOTA_TENANTS.len() {
+        let coord = coord.clone();
+        clients.push(std::thread::spawn(move || {
+            paced_tenant_traffic(&coord, TenantId(i as u32 + 1), n, interval)
+        }));
+    }
+    let outcomes: Vec<(Vec<f64>, usize)> =
+        clients.into_iter().map(|j| j.join().expect("tenant client")).collect();
+    let wall = t0.elapsed().as_secs_f64();
+    stop.store(true, Ordering::Release);
+    let (hostile_admitted, hostile_rejected) = flood.join().expect("hostile client");
+    let report = Arc::try_unwrap(coord).ok().expect("sole owner").stop_detailed();
+    println!(
+        "{:>8} {:>14} hostile: admitted {hostile_admitted}, rejected {hostile_rejected}",
+        "tenants", admission_name,
+    );
+    IN_QUOTA_TENANTS
+        .iter()
+        .copied()
+        .zip(outcomes)
+        .map(|(name, (latencies, rejected))| {
+            let in_slo = latencies.iter().filter(|&&l| l <= slo_secs).count();
+            let stats =
+                if latencies.is_empty() { None } else { Some(Stats::from_secs(&latencies)) };
+            Cell {
+                mix: "tenants",
+                routing: "load-aware",
+                admission: admission_name,
+                shards: 2,
+                requests: n,
+                throughput_rps: latencies.len() as f64 / wall,
+                goodput_rps: in_slo as f64 / wall,
+                p50_ms: stats.as_ref().map_or(0.0, |s| s.p50 * 1e3),
+                p99_ms: stats.as_ref().map_or(0.0, |s| s.p99 * 1e3),
+                spilled: report.total.spilled,
+                steals: report.total.steals,
+                rejected,
+                shed: report.total.shed,
+                tenant: Some(name),
+            }
+        })
+        .collect()
+}
+
+/// Isolated baseline: one in-quota tenant alone on the quota-enabled
+/// pool, same pacing — the goodput a tenant is entitled to expect.
+fn run_isolated(n: usize, interval: Duration, slo_secs: f64) -> Cell {
+    let coord = tenant_pool(TENANT_QUOTA_SLOTS, slo_secs);
+    let hot = GemmShape::new(128, 128, 128, 1);
+    for i in 0..8u32 {
+        let _ = coord.call(hot, fill_buffer(i, 128 * 128), fill_buffer(i + 3, 128 * 128));
+    }
+    let t0 = Instant::now();
+    let (latencies, rejected) = paced_tenant_traffic(&coord, TenantId(1), n, interval);
+    let wall = t0.elapsed().as_secs_f64();
+    let report = coord.stop_detailed();
+    let in_slo = latencies.iter().filter(|&&l| l <= slo_secs).count();
+    let stats = if latencies.is_empty() { None } else { Some(Stats::from_secs(&latencies)) };
+    Cell {
+        mix: "tenants",
+        routing: "load-aware",
+        admission: "isolated",
+        shards: 2,
+        requests: n,
+        throughput_rps: latencies.len() as f64 / wall,
+        goodput_rps: in_slo as f64 / wall,
+        p50_ms: stats.as_ref().map_or(0.0, |s| s.p50 * 1e3),
+        p99_ms: stats.as_ref().map_or(0.0, |s| s.p99 * 1e3),
+        spilled: report.total.spilled,
+        steals: report.total.steals,
+        rejected,
+        shed: report.total.shed,
+        tenant: Some("alpha"),
+    }
+}
+
 fn cells_to_json(cells: &[Cell], mode: &str) -> Json {
     let entries: Vec<Json> = cells
         .iter()
         .map(|c| {
-            Json::obj(vec![
+            let mut fields = vec![
                 ("mix", Json::Str(c.mix.to_string())),
                 ("routing", Json::Str(c.routing.to_string())),
                 ("admission", Json::Str(c.admission.to_string())),
@@ -286,7 +526,11 @@ fn cells_to_json(cells: &[Cell], mode: &str) -> Json {
                 ("steals", Json::Num(c.steals as f64)),
                 ("rejected", Json::Num(c.rejected as f64)),
                 ("shed", Json::Num(c.shed as f64)),
-            ])
+            ];
+            if let Some(tenant) = c.tenant {
+                fields.push(("tenant", Json::Str(tenant.to_string())));
+            }
+            Json::obj(fields)
         })
         .collect();
     Json::obj(vec![
@@ -313,12 +557,15 @@ fn regressions(cells: &[Cell], baseline: &Json) -> Vec<String> {
         ) else {
             continue;
         };
-        if mix == "overload" {
+        if mix == "overload" || mix == "tenants" {
             // Overload cells serve a deliberately tiny admitted subset —
             // their throughput is scheduler noise, not capacity — and the
             // bench already self-gates them on goodput vs Unbounded. Keep
             // them out of the 20% throughput gate even once a ratcheted
-            // baseline carries them.
+            // baseline carries them. The tenants cells likewise self-gate
+            // (fair vs isolated goodput, quota-off must violate) and are
+            // keyed per tenant, which this (mix, routing, shards,
+            // admission) lookup can't distinguish.
             continue;
         }
         // Pre-admission baselines carry no "admission" key: they describe
@@ -495,6 +742,69 @@ fn main() {
             && c.p99_ms <= slo_secs * 1e3
     };
     let overload_gate_failed = !healthy(ob) || !healthy(od);
+    println!();
+
+    // Adversarial-tenant fairness scenario: 3 paced in-quota tenants +
+    // 1 hostile flood tenant, run three ways — isolated baseline (one
+    // tenant alone), quotas on, quotas off. Judged on each in-quota
+    // tenant's p99 vs the SLO and goodput vs its isolated-run goodput.
+    let tenant_n = if smoke { 60 } else { 120 };
+    let interval = Duration::from_secs_f64((4.0 * service).max(0.001));
+    println!(
+        "tenants: {} in-quota tenants paced at {:.2} ms/req ({tenant_n} reqs each) + \
+         hostile flood @ 32-deep; SLO {:.2} ms, quota {} slots",
+        IN_QUOTA_TENANTS.len(),
+        interval.as_secs_f64() * 1e3,
+        slo_secs * 1e3,
+        TENANT_QUOTA_SLOTS,
+    );
+    let print_tenant = |c: &Cell| {
+        println!(
+            "{:>8} {:>14} {:<6}: goodput {:>6.1} req/s  served {:>6.1} req/s  \
+             p50 {:>7.2} ms  p99 {:>7.2} ms  rejected {:>4}",
+            c.mix,
+            c.admission,
+            c.tenant.unwrap_or("?"),
+            c.goodput_rps,
+            c.throughput_rps,
+            c.p50_ms,
+            c.p99_ms,
+            c.rejected,
+        );
+    };
+    let iso = run_isolated(tenant_n, interval, slo_secs);
+    print_tenant(&iso);
+    let fair = run_adversarial("quota-fair", TENANT_QUOTA_SLOTS, tenant_n, interval, slo_secs);
+    for c in &fair {
+        print_tenant(c);
+    }
+    let unfair = run_adversarial("quota-off", 0, tenant_n, interval, slo_secs);
+    for c in &unfair {
+        print_tenant(c);
+    }
+    // A tenant that served nothing has p99 encoded as 0.0 (no data); the
+    // explicit > 0.0 check keeps that from passing the SLO vacuously.
+    let tenant_goodput_floor = TENANT_ISOLATION_TOLERANCE * iso.goodput_rps;
+    let isolated_ok = |c: &Cell| {
+        c.p99_ms > 0.0 && c.p99_ms <= slo_secs * 1e3 && c.goodput_rps >= tenant_goodput_floor
+    };
+    let fair_holds = fair.iter().all(&isolated_ok);
+    let unfair_violates = unfair.iter().any(|c| !isolated_ok(c));
+    println!(
+        "tenants @ quota-fair: every in-quota tenant in SLO with goodput >= \
+         {:.0}% of isolated ({:.1} req/s)  [{}]",
+        TENANT_ISOLATION_TOLERANCE * 100.0,
+        iso.goodput_rps,
+        if fair_holds { "OK" } else { "HOSTILE TENANT BROKE ISOLATION" }
+    );
+    println!(
+        "tenants @ quota-off: same traffic without quotas violates isolation  [{}]",
+        if unfair_violates { "OK (quotas are load-bearing)" } else { "CONTROL FAILED" }
+    );
+    let tenant_gate_failed = !fair_holds || !unfair_violates;
+    cells.push(iso);
+    cells.extend(fair);
+    cells.extend(unfair);
 
     if let Some(path) = json_path {
         let doc = cells_to_json(&cells, mode);
@@ -533,6 +843,15 @@ fn main() {
             "\nOVERLOAD GATE FAILED: each shedding policy must hold goodput >= {:.0}% of \
              Unbounded's with p99(ok) inside the SLO (see the overload verdict line above)",
             OVERLOAD_GATE_TOLERANCE * 100.0
+        );
+        std::process::exit(1);
+    }
+    if tenant_gate_failed {
+        eprintln!(
+            "\nTENANT FAIRNESS GATE FAILED: with quotas on, every in-quota tenant must \
+             stay in SLO at >= {:.0}% of isolated goodput under a hostile flood, AND the \
+             quota-off control must violate that (see the tenants verdict lines above)",
+            TENANT_ISOLATION_TOLERANCE * 100.0
         );
         std::process::exit(1);
     }

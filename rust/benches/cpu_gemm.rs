@@ -13,19 +13,24 @@
 //!    throughput, as a geometric mean across the grid.
 //!
 //!     cargo bench --bench cpu_gemm
-//!     cargo bench --bench cpu_gemm -- --smoke --json BENCH_cpu.json
+//!     cargo bench --bench cpu_gemm -- --smoke --json BENCH_cpu.json \
+//!         --check-against ci/BENCH_cpu.json
 //!
 //! `--smoke` shrinks the grid and rep count for CI. `--json PATH` writes
 //! the machine-readable `BENCH_cpu.json` (schema `kernelsel-bench-cpu-v1`,
 //! documented in ARCHITECTURE.md). `--threads N` caps the worker budget
 //! for the thread-parallel variants; `--reps N` sets best-of-N timing.
+//! `--check-against PATH` compares `regret_geomean` and each regime's
+//! `max_spread` against a previously committed run (the measured baseline
+//! maintained by `tools/ratchet_baseline.py`) and exits non-zero on a
+//! >20% drop — the mirror of the pool bench's throughput gate.
 
 use kernelsel::classify::ClassifierKind;
 use kernelsel::coordinator::tune_selector_with;
 use kernelsel::dataset::Normalization;
 use kernelsel::engine::cpu::{collect_dataset, grid_cells, variant_by_index, GridCell};
 use kernelsel::selection::Method;
-use kernelsel::util::json::Json;
+use kernelsel::util::json::{parse, Json};
 
 /// Gate 1: best/worst variant ratio required on >= 1 cell per regime.
 const SPREAD_MIN: f64 = 2.0;
@@ -35,6 +40,61 @@ const REGRET_MIN: f64 = 0.85;
 
 /// Deployment sizes swept for the selection-regret gate.
 const K_SWEEP: [usize; 3] = [4, 6, 8];
+
+/// `--check-against`: regret geomean and per-regime spread may drop by at
+/// most this factor vs the committed baseline (same tolerance as the pool
+/// bench's throughput gate).
+const BASELINE_TOLERANCE: f64 = 0.80;
+
+/// Compare this run's headline metrics against a committed baseline doc;
+/// returns one line per metric that fell below `BASELINE_TOLERANCE x`.
+fn baseline_regressions(
+    baseline: &Json,
+    regret_geomean: f64,
+    regimes: &[(&'static str, f64)],
+) -> Vec<String> {
+    let mut out = Vec::new();
+    match baseline.get("regret_geomean").and_then(|v| v.as_f64()) {
+        Some(base) => {
+            let floor = base * BASELINE_TOLERANCE;
+            if regret_geomean < floor {
+                out.push(format!(
+                    "regret_geomean: {:.1}% < {:.1}% (baseline {:.1}% x {:.0}% tolerance)",
+                    regret_geomean * 100.0,
+                    floor * 100.0,
+                    base * 100.0,
+                    BASELINE_TOLERANCE * 100.0
+                ));
+            }
+        }
+        None => out.push("baseline has no regret_geomean".to_string()),
+    }
+    let Some(entries) = baseline.get("regimes").and_then(|e| e.as_arr()) else {
+        out.push("baseline has no regimes array".to_string());
+        return out;
+    };
+    for b in entries {
+        let (Some(regime), Some(base)) = (
+            b.get("regime").and_then(|v| v.as_str()),
+            b.get("max_spread").and_then(|v| v.as_f64()),
+        ) else {
+            continue;
+        };
+        let Some((_, got)) = regimes.iter().find(|(name, _)| *name == regime) else {
+            println!("  (baseline regime {regime} not in this grid — skipped)");
+            continue;
+        };
+        let floor = base * BASELINE_TOLERANCE;
+        if *got < floor {
+            out.push(format!(
+                "{regime} max_spread: {got:.2}x < {floor:.2}x \
+                 (baseline {base:.2}x x {:.0}% tolerance)",
+                BASELINE_TOLERANCE * 100.0
+            ));
+        }
+    }
+    out
+}
 
 fn flag_value(args: &[String], name: &str) -> Option<String> {
     args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).cloned()
@@ -60,6 +120,7 @@ fn main() {
     let args: Vec<String> = std::env::args().collect();
     let smoke = args.iter().any(|a| a == "--smoke");
     let json_path = flag_value(&args, "--json");
+    let baseline_path = flag_value(&args, "--check-against");
     let threads = flag_value(&args, "--threads")
         .and_then(|v| v.parse::<usize>().ok())
         .unwrap_or_else(|| {
@@ -237,6 +298,32 @@ fn main() {
         ]);
         std::fs::write(&path, doc.to_string() + "\n").expect("write BENCH_cpu.json");
         println!("\nwrote {path}");
+    }
+
+    if let Some(path) = baseline_path {
+        match std::fs::read_to_string(&path) {
+            Ok(text) => {
+                let baseline = parse(&text).expect("parse baseline BENCH_cpu.json");
+                let regs = baseline_regressions(&baseline, best_geomean, &regimes);
+                if regs.is_empty() {
+                    println!(
+                        "no regression vs {path} ({:.0}% floor kept)",
+                        BASELINE_TOLERANCE * 100.0
+                    );
+                } else {
+                    eprintln!("\nBASELINE REGRESSIONS vs {path}:");
+                    for r in &regs {
+                        eprintln!("  {r}");
+                    }
+                    std::process::exit(1);
+                }
+            }
+            Err(e) => {
+                // First run on a branch with no committed baseline yet: the
+                // gate records instead of failing.
+                println!("no baseline at {path} ({e}); skipping regression check");
+            }
+        }
     }
 
     if spread_failed {

@@ -49,6 +49,13 @@ pub enum RejectReason {
     /// exceeds the deadline budget ([`AdmissionPolicy::DeadlineShed`]):
     /// even if admitted now, the response would arrive too late.
     DeadlineUnmeetable,
+    /// The submitting tenant is past its weighted-fair reserved share
+    /// and the unreserved remainder of the quota capacity is exhausted
+    /// (see [`crate::coordinator::tenant::quota_would_admit`]). Decided
+    /// before the pool-wide admission policy runs, so a hostile tenant's
+    /// overflow never competes with in-quota peers for the shared
+    /// budgets.
+    QuotaExceeded,
 }
 
 impl RejectReason {
@@ -57,6 +64,7 @@ impl RejectReason {
         match self {
             RejectReason::QueueFull => "queue-full",
             RejectReason::DeadlineUnmeetable => "deadline-unmeetable",
+            RejectReason::QuotaExceeded => "quota-exceeded",
         }
     }
 }
@@ -225,6 +233,30 @@ impl AdmissionPolicy {
         }
     }
 
+    /// This policy with its latency budgets scaled by an SLO-class
+    /// factor (see [`crate::coordinator::tenant::SloClass`]): a `Batch`
+    /// tenant tolerates 16x the configured `max_queue_ns`/`deadline_ns`
+    /// an `Interactive` tenant gets. Saturating, so a huge factor means
+    /// "effectively unbounded budget", never a wrapped-around tiny one.
+    /// In-flight caps are *not* scaled (they bound memory, not latency),
+    /// and the drain-side shed budget the shards enforce stays the
+    /// pool-configured one — SLO scaling shapes admission decisions
+    /// only. Factor 1 returns the policy unchanged.
+    pub fn for_slo_factor(&self, factor: u64) -> AdmissionPolicy {
+        match *self {
+            AdmissionPolicy::BoundedQueue { max_inflight, max_queue_ns } if factor != 1 => {
+                AdmissionPolicy::BoundedQueue {
+                    max_inflight,
+                    max_queue_ns: max_queue_ns.saturating_mul(factor),
+                }
+            }
+            AdmissionPolicy::DeadlineShed { deadline_ns } if factor != 1 => {
+                AdmissionPolicy::DeadlineShed { deadline_ns: deadline_ns.saturating_mul(factor) }
+            }
+            other => other,
+        }
+    }
+
     /// Decide one request: `cost_ns` is its dispatch-cost hint,
     /// `backlog_ns` the routed shard's load-gauge score, `inflight` the
     /// pool-wide in-flight count *before* this request (the coordinator
@@ -335,8 +367,9 @@ impl AdmissionPolicy {
 /// Convert "wait for `jobs` completions at `drain_per_sec`" into a retry
 /// hint in nanoseconds, floored at [`MIN_RETRY_HINT_NS`]. Saturates on
 /// non-finite or overflowing products (a pathological rate must never
-/// wrap into a tiny hint).
-fn drain_hint_ns(jobs: u64, drain_per_sec: f64) -> u64 {
+/// wrap into a tiny hint). Crate-visible so the coordinator can price
+/// per-tenant quota rejections on the same drain-rate scale.
+pub(crate) fn drain_hint_ns(jobs: u64, drain_per_sec: f64) -> u64 {
     let ns = jobs.max(1) as f64 * 1e9 / drain_per_sec;
     if ns.is_finite() && ns < u64::MAX as f64 {
         (ns as u64).max(MIN_RETRY_HINT_NS)
@@ -377,6 +410,24 @@ mod tests {
             Some(AdmissionPolicy::DeadlineShed { deadline_ns: 5_000 })
         );
         assert_eq!(AdmissionPolicy::by_name("bogus", 0, 0), None);
+    }
+
+    #[test]
+    fn slo_factor_scales_latency_budgets_only() {
+        let bounded = AdmissionPolicy::BoundedQueue { max_inflight: 8, max_queue_ns: 1_000 };
+        assert_eq!(bounded.for_slo_factor(1), bounded);
+        assert_eq!(
+            bounded.for_slo_factor(16),
+            AdmissionPolicy::BoundedQueue { max_inflight: 8, max_queue_ns: 16_000 },
+            "queue budget scales, inflight cap does not"
+        );
+        let shed = AdmissionPolicy::DeadlineShed { deadline_ns: u64::MAX / 2 };
+        assert_eq!(
+            shed.for_slo_factor(4),
+            AdmissionPolicy::DeadlineShed { deadline_ns: u64::MAX },
+            "saturates instead of wrapping"
+        );
+        assert_eq!(AdmissionPolicy::Unbounded.for_slo_factor(16), AdmissionPolicy::Unbounded);
     }
 
     #[test]

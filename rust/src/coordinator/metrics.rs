@@ -5,7 +5,7 @@
 //! coordinator frontend counts with on the submit path.
 
 use std::cell::Cell;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Cells per [`StripedCounter`]; also the lane count reused by the
@@ -132,6 +132,51 @@ pub struct Metrics {
     batch_sizes: Vec<usize>,
     /// Dispatches per configuration index (usize::MAX = XLA backend).
     pub per_config: HashMap<usize, usize>,
+    /// Per-tenant serving lanes, keyed by raw tenant id. Only populated
+    /// for registered (non-anonymous) tenants — anonymous traffic is
+    /// never tracked here, keeping the pre-tenant path untouched.
+    /// `BTreeMap` so reports iterate tenants in stable id order.
+    pub per_tenant: BTreeMap<u32, TenantLane>,
+}
+
+/// Serving counters for one tenant: the per-tenant slice of the pool's
+/// request/reject/shed story, plus the tenant's own latency samples so
+/// fairness is observable per tenant (p99, in-SLO goodput) instead of
+/// blended into the pool distribution.
+#[derive(Clone, Debug, Default)]
+pub struct TenantLane {
+    /// Requests served to completion for this tenant.
+    pub requests: usize,
+    /// Served requests that finished within the tenant's SLO wall
+    /// (every served request when the tenant has no wall configured).
+    pub in_slo: usize,
+    /// Requests refused at submit time (quota or pool admission).
+    pub rejected: usize,
+    /// Admitted requests dropped at drain time past the queue budget.
+    pub shed: usize,
+    /// End-to-end latency samples (seconds) for this tenant's requests.
+    pub latencies: Vec<f64>,
+}
+
+impl TenantLane {
+    /// Fold another lane (same tenant, different shard) into this one.
+    pub fn merge(&mut self, other: TenantLane) {
+        self.requests += other.requests;
+        self.in_slo += other.in_slo;
+        self.rejected += other.rejected;
+        self.shed += other.shed;
+        self.latencies.extend(other.latencies);
+    }
+
+    /// Distribution stats over this tenant's latency samples, or `None`
+    /// before its first served request.
+    pub fn latency_stats(&self) -> Option<crate::util::Stats> {
+        if self.latencies.is_empty() {
+            None
+        } else {
+            Some(crate::util::Stats::from_secs(&self.latencies))
+        }
+    }
 }
 
 /// Key under which XLA-comparator dispatches are counted in
@@ -198,6 +243,22 @@ impl Metrics {
         for (config, count) in other.per_config {
             *self.per_config.entry(config).or_default() += count;
         }
+        for (tenant, lane) in other.per_tenant {
+            self.per_tenant.entry(tenant).or_default().merge(lane);
+        }
+    }
+
+    /// Record one served request into a tenant's lane: its end-to-end
+    /// latency and whether it landed within the tenant's SLO wall.
+    /// Called by the serving shard for registered tenants only — the
+    /// pool-wide [`Metrics::record_request`] still counts the request.
+    pub fn record_tenant(&mut self, tenant: u32, latency_secs: f64, in_slo: bool) {
+        let lane = self.per_tenant.entry(tenant).or_default();
+        lane.requests += 1;
+        if in_slo {
+            lane.in_slo += 1;
+        }
+        lane.latencies.push(latency_secs);
     }
 
     /// Record one served request's end-to-end latency and the
@@ -359,6 +420,31 @@ mod tests {
         assert_eq!(a.per_config[&XLA_BACKEND_KEY], 1);
         assert_eq!(a.latency_stats().unwrap().n, 3);
         assert_eq!(a.mean_batch_size(), 3.0);
+    }
+
+    #[test]
+    fn tenant_lanes_record_and_merge_per_tenant() {
+        let mut a = Metrics::default();
+        a.record_tenant(1, 0.001, true);
+        a.record_tenant(1, 0.009, false);
+        a.record_tenant(2, 0.002, true);
+
+        let mut b = Metrics::default();
+        b.record_tenant(1, 0.003, true);
+        b.per_tenant.entry(3).or_default().rejected = 4;
+        b.per_tenant.entry(3).or_default().shed = 2;
+
+        a.merge(b);
+        let t1 = &a.per_tenant[&1];
+        assert_eq!((t1.requests, t1.in_slo), (3, 2));
+        assert_eq!(t1.latency_stats().unwrap().n, 3);
+        assert_eq!(a.per_tenant[&2].requests, 1);
+        let t3 = &a.per_tenant[&3];
+        assert_eq!((t3.rejected, t3.shed), (4, 2));
+        assert!(t3.latency_stats().is_none());
+        // Stable id order for reports.
+        let ids: Vec<u32> = a.per_tenant.keys().copied().collect();
+        assert_eq!(ids, vec![1, 2, 3]);
     }
 
     #[test]

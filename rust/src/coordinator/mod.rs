@@ -18,10 +18,13 @@
 //!   backend + batcher + metrics per shard, plus the optional background
 //!   retuner wiring (measured telemetry in, hot-swapped selectors out —
 //!   see [`crate::tuning`]).
+//! * [`tenant`] — the multi-tenant model: tenant identity, SLO classes,
+//!   and the weighted-fair admission-quota arithmetic (reserved shares,
+//!   the pure admit predicate) the server's quota gate runs.
 //! * [`vgg`] — the VGG16 inference engine of paper §6 (`pjrt` feature).
 //! * [`metrics`] — serving statistics (incl. rejection/shed and
-//!   spill/steal/retune counters and occupancy histograms) with exact
-//!   per-shard aggregation.
+//!   spill/steal/retune counters and occupancy histograms, plus
+//!   per-tenant lanes) with exact per-shard aggregation.
 
 pub mod admission;
 pub mod batcher;
@@ -31,6 +34,7 @@ pub mod metrics;
 pub mod registry;
 pub mod selector;
 pub mod server;
+pub mod tenant;
 #[cfg(feature = "pjrt")]
 pub mod vgg;
 
@@ -43,6 +47,8 @@ pub use registry::{KernelRegistry, Resolution};
 pub use selector::{tune_selector, tune_selector_with, SelectorPolicy};
 pub use server::{
     Coordinator, GemmRequest, GemmResponse, PoolConfig, PoolReport, Routing, ShardLoad,
+    TenantReport,
 };
+pub use tenant::{SloClass, TenantId, TenantSpec};
 #[cfg(feature = "pjrt")]
 pub use vgg::{LayerTiming, VggEngine};

@@ -41,8 +41,23 @@
 //! shards shed already-admitted work that blew its queue budget at drain
 //! time. The default policy, [`AdmissionPolicy::Unbounded`], bypasses all
 //! of it with a zero-cost early exit — see [`crate::coordinator::admission`].
+//!
+//! The pool is **multi-tenant**: [`Coordinator::submit_as`] tags a
+//! request with a [`TenantId`], and registered tenants
+//! ([`PoolConfig::tenants`]) get weighted-fair admission quotas (a
+//! tenant's reserved share is admission-guaranteed; past it, the tenant
+//! is refused before it can compete for the shared budgets — see
+//! [`crate::coordinator::tenant`]), SLO-class-scaled admission budgets,
+//! per-tenant metrics lanes, and optionally a per-device telemetry
+//! *domain*: a tenant pinned to a device profile records its measured
+//! costs into a dedicated sink with its own registry/cache/retuner, so
+//! the retuner trains and hot-swaps a selector per domain instead of
+//! blending heterogeneous mixes. Anonymous traffic (`submit`,
+//! `submit_many`, `call` — all delegating with
+//! [`TenantId::ANONYMOUS`]) bypasses every tenant mechanism and stays
+//! bit-identical to the pre-tenant pool.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
@@ -50,13 +65,16 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::admission::{AdmissionPolicy, SubmitError};
+use crate::coordinator::admission::{
+    drain_hint_ns, AdmissionPolicy, RejectReason, SubmitError, MIN_RETRY_HINT_NS,
+};
 use crate::coordinator::batcher::{Batcher, BatcherConfig, Pending};
 use crate::coordinator::cache::{CostModel, ResolutionCache, ResolvedKernel};
 use crate::coordinator::completion::{Completion, CompletionPool, Ticket};
 use crate::coordinator::metrics::{Metrics, StripedCounter};
 use crate::coordinator::registry::KernelRegistry;
 use crate::coordinator::selector::SelectorPolicy;
+use crate::coordinator::tenant::{quota_would_admit, reserved_shares, TenantId, TenantSpec};
 use crate::dataset::GemmShape;
 use crate::engine::{Backend, EngineKind};
 use crate::runtime::Manifest;
@@ -250,6 +268,21 @@ pub struct PoolConfig {
     /// the serving device: the measured-vs-predicted gap between the two
     /// is exactly the drift signal the retuner watches.
     pub pricing_profile: Option<&'static str>,
+    /// Registered tenants (see [`TenantSpec`]): each gets a weighted-fair
+    /// admission quota, an SLO-scaled admission policy, a metrics lane in
+    /// the report, and — when pinned to a device profile — its own
+    /// telemetry/retune domain. Tenant ids must be unique and non-zero
+    /// (`TenantId(0)` is the anonymous default). Empty (the default)
+    /// means a single-tenant pool, bit-identical to the pre-tenant
+    /// behavior.
+    pub tenants: Vec<TenantSpec>,
+    /// Capacity (in-flight requests) the weighted-fair quotas divide.
+    /// `0` (the default) disables quota accounting — except that a
+    /// registered tenant with weight 0 is still always refused — and
+    /// falls back to `BoundedQueue::max_inflight` when that policy is
+    /// active, so quotas and the pool-wide cap share one capacity
+    /// number unless overridden.
+    pub quota_slots: usize,
 }
 
 impl Default for PoolConfig {
@@ -266,6 +299,8 @@ impl Default for PoolConfig {
             admission: AdmissionPolicy::default(),
             retune: None,
             pricing_profile: None,
+            tenants: Vec::new(),
+            quota_slots: 0,
         }
     }
 }
@@ -283,8 +318,37 @@ pub struct PoolReport {
     pub cache_hits: usize,
     /// Selector-cache misses over the pool's lifetime.
     pub cache_misses: usize,
-    /// Retuner counters (background thread + explicit `retune_now` calls).
+    /// Retuner counters (background thread + explicit `retune_now` calls)
+    /// for the default domain; extra domains fold their counters into
+    /// `total` only.
     pub tuning: RetunerStats,
+    /// Per-tenant serving report, in registration order (empty for a
+    /// pool without registered tenants).
+    pub tenants: Vec<TenantReport>,
+}
+
+/// One registered tenant's slice of the shutdown report: its goodput
+/// (in-SLO completions), refusals, sheds, and latency tail — the numbers
+/// that make fairness observable instead of asserted.
+#[derive(Clone, Debug, Default)]
+pub struct TenantReport {
+    /// Raw tenant id ([`TenantId`] payload).
+    pub id: u32,
+    /// Registered display name.
+    pub name: String,
+    /// Requests served to completion.
+    pub requests: usize,
+    /// Served requests that finished successfully within the tenant's
+    /// SLO wall (all successful completions when no wall is set).
+    pub in_slo: usize,
+    /// Requests refused at submit time (quota or pool admission).
+    pub rejected: usize,
+    /// Admitted requests shed at drain time past the queue budget.
+    pub shed: usize,
+    /// Median end-to-end latency, milliseconds (0 when nothing served).
+    pub p50_ms: f64,
+    /// 99th-percentile end-to-end latency, milliseconds.
+    pub p99_ms: f64,
 }
 
 impl PoolReport {
@@ -299,6 +363,13 @@ impl PoolReport {
         );
         for (i, m) in self.per_shard.iter().enumerate() {
             out.push_str(&format!("\n  shard {i}: {}", m.summary()));
+        }
+        for t in &self.tenants {
+            out.push_str(&format!(
+                "\n  tenant {} ({}): requests={} in_slo={} rejected={} shed={} \
+                 p50={:.2}ms p99={:.2}ms",
+                t.id, t.name, t.requests, t.in_slo, t.rejected, t.shed, t.p50_ms, t.p99_ms
+            ));
         }
         if self.tuning.ticks > 0 {
             out.push_str(&format!(
@@ -317,16 +388,50 @@ impl PoolReport {
 }
 
 /// RAII admission reservation: one slot on the pool-wide in-flight
-/// counter, released exactly once when dropped. Riding on the [`Job`]
-/// itself means every exit path releases it — normal completion, a shed,
-/// or a panicking worker unwinding its local batcher — so a crashed
-/// shard can never leak `max_inflight` capacity. `None` for policies
-/// that don't cap in-flight (no counter traffic at all).
-struct InflightSlot(Option<Arc<AtomicUsize>>);
+/// counter and/or one on the submitting tenant's quota counter, each
+/// released exactly once when dropped. Riding on the [`Job`] itself
+/// means every exit path releases them — normal completion, a shed, or
+/// a panicking worker unwinding its local batcher — so a crashed shard
+/// can never leak `max_inflight` or quota capacity. Both `None` for
+/// anonymous traffic under a non-capping policy (no counter traffic at
+/// all).
+struct InflightSlot {
+    /// The pool-wide in-flight reservation (inflight-capping policies).
+    pool: Option<Arc<AtomicUsize>>,
+    /// The submitting tenant's quota reservation (quota-enabled pools).
+    tenant: Option<Arc<AtomicUsize>>,
+}
+
+impl InflightSlot {
+    /// A slot holding no reservation at all (the uncounted fast path).
+    fn none() -> InflightSlot {
+        InflightSlot { pool: None, tenant: None }
+    }
+
+    /// A slot holding one reserved unit on `counter`'s pool-wide cap.
+    fn pool(counter: Arc<AtomicUsize>) -> InflightSlot {
+        InflightSlot { pool: Some(counter), tenant: None }
+    }
+
+    /// A slot holding one reserved unit on a tenant's quota counter.
+    fn tenant(counter: Arc<AtomicUsize>) -> InflightSlot {
+        InflightSlot { pool: None, tenant: Some(counter) }
+    }
+
+    /// Take the tenant reservation out, leaving this slot empty of it —
+    /// used to fold the quota slot into the pool admission slot so one
+    /// RAII value rides the job and releases both.
+    fn into_tenant(mut self) -> Option<Arc<AtomicUsize>> {
+        self.tenant.take()
+    }
+}
 
 impl Drop for InflightSlot {
     fn drop(&mut self) {
-        if let Some(counter) = self.0.take() {
+        if let Some(counter) = self.pool.take() {
+            counter.fetch_sub(1, Ordering::Release);
+        }
+        if let Some(counter) = self.tenant.take() {
             counter.fetch_sub(1, Ordering::Release);
         }
     }
@@ -347,6 +452,54 @@ struct Job {
     completion: Completion,
     /// The admission reservation this job holds (see [`InflightSlot`]).
     reservation: InflightSlot,
+    /// The submitting tenant ([`TenantId::ANONYMOUS`] for untagged
+    /// traffic — never tracked in the per-tenant metrics lanes).
+    tenant: TenantId,
+    /// The tenant's SLO wall, frozen at submit: completions within it
+    /// count as in-SLO goodput in the tenant's lane.
+    slo_wall: Option<Duration>,
+    /// The retune domain this job's measured cost feeds (0 = pool-wide).
+    domain: u32,
+}
+
+/// Live admission/accounting state for one registered tenant.
+struct TenantState {
+    spec: TenantSpec,
+    /// This tenant's reserved share of the quota capacity (see
+    /// [`reserved_shares`]); admission-guaranteed under overload.
+    reserved: usize,
+    /// The tenant's own in-flight count — reserved-then-checked on
+    /// submit exactly like the pool-wide counter, released by the job's
+    /// [`InflightSlot`].
+    inflight: Arc<AtomicUsize>,
+    /// Striped count of this tenant's submit-path refusals (quota and
+    /// pool admission), folded into the tenant's lane at shutdown.
+    rejected: StripedCounter,
+    /// The retune domain the tenant's telemetry feeds (0 = pool-wide).
+    domain: u32,
+    /// The pool admission policy with its latency budgets scaled by the
+    /// tenant's SLO class, precomputed at registration.
+    policy: AdmissionPolicy,
+}
+
+/// One extra per-device retune domain: its own registry (independently
+/// hot-swappable selector), resolution cache, telemetry sink and
+/// optional background retuner. Domain 0 is the pool's own
+/// registry/cache/telemetry; these are domains `1..`.
+struct DomainState {
+    registry: Arc<KernelRegistry>,
+    cache: Arc<ResolutionCache>,
+    telemetry: Arc<TelemetrySink>,
+    retuner: Option<Retuner>,
+    retune_stats: Arc<Mutex<RetunerStats>>,
+}
+
+/// The per-domain view a shard needs at serve time: the sink measured
+/// costs record into and the device profile the timing is priced on
+/// (`None` = the backend's own device). Index 0 is the default domain.
+struct ShardDomain {
+    telemetry: Arc<TelemetrySink>,
+    device: Option<&'static str>,
 }
 
 struct QueueInner {
@@ -499,6 +652,18 @@ pub struct Coordinator {
     routing: Routing,
     imbalance: f64,
     admission: AdmissionPolicy,
+    /// Registered tenants in registration order; indexed through
+    /// `tenant_index`. The quota gate scans this vector (tiny T) for the
+    /// peers' unused reservations.
+    tenants: Vec<TenantState>,
+    /// Raw tenant id -> index into `tenants`.
+    tenant_index: HashMap<u32, usize>,
+    /// Per-device retune domains beyond the default (domain `d` lives at
+    /// `extra_domains[d - 1]`; domain 0 is the coordinator's own
+    /// registry/cache/telemetry).
+    extra_domains: Vec<DomainState>,
+    /// Capacity the weighted-fair tenant quotas divide (0 = quotas off).
+    quota_slots: usize,
 }
 
 /// The synthetic response for a request rejected on the submit path.
@@ -585,8 +750,71 @@ impl Coordinator {
             }
         }
 
+        // Per-device retune domains: tenants pinned to a device profile
+        // share one domain per distinct profile; everyone else (and all
+        // anonymous traffic) stays in domain 0, the pool's own
+        // registry/cache/telemetry — so a pool without pinned tenants
+        // builds nothing extra. Each extra domain gets its own registry
+        // (cloned manifest + boot policy, independently hot-swappable)
+        // and telemetry sink now; caches and retuners follow below.
+        let mut domain_devices: Vec<&'static str> = Vec::new();
+        let mut domain_of_device: HashMap<&'static str, u32> = HashMap::new();
+        for spec in &cfg.tenants {
+            if let Some(device) = spec.device {
+                domain_of_device.entry(device).or_insert_with(|| {
+                    domain_devices.push(device);
+                    domain_devices.len() as u32
+                });
+            }
+        }
+        let domain_registries: Vec<Arc<KernelRegistry>> = domain_devices
+            .iter()
+            .map(|_| Arc::new(KernelRegistry::new(manifest.clone(), policy.clone())))
+            .collect();
+        let domain_sinks: Vec<Arc<TelemetrySink>> =
+            domain_devices.iter().map(|_| Arc::new(TelemetrySink::default())).collect();
+
+        // Weighted-fair quota capacity: an explicit `quota_slots` wins,
+        // else the BoundedQueue in-flight cap doubles as the quota
+        // capacity, else quotas are off (weight-0 tenants still always
+        // reject — that gate is capacity-independent).
+        let quota_slots = if cfg.quota_slots > 0 {
+            cfg.quota_slots
+        } else if let AdmissionPolicy::BoundedQueue { max_inflight, .. } = cfg.admission {
+            max_inflight
+        } else {
+            0
+        };
+        let weights: Vec<u32> = cfg.tenants.iter().map(|t| t.weight).collect();
+        let shares = reserved_shares(&weights, quota_slots);
+        let mut tenants: Vec<TenantState> = Vec::with_capacity(cfg.tenants.len());
+        let mut tenant_index: HashMap<u32, usize> = HashMap::with_capacity(cfg.tenants.len());
+        for (spec, &reserved) in cfg.tenants.iter().zip(&shares) {
+            if spec.id.is_anonymous() {
+                return Err("tenant id 0 is reserved for anonymous traffic".to_string());
+            }
+            if tenant_index.insert(spec.id.0, tenants.len()).is_some() {
+                return Err(format!("duplicate tenant id {}", spec.id.0));
+            }
+            tenants.push(TenantState {
+                reserved,
+                inflight: Arc::new(AtomicUsize::new(0)),
+                rejected: StripedCounter::new(),
+                domain: spec.device.map_or(0, |d| domain_of_device[d]),
+                policy: cfg.admission.for_slo_factor(spec.slo.deadline_factor()),
+                spec: spec.clone(),
+            });
+        }
+
         let registry = Arc::new(KernelRegistry::new(manifest, policy));
         let telemetry = Arc::new(TelemetrySink::default());
+        let shard_domains: Arc<Vec<ShardDomain>> = Arc::new(
+            std::iter::once(ShardDomain { telemetry: telemetry.clone(), device: None })
+                .chain(domain_devices.iter().zip(&domain_sinks).map(|(&device, sink)| {
+                    ShardDomain { telemetry: sink.clone(), device: Some(device) }
+                }))
+                .collect(),
+        );
         let inflight = Arc::new(AtomicUsize::new(0));
         let queues: Arc<Vec<Arc<ShardQueue>>> =
             Arc::new((0..n_shards).map(|_| Arc::new(ShardQueue::new())).collect());
@@ -598,7 +826,7 @@ impl Coordinator {
             let dir = artifacts_dir.clone();
             let queues_for_shard = queues.clone();
             let steal_min = cfg.steal_min.max(1);
-            let telemetry_for_shard = telemetry.clone();
+            let domains_for_shard = shard_domains.clone();
             // The shed budget is wall-clock wait since submit, which
             // includes the batcher's *deliberate* max_wait batching delay
             // — a budget below it would shed underfull traffic on an idle
@@ -620,7 +848,7 @@ impl Coordinator {
                         queues_for_shard,
                         steal_min,
                         queue_budget,
-                        telemetry_for_shard,
+                        domains_for_shard,
                         ready_tx,
                     )
                 })
@@ -656,6 +884,37 @@ impl Coordinator {
                 retune_stats.clone(),
             )
         });
+        // Extra domains keep the POOL's cost model, not their pinned
+        // device's: the gap between that prediction and the domain's
+        // measured telemetry is exactly the drift signal that trips a
+        // per-domain retune.
+        let extra_domains: Vec<DomainState> = domain_registries
+            .into_iter()
+            .zip(domain_sinks)
+            .map(|(domain_registry, sink)| {
+                let domain_cache = Arc::new(
+                    ResolutionCache::with_model(cfg.selector_cache, model)
+                        .with_telemetry(sink.clone()),
+                );
+                let stats = Arc::new(Mutex::new(RetunerStats::default()));
+                let domain_retuner = cfg.retune.clone().map(|retune_cfg| {
+                    Retuner::start(
+                        retune_cfg,
+                        domain_registry.clone(),
+                        domain_cache.clone(),
+                        sink.clone(),
+                        stats.clone(),
+                    )
+                });
+                DomainState {
+                    registry: domain_registry,
+                    cache: domain_cache,
+                    telemetry: sink,
+                    retuner: domain_retuner,
+                    retune_stats: stats,
+                }
+            })
+            .collect();
         Ok(Coordinator {
             registry,
             cache,
@@ -671,6 +930,10 @@ impl Coordinator {
             routing: cfg.routing,
             imbalance: cfg.imbalance.max(1.0),
             admission: cfg.admission,
+            tenants,
+            tenant_index,
+            extra_domains,
+            quota_slots,
         })
     }
 
@@ -737,6 +1000,76 @@ impl Coordinator {
     /// metrics, not here).
     pub fn retune_stats(&self) -> RetunerStats {
         self.retune_stats.lock().unwrap().clone()
+    }
+
+    /// How many retune domains this pool serves: 1 (the pool-wide
+    /// default) plus one per distinct device profile its registered
+    /// tenants are pinned to.
+    pub fn domain_count(&self) -> usize {
+        1 + self.extra_domains.len()
+    }
+
+    /// The retune domain `tenant`'s telemetry feeds (0 for unregistered
+    /// and unpinned tenants — the pool-wide domain).
+    pub fn tenant_domain(&self, tenant: TenantId) -> u32 {
+        self.tenant_state(tenant).map_or(0, |s| s.domain)
+    }
+
+    /// The telemetry sink of retune domain `domain`.
+    ///
+    /// # Panics
+    /// Panics when `domain >= domain_count()`.
+    pub fn domain_telemetry(&self, domain: u32) -> &Arc<TelemetrySink> {
+        match domain {
+            0 => &self.telemetry,
+            d => &self.extra_domains[d as usize - 1].telemetry,
+        }
+    }
+
+    /// The registry of retune domain `domain` (its independently
+    /// hot-swappable deployed selector).
+    ///
+    /// # Panics
+    /// Panics when `domain >= domain_count()`.
+    pub fn domain_registry(&self, domain: u32) -> &Arc<KernelRegistry> {
+        self.domain_handles(domain).0
+    }
+
+    /// Selector generation of retune domain `domain`.
+    ///
+    /// # Panics
+    /// Panics when `domain >= domain_count()`.
+    pub fn domain_generation(&self, domain: u32) -> u64 {
+        self.domain_handles(domain).0.generation()
+    }
+
+    /// [`Coordinator::retune_now`] against one retune domain's own
+    /// registry/cache/telemetry (domain 0 = the pool-wide default).
+    ///
+    /// # Panics
+    /// Panics when `domain >= domain_count()`.
+    pub fn retune_domain_now(&self, domain: u32, cfg: &RetuneConfig) -> RetuneOutcome {
+        match domain {
+            0 => self.retune_now(cfg),
+            d => {
+                let state = &self.extra_domains[d as usize - 1];
+                let mut stats = state.retune_stats.lock().unwrap();
+                retune_once(
+                    cfg,
+                    true,
+                    &state.registry,
+                    &state.cache,
+                    &state.telemetry,
+                    &mut stats,
+                )
+            }
+        }
+    }
+
+    /// A registered tenant's reserved quota share (admission-guaranteed
+    /// slots); `None` for unregistered ids.
+    pub fn tenant_reserved(&self, tenant: TenantId) -> Option<usize> {
+        self.tenant_state(tenant).map(|s| s.reserved)
     }
 
     /// Live per-shard (queue depth, load score ns) snapshot.
@@ -817,19 +1150,25 @@ impl Coordinator {
         CompletionPool::checkout(&self.completions).unwrap_or_else(Completion::oneshot)
     }
 
-    /// Consult the admission policy for one request routed to `shard`.
-    /// `Unbounded` (the default) exits before touching any counter, so
-    /// the uncontended fast path is bit-identical to the pre-admission
-    /// pool. Under a bounding policy the pool-wide in-flight slot is
-    /// *reserved* (one `fetch_add`) before the decision — concurrent
-    /// submitters cannot race past `max_inflight` — and released either
-    /// here on reject or by the serving shard on completion/shed.
-    fn admit(&self, shard: usize, cost_ns: u64) -> Result<InflightSlot, SubmitError> {
-        if self.admission.is_unbounded() {
-            return Ok(InflightSlot(None));
+    /// Consult `policy` (the pool policy, or a tenant's SLO-scaled copy)
+    /// for one request routed to `shard`. `Unbounded` (the default) exits
+    /// before touching any counter, so the uncontended fast path is
+    /// bit-identical to the pre-admission pool. Under a bounding policy
+    /// the pool-wide in-flight slot is *reserved* (one `fetch_add`)
+    /// before the decision — concurrent submitters cannot race past
+    /// `max_inflight` — and released either here on reject or by the
+    /// serving shard on completion/shed.
+    fn admit(
+        &self,
+        policy: AdmissionPolicy,
+        shard: usize,
+        cost_ns: u64,
+    ) -> Result<InflightSlot, SubmitError> {
+        if policy.is_unbounded() {
+            return Ok(InflightSlot::none());
         }
         let load = &self.queues[shard].load;
-        self.admit_at(cost_ns, load.score_ns(), load.depth(), load.drain_rate_per_sec())
+        self.admit_at(policy, cost_ns, load.score_ns(), load.depth(), load.drain_rate_per_sec())
     }
 
     /// The shared reservation protocol for a known-bounding policy and an
@@ -842,26 +1181,24 @@ impl Coordinator {
     /// gauge: they only shape rejection retry hints, never the decision.
     fn admit_at(
         &self,
+        policy: AdmissionPolicy,
         cost_ns: u64,
         backlog_ns: u64,
         queued_depth: usize,
         drain_per_sec: f64,
     ) -> Result<InflightSlot, SubmitError> {
-        if !self.admission.caps_inflight() {
+        if !policy.caps_inflight() {
             // DeadlineShed never reads the in-flight count: no
             // pool-global RMW traffic on its submit path.
-            self.admission
-                .admit_with_drain(cost_ns, backlog_ns, 0, queued_depth, drain_per_sec)?;
-            return Ok(InflightSlot(None));
+            policy.admit_with_drain(cost_ns, backlog_ns, 0, queued_depth, drain_per_sec)?;
+            return Ok(InflightSlot::none());
         }
         let reserved = self.inflight.fetch_add(1, Ordering::AcqRel);
-        match self
-            .admission
-            .admit_with_drain(cost_ns, backlog_ns, reserved, queued_depth, drain_per_sec)
+        match policy.admit_with_drain(cost_ns, backlog_ns, reserved, queued_depth, drain_per_sec)
         {
             Ok(()) => {
                 self.front.inflight_peak.fetch_max(reserved + 1, Ordering::Relaxed);
-                Ok(InflightSlot(Some(self.inflight.clone())))
+                Ok(InflightSlot::pool(self.inflight.clone()))
             }
             Err(err) => {
                 self.inflight.fetch_sub(1, Ordering::Release);
@@ -870,15 +1207,127 @@ impl Coordinator {
         }
     }
 
-    /// Submit a request; the response arrives on the returned ticket.
+    /// The weighted-fair quota gate for one registered tenant's request:
+    /// admit within the tenant's reserved share unconditionally; past it,
+    /// admit only while unreserved capacity remains (see
+    /// [`quota_would_admit`] for the exact predicate — this method adds
+    /// the reserve-then-check counter protocol around it). On success the
+    /// returned [`InflightSlot`] holds the tenant's reservation, to be
+    /// folded into the pool admission slot; dropping it on a later
+    /// reject path releases the quota slot automatically.
+    fn quota_gate(
+        &self,
+        state: &TenantState,
+        shard: usize,
+    ) -> Result<InflightSlot, SubmitError> {
+        if state.spec.weight == 0 {
+            // A zero-weight tenant is switched off: no retry hint,
+            // because no amount of waiting admits it.
+            return Err(SubmitError::Rejected {
+                reason: RejectReason::QuotaExceeded,
+                retry_after_hint: None,
+            });
+        }
+        if self.quota_slots == 0 {
+            return Ok(InflightSlot::none());
+        }
+        // Reserve-then-check, mirroring the pool-wide protocol: the slot
+        // is taken before the decision so concurrent submitters of the
+        // same tenant cannot race past its share.
+        let mine = state.inflight.fetch_add(1, Ordering::AcqRel);
+        let mut peers_used = 0usize;
+        let mut others_free = 0usize;
+        for peer in &self.tenants {
+            if Arc::ptr_eq(&peer.inflight, &state.inflight) {
+                continue;
+            }
+            let used = peer.inflight.load(Ordering::Acquire);
+            peers_used += used;
+            others_free += peer.reserved.saturating_sub(used);
+        }
+        if quota_would_admit(
+            state.spec.weight,
+            mine,
+            state.reserved,
+            mine + peers_used,
+            others_free,
+            self.quota_slots,
+        ) {
+            return Ok(InflightSlot::tenant(state.inflight.clone()));
+        }
+        state.inflight.fetch_sub(1, Ordering::Release);
+        // Retry hint: how long the routed shard needs to drain this
+        // tenant's excess over its reserved share — measured drain rate
+        // when warm, the queue's own average cost estimate while cold.
+        let excess = ((mine + 1).saturating_sub(state.reserved)).max(1) as u64;
+        let load = &self.queues[shard].load;
+        let drain = load.drain_rate_per_sec();
+        let hint = if drain > 0.0 {
+            drain_hint_ns(excess, drain)
+        } else {
+            (load.score_ns() / load.depth().max(1) as u64)
+                .saturating_mul(excess)
+                .max(MIN_RETRY_HINT_NS)
+        };
+        Err(SubmitError::Rejected {
+            reason: RejectReason::QuotaExceeded,
+            retry_after_hint: Some(Duration::from_nanos(hint)),
+        })
+    }
+
+    /// The registered state for `tenant`, or `None` for anonymous or
+    /// unregistered ids (both bypass every tenant mechanism).
+    fn tenant_state(&self, tenant: TenantId) -> Option<&TenantState> {
+        if tenant.is_anonymous() {
+            return None;
+        }
+        self.tenant_index.get(&tenant.0).map(|&i| &self.tenants[i])
+    }
+
+    /// The registry/cache pair requests in `domain` resolve through
+    /// (domain 0 = the pool's own).
+    fn domain_handles(&self, domain: u32) -> (&Arc<KernelRegistry>, &Arc<ResolutionCache>) {
+        match domain {
+            0 => (&self.registry, &self.cache),
+            d => {
+                let state = &self.extra_domains[d as usize - 1];
+                (&state.registry, &state.cache)
+            }
+        }
+    }
+
+    /// Submit an anonymous request; the response arrives on the returned
+    /// ticket. Delegates to [`Coordinator::submit_as`] with
+    /// [`TenantId::ANONYMOUS`], which bypasses every tenant mechanism —
+    /// bit-identical to the pre-tenant pool.
     ///
     /// Under a bounding [`AdmissionPolicy`] the request may be refused
     /// *before* taking a completion slot: the returned ticket then carries
     /// the typed rejection ([`Ticket::rejection`]) and resolves
     /// immediately — no allocation, no slab capacity, no shard traffic.
     pub fn submit(&self, shape: GemmShape, lhs: Vec<f32>, rhs: Vec<f32>) -> Ticket {
+        self.submit_as(TenantId::ANONYMOUS, shape, lhs, rhs)
+    }
+
+    /// Submit a request on behalf of `tenant`. A registered tenant passes
+    /// the weighted-fair quota gate first (within its reserved share:
+    /// guaranteed; past it: only while unreserved capacity remains — the
+    /// ticket otherwise carries a `quota-exceeded` rejection with a
+    /// drain-priced retry hint), then pool admission under its SLO-scaled
+    /// policy; its requests resolve through its domain's registry/cache
+    /// and its completions land in its metrics lane. An unregistered or
+    /// anonymous id takes the untenanted fast path.
+    pub fn submit_as(
+        &self,
+        tenant: TenantId,
+        shape: GemmShape,
+        lhs: Vec<f32>,
+        rhs: Vec<f32>,
+    ) -> Ticket {
         let t_submit = Instant::now();
-        let resolved = match self.cache.resolve(&self.registry, &shape) {
+        let state = self.tenant_state(tenant);
+        let (registry, cache) = self.domain_handles(state.map_or(0, |s| s.domain));
+        let resolved = match cache.resolve(registry, &shape) {
             Ok(r) => r,
             Err(e) => {
                 self.front.failures.incr();
@@ -900,18 +1349,44 @@ impl Coordinator {
             }
         };
         // Measured EWMA once telemetry is warm, devsim estimate while cold.
-        let cost_ns = self.cache.dispatch_cost_ns(&resolved);
-        let reservation = match self.admit(shard, cost_ns) {
+        let cost_ns = cache.dispatch_cost_ns(&resolved);
+        let tenant_slot = match state.map_or(Ok(InflightSlot::none()), |s| {
+            self.quota_gate(s, shard)
+        }) {
             Ok(slot) => slot,
             Err(err) => {
+                state.expect("quota gate only rejects registered tenants").rejected.incr();
                 self.front.rejected.incr();
                 return Ticket::rejected(err);
             }
         };
+        let policy = state.map_or(self.admission, |s| s.policy);
+        let mut reservation = match self.admit(policy, shard, cost_ns) {
+            Ok(slot) => slot,
+            Err(err) => {
+                // `tenant_slot` drops here, releasing the quota slot.
+                if let Some(s) = state {
+                    s.rejected.incr();
+                }
+                self.front.rejected.incr();
+                return Ticket::rejected(err);
+            }
+        };
+        reservation.tenant = tenant_slot.into_tenant();
         let (completion, ticket) = self.checkout_completion();
         let req = GemmRequest { shape, lhs, rhs };
-        self.queues[shard]
-            .push(Job { req, t_submit, resolved, cost_ns, spilled, completion, reservation });
+        self.queues[shard].push(Job {
+            req,
+            t_submit,
+            resolved,
+            cost_ns,
+            spilled,
+            completion,
+            reservation,
+            tenant,
+            slo_wall: state.and_then(|s| s.spec.slo_wall),
+            domain: state.map_or(0, |s| s.domain),
+        });
         ticket
     }
 
@@ -928,6 +1403,24 @@ impl Coordinator {
     /// admitted and half refused. Every ticket reports its own outcome —
     /// check [`Ticket::rejection`] per ticket.
     pub fn submit_many(&self, requests: Vec<(GemmShape, Vec<f32>, Vec<f32>)>) -> Vec<Ticket> {
+        self.submit_many_as(TenantId::ANONYMOUS, requests)
+    }
+
+    /// [`Coordinator::submit_many`] on behalf of `tenant`: the batched
+    /// fast path plus the per-request tenant mechanics of
+    /// [`Coordinator::submit_as`]. The quota gate runs per request inside
+    /// each run, so a burst can be quota-admitted up to the tenant's fair
+    /// share and refused past it within one call.
+    pub fn submit_many_as(
+        &self,
+        tenant: TenantId,
+        requests: Vec<(GemmShape, Vec<f32>, Vec<f32>)>,
+    ) -> Vec<Ticket> {
+        let state = self.tenant_state(tenant);
+        let (registry, cache) = self.domain_handles(state.map_or(0, |s| s.domain));
+        let policy = state.map_or(self.admission, |s| s.policy);
+        let slo_wall = state.and_then(|s| s.spec.slo_wall);
+        let domain = state.map_or(0, |s| s.domain);
         let mut tickets = Vec::with_capacity(requests.len());
         let mut iter = requests.into_iter().peekable();
         while let Some((shape, lhs, rhs)) = iter.next() {
@@ -941,7 +1434,7 @@ impl Coordinator {
                 let (_, lhs, rhs) = iter.next().expect("peeked");
                 run.push((lhs, rhs));
             }
-            let resolved = match self.cache.resolve(&self.registry, &shape) {
+            let resolved = match cache.resolve(registry, &shape) {
                 Ok(r) => r,
                 Err(e) => {
                     self.fail_requests(run.len(), &e, t_submit, &mut tickets);
@@ -960,14 +1453,14 @@ impl Coordinator {
                     continue;
                 }
             };
-            let cost_ns = self.cache.dispatch_cost_ns(&resolved);
+            let cost_ns = cache.dispatch_cost_ns(&resolved);
             // Admission state for the run: the shard backlog is read once,
             // then advanced locally per admitted request (the jobs only
             // hit the shard's gauge at push_batch below, so without this
             // the whole run would be judged against the pre-run backlog).
             // In-flight slots are individually reserved, exactly as in
             // `admit` — concurrent submitters cannot race past the cap.
-            let bounding = !self.admission.is_unbounded();
+            let bounding = !policy.is_unbounded();
             let (mut backlog_ns, mut queued_depth, drain_per_sec) = if bounding {
                 let load = &self.queues[shard].load;
                 (load.score_ns(), load.depth(), load.drain_rate_per_sec())
@@ -976,8 +1469,28 @@ impl Coordinator {
             };
             let mut jobs = Vec::with_capacity(run.len());
             for (lhs, rhs) in run {
-                let reservation = if bounding {
-                    match self.admit_at(cost_ns, backlog_ns, queued_depth, drain_per_sec) {
+                let tenant_slot = match state.map_or(Ok(InflightSlot::none()), |s| {
+                    self.quota_gate(s, shard)
+                }) {
+                    Ok(slot) => slot,
+                    Err(err) => {
+                        state
+                            .expect("quota gate only rejects registered tenants")
+                            .rejected
+                            .incr();
+                        self.front.rejected.incr();
+                        tickets.push(Ticket::rejected(err));
+                        continue;
+                    }
+                };
+                let mut reservation = if bounding {
+                    match self.admit_at(
+                        policy,
+                        cost_ns,
+                        backlog_ns,
+                        queued_depth,
+                        drain_per_sec,
+                    ) {
                         Ok(slot) => {
                             backlog_ns = backlog_ns
                                 .saturating_add(cost_ns)
@@ -986,14 +1499,19 @@ impl Coordinator {
                             slot
                         }
                         Err(err) => {
+                            // `tenant_slot` drops: the quota slot frees.
+                            if let Some(s) = state {
+                                s.rejected.incr();
+                            }
                             self.front.rejected.incr();
                             tickets.push(Ticket::rejected(err));
                             continue;
                         }
                     }
                 } else {
-                    InflightSlot(None)
+                    InflightSlot::none()
                 };
+                reservation.tenant = tenant_slot.into_tenant();
                 let (completion, ticket) = self.checkout_completion();
                 tickets.push(ticket);
                 jobs.push(Job {
@@ -1004,6 +1522,9 @@ impl Coordinator {
                     spilled,
                     completion,
                     reservation,
+                    tenant,
+                    slo_wall,
+                    domain,
                 });
             }
             self.queues[shard].push_batch(jobs);
@@ -1033,6 +1554,19 @@ impl Coordinator {
         Ok(self.submit(shape, lhs, rhs).wait())
     }
 
+    /// Blocking convenience call on behalf of `tenant` (see
+    /// [`Coordinator::submit_as`]); quota refusals surface inside
+    /// [`GemmResponse::result`] like every other submit-time failure.
+    pub fn call_as(
+        &self,
+        tenant: TenantId,
+        shape: GemmShape,
+        lhs: Vec<f32>,
+        rhs: Vec<f32>,
+    ) -> Result<GemmResponse, String> {
+        Ok(self.submit_as(tenant, shape, lhs, rhs).wait())
+    }
+
     /// Stop every shard and return the merged pool metrics.
     pub fn stop(self) -> Metrics {
         self.stop_detailed().total
@@ -1044,6 +1578,11 @@ impl Coordinator {
         // shards drain, then fold the counters into the pool totals.
         if let Some(retuner) = self.retuner.take() {
             let _ = retuner.finish();
+        }
+        for domain in &mut self.extra_domains {
+            if let Some(retuner) = domain.retuner.take() {
+                let _ = retuner.finish();
+            }
         }
         let tuning = self.retune_stats.lock().unwrap().clone();
         // Signal all shards first so they drain concurrently, then join.
@@ -1077,8 +1616,43 @@ impl Coordinator {
         total.selector_swaps += self.front.selector_swaps.load(Ordering::Relaxed) + tuning.swaps;
         total.retunes += tuning.retunes;
         total.drift_trips += tuning.drift_trips;
+        // Extra domains fold their retuner counters into the totals too
+        // (the dedicated `tuning` field stays the default domain's).
+        for domain in &self.extra_domains {
+            let stats = domain.retune_stats.lock().unwrap();
+            total.selector_swaps += stats.swaps;
+            total.retunes += stats.retunes;
+            total.drift_trips += stats.drift_trips;
+        }
+        // Per-tenant lanes: shards recorded completions and sheds; the
+        // frontend counted refusals. Fold the refusals in, then render
+        // the lanes into per-tenant reports in registration order.
+        for t in &self.tenants {
+            let rejected = t.rejected.sum();
+            if rejected > 0 {
+                total.per_tenant.entry(t.spec.id.0).or_default().rejected += rejected;
+            }
+        }
+        let tenants = self
+            .tenants
+            .iter()
+            .map(|t| {
+                let lane = total.per_tenant.get(&t.spec.id.0);
+                let stats = lane.and_then(|l| l.latency_stats());
+                TenantReport {
+                    id: t.spec.id.0,
+                    name: t.spec.name.clone(),
+                    requests: lane.map_or(0, |l| l.requests),
+                    in_slo: lane.map_or(0, |l| l.in_slo),
+                    rejected: lane.map_or(0, |l| l.rejected),
+                    shed: lane.map_or(0, |l| l.shed),
+                    p50_ms: stats.as_ref().map_or(0.0, |s| s.p50 * 1e3),
+                    p99_ms: stats.as_ref().map_or(0.0, |s| s.p99 * 1e3),
+                }
+            })
+            .collect();
         let (cache_hits, cache_misses) = self.cache.stats();
-        PoolReport { per_shard, total, cache_hits, cache_misses, tuning }
+        PoolReport { per_shard, total, cache_hits, cache_misses, tuning, tenants }
     }
 }
 
@@ -1192,6 +1766,9 @@ fn shed_jobs(shed: Vec<Pending<Job>>, budget: Duration, load: &ShardLoad, metric
         let waited = pending.enqueued.elapsed();
         let job = pending.payload;
         metrics.shed += 1;
+        if !job.tenant.is_anonymous() {
+            metrics.per_tenant.entry(job.tenant.0).or_default().shed += 1;
+        }
         load.sub(1, job.cost_ns);
         // Release the reservation before responding, like the gauge: a
         // blocking caller must be admittable as soon as it wakes.
@@ -1233,7 +1810,7 @@ fn shard_loop(
     queues: Arc<Vec<Arc<ShardQueue>>>,
     steal_min: usize,
     queue_budget: Option<Duration>,
-    telemetry: Arc<TelemetrySink>,
+    domains: Arc<Vec<ShardDomain>>,
     ready: Sender<Result<(), String>>,
 ) {
     let my = queues[shard_id].clone();
@@ -1278,7 +1855,7 @@ fn shard_loop(
         loop {
             shed_pass(&mut batcher, queue_budget, &my.load, &mut metrics);
             let Some((artifact, group)) = batcher.drain_due() else { break };
-            run_batch(backend.as_mut(), &my.load, &artifact, group, &telemetry, &mut metrics);
+            run_batch(backend.as_mut(), &my.load, &artifact, group, &domains, &mut metrics);
             ran = true;
         }
         if ran {
@@ -1313,7 +1890,7 @@ fn shard_loop(
     loop {
         shed_pass(&mut batcher, queue_budget, &my.load, &mut metrics);
         let Some((artifact, group)) = batcher.drain_next() else { break };
-        run_batch(backend.as_mut(), &my.load, &artifact, group, &telemetry, &mut metrics);
+        run_batch(backend.as_mut(), &my.load, &artifact, group, &domains, &mut metrics);
     }
     if let Some(reply) = stop_reply {
         let _ = reply.send(metrics);
@@ -1325,7 +1902,7 @@ fn run_batch(
     load: &ShardLoad,
     artifact: &Arc<str>,
     group: Vec<Pending<Job>>,
-    telemetry: &TelemetrySink,
+    domains: &[ShardDomain],
     metrics: &mut Metrics,
 ) {
     let t_batch = Instant::now();
@@ -1340,20 +1917,25 @@ fn run_batch(
     };
     for pending in group {
         let job = pending.payload;
+        // The job's retune domain: its sink and pinned pricing device.
+        // Domain 0 always exists; an out-of-range index (impossible by
+        // construction) degrades to it rather than panicking a shard.
+        let dom = domains.get(job.domain as usize).unwrap_or(&domains[0]);
         let result = match &prepared {
             Ok(()) => {
-                let run = backend.execute_timed(
+                let run = backend.execute_timed_for(
                     &job.resolved.meta,
                     &job.req.shape,
                     &job.req.lhs,
                     &job.req.rhs,
+                    dom.device,
                 );
                 match run {
                     Ok((out, measured_secs)) => {
                         // Close the loop: the measured execution time of
                         // this (shape, config) cell feeds cost hints and
-                        // the background retuner.
-                        telemetry.record(
+                        // the background retuner — of the job's domain.
+                        dom.telemetry.record(
                             job.req.shape,
                             job.resolved.meta.config_index,
                             measured_secs,
@@ -1375,6 +1957,10 @@ fn run_batch(
         metrics.record_resolution(&job.resolved.resolution);
         let config_used = job.resolved.meta.config_index;
         metrics.record_request(latency.as_secs_f64(), config_used);
+        if !job.tenant.is_anonymous() {
+            let in_slo = result.is_ok() && job.slo_wall.map_or(true, |wall| latency <= wall);
+            metrics.record_tenant(job.tenant.0, latency.as_secs_f64(), in_slo);
+        }
         // Release the gauge (and the admission reservation) before
         // responding: a blocking caller must see an up-to-date load when
         // it submits its next request.
@@ -1395,6 +1981,7 @@ fn run_batch(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::tenant::SloClass;
     use crate::dataset::config_by_name;
     use crate::engine::sim::host_gemm;
     use crate::util::fill_buffer;
@@ -2272,6 +2859,313 @@ mod tests {
             coord.queues[0].load.drain_rate_per_sec() > 0.0,
             "served batches must warm the measured drain rate"
         );
+        coord.stop();
+    }
+
+    #[test]
+    fn zero_weight_tenant_is_deterministically_rejected() {
+        // A registered tenant with weight 0 is switched off: every submit
+        // rejects with QuotaExceeded and no retry hint (no amount of
+        // waiting admits it), while weighted and anonymous traffic on the
+        // same pool keeps being served.
+        let coord = Coordinator::start_pool(
+            PathBuf::from("/nonexistent-artifacts"),
+            SelectorPolicy::Xla,
+            PoolConfig {
+                shards: 1,
+                tenants: vec![
+                    TenantSpec::new(TenantId(1), "blocked", 0, SloClass::Standard),
+                    TenantSpec::new(TenantId(2), "paying", 1, SloClass::Standard),
+                ],
+                quota_slots: 8,
+                ..PoolConfig::default()
+            },
+        )
+        .expect("coordinator start");
+        let shape = GemmShape::new(64, 64, 64, 1);
+        for i in 0..5u32 {
+            let ticket = coord.submit_as(
+                TenantId(1),
+                shape,
+                fill_buffer(i, 64 * 64),
+                fill_buffer(i + 3, 64 * 64),
+            );
+            match ticket.rejection() {
+                Some(SubmitError::Rejected { reason, retry_after_hint }) => {
+                    assert_eq!(reason, RejectReason::QuotaExceeded);
+                    assert_eq!(retry_after_hint, None, "zero weight: no hint");
+                }
+                other => panic!("zero-weight submit must reject, got {other:?}"),
+            }
+        }
+        let resp = coord
+            .call_as(TenantId(2), shape, fill_buffer(9, 64 * 64), fill_buffer(10, 64 * 64))
+            .unwrap();
+        assert!(resp.result.is_ok(), "weighted tenant must still be served");
+        let resp =
+            coord.call(shape, fill_buffer(11, 64 * 64), fill_buffer(12, 64 * 64)).unwrap();
+        assert!(resp.result.is_ok(), "anonymous traffic must still be served");
+
+        let report = coord.stop_detailed();
+        let blocked = report.tenants.iter().find(|t| t.id == 1).expect("lane for tenant 1");
+        assert_eq!(blocked.rejected, 5);
+        assert_eq!(blocked.requests, 0, "nothing from the blocked tenant may execute");
+        let paying = report.tenants.iter().find(|t| t.id == 2).expect("lane for tenant 2");
+        assert_eq!(paying.requests, 1);
+        assert_eq!(paying.rejected, 0);
+        assert_eq!(report.total.rejected, 5);
+    }
+
+    #[test]
+    fn reserved_share_admission_is_deterministic_under_burst() {
+        // 4 equal-weight tenants on quota_slots=12 reserve 3 slots each
+        // (floor(12/4), remainder 0). A single-tenant burst of 40
+        // same-shape requests through `submit_many_as` is judged in one
+        // run before any job lands on the shard (push_batch is per run),
+        // so the outcome is exact: 3 admitted (below reserve), 37
+        // rejected — the shared pool is fully covered by the other
+        // tenants' unused reserves (3 + 9 = 12, not < 12). The rejection
+        // hint prices draining 1 excess job on the cold queue estimate,
+        // which floors at MIN_RETRY_HINT_NS.
+        let tenants: Vec<TenantSpec> = (1u32..=4)
+            .map(|i| TenantSpec::new(TenantId(i), format!("t{i}"), 1, SloClass::Standard))
+            .collect();
+        let coord = Coordinator::start_pool(
+            PathBuf::from("/nonexistent-artifacts"),
+            SelectorPolicy::Xla,
+            PoolConfig {
+                shards: 1,
+                tenants,
+                quota_slots: 12,
+                admission: AdmissionPolicy::Unbounded,
+                ..PoolConfig::default()
+            },
+        )
+        .expect("coordinator start");
+        for i in 1u32..=4 {
+            assert_eq!(coord.tenant_reserved(TenantId(i)), Some(3));
+        }
+        let shape = GemmShape::new(64, 64, 64, 1);
+        let burst: Vec<(GemmShape, Vec<f32>, Vec<f32>)> = (0..40)
+            .map(|i| (shape, fill_buffer(i, 64 * 64), fill_buffer(i + 50, 64 * 64)))
+            .collect();
+        let tickets = coord.submit_many_as(TenantId(1), burst);
+        assert_eq!(tickets.len(), 40);
+        let (admitted, rejected): (Vec<_>, Vec<_>) =
+            tickets.into_iter().partition(|t| t.rejection().is_none());
+        assert_eq!(admitted.len(), 3, "exactly the reserved share admits");
+        assert_eq!(rejected.len(), 37);
+        for ticket in &rejected {
+            match ticket.rejection() {
+                Some(SubmitError::Rejected { reason, retry_after_hint }) => {
+                    assert_eq!(reason, RejectReason::QuotaExceeded);
+                    assert_eq!(
+                        retry_after_hint,
+                        Some(Duration::from_nanos(MIN_RETRY_HINT_NS)),
+                        "cold-queue hint floors at the minimum"
+                    );
+                }
+                other => panic!("expected quota rejection, got {other:?}"),
+            }
+        }
+        for ticket in admitted {
+            assert!(ticket.wait().result.is_ok());
+        }
+        // Reserved shares are admission-guaranteed: after the burst
+        // drains, every in-quota tenant lands its full reserve.
+        for t in 2..=4u32 {
+            let run: Vec<(GemmShape, Vec<f32>, Vec<f32>)> = (0..3)
+                .map(|i| {
+                    let seed = t * 100 + i;
+                    (shape, fill_buffer(seed, 64 * 64), fill_buffer(seed + 7, 64 * 64))
+                })
+                .collect();
+            for ticket in coord.submit_many_as(TenantId(t), run) {
+                assert!(ticket.rejection().is_none(), "within-reserve submits admit");
+                assert!(ticket.wait().result.is_ok());
+            }
+        }
+        let report = coord.stop_detailed();
+        let hostile = report.tenants.iter().find(|t| t.id == 1).expect("lane");
+        assert_eq!(hostile.requests, 3);
+        assert_eq!(hostile.rejected, 37);
+        for t in 2..=4u32 {
+            let lane = report.tenants.iter().find(|l| l.id == t).expect("lane");
+            assert_eq!(lane.requests, 3);
+            assert_eq!(lane.rejected, 0);
+        }
+        assert_eq!(report.total.rejected, 37);
+    }
+
+    #[test]
+    fn anonymous_traffic_bit_identical_with_tenants_registered() {
+        // Acceptance: registering tenants (quotas, SLO classes, a pinned
+        // retune domain) must not perturb anonymous traffic at all — the
+        // 1000-request 90/10 mix returns bit-identical results to the
+        // tenant-free pool, with every tenant lane untouched.
+        let n = 1000;
+        let (base, _) = run_skewed(n, 4, Routing::LoadAware);
+        let coord = Coordinator::start_pool(
+            PathBuf::from("/nonexistent-artifacts"),
+            SelectorPolicy::Xla,
+            PoolConfig {
+                shards: 4,
+                routing: Routing::LoadAware,
+                imbalance: 1.0,
+                tenants: vec![
+                    TenantSpec::new(TenantId(1), "quiet", 2, SloClass::Interactive),
+                    TenantSpec::new(TenantId(2), "pinned", 1, SloClass::Batch)
+                        .with_device("r9-nano"),
+                ],
+                quota_slots: 16,
+                ..PoolConfig::default()
+            },
+        )
+        .expect("coordinator start");
+        assert_eq!(coord.domain_count(), 2, "one pinned device = one extra domain");
+        let mut rxs = Vec::with_capacity(n);
+        for i in 0..n {
+            let (shape, lhs, rhs) = skewed_input(i);
+            rxs.push(coord.submit(shape, lhs, rhs));
+        }
+        let results: Vec<Vec<f32>> = rxs
+            .into_iter()
+            .map(|rx| rx.recv().expect("response").result.expect("gemm ok"))
+            .collect();
+        assert_eq!(base, results, "tenant registration must not change anonymous results");
+        let report = coord.stop_detailed();
+        assert_eq!(report.total.requests, n);
+        assert_eq!(report.total.rejected, 0);
+        assert_eq!(report.total.shed, 0);
+        for lane in &report.tenants {
+            assert_eq!(lane.requests, 0, "no lane may see anonymous traffic");
+            assert_eq!(lane.rejected, 0);
+            assert_eq!(lane.shed, 0);
+        }
+    }
+
+    #[test]
+    fn per_domain_retune_beats_blended_selector_on_own_mix() {
+        use crate::coordinator::cache::predict_dispatch_secs;
+        use crate::devsim::profile_by_name;
+        use crate::runtime::Manifest;
+
+        // Acceptance: two tenants pinned to different device profiles in
+        // one pool each get their own telemetry domain; after a per-domain
+        // retune, each tenant's hot-swapped selector must beat the
+        // selector a single blended domain would have learned from the
+        // mixed traffic, scored on the tenant's own mix and device.
+        let i7 = profile_by_name("i7-6700k").expect("profile");
+        let nano = profile_by_name("r9-nano").expect("profile");
+        let coord = Coordinator::start_pool(
+            PathBuf::from("/nonexistent-artifacts"),
+            SelectorPolicy::Xla,
+            PoolConfig {
+                shards: 1,
+                tenants: vec![
+                    TenantSpec::new(TenantId(1), "cpu-bound", 1, SloClass::Standard)
+                        .with_device("i7-6700k"),
+                    TenantSpec::new(TenantId(2), "gpu-bound", 1, SloClass::Standard)
+                        .with_device("r9-nano"),
+                ],
+                ..PoolConfig::default()
+            },
+        )
+        .expect("coordinator start");
+        assert_eq!(coord.domain_count(), 3);
+        let d1 = coord.tenant_domain(TenantId(1));
+        let d2 = coord.tenant_domain(TenantId(2));
+        assert!(d1 != 0 && d2 != 0 && d1 != d2, "distinct non-default domains");
+
+        // Both tenants serve the same two-bucket mix; what differs is the
+        // device their requests are priced on. The devsim table makes the
+        // best shipped config differ per device on both buckets.
+        let mix = [GemmShape::new(256, 256, 256, 1), GemmShape::new(64, 2304, 128, 1)];
+        let pool_cfgs = coord.domain_registry(0).manifest.shipped_configs();
+
+        // Feed each domain its own device's measured times, one sample
+        // per (shape, config) cell — the EWMA seeds on the first sample,
+        // so every cell is exact.
+        for (d, prof) in [(d1, i7), (d2, nano)] {
+            let sink = coord.domain_telemetry(d);
+            for shape in mix {
+                for &config in &pool_cfgs {
+                    sink.record(
+                        shape,
+                        Some(config),
+                        predict_dispatch_secs(prof, &shape, Some(config)),
+                    );
+                }
+            }
+        }
+
+        // Blended baseline: the selector one undivided domain would learn
+        // from the same traffic. Alpha 0.5 with one sample per device
+        // lands every cell's EWMA exactly on the mean of the two device
+        // times, so the blended per-bucket pick is argmin of the summed
+        // times — dominated by whichever device is slower there.
+        let manifest = Manifest::synthetic();
+        let single = config_by_name(&manifest.single_best).expect("config").index();
+        let blended_registry = KernelRegistry::new(manifest, SelectorPolicy::Single(single));
+        let blended_cache = ResolutionCache::with_profile(64, "i7-6700k");
+        let blended_sink = TelemetrySink::new(1, 0.5);
+        for shape in mix {
+            for &config in &pool_cfgs {
+                for prof in [i7, nano] {
+                    blended_sink.record(
+                        shape,
+                        Some(config),
+                        predict_dispatch_secs(prof, &shape, Some(config)),
+                    );
+                }
+            }
+        }
+        let cfg = RetuneConfig {
+            min_shapes: 2,
+            min_cell_samples: 1,
+            k: Some(2),
+            ..RetuneConfig::default()
+        };
+        let mut blended_stats = RetunerStats::default();
+        let outcome = retune_once(
+            &cfg,
+            true,
+            &blended_registry,
+            &blended_cache,
+            &blended_sink,
+            &mut blended_stats,
+        );
+        assert!(matches!(outcome, RetuneOutcome::Swapped { .. }), "blended must swap");
+
+        let g0 = coord.domain_generation(0);
+        for d in [d1, d2] {
+            let outcome = coord.retune_domain_now(d, &cfg);
+            assert!(
+                matches!(outcome, RetuneOutcome::Swapped { .. }),
+                "domain {d} must swap, got {outcome:?}"
+            );
+        }
+        assert_eq!(coord.domain_generation(0), g0, "default domain stays untouched");
+
+        let blended_policy = blended_registry.policy();
+        for (d, prof) in [(d1, i7), (d2, nano)] {
+            let domain_policy = coord.domain_registry(d).policy();
+            let mut own = 0.0;
+            let mut blended = 0.0;
+            for shape in mix {
+                let dc = domain_policy.policy.choose(&shape).expect("domain pick");
+                let bc = blended_policy.policy.choose(&shape).expect("blended pick");
+                own += predict_dispatch_secs(prof, &shape, Some(dc));
+                blended += predict_dispatch_secs(prof, &shape, Some(bc));
+            }
+            // Devsim margins are ~1.39x (i7) and ~1.56x (nano); 1.2x
+            // leaves room without weakening the claim.
+            assert!(
+                own * 1.2 < blended,
+                "domain {d} selector must beat the blended one on its own mix: \
+                 own={own:.3e}s blended={blended:.3e}s"
+            );
+        }
         coord.stop();
     }
 }

@@ -1,0 +1,245 @@
+//! Multi-tenant identity, SLO classes, and the weighted-fair quota
+//! predicate.
+//!
+//! Millions of users are not one user: the pool tags every submit with a
+//! [`TenantId`], reserves each registered tenant a weighted share of the
+//! admission capacity, and maps the tenant's [`SloClass`] onto the
+//! admission deadline budgets — so one tenant's burst cannot starve
+//! another, and a `Batch` tenant tolerates queueing an `Interactive`
+//! tenant would reject.
+//!
+//! The quota decision itself is the pure function [`quota_would_admit`]
+//! (ported to `tools/devsim_check.py` so the predicate is checkable
+//! without a Rust toolchain). The semantics are **strict reservation**:
+//! a tenant below its reserved share is always admitted; past its share
+//! it may only use the *unreserved remainder* of the capacity — never a
+//! peer's reserved-but-currently-free slots. That is what makes the
+//! reserved share a guarantee instead of a hint.
+
+use std::time::Duration;
+
+/// Opaque tenant identity carried on every submit. `TenantId(0)` is the
+/// [`ANONYMOUS`](TenantId::ANONYMOUS) tenant: the default for
+/// `submit`/`call` and exempt from quota accounting, so every pre-tenant
+/// call site keeps its exact pre-tenant behavior.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TenantId(pub u32);
+
+impl TenantId {
+    /// The default tenant: unregistered, unquota'd, untracked.
+    pub const ANONYMOUS: TenantId = TenantId(0);
+
+    /// Whether this is the anonymous (quota-exempt) tenant.
+    pub fn is_anonymous(self) -> bool {
+        self.0 == 0
+    }
+}
+
+/// Service-level objective class; maps to a multiplier on the pool's
+/// `DeadlineShed`/`BoundedQueue` latency budgets (an `Interactive`
+/// tenant keeps the configured budget, `Batch` tolerates 16x).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SloClass {
+    /// Latency-critical traffic: the configured admission budget as-is.
+    Interactive,
+    /// The default class: 4x the configured admission budget.
+    #[default]
+    Standard,
+    /// Throughput traffic: 16x the configured admission budget.
+    Batch,
+}
+
+impl SloClass {
+    /// Multiplier applied to the admission policy's queue/deadline
+    /// budget for tenants of this class.
+    pub fn deadline_factor(self) -> u64 {
+        match self {
+            SloClass::Interactive => 1,
+            SloClass::Standard => 4,
+            SloClass::Batch => 16,
+        }
+    }
+
+    /// Stable CLI/report name.
+    pub fn name(self) -> &'static str {
+        match self {
+            SloClass::Interactive => "interactive",
+            SloClass::Standard => "standard",
+            SloClass::Batch => "batch",
+        }
+    }
+
+    /// Parse a CLI name back into a class (`None` for unknown names).
+    pub fn by_name(name: &str) -> Option<SloClass> {
+        match name {
+            "interactive" => Some(SloClass::Interactive),
+            "standard" => Some(SloClass::Standard),
+            "batch" => Some(SloClass::Batch),
+            _ => None,
+        }
+    }
+}
+
+/// Registration record for one tenant: identity, fair-share weight, SLO
+/// class, and (optionally) a pinned device profile that routes the
+/// tenant's measured telemetry into its own retune domain.
+#[derive(Clone, Debug)]
+pub struct TenantSpec {
+    /// The identity requests carry on submit. Must be non-zero to take
+    /// effect (`TenantId(0)` is reserved for anonymous traffic).
+    pub id: TenantId,
+    /// Human-readable name for reports.
+    pub name: String,
+    /// Weighted-fair share. Zero means the tenant is registered but
+    /// blocked: every submit is rejected with `QuotaExceeded`.
+    pub weight: u32,
+    /// SLO class, scaling the admission latency budgets.
+    pub slo: SloClass,
+    /// Pinned device profile name: the tenant's telemetry records into
+    /// a dedicated per-device retune domain priced on this profile.
+    pub device: Option<&'static str>,
+    /// Optional end-to-end wall target; completions within it count as
+    /// in-SLO goodput in the per-tenant metrics lane (`None`: all
+    /// completions count).
+    pub slo_wall: Option<Duration>,
+}
+
+impl TenantSpec {
+    /// A tenant with no pinned device and no wall target.
+    pub fn new(id: TenantId, name: impl Into<String>, weight: u32, slo: SloClass) -> Self {
+        TenantSpec { id, name: name.into(), weight, slo, device: None, slo_wall: None }
+    }
+
+    /// Pin the tenant to a device profile (its own retune domain).
+    pub fn with_device(mut self, profile: &'static str) -> Self {
+        self.device = Some(profile);
+        self
+    }
+
+    /// Set the end-to-end wall target that defines in-SLO goodput.
+    pub fn with_slo_wall(mut self, wall: Duration) -> Self {
+        self.slo_wall = Some(wall);
+        self
+    }
+}
+
+/// Floor-divide `quota_slots` capacity across tenants proportionally to
+/// their weights: tenant `i` reserves `floor(quota_slots * w_i / sum_w)`
+/// slots. The remainder (from flooring) is the shared pool any tenant
+/// past its reserve competes for. All-zero weights reserve nothing.
+pub fn reserved_shares(weights: &[u32], quota_slots: usize) -> Vec<usize> {
+    let sum: u64 = weights.iter().map(|&w| u64::from(w)).sum();
+    if sum == 0 {
+        return vec![0; weights.len()];
+    }
+    weights
+        .iter()
+        .map(|&w| ((quota_slots as u64).saturating_mul(u64::from(w)) / sum) as usize)
+        .collect()
+}
+
+/// The weighted-fair admission predicate, strict-reservation flavor
+/// (pure — ported verbatim to `tools/devsim_check.py`).
+///
+/// * `weight` — the tenant's configured weight; zero always rejects.
+/// * `tenant_inflight` — the tenant's own in-flight count *before* this
+///   request.
+/// * `tenant_reserved` — the tenant's reserved share from
+///   [`reserved_shares`].
+/// * `total_inflight` — in-flight count across all registered tenants.
+/// * `others_reserved_free` — `sum(max(0, reserved_j - inflight_j))`
+///   over every *other* tenant: capacity that is reserved for peers and
+///   currently unused. Excluded from what this tenant may take.
+/// * `quota_slots` — total capacity under quota (0 disables quotas:
+///   admit everything except weight-zero tenants).
+///
+/// A tenant below its reserve is admitted unconditionally — that is the
+/// guarantee. Past its reserve it is admitted only while total usage
+/// plus the peers' idle reservations still fits the capacity, i.e. it
+/// can only occupy the unreserved remainder.
+pub fn quota_would_admit(
+    weight: u32,
+    tenant_inflight: usize,
+    tenant_reserved: usize,
+    total_inflight: usize,
+    others_reserved_free: usize,
+    quota_slots: usize,
+) -> bool {
+    if weight == 0 {
+        return false;
+    }
+    if quota_slots == 0 {
+        return true;
+    }
+    if tenant_inflight < tenant_reserved {
+        return true;
+    }
+    total_inflight.saturating_add(others_reserved_free) < quota_slots
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn anonymous_is_zero_and_default() {
+        assert!(TenantId::ANONYMOUS.is_anonymous());
+        assert_eq!(TenantId::default(), TenantId::ANONYMOUS);
+        assert!(!TenantId(7).is_anonymous());
+    }
+
+    #[test]
+    fn slo_names_roundtrip() {
+        for slo in [SloClass::Interactive, SloClass::Standard, SloClass::Batch] {
+            assert_eq!(SloClass::by_name(slo.name()), Some(slo));
+        }
+        assert_eq!(SloClass::by_name("bogus"), None);
+        assert_eq!(SloClass::default(), SloClass::Standard);
+        assert_eq!(SloClass::Interactive.deadline_factor(), 1);
+        assert_eq!(SloClass::Standard.deadline_factor(), 4);
+        assert_eq!(SloClass::Batch.deadline_factor(), 16);
+    }
+
+    #[test]
+    fn shares_floor_divide_by_weight() {
+        assert_eq!(reserved_shares(&[1, 1, 1, 1], 12), vec![3, 3, 3, 3]);
+        assert_eq!(reserved_shares(&[2, 1, 1], 12), vec![6, 3, 3]);
+        // Flooring leaves a shared remainder.
+        assert_eq!(reserved_shares(&[1, 1, 1], 10), vec![3, 3, 3]);
+        // Zero-weight tenants reserve nothing; all-zero reserves nothing.
+        assert_eq!(reserved_shares(&[0, 4], 8), vec![0, 8]);
+        assert_eq!(reserved_shares(&[0, 0], 8), vec![0, 0]);
+    }
+
+    #[test]
+    fn zero_weight_always_rejects() {
+        assert!(!quota_would_admit(0, 0, 0, 0, 0, 0));
+        assert!(!quota_would_admit(0, 0, 5, 0, 0, 100));
+    }
+
+    #[test]
+    fn zero_capacity_disables_quota() {
+        assert!(quota_would_admit(1, 1000, 0, 1000, 0, 0));
+    }
+
+    #[test]
+    fn reserved_share_is_guaranteed() {
+        // Below reserve: admitted even with the pool saturated by peers.
+        assert!(quota_would_admit(1, 2, 3, 12, 0, 12));
+        // At reserve, zero remainder, peers idle: strict reservation
+        // refuses — peers' reserved-but-free slots are not up for grabs.
+        // (Q=12, four equal tenants: reserved 3 each, remainder 0.)
+        assert!(!quota_would_admit(1, 3, 3, 3, 9, 12));
+    }
+
+    #[test]
+    fn past_reserve_competes_only_for_remainder() {
+        // Q=14, four equal tenants: reserved 3 each, remainder 2.
+        // Hostile tenant at its reserve of 3, peers idle (9 reserved
+        // free): 3 + 9 < 14 admits — one remainder slot.
+        assert!(quota_would_admit(1, 3, 3, 3, 9, 14));
+        assert!(quota_would_admit(1, 4, 3, 4, 9, 14));
+        // Both remainder slots taken: 5 + 9 = 14, refuse.
+        assert!(!quota_would_admit(1, 5, 3, 5, 9, 14));
+    }
+}

@@ -92,6 +92,27 @@ pub trait Backend {
         Ok((out, t0.elapsed().as_secs_f64()))
     }
 
+    /// [`Backend::execute_timed`] for a per-tenant retune *domain* pinned
+    /// to a device profile. Native backends ignore `device` — their
+    /// measured wall time is the truth regardless of which domain the
+    /// sample feeds — so the default delegates. The SimBackend overrides
+    /// it to price the simulated time on the pinned profile instead of
+    /// its own, which is what lets one pool's shards feed telemetry
+    /// domains that behave like heterogeneous devices. Results are
+    /// bit-identical to [`Backend::execute_timed`]; only the reported
+    /// seconds may differ.
+    fn execute_timed_for(
+        &mut self,
+        meta: &ArtifactMeta,
+        shape: &GemmShape,
+        lhs: &[f32],
+        rhs: &[f32],
+        device: Option<&'static str>,
+    ) -> Result<(Vec<f32>, f64), String> {
+        let _ = device;
+        self.execute_timed(meta, shape, lhs, rhs)
+    }
+
     /// Lifetime counters of this backend instance.
     fn stats(&self) -> BackendStats;
 }

@@ -58,11 +58,23 @@ impl SimBackend {
 
     /// Device-seconds the analytical model predicts for this dispatch.
     fn simulated_secs(&self, meta: &ArtifactMeta, shape: &GemmShape) -> f64 {
+        self.simulated_secs_on(self.profile, meta, shape)
+    }
+
+    /// [`SimBackend::simulated_secs`] priced on an arbitrary profile —
+    /// the per-domain timing the coordinator's tenant device pinning
+    /// asks for through [`Backend::execute_timed_for`].
+    fn simulated_secs_on(
+        &self,
+        profile: &'static DeviceProfile,
+        meta: &ArtifactMeta,
+        shape: &GemmShape,
+    ) -> f64 {
         let cfg = meta
             .config_index
             .map(config_by_index)
             .unwrap_or(self.xla_proxy);
-        let gflops = simulate(self.profile, shape, &cfg).max(1e-3);
+        let gflops = simulate(profile, shape, &cfg).max(1e-3);
         shape.flops() / (gflops * 1e9)
     }
 }
@@ -164,6 +176,24 @@ impl Backend for SimBackend {
         Ok((out, self.simulated_secs(meta, shape)))
     }
 
+    /// Same execution (bit-identical results, same pacing, same stats),
+    /// but the reported device time is priced on the pinned `device`
+    /// profile when one is given — a per-tenant retune domain simulating
+    /// a heterogeneous device inside one pool. An unknown profile name
+    /// falls back to the backend's own profile.
+    fn execute_timed_for(
+        &mut self,
+        meta: &ArtifactMeta,
+        shape: &GemmShape,
+        lhs: &[f32],
+        rhs: &[f32],
+        device: Option<&'static str>,
+    ) -> Result<(Vec<f32>, f64), String> {
+        let profile = device.and_then(profile_by_name).unwrap_or(self.profile);
+        let out = self.execute(meta, shape, lhs, rhs)?;
+        Ok((out, self.simulated_secs_on(profile, meta, shape)))
+    }
+
     fn stats(&self) -> BackendStats {
         self.stats.clone()
     }
@@ -250,6 +280,31 @@ mod tests {
         // what one execute accumulated into the stats.
         assert!((measured - be.stats().simulated_secs).abs() < 1e-15);
         assert!(measured > 0.0);
+    }
+
+    #[test]
+    fn execute_timed_for_prices_on_the_pinned_profile() {
+        let manifest = Manifest::synthetic();
+        let mut be = backend(); // i7-6700k
+        let shape = GemmShape::new(64, 64, 64, 1);
+        let meta = meta_for(&manifest, None, &shape);
+        let lhs = fill_buffer(1, 64 * 64);
+        let rhs = fill_buffer(2, 64 * 64);
+        let (out_own, own) = be.execute_timed(&meta, &shape, &lhs, &rhs).unwrap();
+        let (out_none, none) =
+            be.execute_timed_for(&meta, &shape, &lhs, &rhs, None).unwrap();
+        let (out_gpu, gpu) =
+            be.execute_timed_for(&meta, &shape, &lhs, &rhs, Some("r9-nano")).unwrap();
+        // Results are bit-identical regardless of the pricing profile.
+        assert_eq!(out_own, out_none);
+        assert_eq!(out_own, out_gpu);
+        // No pin (and an unknown pin) price on the backend's own profile.
+        assert!((own - none).abs() < 1e-15);
+        let (_, unknown) =
+            be.execute_timed_for(&meta, &shape, &lhs, &rhs, Some("not-a-device")).unwrap();
+        assert!((own - unknown).abs() < 1e-15);
+        // A real pin prices on that device: a different simulated time.
+        assert!(gpu > 0.0 && (gpu - own).abs() > 1e-12, "own={own} gpu={gpu}");
     }
 
     #[test]

@@ -27,8 +27,8 @@
 //! measured data and hot-swaps the selector without pausing traffic.
 
 // Every public item must carry rustdoc. The serving-stack modules
-// (`coordinator`, `tuning`, `engine`) and the data substrate (`dataset`,
-// `devsim`) are fully documented and gated; the remaining modules below
+// (`coordinator`, `tuning`, `engine`, `runtime`) and the data substrate
+// (`dataset`, `devsim`) are fully documented and gated; the remaining modules below
 // carry an explicit module-level `allow` until their own documentation
 // pass lands (ROADMAP item) — the allows are the worklist, not an
 // exemption.
@@ -46,7 +46,6 @@ pub mod experiments;
 pub mod linalg;
 #[allow(missing_docs)]
 pub mod ml;
-#[allow(missing_docs)]
 pub mod runtime;
 #[allow(missing_docs)]
 pub mod selection;

@@ -4,41 +4,69 @@
 use crate::util::json::{parse, Json};
 use std::path::{Path, PathBuf};
 
+/// What one AOT artifact computes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ArtifactKind {
+    /// A standalone GEMM (the benchmark/serving unit of the paper).
     Matmul,
+    /// One convolution layer of a lowered network (im2col + GEMM, with
+    /// optional fused pooling/ReLU).
     ConvLayer,
+    /// One fully-connected layer of a lowered network.
     FcLayer,
 }
 
+/// Metadata for one AOT-lowered executable in the manifest.
 #[derive(Clone, Debug)]
 pub struct ArtifactMeta {
+    /// HLO-text file path relative to the manifest directory.
     pub path: String,
+    /// What the artifact computes.
     pub kind: ArtifactKind,
     /// `Some(config_index)` for Pallas-kernel artifacts; `None` for the
     /// XLA-dot comparator backend.
     pub config_index: Option<usize>,
+    /// Kernel configuration name matching `config_index` (`None` for the
+    /// XLA comparator).
     pub config_name: Option<String>,
+    /// GEMM rows of the (possibly im2col-lowered) multiply.
     pub m: usize,
+    /// GEMM reduction depth.
     pub k: usize,
+    /// GEMM columns.
     pub n: usize,
+    /// Batch dimension (1 for unbatched).
     pub b: usize,
+    /// Floating-point operations per execution (`2*b*m*k*n` for GEMM).
     pub flops: f64,
+    /// Owning network name for layer artifacts (`None` for standalone).
     pub network: Option<String>,
+    /// Layer label within the network (e.g. `conv1_1`).
     pub layer: Option<String>,
+    /// Position within the network's layer sequence.
     pub layer_index: Option<usize>,
+    /// Layer fuses a trailing 2x2 max-pool.
     pub pool: bool,
+    /// Layer fuses a trailing ReLU.
     pub relu: bool,
     /// Input tensor shapes in argument order.
     pub inputs: Vec<Vec<usize>>,
+    /// Output tensor shape.
     pub output: Vec<usize>,
 }
 
+/// The AOT deployment: every shipped artifact plus the tuning pipeline's
+/// chosen kernel subset, as emitted by `python/compile/aot.py`.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Directory the artifact paths are relative to.
     pub dir: PathBuf,
+    /// Names of the deployed kernel-configuration subset (paper §4).
     pub deployed: Vec<String>,
+    /// The single globally-best configuration (the paper's one-kernel
+    /// baseline deployment).
     pub single_best: String,
+    /// Every shipped artifact.
     pub artifacts: Vec<ArtifactMeta>,
     /// Hot-path index: (config, m, k, n, b) -> artifact position. Built at
     /// load so per-request resolution is O(1) instead of a linear scan.
@@ -53,6 +81,8 @@ fn dims(j: &Json) -> Vec<usize> {
 }
 
 impl Manifest {
+    /// Parse `manifest.json` under `dir` and build the hot-path matmul
+    /// index. Errors carry enough context to diagnose a malformed file.
     pub fn load(dir: &Path) -> Result<Manifest, String> {
         let text = std::fs::read_to_string(dir.join("manifest.json"))
             .map_err(|e| format!("reading manifest: {e}"))?;

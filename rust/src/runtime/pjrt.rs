@@ -21,13 +21,21 @@ use crate::runtime::manifest::{ArtifactKind, ArtifactMeta};
 /// Runtime statistics (compiles, cache hits, executions, wall time).
 #[derive(Clone, Debug, Default)]
 pub struct RuntimeStats {
+    /// Artifacts parsed and compiled for the first time.
     pub compiles: usize,
+    /// `load` calls satisfied by the executable cache.
     pub cache_hits: usize,
+    /// Executions performed (any entry point).
     pub executions: usize,
+    /// Wall-clock seconds spent compiling.
     pub compile_secs: f64,
+    /// Wall-clock seconds spent executing.
     pub execute_secs: f64,
 }
 
+/// A PJRT client plus a compile-once executable cache, rooted at one
+/// artifacts directory. Wrapped by `engine::PjrtBackend`; `Rc`-based, so
+/// it stays on the thread that created it.
 pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
@@ -48,10 +56,12 @@ impl Runtime {
         })
     }
 
+    /// The PJRT platform name (e.g. `cpu`).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
 
+    /// Lifetime counters of this runtime instance.
     pub fn stats(&self) -> RuntimeStats {
         self.stats.borrow().clone()
     }

@@ -636,3 +636,85 @@ assert '"cpu_{}_{}_{}_{}"' in cpu_src
 print(f"OK: CPU variant family — {len(tilings)} tilings x 2 loop orders x "
       f"2 micro-kernels x 2 threading modes = 24 distinct variants, dense "
       f"indices, every axis covered")
+
+# ---- Weighted-fair tenant quota check ---------------------------------------
+# Port of rust/src/coordinator/tenant.rs::{reserved_shares,
+# quota_would_admit} — the pure admission predicate behind the
+# multi-tenant quota layer — checked on an exhaustive small grid plus the
+# deterministic burst scenario pinned by the server.rs unit tests.
+
+def reserved_shares(weights, quota_slots):
+    total = sum(weights)
+    if total == 0:
+        return [0] * len(weights)
+    return [quota_slots * w // total for w in weights]
+
+def quota_would_admit(weight, tenant_inflight, tenant_reserved,
+                      total_inflight, others_reserved_free, quota_slots):
+    if weight == 0:
+        return False
+    if quota_slots == 0:
+        return True
+    if tenant_inflight < tenant_reserved:
+        return True
+    return total_inflight + others_reserved_free < quota_slots
+
+# Share arithmetic: floor division, remainder left shared, zero-sum safe.
+assert reserved_shares([1, 1, 1, 1], 12) == [3, 3, 3, 3]
+assert reserved_shares([2, 1, 1], 16) == [8, 4, 4]
+assert reserved_shares([3, 1], 10) == [7, 2]
+assert reserved_shares([0, 0], 8) == [0, 0]
+for weights in ([1], [1, 2], [5, 3, 1], [2, 2, 2, 2]):
+    for slots in range(0, 20):
+        shares = reserved_shares(weights, slots)
+        assert sum(shares) <= slots, (weights, slots, shares)
+        assert all(a <= b for a, b in
+                   zip(shares, reserved_shares(weights, slots + 1))), \
+            "shares must grow monotonically with capacity"
+
+# Predicate invariants on an exhaustive grid.
+quota_checked = 0
+for weight in (0, 1, 3):
+    for mine in range(0, 6):
+        for reserved in range(0, 4):
+            for total in range(0, 14):
+                for others_free in range(0, 10):
+                    for slots in (0, 4, 12):
+                        got = quota_would_admit(weight, mine, reserved,
+                                                total, others_free, slots)
+                        if weight == 0:
+                            assert not got, "weight 0 must always reject"
+                        elif slots == 0:
+                            assert got, "quota off must always admit"
+                        elif mine < reserved:
+                            assert got, "below reserve is guaranteed"
+                        else:
+                            assert got == (total + others_free < slots)
+                        quota_checked += 1
+
+# The deterministic burst pinned by server.rs: 4 equal tenants, 12 slots
+# (reserved 3 each). A 40-deep flood from tenant 1 with no completions
+# admits exactly its 3 reserved slots — slot 4 would eat a peer's idle
+# reservation (3 + 9 = 12, not < 12) — and every peer still admits its
+# full reserve afterwards.
+shares = reserved_shares([1, 1, 1, 1], 12)
+flood_admitted = 0
+for _ in range(40):
+    if quota_would_admit(1, flood_admitted, shares[0], flood_admitted,
+                         sum(shares[1:]), 12):
+        flood_admitted += 1
+assert flood_admitted == 3, flood_admitted
+inflight = [flood_admitted, 0, 0, 0]
+for peer in (1, 2, 3):
+    for _ in range(shares[peer]):
+        others_free = sum(max(0, shares[j] - inflight[j])
+                          for j in range(4) if j != peer)
+        assert quota_would_admit(1, inflight[peer], shares[peer],
+                                 sum(inflight), others_free, 12), \
+            f"peer {peer} denied its reserved slot"
+        inflight[peer] += 1
+assert inflight == [3, 3, 3, 3]
+
+print(f"OK: weighted-fair quota predicate — reserved shares floor-divide "
+      f"and stay monotone, {quota_checked} grid points match the Rust "
+      f"contract, hostile burst capped at its 3-slot reserve")

@@ -1,0 +1,203 @@
+#!/usr/bin/env python3
+"""Ratchet a committed CI bench baseline from a measured run.
+
+Usage:
+    python3 tools/ratchet_baseline.py MEASURED.json TARGET.json \
+        [--allow-regression] [--provenance TEXT]
+
+MEASURED.json is the artifact a green bench-smoke run uploaded
+(BENCH_pool.json from the coordinator_skew bench, or BENCH_cpu.json from
+the cpu_gemm bench); TARGET.json is the committed baseline it replaces
+(ci/BENCH_pool.json / ci/BENCH_cpu.json). The tool:
+
+  1. validates the measured file against its declared schema
+     (kernelsel-bench-pool-v1 or kernelsel-bench-cpu-v1) — every
+     required key present with the right type;
+  2. checks the improvement direction against the existing baseline:
+     a ratchet only moves floors UP. For the pool schema, each matched
+     (mix, routing, shards, admission) cell's throughput_rps must not
+     drop (overload/tenants cells are exempt — they are self-gated by
+     the bench, not by the baseline); for the cpu schema,
+     regret_geomean and each regime's max_spread must not drop.
+     --allow-regression downgrades direction failures to warnings (for
+     deliberately lowering a floor after e.g. a runner downgrade);
+  3. rewrites TARGET.json with the measured document plus an injected
+     "provenance" line recording where the numbers came from, so a
+     hand-written seed is distinguishable from a measured ratchet.
+
+Exit codes: 0 ratcheted, 1 validation/direction failure, 2 usage error.
+"""
+import datetime
+import json
+import os
+import sys
+
+POOL_SCHEMA = "kernelsel-bench-pool-v1"
+CPU_SCHEMA = "kernelsel-bench-cpu-v1"
+
+POOL_ENTRY_KEYS = {
+    "mix": str, "routing": str, "admission": str, "shards": (int, float),
+    "requests": (int, float), "throughput_rps": (int, float),
+    "goodput_rps": (int, float), "p50_ms": (int, float),
+    "p99_ms": (int, float), "spilled": (int, float), "steals": (int, float),
+    "rejected": (int, float), "shed": (int, float),
+}
+CPU_ENTRY_KEYS = {
+    "regime": str, "m": (int, float), "k": (int, float), "n": (int, float),
+    "batch": (int, float), "best_variant": str, "best_gflops": (int, float),
+    "worst_variant": str, "worst_gflops": (int, float),
+    "spread": (int, float), "chosen_variant": str,
+    "chosen_gflops": (int, float), "ratio_to_best": (int, float),
+}
+# Self-gated pool mixes: the bench enforces their acceptance criteria via
+# exit codes, so the ratchet never direction-checks them.
+SELF_GATED_MIXES = {"overload", "tenants"}
+
+
+def fail(msg):
+    print(f"ratchet_baseline: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def check_entry(entry, keys, where):
+    if not isinstance(entry, dict):
+        fail(f"{where}: entry is not an object")
+    for key, typ in keys.items():
+        if key not in entry:
+            fail(f"{where}: missing key {key!r}")
+        if not isinstance(entry[key], typ) or isinstance(entry[key], bool):
+            fail(f"{where}: key {key!r} has type {type(entry[key]).__name__}")
+
+
+def validate(doc, path):
+    if not isinstance(doc, dict):
+        fail(f"{path}: top level is not an object")
+    schema = doc.get("schema")
+    if schema == POOL_SCHEMA:
+        entries = doc.get("entries")
+        if not isinstance(entries, list) or not entries:
+            fail(f"{path}: entries must be a non-empty array")
+        for i, e in enumerate(entries):
+            check_entry(e, POOL_ENTRY_KEYS, f"{path} entries[{i}]")
+            tenant = e.get("tenant")
+            if tenant is not None and not isinstance(tenant, str):
+                fail(f"{path} entries[{i}]: tenant must be a string")
+    elif schema == CPU_SCHEMA:
+        for key in ("mode", "threads", "reps", "k_best", "regret_geomean"):
+            if key not in doc:
+                fail(f"{path}: missing top-level key {key!r}")
+        if not isinstance(doc["regret_geomean"], (int, float)):
+            fail(f"{path}: regret_geomean is not a number")
+        entries = doc.get("entries")
+        if not isinstance(entries, list) or not entries:
+            fail(f"{path}: entries must be a non-empty array")
+        for i, e in enumerate(entries):
+            check_entry(e, CPU_ENTRY_KEYS, f"{path} entries[{i}]")
+        regimes = doc.get("regimes")
+        if not isinstance(regimes, list) or not regimes:
+            fail(f"{path}: regimes must be a non-empty array")
+        for i, r in enumerate(regimes):
+            check_entry(r, {"regime": str, "max_spread": (int, float)},
+                        f"{path} regimes[{i}]")
+    else:
+        fail(f"{path}: unknown schema {schema!r}")
+    return schema
+
+
+def pool_cell_key(entry):
+    return (entry["mix"], entry["routing"], int(entry["shards"]),
+            entry.get("admission", "unbounded"), entry.get("tenant"))
+
+
+def direction_failures(schema, old, new):
+    """Floors that the candidate would LOWER relative to the baseline."""
+    out = []
+    if schema == POOL_SCHEMA:
+        old_cells = {pool_cell_key(e): e for e in old.get("entries", [])
+                     if isinstance(e, dict) and "mix" in e}
+        for e in new["entries"]:
+            if e["mix"] in SELF_GATED_MIXES:
+                continue
+            prev = old_cells.get(pool_cell_key(e))
+            if prev is None or "throughput_rps" not in prev:
+                continue
+            if e["throughput_rps"] < prev["throughput_rps"]:
+                out.append(
+                    f"{e['mix']}/{e['routing']}/{e['shards']}: throughput "
+                    f"{e['throughput_rps']:.1f} < baseline "
+                    f"{prev['throughput_rps']:.1f}")
+    else:
+        old_regret = old.get("regret_geomean")
+        if isinstance(old_regret, (int, float)) \
+                and new["regret_geomean"] < old_regret:
+            out.append(f"regret_geomean {new['regret_geomean']:.3f} < "
+                       f"baseline {old_regret:.3f}")
+        old_regimes = {r.get("regime"): r.get("max_spread")
+                       for r in old.get("regimes", [])
+                       if isinstance(r, dict)}
+        for r in new["regimes"]:
+            prev = old_regimes.get(r["regime"])
+            if isinstance(prev, (int, float)) and r["max_spread"] < prev:
+                out.append(f"{r['regime']} max_spread "
+                           f"{r['max_spread']:.2f} < baseline {prev:.2f}")
+    return out
+
+
+def main(argv):
+    args = [a for a in argv[1:] if not a.startswith("--")]
+    allow_regression = "--allow-regression" in argv
+    provenance = None
+    if "--provenance" in argv:
+        i = argv.index("--provenance")
+        if i + 1 >= len(argv):
+            print(__doc__, file=sys.stderr)
+            return 2
+        provenance = argv[i + 1]
+        args = [a for a in args if a != provenance]
+    if len(args) != 2:
+        print(__doc__, file=sys.stderr)
+        return 2
+    measured_path, target_path = args
+
+    with open(measured_path) as f:
+        measured = json.load(f)
+    schema = validate(measured, measured_path)
+    print(f"OK: {measured_path} is valid {schema}")
+
+    if os.path.exists(target_path):
+        with open(target_path) as f:
+            try:
+                old = json.load(f)
+            except ValueError:
+                fail(f"{target_path}: existing baseline is not JSON")
+        if old.get("schema") not in (None, schema):
+            fail(f"{target_path}: schema {old.get('schema')!r} != {schema!r}")
+        lowered = direction_failures(schema, old, measured)
+        if lowered and not allow_regression:
+            print("ratchet_baseline: candidate LOWERS committed floors "
+                  "(pass --allow-regression to accept):", file=sys.stderr)
+            for line in lowered:
+                print(f"  {line}", file=sys.stderr)
+            return 1
+        for line in lowered:
+            print(f"WARNING (accepted): {line}")
+        print(f"OK: improvement direction vs {target_path} "
+              f"({len(lowered)} floors lowered)")
+    else:
+        print(f"no existing baseline at {target_path}; seeding fresh")
+
+    if provenance is None:
+        stamp = datetime.datetime.now(datetime.timezone.utc)
+        provenance = (f"ratcheted from {os.path.basename(measured_path)} by "
+                      f"tools/ratchet_baseline.py on "
+                      f"{stamp.strftime('%Y-%m-%d')}")
+    measured["provenance"] = provenance
+    with open(target_path, "w") as f:
+        json.dump(measured, f, indent=2)
+        f.write("\n")
+    print(f"OK: wrote {target_path} (provenance: {provenance})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
