@@ -17,6 +17,8 @@
 //!         --retune-interval 150 --require-swap
 //!     cargo run --release --example serve -- --tenants 3 --quota 32 \
 //!         --slo interactive --admission bounded
+//!     cargo run --release --example serve -- --trace-out /tmp/trace.json \
+//!         --metrics-out /tmp/metrics.prom
 //!
 //! Clients submit mixed-shape GEMM requests; the submit path resolves each
 //! to a deployed kernel via the memoized decision-tree selector and routes
@@ -59,6 +61,15 @@
 //! latency budgets. Per-tenant goodput/rejected/shed/p99 lanes print in
 //! the shutdown report.
 //!
+//! `--trace-out PATH` turns the flight recorder on and writes the full
+//! lifecycle trace at shutdown: `kernelsel-trace-v1` JSON at PATH plus a
+//! Chrome Trace Event Format twin at PATH.chrome.json (load it in
+//! `chrome://tracing` / Perfetto). `--trace-sample N` records every Nth
+//! request chain (default 1 = all). `--metrics-out PATH` rewrites the
+//! live Prometheus-style exposition (per-shard and per-tenant lanes,
+//! typed refusals, selection regret) to PATH every 200 ms while serving
+//! and once more at shutdown.
+//!
 //! `--engine sim|cpu` picks the backend (default sim). With `cpu` the
 //! pool executes real f32 GEMM on the host through the `engine::cpu`
 //! variant family: traffic drives the CPU manifest's bounded shape
@@ -69,6 +80,7 @@
 //! hot-swap lands on real hardware, not just in simulation.
 
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -76,7 +88,7 @@ use kernelsel::classify::codegen::CompiledTree;
 use kernelsel::classify::{ClassifierKind, KernelClassifier};
 use kernelsel::coordinator::{
     AdmissionPolicy, Coordinator, PoolConfig, Routing, SelectorPolicy, SloClass, TenantId,
-    TenantSpec,
+    TenantSpec, TraceConfig,
 };
 use kernelsel::dataset::{benchmark_shapes, config_by_name, GemmShape};
 use kernelsel::devsim::{generate_dataset, profile_by_name};
@@ -170,6 +182,12 @@ fn main() -> Result<(), String> {
     let tenants: Vec<TenantSpec> = (1..=n_tenants)
         .map(|i| TenantSpec::new(TenantId(i as u32), format!("tenant{i}"), 1, slo))
         .collect();
+    let trace_out = flag_str("--trace-out");
+    let trace = trace_out.as_ref().map(|_| TraceConfig {
+        sample_every: flag("--trace-sample", 1).max(1) as u64,
+        ..TraceConfig::default()
+    });
+    let metrics_out = flag_str("--metrics-out");
     let engine_name = flag_str("--engine").unwrap_or_else(|| "sim".to_string());
     let dir = PathBuf::from("artifacts");
 
@@ -237,6 +255,7 @@ fn main() -> Result<(), String> {
         pricing_profile,
         tenants,
         quota_slots,
+        trace,
         ..PoolConfig::default()
     };
     println!(
@@ -274,6 +293,23 @@ fn main() -> Result<(), String> {
             coord.telemetry().total_samples()
         );
     }
+
+    // Periodic exposition scraper: rewrite the live metrics text while
+    // traffic flows, the way a Prometheus agent would read it.
+    let scraper_stop = Arc::new(AtomicBool::new(false));
+    let scraper = metrics_out.clone().map(|path| {
+        let coord = coord.clone();
+        let stop = scraper_stop.clone();
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                if let Err(e) = std::fs::write(&path, coord.metrics_text()) {
+                    eprintln!("writing --metrics-out {path}: {e}");
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(200));
+            }
+        })
+    });
 
     // Warm the executable caches (first-touch compiles would otherwise
     // dominate the latency distribution — see EXPERIMENTS.md §Perf).
@@ -354,6 +390,21 @@ fn main() -> Result<(), String> {
         println!("wrote telemetry snapshot ({} cells) to {path}", snapshot.cells.len());
     }
 
+    // Final exposition dump after the scraper stops: the file on disk
+    // must reflect every completed request, not the last 200 ms tick.
+    scraper_stop.store(true, Ordering::Relaxed);
+    if let Some(handle) = scraper {
+        let _ = handle.join();
+    }
+    if let Some(path) = &metrics_out {
+        std::fs::write(path, coord.metrics_text())
+            .map_err(|e| format!("writing --metrics-out {path}: {e}"))?;
+        println!("wrote metrics exposition to {path}");
+    }
+    // The recorder outlives the pool via its own Arc, so the trace is
+    // exported after shutdown — once every shard has drained and flushed.
+    let recorder = coord.recorder().cloned();
+
     let report = Arc::try_unwrap(coord).ok().expect("sole owner").stop_detailed();
     println!(
         "\n{ok}/{total} requests ok in {wall:.3}s -> {:.1} req/s, mean latency {:.2} ms",
@@ -368,6 +419,19 @@ fn main() -> Result<(), String> {
             report.total.rejected,
             report.total.shed,
             report.total.inflight_peak
+        );
+    }
+    if let (Some(path), Some(rec)) = (&trace_out, &recorder) {
+        std::fs::write(path, rec.to_json().to_string() + "\n")
+            .map_err(|e| format!("writing --trace-out {path}: {e}"))?;
+        let chrome_path = format!("{path}.chrome.json");
+        std::fs::write(&chrome_path, rec.to_chrome_json().to_string() + "\n")
+            .map_err(|e| format!("writing {chrome_path}: {e}"))?;
+        println!(
+            "wrote trace ({} events, {} chains, {} dropped) to {path} (+ {chrome_path})",
+            rec.recorded(),
+            rec.chains(),
+            rec.dropped()
         );
     }
     if require_swap && report.total.selector_swaps == 0 {

@@ -35,7 +35,10 @@
 //! machine-readable `BENCH_pool.json` (schema in ARCHITECTURE.md).
 //! `--check-against PATH` compares throughput per (mix, routing, shards,
 //! admission) cell against a previously committed run and exits non-zero
-//! on a >20% regression — the CI perf gate.
+//! on a >20% regression — the CI perf gate. `--trace` runs the sweep
+//! cells with the flight recorder on (ring sized to the cell) and prints
+//! each cell's recorded/chain/dropped counts — a visibility aid, not a
+//! gate (submit_hotpath --trace owns the overhead gate).
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -44,7 +47,7 @@ use std::time::{Duration, Instant};
 
 use kernelsel::coordinator::{
     AdmissionPolicy, Coordinator, PoolConfig, Routing, SelectorPolicy, SloClass, SubmitError,
-    TenantId, TenantSpec,
+    TenantId, TenantSpec, TraceConfig,
 };
 use kernelsel::dataset::GemmShape;
 use kernelsel::util::json::{parse, Json};
@@ -120,6 +123,7 @@ fn run_cell(
     routing_name: &'static str,
     shards: usize,
     n: usize,
+    traced: bool,
 ) -> Cell {
     let (routing, steal_min) = match routing_name {
         // PR-1 pure affinity: hash routing, stealing effectively disabled.
@@ -129,7 +133,17 @@ fn run_cell(
     let coord = Coordinator::start_pool(
         PathBuf::from("artifacts"),
         SelectorPolicy::Xla,
-        PoolConfig { shards, routing, steal_min, ..PoolConfig::default() },
+        PoolConfig {
+            shards,
+            routing,
+            steal_min,
+            // Ring sized to hold the whole cell (~4 chain events per
+            // request plus batch/steal markers): the counts printed
+            // below reflect the workload, not ring overflow.
+            trace: traced
+                .then_some(TraceConfig { capacity: (n * 6).next_power_of_two(), sample_every: 1 }),
+            ..PoolConfig::default()
+        },
     )
     .expect("start pool");
 
@@ -168,6 +182,17 @@ fn run_cell(
         latencies.push(resp.latency.as_secs_f64());
     }
     let wall = t0.elapsed().as_secs_f64();
+    if let Some(rec) = coord.recorder() {
+        println!(
+            "{:>8} {:>10} {} shard(s): trace {} events, {} chains, {} dropped",
+            mix,
+            routing_name,
+            shards,
+            rec.recorded(),
+            rec.chains(),
+            rec.dropped(),
+        );
+    }
     let report = coord.stop_detailed();
     let stats = Stats::from_secs(&latencies);
     Cell {
@@ -600,6 +625,7 @@ fn regressions(cells: &[Cell], baseline: &Json) -> Vec<String> {
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     let smoke = args.iter().any(|a| a == "--smoke");
+    let traced = args.iter().any(|a| a == "--trace");
     let json_path = flag_value(&args, "--json");
     let baseline_path = flag_value(&args, "--check-against");
 
@@ -615,7 +641,7 @@ fn main() {
     for &(mix, hot_share) in &[("uniform", 0.0), ("skew90", 0.9)] {
         for &routing in &["affinity", "load-aware"] {
             for &shards in shard_counts {
-                let cell = run_cell(mix, hot_share, routing, shards, n);
+                let cell = run_cell(mix, hot_share, routing, shards, n, traced);
                 println!(
                     "{:>8} {:>10} {} shard(s): {:>8.1} req/s  p50 {:>7.2} ms  \
                      p99 {:>7.2} ms  spilled {:>4}  steals {:>3}",

@@ -66,6 +66,7 @@ impl CompiledTree {
         self.deployed[self.predict_class(raw).min(self.deployed.len() - 1)]
     }
 
+    /// Number of nodes (splits + leaves) in the flattened table.
     pub fn n_nodes(&self) -> usize {
         self.feat.len()
     }
@@ -83,6 +84,9 @@ impl CompiledTree {
 
     // -- serialization (one line per node; human-auditable) ----------------
 
+    /// Text form, one line per node (`deployed` header, then
+    /// `split f thr left right` / `leaf class` lines) — human-auditable
+    /// and stable across platforms (`{:.17e}` round-trips every f64).
     pub fn serialize(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
@@ -104,6 +108,8 @@ impl CompiledTree {
         out
     }
 
+    /// Parse the [`CompiledTree::serialize`] text form; rejects malformed
+    /// lines, out-of-range feature indices and empty trees.
     pub fn deserialize(text: &str) -> Result<CompiledTree, String> {
         let mut lines = text.lines();
         let header = lines.next().ok_or("empty tree")?;

@@ -29,15 +29,23 @@ pub enum ClassifierKind {
     DecisionTreeB,
     /// Depth <= 3, >= 4 samples per leaf.
     DecisionTreeC,
+    /// 1-nearest-neighbor vote in standardized feature space.
     NearestNeighbor1,
+    /// 3-nearest-neighbor vote.
     NearestNeighbor3,
+    /// 7-nearest-neighbor vote.
     NearestNeighbor7,
+    /// One-vs-rest SVM with a linear kernel.
     LinearSvm,
+    /// One-vs-rest SVM with an RBF kernel (gamma 0.25).
     RadialSvm,
+    /// 50-tree random forest (majority vote).
     RandomForest,
+    /// One-hidden-layer (100 unit) perceptron.
     Mlp,
 }
 
+/// Every classifier of Tables 1 and 2, in table order.
 pub const ALL_CLASSIFIERS: [ClassifierKind; 10] = [
     ClassifierKind::DecisionTreeA,
     ClassifierKind::DecisionTreeB,
@@ -52,6 +60,7 @@ pub const ALL_CLASSIFIERS: [ClassifierKind; 10] = [
 ];
 
 impl ClassifierKind {
+    /// The table row label used in reports and experiment JSON.
     pub fn name(&self) -> &'static str {
         match self {
             ClassifierKind::DecisionTreeA => "DecisionTreeA",
@@ -71,11 +80,15 @@ impl ClassifierKind {
 /// Feature standardization fitted on the training split.
 #[derive(Clone, Debug)]
 pub struct Standardizer {
+    /// Per-feature mean over the training rows.
     pub mean: Vec<f64>,
+    /// Per-feature standard deviation (floored at 1e-9 to keep constant
+    /// features from dividing by zero).
     pub std: Vec<f64>,
 }
 
 impl Standardizer {
+    /// Fit per-column mean/std on the training feature matrix.
     pub fn fit(x: &Matrix) -> Standardizer {
         let mean = x.col_means();
         let mut var = vec![0.0f64; x.cols];
@@ -91,6 +104,7 @@ impl Standardizer {
         Standardizer { mean, std }
     }
 
+    /// Z-score one raw feature row with the fitted statistics.
     pub fn transform_row(&self, row: &[f64]) -> Vec<f64> {
         row.iter()
             .zip(self.mean.iter().zip(&self.std))
@@ -98,6 +112,7 @@ impl Standardizer {
             .collect()
     }
 
+    /// Z-score a whole feature matrix row by row.
     pub fn transform(&self, x: &Matrix) -> Matrix {
         Matrix::from_rows(&(0..x.rows).map(|r| self.transform_row(x.row(r))).collect::<Vec<_>>())
     }
@@ -105,7 +120,10 @@ impl Standardizer {
 
 /// A trained kernel selector: classifier + standardizer + the deployed set.
 pub struct KernelClassifier {
+    /// Which of the ten classifier families this is.
     pub kind: ClassifierKind,
+    /// The feature standardization fitted on the training split; raw
+    /// shape features pass through it before every prediction.
     pub standardizer: Standardizer,
     /// Deployed configuration indices; classifier classes index into this.
     pub deployed: Vec<usize>,

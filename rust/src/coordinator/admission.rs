@@ -58,6 +58,10 @@ pub enum RejectReason {
     QuotaExceeded,
 }
 
+/// Number of distinct [`RejectReason`] values — sizes the per-reason
+/// counter arrays in the metrics lanes and the exposition.
+pub const REJECT_REASONS: usize = 3;
+
 impl RejectReason {
     /// Stable lower-case label (metrics, logs, bench JSON).
     pub fn name(&self) -> &'static str {
@@ -66,6 +70,32 @@ impl RejectReason {
             RejectReason::DeadlineUnmeetable => "deadline-unmeetable",
             RejectReason::QuotaExceeded => "quota-exceeded",
         }
+    }
+
+    /// Stable small-integer code (`0..`[`REJECT_REASONS`]): the index
+    /// into per-reason counter arrays and the wire value flight-recorder
+    /// `reject` events carry.
+    pub fn code(&self) -> u8 {
+        match self {
+            RejectReason::QueueFull => 0,
+            RejectReason::DeadlineUnmeetable => 1,
+            RejectReason::QuotaExceeded => 2,
+        }
+    }
+
+    /// The inverse of [`RejectReason::code`] (trace/exposition decoding).
+    pub fn by_code(code: u8) -> Option<RejectReason> {
+        match code {
+            0 => Some(RejectReason::QueueFull),
+            1 => Some(RejectReason::DeadlineUnmeetable),
+            2 => Some(RejectReason::QuotaExceeded),
+            _ => None,
+        }
+    }
+
+    /// Every reason, in [`RejectReason::code`] order (exposition render).
+    pub fn all() -> [RejectReason; REJECT_REASONS] {
+        [RejectReason::QueueFull, RejectReason::DeadlineUnmeetable, RejectReason::QuotaExceeded]
     }
 }
 

@@ -2,11 +2,15 @@
 //! per-configuration dispatch counts and the pool's scheduling counters
 //! (spilled routes, stolen batches, per-shard occupancy histogram) —
 //! plus [`StripedCounter`], the lock-free per-thread-striped cell the
-//! coordinator frontend counts with on the submit path.
+//! coordinator frontend counts with on the submit path, and
+//! [`LatencyHistogram`], the atomic log2-bucketed histogram behind the
+//! live exposition's approximate per-tenant latency quantiles.
 
 use std::cell::Cell;
 use std::collections::{BTreeMap, HashMap};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+use crate::coordinator::admission::REJECT_REASONS;
 
 /// Cells per [`StripedCounter`]; also the lane count reused by the
 /// completion pool's free lists.
@@ -74,6 +78,63 @@ impl StripedCounter {
 impl Default for StripedCounter {
     fn default() -> StripedCounter {
         StripedCounter::new()
+    }
+}
+
+/// Buckets in a [`LatencyHistogram`]: bucket `i` counts samples in
+/// `[2^i, 2^(i+1))` nanoseconds, the last bucket absorbing everything
+/// larger (2^39 ns ≈ 9 minutes — far past any serving latency).
+pub const LATENCY_BUCKETS: usize = 40;
+
+/// A lock-free log2-bucketed latency histogram for the *live* metrics
+/// exposition: shards record completions with one relaxed `fetch_add`,
+/// and `metrics_text()` reads approximate quantiles without stopping
+/// the pool. The shutdown report keeps its exact sample vectors
+/// ([`TenantLane::latencies`]); this type exists so a scrape never has
+/// to copy or sort them.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; LATENCY_BUCKETS],
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> LatencyHistogram {
+        LatencyHistogram { buckets: std::array::from_fn(|_| AtomicU64::new(0)) }
+    }
+}
+
+impl LatencyHistogram {
+    /// Record one end-to-end latency sample, in nanoseconds.
+    pub fn record_ns(&self, ns: u64) {
+        let bucket = (63 - ns.max(1).leading_zeros() as usize).min(LATENCY_BUCKETS - 1);
+        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total samples recorded so far.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Approximate quantile `q` in `[0, 1]`, in nanoseconds: the
+    /// geometric midpoint of the bucket holding the q-th sample
+    /// (`0.0` before the first sample). Accurate to the bucket's 2x
+    /// width — good enough for a live p50/p99 gauge, not for a report.
+    pub fn quantile_ns(&self, q: f64) -> f64 {
+        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                // Geometric midpoint of [2^i, 2^(i+1)): 2^i * sqrt(2).
+                return (1u64 << i) as f64 * std::f64::consts::SQRT_2;
+            }
+        }
+        (1u64 << (LATENCY_BUCKETS - 1)) as f64 * std::f64::consts::SQRT_2
     }
 }
 
@@ -154,6 +215,13 @@ pub struct TenantLane {
     pub rejected: usize,
     /// Admitted requests dropped at drain time past the queue budget.
     pub shed: usize,
+    /// `shed`, split by the [`RejectReason`] the drain-side shed maps to
+    /// (indexed by [`RejectReason::code`]) — `queue-full` under
+    /// `BoundedQueue`, `deadline-unmeetable` under `DeadlineShed`.
+    ///
+    /// [`RejectReason`]: crate::coordinator::admission::RejectReason
+    /// [`RejectReason::code`]: crate::coordinator::admission::RejectReason::code
+    pub shed_by_reason: [usize; REJECT_REASONS],
     /// End-to-end latency samples (seconds) for this tenant's requests.
     pub latencies: Vec<f64>,
 }
@@ -165,6 +233,9 @@ impl TenantLane {
         self.in_slo += other.in_slo;
         self.rejected += other.rejected;
         self.shed += other.shed;
+        for (mine, theirs) in self.shed_by_reason.iter_mut().zip(other.shed_by_reason) {
+            *mine += theirs;
+        }
         self.latencies.extend(other.latencies);
     }
 
@@ -464,6 +535,42 @@ mod tests {
         }
         counter.add(5);
         assert_eq!(counter.sum(), 40_005);
+    }
+
+    #[test]
+    fn tenant_lane_shed_reasons_merge_elementwise() {
+        let mut a = TenantLane::default();
+        a.shed = 3;
+        a.shed_by_reason = [3, 0, 0];
+        let mut b = TenantLane::default();
+        b.shed = 2;
+        b.shed_by_reason = [1, 1, 0];
+        a.merge(b);
+        assert_eq!(a.shed, 5);
+        assert_eq!(a.shed_by_reason, [4, 1, 0]);
+    }
+
+    #[test]
+    fn latency_histogram_quantiles_track_log_buckets() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.quantile_ns(0.5), 0.0, "empty histogram reads 0");
+        // 90 samples near 1us, 10 near 1ms: p50 sits in the 1us decade,
+        // p99 in the 1ms decade (each within its bucket's 2x width).
+        for _ in 0..90 {
+            h.record_ns(1_000);
+        }
+        for _ in 0..10 {
+            h.record_ns(1_000_000);
+        }
+        assert_eq!(h.count(), 100);
+        let p50 = h.quantile_ns(0.50);
+        let p99 = h.quantile_ns(0.99);
+        assert!((512.0..2048.0).contains(&p50), "p50 = {p50}");
+        assert!((524_288.0..2_097_152.0).contains(&p99), "p99 = {p99}");
+        // Degenerate inputs clamp instead of panicking.
+        h.record_ns(0);
+        h.record_ns(u64::MAX);
+        assert_eq!(h.count(), 102);
     }
 
     #[test]

@@ -25,6 +25,10 @@
 //! * [`metrics`] — serving statistics (incl. rejection/shed and
 //!   spill/steal/retune counters and occupancy histograms, plus
 //!   per-tenant lanes) with exact per-shard aggregation.
+//! * [`trace`] — the flight recorder: lock-light striped ring buffers of
+//!   fixed-size lifecycle events (submit → admission → route → batch →
+//!   execute → complete/shed/reject) exportable as `kernelsel-trace-v1`
+//!   JSON or Chrome Trace Event Format.
 
 pub mod admission;
 pub mod batcher;
@@ -35,6 +39,7 @@ pub mod registry;
 pub mod selector;
 pub mod server;
 pub mod tenant;
+pub mod trace;
 #[cfg(feature = "pjrt")]
 pub mod vgg;
 
@@ -50,5 +55,6 @@ pub use server::{
     TenantReport,
 };
 pub use tenant::{SloClass, TenantId, TenantSpec};
+pub use trace::{EventKind, FlightRecorder, TraceConfig, TraceEvent};
 #[cfg(feature = "pjrt")]
 pub use vgg::{LayerTiming, VggEngine};

@@ -66,18 +66,20 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::admission::{
-    drain_hint_ns, AdmissionPolicy, RejectReason, SubmitError, MIN_RETRY_HINT_NS,
+    drain_hint_ns, AdmissionPolicy, RejectReason, SubmitError, MIN_RETRY_HINT_NS, REJECT_REASONS,
 };
 use crate::coordinator::batcher::{Batcher, BatcherConfig, Pending};
 use crate::coordinator::cache::{CostModel, ResolutionCache, ResolvedKernel};
 use crate::coordinator::completion::{Completion, CompletionPool, Ticket};
-use crate::coordinator::metrics::{Metrics, StripedCounter};
+use crate::coordinator::metrics::{LatencyHistogram, Metrics, StripedCounter};
 use crate::coordinator::registry::KernelRegistry;
 use crate::coordinator::selector::SelectorPolicy;
 use crate::coordinator::tenant::{quota_would_admit, reserved_shares, TenantId, TenantSpec};
+use crate::coordinator::trace::{pack_shape, EventKind, FlightRecorder, TraceConfig};
 use crate::dataset::GemmShape;
 use crate::engine::{Backend, EngineKind};
 use crate::runtime::Manifest;
+use crate::tuning::regret::{evaluate_regret, RegretEstimator};
 use crate::tuning::retuner::{retune_once, RetuneConfig, RetuneOutcome, Retuner, RetunerStats};
 use crate::tuning::swap::deploy_policy;
 use crate::tuning::telemetry::TelemetrySink;
@@ -283,6 +285,15 @@ pub struct PoolConfig {
     /// active, so quotas and the pool-wide cap share one capacity
     /// number unless overridden.
     pub quota_slots: usize,
+    /// Flight-recorder tracing: when set, every request's lifecycle
+    /// (submit → admission verdict → route → batch → execute →
+    /// complete/shed/reject) is written into preallocated per-stripe
+    /// ring buffers, exportable as `kernelsel-trace-v1` or Chrome Trace
+    /// Event JSON (see [`FlightRecorder`]). `None` (the default) costs
+    /// one branch per submit; enabled, the warm submit path stays
+    /// zero-allocation — events are fixed-size values written in place,
+    /// and a full ring drops-and-counts instead of blocking.
+    pub trace: Option<TraceConfig>,
 }
 
 impl Default for PoolConfig {
@@ -301,6 +312,7 @@ impl Default for PoolConfig {
             pricing_profile: None,
             tenants: Vec::new(),
             quota_slots: 0,
+            trace: None,
         }
     }
 }
@@ -343,8 +355,20 @@ pub struct TenantReport {
     pub in_slo: usize,
     /// Requests refused at submit time (quota or pool admission).
     pub rejected: usize,
+    /// `rejected`, split by [`RejectReason`] (indexed by
+    /// [`RejectReason::code`]): quota refusals, queue-full refusals and
+    /// deadline refusals each get their own cell, so "who was turned
+    /// away and why" survives into the report.
+    pub rejected_by_reason: [usize; REJECT_REASONS],
     /// Admitted requests shed at drain time past the queue budget.
     pub shed: usize,
+    /// `shed`, split by the [`RejectReason`] the drain-side shed maps to
+    /// (`queue-full` under `BoundedQueue`, `deadline-unmeetable` under
+    /// `DeadlineShed`), indexed by [`RejectReason::code`].
+    pub shed_by_reason: [usize; REJECT_REASONS],
+    /// Peak of this tenant's own in-flight (quota) counter observed at
+    /// admit time; stays 0 while quota accounting is off.
+    pub inflight_peak: usize,
     /// Median end-to-end latency, milliseconds (0 when nothing served).
     pub p50_ms: f64,
     /// 99th-percentile end-to-end latency, milliseconds.
@@ -367,9 +391,28 @@ impl PoolReport {
         for t in &self.tenants {
             out.push_str(&format!(
                 "\n  tenant {} ({}): requests={} in_slo={} rejected={} shed={} \
-                 p50={:.2}ms p99={:.2}ms",
-                t.id, t.name, t.requests, t.in_slo, t.rejected, t.shed, t.p50_ms, t.p99_ms
+                 inflight_peak={} p50={:.2}ms p99={:.2}ms",
+                t.id,
+                t.name,
+                t.requests,
+                t.in_slo,
+                t.rejected,
+                t.shed,
+                t.inflight_peak,
+                t.p50_ms,
+                t.p99_ms
             ));
+            for reason in RejectReason::all() {
+                let i = reason.code() as usize;
+                if t.rejected_by_reason[i] > 0 || t.shed_by_reason[i] > 0 {
+                    out.push_str(&format!(
+                        " {}={}/{}",
+                        reason.name(),
+                        t.rejected_by_reason[i],
+                        t.shed_by_reason[i]
+                    ));
+                }
+            }
         }
         if self.tuning.ticks > 0 {
             out.push_str(&format!(
@@ -460,6 +503,45 @@ struct Job {
     slo_wall: Option<Duration>,
     /// The retune domain this job's measured cost feeds (0 = pool-wide).
     domain: u32,
+    /// Index of the tenant's live exposition lane (`u32::MAX` for
+    /// anonymous/unregistered traffic — no lane traffic at all).
+    lane: u32,
+    /// Flight-recorder chain id linking this job's lifecycle events
+    /// (0 = recorder off or this submit sampled out).
+    trace_seq: u64,
+}
+
+/// Index sentinel for jobs outside every tenant lane.
+const NO_LANE: u32 = u32::MAX;
+
+/// Live counters for one registered tenant, written by the serving
+/// shards (drain side, never the submit path) and read lock-free by
+/// [`Coordinator::metrics_text`]. The shutdown report's exact lanes live
+/// in the per-shard [`Metrics`]; these exist so a metrics scrape works
+/// against a *running* pool.
+#[derive(Default)]
+struct TenantLive {
+    /// Requests served to completion.
+    requests: AtomicU64,
+    /// Served requests inside the tenant's SLO wall.
+    in_slo: AtomicU64,
+    /// Drain-time sheds by [`RejectReason::code`] index.
+    shed_by: [AtomicU64; REJECT_REASONS],
+    /// Log2-bucketed end-to-end latency for approximate live p50/p99.
+    latency: LatencyHistogram,
+}
+
+/// Live per-shard counters mirroring the shard's thread-local [`Metrics`]
+/// for the running-pool exposition: bumped with relaxed atomics on the
+/// drain side (batch/complete/shed/steal), never on the submit path.
+#[derive(Default)]
+struct ShardLive {
+    requests: AtomicU64,
+    batches: AtomicU64,
+    shed: AtomicU64,
+    steals: AtomicU64,
+    stolen_requests: AtomicU64,
+    spilled: AtomicU64,
 }
 
 /// Live admission/accounting state for one registered tenant.
@@ -475,6 +557,15 @@ struct TenantState {
     /// Striped count of this tenant's submit-path refusals (quota and
     /// pool admission), folded into the tenant's lane at shutdown.
     rejected: StripedCounter,
+    /// `rejected`, split by [`RejectReason::code`] index.
+    rejected_by: [StripedCounter; REJECT_REASONS],
+    /// Peak of `inflight` observed at admit time (quota pools only).
+    inflight_peak: AtomicUsize,
+    /// Position in the live-lane vector shards write into (== this
+    /// tenant's registration index).
+    lane: u32,
+    /// The shard-written live counters for this tenant's exposition.
+    live: Arc<TenantLive>,
     /// The retune domain the tenant's telemetry feeds (0 = pool-wide).
     domain: u32,
     /// The pool admission policy with its latency budgets scaled by the
@@ -513,6 +604,8 @@ struct ShardQueue {
     inner: Mutex<QueueInner>,
     cv: Condvar,
     load: ShardLoad,
+    /// Live exposition counters (see [`ShardLive`]).
+    live: ShardLive,
     /// Cleared (via [`AliveGuard`], so panics count too) when the owning
     /// worker exits. Peers relax the steal threshold to 1 for dead queues
     /// so orphaned jobs are rescued instead of hanging their callers.
@@ -538,6 +631,7 @@ impl ShardQueue {
             }),
             cv: Condvar::new(),
             load: ShardLoad::default(),
+            live: ShardLive::default(),
             alive: AtomicBool::new(true),
         }
     }
@@ -583,6 +677,9 @@ struct FrontCounters {
     failures: StripedCounter,
     /// Requests refused by the admission policy (no slot, no shard).
     rejected: StripedCounter,
+    /// `rejected`, split by [`RejectReason::code`] index — the live
+    /// per-reason view the metrics exposition renders.
+    rejected_by: [StripedCounter; REJECT_REASONS],
     /// Peak pool-wide in-flight count observed at admit time. Only
     /// maintained while a bounding admission policy is active — the
     /// `Unbounded` fast path must not scan gauges per submit.
@@ -664,6 +761,14 @@ pub struct Coordinator {
     extra_domains: Vec<DomainState>,
     /// Capacity the weighted-fair tenant quotas divide (0 = quotas off).
     quota_slots: usize,
+    /// Flight recorder (None = tracing off, one branch per submit).
+    recorder: Option<Arc<FlightRecorder>>,
+    /// Per-domain online selection-regret estimators, advanced by each
+    /// [`Coordinator::metrics_text`] scrape.
+    regret: Mutex<Vec<RegretEstimator>>,
+    /// The typed reason drain-side sheds are attributed to (derived from
+    /// the admission policy at startup).
+    shed_reason: RejectReason,
 }
 
 /// The synthetic response for a request rejected on the submit path.
@@ -800,11 +905,29 @@ impl Coordinator {
                 reserved,
                 inflight: Arc::new(AtomicUsize::new(0)),
                 rejected: StripedCounter::new(),
+                rejected_by: Default::default(),
+                inflight_peak: AtomicUsize::new(0),
+                lane: tenants.len() as u32,
+                live: Arc::new(TenantLive::default()),
                 domain: spec.device.map_or(0, |d| domain_of_device[d]),
                 policy: cfg.admission.for_slo_factor(spec.slo.deadline_factor()),
                 spec: spec.clone(),
             });
         }
+        // The live tenant lanes the shards write, in registration order.
+        let lanes: Arc<Vec<Arc<TenantLive>>> =
+            Arc::new(tenants.iter().map(|t| t.live.clone()).collect());
+        // Every drain-side shed is attributed to the reason the active
+        // policy's budget maps to (only `BoundedQueue` sheds today, but
+        // the mapping keeps the trace/report stable if that changes).
+        let shed_reason = match cfg.admission {
+            AdmissionPolicy::DeadlineShed { .. } => RejectReason::DeadlineUnmeetable,
+            _ => RejectReason::QueueFull,
+        };
+        let n_domains = 1 + domain_devices.len();
+        let recorder = cfg
+            .trace
+            .map(|trace_cfg| Arc::new(FlightRecorder::new(trace_cfg, n_domains)));
 
         let registry = Arc::new(KernelRegistry::new(manifest, policy));
         let telemetry = Arc::new(TelemetrySink::default());
@@ -827,6 +950,8 @@ impl Coordinator {
             let queues_for_shard = queues.clone();
             let steal_min = cfg.steal_min.max(1);
             let domains_for_shard = shard_domains.clone();
+            let recorder_for_shard = recorder.clone();
+            let lanes_for_shard = lanes.clone();
             // The shed budget is wall-clock wait since submit, which
             // includes the batcher's *deliberate* max_wait batching delay
             // — a budget below it would shed underfull traffic on an idle
@@ -849,6 +974,11 @@ impl Coordinator {
                         steal_min,
                         queue_budget,
                         domains_for_shard,
+                        ShardSide {
+                            recorder: recorder_for_shard,
+                            lanes: lanes_for_shard,
+                            shed_reason,
+                        },
                         ready_tx,
                     )
                 })
@@ -934,6 +1064,9 @@ impl Coordinator {
             tenant_index,
             extra_domains,
             quota_slots,
+            recorder,
+            regret: Mutex::new((0..n_domains).map(|_| RegretEstimator::default()).collect()),
+            shed_reason,
         })
     }
 
@@ -984,6 +1117,9 @@ impl Coordinator {
     pub fn swap_selector(&self, policy: SelectorPolicy) -> u64 {
         let generation = deploy_policy(&self.registry, &self.cache, policy);
         self.front.selector_swaps.fetch_add(1, Ordering::Relaxed);
+        if let Some(rec) = self.recorder.as_deref() {
+            rec.note_generation(0, generation);
+        }
         generation
     }
 
@@ -1080,6 +1216,443 @@ impl Coordinator {
             .collect()
     }
 
+    /// The flight recorder, when tracing was enabled at startup via
+    /// [`PoolConfig::trace`] — export its ring contents with
+    /// [`FlightRecorder::to_json`] (`kernelsel-trace-v1`) or
+    /// [`FlightRecorder::to_chrome_json`] (Chrome Trace Event Format).
+    pub fn recorder(&self) -> Option<&Arc<FlightRecorder>> {
+        self.recorder.as_ref()
+    }
+
+    /// Render the live Prometheus-style text exposition: per-shard
+    /// gauges and counters, per-tenant lanes (with approximate live
+    /// latency quantiles), admission refusals by typed reason, retune /
+    /// drift / generation counters per domain, the online selection
+    /// regret, and — when tracing is on — the recorder's own counters.
+    ///
+    /// Reads only lock-free live state (plus the retuner's stats mutex
+    /// and a telemetry snapshot per domain for the regret estimate), so
+    /// it is safe to scrape a loaded pool; it never blocks the submit
+    /// path. Counters here settle to the shutdown report's exact values
+    /// once in-flight work drains — asserted by the
+    /// `exposition_agrees_with_shutdown_report` test.
+    ///
+    /// Each scrape also advances the per-domain [`RegretEstimator`]:
+    /// the `kernelsel_selection_regret` gauge is an EWMA over scrape
+    /// evaluations, `kernelsel_selection_regret_raw` the current
+    /// geomean chosen-vs-best ratio (1.0 = measured-optimal).
+    pub fn metrics_text(&self) -> String {
+        let mut out = String::with_capacity(4096);
+        // Pool-level.
+        prom_family(&mut out, "kernelsel_pool_shards", "gauge", "Executor shards serving.");
+        prom_sample(&mut out, "kernelsel_pool_shards", "", self.queues.len() as f64);
+        prom_family(
+            &mut out,
+            "kernelsel_pool_inflight",
+            "gauge",
+            "Pool-wide in-flight reservations (0 unless a capping policy runs).",
+        );
+        prom_sample(
+            &mut out,
+            "kernelsel_pool_inflight",
+            "",
+            self.inflight.load(Ordering::Relaxed) as f64,
+        );
+        prom_family(
+            &mut out,
+            "kernelsel_pool_inflight_peak",
+            "gauge",
+            "Peak pool-wide in-flight count observed at admit time.",
+        );
+        prom_sample(
+            &mut out,
+            "kernelsel_pool_inflight_peak",
+            "",
+            self.front.inflight_peak.load(Ordering::Relaxed) as f64,
+        );
+        prom_family(
+            &mut out,
+            "kernelsel_pool_submit_failures_total",
+            "counter",
+            "Requests failed before reaching a shard (resolution errors, dead pool).",
+        );
+        prom_sample(
+            &mut out,
+            "kernelsel_pool_submit_failures_total",
+            "",
+            self.front.failures.sum() as f64,
+        );
+        prom_family(
+            &mut out,
+            "kernelsel_pool_rejected_total",
+            "counter",
+            "Admission refusals by typed reason.",
+        );
+        for reason in RejectReason::all() {
+            prom_sample(
+                &mut out,
+                "kernelsel_pool_rejected_total",
+                &format!("reason=\"{}\"", reason.name()),
+                self.front.rejected_by[reason.code() as usize].sum() as f64,
+            );
+        }
+        // Per-domain selector / cache / tuning counters.
+        prom_family(
+            &mut out,
+            "kernelsel_cache_hits_total",
+            "counter",
+            "Selector-cache hits per retune domain.",
+        );
+        prom_family(
+            &mut out,
+            "kernelsel_cache_misses_total",
+            "counter",
+            "Selector-cache misses per retune domain.",
+        );
+        prom_family(
+            &mut out,
+            "kernelsel_selector_generation",
+            "gauge",
+            "Deployed selector generation per retune domain (0 = boot policy).",
+        );
+        for d in 0..self.domain_count() as u32 {
+            let (registry, cache) = self.domain_handles(d);
+            let (hits, misses) = cache.stats();
+            let label = format!("domain=\"{d}\"");
+            prom_sample(&mut out, "kernelsel_cache_hits_total", &label, hits as f64);
+            prom_sample(&mut out, "kernelsel_cache_misses_total", &label, misses as f64);
+            prom_sample(
+                &mut out,
+                "kernelsel_selector_generation",
+                &label,
+                registry.generation() as f64,
+            );
+        }
+        prom_family(
+            &mut out,
+            "kernelsel_retunes_total",
+            "counter",
+            "Full selection reruns on measured data, per domain.",
+        );
+        prom_family(
+            &mut out,
+            "kernelsel_selector_swaps_total",
+            "counter",
+            "Selector hot-swaps (retuner + explicit), per domain.",
+        );
+        prom_family(
+            &mut out,
+            "kernelsel_drift_trips_total",
+            "counter",
+            "Retune ticks where the drift detector tripped, per domain.",
+        );
+        prom_family(
+            &mut out,
+            "kernelsel_retune_ticks_total",
+            "counter",
+            "Retune attempts (timer ticks + explicit), per domain.",
+        );
+        prom_family(
+            &mut out,
+            "kernelsel_drift_deviation",
+            "gauge",
+            "Worst measured/predicted drift deviation on the last retune tick.",
+        );
+        for d in 0..self.domain_count() {
+            let stats = match d {
+                0 => self.retune_stats.lock().unwrap().clone(),
+                n => self.extra_domains[n - 1].retune_stats.lock().unwrap().clone(),
+            };
+            // Manual `swap_selector` calls act on the default domain.
+            let manual_swaps =
+                if d == 0 { self.front.selector_swaps.load(Ordering::Relaxed) } else { 0 };
+            let label = format!("domain=\"{d}\"");
+            prom_sample(&mut out, "kernelsel_retunes_total", &label, stats.retunes as f64);
+            prom_sample(
+                &mut out,
+                "kernelsel_selector_swaps_total",
+                &label,
+                (stats.swaps + manual_swaps) as f64,
+            );
+            prom_sample(
+                &mut out,
+                "kernelsel_drift_trips_total",
+                &label,
+                stats.drift_trips as f64,
+            );
+            prom_sample(&mut out, "kernelsel_retune_ticks_total", &label, stats.ticks as f64);
+            prom_sample(
+                &mut out,
+                "kernelsel_drift_deviation",
+                &label,
+                stats.last_drift_deviation,
+            );
+        }
+        // Online selection regret, per domain.
+        prom_family(
+            &mut out,
+            "kernelsel_selection_regret",
+            "gauge",
+            "EWMA of the geomean chosen-vs-best-measured cost ratio (1.0 = optimal).",
+        );
+        prom_family(
+            &mut out,
+            "kernelsel_selection_regret_raw",
+            "gauge",
+            "Current geomean chosen-vs-best-measured cost ratio.",
+        );
+        prom_family(
+            &mut out,
+            "kernelsel_selection_regret_shapes",
+            "gauge",
+            "Shapes with >= 2 measured variants backing the regret estimate.",
+        );
+        {
+            let mut estimators = self.regret.lock().unwrap();
+            for d in 0..self.domain_count() {
+                let snapshot = self.domain_telemetry(d as u32).snapshot();
+                let report = evaluate_regret(
+                    &snapshot,
+                    self.domain_registry(d as u32),
+                    REGRET_MIN_CELL_SAMPLES,
+                );
+                let smoothed = estimators[d].observe(&report);
+                let label = format!("domain=\"{d}\"");
+                prom_sample(&mut out, "kernelsel_selection_regret", &label, smoothed);
+                prom_sample(
+                    &mut out,
+                    "kernelsel_selection_regret_raw",
+                    &label,
+                    report.geomean,
+                );
+                prom_sample(
+                    &mut out,
+                    "kernelsel_selection_regret_shapes",
+                    &label,
+                    report.comparable_shapes as f64,
+                );
+            }
+        }
+        // Per-shard lanes.
+        prom_family(
+            &mut out,
+            "kernelsel_shard_queue_depth",
+            "gauge",
+            "Requests owned by the shard.",
+        );
+        prom_family(&mut out, "kernelsel_shard_load_ns", "gauge", "Shard load-gauge score (ns).");
+        prom_family(
+            &mut out,
+            "kernelsel_shard_drain_rate",
+            "gauge",
+            "Measured drain rate (completions/s EWMA; 0 until warm).",
+        );
+        prom_family(&mut out, "kernelsel_shard_requests_total", "counter", "Requests served.");
+        prom_family(&mut out, "kernelsel_shard_batches_total", "counter", "Batches drained.");
+        prom_family(&mut out, "kernelsel_shard_shed_total", "counter", "Jobs shed at drain time.");
+        prom_family(
+            &mut out,
+            "kernelsel_shard_steals_total",
+            "counter",
+            "Batches stolen from peers.",
+        );
+        prom_family(
+            &mut out,
+            "kernelsel_shard_stolen_requests_total",
+            "counter",
+            "Requests arriving via stolen batches.",
+        );
+        prom_family(
+            &mut out,
+            "kernelsel_shard_spilled_total",
+            "counter",
+            "Served requests routed off their affinity shard.",
+        );
+        for (i, q) in self.queues.iter().enumerate() {
+            let label = format!("shard=\"{i}\"");
+            prom_sample(&mut out, "kernelsel_shard_queue_depth", &label, q.load.depth() as f64);
+            prom_sample(&mut out, "kernelsel_shard_load_ns", &label, q.load.score_ns() as f64);
+            prom_sample(
+                &mut out,
+                "kernelsel_shard_drain_rate",
+                &label,
+                q.load.drain_rate_per_sec(),
+            );
+            let live = &q.live;
+            prom_sample(
+                &mut out,
+                "kernelsel_shard_requests_total",
+                &label,
+                live.requests.load(Ordering::Relaxed) as f64,
+            );
+            prom_sample(
+                &mut out,
+                "kernelsel_shard_batches_total",
+                &label,
+                live.batches.load(Ordering::Relaxed) as f64,
+            );
+            prom_sample(
+                &mut out,
+                "kernelsel_shard_shed_total",
+                &label,
+                live.shed.load(Ordering::Relaxed) as f64,
+            );
+            prom_sample(
+                &mut out,
+                "kernelsel_shard_steals_total",
+                &label,
+                live.steals.load(Ordering::Relaxed) as f64,
+            );
+            prom_sample(
+                &mut out,
+                "kernelsel_shard_stolen_requests_total",
+                &label,
+                live.stolen_requests.load(Ordering::Relaxed) as f64,
+            );
+            prom_sample(
+                &mut out,
+                "kernelsel_shard_spilled_total",
+                &label,
+                live.spilled.load(Ordering::Relaxed) as f64,
+            );
+        }
+        // Per-tenant lanes.
+        if !self.tenants.is_empty() {
+            prom_family(
+                &mut out,
+                "kernelsel_tenant_requests_total",
+                "counter",
+                "Requests served to completion per tenant.",
+            );
+            prom_family(
+                &mut out,
+                "kernelsel_tenant_in_slo_total",
+                "counter",
+                "Served requests inside the tenant's SLO wall.",
+            );
+            prom_family(
+                &mut out,
+                "kernelsel_tenant_rejected_total",
+                "counter",
+                "Submit-path refusals per tenant by typed reason.",
+            );
+            prom_family(
+                &mut out,
+                "kernelsel_tenant_shed_total",
+                "counter",
+                "Drain-time sheds per tenant by typed reason.",
+            );
+            prom_family(
+                &mut out,
+                "kernelsel_tenant_inflight",
+                "gauge",
+                "The tenant's live quota (in-flight) count.",
+            );
+            prom_family(
+                &mut out,
+                "kernelsel_tenant_inflight_peak",
+                "gauge",
+                "Peak of the tenant's quota count observed at admit time.",
+            );
+            prom_family(
+                &mut out,
+                "kernelsel_tenant_latency_p50_ms",
+                "gauge",
+                "Approximate live median latency (log2-bucketed).",
+            );
+            prom_family(
+                &mut out,
+                "kernelsel_tenant_latency_p99_ms",
+                "gauge",
+                "Approximate live p99 latency (log2-bucketed).",
+            );
+            for t in &self.tenants {
+                let base = format!(
+                    "tenant=\"{}\",id=\"{}\"",
+                    prom_escape(&t.spec.name),
+                    t.spec.id.0
+                );
+                let live = &t.live;
+                prom_sample(
+                    &mut out,
+                    "kernelsel_tenant_requests_total",
+                    &base,
+                    live.requests.load(Ordering::Relaxed) as f64,
+                );
+                prom_sample(
+                    &mut out,
+                    "kernelsel_tenant_in_slo_total",
+                    &base,
+                    live.in_slo.load(Ordering::Relaxed) as f64,
+                );
+                for reason in RejectReason::all() {
+                    let i = reason.code() as usize;
+                    prom_sample(
+                        &mut out,
+                        "kernelsel_tenant_rejected_total",
+                        &format!("{base},reason=\"{}\"", reason.name()),
+                        t.rejected_by[i].sum() as f64,
+                    );
+                    prom_sample(
+                        &mut out,
+                        "kernelsel_tenant_shed_total",
+                        &format!("{base},reason=\"{}\"", reason.name()),
+                        live.shed_by[i].load(Ordering::Relaxed) as f64,
+                    );
+                }
+                prom_sample(
+                    &mut out,
+                    "kernelsel_tenant_inflight",
+                    &base,
+                    t.inflight.load(Ordering::Relaxed) as f64,
+                );
+                prom_sample(
+                    &mut out,
+                    "kernelsel_tenant_inflight_peak",
+                    &base,
+                    t.inflight_peak.load(Ordering::Relaxed) as f64,
+                );
+                prom_sample(
+                    &mut out,
+                    "kernelsel_tenant_latency_p50_ms",
+                    &base,
+                    live.latency.quantile_ns(0.50) / 1e6,
+                );
+                prom_sample(
+                    &mut out,
+                    "kernelsel_tenant_latency_p99_ms",
+                    &base,
+                    live.latency.quantile_ns(0.99) / 1e6,
+                );
+            }
+        }
+        // Flight-recorder health.
+        if let Some(rec) = self.recorder.as_deref() {
+            prom_family(
+                &mut out,
+                "kernelsel_trace_events_total",
+                "counter",
+                "Events currently held in the recorder's rings.",
+            );
+            prom_sample(&mut out, "kernelsel_trace_events_total", "", rec.recorded() as f64);
+            prom_family(
+                &mut out,
+                "kernelsel_trace_dropped_total",
+                "counter",
+                "Events dropped because every ring stripe was full or contended.",
+            );
+            prom_sample(&mut out, "kernelsel_trace_dropped_total", "", rec.dropped() as f64);
+            prom_family(
+                &mut out,
+                "kernelsel_trace_chains_total",
+                "counter",
+                "Traced submit chains opened.",
+            );
+            prom_sample(&mut out, "kernelsel_trace_chains_total", "", rec.chains() as f64);
+        }
+        out
+    }
+
     /// Whether a shard's worker thread is still running. A worker that
     /// panicked leaves its queue alive but will never serve it.
     fn worker_alive(&self, shard: usize) -> bool {
@@ -1148,6 +1721,62 @@ impl Coordinator {
     /// every pooled slot is in flight.
     fn checkout_completion(&self) -> (Completion, Ticket) {
         CompletionPool::checkout(&self.completions).unwrap_or_else(Completion::oneshot)
+    }
+
+    /// Open one request's trace chain: a `submit` event (packed shape +
+    /// priced cost) followed by its `route` decision. Returns the chain
+    /// id the job carries (0 = tracing off or sampled out). Writes
+    /// fixed-size events by value — no allocation on the warm path.
+    #[inline]
+    fn trace_submit(
+        &self,
+        shape: &GemmShape,
+        cost_ns: u64,
+        tenant: TenantId,
+        shard: usize,
+        spilled: bool,
+    ) -> u64 {
+        let Some(rec) = self.recorder.as_deref() else { return 0 };
+        let seq = rec.begin_submit();
+        rec.event(
+            seq,
+            EventKind::Submit,
+            shard as u16,
+            tenant.0,
+            [pack_shape(shape), cost_ns, 0],
+        );
+        rec.event(seq, EventKind::Route, shard as u16, tenant.0, [u64::from(spilled), 0, 0]);
+        seq
+    }
+
+    /// Terminate a chain with its admission refusal: the typed reason
+    /// code and the retry hint (0 = none).
+    #[inline]
+    fn trace_reject(&self, seq: u64, shard: usize, tenant: TenantId, err: &SubmitError) {
+        if let Some(rec) = self.recorder.as_deref() {
+            let hint_ns = err.retry_after_hint().map_or(0, |d| d.as_nanos() as u64);
+            rec.event(
+                seq,
+                EventKind::Reject,
+                shard as u16,
+                tenant.0,
+                [u64::from(err.reason().code()), hint_ns, 0],
+            );
+        }
+    }
+
+    /// Count one submit-path refusal: the frontend totals, the frontend
+    /// per-reason cell, and (for registered tenants) the tenant's own
+    /// total and per-reason cells — all striped, no pool-global lock.
+    #[inline]
+    fn count_reject(&self, state: Option<&TenantState>, err: &SubmitError) {
+        let code = err.reason().code() as usize;
+        if let Some(s) = state {
+            s.rejected.incr();
+            s.rejected_by[code].incr();
+        }
+        self.front.rejected.incr();
+        self.front.rejected_by[code].incr();
     }
 
     /// Consult `policy` (the pool policy, or a tenant's SLO-scaled copy)
@@ -1253,6 +1882,7 @@ impl Coordinator {
             others_free,
             self.quota_slots,
         ) {
+            state.inflight_peak.fetch_max(mine + 1, Ordering::Relaxed);
             return Ok(InflightSlot::tenant(state.inflight.clone()));
         }
         state.inflight.fetch_sub(1, Ordering::Release);
@@ -1350,13 +1980,15 @@ impl Coordinator {
         };
         // Measured EWMA once telemetry is warm, devsim estimate while cold.
         let cost_ns = cache.dispatch_cost_ns(&resolved);
+        let trace_seq = self.trace_submit(&shape, cost_ns, tenant, shard, spilled);
         let tenant_slot = match state.map_or(Ok(InflightSlot::none()), |s| {
             self.quota_gate(s, shard)
         }) {
             Ok(slot) => slot,
             Err(err) => {
-                state.expect("quota gate only rejects registered tenants").rejected.incr();
-                self.front.rejected.incr();
+                debug_assert!(state.is_some(), "quota gate only rejects registered tenants");
+                self.count_reject(state, &err);
+                self.trace_reject(trace_seq, shard, tenant, &err);
                 return Ticket::rejected(err);
             }
         };
@@ -1365,10 +1997,8 @@ impl Coordinator {
             Ok(slot) => slot,
             Err(err) => {
                 // `tenant_slot` drops here, releasing the quota slot.
-                if let Some(s) = state {
-                    s.rejected.incr();
-                }
-                self.front.rejected.incr();
+                self.count_reject(state, &err);
+                self.trace_reject(trace_seq, shard, tenant, &err);
                 return Ticket::rejected(err);
             }
         };
@@ -1386,6 +2016,8 @@ impl Coordinator {
             tenant,
             slo_wall: state.and_then(|s| s.spec.slo_wall),
             domain: state.map_or(0, |s| s.domain),
+            lane: state.map_or(NO_LANE, |s| s.lane),
+            trace_seq,
         });
         ticket
     }
@@ -1421,6 +2053,7 @@ impl Coordinator {
         let policy = state.map_or(self.admission, |s| s.policy);
         let slo_wall = state.and_then(|s| s.spec.slo_wall);
         let domain = state.map_or(0, |s| s.domain);
+        let lane = state.map_or(NO_LANE, |s| s.lane);
         let mut tickets = Vec::with_capacity(requests.len());
         let mut iter = requests.into_iter().peekable();
         while let Some((shape, lhs, rhs)) = iter.next() {
@@ -1469,16 +2102,18 @@ impl Coordinator {
             };
             let mut jobs = Vec::with_capacity(run.len());
             for (lhs, rhs) in run {
+                let trace_seq = self.trace_submit(&shape, cost_ns, tenant, shard, spilled);
                 let tenant_slot = match state.map_or(Ok(InflightSlot::none()), |s| {
                     self.quota_gate(s, shard)
                 }) {
                     Ok(slot) => slot,
                     Err(err) => {
-                        state
-                            .expect("quota gate only rejects registered tenants")
-                            .rejected
-                            .incr();
-                        self.front.rejected.incr();
+                        debug_assert!(
+                            state.is_some(),
+                            "quota gate only rejects registered tenants"
+                        );
+                        self.count_reject(state, &err);
+                        self.trace_reject(trace_seq, shard, tenant, &err);
                         tickets.push(Ticket::rejected(err));
                         continue;
                     }
@@ -1500,10 +2135,8 @@ impl Coordinator {
                         }
                         Err(err) => {
                             // `tenant_slot` drops: the quota slot frees.
-                            if let Some(s) = state {
-                                s.rejected.incr();
-                            }
-                            self.front.rejected.incr();
+                            self.count_reject(state, &err);
+                            self.trace_reject(trace_seq, shard, tenant, &err);
                             tickets.push(Ticket::rejected(err));
                             continue;
                         }
@@ -1525,6 +2158,8 @@ impl Coordinator {
                     tenant,
                     slo_wall,
                     domain,
+                    lane,
+                    trace_seq,
                 });
             }
             self.queues[shard].push_batch(jobs);
@@ -1645,7 +2280,10 @@ impl Coordinator {
                     requests: lane.map_or(0, |l| l.requests),
                     in_slo: lane.map_or(0, |l| l.in_slo),
                     rejected: lane.map_or(0, |l| l.rejected),
+                    rejected_by_reason: std::array::from_fn(|i| t.rejected_by[i].sum()),
                     shed: lane.map_or(0, |l| l.shed),
+                    shed_by_reason: lane.map_or([0; REJECT_REASONS], |l| l.shed_by_reason),
+                    inflight_peak: t.inflight_peak.load(Ordering::Relaxed),
                     p50_ms: stats.as_ref().map_or(0.0, |s| s.p50 * 1e3),
                     p99_ms: stats.as_ref().map_or(0.0, |s| s.p99 * 1e3),
                 }
@@ -1660,6 +2298,31 @@ impl Drop for Coordinator {
     fn drop(&mut self) {
         shutdown_workers(&self.queues, &mut self.workers);
     }
+}
+
+/// A shape cell needs this many measurements before the regret
+/// estimator trusts its chosen-vs-best comparison (see
+/// [`evaluate_regret`]).
+const REGRET_MIN_CELL_SAMPLES: u64 = 2;
+
+/// Append one `# HELP` / `# TYPE` exposition header pair.
+fn prom_family(out: &mut String, name: &str, kind: &str, help: &str) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+}
+
+/// Append one `name{labels} value` sample line (`labels` pre-rendered,
+/// may be empty for a label-free sample).
+fn prom_sample(out: &mut String, name: &str, labels: &str, value: f64) {
+    if labels.is_empty() {
+        out.push_str(&format!("{name} {value}\n"));
+    } else {
+        out.push_str(&format!("{name}{{{labels}}} {value}\n"));
+    }
+}
+
+/// Escape a string for use inside a Prometheus label value.
+fn prom_escape(name: &str) -> String {
+    name.replace('\\', "\\\\").replace('"', "\\\"")
 }
 
 /// Signal stop to every queue with a live worker handle and join it.
@@ -1703,7 +2366,7 @@ fn try_steal(
     my_id: usize,
     steal_min: usize,
     max_batch: usize,
-) -> Option<Vec<Job>> {
+) -> Option<(usize, Vec<Job>)> {
     // Rank peers by load score, but probe them in descending order rather
     // than committing to the top one: the gauge overstates *stealable*
     // work (it includes jobs a victim already drained into its private
@@ -1749,16 +2412,52 @@ fn try_steal(
         let cost: u64 = stolen.iter().map(|j| j.cost_ns).sum();
         victim.load.sub(stolen.len(), cost);
         queues[my_id].load.add(stolen.len(), cost);
-        return Some(stolen);
+        return Some((victim_id, stolen));
     }
     None
+}
+
+/// The observability half of one shard's serve-time state, bundled so it
+/// travels from `start_pool` into `shard_loop` as one value: the shared
+/// flight recorder, the tenants' live exposition lanes, and the typed
+/// reason drain-side sheds carry.
+struct ShardSide {
+    recorder: Option<Arc<FlightRecorder>>,
+    lanes: Arc<Vec<Arc<TenantLive>>>,
+    shed_reason: RejectReason,
+}
+
+/// Everything the drain-side paths (`run_batch`, `shed_jobs`) share for
+/// one shard: its queue (load gauge + live counters), the observability
+/// bundle, and the shard id events are stamped with.
+struct ShardCtx {
+    shard_id: u16,
+    queue: Arc<ShardQueue>,
+    side: ShardSide,
+}
+
+impl ShardCtx {
+    /// Record one chain event if tracing is on (see [`FlightRecorder::event`]).
+    #[inline]
+    fn event(&self, seq: u64, kind: EventKind, tenant: u32, payload: [u64; 3]) {
+        if let Some(rec) = self.side.recorder.as_deref() {
+            rec.event(seq, kind, self.shard_id, tenant, payload);
+        }
+    }
+
+    /// The live exposition lane for `lane`, or `None` for [`NO_LANE`].
+    #[inline]
+    fn lane(&self, lane: u32) -> Option<&TenantLive> {
+        self.side.lanes.get(lane as usize).map(Arc::as_ref)
+    }
 }
 
 /// Complete every job the shed hook pulled out of the batcher with a
 /// rejection, releasing its load-gauge share and its admission
 /// reservation. Runs on the shard thread at drain time — the
 /// "shed-on-drain" stage of the admission state machine.
-fn shed_jobs(shed: Vec<Pending<Job>>, budget: Duration, load: &ShardLoad, metrics: &mut Metrics) {
+fn shed_jobs(shed: Vec<Pending<Job>>, budget: Duration, ctx: &ShardCtx, metrics: &mut Metrics) {
+    let reason_idx = ctx.side.shed_reason.code() as usize;
     for pending in shed {
         // The handoff stamps `enqueued` with the submit instant, so the
         // wait measured here — and the latency `failure_response` derives
@@ -1766,10 +2465,22 @@ fn shed_jobs(shed: Vec<Pending<Job>>, budget: Duration, load: &ShardLoad, metric
         let waited = pending.enqueued.elapsed();
         let job = pending.payload;
         metrics.shed += 1;
+        ctx.queue.live.shed.fetch_add(1, Ordering::Relaxed);
         if !job.tenant.is_anonymous() {
-            metrics.per_tenant.entry(job.tenant.0).or_default().shed += 1;
+            let lane = metrics.per_tenant.entry(job.tenant.0).or_default();
+            lane.shed += 1;
+            lane.shed_by_reason[reason_idx] += 1;
         }
-        load.sub(1, job.cost_ns);
+        if let Some(live) = ctx.lane(job.lane) {
+            live.shed_by[reason_idx].fetch_add(1, Ordering::Relaxed);
+        }
+        ctx.event(
+            job.trace_seq,
+            EventKind::Shed,
+            job.tenant.0,
+            [waited.as_nanos() as u64, budget.as_nanos() as u64, 0],
+        );
+        ctx.queue.load.sub(1, job.cost_ns);
         // Release the reservation before responding, like the gauge: a
         // blocking caller must be admittable as soon as it wakes.
         drop(job.reservation);
@@ -1790,13 +2501,13 @@ fn shed_jobs(shed: Vec<Pending<Job>>, budget: Duration, load: &ShardLoad, metric
 fn shed_pass(
     batcher: &mut Batcher<Job>,
     queue_budget: Option<Duration>,
-    load: &ShardLoad,
+    ctx: &ShardCtx,
     metrics: &mut Metrics,
 ) {
     if let Some(budget) = queue_budget {
         let shed = batcher.shed_overdue(budget);
         if !shed.is_empty() {
-            shed_jobs(shed, budget, load, metrics);
+            shed_jobs(shed, budget, ctx, metrics);
         }
     }
 }
@@ -1811,9 +2522,11 @@ fn shard_loop(
     steal_min: usize,
     queue_budget: Option<Duration>,
     domains: Arc<Vec<ShardDomain>>,
+    side: ShardSide,
     ready: Sender<Result<(), String>>,
 ) {
     let my = queues[shard_id].clone();
+    let ctx = ShardCtx { shard_id: shard_id as u16, queue: my.clone(), side };
     // Clears `my.alive` on every exit path — normal stop, failed backend
     // init, or a panic unwinding — so the router and the steal path know
     // this queue is orphaned.
@@ -1853,9 +2566,9 @@ fn shard_loop(
         // queued behind it over the budget.
         let mut ran = false;
         loop {
-            shed_pass(&mut batcher, queue_budget, &my.load, &mut metrics);
+            shed_pass(&mut batcher, queue_budget, &ctx, &mut metrics);
             let Some((artifact, group)) = batcher.drain_due() else { break };
-            run_batch(backend.as_mut(), &my.load, &artifact, group, &domains, &mut metrics);
+            run_batch(backend.as_mut(), &ctx, &artifact, group, &domains, &mut metrics);
             ran = true;
         }
         if ran {
@@ -1864,9 +2577,17 @@ fn shard_loop(
 
         // Fully idle: relieve the most loaded peer before going to sleep.
         if batcher.is_empty() {
-            if let Some(stolen) = try_steal(&queues, shard_id, steal_min, max_batch) {
+            if let Some((victim, stolen)) = try_steal(&queues, shard_id, steal_min, max_batch) {
                 metrics.steals += 1;
                 metrics.stolen_requests += stolen.len();
+                my.live.steals.fetch_add(1, Ordering::Relaxed);
+                my.live.stolen_requests.fetch_add(stolen.len() as u64, Ordering::Relaxed);
+                ctx.event(
+                    0,
+                    EventKind::Steal,
+                    0,
+                    [victim as u64, stolen.len() as u64, 0],
+                );
                 for job in stolen {
                     let artifact = job.resolved.artifact().clone();
                     batcher.push_pending(Pending {
@@ -1888,9 +2609,9 @@ fn shard_loop(
     // and each flushed batch's execution time can push the work queued
     // behind it over the budget, so the check re-runs per batch here too).
     loop {
-        shed_pass(&mut batcher, queue_budget, &my.load, &mut metrics);
+        shed_pass(&mut batcher, queue_budget, &ctx, &mut metrics);
         let Some((artifact, group)) = batcher.drain_next() else { break };
-        run_batch(backend.as_mut(), &my.load, &artifact, group, &domains, &mut metrics);
+        run_batch(backend.as_mut(), &ctx, &artifact, group, &domains, &mut metrics);
     }
     if let Some(reply) = stop_reply {
         let _ = reply.send(metrics);
@@ -1899,16 +2620,28 @@ fn shard_loop(
 
 fn run_batch(
     backend: &mut dyn Backend,
-    load: &ShardLoad,
+    ctx: &ShardCtx,
     artifact: &Arc<str>,
     group: Vec<Pending<Job>>,
     domains: &[ShardDomain],
     metrics: &mut Metrics,
 ) {
     let t_batch = Instant::now();
+    let load = &ctx.queue.load;
     let n_jobs = group.len();
     metrics.record_batch(group.len());
     metrics.record_occupancy(load.depth());
+    ctx.queue.live.batches.fetch_add(1, Ordering::Relaxed);
+    if ctx.side.recorder.is_some() {
+        // The oldest job's wait is the batch's age — how long the drain
+        // lagged the first submit it serves.
+        let oldest_ns = group
+            .iter()
+            .map(|p| p.enqueued.elapsed().as_nanos() as u64)
+            .max()
+            .unwrap_or(0);
+        ctx.event(0, EventKind::Batch, 0, [n_jobs as u64, oldest_ns, 0]);
+    }
     // One prepare per batch: first touch compiles, later batches hit the
     // backend's executable cache (kept hot by the affinity preference).
     let prepared = match group.first() {
@@ -1921,6 +2654,7 @@ fn run_batch(
         // Domain 0 always exists; an out-of-range index (impossible by
         // construction) degrades to it rather than panicking a shard.
         let dom = domains.get(job.domain as usize).unwrap_or(&domains[0]);
+        let mut measured_ns = 0u64;
         let result = match &prepared {
             Ok(()) => {
                 let run = backend.execute_timed_for(
@@ -1940,6 +2674,7 @@ fn run_batch(
                             job.resolved.meta.config_index,
                             measured_secs,
                         );
+                        measured_ns = (measured_secs * 1e9) as u64;
                         Ok(out)
                     }
                     Err(e) => Err(e),
@@ -1953,13 +2688,44 @@ fn run_batch(
         }
         if job.spilled {
             metrics.spilled += 1;
+            ctx.queue.live.spilled.fetch_add(1, Ordering::Relaxed);
         }
         metrics.record_resolution(&job.resolved.resolution);
         let config_used = job.resolved.meta.config_index;
         metrics.record_request(latency.as_secs_f64(), config_used);
+        ctx.queue.live.requests.fetch_add(1, Ordering::Relaxed);
         if !job.tenant.is_anonymous() {
             let in_slo = result.is_ok() && job.slo_wall.map_or(true, |wall| latency <= wall);
             metrics.record_tenant(job.tenant.0, latency.as_secs_f64(), in_slo);
+            if let Some(live) = ctx.lane(job.lane) {
+                live.requests.fetch_add(1, Ordering::Relaxed);
+                if in_slo {
+                    live.in_slo.fetch_add(1, Ordering::Relaxed);
+                }
+                live.latency.record_ns(latency.as_nanos() as u64);
+            }
+        }
+        if let Some(rec) = ctx.side.recorder.as_deref() {
+            // The swap timeline: the first served job carrying a new
+            // selector generation emits the domain's Swap event.
+            rec.note_generation(job.domain as usize, job.resolved.generation);
+            let config_code = config_used.map_or(0, |c| c as u64 + 1);
+            ctx.event(
+                job.trace_seq,
+                EventKind::Execute,
+                job.tenant.0,
+                [
+                    config_code | (job.resolved.generation << 32),
+                    job.cost_ns,
+                    measured_ns,
+                ],
+            );
+            ctx.event(
+                job.trace_seq,
+                EventKind::Complete,
+                job.tenant.0,
+                [latency.as_nanos() as u64, u64::from(result.is_ok()), 0],
+            );
         }
         // Release the gauge (and the admission reservation) before
         // responding: a blocking caller must see an up-to-date load when
@@ -3167,5 +3933,157 @@ mod tests {
             );
         }
         coord.stop();
+    }
+
+    #[test]
+    fn traced_pool_records_complete_lifecycle_chains() {
+        let coord = Coordinator::start_pool(
+            PathBuf::from("/nonexistent-artifacts"),
+            SelectorPolicy::Xla,
+            PoolConfig {
+                shards: 2,
+                trace: Some(TraceConfig::default()),
+                ..PoolConfig::default()
+            },
+        )
+        .expect("coordinator start");
+        let shape = GemmShape::new(64, 64, 64, 1);
+        for i in 0..6u32 {
+            coord
+                .call(shape, fill_buffer(i, 64 * 64), fill_buffer(i + 7, 64 * 64))
+                .unwrap()
+                .result
+                .unwrap();
+        }
+        let rec = coord.recorder().expect("tracing was enabled").clone();
+        assert_eq!(rec.dropped(), 0);
+        let events = rec.export();
+        // Causality: every traced submit chain opens exactly once and
+        // reaches exactly one terminal (complete | shed | reject).
+        let mut chains: HashMap<u64, (usize, usize)> = HashMap::new();
+        for ev in &events {
+            let cell = chains.entry(ev.seq).or_default();
+            match ev.kind {
+                EventKind::Submit => cell.0 += 1,
+                EventKind::Complete | EventKind::Shed | EventKind::Reject => cell.1 += 1,
+                _ => {}
+            }
+        }
+        chains.remove(&0); // unchained shard events (steal/batch/swap)
+        assert_eq!(chains.len(), 6, "one chain per request");
+        for (seq, (opened, terminal)) in &chains {
+            assert_eq!(
+                (*opened, *terminal),
+                (1, 1),
+                "chain {seq} must open once and close once"
+            );
+        }
+        // Executes carry the measured cost next to the prediction.
+        let execs: Vec<_> = events.iter().filter(|e| e.kind == EventKind::Execute).collect();
+        assert_eq!(execs.len(), 6);
+        assert!(execs.iter().all(|e| e.c > 0), "measured cost must be recorded");
+        // Both exports are valid JSON; the native one self-identifies.
+        let native = crate::util::json::parse(&rec.to_json().to_string()).expect("trace json");
+        assert_eq!(
+            native.get("schema").and_then(|s| s.as_str()),
+            Some("kernelsel-trace-v1")
+        );
+        crate::util::json::parse(&rec.to_chrome_json().to_string()).expect("chrome trace json");
+        // An untraced pool exposes no recorder.
+        assert!(sim_pool(1, SelectorPolicy::Xla).recorder().is_none());
+        coord.stop();
+    }
+
+    /// Sum one exposition family's samples, optionally filtered to lines
+    /// whose label set contains `label` (empty matches every sample).
+    fn prom_total(text: &str, name: &str, label: &str) -> usize {
+        text.lines()
+            .filter(|l| !l.starts_with('#'))
+            .filter(|l| l.split(['{', ' ']).next() == Some(name) && l.contains(label))
+            .map(|l| l.rsplit(' ').next().unwrap().parse::<f64>().unwrap() as usize)
+            .sum()
+    }
+
+    #[test]
+    fn exposition_agrees_with_shutdown_report() {
+        let coord = Coordinator::start_pool(
+            PathBuf::from("/nonexistent-artifacts"),
+            SelectorPolicy::Xla,
+            PoolConfig {
+                shards: 2,
+                trace: Some(TraceConfig::default()),
+                tenants: vec![
+                    TenantSpec::new(TenantId(1), "blocked", 0, SloClass::Standard),
+                    TenantSpec::new(TenantId(2), "paying", 1, SloClass::Standard),
+                ],
+                quota_slots: 8,
+                ..PoolConfig::default()
+            },
+        )
+        .expect("coordinator start");
+        let shape = GemmShape::new(64, 64, 64, 1);
+        // Served tenant traffic, anonymous traffic, and quota refusals.
+        for i in 0..4u32 {
+            coord
+                .call_as(TenantId(2), shape, fill_buffer(i, 64 * 64), fill_buffer(i + 3, 64 * 64))
+                .unwrap()
+                .result
+                .unwrap();
+        }
+        coord
+            .call(shape, fill_buffer(9, 64 * 64), fill_buffer(11, 64 * 64))
+            .unwrap()
+            .result
+            .unwrap();
+        for i in 0..3u32 {
+            let ticket = coord.submit_as(
+                TenantId(1),
+                shape,
+                fill_buffer(i, 64 * 64),
+                fill_buffer(i + 5, 64 * 64),
+            );
+            assert!(ticket.rejection().is_some(), "weight-0 tenant must be refused");
+        }
+        let text = coord.metrics_text();
+        let report = coord.stop_detailed();
+        // Shard lanes fold to the report's exact totals.
+        assert_eq!(prom_total(&text, "kernelsel_shard_requests_total", ""), report.total.requests);
+        assert_eq!(prom_total(&text, "kernelsel_shard_batches_total", ""), report.total.batches);
+        assert_eq!(prom_total(&text, "kernelsel_shard_shed_total", ""), report.total.shed);
+        assert_eq!(prom_total(&text, "kernelsel_shard_spilled_total", ""), report.total.spilled);
+        assert_eq!(prom_total(&text, "kernelsel_pool_rejected_total", ""), report.total.rejected);
+        // Tenant lanes agree counter-for-counter.
+        let paying = report.tenants.iter().find(|t| t.name == "paying").unwrap();
+        let blocked = report.tenants.iter().find(|t| t.name == "blocked").unwrap();
+        let lbl = "tenant=\"paying\"";
+        assert_eq!(prom_total(&text, "kernelsel_tenant_requests_total", lbl), paying.requests);
+        assert_eq!(prom_total(&text, "kernelsel_tenant_in_slo_total", lbl), paying.in_slo);
+        assert_eq!(
+            prom_total(&text, "kernelsel_tenant_inflight_peak", lbl),
+            paying.inflight_peak
+        );
+        assert!(paying.inflight_peak >= 1, "served quota traffic must leave a peak");
+        assert_eq!(
+            prom_total(&text, "kernelsel_tenant_rejected_total", "tenant=\"blocked\""),
+            blocked.rejected
+        );
+        assert_eq!(blocked.rejected, 3);
+        assert_eq!(
+            blocked.rejected_by_reason[RejectReason::QuotaExceeded.code() as usize],
+            3,
+            "refusals must land in the quota-exceeded cell"
+        );
+        assert_eq!(
+            prom_total(&text, "kernelsel_tenant_rejected_total", "reason=\"quota-exceeded\""),
+            3
+        );
+        // The selection-quality and trace families are always exposed.
+        assert!(text.contains("kernelsel_selection_regret{domain=\"0\"}"));
+        assert!(text.contains("kernelsel_selector_generation{domain=\"0\"}"));
+        assert!(text.contains("kernelsel_trace_events_total"));
+        // The extended report rendering carries the same split.
+        let summary = report.summary();
+        assert!(summary.contains("quota-exceeded=3/0"), "summary: {summary}");
+        assert!(summary.contains("inflight_peak="), "summary: {summary}");
     }
 }

@@ -1,0 +1,566 @@
+//! Flight recorder: lock-light, preallocated lifecycle tracing for the
+//! executor pool.
+//!
+//! Every request that flows through the pool crosses a fixed set of
+//! lifecycle edges — submit, route, admission verdict, batch drain,
+//! execute, complete/shed/reject — and operating the pool blind to them
+//! makes selection quality an article of faith. The recorder captures
+//! each edge as a fixed-size [`TraceEvent`] written **by value** into one
+//! of a small set of preallocated ring buffers ([`TRACE_STRIPES`] of
+//! them, selected by writer thread), so the warm submit fast path stays
+//! allocation-free with tracing enabled. Writers never block: a stripe
+//! whose mutex is momentarily contended, or whose ring is full, drops
+//! the event and counts the drop instead ([`FlightRecorder::dropped`]).
+//!
+//! Request events are chained by a `seq` id handed out at submit time
+//! ([`FlightRecorder::begin_submit`]); a sampling knob records every Nth
+//! request chain (`sample_every`), while pool-level events (batch
+//! drains, steals, selector swaps) are always recorded with `seq` 0.
+//! Export folds the stripes, sorts by `(t_ns, seq, kind)` and emits
+//! either the `kernelsel-trace-v1` JSON document (validated by
+//! `tools/trace_check.py`) or Chrome Trace Event Format (load it in
+//! `chrome://tracing` / Perfetto).
+//!
+//! Event ordering within one request chain: `submit` (after a successful
+//! resolve) → `route` (the routing decision, spill flagged) → `reject`
+//! (admission refused; terminal) — or, for admitted requests, `batch` /
+//! `steal` at the shard, then per request `execute` and exactly one
+//! terminal `complete` or `shed`. The causality check in
+//! `tools/trace_check.py` enforces exactly that, strictly when
+//! `dropped == 0`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::coordinator::metrics::thread_stripe;
+use crate::dataset::GemmShape;
+use crate::util::json::Json;
+
+/// Independent writer stripes; a writer thread always lands on the same
+/// stripe, so per-thread event order is preserved within a ring.
+const TRACE_STRIPES: usize = 8;
+
+/// Shard value for events recorded off any shard (client-side submit
+/// path, pool-level selector swaps).
+pub const NO_SHARD: u16 = u16::MAX;
+
+/// A lifecycle edge kind. The discriminant order mirrors the lifecycle,
+/// so sorting ties on `(t_ns, seq)` by kind keeps chains readable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum EventKind {
+    /// A request entered the pool (recorded after a successful resolve).
+    /// `a` packs the GEMM shape, `b` is the predicted dispatch cost (ns).
+    Submit = 0,
+    /// The router picked a shard. `a` = 1 when the request spilled off
+    /// its affinity shard, 0 otherwise; `shard` is the chosen shard.
+    Route = 1,
+    /// Admission refused the request (terminal). `a` is the
+    /// [`crate::coordinator::admission::RejectReason`] code, `b` the
+    /// retry-after hint in ns (0 = none).
+    Reject = 2,
+    /// An idle shard stole a ready batch. `shard` is the thief, `a` the
+    /// victim shard, `b` the number of requests transferred.
+    Steal = 3,
+    /// A shard drained one batch for execution. `a` is the batch size,
+    /// `b` the queue age of its oldest request (ns).
+    Batch = 4,
+    /// One request executed. `a` packs the chosen variant (config index
+    /// + 1; 0 = the XLA comparator) in the low 32 bits and the selector
+    /// generation in the high 32; `b` is the predicted cost (ns), `c`
+    /// the measured execution time (ns).
+    Execute = 5,
+    /// A response was delivered (terminal). `a` is the end-to-end
+    /// latency (ns), `b` is 1 when execution succeeded, 0 on failure.
+    Complete = 6,
+    /// The shard shed the request on drain (terminal). `a` is the time
+    /// it sat queued (ns), `b` the budget it overran (ns).
+    Shed = 7,
+    /// A re-tuned selector was hot-swapped in. `a` is the new
+    /// generation, `b` the retune domain index.
+    Swap = 8,
+}
+
+impl EventKind {
+    /// Stable lowercase label used by both export formats.
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Submit => "submit",
+            EventKind::Route => "route",
+            EventKind::Reject => "reject",
+            EventKind::Steal => "steal",
+            EventKind::Batch => "batch",
+            EventKind::Execute => "execute",
+            EventKind::Complete => "complete",
+            EventKind::Shed => "shed",
+            EventKind::Swap => "swap",
+        }
+    }
+}
+
+/// One fixed-size lifecycle event. `Copy`, no heap payload: writing one
+/// into the ring is a plain store, which is what keeps the traced submit
+/// path zero-alloc.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceEvent {
+    /// Nanoseconds since the recorder's epoch (pool start).
+    pub t_ns: u64,
+    /// Request chain id (from [`FlightRecorder::begin_submit`]); 0 for
+    /// pool-level events (batch, steal, swap).
+    pub seq: u64,
+    /// Which lifecycle edge this is.
+    pub kind: EventKind,
+    /// Shard the event happened on ([`NO_SHARD`] for client-side ones).
+    pub shard: u16,
+    /// Tenant attribution (0 = anonymous).
+    pub tenant: u32,
+    /// First kind-specific payload word (see [`EventKind`]).
+    pub a: u64,
+    /// Second kind-specific payload word.
+    pub b: u64,
+    /// Third kind-specific payload word.
+    pub c: u64,
+}
+
+impl TraceEvent {
+    fn zeroed() -> TraceEvent {
+        TraceEvent {
+            t_ns: 0,
+            seq: 0,
+            kind: EventKind::Submit,
+            shard: NO_SHARD,
+            tenant: 0,
+            a: 0,
+            b: 0,
+            c: 0,
+        }
+    }
+}
+
+/// Pack a GEMM shape into one payload word (16 bits per dimension; every
+/// manifest bucket fits). The inverse is [`unpack_shape`].
+pub fn pack_shape(shape: &GemmShape) -> u64 {
+    ((shape.m as u64 & 0xffff) << 48)
+        | ((shape.k as u64 & 0xffff) << 32)
+        | ((shape.n as u64 & 0xffff) << 16)
+        | (shape.batch as u64 & 0xffff)
+}
+
+/// Unpack a [`pack_shape`] payload word back into `(m, k, n, batch)`.
+pub fn unpack_shape(word: u64) -> (usize, usize, usize, usize) {
+    (
+        ((word >> 48) & 0xffff) as usize,
+        ((word >> 32) & 0xffff) as usize,
+        ((word >> 16) & 0xffff) as usize,
+        (word & 0xffff) as usize,
+    )
+}
+
+/// Recorder knobs, set once at pool construction ([`Default`]: 65536
+/// events, every request chain sampled).
+#[derive(Clone, Copy, Debug)]
+pub struct TraceConfig {
+    /// Total preallocated event capacity, split evenly across the writer
+    /// stripes. Past it, new events drop-and-count.
+    pub capacity: usize,
+    /// Record every Nth request chain (1 = all). Pool-level events are
+    /// always recorded.
+    pub sample_every: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> TraceConfig {
+        TraceConfig { capacity: 65536, sample_every: 1 }
+    }
+}
+
+/// One stripe's preallocated ring. `buf` is sized at construction and
+/// never grows; `len` stops at capacity (drop-newest — the head of a
+/// trace matters more than its tail for post-mortems, and dropped counts
+/// are reported in the export header).
+struct EventRing {
+    buf: Vec<TraceEvent>,
+    len: usize,
+}
+
+/// The per-pool flight recorder (see the module docs).
+pub struct FlightRecorder {
+    epoch: Instant,
+    sample_every: u64,
+    /// Submit-chain counter driving the sampling decision.
+    submits: AtomicU64,
+    /// Next chain id; ids start at 1 so 0 can mean "untraced".
+    next_seq: AtomicU64,
+    /// Events dropped (ring full or stripe contended).
+    dropped: AtomicU64,
+    stripes: Vec<Mutex<EventRing>>,
+    /// Highest selector generation seen per retune domain; a raise emits
+    /// a [`EventKind::Swap`] timeline event.
+    generations: Vec<AtomicU64>,
+}
+
+impl FlightRecorder {
+    /// A recorder for a pool with `domains` retune domains.
+    pub fn new(cfg: TraceConfig, domains: usize) -> FlightRecorder {
+        let per_stripe = (cfg.capacity / TRACE_STRIPES).max(16);
+        FlightRecorder {
+            epoch: Instant::now(),
+            sample_every: cfg.sample_every.max(1),
+            submits: AtomicU64::new(0),
+            next_seq: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            stripes: (0..TRACE_STRIPES)
+                .map(|_| {
+                    Mutex::new(EventRing { buf: vec![TraceEvent::zeroed(); per_stripe], len: 0 })
+                })
+                .collect(),
+            generations: (0..domains.max(1)).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Nanoseconds since the recorder epoch (the timestamp domain every
+    /// event uses).
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Start a request chain: returns the chain id to stamp on every
+    /// event of this request, or 0 when the sampling knob skips it (the
+    /// caller then records nothing for the request).
+    pub fn begin_submit(&self) -> u64 {
+        let n = self.submits.fetch_add(1, Ordering::Relaxed);
+        if n % self.sample_every != 0 {
+            return 0;
+        }
+        self.next_seq.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Append one event. Never blocks and never allocates: the writer
+    /// `try_lock`s its home stripe first, probes the others on
+    /// contention (export restores order by timestamp), and only when
+    /// every stripe is contended — or the probed rings are full — drops
+    /// the event and counts it.
+    pub fn record(&self, ev: TraceEvent) {
+        let start = thread_stripe(TRACE_STRIPES);
+        for k in 0..TRACE_STRIPES {
+            if let Ok(mut ring) = self.stripes[(start + k) % TRACE_STRIPES].try_lock() {
+                if ring.len < ring.buf.len() {
+                    let at = ring.len;
+                    ring.buf[at] = ev;
+                    ring.len = at + 1;
+                    return;
+                }
+            }
+        }
+        self.dropped.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Convenience: record a chain event now, with kind-specific payload
+    /// words `[a, b, c]`. No-op when `seq` is 0 for a per-request kind
+    /// (the chain was not sampled), so call sites stay branch-free;
+    /// pool-level kinds (`Steal`, `Batch`, `Swap`) always record.
+    pub fn event(&self, seq: u64, kind: EventKind, shard: u16, tenant: u32, payload: [u64; 3]) {
+        let pool_level =
+            matches!(kind, EventKind::Swap | EventKind::Steal | EventKind::Batch);
+        if seq == 0 && !pool_level {
+            return;
+        }
+        let [a, b, c] = payload;
+        self.record(TraceEvent { t_ns: self.now_ns(), seq, kind, shard, tenant, a, b, c });
+    }
+
+    /// Note the selector generation a just-executed request resolved
+    /// under; a raise over the domain's last seen generation emits one
+    /// [`EventKind::Swap`] timeline event (how hot swaps land on the
+    /// trace without the retuner thread knowing about the recorder).
+    pub fn note_generation(&self, domain: usize, generation: u64) {
+        let Some(slot) = self.generations.get(domain) else { return };
+        let seen = slot.fetch_max(generation, Ordering::Relaxed);
+        if generation > seen {
+            self.event(0, EventKind::Swap, NO_SHARD, 0, generation, domain as u64, 0);
+        }
+    }
+
+    /// Events dropped so far (ring overflow or momentary stripe
+    /// contention). `tools/trace_check.py` relaxes its causality check
+    /// when this is non-zero.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Events currently held across all stripes (folds under the stripe
+    /// mutexes; an export-path cost, not a hot-path one).
+    pub fn recorded(&self) -> usize {
+        self.stripes.iter().map(|s| s.lock().unwrap().len).sum()
+    }
+
+    /// Request chains started (sampled or not) — the sampling
+    /// denominator for the exposition.
+    pub fn chains(&self) -> u64 {
+        self.submits.load(Ordering::Relaxed)
+    }
+
+    /// Fold the stripes into one timeline, sorted by
+    /// `(t_ns, seq, kind)`.
+    pub fn export(&self) -> Vec<TraceEvent> {
+        let mut events = Vec::with_capacity(self.recorded());
+        for stripe in &self.stripes {
+            let ring = stripe.lock().unwrap();
+            events.extend_from_slice(&ring.buf[..ring.len]);
+        }
+        events.sort_by_key(|e| (e.t_ns, e.seq, e.kind));
+        events
+    }
+
+    /// The `kernelsel-trace-v1` document (schema in ARCHITECTURE.md §8;
+    /// validated by `tools/trace_check.py`).
+    pub fn to_json(&self) -> Json {
+        let events: Vec<Json> = self.export().iter().map(event_to_json).collect();
+        Json::obj(vec![
+            ("schema", Json::Str("kernelsel-trace-v1".to_string())),
+            ("sample_every", Json::Num(self.sample_every as f64)),
+            ("dropped", Json::Num(self.dropped() as f64)),
+            ("chains", Json::Num(self.chains() as f64)),
+            ("events", Json::Arr(events)),
+        ])
+    }
+
+    /// The same timeline as Chrome Trace Event Format (open in
+    /// `chrome://tracing` or Perfetto): `execute` spans as `X` duration
+    /// events, everything else as instants, one track per shard.
+    pub fn to_chrome_json(&self) -> Json {
+        let events: Vec<Json> = self.export().iter().map(event_to_chrome).collect();
+        Json::obj(vec![
+            ("traceEvents", Json::Arr(events)),
+            ("displayTimeUnit", Json::Str("ns".to_string())),
+        ])
+    }
+}
+
+fn shard_json(shard: u16) -> Json {
+    if shard == NO_SHARD {
+        Json::Null
+    } else {
+        Json::Num(shard as f64)
+    }
+}
+
+fn event_to_json(ev: &TraceEvent) -> Json {
+    let mut pairs = vec![
+        ("t_ns", Json::Num(ev.t_ns as f64)),
+        ("seq", Json::Num(ev.seq as f64)),
+        ("kind", Json::Str(ev.kind.name().to_string())),
+        ("shard", shard_json(ev.shard)),
+        ("tenant", Json::Num(ev.tenant as f64)),
+    ];
+    match ev.kind {
+        EventKind::Submit => {
+            let (m, k, n, b) = unpack_shape(ev.a);
+            pairs.push(("m", Json::Num(m as f64)));
+            pairs.push(("k", Json::Num(k as f64)));
+            pairs.push(("n", Json::Num(n as f64)));
+            pairs.push(("batch", Json::Num(b as f64)));
+            pairs.push(("cost_ns", Json::Num(ev.b as f64)));
+        }
+        EventKind::Route => {
+            pairs.push(("spilled", Json::Bool(ev.a != 0)));
+        }
+        EventKind::Reject => {
+            pairs.push((
+                "reason",
+                Json::Str(crate::coordinator::admission::RejectReason::by_code(ev.a as u8)
+                    .map(|r| r.name().to_string())
+                    .unwrap_or_else(|| format!("code-{}", ev.a))),
+            ));
+            pairs.push(("retry_after_ns", Json::Num(ev.b as f64)));
+        }
+        EventKind::Steal => {
+            pairs.push(("victim", Json::Num(ev.a as f64)));
+            pairs.push(("requests", Json::Num(ev.b as f64)));
+        }
+        EventKind::Batch => {
+            pairs.push(("size", Json::Num(ev.a as f64)));
+            pairs.push(("oldest_queued_ns", Json::Num(ev.b as f64)));
+        }
+        EventKind::Execute => {
+            let config = (ev.a & 0xffff_ffff) as u32;
+            pairs.push((
+                "config",
+                if config == 0 { Json::Null } else { Json::Num((config - 1) as f64) },
+            ));
+            pairs.push(("generation", Json::Num((ev.a >> 32) as f64)));
+            pairs.push(("predicted_ns", Json::Num(ev.b as f64)));
+            pairs.push(("measured_ns", Json::Num(ev.c as f64)));
+        }
+        EventKind::Complete => {
+            pairs.push(("latency_ns", Json::Num(ev.a as f64)));
+            pairs.push(("ok", Json::Bool(ev.b != 0)));
+        }
+        EventKind::Shed => {
+            pairs.push(("queued_ns", Json::Num(ev.a as f64)));
+            pairs.push(("budget_ns", Json::Num(ev.b as f64)));
+        }
+        EventKind::Swap => {
+            pairs.push(("generation", Json::Num(ev.a as f64)));
+            pairs.push(("domain", Json::Num(ev.b as f64)));
+        }
+    }
+    Json::obj(pairs)
+}
+
+fn event_to_chrome(ev: &TraceEvent) -> Json {
+    // Chrome timestamps are microseconds (f64 keeps sub-us precision).
+    let ts = ev.t_ns as f64 / 1e3;
+    let tid = if ev.shard == NO_SHARD { 999 } else { ev.shard as usize };
+    let mut pairs = vec![
+        ("name", Json::Str(ev.kind.name().to_string())),
+        ("cat", Json::Str("kernelsel".to_string())),
+        ("pid", Json::Num(1.0)),
+        ("tid", Json::Num(tid as f64)),
+        ("args", event_to_json(ev)),
+    ];
+    if ev.kind == EventKind::Execute {
+        pairs.push(("ph", Json::Str("X".to_string())));
+        pairs.push(("ts", Json::Num(ts - ev.c as f64 / 1e3)));
+        pairs.push(("dur", Json::Num(ev.c as f64 / 1e3)));
+    } else {
+        pairs.push(("ph", Json::Str("i".to_string())));
+        pairs.push(("ts", Json::Num(ts)));
+        pairs.push(("s", Json::Str("t".to_string())));
+    }
+    Json::obj(pairs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_packing_roundtrips() {
+        let s = GemmShape::new(512, 784, 512, 3);
+        assert_eq!(unpack_shape(pack_shape(&s)), (512, 784, 512, 3));
+        let max = GemmShape::new(65535, 1, 65535, 65535);
+        assert_eq!(unpack_shape(pack_shape(&max)), (65535, 1, 65535, 65535));
+    }
+
+    #[test]
+    fn sampling_knob_skips_chains() {
+        let rec = FlightRecorder::new(TraceConfig { capacity: 1024, sample_every: 2 }, 1);
+        let seqs: Vec<u64> = (0..6).map(|_| rec.begin_submit()).collect();
+        // Every other chain sampled; sampled ids are dense from 1.
+        assert_eq!(seqs.iter().filter(|&&s| s == 0).count(), 3);
+        let sampled: Vec<u64> = seqs.iter().copied().filter(|&s| s != 0).collect();
+        assert_eq!(sampled, vec![1, 2, 3]);
+        assert_eq!(rec.chains(), 6);
+    }
+
+    #[test]
+    fn ring_overflow_drops_and_counts() {
+        // Tiny capacity: 16 events per stripe minimum, 8 stripes. A
+        // writer whose home ring fills probes the others, so the whole
+        // 128-event budget is usable; past it, events drop-and-count.
+        let rec = FlightRecorder::new(TraceConfig { capacity: 0, sample_every: 1 }, 1);
+        for i in 0..140u64 {
+            rec.event(i + 1, EventKind::Submit, NO_SHARD, 0, [0, 0, 0]);
+        }
+        assert_eq!(rec.recorded(), 128);
+        assert_eq!(rec.dropped(), 12);
+    }
+
+    #[test]
+    fn export_sorts_by_time_then_seq() {
+        let rec = FlightRecorder::new(TraceConfig::default(), 1);
+        let seq = rec.begin_submit();
+        let payload = [pack_shape(&GemmShape::new(8, 8, 8, 1)), 100, 0];
+        rec.event(seq, EventKind::Submit, NO_SHARD, 7, payload);
+        rec.event(seq, EventKind::Route, 1, 7, [0, 0, 0]);
+        rec.event(seq, EventKind::Complete, 1, 7, [5000, 1, 0]);
+        let events = rec.export();
+        assert_eq!(events.len(), 3);
+        assert!(events.windows(2).all(|w| w[0].t_ns <= w[1].t_ns));
+        assert_eq!(events[0].kind, EventKind::Submit);
+        assert_eq!(events[2].kind, EventKind::Complete);
+    }
+
+    #[test]
+    fn generation_notes_emit_one_swap_event_per_raise() {
+        let rec = FlightRecorder::new(TraceConfig::default(), 2);
+        rec.note_generation(0, 0); // boot generation: no event
+        rec.note_generation(0, 1); // raise: swap event
+        rec.note_generation(0, 1); // repeat: no event
+        rec.note_generation(1, 3); // other domain: swap event
+        rec.note_generation(9, 9); // unknown domain: ignored
+        let swaps: Vec<&TraceEvent> =
+            rec.export().iter().filter(|e| e.kind == EventKind::Swap).collect::<Vec<_>>();
+        assert_eq!(swaps.len(), 2);
+        assert_eq!((swaps[0].a, swaps[0].b), (1, 0));
+        assert_eq!((swaps[1].a, swaps[1].b), (3, 1));
+    }
+
+    #[test]
+    fn json_export_carries_schema_and_kind_fields() {
+        let rec = FlightRecorder::new(TraceConfig::default(), 1);
+        let seq = rec.begin_submit();
+        let shape = GemmShape::new(64, 32, 16, 2);
+        rec.event(seq, EventKind::Submit, NO_SHARD, 3, [pack_shape(&shape), 1234, 0]);
+        rec.event(seq, EventKind::Reject, NO_SHARD, 3, [2, 1000, 0]);
+        let doc = rec.to_json();
+        assert_eq!(doc.get("schema").and_then(|s| s.as_str()), Some("kernelsel-trace-v1"));
+        assert_eq!(doc.get("dropped").and_then(|d| d.as_usize()), Some(0));
+        let events = doc.get("events").and_then(|e| e.as_arr()).unwrap();
+        assert_eq!(events.len(), 2);
+        let submit = &events[0];
+        assert_eq!(submit.get("kind").and_then(|k| k.as_str()), Some("submit"));
+        assert_eq!(submit.get("m").and_then(|v| v.as_usize()), Some(64));
+        assert_eq!(submit.get("batch").and_then(|v| v.as_usize()), Some(2));
+        assert!(submit.get("shard").unwrap().is_null());
+        let reject = &events[1];
+        assert_eq!(reject.get("reason").and_then(|r| r.as_str()), Some("quota-exceeded"));
+        assert_eq!(reject.get("retry_after_ns").and_then(|v| v.as_usize()), Some(1000));
+    }
+
+    #[test]
+    fn chrome_export_is_a_trace_events_document() {
+        let rec = FlightRecorder::new(TraceConfig::default(), 1);
+        let seq = rec.begin_submit();
+        rec.event(seq, EventKind::Execute, 0, 0, [(2 << 32) | 5, 100, 2000]);
+        rec.event(seq, EventKind::Complete, 0, 0, [9000, 1, 0]);
+        let doc = rec.to_chrome_json();
+        let events = doc.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+        assert_eq!(events.len(), 2);
+        let exec = &events[0];
+        assert_eq!(exec.get("ph").and_then(|p| p.as_str()), Some("X"));
+        assert_eq!(exec.get("dur").and_then(|d| d.as_f64()), Some(2.0));
+        assert_eq!(exec.path(&["args", "config"]).and_then(|c| c.as_usize()), Some(4));
+        assert_eq!(exec.path(&["args", "generation"]).and_then(|g| g.as_usize()), Some(2));
+        assert_eq!(events[1].get("ph").and_then(|p| p.as_str()), Some("i"));
+    }
+
+    #[test]
+    fn concurrent_writers_lose_nothing_with_headroom() {
+        let rec = std::sync::Arc::new(FlightRecorder::new(
+            TraceConfig { capacity: 65536, sample_every: 1 },
+            1,
+        ));
+        let mut joins = Vec::new();
+        for t in 0..4u32 {
+            let rec = rec.clone();
+            joins.push(std::thread::spawn(move || {
+                for i in 0..500u64 {
+                    let seq = rec.begin_submit();
+                    rec.event(seq, EventKind::Submit, NO_SHARD, t, [i, 0, 0]);
+                    rec.event(seq, EventKind::Complete, 0, t, [i, 1, 0]);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        // Distinct threads write distinct stripes: nothing contends, so
+        // nothing drops (each stripe holds 8192 >= 1000 events).
+        assert_eq!(rec.dropped(), 0);
+        assert_eq!(rec.recorded(), 4000);
+        assert_eq!(rec.chains(), 2000);
+    }
+}

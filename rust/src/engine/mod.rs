@@ -76,7 +76,9 @@ pub trait Backend {
     ) -> Result<Vec<f32>, String>;
 
     /// Execute one GEMM and report its measured execution time in seconds
-    /// — the telemetry signal online retuning learns from. The default
+    /// — the telemetry signal online retuning learns from, and the
+    /// `measured_ns` the flight recorder stamps on `execute` trace events
+    /// (against the predictor's `predicted_ns`). The default
     /// wraps [`Backend::execute`] in a wall clock; the SimBackend
     /// overrides it to report the analytical model's device time (its
     /// host GEMM wall time says nothing about the simulated kernel).

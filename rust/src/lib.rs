@@ -27,14 +27,13 @@
 //! measured data and hot-swaps the selector without pausing traffic.
 
 // Every public item must carry rustdoc. The serving-stack modules
-// (`coordinator`, `tuning`, `engine`, `runtime`) and the data substrate
-// (`dataset`, `devsim`) are fully documented and gated; the remaining modules below
-// carry an explicit module-level `allow` until their own documentation
-// pass lands (ROADMAP item) — the allows are the worklist, not an
-// exemption.
+// (`coordinator`, `tuning`, `engine`, `runtime`), the data substrate
+// (`dataset`, `devsim`) and the ML stack (`classify`, `ml`) are fully
+// documented and gated; the remaining modules below carry an explicit
+// module-level `allow` until their own documentation pass lands
+// (ROADMAP item) — the allows are the worklist, not an exemption.
 #![warn(missing_docs)]
 
-#[allow(missing_docs)]
 pub mod classify;
 pub mod coordinator;
 pub mod dataset;
@@ -44,7 +43,6 @@ pub mod engine;
 pub mod experiments;
 #[allow(missing_docs)]
 pub mod linalg;
-#[allow(missing_docs)]
 pub mod ml;
 pub mod runtime;
 #[allow(missing_docs)]

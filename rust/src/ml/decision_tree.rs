@@ -10,15 +10,20 @@
 use crate::linalg::Matrix;
 use crate::util::Rng;
 
+/// Growth limits shared by both tree kinds (CART stopping rules).
 #[derive(Clone, Debug)]
 pub struct TreeParams {
+    /// Maximum tree depth; `None` = unlimited.
     pub max_depth: Option<usize>,
+    /// Minimum training samples a split may leave on either side.
     pub min_samples_leaf: usize,
+    /// Minimum samples a node needs before a split is even attempted.
     pub min_samples_split: usize,
     /// Max leaf count (regressor-as-clusterer); None = unlimited.
     pub max_leaves: Option<usize>,
     /// Features considered per split; None = all (set for forests).
     pub max_features: Option<usize>,
+    /// Seed for the per-split feature subsampling.
     pub seed: u64,
 }
 
@@ -38,7 +43,17 @@ impl Default for TreeParams {
 /// Tree nodes in a flat arena.
 #[derive(Clone, Debug)]
 pub enum Node {
-    Split { feature: usize, threshold: f64, left: usize, right: usize },
+    /// Internal split: `x[feature] <= threshold` goes left, else right.
+    Split {
+        /// Feature column the split tests.
+        feature: usize,
+        /// Split threshold (midpoint between adjacent sorted values).
+        threshold: f64,
+        /// Arena index of the `<=` subtree.
+        left: usize,
+        /// Arena index of the `>` subtree.
+        right: usize,
+    },
     /// Leaf payload index (into `leaf_values` / `leaf_counts`).
     Leaf { payload: usize },
 }
@@ -99,13 +114,17 @@ fn feature_subset(n_features: usize, params: &TreeParams, rng: &mut Rng) -> Vec<
 // Multi-output regressor.
 // ---------------------------------------------------------------------------
 
+/// Multi-output CART regressor; with `max_leaves` bounded it doubles as
+/// the paper's decision-tree clustering device (§4.1.5).
 #[derive(Clone, Debug)]
 pub struct TreeRegressor {
+    /// Flat node arena; index 0 is the root.
     pub nodes: Vec<Node>,
     /// Mean target vector per leaf.
     pub leaf_values: Vec<Vec<f64>>,
     /// Training samples captured by each leaf.
     pub leaf_members: Vec<Vec<usize>>,
+    /// Feature count the tree was fitted on.
     pub n_features: usize,
 }
 
@@ -296,14 +315,17 @@ impl TreeRegressor {
         }
     }
 
+    /// Mean target vector of the leaf `row` lands in.
     pub fn predict(&self, row: &[f64]) -> &[f64] {
         &self.leaf_values[self.apply(row)]
     }
 
+    /// Number of leaves (= clusters when used as a clustering device).
     pub fn n_leaves(&self) -> usize {
         self.leaf_values.len()
     }
 
+    /// Longest root-to-leaf path, in splits.
     pub fn depth(&self) -> usize {
         fn walk(nodes: &[Node], id: usize) -> usize {
             match &nodes[id] {
@@ -346,16 +368,22 @@ fn variance_reduction(y: &Matrix, sorted: &[usize], pos: usize) -> f64 {
 // Classifier.
 // ---------------------------------------------------------------------------
 
+/// Gini-impurity CART classifier — the runtime kernel selector of §5.1
+/// (decision trees A/B/C) and the base learner of the random forest.
 #[derive(Clone, Debug)]
 pub struct TreeClassifier {
+    /// Flat node arena; index 0 is the root.
     pub nodes: Vec<Node>,
     /// Class-count histogram per leaf.
     pub leaf_counts: Vec<Vec<usize>>,
+    /// Number of distinct class labels seen in training.
     pub n_classes: usize,
+    /// Feature count the tree was fitted on.
     pub n_features: usize,
 }
 
 impl TreeClassifier {
+    /// Fit on features `x` (n x d) and class labels `y` (one per row).
     pub fn fit(x: &Matrix, y: &[usize], params: &TreeParams) -> TreeClassifier {
         assert_eq!(x.rows, y.len());
         assert!(x.rows > 0, "empty training set");
@@ -434,6 +462,7 @@ impl TreeClassifier {
         }
     }
 
+    /// Majority class of the leaf `row` lands in (last-max tie-break).
     pub fn predict(&self, row: &[f64]) -> usize {
         let counts = self.leaf(row);
         counts
@@ -444,6 +473,7 @@ impl TreeClassifier {
             .unwrap()
     }
 
+    /// Class-count histogram of the leaf `row` lands in.
     pub fn leaf(&self, row: &[f64]) -> &[usize] {
         let mut node = 0usize;
         loop {
@@ -456,6 +486,7 @@ impl TreeClassifier {
         }
     }
 
+    /// Longest root-to-leaf path, in splits.
     pub fn depth(&self) -> usize {
         fn walk(nodes: &[Node], id: usize) -> usize {
             match &nodes[id] {
@@ -470,6 +501,7 @@ impl TreeClassifier {
         }
     }
 
+    /// Number of leaves.
     pub fn n_leaves(&self) -> usize {
         self.leaf_counts.len()
     }
@@ -552,6 +584,7 @@ impl FlatTree {
         }
     }
 
+    /// Number of nodes (splits + leaves) in the flattened table.
     pub fn n_nodes(&self) -> usize {
         self.feat.len()
     }

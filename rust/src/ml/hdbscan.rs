@@ -12,24 +12,31 @@
 
 use crate::linalg::{euclidean, Matrix};
 
+/// Label assigned to points that belong to no cluster.
 pub const NOISE: isize = -1;
 
+/// HDBSCAN hyperparameters.
 #[derive(Clone, Debug)]
 pub struct HdbscanParams {
+    /// Smallest group that may survive condensation as a cluster.
     pub min_cluster_size: usize,
+    /// Neighbor count defining the core distance (density smoothing).
     pub min_samples: usize,
 }
 
 impl HdbscanParams {
+    /// Bundle the two hyperparameters.
     pub fn new(min_cluster_size: usize, min_samples: usize) -> Self {
         HdbscanParams { min_cluster_size, min_samples }
     }
 }
 
+/// HDBSCAN fit result.
 #[derive(Clone, Debug)]
 pub struct Hdbscan {
     /// Per-point labels: 0..n_clusters, or NOISE.
     pub labels: Vec<isize>,
+    /// Number of clusters extracted (noise excluded).
     pub n_clusters: usize,
     /// Stability score per extracted cluster.
     pub stabilities: Vec<f64>,

@@ -3,27 +3,39 @@
 use crate::linalg::{sq_dist, Matrix};
 use crate::util::Rng;
 
+/// K-means fit result (the best of the restarts).
 #[derive(Clone, Debug)]
 pub struct KMeans {
+    /// Cluster centers, one per row (k x d).
     pub centroids: Matrix,
+    /// Nearest-centroid assignment per training row.
     pub labels: Vec<usize>,
+    /// Sum of squared distances to the assigned centroids.
     pub inertia: f64,
+    /// Lloyd iterations the winning restart ran.
     pub iterations: usize,
 }
 
+/// K-means hyperparameters.
 #[derive(Clone, Debug)]
 pub struct KMeansParams {
+    /// Number of clusters.
     pub k: usize,
+    /// Lloyd iteration cap per restart.
     pub max_iter: usize,
+    /// Independent k-means++ restarts; the lowest-inertia fit wins.
     pub n_init: usize,
+    /// Base RNG seed (each restart forks from it).
     pub seed: u64,
 }
 
 impl KMeansParams {
+    /// Defaults for `k` clusters: 300 iterations, 8 restarts, seed 0.
     pub fn new(k: usize) -> Self {
         KMeansParams { k, max_iter: 300, n_init: 8, seed: 0 }
     }
 
+    /// Builder-style seed override.
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self

@@ -2,15 +2,19 @@
 
 use crate::linalg::{sq_dist, Matrix};
 
+/// k-NN classifier: memorizes the training set, votes at query time.
 #[derive(Clone, Debug)]
 pub struct Knn {
     x: Matrix,
     y: Vec<usize>,
+    /// Neighbors consulted per query.
     pub k: usize,
+    /// Number of distinct class labels seen in training.
     pub n_classes: usize,
 }
 
 impl Knn {
+    /// Store the training set; `k` must be in `1..=x.rows`.
     pub fn fit(x: &Matrix, y: &[usize], k: usize) -> Knn {
         assert_eq!(x.rows, y.len());
         assert!(k >= 1 && k <= x.rows, "k={} for {} samples", k, x.rows);

@@ -7,13 +7,20 @@
 use crate::linalg::Matrix;
 use crate::util::Rng;
 
+/// MLP hyperparameters (defaults mirror scikit-learn's `MLPClassifier`).
 #[derive(Clone, Debug)]
 pub struct MlpParams {
+    /// Hidden-layer width.
     pub hidden: usize,
+    /// Full passes over the training set.
     pub epochs: usize,
+    /// Mini-batch size for Adam updates.
     pub batch_size: usize,
+    /// Adam learning rate.
     pub lr: f64,
+    /// L2 weight-decay coefficient.
     pub l2: f64,
+    /// Seed for init and batch shuffling.
     pub seed: u64,
 }
 
@@ -23,12 +30,14 @@ impl Default for MlpParams {
     }
 }
 
+/// Trained one-hidden-layer perceptron (ReLU + softmax).
 #[derive(Clone, Debug)]
 pub struct Mlp {
     w1: Matrix, // (d x h)
     b1: Vec<f64>,
     w2: Matrix, // (h x c)
     b2: Vec<f64>,
+    /// Number of distinct class labels seen in training.
     pub n_classes: usize,
 }
 
@@ -61,6 +70,7 @@ impl Adam {
 }
 
 impl Mlp {
+    /// Train with mini-batch Adam on softmax cross-entropy.
     pub fn fit(x: &Matrix, y: &[usize], params: &MlpParams) -> Mlp {
         assert_eq!(x.rows, y.len());
         let d = x.cols;
@@ -168,11 +178,13 @@ impl Mlp {
         net
     }
 
+    /// Most probable class for one feature row.
     pub fn predict(&self, row: &[f64]) -> usize {
         let probs = self.predict_proba(row);
         crate::linalg::stats::argmax(&probs)
     }
 
+    /// Softmax class probabilities for one feature row.
     pub fn predict_proba(&self, row: &[f64]) -> Vec<f64> {
         let h = self.b1.len();
         let c = self.b2.len();

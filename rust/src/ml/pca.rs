@@ -6,6 +6,7 @@
 
 use crate::linalg::{eigh, Matrix};
 
+/// Fitted PCA basis.
 #[derive(Clone, Debug)]
 pub struct Pca {
     /// Per-feature mean of the training data.
@@ -93,6 +94,7 @@ impl Pca {
         }
     }
 
+    /// Number of principal axes actually kept.
     pub fn n_components(&self) -> usize {
         self.components.rows
     }

@@ -5,13 +5,18 @@ use crate::linalg::Matrix;
 use crate::ml::decision_tree::{TreeClassifier, TreeParams};
 use crate::util::Rng;
 
+/// Random-forest hyperparameters.
 #[derive(Clone, Debug)]
 pub struct ForestParams {
+    /// Trees in the ensemble.
     pub n_trees: usize,
+    /// Per-tree depth cap; `None` = unlimited.
     pub max_depth: Option<usize>,
+    /// Minimum samples per leaf in each tree.
     pub min_samples_leaf: usize,
     /// Features per split; None = floor(sqrt(d)).
     pub max_features: Option<usize>,
+    /// Base seed; each tree's bootstrap and splits fork from it.
     pub seed: u64,
 }
 
@@ -27,13 +32,17 @@ impl Default for ForestParams {
     }
 }
 
+/// Bagged ensemble of Gini CART trees.
 #[derive(Clone, Debug)]
 pub struct RandomForest {
+    /// The fitted trees, each on its own bootstrap sample.
     pub trees: Vec<TreeClassifier>,
+    /// Number of distinct class labels seen in training.
     pub n_classes: usize,
 }
 
 impl RandomForest {
+    /// Fit `n_trees` trees on bootstrap resamples of `(x, y)`.
     pub fn fit(x: &Matrix, y: &[usize], params: &ForestParams) -> RandomForest {
         assert_eq!(x.rows, y.len());
         let n_classes = y.iter().max().copied().unwrap_or(0) + 1;
@@ -61,6 +70,7 @@ impl RandomForest {
         RandomForest { trees, n_classes }
     }
 
+    /// Majority vote across the ensemble.
     pub fn predict(&self, row: &[f64]) -> usize {
         let mut votes = vec![0usize; self.n_classes];
         for tree in &self.trees {

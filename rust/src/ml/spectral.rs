@@ -4,27 +4,34 @@
 use crate::linalg::{eigen::smallest_eigvec_embedding, sq_dist, Matrix};
 use crate::ml::kmeans::{kmeans, KMeansParams};
 
+/// Spectral-clustering hyperparameters.
 #[derive(Clone, Debug)]
 pub struct SpectralParams {
+    /// Number of clusters (and embedding dimensions).
     pub k: usize,
     /// RBF width; if `None`, uses the median heuristic (1 / median sq-dist).
     pub gamma: Option<f64>,
+    /// Seed for the k-means stage on the embedding.
     pub seed: u64,
 }
 
 impl SpectralParams {
+    /// Defaults for `k` clusters: self-tuned gamma, seed 0.
     pub fn new(k: usize) -> Self {
         SpectralParams { k, gamma: None, seed: 0 }
     }
 
+    /// Builder-style seed override.
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self
     }
 }
 
+/// Spectral-clustering fit result.
 #[derive(Clone, Debug)]
 pub struct Spectral {
+    /// Cluster assignment per input row.
     pub labels: Vec<usize>,
     /// The spectral embedding rows that were clustered (n x k).
     pub embedding: Matrix,

@@ -4,8 +4,10 @@
 use crate::linalg::{dot, sq_dist, Matrix};
 use crate::util::Rng;
 
+/// SVM kernel function.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Kernel {
+    /// Plain dot product.
     Linear,
     /// RBF with bandwidth gamma.
     Rbf(f64),
@@ -21,12 +23,18 @@ impl Kernel {
     }
 }
 
+/// SVM hyperparameters (simplified-SMO training knobs).
 #[derive(Clone, Debug)]
 pub struct SvmParams {
+    /// Kernel function.
     pub kernel: Kernel,
+    /// Soft-margin penalty C.
     pub c: f64,
+    /// KKT violation tolerance.
     pub tol: f64,
+    /// Passes without an alpha change before SMO stops.
     pub max_passes: usize,
+    /// Seed for SMO's random second-multiplier choice.
     pub seed: u64,
 }
 
@@ -163,10 +171,12 @@ impl BinarySvm {
 #[derive(Clone, Debug)]
 pub struct Svm {
     machines: Vec<BinarySvm>,
+    /// Number of distinct class labels seen in training.
     pub n_classes: usize,
 }
 
 impl Svm {
+    /// Train one binary machine per class (one-vs-rest).
     pub fn fit(x: &Matrix, y: &[usize], params: &SvmParams) -> Svm {
         assert_eq!(x.rows, y.len());
         let n_classes = y.iter().max().copied().unwrap_or(0) + 1;
@@ -182,6 +192,7 @@ impl Svm {
         Svm { machines, n_classes }
     }
 
+    /// Class whose machine reports the largest decision value.
     pub fn predict(&self, row: &[f64]) -> usize {
         let mut best = 0usize;
         let mut best_score = f64::NEG_INFINITY;

@@ -20,13 +20,18 @@
 //!   [`retuner::retune_once`] step it (and benches) drive.
 //! * [`swap`] — the generation-counted selector handle and the shared
 //!   swap-then-invalidate deployment path.
+//! * [`regret`] — the online selection-quality estimator: counterfactual
+//!   chosen-vs-best-measured regret per shape, geomean'd per domain and
+//!   EWMA-smoothed into the metrics exposition's gauge.
 
 pub mod drift;
+pub mod regret;
 pub mod retuner;
 pub mod swap;
 pub mod telemetry;
 
 pub use drift::{evaluate_drift, ConfigDrift, DriftReport};
+pub use regret::{evaluate_regret, RegretEstimator, RegretReport, ShapeRegret};
 pub use retuner::{
     live_dataset, retune_once, RetuneConfig, RetuneOutcome, Retuner, RetunerStats,
 };

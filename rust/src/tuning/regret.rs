@@ -1,0 +1,315 @@
+//! Online selection-quality estimation: counterfactual regret of the
+//! deployed selector against the best *measured* variant per shape.
+//!
+//! The paper's claim is that the trained classifier picks near-optimal
+//! kernels; offline, the benches check it against an oracle. This module
+//! makes the same quantity an online, operator-visible signal: for every
+//! shape bucket where telemetry has measured at least two variants, the
+//! regret ratio is
+//!
+//! ```text
+//! ratio(shape) = ewma_secs(shape, chosen) / min over measured configs c
+//!                of ewma_secs(shape, c)
+//! ```
+//!
+//! where `chosen` is what the registry's *current* selector deployment
+//! resolves the shape to. The per-domain figure is the geometric mean of
+//! the per-shape ratios (1.0 = every selection is the measured best;
+//! 1.30 = selections cost 30% over the best measured variant on
+//! average), smoothed over successive evaluations by a
+//! [`RegretEstimator`] EWMA so the exposition gauge doesn't jitter with
+//! every telemetry refresh. Both feed the
+//! `kernelsel_selection_regret{domain=..}` family in
+//! `Coordinator::metrics_text()`.
+//!
+//! This is *counterfactual* only over variants traffic has actually
+//! measured — a selector stuck on the sole measured variant of a shape
+//! scores no regret there (the cell is excluded until a second variant
+//! is measured), which is exactly the exploration gap the ROADMAP's
+//! autotune item is about.
+
+use crate::coordinator::registry::KernelRegistry;
+use crate::dataset::GemmShape;
+use crate::tuning::telemetry::TelemetrySnapshot;
+
+/// Per-shape counterfactual regret (see the module docs).
+#[derive(Clone, Debug)]
+pub struct ShapeRegret {
+    /// The shape bucket.
+    pub shape: GemmShape,
+    /// The config the current deployment resolves the shape to
+    /// (`None` = the XLA comparator artifact).
+    pub chosen: Option<usize>,
+    /// Measured EWMA seconds of the chosen variant.
+    pub chosen_secs: f64,
+    /// The best measured variant at this shape.
+    pub best: Option<usize>,
+    /// Measured EWMA seconds of the best variant.
+    pub best_secs: f64,
+    /// `chosen_secs / best_secs` — 1.0 when the selection is the
+    /// measured best (the chosen cell participates in the minimum, so
+    /// the ratio is never below 1).
+    pub ratio: f64,
+}
+
+/// One evaluation of the deployed selector against measured telemetry.
+#[derive(Clone, Debug, Default)]
+pub struct RegretReport {
+    /// Per-shape ratios, in the snapshot's deterministic shape order.
+    pub per_shape: Vec<ShapeRegret>,
+    /// Geometric mean of the per-shape ratios (1.0 when no shape
+    /// qualifies).
+    pub geomean: f64,
+    /// Shapes with >= 2 sufficiently-sampled measured variants (the
+    /// counterfactual's denominator pool).
+    pub comparable_shapes: usize,
+    /// Comparable shapes skipped because the *chosen* variant has no
+    /// measured cell yet (nothing to score the selection against).
+    pub unscored_shapes: usize,
+}
+
+impl RegretReport {
+    /// The single worst-scored shape, if any shape was scored.
+    pub fn worst(&self) -> Option<&ShapeRegret> {
+        self.per_shape.iter().max_by(|x, y| x.ratio.total_cmp(&y.ratio))
+    }
+}
+
+/// Score the registry's current selector deployment against a telemetry
+/// snapshot. Only cells with at least `min_cell_samples` samples count
+/// as measured; shapes with fewer than two such variants are skipped
+/// (no counterfactual exists).
+pub fn evaluate_regret(
+    snapshot: &TelemetrySnapshot,
+    registry: &KernelRegistry,
+    min_cell_samples: u64,
+) -> RegretReport {
+    let mut report = RegretReport::default();
+    let mut shapes: Vec<GemmShape> = snapshot
+        .cells
+        .iter()
+        .filter(|c| c.count >= min_cell_samples)
+        .map(|c| c.shape)
+        .collect();
+    shapes.sort_by_key(|s| (s.m, s.k, s.n, s.batch));
+    shapes.dedup();
+    let mut log_sum = 0.0f64;
+    for shape in shapes {
+        let measured: Vec<(Option<usize>, f64)> = snapshot
+            .cells
+            .iter()
+            .filter(|c| c.shape == shape && c.count >= min_cell_samples)
+            .map(|c| (c.config, c.ewma_secs))
+            .collect();
+        if measured.len() < 2 {
+            continue; // one variant measured: no counterfactual
+        }
+        report.comparable_shapes += 1;
+        let chosen = match registry.resolve(&shape) {
+            Ok((meta, _, _)) => meta.config_index,
+            Err(_) => {
+                report.unscored_shapes += 1;
+                continue;
+            }
+        };
+        let Some(&(_, chosen_secs)) = measured.iter().find(|(c, _)| *c == chosen) else {
+            report.unscored_shapes += 1;
+            continue;
+        };
+        let &(best, best_secs) = measured
+            .iter()
+            .min_by(|x, y| x.1.total_cmp(&y.1))
+            .expect("measured has >= 2 entries");
+        let ratio = (chosen_secs / best_secs).max(1.0);
+        log_sum += ratio.ln();
+        report.per_shape.push(ShapeRegret {
+            shape,
+            chosen,
+            chosen_secs,
+            best,
+            best_secs,
+            ratio,
+        });
+    }
+    report.geomean = if report.per_shape.is_empty() {
+        1.0
+    } else {
+        (log_sum / report.per_shape.len() as f64).exp()
+    };
+    report
+}
+
+/// Smooths successive [`RegretReport`] geomeans into a stable gauge
+/// (exponentially weighted, like the telemetry cells themselves).
+#[derive(Clone, Debug)]
+pub struct RegretEstimator {
+    alpha: f64,
+    ewma: Option<f64>,
+    evaluations: u64,
+}
+
+impl Default for RegretEstimator {
+    fn default() -> RegretEstimator {
+        RegretEstimator::new(0.25)
+    }
+}
+
+impl RegretEstimator {
+    /// An estimator with EWMA smoothing factor `alpha` in (0, 1]
+    /// (1.0 = last evaluation wins).
+    pub fn new(alpha: f64) -> RegretEstimator {
+        RegretEstimator { alpha: alpha.clamp(0.01, 1.0), ewma: None, evaluations: 0 }
+    }
+
+    /// Fold one evaluation in and return the smoothed gauge. Reports
+    /// that scored no shape leave the gauge unchanged (an empty
+    /// telemetry window says nothing about selection quality).
+    pub fn observe(&mut self, report: &RegretReport) -> f64 {
+        if !report.per_shape.is_empty() {
+            self.evaluations += 1;
+            self.ewma = Some(match self.ewma {
+                None => report.geomean,
+                Some(prev) => self.alpha * report.geomean + (1.0 - self.alpha) * prev,
+            });
+        }
+        self.value()
+    }
+
+    /// The smoothed regret gauge; 1.0 until the first scored report.
+    pub fn value(&self) -> f64 {
+        self.ewma.unwrap_or(1.0)
+    }
+
+    /// Reports folded in so far (the exposition's confidence hint).
+    pub fn evaluations(&self) -> u64 {
+        self.evaluations
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::selector::SelectorPolicy;
+    use crate::runtime::Manifest;
+    use crate::tuning::telemetry::TelemetrySink;
+
+    fn sink() -> TelemetrySink {
+        TelemetrySink::new(1, 1.0)
+    }
+
+    #[test]
+    fn empty_snapshot_scores_no_regret() {
+        let reg = KernelRegistry::new(Manifest::synthetic(), SelectorPolicy::Xla);
+        let report = evaluate_regret(&TelemetrySnapshot::default(), &reg, 1);
+        assert_eq!(report.geomean, 1.0);
+        assert_eq!(report.comparable_shapes, 0);
+        assert!(report.per_shape.is_empty());
+        assert!(report.worst().is_none());
+    }
+
+    #[test]
+    fn regret_is_the_chosen_over_best_ratio() {
+        // The Xla policy resolves every synthetic bucket to the None
+        // config. Measure None at 2ms and a concrete config at 1ms: the
+        // chosen variant costs 2x the best measured one.
+        let reg = KernelRegistry::new(Manifest::synthetic(), SelectorPolicy::Xla);
+        let shape = GemmShape::new(128, 128, 128, 1);
+        let telemetry = sink();
+        telemetry.record(shape, None, 2e-3);
+        telemetry.record(shape, Some(3), 1e-3);
+        let report = evaluate_regret(&telemetry.snapshot(), &reg, 1);
+        assert_eq!(report.comparable_shapes, 1);
+        assert_eq!(report.per_shape.len(), 1);
+        let sr = &report.per_shape[0];
+        assert_eq!(sr.chosen, None);
+        assert_eq!(sr.best, Some(3));
+        assert!((sr.ratio - 2.0).abs() < 1e-9, "ratio {}", sr.ratio);
+        assert!((report.geomean - 2.0).abs() < 1e-9);
+        assert_eq!(report.worst().unwrap().shape, shape);
+    }
+
+    #[test]
+    fn optimal_selection_scores_one() {
+        let reg = KernelRegistry::new(Manifest::synthetic(), SelectorPolicy::Xla);
+        let shape = GemmShape::new(64, 64, 64, 1);
+        let telemetry = sink();
+        telemetry.record(shape, None, 1e-3); // chosen == measured best
+        telemetry.record(shape, Some(5), 4e-3);
+        let report = evaluate_regret(&telemetry.snapshot(), &reg, 1);
+        assert_eq!(report.per_shape.len(), 1);
+        assert_eq!(report.per_shape[0].ratio, 1.0);
+        assert_eq!(report.geomean, 1.0);
+    }
+
+    #[test]
+    fn single_variant_and_undersampled_cells_are_skipped() {
+        let reg = KernelRegistry::new(Manifest::synthetic(), SelectorPolicy::Xla);
+        let shape = GemmShape::new(32, 32, 32, 1);
+        let telemetry = TelemetrySink::new(1, 1.0);
+        telemetry.record(shape, None, 1e-3); // only one variant measured
+        let report = evaluate_regret(&telemetry.snapshot(), &reg, 1);
+        assert_eq!(report.comparable_shapes, 0);
+        assert!(report.per_shape.is_empty());
+        // A second variant below the sample floor still doesn't count.
+        telemetry.record(shape, Some(2), 5e-4);
+        let report = evaluate_regret(&telemetry.snapshot(), &reg, 2);
+        assert_eq!(report.comparable_shapes, 0);
+    }
+
+    #[test]
+    fn unmeasured_chosen_variant_is_reported_unscored() {
+        // Two concrete configs measured, but the Xla policy's choice
+        // (None) has no cell: comparable, yet unscorable.
+        let reg = KernelRegistry::new(Manifest::synthetic(), SelectorPolicy::Xla);
+        let shape = GemmShape::new(64, 64, 64, 1);
+        let telemetry = sink();
+        telemetry.record(shape, Some(1), 1e-3);
+        telemetry.record(shape, Some(2), 2e-3);
+        let report = evaluate_regret(&telemetry.snapshot(), &reg, 1);
+        assert_eq!(report.comparable_shapes, 1);
+        assert_eq!(report.unscored_shapes, 1);
+        assert!(report.per_shape.is_empty());
+        assert_eq!(report.geomean, 1.0);
+    }
+
+    #[test]
+    fn geomean_folds_across_shapes() {
+        let reg = KernelRegistry::new(Manifest::synthetic(), SelectorPolicy::Xla);
+        let a = GemmShape::new(32, 32, 32, 1);
+        let b = GemmShape::new(64, 64, 64, 1);
+        let telemetry = sink();
+        telemetry.record(a, None, 4e-3); // ratio 4
+        telemetry.record(a, Some(1), 1e-3);
+        telemetry.record(b, None, 1e-3); // ratio 1
+        telemetry.record(b, Some(1), 1e-3);
+        let report = evaluate_regret(&telemetry.snapshot(), &reg, 1);
+        assert_eq!(report.per_shape.len(), 2);
+        assert!((report.geomean - 2.0).abs() < 1e-9, "sqrt(4 * 1) = 2");
+    }
+
+    #[test]
+    fn estimator_smooths_and_ignores_empty_reports() {
+        let mut est = RegretEstimator::new(0.5);
+        assert_eq!(est.value(), 1.0);
+        let scored = RegretReport {
+            per_shape: vec![ShapeRegret {
+                shape: GemmShape::new(8, 8, 8, 1),
+                chosen: None,
+                chosen_secs: 2.0,
+                best: Some(0),
+                best_secs: 1.0,
+                ratio: 2.0,
+            }],
+            geomean: 2.0,
+            comparable_shapes: 1,
+            unscored_shapes: 0,
+        };
+        assert_eq!(est.observe(&scored), 2.0, "first observation seeds the EWMA");
+        let empty = RegretReport::default();
+        assert_eq!(est.observe(&empty), 2.0, "empty reports leave the gauge alone");
+        assert_eq!(est.evaluations(), 1);
+        let better = RegretReport { geomean: 1.0, ..scored.clone() };
+        assert_eq!(est.observe(&better), 1.5, "0.5 * 1 + 0.5 * 2");
+        assert_eq!(est.evaluations(), 2);
+    }
+}

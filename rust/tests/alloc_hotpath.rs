@@ -16,7 +16,9 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
 use std::path::PathBuf;
 
-use kernelsel::coordinator::{AdmissionPolicy, Coordinator, PoolConfig, SelectorPolicy};
+use kernelsel::coordinator::{
+    AdmissionPolicy, Coordinator, PoolConfig, SelectorPolicy, TraceConfig,
+};
 use kernelsel::dataset::GemmShape;
 use kernelsel::util::fill_buffer;
 
@@ -110,6 +112,60 @@ fn warm_hit_path_submit_allocates_nothing_on_the_client_thread() {
         "warm hit-path submit+wait allocated {allocs} times over {n} requests; \
          the fast path must stay off the heap"
     );
+    let metrics = coord.stop();
+    assert_eq!(metrics.requests, 40 + n);
+    assert_eq!(metrics.failures, 0);
+}
+
+#[test]
+fn warm_submit_with_flight_recorder_on_allocates_nothing() {
+    // Tracing must not cost the hot path its zero-alloc property: events
+    // are written by value into the recorder's preallocated rings, so a
+    // traced warm submit is the untraced one plus a few atomics and a
+    // try-locked array write.
+    let coord = Coordinator::start_pool(
+        PathBuf::from("/nonexistent-artifacts"),
+        SelectorPolicy::Xla,
+        PoolConfig {
+            shards: 2,
+            trace: Some(TraceConfig::default()),
+            ..PoolConfig::default()
+        },
+    )
+    .expect("coordinator start");
+    let shape = GemmShape::new(64, 64, 64, 1);
+    for i in 0..40u32 {
+        let lhs = fill_buffer(i, 64 * 64);
+        let rhs = fill_buffer(i + 7, 64 * 64);
+        let resp = coord.call(shape, lhs, rhs).expect("warm call");
+        assert!(resp.result.is_ok());
+    }
+    let _ = std::thread::current();
+    let n = 96usize;
+    let inputs: Vec<(Vec<f32>, Vec<f32>)> = (0..n)
+        .map(|i| (fill_buffer(i as u32, 64 * 64), fill_buffer(i as u32 + 3, 64 * 64)))
+        .collect();
+
+    TRACKING.with(|t| t.set(true));
+    ALLOCS.with(|a| a.set(0));
+    for (lhs, rhs) in inputs {
+        let ticket = coord.submit(shape, lhs, rhs);
+        let resp = ticket.wait();
+        assert!(resp.result.is_ok());
+    }
+    TRACKING.with(|t| t.set(false));
+    let allocs = ALLOCS.with(|a| a.get());
+
+    assert_eq!(
+        allocs, 0,
+        "traced warm submit+wait allocated {allocs} times over {n} requests; \
+         the recorder must keep the fast path off the heap"
+    );
+    // The traffic really was traced — every request opened a chain and
+    // the ring (default capacity) had room for all of it.
+    let rec = coord.recorder().expect("tracing was enabled");
+    assert_eq!(rec.chains(), (40 + n) as u64);
+    assert_eq!(rec.dropped(), 0);
     let metrics = coord.stop();
     assert_eq!(metrics.requests, 40 + n);
     assert_eq!(metrics.failures, 0);

@@ -1,0 +1,176 @@
+#!/usr/bin/env python3
+"""Validate a `kernelsel-trace-v1` flight-recorder export.
+
+Usage:
+    python3 tools/trace_check.py TRACE.json
+
+Toolchain-free sanity gate for the traces `serve --trace-out` (and any
+embedder of `FlightRecorder::to_json`) writes — CI runs it against the
+bench-smoke trace so a schema or lifecycle regression fails the build
+without needing a Rust toolchain on the checking side. Three passes:
+
+  1. **Schema** — required top-level keys with the right types, and every
+     event carries the common fields plus the kind-specific payload
+     fields (a `submit` has a shape and a cost, an `execute` has
+     predicted/measured costs and a generation, ...).
+  2. **Clock** — the exported timeline is globally sorted by timestamp,
+     and in particular each shard's own events never move backwards.
+  3. **Causality** — every traced chain (`seq > 0`) opens with exactly
+     one `submit` and reaches exactly one terminal (`complete`, `shed`
+     or `reject`); a completed chain carries at least one `execute`;
+     unchained events (`seq == 0`) are only the pool-level kinds
+     (`batch`, `steal`, `swap`). Skipped (with a note) when the recorder
+     reported dropped events — an incomplete timeline cannot prove
+     lifecycle violations.
+
+Exits 0 when green; prints each violation and exits 1 otherwise.
+"""
+import json
+import sys
+
+SCHEMA = "kernelsel-trace-v1"
+NUMERIC = (int, float)
+
+# Common fields every event carries; `shard` is numeric or null.
+COMMON = {"t_ns": NUMERIC, "seq": NUMERIC, "kind": str, "tenant": NUMERIC}
+
+# Kind-specific payload fields and their types.
+KIND_FIELDS = {
+    "submit": {"m": NUMERIC, "k": NUMERIC, "n": NUMERIC, "batch": NUMERIC, "cost_ns": NUMERIC},
+    "route": {"spilled": bool},
+    "reject": {"reason": str, "retry_after_ns": NUMERIC},
+    "steal": {"victim": NUMERIC, "requests": NUMERIC},
+    "batch": {"size": NUMERIC, "oldest_queued_ns": NUMERIC},
+    "execute": {"generation": NUMERIC, "predicted_ns": NUMERIC, "measured_ns": NUMERIC},
+    "complete": {"latency_ns": NUMERIC, "ok": bool},
+    "shed": {"queued_ns": NUMERIC, "budget_ns": NUMERIC},
+    "swap": {"generation": NUMERIC, "domain": NUMERIC},
+}
+TERMINALS = {"complete", "shed", "reject"}
+POOL_LEVEL = {"batch", "steal", "swap"}
+
+
+def check_schema(doc, errors):
+    for key, want in [
+        ("schema", str),
+        ("sample_every", NUMERIC),
+        ("dropped", NUMERIC),
+        ("chains", NUMERIC),
+        ("events", list),
+    ]:
+        if not isinstance(doc.get(key), want):
+            errors.append(f"top-level: missing or mistyped {key!r}")
+    if doc.get("schema") != SCHEMA:
+        errors.append(f"top-level: schema is {doc.get('schema')!r}, want {SCHEMA!r}")
+
+
+def check_event(i, ev, errors):
+    if not isinstance(ev, dict):
+        errors.append(f"event[{i}]: not an object")
+        return None
+    for key, want in COMMON.items():
+        if not isinstance(ev.get(key), want):
+            errors.append(f"event[{i}]: missing or mistyped {key!r}")
+            return None
+    if not (ev.get("shard") is None or isinstance(ev.get("shard"), NUMERIC)):
+        errors.append(f"event[{i}]: 'shard' must be numeric or null")
+        return None
+    kind = ev["kind"]
+    if kind not in KIND_FIELDS:
+        errors.append(f"event[{i}]: unknown kind {kind!r}")
+        return None
+    for key, want in KIND_FIELDS[kind].items():
+        if not isinstance(ev.get(key), want):
+            errors.append(f"event[{i}] ({kind}): missing or mistyped {key!r}")
+    if kind == "execute" and not (
+        ev.get("config") is None or isinstance(ev.get("config"), NUMERIC)
+    ):
+        errors.append(f"event[{i}] (execute): 'config' must be numeric or null")
+    return ev
+
+
+def check_clock(events, errors):
+    last_global = None
+    last_by_shard = {}
+    for i, ev in enumerate(events):
+        t = ev["t_ns"]
+        if last_global is not None and t < last_global:
+            errors.append(f"event[{i}]: timestamp {t} before predecessor {last_global}")
+        last_global = t
+        shard = ev.get("shard")
+        if shard is not None:
+            prev = last_by_shard.get(shard)
+            if prev is not None and t < prev:
+                errors.append(f"event[{i}]: shard {shard} clock moved backwards ({t} < {prev})")
+            last_by_shard[shard] = t
+
+
+def check_causality(events, errors):
+    chains = {}
+    for i, ev in enumerate(events):
+        seq, kind = ev["seq"], ev["kind"]
+        if seq == 0:
+            if kind not in POOL_LEVEL:
+                errors.append(f"event[{i}]: unchained {kind!r} (seq 0 is pool-level only)")
+            continue
+        cell = chains.setdefault(seq, {"submit": 0, "terminal": 0, "execute": 0, "kinds": []})
+        cell["kinds"].append(kind)
+        if kind == "submit":
+            cell["submit"] += 1
+        elif kind in TERMINALS:
+            cell["terminal"] += 1
+        elif kind == "execute":
+            cell["execute"] += 1
+    for seq, cell in sorted(chains.items()):
+        if cell["submit"] != 1:
+            errors.append(f"chain {seq}: {cell['submit']} submit events (want exactly 1)")
+        if cell["terminal"] != 1:
+            errors.append(
+                f"chain {seq}: {cell['terminal']} terminal events "
+                f"(want exactly one of complete/shed/reject; saw {cell['kinds']})"
+            )
+        if "complete" in cell["kinds"] and cell["execute"] < 1:
+            errors.append(f"chain {seq}: completed without an execute event")
+    return len(chains)
+
+
+def main():
+    if len(sys.argv) != 2:
+        print(__doc__.strip().splitlines()[0], file=sys.stderr)
+        print("usage: python3 tools/trace_check.py TRACE.json", file=sys.stderr)
+        return 2
+    path = sys.argv[1]
+    try:
+        with open(path) as fh:
+            doc = json.load(fh)
+    except (OSError, ValueError) as e:
+        print(f"FAIL: cannot read {path}: {e}", file=sys.stderr)
+        return 1
+
+    errors = []
+    check_schema(doc, errors)
+    events = [e for e in doc.get("events", []) if isinstance(e, dict)]
+    events = [e for i, e in enumerate(events) if check_event(i, e, errors) is not None]
+    if not errors:
+        check_clock(events, errors)
+        dropped = doc.get("dropped", 0)
+        if dropped:
+            print(f"note: {dropped} dropped events — causality pass skipped")
+            n_chains = sum(1 for e in events if e["kind"] == "submit")
+        else:
+            n_chains = check_causality(events, errors)
+
+    if errors:
+        for err in errors:
+            print(f"FAIL: {err}", file=sys.stderr)
+        print(f"{path}: {len(errors)} violation(s)", file=sys.stderr)
+        return 1
+    print(
+        f"{path}: OK — {len(events)} events, {n_chains} traced chain(s), "
+        f"sample_every={doc['sample_every']}, dropped={doc['dropped']}"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
