@@ -70,6 +70,18 @@
 //! typed refusals, selection regret) to PATH every 200 ms while serving
 //! and once more at shutdown.
 //!
+//! `--chaos SEED,RATE,KINDS` arms seeded fault injection on every shard:
+//! `KINDS` is a `+`-separated subset of `transient`, `corrupt`, `spike`
+//! and `panic` (e.g. `--chaos 7,500,transient+corrupt`), `RATE` the
+//! per-execution fault probability in permille inside the plan's fixed
+//! fault window. Faulted runs exercise the integrity canary, the variant
+//! quarantine breaker and the shard supervisor; the shutdown report's
+//! quarantine/respawn/retry counters print either way.
+//! `--require-recovery` keeps trickling traffic (up to 20 s) until the
+//! pool demonstrably self-healed — quarantine tripped AND restored, plus
+//! a worker respawn when the plan panics — and exits non-zero otherwise
+//! (the CI chaos smoke).
+//!
 //! `--engine sim|cpu` picks the backend (default sim). With `cpu` the
 //! pool executes real f32 GEMM on the host through the `engine::cpu`
 //! variant family: traffic drives the CPU manifest's bounded shape
@@ -93,7 +105,7 @@ use kernelsel::coordinator::{
 use kernelsel::dataset::{benchmark_shapes, config_by_name, GemmShape};
 use kernelsel::devsim::{generate_dataset, profile_by_name};
 use kernelsel::engine::cpu::cpu_variants;
-use kernelsel::engine::EngineKind;
+use kernelsel::engine::{EngineKind, FaultPlan};
 use kernelsel::runtime::Manifest;
 use kernelsel::tuning::{RetuneConfig, TelemetrySnapshot};
 use kernelsel::util::fill_buffer;
@@ -115,6 +127,17 @@ fn flag(name: &str, default: usize) -> usize {
 
 fn has_flag(name: &str) -> bool {
     std::env::args().any(|a| a == name)
+}
+
+/// First sample value of an exposition counter family (`0` when absent) —
+/// how the recovery wait watches quarantine/respawn counters land live.
+fn prom_counter(text: &str, name: &str) -> usize {
+    text.lines()
+        .filter(|l| !l.starts_with('#'))
+        .find(|l| l.split([' ', '{']).next() == Some(name))
+        .and_then(|l| l.rsplit(' ').next())
+        .and_then(|v| v.parse::<f64>().ok())
+        .map_or(0, |v| v as usize)
 }
 
 fn main() -> Result<(), String> {
@@ -188,6 +211,11 @@ fn main() -> Result<(), String> {
         ..TraceConfig::default()
     });
     let metrics_out = flag_str("--metrics-out");
+    let chaos = flag_str("--chaos").map(|v| FaultPlan::parse(&v)).transpose()?;
+    let require_recovery = has_flag("--require-recovery");
+    if require_recovery && chaos.is_none() {
+        return Err("--require-recovery needs --chaos".to_string());
+    }
     let engine_name = flag_str("--engine").unwrap_or_else(|| "sim".to_string());
     let dir = PathBuf::from("artifacts");
 
@@ -256,6 +284,7 @@ fn main() -> Result<(), String> {
         tenants,
         quota_slots,
         trace,
+        fault: chaos,
         ..PoolConfig::default()
     };
     println!(
@@ -275,6 +304,19 @@ fn main() -> Result<(), String> {
             n => format!("{n} x {} (quota {quota_slots})", slo.name()),
         },
     );
+    if let Some(plan) = &chaos {
+        println!(
+            "chaos armed: seed {} window [{}, {}) transient/corrupt/spike \
+             {}/{}/{} permille, panic_at {:?}",
+            plan.seed,
+            plan.onset,
+            plan.fault_until,
+            plan.transient_permille,
+            plan.corrupt_permille,
+            plan.spike_permille,
+            plan.panic_at,
+        );
+    }
     let coord = Arc::new(Coordinator::start_pool(dir, policy, pool)?);
 
     // Restore persisted telemetry before traffic flows: measured cost
@@ -381,6 +423,44 @@ fn main() -> Result<(), String> {
         );
     }
 
+    // Keep trickling traffic until the pool demonstrably self-healed from
+    // the injected faults: quarantine tripped AND restored (plus a worker
+    // respawn when the plan panics). The CI chaos smoke asserts recovery,
+    // not just survival.
+    let mut recovery_met = !require_recovery;
+    if require_recovery {
+        let needs_respawn = chaos.as_ref().is_some_and(|p| p.panic_at.is_some());
+        let deadline = Instant::now() + Duration::from_secs(20);
+        loop {
+            let text = coord.metrics_text();
+            let trips = prom_counter(&text, "kernelsel_quarantine_trips_total");
+            let restores = prom_counter(&text, "kernelsel_quarantine_restores_total");
+            let respawns = prom_counter(&text, "kernelsel_worker_respawns");
+            if trips >= 1 && restores >= 1 && (!needs_respawn || respawns >= 1) {
+                recovery_met = true;
+                println!(
+                    "recovery wait: trips={trips} restores={restores} respawns={respawns}"
+                );
+                break;
+            }
+            if Instant::now() >= deadline {
+                println!(
+                    "recovery wait: DEADLINE trips={trips} restores={restores} \
+                     respawns={respawns}"
+                );
+                break;
+            }
+            // Trickle two cheap shapes so executions keep advancing the
+            // fault window, the quarantine cooloff and the probe cadence.
+            for (i, s) in [shapes[0], shapes[3]].iter().enumerate() {
+                let lhs = fill_buffer(i as u32, s.batch * s.m * s.k);
+                let rhs = fill_buffer(i as u32 + 3, s.batch * s.k * s.n);
+                let _ = coord.call(*s, lhs, rhs);
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+
     // Persist the telemetry snapshot before shutdown so the next run can
     // seed itself with --telemetry-in.
     if let Some(path) = flag_str("--telemetry-out") {
@@ -434,8 +514,27 @@ fn main() -> Result<(), String> {
             rec.dropped()
         );
     }
+    if chaos.is_some() {
+        println!(
+            "chaos: quarantine trips={} probes={} restores={} respawns={} \
+             retries spent={} denied={}",
+            report.total.quarantine_trips,
+            report.total.quarantine_probes,
+            report.total.quarantine_restores,
+            report.total.worker_respawns,
+            report.total.retries,
+            report.total.retries_denied,
+        );
+    }
     if require_swap && report.total.selector_swaps == 0 {
         return Err("no selector swap observed (drift never retuned the pool)".to_string());
+    }
+    if !recovery_met {
+        return Err(
+            "pool did not self-heal: quarantine never tripped+restored (or the panicked \
+             worker was never respawned) within the recovery deadline"
+                .to_string(),
+        );
     }
     Ok(())
 }

@@ -27,6 +27,16 @@
 //! (`quota-off`) must demonstrably violate that — proving the quota
 //! layer, not luck, is what isolates the tenants.
 //!
+//! The **chaos** scenario is the robustness gate for fault injection,
+//! variant quarantine and shard supervision: a seeded fault plan injects
+//! transient errors + silent corruption against the deployed config for
+//! the middle-sixth of a run (then a separate cell panics a worker), and
+//! the exit code enforces that no corrupt result is ever delivered as
+//! `Ok`, quarantine trips within a fixed window of onset, goodput
+//! recovers to >= 80% of the fault-free run, and a worker panic costs at
+//! most its in-flight batch. Chaos cells land under the optional `chaos`
+//! key of BENCH_pool.json and never join the throughput baseline gate.
+//!
 //!     cargo bench --bench coordinator_skew
 //!     cargo bench --bench coordinator_skew -- --smoke \
 //!         --json BENCH_pool.json --check-against ci/BENCH_pool.json
@@ -49,7 +59,10 @@ use kernelsel::coordinator::{
     AdmissionPolicy, Coordinator, PoolConfig, Routing, SelectorPolicy, SloClass, SubmitError,
     TenantId, TenantSpec, TraceConfig,
 };
-use kernelsel::dataset::GemmShape;
+use kernelsel::dataset::{config_by_name, GemmShape};
+use kernelsel::engine::sim::host_gemm;
+use kernelsel::engine::FaultPlan;
+use kernelsel::runtime::Manifest;
 use kernelsel::util::json::{parse, Json};
 use kernelsel::util::{fill_buffer, Stats};
 
@@ -533,6 +546,260 @@ fn run_isolated(n: usize, interval: Duration, slo_secs: f64) -> Cell {
     }
 }
 
+/// Chaos: quarantine must trip within this many requests of fault onset.
+const CHAOS_TRIP_WINDOW: usize = 64;
+/// Chaos: final-third goodput must hold this fraction of the fault-free
+/// run's final-third goodput (faults stop at `n/3`, so by the last third
+/// quarantine + restore must have recovered the pool).
+const CHAOS_RECOVERY_TOLERANCE: f64 = 0.80;
+
+/// One self-gating robustness cell: a seeded fault plan injected mid-run
+/// against a live pool (schema: the `chaos` array of BENCH_pool.json —
+/// see ARCHITECTURE.md §9; excluded from the throughput baseline gate).
+struct ChaosCell {
+    scenario: &'static str,
+    requests: usize,
+    ok: usize,
+    failed: usize,
+    /// `Ok` responses whose payload differed from the reference result —
+    /// silent corruption delivered as success. Must be zero, always.
+    corrupt_ok: usize,
+    trips: usize,
+    probes: usize,
+    restores: usize,
+    respawns: usize,
+    /// Requests between fault onset and the first quarantine trip
+    /// (`None` = never tripped, or not applicable to the scenario).
+    trip_latency: Option<usize>,
+    /// Final-third goodput vs the fault-free baseline's (1.0 = fully
+    /// recovered; only the fault scenario measures it).
+    recovery_ratio: f64,
+}
+
+/// First sample value of an exposition counter family (`0` when absent) —
+/// how the chaos loop watches quarantine trips land mid-run.
+fn prom_counter(text: &str, name: &str) -> usize {
+    text.lines()
+        .filter(|l| !l.starts_with('#'))
+        .find(|l| l.split([' ', '{']).next() == Some(name))
+        .and_then(|l| l.rsplit(' ').next())
+        .and_then(|v| v.parse::<f64>().ok())
+        .map_or(0, |v| v as usize)
+}
+
+/// Sequential hot-shape drive loop shared by the chaos cells and their
+/// fault-free baseline: returns (ok, failed, corrupt_ok, first trip seen
+/// at request index, final-third ok/sec). Every `Ok` payload is checked
+/// bit-for-bit against the reference GEMM — a corrupted result delivered
+/// as success is the one unacceptable outcome. After a "worker died"
+/// failure the loop pauses briefly so the panicking worker's unwind
+/// finishes before the next submit (which then triggers the respawn).
+fn drive_chaos(coord: &Coordinator, n: usize) -> (usize, usize, usize, Option<usize>, f64) {
+    let hot = GemmShape::new(128, 128, 128, 1);
+    let (mut ok, mut failed, mut corrupt_ok) = (0usize, 0usize, 0usize);
+    let mut first_trip = None;
+    let mut final_third_t0 = Instant::now();
+    let mut final_third_ok = 0usize;
+    for i in 0..n {
+        if i == 2 * n / 3 {
+            final_third_t0 = Instant::now();
+        }
+        let lhs = fill_buffer(i as u32, 128 * 128);
+        let rhs = fill_buffer((i + 17) as u32, 128 * 128);
+        let resp = coord.call(hot, lhs.clone(), rhs.clone()).expect("chaos call");
+        match resp.result {
+            Ok(out) => {
+                ok += 1;
+                if i >= 2 * n / 3 {
+                    final_third_ok += 1;
+                }
+                if out != host_gemm(&hot, &lhs, &rhs).expect("reference gemm") {
+                    corrupt_ok += 1;
+                }
+            }
+            Err(e) => {
+                failed += 1;
+                if e.contains("worker died") {
+                    std::thread::sleep(Duration::from_millis(100));
+                }
+            }
+        }
+        if first_trip.is_none()
+            && prom_counter(&coord.metrics_text(), "kernelsel_quarantine_trips_total") > 0
+        {
+            first_trip = Some(i);
+        }
+    }
+    let final_rps = final_third_ok as f64 / final_third_t0.elapsed().as_secs_f64().max(1e-9);
+    (ok, failed, corrupt_ok, first_trip, final_rps)
+}
+
+/// Pool for the chaos cells: one shard (execution index == request index,
+/// so the seeded fault schedule is exact), the deployed single-best
+/// selector (quarantine tracks per-config outcomes — the XLA fallback is
+/// untracked by design), optionally wrapped by `plan`.
+fn chaos_pool(plan: Option<FaultPlan>) -> Coordinator {
+    let best = config_by_name(&Manifest::synthetic().single_best)
+        .expect("synthetic best config")
+        .index();
+    Coordinator::start_pool(
+        PathBuf::from("artifacts"),
+        SelectorPolicy::Single(best),
+        PoolConfig { shards: 1, fault: plan, ..PoolConfig::default() },
+    )
+    .expect("start pool")
+}
+
+/// Run the chaos scenario: a fault cell (transient + corruption burst
+/// targeted at the deployed config, window `[n/6, n/3)`) judged against
+/// a fault-free baseline, plus a worker-panic cell. Appends every gate
+/// violation to `failures`.
+fn run_chaos_cells(n: usize, failures: &mut Vec<String>) -> Vec<ChaosCell> {
+    let best = config_by_name(&Manifest::synthetic().single_best)
+        .expect("synthetic best config")
+        .index();
+
+    // Fault-free baseline: the goodput yardstick (and a standing check
+    // that the reference comparison itself holds on a clean pool).
+    let baseline = chaos_pool(None);
+    let (base_ok, base_failed, base_corrupt, _, base_rps) = drive_chaos(&baseline, n);
+    baseline.stop();
+    assert_eq!(base_ok, n, "fault-free baseline must serve everything");
+    assert_eq!((base_failed, base_corrupt), (0, 0));
+
+    // Fault cell: transient errors + silent corruption against the
+    // deployed config for the middle-sixth of the run. Quarantine must
+    // trip promptly, route around the poisoned variant, probe it after
+    // cooloff, and restore it once the fault window closes — recovering
+    // final-third goodput.
+    let onset = (n / 6) as u64;
+    let plan = FaultPlan {
+        seed: 11,
+        onset,
+        fault_until: (n / 3) as u64,
+        transient_permille: 700,
+        corrupt_permille: 250,
+        target_config: Some(best),
+        ..FaultPlan::default()
+    };
+    let coord = chaos_pool(Some(plan));
+    let (ok, failed, corrupt_ok, first_trip, final_rps) = drive_chaos(&coord, n);
+    let report = coord.stop_detailed();
+    let recovery = final_rps / base_rps.max(1e-9);
+    let trip_latency = first_trip.map(|i| i.saturating_sub(onset as usize));
+    if corrupt_ok > 0 {
+        failures.push(format!(
+            "chaos/fault: {corrupt_ok} corrupted results delivered as Ok (must be 0)"
+        ));
+    }
+    if report.total.quarantine_trips == 0 {
+        failures.push("chaos/fault: sustained targeted faults never tripped quarantine".into());
+    }
+    match trip_latency {
+        Some(lat) if lat <= CHAOS_TRIP_WINDOW => {}
+        Some(lat) => failures.push(format!(
+            "chaos/fault: quarantine tripped {lat} requests after onset \
+             (must be <= {CHAOS_TRIP_WINDOW})"
+        )),
+        None => failures
+            .push("chaos/fault: quarantine never observed tripping mid-run".into()),
+    }
+    if report.total.quarantine_restores == 0 {
+        failures.push(
+            "chaos/fault: the variant was never restored after the fault window closed".into(),
+        );
+    }
+    if recovery < CHAOS_RECOVERY_TOLERANCE {
+        failures.push(format!(
+            "chaos/fault: final-third goodput {recovery:.2}x the fault-free baseline \
+             (must be >= {CHAOS_RECOVERY_TOLERANCE})"
+        ));
+    }
+    let fault_cell = ChaosCell {
+        scenario: "fault",
+        requests: n,
+        ok,
+        failed,
+        corrupt_ok,
+        trips: report.total.quarantine_trips,
+        probes: report.total.quarantine_probes,
+        restores: report.total.quarantine_restores,
+        respawns: report.total.worker_respawns,
+        trip_latency,
+        recovery_ratio: recovery,
+    };
+
+    // Panic cell: one seeded worker panic mid-run. The supervisor must
+    // respawn the worker on its queue, and the panic may cost at most its
+    // in-flight batch — every other request is served.
+    let panic_n = (n / 4).max(48);
+    let panic_plan = FaultPlan { seed: 13, panic_at: Some(40), ..FaultPlan::default() };
+    let coord = chaos_pool(Some(panic_plan));
+    let (pok, pfailed, pcorrupt, _, _) = drive_chaos(&coord, panic_n);
+    let preport = coord.stop_detailed();
+    let max_batch = kernelsel::coordinator::BatcherConfig::default().max_batch;
+    if pcorrupt > 0 {
+        failures.push(format!(
+            "chaos/panic: {pcorrupt} corrupted results delivered as Ok (must be 0)"
+        ));
+    }
+    if preport.total.worker_respawns == 0 {
+        failures.push("chaos/panic: the dead worker was never respawned".into());
+    }
+    if pfailed > max_batch {
+        failures.push(format!(
+            "chaos/panic: {pfailed} requests lost to one panic \
+             (must be <= the in-flight batch, {max_batch})"
+        ));
+    }
+    if pok + pfailed != panic_n {
+        failures.push(format!(
+            "chaos/panic: {} responses for {panic_n} requests — a ticket hung",
+            pok + pfailed
+        ));
+    }
+    let panic_cell = ChaosCell {
+        scenario: "panic",
+        requests: panic_n,
+        ok: pok,
+        failed: pfailed,
+        corrupt_ok: pcorrupt,
+        trips: preport.total.quarantine_trips,
+        probes: preport.total.quarantine_probes,
+        restores: preport.total.quarantine_restores,
+        respawns: preport.total.worker_respawns,
+        trip_latency: None,
+        recovery_ratio: 1.0,
+    };
+    vec![fault_cell, panic_cell]
+}
+
+fn chaos_to_json(cells: &[ChaosCell]) -> Json {
+    Json::Arr(
+        cells
+            .iter()
+            .map(|c| {
+                let mut fields = vec![
+                    ("scenario", Json::Str(c.scenario.to_string())),
+                    ("requests", Json::Num(c.requests as f64)),
+                    ("ok", Json::Num(c.ok as f64)),
+                    ("failed", Json::Num(c.failed as f64)),
+                    ("corrupt_ok", Json::Num(c.corrupt_ok as f64)),
+                    ("trips", Json::Num(c.trips as f64)),
+                    ("probes", Json::Num(c.probes as f64)),
+                    ("restores", Json::Num(c.restores as f64)),
+                    ("respawns", Json::Num(c.respawns as f64)),
+                    ("recovery_ratio", Json::Num(c.recovery_ratio)),
+                ];
+                if let Some(lat) = c.trip_latency {
+                    fields.push(("trip_latency", Json::Num(lat as f64)));
+                }
+                Json::obj(fields)
+            })
+            .collect(),
+    )
+}
+
 fn cells_to_json(cells: &[Cell], mode: &str) -> Json {
     let entries: Vec<Json> = cells
         .iter()
@@ -565,6 +832,14 @@ fn cells_to_json(cells: &[Cell], mode: &str) -> Json {
     ])
 }
 
+/// Attach the optional `chaos` key (self-gating robustness cells; never
+/// part of the throughput baseline comparison) to the bench document.
+fn with_chaos(doc: Json, chaos: &[ChaosCell]) -> Json {
+    let Json::Obj(mut fields) = doc else { return doc };
+    fields.insert("chaos".to_string(), chaos_to_json(chaos));
+    Json::Obj(fields)
+}
+
 /// Compare against a committed baseline; list every matching cell whose
 /// throughput dropped below `REGRESSION_TOLERANCE x` baseline.
 fn regressions(cells: &[Cell], baseline: &Json) -> Vec<String> {
@@ -582,7 +857,7 @@ fn regressions(cells: &[Cell], baseline: &Json) -> Vec<String> {
         ) else {
             continue;
         };
-        if mix == "overload" || mix == "tenants" {
+        if mix == "overload" || mix == "tenants" || mix == "chaos" {
             // Overload cells serve a deliberately tiny admitted subset —
             // their throughput is scheduler noise, not capacity — and the
             // bench already self-gates them on goodput vs Unbounded. Keep
@@ -590,7 +865,9 @@ fn regressions(cells: &[Cell], baseline: &Json) -> Vec<String> {
             // baseline carries them. The tenants cells likewise self-gate
             // (fair vs isolated goodput, quota-off must violate) and are
             // keyed per tenant, which this (mix, routing, shards,
-            // admission) lookup can't distinguish.
+            // admission) lookup can't distinguish. Chaos cells are
+            // self-gating too (corruption/trip/recovery exit codes) and
+            // deliberately run degraded — never throughput-comparable.
             continue;
         }
         // Pre-admission baselines carry no "admission" key: they describe
@@ -831,9 +1108,47 @@ fn main() {
     cells.push(iso);
     cells.extend(fair);
     cells.extend(unfair);
+    println!();
+
+    // Chaos scenario: seeded faults against a live pool — transient +
+    // corruption burst targeted at the deployed config, then a worker
+    // panic. Entirely self-gating: trips must land promptly, no corrupt
+    // result may ever surface as Ok, goodput must recover, a panic may
+    // cost at most its in-flight batch.
+    let chaos_n = if smoke { 240 } else { 360 };
+    println!(
+        "chaos: {chaos_n}-request sequential run, faults over [{}, {}), then a \
+         seeded worker panic",
+        chaos_n / 6,
+        chaos_n / 3,
+    );
+    let mut chaos_failures = Vec::new();
+    let chaos_cells = run_chaos_cells(chaos_n, &mut chaos_failures);
+    for c in &chaos_cells {
+        println!(
+            "{:>8} {:>14}: ok {:>4}  failed {:>3}  corrupt-as-ok {}  trips {}  probes {}  \
+             restores {}  respawns {}  trip-latency {}  recovery {:.2}x",
+            "chaos",
+            c.scenario,
+            c.ok,
+            c.failed,
+            c.corrupt_ok,
+            c.trips,
+            c.probes,
+            c.restores,
+            c.respawns,
+            c.trip_latency.map_or_else(|| "-".to_string(), |l| l.to_string()),
+            c.recovery_ratio,
+        );
+    }
+    println!(
+        "chaos: quarantine + supervision recover the pool  [{}]",
+        if chaos_failures.is_empty() { "OK" } else { "NOT SELF-HEALING" }
+    );
+    let chaos_gate_failed = !chaos_failures.is_empty();
 
     if let Some(path) = json_path {
-        let doc = cells_to_json(&cells, mode);
+        let doc = with_chaos(cells_to_json(&cells, mode), &chaos_cells);
         std::fs::write(&path, doc.to_string() + "\n").expect("write BENCH_pool.json");
         println!("\nwrote {path}");
     }
@@ -879,6 +1194,13 @@ fn main() {
              quota-off control must violate that (see the tenants verdict lines above)",
             TENANT_ISOLATION_TOLERANCE * 100.0
         );
+        std::process::exit(1);
+    }
+    if chaos_gate_failed {
+        eprintln!("\nCHAOS GATE FAILED:");
+        for f in &chaos_failures {
+            eprintln!("  {f}");
+        }
         std::process::exit(1);
     }
 }

@@ -394,6 +394,126 @@ impl AdmissionPolicy {
     }
 }
 
+/// Milli-tokens one retry costs from a [`RetryBudget`] bucket.
+pub const RETRY_TOKEN_MILLI: u64 = 1_000;
+
+/// The pure token-bucket drain: one retry spends [`RETRY_TOKEN_MILLI`]
+/// milli-tokens, saturating at empty. Kept as a free function (with
+/// [`retry_budget_after_success`] and [`retry_allowed`]) so
+/// `tools/devsim_check.py` can port and grid-check the bucket arithmetic
+/// bit-for-bit, PR-5/PR-7 style.
+pub fn retry_budget_after_failure(tokens_milli: u64) -> u64 {
+    tokens_milli.saturating_sub(RETRY_TOKEN_MILLI)
+}
+
+/// The pure token-bucket refill: every *successful* call restores
+/// `refill_permille` milli-tokens (1000 = one full token per success),
+/// capped at `capacity` whole tokens. Refilling on success — not on wall
+/// clock — is what makes the budget admission-aware: a pool in overload
+/// completes little, so retries earn nothing back and stay shed.
+pub fn retry_budget_after_success(tokens_milli: u64, capacity: u64, refill_permille: u64) -> u64 {
+    tokens_milli
+        .saturating_add(refill_permille)
+        .min(capacity.saturating_mul(RETRY_TOKEN_MILLI))
+}
+
+/// The pure retry gate: retries are allowed only while the bucket holds
+/// *more than half* its capacity. The half-capacity threshold (rather
+/// than "more than one token") is what makes retries shed **first**
+/// under load: a burst of failures drains the bucket to the threshold
+/// after `capacity / 2` retries and every further retry is refused while
+/// first-try traffic is still being served — retried work can never
+/// amplify an overload.
+pub fn retry_allowed(tokens_milli: u64, capacity: u64) -> bool {
+    tokens_milli > capacity.saturating_mul(RETRY_TOKEN_MILLI) / 2
+}
+
+/// A concurrent token bucket bounding submit retries (see the pure
+/// functions [`retry_budget_after_failure`] /
+/// [`retry_budget_after_success`] / [`retry_allowed`] for the exact
+/// arithmetic). Shared across every retrying caller of one pool so the
+/// bound is global, not per thread.
+#[derive(Debug)]
+pub struct RetryBudget {
+    tokens_milli: std::sync::atomic::AtomicU64,
+    capacity: u64,
+    refill_permille: u64,
+}
+
+impl Default for RetryBudget {
+    /// 8 tokens of capacity, refilled one-tenth of a token per success:
+    /// ~4 retries ride out a transient blip, and sustained failure (or
+    /// sustained rejection) keeps the bucket below threshold until
+    /// roughly 40 successes have drained through.
+    fn default() -> RetryBudget {
+        RetryBudget::new(8, 100)
+    }
+}
+
+impl RetryBudget {
+    /// A full bucket of `capacity` tokens refilling `refill_permille`
+    /// milli-tokens per observed success.
+    pub fn new(capacity: u64, refill_permille: u64) -> RetryBudget {
+        RetryBudget {
+            tokens_milli: std::sync::atomic::AtomicU64::new(
+                capacity.saturating_mul(RETRY_TOKEN_MILLI),
+            ),
+            capacity,
+            refill_permille,
+        }
+    }
+
+    /// Try to spend one retry token. Returns `true` (and drains the
+    /// bucket) when the retry may proceed; `false` sheds the retry.
+    pub fn try_spend(&self) -> bool {
+        use std::sync::atomic::Ordering;
+        let mut current = self.tokens_milli.load(Ordering::Relaxed);
+        loop {
+            if !retry_allowed(current, self.capacity) {
+                return false;
+            }
+            let next = retry_budget_after_failure(current);
+            match self.tokens_milli.compare_exchange_weak(
+                current,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return true,
+                Err(seen) => current = seen,
+            }
+        }
+    }
+
+    /// Record a successful (non-retried or retried-and-served) call,
+    /// refilling the bucket.
+    pub fn on_success(&self) {
+        use std::sync::atomic::Ordering;
+        let mut current = self.tokens_milli.load(Ordering::Relaxed);
+        loop {
+            let next =
+                retry_budget_after_success(current, self.capacity, self.refill_permille);
+            if next == current {
+                return;
+            }
+            match self.tokens_milli.compare_exchange_weak(
+                current,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(seen) => current = seen,
+            }
+        }
+    }
+
+    /// Current bucket level in milli-tokens (telemetry, trace events).
+    pub fn tokens_milli(&self) -> u64 {
+        self.tokens_milli.load(std::sync::atomic::Ordering::Relaxed)
+    }
+}
+
 /// Convert "wait for `jobs` completions at `drain_per_sec`" into a retry
 /// hint in nanoseconds, floored at [`MIN_RETRY_HINT_NS`]. Saturates on
 /// non-finite or overflowing products (a pathological rate must never
@@ -576,6 +696,39 @@ mod tests {
         // past what the gauge formula (excess = 50us) would claim.
         let slow = policy.admit_with_drain(150_000, 100_000, 0, 4, 10.0).unwrap_err();
         assert_eq!(slow.retry_after_hint(), Some(Duration::from_nanos(100_000_000)));
+    }
+
+    #[test]
+    fn retry_budget_pure_functions_pinned_examples() {
+        // Pinned worked examples, ported to tools/devsim_check.py.
+        assert_eq!(retry_budget_after_failure(8_000), 7_000);
+        assert_eq!(retry_budget_after_failure(400), 0);
+        assert_eq!(retry_budget_after_success(7_000, 8, 100), 7_100);
+        assert_eq!(retry_budget_after_success(7_950, 8, 100), 8_000, "caps at capacity");
+        assert_eq!(retry_budget_after_success(0, 8, 1000), 1_000);
+        // The gate: strictly more than half capacity.
+        assert!(retry_allowed(4_001, 8));
+        assert!(!retry_allowed(4_000, 8));
+        assert!(!retry_allowed(0, 8));
+        assert!(retry_allowed(1, 0), "zero capacity: any token allows");
+    }
+
+    #[test]
+    fn retry_budget_sheds_after_half_capacity_and_refills_on_success() {
+        let budget = RetryBudget::new(8, 100);
+        // 4 retries drain 8000 -> 4000 milli-tokens; the 5th is refused.
+        for i in 0..4 {
+            assert!(budget.try_spend(), "retry {i} within budget");
+        }
+        assert!(!budget.try_spend(), "retries shed at half capacity");
+        assert_eq!(budget.tokens_milli(), 4_000);
+        // Each success earns a tenth of a token back; 11 successes cross
+        // the threshold again.
+        for _ in 0..11 {
+            budget.on_success();
+        }
+        assert_eq!(budget.tokens_milli(), 5_100);
+        assert!(budget.try_spend());
     }
 
     #[test]

@@ -38,6 +38,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
 use crate::coordinator::metrics::StripedCounter;
+use crate::coordinator::quarantine::QuarantineSet;
 use crate::coordinator::registry::{KernelRegistry, Resolution};
 use crate::dataset::{config_by_index, config_by_name, GemmShape};
 use crate::devsim::{profile_by_name, simulate, DeviceProfile};
@@ -200,6 +201,10 @@ pub struct ResolutionCache {
     model: CostModel,
     /// Measured-time source for the cost-hint handoff (None = devsim only).
     telemetry: Option<Arc<TelemetrySink>>,
+    /// The pool's variant circuit breaker: hits on a quarantined config
+    /// are treated as misses — invalidation equivalent to a generation
+    /// bump, without walking the stripes.
+    quarantine: Option<Arc<QuarantineSet>>,
     /// Striped read-mostly map; see the module docs for the epoch scheme.
     stripes: Vec<RwLock<Arc<StripeMap>>>,
     /// Global FIFO insertion order (shapes are re-inserted only on a
@@ -234,6 +239,7 @@ impl ResolutionCache {
             cap: capacity.max(1),
             model,
             telemetry: None,
+            quarantine: None,
             stripes: (0..STRIPES).map(|_| RwLock::new(Arc::new(StripeMap::new()))).collect(),
             order: Mutex::new(VecDeque::new()),
             hits: StripedCounter::new(),
@@ -245,6 +251,15 @@ impl ResolutionCache {
     /// devsim cost hints once warm.
     pub fn with_telemetry(mut self, telemetry: Arc<TelemetrySink>) -> ResolutionCache {
         self.telemetry = Some(telemetry);
+        self
+    }
+
+    /// Attach the pool's quarantine set: cached hits on a quarantined
+    /// config re-resolve through the registry (which falls down the
+    /// healthy ladder) instead of serving the blocked variant. Shares
+    /// the registry's `Arc` so trip/restore state is pool-wide.
+    pub fn with_quarantine(mut self, quarantine: Arc<QuarantineSet>) -> ResolutionCache {
+        self.quarantine = Some(quarantine);
         self
     }
 
@@ -338,7 +353,7 @@ impl ResolutionCache {
     fn lookup(&self, shape: &GemmShape, generation: u64) -> Option<Arc<ResolvedKernel>> {
         let map = self.snapshot(self.stripe_of(shape));
         match map.get(shape) {
-            Some(r) if r.generation == generation => {
+            Some(r) if r.generation == generation && !self.hit_quarantined(r) => {
                 self.hits.incr();
                 Some(r.clone())
             }
@@ -346,6 +361,19 @@ impl ResolutionCache {
                 self.misses.incr();
                 None
             }
+        }
+    }
+
+    /// Is this cached entry's config currently quarantined? Costs one
+    /// relaxed load while nothing is tripped; a blocked entry turns the
+    /// hit into a miss so the registry re-resolves down the healthy
+    /// ladder (the replacement entry then overwrites this one in place).
+    fn hit_quarantined(&self, r: &ResolvedKernel) -> bool {
+        match self.quarantine.as_ref() {
+            Some(q) if q.is_active() => {
+                r.meta.config_index.is_some_and(|c| q.blocks(c))
+            }
+            _ => false,
         }
     }
 
@@ -613,6 +641,32 @@ mod tests {
         let (hits, misses) = cache.stats();
         assert_eq!(hits, 4 * 2000);
         assert_eq!(misses, 4);
+    }
+
+    #[test]
+    fn quarantined_hit_invalidates_like_a_generation_bump() {
+        use crate::coordinator::quarantine::{QuarantineConfig, QuarantineSet};
+        let best = crate::dataset::config_by_name("r8a4c4_wg16x16").unwrap().index();
+        let q = Arc::new(QuarantineSet::new(QuarantineConfig::default()));
+        let reg = KernelRegistry::new(Manifest::synthetic(), SelectorPolicy::Single(best))
+            .with_quarantine(q.clone());
+        let cache = ResolutionCache::new(16).with_quarantine(q.clone());
+        let shape = GemmShape::new(64, 64, 64, 1);
+        let warm = cache.resolve(&reg, &shape).unwrap();
+        assert_eq!(warm.meta.config_index, Some(best));
+        assert!(Arc::ptr_eq(&cache.resolve(&reg, &shape).unwrap(), &warm));
+        // Trip the config: the cached entry must stop being served (a
+        // miss, like a generation bump) and re-resolve down the ladder.
+        for _ in 0..QuarantineConfig::default().trip_failures {
+            q.observe(Some(best), false);
+        }
+        let (_, misses_before) = cache.stats();
+        let healed = cache.resolve(&reg, &shape).unwrap();
+        assert_ne!(healed.meta.config_index, Some(best));
+        let (_, misses_after) = cache.stats();
+        assert_eq!(misses_after, misses_before + 1, "blocked hit must count as a miss");
+        // The healthy replacement is served from cache thereafter.
+        assert!(Arc::ptr_eq(&cache.resolve(&reg, &shape).unwrap(), &healed));
     }
 
     #[test]

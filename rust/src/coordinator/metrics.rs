@@ -185,6 +185,22 @@ pub struct Metrics {
     pub retunes: usize,
     /// Retune ticks where the drift detector tripped (pool-level).
     pub drift_trips: usize,
+    /// Variants tripped into quarantine by windowed failure tracking
+    /// (pool-level: folded from the shared quarantine set at shutdown).
+    pub quarantine_trips: usize,
+    /// Half-open probation probes of quarantined variants (pool-level).
+    pub quarantine_probes: usize,
+    /// Variants promoted back to healthy after sustained probe success
+    /// (pool-level).
+    pub quarantine_restores: usize,
+    /// Dead shard workers respawned by the supervisor (pool-level).
+    pub worker_respawns: usize,
+    /// Retries spent from the retry budget by `call_with_retry`
+    /// (pool-level).
+    pub retries: usize,
+    /// Retries refused because the budget was below its shed threshold
+    /// (pool-level; retries shed first under load).
+    pub retries_denied: usize,
     /// Shard queue depth sampled at every batch drain, bucketed
     /// logarithmically (see [`OCCUPANCY_BUCKETS`]).
     pub occupancy: [usize; OCCUPANCY_BUCKETS],
@@ -306,6 +322,12 @@ impl Metrics {
         self.selector_swaps += other.selector_swaps;
         self.retunes += other.retunes;
         self.drift_trips += other.drift_trips;
+        self.quarantine_trips += other.quarantine_trips;
+        self.quarantine_probes += other.quarantine_probes;
+        self.quarantine_restores += other.quarantine_restores;
+        self.worker_respawns += other.worker_respawns;
+        self.retries += other.retries;
+        self.retries_denied += other.retries_denied;
         for (mine, theirs) in self.occupancy.iter_mut().zip(other.occupancy) {
             *mine += theirs;
         }
@@ -389,6 +411,8 @@ impl Metrics {
              rejected={} shed={} inflight_peak={} \
              fallbacks(config/xla)={}/{} spilled={} steals={}/{} \
              selector_swaps={} retunes={} drift_trips={} \
+             quarantine(trips/probes/restores)={}/{}/{} respawns={} \
+             retries(spent/denied)={}/{} \
              distinct_configs={} occupancy={:?} latency[{}]",
             self.requests,
             self.batches,
@@ -405,6 +429,12 @@ impl Metrics {
             self.selector_swaps,
             self.retunes,
             self.drift_trips,
+            self.quarantine_trips,
+            self.quarantine_probes,
+            self.quarantine_restores,
+            self.worker_respawns,
+            self.retries,
+            self.retries_denied,
             self.distinct_configs(),
             self.occupancy,
             lat

@@ -21,6 +21,10 @@
 //! * [`tenant`] — the multi-tenant model: tenant identity, SLO classes,
 //!   and the weighted-fair admission-quota arithmetic (reserved shares,
 //!   the pure admit predicate) the server's quota gate runs.
+//! * [`quarantine`] — the per-variant circuit breaker: windowed failure
+//!   tracking trips a kernel configuration out of resolution, a cooloff
+//!   leads to half-open probation probes, sustained success promotes it
+//!   back; the registry, cache and retuner all consult it.
 //! * [`vgg`] — the VGG16 inference engine of paper §6 (`pjrt` feature).
 //! * [`metrics`] — serving statistics (incl. rejection/shed and
 //!   spill/steal/retune counters and occupancy histograms, plus
@@ -35,6 +39,7 @@ pub mod batcher;
 pub mod cache;
 pub mod completion;
 pub mod metrics;
+pub mod quarantine;
 pub mod registry;
 pub mod selector;
 pub mod server;
@@ -43,11 +48,12 @@ pub mod trace;
 #[cfg(feature = "pjrt")]
 pub mod vgg;
 
-pub use admission::{AdmissionPolicy, RejectReason, SubmitError};
+pub use admission::{AdmissionPolicy, RejectReason, RetryBudget, SubmitError};
 pub use batcher::{Batcher, BatcherConfig};
 pub use cache::{ResolutionCache, ResolvedKernel};
 pub use completion::{Completion, CompletionPool, Ticket};
 pub use metrics::{Metrics, StripedCounter};
+pub use quarantine::{QuarantineConfig, QuarantineSet};
 pub use registry::{KernelRegistry, Resolution};
 pub use selector::{tune_selector, tune_selector_with, SelectorPolicy};
 pub use server::{

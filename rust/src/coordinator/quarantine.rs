@@ -1,0 +1,500 @@
+//! Per-variant circuit breaker: windowed failure tracking trips a kernel
+//! configuration into quarantine, a cooloff leads to half-open probation,
+//! and sustained probe success promotes it back to healthy.
+//!
+//! The paper's premise — a *small* shipped kernel set serving every input
+//! — means one misbehaving variant takes out a disproportionate slice of
+//! capacity if the selector keeps choosing it. This module is the pure
+//! decision layer: [`VariantHealth`] is a sequential state machine over
+//! one variant's observed outcomes (ported verbatim to
+//! `tools/devsim_check.py` for cross-validation), and [`QuarantineSet`]
+//! wraps one `VariantHealth` per shipped configuration behind a bitmask
+//! fast path so a healthy pool pays a single relaxed atomic load per
+//! observation.
+//!
+//! State machine (all thresholds from [`QuarantineConfig`]):
+//!
+//! ```text
+//! Healthy --[>= trip_failures failures in last window outcomes]--> Quarantined
+//! Quarantined --[cooloff screen calls elapse]--> Probation
+//! Probation --[1 probe per probe_every screens; promote_successes
+//!              consecutive probe successes]--> Healthy
+//! Probation --[any probe failure]--> Quarantined (cooloff restarts)
+//! ```
+//!
+//! While a variant is not `Healthy`, the registry's fallback ladder skips
+//! it (except for sampled probes), the resolution cache treats hits on it
+//! as misses — invalidation equivalent to a generation bump without a
+//! walk — and the retuner masks it out of the shipped pool.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::dataset::NUM_CONFIGS;
+
+/// Thresholds for the trip/probation/promotion state machine.
+///
+/// The defaults are deliberately aggressive: a variant failing half of a
+/// 16-outcome window trips, sits out 32 resolution attempts, then earns
+/// its way back with 3 consecutive probe successes sampled one-in-8.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QuarantineConfig {
+    /// Sliding outcome window size in observations (clamped to 1..=64 —
+    /// the window is a u64 bitmask).
+    pub window: u32,
+    /// Failures within the window that trip the variant.
+    pub trip_failures: u32,
+    /// Resolution attempts a quarantined variant sits out before
+    /// half-open probation begins.
+    pub cooloff: u32,
+    /// During probation, one resolution in `probe_every` is allowed
+    /// through as a probe; the rest keep falling back.
+    pub probe_every: u32,
+    /// Consecutive probe successes that promote the variant back to
+    /// healthy.
+    pub promote_successes: u32,
+}
+
+impl Default for QuarantineConfig {
+    fn default() -> QuarantineConfig {
+        QuarantineConfig {
+            window: 16,
+            trip_failures: 8,
+            cooloff: 32,
+            probe_every: 8,
+            promote_successes: 3,
+        }
+    }
+}
+
+impl QuarantineConfig {
+    fn window_mask(&self) -> u64 {
+        let w = self.window.clamp(1, 64);
+        if w >= 64 {
+            u64::MAX
+        } else {
+            (1u64 << w) - 1
+        }
+    }
+}
+
+/// Health of one kernel configuration.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Health {
+    /// Normal operation: selectable, outcomes tracked in the window.
+    #[default]
+    Healthy,
+    /// Tripped: never selectable; screening ticks the cooloff down.
+    Quarantined,
+    /// Half-open: selectable only on a sampled probe trickle.
+    Probation,
+}
+
+/// A state-machine transition worth reporting (trace events, counters).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Transition {
+    /// Healthy or Probation → Quarantined.
+    Tripped,
+    /// A probation probe succeeded but did not yet promote.
+    Probed,
+    /// Probation → Healthy on sustained probe success.
+    Restored,
+}
+
+/// The pure per-variant trip/probation/promotion state machine.
+///
+/// Two entry points: [`VariantHealth::observe`] folds one execution
+/// outcome in (called from the serving shard after every execute of the
+/// variant), and [`VariantHealth::screen`] asks "may the resolver pick
+/// this variant right now?" (called from the registry's resolve path) —
+/// screening is what ticks the cooloff and samples the probe trickle, so
+/// a quarantined variant nobody wants stays quarantined for free.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct VariantHealth {
+    /// Current state.
+    pub state: Health,
+    /// Bitmask of the last `window` outcomes; bit set = failure.
+    recent: u64,
+    /// Outcomes observed since the window was last reset (saturates at
+    /// the window size).
+    seen: u32,
+    /// Screens remaining before a quarantined variant enters probation.
+    cooloff_left: u32,
+    /// Probation screen counter (samples the probe trickle).
+    probe_tick: u32,
+    /// Consecutive probe successes in the current probation.
+    probe_successes: u32,
+}
+
+impl VariantHealth {
+    /// Fold one execution outcome in; returns the transition it caused,
+    /// if any.
+    pub fn observe(&mut self, ok: bool, cfg: &QuarantineConfig) -> Option<Transition> {
+        match self.state {
+            Health::Healthy => {
+                self.recent = ((self.recent << 1) | u64::from(!ok)) & cfg.window_mask();
+                self.seen = (self.seen + 1).min(cfg.window.clamp(1, 64));
+                if self.recent.count_ones() >= cfg.trip_failures.max(1) {
+                    self.trip(cfg);
+                    return Some(Transition::Tripped);
+                }
+                None
+            }
+            // Stragglers from batches dispatched before the trip: already
+            // quarantined, nothing to learn.
+            Health::Quarantined => None,
+            Health::Probation => {
+                if ok {
+                    self.probe_successes += 1;
+                    if self.probe_successes >= cfg.promote_successes.max(1) {
+                        *self = VariantHealth::default();
+                        Some(Transition::Restored)
+                    } else {
+                        Some(Transition::Probed)
+                    }
+                } else {
+                    self.trip(cfg);
+                    Some(Transition::Tripped)
+                }
+            }
+        }
+    }
+
+    /// May the resolver select this variant right now? Returns
+    /// `(selectable, is_probe)`; quarantine cooloff and the probation
+    /// probe cadence advance as side effects.
+    pub fn screen(&mut self, cfg: &QuarantineConfig) -> (bool, bool) {
+        match self.state {
+            Health::Healthy => (true, false),
+            Health::Quarantined => {
+                self.cooloff_left = self.cooloff_left.saturating_sub(1);
+                if self.cooloff_left == 0 {
+                    self.state = Health::Probation;
+                    self.probe_tick = 0;
+                    self.probe_successes = 0;
+                }
+                (false, false)
+            }
+            Health::Probation => {
+                let fire = self.probe_tick % cfg.probe_every.max(1) == 0;
+                self.probe_tick = self.probe_tick.wrapping_add(1);
+                (fire, fire)
+            }
+        }
+    }
+
+    /// True while the variant must be skipped by non-probing resolution
+    /// (fallback ladder, retuner pool, cache hits).
+    pub fn blocked(&self) -> bool {
+        self.state != Health::Healthy
+    }
+
+    fn trip(&mut self, cfg: &QuarantineConfig) {
+        self.state = Health::Quarantined;
+        self.recent = 0;
+        self.seen = 0;
+        self.cooloff_left = cfg.cooloff.max(1);
+        self.probe_tick = 0;
+        self.probe_successes = 0;
+    }
+}
+
+/// Pool-wide concurrent quarantine state: one [`VariantHealth`] per
+/// shipped configuration behind a blocked-bit fast path.
+///
+/// The hot paths are engineered around "nothing is quarantined", which is
+/// the steady state: observing a success costs one relaxed load of the
+/// active count, and screening a config costs that load plus one relaxed
+/// bitmask load. Only failures and quarantined configs take the mutex.
+#[derive(Debug)]
+pub struct QuarantineSet {
+    cfg: QuarantineConfig,
+    /// One bit per config; set while the config is blocked (Quarantined
+    /// or Probation). Mirrors `inner` for lock-free screening.
+    blocked_bits: Vec<AtomicU64>,
+    /// Number of currently blocked configs (fast-path gate).
+    active: AtomicUsize,
+    inner: Mutex<Vec<VariantHealth>>,
+    trips: AtomicU64,
+    probes: AtomicU64,
+    restores: AtomicU64,
+}
+
+impl QuarantineSet {
+    /// An empty set (everything healthy) under `cfg` thresholds.
+    pub fn new(cfg: QuarantineConfig) -> QuarantineSet {
+        let words = NUM_CONFIGS.div_ceil(64);
+        QuarantineSet {
+            cfg,
+            blocked_bits: (0..words).map(|_| AtomicU64::new(0)).collect(),
+            active: AtomicUsize::new(0),
+            inner: Mutex::new(vec![VariantHealth::default(); NUM_CONFIGS]),
+            trips: AtomicU64::new(0),
+            probes: AtomicU64::new(0),
+            restores: AtomicU64::new(0),
+        }
+    }
+
+    /// True while any config is blocked — the one-load fast-path gate.
+    #[inline]
+    pub fn is_active(&self) -> bool {
+        self.active.load(Ordering::Relaxed) > 0
+    }
+
+    /// Lock-free: is `config` currently blocked (quarantined or on
+    /// probation)? Pure read; never advances cooloff or probe state.
+    #[inline]
+    pub fn blocks(&self, config: usize) -> bool {
+        if !self.is_active() || config >= NUM_CONFIGS {
+            return false;
+        }
+        let bit = 1u64 << (config % 64);
+        self.blocked_bits[config / 64].load(Ordering::Relaxed) & bit != 0
+    }
+
+    /// Fold one execution outcome for `config` in. `None` configs (the
+    /// XLA fallback artifact) are never tracked — XLA is the healthy
+    /// floor the ladder lands on. Returns the transition, if any.
+    pub fn observe(&self, config: Option<usize>, ok: bool) -> Option<Transition> {
+        let config = config?;
+        if config >= NUM_CONFIGS || (ok && !self.is_active()) {
+            // Success with nothing quarantined: the steady state. One
+            // relaxed load, no lock — keeps the warm path allocation-free
+            // and bit-identical to the pre-quarantine pool.
+            return None;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let was_blocked = inner[config].blocked();
+        let transition = inner[config].observe(ok, &self.cfg);
+        match transition {
+            Some(Transition::Tripped) => {
+                self.trips.fetch_add(1, Ordering::Relaxed);
+                if was_blocked {
+                    // A failed probe: the bit is already set.
+                    self.probes.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    self.set_blocked(config, true);
+                    self.active.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            Some(Transition::Probed) => {
+                self.probes.fetch_add(1, Ordering::Relaxed);
+            }
+            Some(Transition::Restored) => {
+                self.probes.fetch_add(1, Ordering::Relaxed);
+                self.restores.fetch_add(1, Ordering::Relaxed);
+                self.set_blocked(config, false);
+                self.active.fetch_sub(1, Ordering::Relaxed);
+            }
+            None => {}
+        }
+        transition
+    }
+
+    /// May the resolver select `config` right now? Advances cooloff and
+    /// the probation probe cadence for blocked configs; free (one load)
+    /// for healthy ones.
+    pub fn screen(&self, config: usize) -> bool {
+        if !self.blocks(config) {
+            return true;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let (selectable, _probe) = inner[config].screen(&self.cfg);
+        selectable
+    }
+
+    /// Total trips (Healthy/Probation → Quarantined).
+    pub fn trips(&self) -> u64 {
+        self.trips.load(Ordering::Relaxed)
+    }
+
+    /// Total probe outcomes observed during probation (successful or
+    /// tripping).
+    pub fn probes(&self) -> u64 {
+        self.probes.load(Ordering::Relaxed)
+    }
+
+    /// Total promotions back to healthy.
+    pub fn restores(&self) -> u64 {
+        self.restores.load(Ordering::Relaxed)
+    }
+
+    /// Number of currently blocked configs.
+    pub fn active_count(&self) -> usize {
+        self.active.load(Ordering::Relaxed)
+    }
+
+    fn set_blocked(&self, config: usize, blocked: bool) {
+        let bit = 1u64 << (config % 64);
+        let word = &self.blocked_bits[config / 64];
+        if blocked {
+            word.fetch_or(bit, Ordering::Relaxed);
+        } else {
+            word.fetch_and(!bit, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> QuarantineConfig {
+        QuarantineConfig::default()
+    }
+
+    #[test]
+    fn trips_at_windowed_threshold_exactly() {
+        // Pinned worked example (ported to tools/devsim_check.py): with
+        // the default window=16 / trip_failures=8, seven straight
+        // failures leave the variant healthy and the eighth trips it.
+        let c = cfg();
+        let mut v = VariantHealth::default();
+        for _ in 0..7 {
+            assert_eq!(v.observe(false, &c), None);
+        }
+        assert_eq!(v.observe(false, &c), Some(Transition::Tripped));
+        assert_eq!(v.state, Health::Quarantined);
+    }
+
+    #[test]
+    fn window_slides_old_failures_out() {
+        let c = cfg();
+        let mut v = VariantHealth::default();
+        // 7 failures, then enough successes to push them out of the
+        // 16-outcome window, then 7 more: never trips.
+        for _ in 0..7 {
+            assert_eq!(v.observe(false, &c), None);
+        }
+        for _ in 0..16 {
+            assert_eq!(v.observe(true, &c), None);
+        }
+        for _ in 0..7 {
+            assert_eq!(v.observe(false, &c), None);
+        }
+        assert_eq!(v.state, Health::Healthy);
+    }
+
+    #[test]
+    fn cooloff_then_probation_then_promotion() {
+        let c = cfg();
+        let mut v = VariantHealth::default();
+        for _ in 0..8 {
+            v.observe(false, &c);
+        }
+        assert_eq!(v.state, Health::Quarantined);
+        // Cooloff: 32 screens all refuse; the 32nd flips to probation.
+        for i in 0..c.cooloff {
+            let (sel, probe) = v.screen(&c);
+            assert!(!sel && !probe, "cooloff screen {i} must refuse");
+        }
+        assert_eq!(v.state, Health::Probation);
+        // Probe cadence: screen 0 of each probe_every-block fires.
+        let (sel, probe) = v.screen(&c);
+        assert!(sel && probe);
+        for _ in 1..c.probe_every {
+            let (sel, probe) = v.screen(&c);
+            assert!(!sel && !probe);
+        }
+        let (sel, probe) = v.screen(&c);
+        assert!(sel && probe);
+        // Two probe successes report Probed; the third promotes.
+        assert_eq!(v.observe(true, &c), Some(Transition::Probed));
+        assert_eq!(v.observe(true, &c), Some(Transition::Probed));
+        assert_eq!(v.observe(true, &c), Some(Transition::Restored));
+        assert_eq!(v.state, Health::Healthy);
+        assert!(!v.blocked());
+    }
+
+    #[test]
+    fn failed_probe_re_trips_and_restarts_cooloff() {
+        let c = cfg();
+        let mut v = VariantHealth::default();
+        for _ in 0..8 {
+            v.observe(false, &c);
+        }
+        for _ in 0..c.cooloff {
+            v.screen(&c);
+        }
+        assert_eq!(v.state, Health::Probation);
+        assert_eq!(v.observe(true, &c), Some(Transition::Probed));
+        assert_eq!(v.observe(false, &c), Some(Transition::Tripped));
+        assert_eq!(v.state, Health::Quarantined);
+        // The cooloff restarted in full.
+        let (sel, _) = v.screen(&c);
+        assert!(!sel);
+        assert_eq!(v.state, Health::Quarantined);
+    }
+
+    #[test]
+    fn quarantined_stragglers_are_ignored() {
+        let c = cfg();
+        let mut v = VariantHealth::default();
+        for _ in 0..8 {
+            v.observe(false, &c);
+        }
+        // Outcomes from batches dispatched pre-trip change nothing.
+        assert_eq!(v.observe(false, &c), None);
+        assert_eq!(v.observe(true, &c), None);
+        assert_eq!(v.state, Health::Quarantined);
+    }
+
+    #[test]
+    fn window_one_trips_on_single_failure() {
+        let c = QuarantineConfig { window: 1, trip_failures: 1, ..cfg() };
+        let mut v = VariantHealth::default();
+        assert_eq!(v.observe(true, &c), None);
+        assert_eq!(v.observe(false, &c), Some(Transition::Tripped));
+    }
+
+    #[test]
+    fn set_fast_path_tracks_nothing_while_healthy() {
+        let q = QuarantineSet::new(cfg());
+        assert!(!q.is_active());
+        for _ in 0..1000 {
+            assert_eq!(q.observe(Some(3), true), None);
+        }
+        assert!(q.screen(3));
+        assert!(!q.blocks(3));
+        assert_eq!(q.trips(), 0);
+    }
+
+    #[test]
+    fn set_trip_probe_restore_accounting() {
+        let q = QuarantineSet::new(cfg());
+        for i in 0..8 {
+            let t = q.observe(Some(5), false);
+            if i < 7 {
+                assert_eq!(t, None);
+            } else {
+                assert_eq!(t, Some(Transition::Tripped));
+            }
+        }
+        assert!(q.is_active());
+        assert!(q.blocks(5));
+        assert!(!q.blocks(4));
+        assert_eq!(q.active_count(), 1);
+        assert_eq!(q.trips(), 1);
+        // Drain the cooloff via screening, then probe to promotion.
+        for _ in 0..cfg().cooloff {
+            assert!(!q.screen(5));
+        }
+        assert!(q.screen(5)); // first probation screen fires the probe
+        for _ in 0..3 {
+            q.observe(Some(5), true);
+        }
+        assert!(!q.blocks(5));
+        assert!(!q.is_active());
+        assert_eq!(q.restores(), 1);
+        assert_eq!(q.probes(), 3);
+    }
+
+    #[test]
+    fn set_ignores_untracked_configs() {
+        let q = QuarantineSet::new(cfg());
+        assert_eq!(q.observe(None, false), None);
+        assert_eq!(q.observe(Some(NUM_CONFIGS + 7), false), None);
+        assert!(!q.is_active());
+        assert!(q.screen(NUM_CONFIGS + 7));
+    }
+}

@@ -16,6 +16,7 @@
 
 use std::sync::Arc;
 
+use crate::coordinator::quarantine::QuarantineSet;
 use crate::coordinator::selector::SelectorPolicy;
 use crate::dataset::GemmShape;
 use crate::runtime::{ArtifactMeta, Manifest};
@@ -27,6 +28,11 @@ pub struct KernelRegistry {
     /// The shipped deployment: artifact paths, deployed configs, buckets.
     pub manifest: Manifest,
     selector: SelectorHandle,
+    /// The pool-wide variant circuit breaker, when fault tolerance is
+    /// wired in: quarantined configs are skipped by the fallback ladder
+    /// (except for sampled probation probes) and masked out of
+    /// [`KernelRegistry::healthy_shipped_configs`].
+    quarantine: Option<Arc<QuarantineSet>>,
 }
 
 /// The outcome of a resolution, for metrics/inspection. `Copy`: cloning a
@@ -44,7 +50,39 @@ pub enum Resolution {
 impl KernelRegistry {
     /// A registry serving `manifest` through `policy` (generation 0).
     pub fn new(manifest: Manifest, policy: SelectorPolicy) -> KernelRegistry {
-        KernelRegistry { manifest, selector: SelectorHandle::new(policy) }
+        KernelRegistry { manifest, selector: SelectorHandle::new(policy), quarantine: None }
+    }
+
+    /// Builder: consult `quarantine` during resolution. Shared (one
+    /// `Arc`) across every retune domain's registry, so a variant that
+    /// trips anywhere is skipped everywhere.
+    pub fn with_quarantine(mut self, quarantine: Arc<QuarantineSet>) -> KernelRegistry {
+        self.quarantine = Some(quarantine);
+        self
+    }
+
+    /// The quarantine set this registry consults, if any.
+    pub fn quarantine(&self) -> Option<&Arc<QuarantineSet>> {
+        self.quarantine.as_ref()
+    }
+
+    /// The shipped configuration pool minus currently quarantined
+    /// variants — what the background retuner re-selects from, so a
+    /// tripped variant cannot be re-deployed while blocked. Degrades to
+    /// the full shipped pool if everything is blocked (selection needs a
+    /// non-empty candidate set, and the XLA floor still serves traffic).
+    pub fn healthy_shipped_configs(&self) -> Vec<usize> {
+        let shipped = self.manifest.shipped_configs();
+        let Some(q) = self.quarantine.as_ref() else {
+            return shipped;
+        };
+        let healthy: Vec<usize> =
+            shipped.iter().copied().filter(|&c| !q.blocks(c)).collect();
+        if healthy.is_empty() {
+            shipped
+        } else {
+            healthy
+        }
     }
 
     /// The current policy deployment snapshot.
@@ -68,6 +106,13 @@ impl KernelRegistry {
     /// Resolve a GEMM shape to an artifact. Returns the artifact, how the
     /// resolution fell back, and the generation of the policy snapshot
     /// that produced it.
+    ///
+    /// With a quarantine set wired in, the selector's choice is screened
+    /// first — a quarantined variant is skipped (falling through the
+    /// ladder to the next-best healthy config) except on the sampled
+    /// probation trickle, which lets the variant prove itself again —
+    /// and quarantined configs never serve as `FallbackConfig`. The XLA
+    /// comparator is the untracked healthy floor.
     pub fn resolve(
         &self,
         shape: &GemmShape,
@@ -77,12 +122,37 @@ impl KernelRegistry {
         // set can never come from different deployments.
         let snapshot = self.selector.load();
         let want = snapshot.policy.choose(shape);
+        if let Some(q) = self.quarantine.as_ref() {
+            // Screening (unlike the pure `blocks` reads below) advances
+            // the chosen variant's cooloff/probe state: the variant the
+            // selector keeps proposing is the one that earns probes.
+            if let Some(cfg) = want {
+                if q.is_active() && !q.screen(cfg) {
+                    for cfg in snapshot.policy.deployed() {
+                        if q.blocks(cfg) {
+                            continue;
+                        }
+                        if let Some(meta) = self.manifest.find_matmul(Some(cfg), m, k, n, b)
+                        {
+                            return Ok((meta, Resolution::FallbackConfig, snapshot.generation));
+                        }
+                    }
+                    if let Some(meta) = self.manifest.find_matmul(None, m, k, n, b) {
+                        return Ok((meta, Resolution::FallbackXla, snapshot.generation));
+                    }
+                    return Err(format!(
+                        "no healthy artifact for GEMM {m}x{k}x{n} (batch {b})"
+                    ));
+                }
+            }
+        }
         if let Some(meta) = self.manifest.find_matmul(want, m, k, n, b) {
             return Ok((meta, Resolution::Direct, snapshot.generation));
         }
         // Any other deployed config at this shape.
+        let quarantine = self.quarantine.as_deref();
         for cfg in snapshot.policy.deployed() {
-            if Some(cfg) != want {
+            if Some(cfg) != want && !quarantine.is_some_and(|q| q.blocks(cfg)) {
                 if let Some(meta) = self.manifest.find_matmul(Some(cfg), m, k, n, b) {
                     return Ok((meta, Resolution::FallbackConfig, snapshot.generation));
                 }
@@ -248,5 +318,92 @@ mod tests {
         // 4. Nothing shipped at the shape: error.
         let err = reg.resolve(&GemmShape::new(16, 16, 16, 1)).unwrap_err();
         assert!(err.contains("no artifact"), "{err}");
+    }
+
+    // --- quarantine interaction ------------------------------------------
+
+    use crate::coordinator::quarantine::{QuarantineConfig, QuarantineSet};
+
+    fn trip(q: &QuarantineSet, cfg: usize) {
+        for _ in 0..QuarantineConfig::default().trip_failures {
+            q.observe(Some(cfg), false);
+        }
+        assert!(q.blocks(cfg));
+    }
+
+    #[test]
+    fn quarantined_choice_falls_through_ladder() {
+        let a = crate::dataset::config_by_name("r8a4c4_wg16x16").unwrap().index();
+        let b = crate::dataset::config_by_name("r2a4c8_wg8x32").unwrap().index();
+        let q = Arc::new(QuarantineSet::new(QuarantineConfig::default()));
+        let reg = registry(always_a_policy(a, b)).with_quarantine(q.clone());
+        let shape = GemmShape::new(64, 64, 64, 1);
+        // Healthy: A resolves directly (both A and B ship in synthetic).
+        let (meta, res, _) = reg.resolve(&shape).unwrap();
+        assert_eq!((meta.config_index, res), (Some(a), Resolution::Direct));
+        // Tripped A: resolution falls to the next deployed config.
+        trip(&q, a);
+        let (meta, res, _) = reg.resolve(&shape).unwrap();
+        assert_eq!(res, Resolution::FallbackConfig);
+        assert_ne!(meta.config_index, Some(a));
+        // Tripped B too: the whole deployed set of this policy ({A, B})
+        // is blocked; the XLA comparator is the untracked healthy floor.
+        trip(&q, b);
+        assert_eq!(q.trips(), 2);
+        let (meta, res, _) = reg.resolve(&shape).unwrap();
+        assert_eq!((meta.config_index, res), (None, Resolution::FallbackXla));
+    }
+
+    #[test]
+    fn probation_probe_resolves_direct() {
+        let a = crate::dataset::config_by_name("r8a4c4_wg16x16").unwrap().index();
+        let b = crate::dataset::config_by_name("r2a4c8_wg8x32").unwrap().index();
+        let cfg = QuarantineConfig::default();
+        let q = Arc::new(QuarantineSet::new(cfg));
+        let reg = registry(always_a_policy(a, b)).with_quarantine(q.clone());
+        let shape = GemmShape::new(64, 64, 64, 1);
+        trip(&q, a);
+        // Each resolve screens A once, ticking the cooloff; after the
+        // cooloff drains the next resolve is the fired probe: Direct.
+        for _ in 0..cfg.cooloff {
+            let (_, res, _) = reg.resolve(&shape).unwrap();
+            assert_ne!(res, Resolution::Direct);
+        }
+        let (meta, res, _) = reg.resolve(&shape).unwrap();
+        assert_eq!((meta.config_index, res), (Some(a), Resolution::Direct));
+        // The probe is a sampled trickle, not a floodgate: the next
+        // probe_every - 1 resolves fall back again.
+        for _ in 1..cfg.probe_every {
+            let (_, res, _) = reg.resolve(&shape).unwrap();
+            assert_ne!(res, Resolution::Direct);
+        }
+        // Promote on sustained probe success; resolution heals to Direct.
+        for _ in 0..cfg.promote_successes {
+            q.observe(Some(a), true);
+        }
+        assert!(!q.blocks(a));
+        let (_, res, _) = reg.resolve(&shape).unwrap();
+        assert_eq!(res, Resolution::Direct);
+        assert_eq!(q.restores(), 1);
+    }
+
+    #[test]
+    fn healthy_shipped_configs_masks_blocked() {
+        let reg = registry(SelectorPolicy::Xla);
+        let all = reg.manifest.shipped_configs();
+        assert_eq!(reg.healthy_shipped_configs(), all);
+        let q = Arc::new(QuarantineSet::new(QuarantineConfig::default()));
+        let reg = registry(SelectorPolicy::Xla).with_quarantine(q.clone());
+        trip(&q, all[0]);
+        let healthy = reg.healthy_shipped_configs();
+        assert_eq!(healthy.len(), all.len() - 1);
+        assert!(!healthy.contains(&all[0]));
+        // All blocked: degrade to the full pool rather than an empty one.
+        for &c in &all {
+            if !q.blocks(c) {
+                trip(&q, c);
+            }
+        }
+        assert_eq!(reg.healthy_shipped_configs(), all);
     }
 }

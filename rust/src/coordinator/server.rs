@@ -66,18 +66,20 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::admission::{
-    drain_hint_ns, AdmissionPolicy, RejectReason, SubmitError, MIN_RETRY_HINT_NS, REJECT_REASONS,
+    drain_hint_ns, AdmissionPolicy, RejectReason, RetryBudget, SubmitError, MIN_RETRY_HINT_NS,
+    REJECT_REASONS,
 };
 use crate::coordinator::batcher::{Batcher, BatcherConfig, Pending};
 use crate::coordinator::cache::{CostModel, ResolutionCache, ResolvedKernel};
 use crate::coordinator::completion::{Completion, CompletionPool, Ticket};
 use crate::coordinator::metrics::{LatencyHistogram, Metrics, StripedCounter};
+use crate::coordinator::quarantine::{QuarantineConfig, QuarantineSet, Transition};
 use crate::coordinator::registry::KernelRegistry;
 use crate::coordinator::selector::SelectorPolicy;
 use crate::coordinator::tenant::{quota_would_admit, reserved_shares, TenantId, TenantSpec};
 use crate::coordinator::trace::{pack_shape, EventKind, FlightRecorder, TraceConfig};
 use crate::dataset::GemmShape;
-use crate::engine::{Backend, EngineKind};
+use crate::engine::{Backend, EngineKind, FaultPlan, FaultyBackend};
 use crate::runtime::Manifest;
 use crate::tuning::regret::{evaluate_regret, RegretEstimator};
 use crate::tuning::retuner::{retune_once, RetuneConfig, RetuneOutcome, Retuner, RetunerStats};
@@ -159,6 +161,14 @@ const IDLE_POLL: Duration = Duration::from_millis(5);
 /// reallocate on the client thread (the zero-allocation hit path).
 const INJECTOR_RESERVE: usize = 32;
 
+/// Attempts (first try included) `call_with_retry` makes per request.
+pub const MAX_RETRY_ATTEMPTS: u32 = 3;
+
+/// Upper bound on how long a retry sleeps on an admission retry hint —
+/// hints are drain-priced and can stretch under deep backlogs, but a
+/// blocking retry caller should re-probe admission well before that.
+const RETRY_SLEEP_CAP: Duration = Duration::from_millis(20);
+
 /// EWMA smoothing factor for the measured per-shard drain rate. Biased
 /// toward history (new sample weighted 1/4) because batch-to-batch
 /// throughput is noisy — one unusually small or large batch should nudge
@@ -188,8 +198,17 @@ impl ShardLoad {
     }
 
     fn sub(&self, n: usize, cost_ns: u64) {
-        self.queued.fetch_sub(n, Ordering::Relaxed);
-        self.cost_ns.fetch_sub(cost_ns, Ordering::Relaxed);
+        // Saturating, not wrapping: a dead-queue gauge reset (see
+        // [`ShardLoad::reset_to`]) can race a concurrent push or steal
+        // transfer whose matching `sub` lands after the reset already
+        // dropped that share — underflow would poison the router's score
+        // forever, while a transiently low gauge self-corrects.
+        let _ = self
+            .queued
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |q| Some(q.saturating_sub(n)));
+        let _ = self.cost_ns.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |c| {
+            Some(c.saturating_sub(cost_ns))
+        });
     }
 
     /// Fold `n` completions served over `secs` of wall clock into the
@@ -205,6 +224,21 @@ impl ShardLoad {
         let next =
             if prev > 0.0 { prev + DRAIN_EWMA_ALPHA * (sample - prev) } else { sample };
         self.drain_rate_bits.store(next.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Reset the gauge to an exact inventory: `queued` requests of
+    /// `cost_ns` total estimated cost, and a cold drain rate. Called when
+    /// a queue is declared dead (its worker exited or panicked): jobs the
+    /// dead worker had already pulled into its private batcher can never
+    /// complete, so their `sub` side will never run — without this reset
+    /// the gauge keeps their share forever and the router keeps scoring a
+    /// corpse as busy. The inventory is what the injector still holds
+    /// (rescuable by steal or a respawned worker); the drain EWMA resets
+    /// to unmeasured because a replacement worker's rate starts cold.
+    pub fn reset_to(&self, queued: usize, cost_ns: u64) {
+        self.queued.store(queued, Ordering::Relaxed);
+        self.cost_ns.store(cost_ns, Ordering::Relaxed);
+        self.drain_rate_bits.store(0, Ordering::Relaxed);
     }
 
     /// Requests currently owned by the shard.
@@ -294,6 +328,18 @@ pub struct PoolConfig {
     /// zero-allocation — events are fixed-size values written in place,
     /// and a full ring drops-and-counts instead of blocking.
     pub trace: Option<TraceConfig>,
+    /// Deterministic fault injection (see [`FaultPlan`]): when set, every
+    /// shard wraps its backend in a [`FaultyBackend`] seeded from the
+    /// plan, and the drain path verifies an output canary on every
+    /// result so silent corruption surfaces as `Err`, never `Ok`.
+    /// `None` (the default) skips the wrap entirely — the no-fault pool
+    /// is bit-identical to one without this field.
+    pub fault: Option<FaultPlan>,
+    /// Variant-quarantine knobs (see [`QuarantineConfig`]): windowed
+    /// failure tracking per kernel configuration, cooloff, and the
+    /// half-open probation cadence. Tracking is always on — the healthy
+    /// fast path is one relaxed atomic load per served request.
+    pub quarantine: QuarantineConfig,
 }
 
 impl Default for PoolConfig {
@@ -313,6 +359,8 @@ impl Default for PoolConfig {
             tenants: Vec::new(),
             quota_slots: 0,
             trace: None,
+            fault: None,
+            quarantine: QuarantineConfig::default(),
         }
     }
 }
@@ -619,6 +667,18 @@ struct AliveGuard(Arc<ShardQueue>);
 impl Drop for AliveGuard {
     fn drop(&mut self) {
         self.0.alive.store(false, Ordering::Relaxed);
+        // Reset the load gauge to exactly the injector's surviving
+        // backlog. Jobs the worker had pulled into its private batcher
+        // die with it (their completions deliver synthetic failures as
+        // the batcher unwinds — which happens before this guard drops),
+        // and their gauge share would otherwise leak forever, making the
+        // router score a corpse as busy. `try_lock` degrades gracefully:
+        // a contended or poisoned lock skips the reset rather than
+        // risking a double panic during unwind.
+        if let Ok(inner) = self.0.inner.try_lock() {
+            let cost = inner.jobs.iter().map(|j| j.cost_ns).sum();
+            self.0.load.reset_to(inner.jobs.len(), cost);
+        }
     }
 }
 
@@ -687,6 +747,12 @@ struct FrontCounters {
     /// Selector hot-swaps published via `swap_selector` (the background
     /// retuner counts its own swaps in [`RetunerStats`]).
     selector_swaps: AtomicUsize,
+    /// Retries spent from the retry budget by `call_with_retry`.
+    retries: StripedCounter,
+    /// Retries refused because the budget was below its shed threshold.
+    retries_denied: StripedCounter,
+    /// Dead shard workers respawned by the supervisor.
+    respawns: AtomicUsize,
 }
 
 /// Handle to a running executor pool.
@@ -733,7 +799,11 @@ pub struct Coordinator {
     /// explicit `retune_now` calls accumulate into the same place.
     retune_stats: Arc<Mutex<RetunerStats>>,
     queues: Arc<Vec<Arc<ShardQueue>>>,
-    workers: Vec<Option<JoinHandle<()>>>,
+    /// Worker handles, mutex-wrapped so the supervisor can swap a dead
+    /// worker's handle for its replacement's from any submitting thread.
+    /// Never locked on the submit fast path — liveness reads go through
+    /// the queues' lock-free `alive` flags.
+    workers: Mutex<Vec<Option<JoinHandle<()>>>>,
     /// Striped frontend counters (requests that never reach a shard, plus
     /// explicit swap counts); folded into the totals at shutdown.
     front: FrontCounters,
@@ -769,6 +839,29 @@ pub struct Coordinator {
     /// The typed reason drain-side sheds are attributed to (derived from
     /// the admission policy at startup).
     shed_reason: RejectReason,
+    /// The pool-wide variant circuit breaker every domain's registry and
+    /// cache consult (see [`QuarantineSet`]).
+    quarantine: Arc<QuarantineSet>,
+    /// Token bucket bounding `call_with_retry`: retries shed first under
+    /// load, so they can never amplify overload.
+    retry_budget: RetryBudget,
+    /// Everything `maybe_respawn` needs to spawn a replacement worker on
+    /// a dead shard's existing queue.
+    respawn: RespawnSpec,
+}
+
+/// The construction inputs `start_pool` gave the original shard workers,
+/// retained so the supervisor can respawn a replacement on the same
+/// queue after a worker dies.
+struct RespawnSpec {
+    artifacts_dir: PathBuf,
+    engine: EngineKind,
+    batcher: BatcherConfig,
+    steal_min: usize,
+    queue_budget: Option<Duration>,
+    domains: Arc<Vec<ShardDomain>>,
+    lanes: Arc<Vec<Arc<TenantLive>>>,
+    fault: Option<FaultPlan>,
 }
 
 /// The synthetic response for a request rejected on the submit path.
@@ -872,9 +965,18 @@ impl Coordinator {
                 });
             }
         }
+        // One pool-wide quarantine set: every domain's registry and cache
+        // consult the same circuit breaker, so a variant tripped by one
+        // tenant's failures stops being served to everyone.
+        let quarantine = Arc::new(QuarantineSet::new(cfg.quarantine));
         let domain_registries: Vec<Arc<KernelRegistry>> = domain_devices
             .iter()
-            .map(|_| Arc::new(KernelRegistry::new(manifest.clone(), policy.clone())))
+            .map(|_| {
+                Arc::new(
+                    KernelRegistry::new(manifest.clone(), policy.clone())
+                        .with_quarantine(quarantine.clone()),
+                )
+            })
             .collect();
         let domain_sinks: Vec<Arc<TelemetrySink>> =
             domain_devices.iter().map(|_| Arc::new(TelemetrySink::default())).collect();
@@ -929,7 +1031,8 @@ impl Coordinator {
             .trace
             .map(|trace_cfg| Arc::new(FlightRecorder::new(trace_cfg, n_domains)));
 
-        let registry = Arc::new(KernelRegistry::new(manifest, policy));
+        let registry =
+            Arc::new(KernelRegistry::new(manifest, policy).with_quarantine(quarantine.clone()));
         let telemetry = Arc::new(TelemetrySink::default());
         let shard_domains: Arc<Vec<ShardDomain>> = Arc::new(
             std::iter::once(ShardDomain { telemetry: telemetry.clone(), device: None })
@@ -941,6 +1044,13 @@ impl Coordinator {
         let inflight = Arc::new(AtomicUsize::new(0));
         let queues: Arc<Vec<Arc<ShardQueue>>> =
             Arc::new((0..n_shards).map(|_| Arc::new(ShardQueue::new())).collect());
+        // The shed budget is wall-clock wait since submit, which includes
+        // the batcher's *deliberate* max_wait batching delay — a budget
+        // below it would shed underfull traffic on an idle pool. Clamp so
+        // only time beyond the intended batching window (with slack for
+        // the batch then being served) ever counts as overload.
+        let queue_budget =
+            cfg.admission.queue_budget().map(|b| b.max(cfg.batcher.max_wait * 2));
         let mut workers: Vec<Option<JoinHandle<()>>> = Vec::with_capacity(n_shards);
         for shard_id in 0..n_shards {
             let (ready_tx, ready_rx) = channel::<Result<(), String>>();
@@ -952,16 +1062,7 @@ impl Coordinator {
             let domains_for_shard = shard_domains.clone();
             let recorder_for_shard = recorder.clone();
             let lanes_for_shard = lanes.clone();
-            // The shed budget is wall-clock wait since submit, which
-            // includes the batcher's *deliberate* max_wait batching delay
-            // — a budget below it would shed underfull traffic on an idle
-            // pool. Clamp so only time beyond the intended batching
-            // window (with slack for the batch then being served) ever
-            // counts as overload.
-            let queue_budget = cfg
-                .admission
-                .queue_budget()
-                .map(|b| b.max(cfg.batcher.max_wait * 2));
+            let quarantine_for_shard = quarantine.clone();
             let spawned = std::thread::Builder::new()
                 .name(format!("kernelsel-shard-{shard_id}"))
                 .spawn(move || {
@@ -978,6 +1079,8 @@ impl Coordinator {
                             recorder: recorder_for_shard,
                             lanes: lanes_for_shard,
                             shed_reason,
+                            quarantine: quarantine_for_shard,
+                            fault: cfg.fault,
                         },
                         ready_tx,
                     )
@@ -1002,7 +1105,8 @@ impl Coordinator {
         }
         let cache = Arc::new(
             ResolutionCache::with_model(cfg.selector_cache, model)
-                .with_telemetry(telemetry.clone()),
+                .with_telemetry(telemetry.clone())
+                .with_quarantine(quarantine.clone()),
         );
         let retune_stats = Arc::new(Mutex::new(RetunerStats::default()));
         let retuner = cfg.retune.clone().map(|retune_cfg| {
@@ -1024,7 +1128,8 @@ impl Coordinator {
             .map(|(domain_registry, sink)| {
                 let domain_cache = Arc::new(
                     ResolutionCache::with_model(cfg.selector_cache, model)
-                        .with_telemetry(sink.clone()),
+                        .with_telemetry(sink.clone())
+                        .with_quarantine(quarantine.clone()),
                 );
                 let stats = Arc::new(Mutex::new(RetunerStats::default()));
                 let domain_retuner = cfg.retune.clone().map(|retune_cfg| {
@@ -1053,7 +1158,7 @@ impl Coordinator {
             retuner,
             retune_stats,
             queues,
-            workers,
+            workers: Mutex::new(workers),
             front: FrontCounters::default(),
             inflight,
             engine_name: cfg.engine.name(),
@@ -1067,6 +1172,18 @@ impl Coordinator {
             recorder,
             regret: Mutex::new((0..n_domains).map(|_| RegretEstimator::default()).collect()),
             shed_reason,
+            quarantine,
+            retry_budget: RetryBudget::default(),
+            respawn: RespawnSpec {
+                artifacts_dir,
+                engine: engine_spec,
+                batcher: cfg.batcher,
+                steal_min: cfg.steal_min.max(1),
+                queue_budget,
+                domains: shard_domains,
+                lanes,
+                fault: cfg.fault,
+            },
         })
     }
 
@@ -1650,13 +1767,169 @@ impl Coordinator {
             );
             prom_sample(&mut out, "kernelsel_trace_chains_total", "", rec.chains() as f64);
         }
+        // Quarantine / self-healing: the variant circuit breaker, the
+        // shard supervisor, and the retry budget. Always exposed —
+        // tracking is always on.
+        prom_family(
+            &mut out,
+            "kernelsel_quarantine_trips_total",
+            "counter",
+            "Variants tripped into quarantine by windowed failure tracking.",
+        );
+        prom_sample(
+            &mut out,
+            "kernelsel_quarantine_trips_total",
+            "",
+            self.quarantine.trips() as f64,
+        );
+        prom_family(
+            &mut out,
+            "kernelsel_quarantine_probes_total",
+            "counter",
+            "Half-open probation probes of quarantined variants.",
+        );
+        prom_sample(
+            &mut out,
+            "kernelsel_quarantine_probes_total",
+            "",
+            self.quarantine.probes() as f64,
+        );
+        prom_family(
+            &mut out,
+            "kernelsel_quarantine_restores_total",
+            "counter",
+            "Variants promoted back to healthy after sustained probe success.",
+        );
+        prom_sample(
+            &mut out,
+            "kernelsel_quarantine_restores_total",
+            "",
+            self.quarantine.restores() as f64,
+        );
+        prom_family(
+            &mut out,
+            "kernelsel_quarantine_active",
+            "gauge",
+            "Variants currently quarantined or in probation.",
+        );
+        prom_sample(
+            &mut out,
+            "kernelsel_quarantine_active",
+            "",
+            self.quarantine.active_count() as f64,
+        );
+        prom_family(
+            &mut out,
+            "kernelsel_worker_respawns",
+            "counter",
+            "Dead shard workers respawned by the supervisor.",
+        );
+        prom_sample(
+            &mut out,
+            "kernelsel_worker_respawns",
+            "",
+            self.front.respawns.load(Ordering::Relaxed) as f64,
+        );
+        prom_family(
+            &mut out,
+            "kernelsel_retries_total",
+            "counter",
+            "Retries spent from the retry budget by call_with_retry.",
+        );
+        prom_sample(&mut out, "kernelsel_retries_total", "", self.front.retries.sum() as f64);
+        prom_family(
+            &mut out,
+            "kernelsel_retries_denied_total",
+            "counter",
+            "Retries refused because the budget was below its shed threshold.",
+        );
+        prom_sample(
+            &mut out,
+            "kernelsel_retries_denied_total",
+            "",
+            self.front.retries_denied.sum() as f64,
+        );
         out
     }
 
-    /// Whether a shard's worker thread is still running. A worker that
-    /// panicked leaves its queue alive but will never serve it.
+    /// Whether a shard's worker thread is still running, read lock-free
+    /// from the queue's `alive` flag (cleared by the worker's
+    /// [`AliveGuard`] on every exit path — normal stop, failed backend
+    /// init, or a panic unwinding; re-armed by a respawned replacement).
     fn worker_alive(&self, shard: usize) -> bool {
-        self.workers[shard].as_ref().is_some_and(|w| !w.is_finished())
+        self.queues[shard].alive.load(Ordering::Relaxed)
+    }
+
+    /// Supervisor: try to respawn a dead shard's worker on its existing
+    /// queue, so queued work is re-homed to the replacement and routing
+    /// stops favoring a corpse. Returns whether the shard is (again)
+    /// alive. Contention-tolerant: if another submitter already holds the
+    /// supervisor lock, this one routes around the dead shard and lets
+    /// the winner finish the respawn.
+    fn maybe_respawn(&self, shard: usize) -> bool {
+        let Ok(mut workers) = self.workers.try_lock() else { return false };
+        if self.worker_alive(shard) {
+            return true; // another submitter's respawn already landed
+        }
+        // Join the dead handle first: the thread has already left
+        // `shard_loop` (its AliveGuard cleared the flag), so this only
+        // reaps it and surfaces nothing to unwind into us.
+        if let Some(old) = workers[shard].take() {
+            let _ = old.join();
+        }
+        let spec = &self.respawn;
+        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+        let dir = spec.artifacts_dir.clone();
+        let engine = spec.engine.clone();
+        let batcher_cfg = spec.batcher.clone();
+        let queues = self.queues.clone();
+        let steal_min = spec.steal_min;
+        let queue_budget = spec.queue_budget;
+        let domains = spec.domains.clone();
+        let side = ShardSide {
+            recorder: self.recorder.clone(),
+            lanes: spec.lanes.clone(),
+            shed_reason: self.shed_reason,
+            quarantine: self.quarantine.clone(),
+            fault: spec.fault,
+        };
+        let spawned = std::thread::Builder::new()
+            .name(format!("kernelsel-shard-{shard}"))
+            .spawn(move || {
+                shard_loop(
+                    shard,
+                    dir,
+                    engine,
+                    batcher_cfg,
+                    queues,
+                    steal_min,
+                    queue_budget,
+                    domains,
+                    side,
+                    ready_tx,
+                )
+            });
+        let Ok(worker) = spawned else { return false };
+        match ready_rx.recv() {
+            Ok(Ok(())) => {
+                // The replacement owns the dead worker's whole injector
+                // backlog — that is the re-homed request count.
+                let rehomed = self.queues[shard].load.depth() as u64;
+                workers[shard] = Some(worker);
+                self.front.respawns.fetch_add(1, Ordering::Relaxed);
+                if let Some(rec) = self.recorder.as_deref() {
+                    rec.event(0, EventKind::Respawn, shard as u16, 0, [rehomed, 0, 0]);
+                }
+                true
+            }
+            _ => {
+                // Backend init failed (or the replacement died during
+                // startup): reap it and leave the shard dead — the
+                // router keeps spilling around it.
+                let _ = worker.join();
+                false
+            }
+        }
     }
 
     /// The least-loaded shard whose worker is still alive, if any.
@@ -1704,13 +1977,15 @@ impl Coordinator {
         }
     }
 
-    /// Route a resolved request to a live shard. A panicked worker leaves
-    /// its queue alive but unserved: reroute new work to the least-loaded
-    /// live shard (work already queued on the dead shard can still be
-    /// rescued by the steal path). `None` when no live shard is left.
+    /// Route a resolved request to a live shard. A dead worker's shard is
+    /// first offered to the supervisor for an in-place respawn (re-homing
+    /// its queued work to the replacement); if that fails or is
+    /// contended, reroute to the least-loaded live shard (work already
+    /// queued on the dead shard can still be rescued by the steal path).
+    /// `None` when no live shard is left and none could be revived.
     fn pick_shard(&self, resolved: &ResolvedKernel) -> Option<(usize, bool)> {
         let (shard, spilled) = self.route(resolved);
-        if self.worker_alive(shard) {
+        if self.worker_alive(shard) || self.maybe_respawn(shard) {
             Some((shard, spilled))
         } else {
             self.least_loaded_alive().map(|alt| (alt, true))
@@ -2202,6 +2477,72 @@ impl Coordinator {
         Ok(self.submit_as(tenant, shape, lhs, rhs).wait())
     }
 
+    /// [`Coordinator::call`] with a bounded, admission-aware retry: an
+    /// admission rejection (after sleeping its retry hint) or a failed
+    /// execution is re-submitted up to [`MAX_RETRY_ATTEMPTS`] times, each
+    /// retry spending one token from the pool's [`RetryBudget`]. Tokens
+    /// refill only on success, so under sustained overload the bucket
+    /// drains to its shed threshold and retries are refused *first* —
+    /// retry traffic can never amplify overload. The last response is
+    /// returned as-is when retries are exhausted or denied.
+    pub fn call_with_retry(
+        &self,
+        shape: GemmShape,
+        lhs: Vec<f32>,
+        rhs: Vec<f32>,
+    ) -> Result<GemmResponse, String> {
+        self.call_with_retry_as(TenantId::ANONYMOUS, shape, lhs, rhs)
+    }
+
+    /// [`Coordinator::call_with_retry`] on behalf of `tenant` (see
+    /// [`Coordinator::submit_as`] for the tenant mechanics each attempt
+    /// goes through).
+    pub fn call_with_retry_as(
+        &self,
+        tenant: TenantId,
+        shape: GemmShape,
+        lhs: Vec<f32>,
+        rhs: Vec<f32>,
+    ) -> Result<GemmResponse, String> {
+        let mut attempt = 1u32;
+        loop {
+            let ticket = self.submit_as(tenant, shape, lhs.clone(), rhs.clone());
+            let rejection = ticket.rejection();
+            let resp = ticket.wait();
+            if resp.result.is_ok() {
+                self.retry_budget.on_success();
+                return Ok(resp);
+            }
+            if attempt >= MAX_RETRY_ATTEMPTS {
+                return Ok(resp);
+            }
+            if !self.retry_budget.try_spend() {
+                self.front.retries_denied.incr();
+                return Ok(resp);
+            }
+            self.front.retries.incr();
+            // Trace the retry: the rejection's typed reason code, or the
+            // transient-failure sentinel for an executed-but-failed call.
+            let (code, hint) = match rejection {
+                Some(err) => (u64::from(err.reason().code()), err.retry_after_hint()),
+                None => (u64::MAX, None),
+            };
+            if let Some(rec) = self.recorder.as_deref() {
+                rec.event(
+                    0,
+                    EventKind::Retry,
+                    0,
+                    tenant.0,
+                    [code, u64::from(attempt), self.retry_budget.tokens_milli()],
+                );
+            }
+            if let Some(hint) = hint {
+                std::thread::sleep(hint.min(RETRY_SLEEP_CAP));
+            }
+            attempt += 1;
+        }
+    }
+
     /// Stop every shard and return the merged pool metrics.
     pub fn stop(self) -> Metrics {
         self.stop_detailed().total
@@ -2228,15 +2569,18 @@ impl Coordinator {
             replies.push(mrx);
         }
         let mut per_shard = Vec::with_capacity(self.queues.len());
-        for (worker, mrx) in self.workers.iter_mut().zip(replies) {
-            // Join before reading the reply: a worker that died without
-            // taking its stop signal never sends, and its reply Sender sits
-            // parked inside the queue — a blocking recv() would deadlock.
-            // After the join, the flushed metrics (if any) are buffered.
-            if let Some(w) = worker.take() {
-                let _ = w.join();
+        {
+            let mut workers = self.workers.lock().unwrap_or_else(|p| p.into_inner());
+            for (worker, mrx) in workers.iter_mut().zip(replies) {
+                // Join before reading the reply: a worker that died without
+                // taking its stop signal never sends, and its reply Sender sits
+                // parked inside the queue — a blocking recv() would deadlock.
+                // After the join, the flushed metrics (if any) are buffered.
+                if let Some(w) = worker.take() {
+                    let _ = w.join();
+                }
+                per_shard.push(mrx.try_recv().unwrap_or_default());
             }
-            per_shard.push(mrx.try_recv().unwrap_or_default());
         }
         let mut total = Metrics::default();
         for m in &per_shard {
@@ -2251,6 +2595,14 @@ impl Coordinator {
         total.selector_swaps += self.front.selector_swaps.load(Ordering::Relaxed) + tuning.swaps;
         total.retunes += tuning.retunes;
         total.drift_trips += tuning.drift_trips;
+        // Quarantine / self-healing counters: the shared set's atomics
+        // and the frontend's supervisor/retry cells.
+        total.quarantine_trips += self.quarantine.trips() as usize;
+        total.quarantine_probes += self.quarantine.probes() as usize;
+        total.quarantine_restores += self.quarantine.restores() as usize;
+        total.worker_respawns += self.front.respawns.load(Ordering::Relaxed);
+        total.retries += self.front.retries.sum();
+        total.retries_denied += self.front.retries_denied.sum();
         // Extra domains fold their retuner counters into the totals too
         // (the dedicated `tuning` field stays the default domain's).
         for domain in &self.extra_domains {
@@ -2296,7 +2648,8 @@ impl Coordinator {
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        shutdown_workers(&self.queues, &mut self.workers);
+        let mut workers = self.workers.lock().unwrap_or_else(|p| p.into_inner());
+        shutdown_workers(&self.queues, &mut workers);
     }
 }
 
@@ -2425,6 +2778,13 @@ struct ShardSide {
     recorder: Option<Arc<FlightRecorder>>,
     lanes: Arc<Vec<Arc<TenantLive>>>,
     shed_reason: RejectReason,
+    /// The pool-wide variant circuit breaker `run_batch` feeds per-job
+    /// outcomes (and whose transitions it traces).
+    quarantine: Arc<QuarantineSet>,
+    /// Fault-injection plan: `Some` additionally arms the per-result
+    /// integrity canary in `run_batch`. `None` in production pools — the
+    /// canary then costs one branch per served result, no recompute.
+    fault: Option<FaultPlan>,
 }
 
 /// Everything the drain-side paths (`run_batch`, `shed_jobs`) share for
@@ -2538,9 +2898,22 @@ fn shard_loop(
             return;
         }
     };
+    // Fault injection: wrap the backend in the seeded fault proxy. An
+    // absent or inert plan (and one targeting another shard) skips the
+    // wrap entirely, so the no-fault pool runs the unwrapped backend —
+    // asserted bit-identical by the `fault_plan_off` tests.
+    if let Some(plan) = ctx.side.fault {
+        if !plan.is_inert() && plan.applies_to_shard(shard_id) {
+            backend = Box::new(FaultyBackend::new(backend, plan, shard_id));
+        }
+    }
     let max_batch = batcher_cfg.max_batch.max(1);
     let mut batcher: Batcher<Job> = Batcher::new(batcher_cfg);
     let mut metrics = Metrics::default();
+    // Re-arm the liveness flag: on a respawn the dead predecessor's
+    // AliveGuard cleared it, and the router must start counting this
+    // shard as alive again exactly when it is ready to serve.
+    my.alive.store(true, Ordering::Relaxed);
     let _ = ready.send(Ok(()));
 
     let mut stop_reply: Option<Sender<Metrics>> = None;
@@ -2618,6 +2991,37 @@ fn shard_loop(
     }
 }
 
+/// Recompute output element (0, 0, 0) as the ascending-k dot product of
+/// the first LHS row and the first RHS column — the exact accumulation
+/// (including the zero-LHS skip) of the reference `host_gemm`, which the
+/// native CPU variant family reproduces bit-for-bit. A mismatch means
+/// the backend delivered a silently corrupted result; refusing it here
+/// turns corruption into an execution failure (counted in the metrics
+/// and fed to the quarantine tracker), so a corrupt result is never
+/// delivered as `Ok`. Only run while a fault plan is configured.
+///
+/// [`host_gemm`]: crate::engine::sim::host_gemm
+fn integrity_canary(out: &[f32], req: &GemmRequest) -> Result<(), String> {
+    let (k, n) = (req.shape.k, req.shape.n);
+    if k == 0 || req.lhs.len() < k || req.rhs.len() < (k - 1) * n + 1 {
+        return Ok(()); // degenerate request: nothing to verify
+    }
+    let mut expect = 0.0f32;
+    for (kk, &a) in req.lhs[..k].iter().enumerate() {
+        if a == 0.0 {
+            continue;
+        }
+        expect += a * req.rhs[kk * n];
+    }
+    match out.first() {
+        Some(got) if got.to_bits() == expect.to_bits() => Ok(()),
+        _ => Err(format!(
+            "corrupt result detected: output[0] disagrees with the reference \
+             dot product (expected {expect})"
+        )),
+    }
+}
+
 fn run_batch(
     backend: &mut dyn Backend,
     ctx: &ShardCtx,
@@ -2675,7 +3079,14 @@ fn run_batch(
                             measured_secs,
                         );
                         measured_ns = (measured_secs * 1e9) as u64;
-                        Ok(out)
+                        // Integrity canary, armed only under a fault
+                        // plan: silent corruption must surface as `Err`,
+                        // never be delivered as `Ok`.
+                        if ctx.side.fault.is_some() {
+                            integrity_canary(&out, &job.req).map(|()| out)
+                        } else {
+                            Ok(out)
+                        }
                     }
                     Err(e) => Err(e),
                 }
@@ -2693,6 +3104,24 @@ fn run_batch(
         metrics.record_resolution(&job.resolved.resolution);
         let config_used = job.resolved.meta.config_index;
         metrics.record_request(latency.as_secs_f64(), config_used);
+        // Feed the circuit breaker. The healthy-success fast path is one
+        // relaxed load inside `observe`; a transition is rare enough to
+        // trace unconditionally (pool-level events, seq 0).
+        if let Some(transition) = ctx.side.quarantine.observe(config_used, result.is_ok()) {
+            let q = ctx.side.quarantine.as_ref();
+            let config = config_used.map_or(0, |c| c as u64);
+            match transition {
+                Transition::Tripped => {
+                    ctx.event(0, EventKind::QuarantineTrip, 0, [config, q.trips(), 0]);
+                }
+                Transition::Probed => {
+                    ctx.event(0, EventKind::QuarantineProbe, 0, [config, 0, 0]);
+                }
+                Transition::Restored => {
+                    ctx.event(0, EventKind::QuarantineRestore, 0, [config, q.restores(), 0]);
+                }
+            }
+        }
         ctx.queue.live.requests.fetch_add(1, Ordering::Relaxed);
         if !job.tenant.is_anonymous() {
             let in_slo = result.is_ok() && job.slo_wall.map_or(true, |wall| latency <= wall);
@@ -3996,6 +4425,156 @@ mod tests {
 
     /// Sum one exposition family's samples, optionally filtered to lines
     /// whose label set contains `label` (empty matches every sample).
+    #[test]
+    fn inert_fault_plan_is_bit_identical_to_unwrapped_pool() {
+        // Tentpole acceptance: configuring a fault plan with every rate at
+        // zero must be indistinguishable from not configuring one — same
+        // 1000-request 90/10 skewed mix, bit-identical results, nothing
+        // quarantined, nothing respawned, nothing failed.
+        let n = 1000;
+        let (base, _) = run_skewed(n, 4, Routing::LoadAware);
+        let coord = Coordinator::start_pool(
+            PathBuf::from("/nonexistent-artifacts"),
+            SelectorPolicy::Xla,
+            PoolConfig {
+                shards: 4,
+                routing: Routing::LoadAware,
+                imbalance: 1.0,
+                fault: Some(FaultPlan::default()),
+                ..PoolConfig::default()
+            },
+        )
+        .expect("coordinator start");
+        let mut rxs = Vec::with_capacity(n);
+        for i in 0..n {
+            let (shape, lhs, rhs) = skewed_input(i);
+            rxs.push(coord.submit(shape, lhs, rhs));
+        }
+        let faulted: Vec<Vec<f32>> = rxs
+            .into_iter()
+            .map(|rx| rx.recv().expect("response").result.expect("gemm ok"))
+            .collect();
+        assert_eq!(base, faulted, "an inert fault plan must not perturb results");
+        let report = coord.stop_detailed();
+        assert_eq!(report.total.requests, n);
+        assert_eq!(report.total.failures, 0);
+        assert_eq!(report.total.quarantine_trips, 0);
+        assert_eq!(report.total.worker_respawns, 0);
+    }
+
+    #[test]
+    fn seeded_panic_costs_one_batch_then_respawns_and_serves() {
+        // Supervision: a worker panic mid-run costs exactly its in-flight
+        // batch (sequential blocking calls batch singly), the supervisor
+        // respawns the worker on the same queue, and every later request
+        // is served correctly by the replacement.
+        let plan = FaultPlan { panic_at: Some(8), ..FaultPlan::default() };
+        let coord = Coordinator::start_pool(
+            PathBuf::from("/nonexistent-artifacts"),
+            SelectorPolicy::Xla,
+            PoolConfig { shards: 1, fault: Some(plan), ..PoolConfig::default() },
+        )
+        .expect("coordinator start");
+        let shape = GemmShape::new(64, 64, 64, 1);
+        let mut died = 0;
+        for i in 0..12u32 {
+            let lhs = fill_buffer(i, 64 * 64);
+            let rhs = fill_buffer(i + 3, 64 * 64);
+            let resp = coord.call(shape, lhs.clone(), rhs.clone()).unwrap();
+            match resp.result {
+                Ok(out) => assert_eq!(out, host_gemm(&shape, &lhs, &rhs).unwrap()),
+                Err(e) => {
+                    assert!(e.contains("worker died"), "unexpected failure: {e}");
+                    died += 1;
+                    // The synthetic failure is delivered while the worker
+                    // is still unwinding; wait for its AliveGuard to clear
+                    // the flag so the next submit sees the corpse (instead
+                    // of racing a job onto a queue nobody drains yet).
+                    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+                    while coord.worker_alive(0) && std::time::Instant::now() < deadline {
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                    assert!(!coord.worker_alive(0), "dead worker must clear its alive flag");
+                }
+            }
+        }
+        assert_eq!(died, 1, "the panic must cost exactly its in-flight batch");
+        let report = coord.stop_detailed();
+        assert!(
+            report.total.worker_respawns >= 1,
+            "the supervisor must have respawned the dead shard\n{}",
+            report.summary()
+        );
+    }
+
+    #[test]
+    fn corruption_surfaces_as_err_never_ok_and_trips_quarantine() {
+        // Tentpole acceptance: silent corruption targeted at the deployed
+        // config is caught by the integrity canary — delivered as `Err`,
+        // never as a plausible `Ok` — and the repeated failures trip the
+        // variant into quarantine so resolution routes around it.
+        let manifest = Manifest::synthetic();
+        let best = config_by_name(&manifest.single_best).unwrap().index();
+        let plan = FaultPlan {
+            seed: 7,
+            corrupt_permille: 700,
+            target_config: Some(best),
+            ..FaultPlan::default()
+        };
+        let coord = Coordinator::start_pool(
+            PathBuf::from("/nonexistent-artifacts"),
+            SelectorPolicy::Single(best),
+            PoolConfig { shards: 1, fault: Some(plan), ..PoolConfig::default() },
+        )
+        .expect("coordinator start");
+        let shape = GemmShape::new(128, 128, 128, 1);
+        let mut corrupt_errs = 0;
+        for i in 0..200u32 {
+            let lhs = fill_buffer(i, 128 * 128);
+            let rhs = fill_buffer(i + 5, 128 * 128);
+            let resp = coord.call(shape, lhs.clone(), rhs.clone()).unwrap();
+            match resp.result {
+                // Every delivered Ok must be the exact reference result —
+                // a corrupted output slipping through as Ok is the one
+                // unacceptable outcome.
+                Ok(out) => assert_eq!(out, host_gemm(&shape, &lhs, &rhs).unwrap()),
+                Err(e) => {
+                    assert!(e.contains("corrupt result detected"), "unexpected failure: {e}");
+                    corrupt_errs += 1;
+                }
+            }
+        }
+        assert!(corrupt_errs >= 1, "a 70% corruption rate must surface failures");
+        let report = coord.stop_detailed();
+        assert!(
+            report.total.quarantine_trips >= 1,
+            "repeated canary failures must trip the targeted config\n{}",
+            report.summary()
+        );
+        assert_eq!(report.total.failures, corrupt_errs);
+    }
+
+    #[test]
+    fn shard_load_reset_clears_gauge_and_sub_saturates() {
+        // Unit: the dead-queue gauge reset restores an exact inventory and
+        // colds the drain EWMA, and `sub` saturates instead of wrapping
+        // when its matching share was already dropped by a reset.
+        let load = ShardLoad::default();
+        load.add(5, 10_000);
+        load.note_completions(4, 2.0);
+        assert_eq!(load.depth(), 5);
+        assert!(load.drain_rate_per_sec() > 0.0);
+        load.reset_to(2, 3_000);
+        assert_eq!(load.depth(), 2);
+        assert_eq!(load.score_ns(), 3_000 + 2 * QUEUED_OVERHEAD_NS);
+        assert_eq!(load.drain_rate_per_sec(), 0.0, "replacement workers start cold");
+        // A completion whose add-side share was consumed by the reset:
+        // saturate to empty, never underflow into a poisoned score.
+        load.sub(5, 10_000);
+        assert_eq!(load.depth(), 0);
+        assert_eq!(load.score_ns(), 0);
+    }
+
     fn prom_total(text: &str, name: &str, label: &str) -> usize {
         text.lines()
             .filter(|l| !l.starts_with('#'))
@@ -4044,6 +4623,18 @@ mod tests {
             );
             assert!(ticket.rejection().is_some(), "weight-0 tenant must be refused");
         }
+        // One retried refusal: the weight-0 tenant is deterministically
+        // rejected on every attempt, so the bounded retry loop spends
+        // exactly MAX_RETRY_ATTEMPTS - 1 tokens before giving up.
+        let resp = coord
+            .call_with_retry_as(
+                TenantId(1),
+                shape,
+                fill_buffer(7, 64 * 64),
+                fill_buffer(12, 64 * 64),
+            )
+            .unwrap();
+        assert!(resp.result.is_err(), "weight-0 retries must still be refused");
         let text = coord.metrics_text();
         let report = coord.stop_detailed();
         // Shard lanes fold to the report's exact totals.
@@ -4067,23 +4658,56 @@ mod tests {
             prom_total(&text, "kernelsel_tenant_rejected_total", "tenant=\"blocked\""),
             blocked.rejected
         );
-        assert_eq!(blocked.rejected, 3);
+        // 3 direct refusals + MAX_RETRY_ATTEMPTS submits of the retried call.
+        let refused = 3 + MAX_RETRY_ATTEMPTS as usize;
+        assert_eq!(blocked.rejected, refused);
         assert_eq!(
             blocked.rejected_by_reason[RejectReason::QuotaExceeded.code() as usize],
-            3,
+            refused,
             "refusals must land in the quota-exceeded cell"
         );
         assert_eq!(
             prom_total(&text, "kernelsel_tenant_rejected_total", "reason=\"quota-exceeded\""),
-            3
+            refused
         );
+        // Quarantine / self-healing lanes agree counter-for-counter with
+        // the shutdown report (zero or not — same source cells).
+        assert_eq!(
+            prom_total(&text, "kernelsel_quarantine_trips_total", ""),
+            report.total.quarantine_trips
+        );
+        assert_eq!(
+            prom_total(&text, "kernelsel_quarantine_probes_total", ""),
+            report.total.quarantine_probes
+        );
+        assert_eq!(
+            prom_total(&text, "kernelsel_quarantine_restores_total", ""),
+            report.total.quarantine_restores
+        );
+        assert!(text.contains("kernelsel_quarantine_active 0"));
+        assert_eq!(
+            prom_total(&text, "kernelsel_worker_respawns", ""),
+            report.total.worker_respawns
+        );
+        assert_eq!(prom_total(&text, "kernelsel_retries_total", ""), report.total.retries);
+        assert_eq!(
+            prom_total(&text, "kernelsel_retries_denied_total", ""),
+            report.total.retries_denied
+        );
+        assert_eq!(
+            report.total.retries,
+            MAX_RETRY_ATTEMPTS as usize - 1,
+            "a deterministic refusal spends every allowed retry"
+        );
+        assert_eq!(report.total.retries_denied, 0);
         // The selection-quality and trace families are always exposed.
         assert!(text.contains("kernelsel_selection_regret{domain=\"0\"}"));
         assert!(text.contains("kernelsel_selector_generation{domain=\"0\"}"));
         assert!(text.contains("kernelsel_trace_events_total"));
         // The extended report rendering carries the same split.
         let summary = report.summary();
-        assert!(summary.contains("quota-exceeded=3/0"), "summary: {summary}");
+        assert!(summary.contains("quota-exceeded=6/0"), "summary: {summary}");
         assert!(summary.contains("inflight_peak="), "summary: {summary}");
+        assert!(summary.contains("retries(spent/denied)=2/0"), "summary: {summary}");
     }
 }

@@ -80,6 +80,26 @@ pub enum EventKind {
     /// A re-tuned selector was hot-swapped in. `a` is the new
     /// generation, `b` the retune domain index.
     Swap = 8,
+    /// A variant tripped into quarantine (pool-level). `a` is the config
+    /// index, `b` the total trips so far.
+    QuarantineTrip = 9,
+    /// A probation probe of a quarantined variant was observed
+    /// (pool-level). `a` is the config index.
+    QuarantineProbe = 10,
+    /// A variant was promoted back to healthy (pool-level). `a` is the
+    /// config index, `b` the total restores so far.
+    QuarantineRestore = 11,
+    /// The supervisor respawned a dead shard worker (pool-level; `shard`
+    /// is the respawned shard). `a` is the number of requests re-homed
+    /// to the replacement worker's queue.
+    Respawn = 12,
+    /// A rejected or transiently failed call was retried under the
+    /// retry budget (pool-level). `a` is the
+    /// [`crate::coordinator::admission::RejectReason`] code that caused
+    /// it (or `u64::MAX` for a transient execution failure), `b` the
+    /// attempt number, `c` the budget level in milli-tokens after
+    /// spending.
+    Retry = 13,
 }
 
 impl EventKind {
@@ -95,6 +115,11 @@ impl EventKind {
             EventKind::Complete => "complete",
             EventKind::Shed => "shed",
             EventKind::Swap => "swap",
+            EventKind::QuarantineTrip => "quarantine-trip",
+            EventKind::QuarantineProbe => "quarantine-probe",
+            EventKind::QuarantineRestore => "quarantine-restore",
+            EventKind::Respawn => "respawn",
+            EventKind::Retry => "retry",
         }
     }
 }
@@ -259,10 +284,20 @@ impl FlightRecorder {
     /// Convenience: record a chain event now, with kind-specific payload
     /// words `[a, b, c]`. No-op when `seq` is 0 for a per-request kind
     /// (the chain was not sampled), so call sites stay branch-free;
-    /// pool-level kinds (`Steal`, `Batch`, `Swap`) always record.
+    /// pool-level kinds (`Steal`, `Batch`, `Swap`, the quarantine
+    /// transitions, `Respawn` and `Retry`) always record.
     pub fn event(&self, seq: u64, kind: EventKind, shard: u16, tenant: u32, payload: [u64; 3]) {
-        let pool_level =
-            matches!(kind, EventKind::Swap | EventKind::Steal | EventKind::Batch);
+        let pool_level = matches!(
+            kind,
+            EventKind::Swap
+                | EventKind::Steal
+                | EventKind::Batch
+                | EventKind::QuarantineTrip
+                | EventKind::QuarantineProbe
+                | EventKind::QuarantineRestore
+                | EventKind::Respawn
+                | EventKind::Retry
+        );
         if seq == 0 && !pool_level {
             return;
         }
@@ -278,7 +313,7 @@ impl FlightRecorder {
         let Some(slot) = self.generations.get(domain) else { return };
         let seen = slot.fetch_max(generation, Ordering::Relaxed);
         if generation > seen {
-            self.event(0, EventKind::Swap, NO_SHARD, 0, generation, domain as u64, 0);
+            self.event(0, EventKind::Swap, NO_SHARD, 0, [generation, domain as u64, 0]);
         }
     }
 
@@ -404,6 +439,36 @@ fn event_to_json(ev: &TraceEvent) -> Json {
         EventKind::Swap => {
             pairs.push(("generation", Json::Num(ev.a as f64)));
             pairs.push(("domain", Json::Num(ev.b as f64)));
+        }
+        EventKind::QuarantineTrip => {
+            pairs.push(("config", Json::Num(ev.a as f64)));
+            pairs.push(("trips", Json::Num(ev.b as f64)));
+        }
+        EventKind::QuarantineProbe => {
+            pairs.push(("config", Json::Num(ev.a as f64)));
+        }
+        EventKind::QuarantineRestore => {
+            pairs.push(("config", Json::Num(ev.a as f64)));
+            pairs.push(("restores", Json::Num(ev.b as f64)));
+        }
+        EventKind::Respawn => {
+            pairs.push(("requests", Json::Num(ev.a as f64)));
+        }
+        EventKind::Retry => {
+            pairs.push((
+                "reason",
+                if ev.a == u64::MAX {
+                    Json::Str("transient".to_string())
+                } else {
+                    Json::Str(
+                        crate::coordinator::admission::RejectReason::by_code(ev.a as u8)
+                            .map(|r| r.name().to_string())
+                            .unwrap_or_else(|| format!("code-{}", ev.a)),
+                    )
+                },
+            ));
+            pairs.push(("attempt", Json::Num(ev.b as f64)));
+            pairs.push(("tokens_milli", Json::Num(ev.c as f64)));
         }
     }
     Json::obj(pairs)

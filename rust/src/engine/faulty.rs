@@ -1,0 +1,458 @@
+//! Deterministic fault injection: a seeded wrapper over any [`Backend`].
+//!
+//! The fault-tolerance layer (variant quarantine, shard supervision,
+//! submit retries) is only trustworthy if its failure modes can be
+//! reproduced exactly, so faults here are a pure function of
+//! `(plan.seed, shard, execution index)` — same plan, same workload, same
+//! faults, every run. Four fault classes, each with an independent
+//! permille rate inside the plan's onset window:
+//!
+//! * **transient** — the execute returns `Err`, the kind of intermittent
+//!   failure quarantine's windowed tracker is built for;
+//! * **corrupt** — the execute returns `Ok` with a silently wrong first
+//!   element, which MUST be caught downstream (the pool's integrity
+//!   canary) and never delivered as `Ok`;
+//! * **spike** — the execute sleeps before delegating, a latency fault
+//!   that perturbs batching and admission without failing anything;
+//! * **panic** — one execution panics the worker thread, exercising the
+//!   shard supervisor's respawn path.
+//!
+//! A pool configured without a plan never constructs this wrapper, and a
+//! constructed wrapper whose plan has zero rates delegates untouched —
+//! bit-identical to the unwrapped backend (asserted in the pool's
+//! fault-plan-off identity test).
+
+use crate::dataset::GemmShape;
+use crate::runtime::ArtifactMeta;
+use crate::util::Rng;
+
+use super::{Backend, BackendStats};
+
+/// A deterministic fault schedule for one pool run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Seed for the per-shard fault stream (forked per shard id).
+    pub seed: u64,
+    /// Executions on a shard before faults start.
+    pub onset: u64,
+    /// Executions on a shard after which faults stop (`u64::MAX` =
+    /// never); the window is `[onset, fault_until)`.
+    pub fault_until: u64,
+    /// Per-execution probability (permille) of a transient `Err`.
+    pub transient_permille: u32,
+    /// Per-execution probability (permille) of silent result corruption.
+    pub corrupt_permille: u32,
+    /// Per-execution probability (permille) of a latency spike.
+    pub spike_permille: u32,
+    /// Added latency of one spike, in nanoseconds.
+    pub spike_ns: u64,
+    /// Execution index (per shard) that panics the worker, if any.
+    pub panic_at: Option<u64>,
+    /// Restrict rate-based faults to this config index (`None` = every
+    /// config). The chaos bench targets the deployed variant so
+    /// quarantine — not luck — must restore goodput.
+    pub target_config: Option<usize>,
+    /// Restrict the whole plan to one shard (`None` = every shard).
+    pub target_shard: Option<usize>,
+}
+
+impl Default for FaultPlan {
+    /// The inert plan: zero rates, no panic, window open forever. A pool
+    /// wrapped with it is bit-identical to the unwrapped pool.
+    fn default() -> FaultPlan {
+        FaultPlan {
+            seed: 0,
+            onset: 0,
+            fault_until: u64::MAX,
+            transient_permille: 0,
+            corrupt_permille: 0,
+            spike_permille: 0,
+            spike_ns: 0,
+            panic_at: None,
+            target_config: None,
+            target_shard: None,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Parse a `--chaos seed,rate,kinds` flag value: `kinds` is a `+`
+    /// separated subset of `transient`, `corrupt`, `spike`, `panic`, and
+    /// `rate` (permille) applies to each rate-based kind chosen. The
+    /// fault window and panic point are fixed so a smoke run injects
+    /// early and leaves room to observe recovery: onset 32, end 160,
+    /// panic (if chosen) at execution 48.
+    pub fn parse(s: &str) -> Result<FaultPlan, String> {
+        let parts: Vec<&str> = s.split(',').collect();
+        let [seed, rate, kinds] = parts[..] else {
+            return Err(format!("--chaos {s}: expected seed,rate,kinds"));
+        };
+        let seed: u64 = seed.trim().parse().map_err(|_| format!("--chaos seed: {seed}"))?;
+        let rate: u32 = rate.trim().parse().map_err(|_| format!("--chaos rate: {rate}"))?;
+        if rate > 1000 {
+            return Err(format!("--chaos rate {rate}: permille must be <= 1000"));
+        }
+        let mut plan = FaultPlan {
+            seed,
+            onset: 32,
+            fault_until: 160,
+            spike_ns: 2_000_000,
+            ..FaultPlan::default()
+        };
+        for kind in kinds.split('+') {
+            match kind.trim() {
+                "transient" => plan.transient_permille = rate,
+                "corrupt" => plan.corrupt_permille = rate,
+                "spike" => plan.spike_permille = rate,
+                "panic" => plan.panic_at = Some(48),
+                other => {
+                    return Err(format!(
+                        "--chaos kind {other:?}: expected transient|corrupt|spike|panic"
+                    ))
+                }
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Does this plan apply to `shard` at all?
+    pub fn applies_to_shard(&self, shard: usize) -> bool {
+        self.target_shard.map_or(true, |s| s == shard)
+    }
+
+    /// True when the plan can never perturb an execution — the wrapper
+    /// is skipped entirely for such plans.
+    pub fn is_inert(&self) -> bool {
+        self.transient_permille == 0
+            && self.corrupt_permille == 0
+            && self.spike_permille == 0
+            && self.panic_at.is_none()
+    }
+}
+
+/// One injected fault decision.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Fault {
+    None,
+    Transient,
+    Corrupt,
+    Spike,
+}
+
+/// A seeded, deterministic fault-injecting wrapper over any [`Backend`].
+///
+/// Construct it on the shard thread with the shard's fork of the plan's
+/// seed; the fault sequence is then a pure function of the execution
+/// index, independent of wall clock and scheduling.
+pub struct FaultyBackend {
+    inner: Box<dyn Backend>,
+    plan: FaultPlan,
+    rng: Rng,
+    executions: u64,
+}
+
+impl FaultyBackend {
+    /// Wrap `inner` under `plan` for `shard`. The RNG stream is forked
+    /// per shard so two shards under one plan draw independent faults.
+    pub fn new(inner: Box<dyn Backend>, plan: FaultPlan, shard: usize) -> FaultyBackend {
+        let rng = Rng::new(plan.seed).fork(shard as u64);
+        FaultyBackend { inner, plan, rng, executions: 0 }
+    }
+
+    /// The fault decision for the next execution of `meta`. Advances the
+    /// execution counter always; advances the RNG only inside the fault
+    /// window for targeted configs, so untargeted traffic replays
+    /// identically whether or not the plan is active.
+    fn fault_for(&mut self, meta: &ArtifactMeta) -> Fault {
+        let n = self.executions;
+        self.executions += 1;
+        if self.plan.panic_at == Some(n) {
+            panic!("injected worker panic (FaultPlan seed {}, execution {n})", self.plan.seed);
+        }
+        if n < self.plan.onset || n >= self.plan.fault_until {
+            return Fault::None;
+        }
+        if let Some(target) = self.plan.target_config {
+            if meta.config_index != Some(target) {
+                return Fault::None;
+            }
+        }
+        // Fixed draw order (transient, corrupt, spike) keeps the stream
+        // aligned across runs that vary only one rate.
+        if self.plan.transient_permille > 0
+            && self.rng.below(1000) < self.plan.transient_permille as usize
+        {
+            return Fault::Transient;
+        }
+        if self.plan.corrupt_permille > 0
+            && self.rng.below(1000) < self.plan.corrupt_permille as usize
+        {
+            return Fault::Corrupt;
+        }
+        if self.plan.spike_permille > 0
+            && self.rng.below(1000) < self.plan.spike_permille as usize
+        {
+            return Fault::Spike;
+        }
+        Fault::None
+    }
+
+    fn apply<T>(
+        fault: Fault,
+        spike_ns: u64,
+        run: impl FnOnce() -> Result<T, String>,
+        corrupt: impl FnOnce(&mut T),
+    ) -> Result<T, String> {
+        match fault {
+            Fault::Transient => Err("injected transient execute fault".to_string()),
+            Fault::Corrupt => {
+                let mut out = run()?;
+                corrupt(&mut out);
+                Ok(out)
+            }
+            Fault::Spike => {
+                std::thread::sleep(std::time::Duration::from_nanos(spike_ns));
+                run()
+            }
+            Fault::None => run(),
+        }
+    }
+}
+
+impl Backend for FaultyBackend {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn prepare(&mut self, meta: &ArtifactMeta) -> Result<(), String> {
+        self.inner.prepare(meta)
+    }
+
+    fn execute(
+        &mut self,
+        meta: &ArtifactMeta,
+        shape: &GemmShape,
+        lhs: &[f32],
+        rhs: &[f32],
+    ) -> Result<Vec<f32>, String> {
+        let fault = self.fault_for(meta);
+        let inner = &mut self.inner;
+        FaultyBackend::apply(
+            fault,
+            self.plan.spike_ns,
+            || inner.execute(meta, shape, lhs, rhs),
+            |out| {
+                if let Some(x) = out.first_mut() {
+                    *x += 1.0;
+                }
+            },
+        )
+    }
+
+    fn execute_timed(
+        &mut self,
+        meta: &ArtifactMeta,
+        shape: &GemmShape,
+        lhs: &[f32],
+        rhs: &[f32],
+    ) -> Result<(Vec<f32>, f64), String> {
+        let fault = self.fault_for(meta);
+        let inner = &mut self.inner;
+        FaultyBackend::apply(
+            fault,
+            self.plan.spike_ns,
+            || inner.execute_timed(meta, shape, lhs, rhs),
+            |(out, _)| {
+                if let Some(x) = out.first_mut() {
+                    *x += 1.0;
+                }
+            },
+        )
+    }
+
+    fn execute_timed_for(
+        &mut self,
+        meta: &ArtifactMeta,
+        shape: &GemmShape,
+        lhs: &[f32],
+        rhs: &[f32],
+        device: Option<&'static str>,
+    ) -> Result<(Vec<f32>, f64), String> {
+        let fault = self.fault_for(meta);
+        let inner = &mut self.inner;
+        FaultyBackend::apply(
+            fault,
+            self.plan.spike_ns,
+            || inner.execute_timed_for(meta, shape, lhs, rhs, device),
+            |(out, _)| {
+                if let Some(x) = out.first_mut() {
+                    *x += 1.0;
+                }
+            },
+        )
+    }
+
+    fn stats(&self) -> BackendStats {
+        self.inner.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineKind;
+    use crate::runtime::Manifest;
+    use std::path::Path;
+
+    fn sim() -> Box<dyn Backend> {
+        EngineKind::default().create(Path::new("/nonexistent")).unwrap()
+    }
+
+    /// The synthetic XLA-comparator artifact for `shape`, plus filled
+    /// input buffers.
+    fn fixture(shape: GemmShape) -> (ArtifactMeta, Vec<f32>, Vec<f32>) {
+        let manifest = Manifest::synthetic();
+        let meta = manifest
+            .find_matmul(None, shape.m, shape.k, shape.n, shape.batch)
+            .expect("synthetic shape")
+            .clone();
+        let lhs: Vec<f32> = (0..shape.batch * shape.m * shape.k)
+            .map(|i| (i % 7) as f32 * 0.5)
+            .collect();
+        let rhs: Vec<f32> = (0..shape.batch * shape.k * shape.n)
+            .map(|i| (i % 5) as f32 * 0.25)
+            .collect();
+        (meta, lhs, rhs)
+    }
+
+    #[test]
+    fn parse_accepts_combined_kinds() {
+        let plan = FaultPlan::parse("7,500,transient+corrupt").unwrap();
+        assert_eq!(plan.seed, 7);
+        assert_eq!(plan.transient_permille, 500);
+        assert_eq!(plan.corrupt_permille, 500);
+        assert_eq!(plan.spike_permille, 0);
+        assert_eq!(plan.panic_at, None);
+        assert_eq!(plan.onset, 32);
+        assert!(!plan.is_inert());
+
+        let plan = FaultPlan::parse("1,0,panic").unwrap();
+        assert_eq!(plan.panic_at, Some(48));
+        assert!(!plan.is_inert());
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(FaultPlan::parse("7,500").is_err());
+        assert!(FaultPlan::parse("x,500,transient").is_err());
+        assert!(FaultPlan::parse("7,1001,transient").is_err());
+        assert!(FaultPlan::parse("7,500,meteor").is_err());
+    }
+
+    #[test]
+    fn default_plan_is_inert_and_shard_untargeted() {
+        let plan = FaultPlan::default();
+        assert!(plan.is_inert());
+        assert!(plan.applies_to_shard(0));
+        assert!(plan.applies_to_shard(17));
+        let targeted = FaultPlan { target_shard: Some(1), ..plan };
+        assert!(!targeted.applies_to_shard(0));
+        assert!(targeted.applies_to_shard(1));
+    }
+
+    #[test]
+    fn inert_plan_is_bit_identical_to_unwrapped() {
+        let shape = GemmShape::new(32, 32, 32, 1);
+        let (meta, lhs, rhs) = fixture(shape);
+        let mut plain = sim();
+        let mut wrapped = FaultyBackend::new(sim(), FaultPlan::default(), 0);
+        plain.prepare(&meta).unwrap();
+        wrapped.prepare(&meta).unwrap();
+        for _ in 0..64 {
+            let a = plain.execute(&meta, &shape, &lhs, &rhs).unwrap();
+            let b = wrapped.execute(&meta, &shape, &lhs, &rhs).unwrap();
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn faults_are_deterministic_and_windowed() {
+        let plan = FaultPlan {
+            seed: 42,
+            onset: 4,
+            fault_until: 20,
+            transient_permille: 400,
+            ..FaultPlan::default()
+        };
+        let shape = GemmShape::new(32, 32, 32, 1);
+        let (meta, lhs, rhs) = fixture(shape);
+        let run = |shard: usize| -> Vec<bool> {
+            let mut b = FaultyBackend::new(sim(), plan, shard);
+            b.prepare(&meta).unwrap();
+            (0..32).map(|_| b.execute(&meta, &shape, &lhs, &rhs).is_ok()).collect()
+        };
+        let a = run(0);
+        assert_eq!(a, run(0), "same seed+shard must replay identically");
+        // Outside the window nothing fails.
+        assert!(a[..4].iter().all(|&ok| ok));
+        assert!(a[20..].iter().all(|&ok| ok));
+        // Inside it, at 400 permille over 16 draws, some do.
+        assert!(a[4..20].iter().any(|&ok| !ok));
+        // Another shard draws an independent stream.
+        assert_ne!(a, run(1), "shard fork must decorrelate fault streams");
+    }
+
+    #[test]
+    fn corruption_perturbs_first_element_only() {
+        let plan = FaultPlan {
+            seed: 9,
+            corrupt_permille: 1000,
+            ..FaultPlan::default()
+        };
+        let shape = GemmShape::new(32, 32, 32, 1);
+        let (meta, lhs, rhs) = fixture(shape);
+        let mut plain = sim();
+        plain.prepare(&meta).unwrap();
+        let truth = plain.execute(&meta, &shape, &lhs, &rhs).unwrap();
+        let mut b = FaultyBackend::new(sim(), plan, 0);
+        b.prepare(&meta).unwrap();
+        let out = b.execute(&meta, &shape, &lhs, &rhs).unwrap();
+        assert_ne!(out[0], truth[0], "corruption must flip the canary element");
+        assert_eq!(out[1..], truth[1..], "corruption must be silent elsewhere");
+    }
+
+    #[test]
+    fn untargeted_config_is_never_faulted() {
+        let plan = FaultPlan {
+            seed: 3,
+            transient_permille: 1000,
+            corrupt_permille: 1000,
+            target_config: Some(0),
+            ..FaultPlan::default()
+        };
+        let shape = GemmShape::new(32, 32, 32, 1);
+        // The XLA comparator has config_index None != Some(0): untouched.
+        let (meta, lhs, rhs) = fixture(shape);
+        let mut plain = sim();
+        plain.prepare(&meta).unwrap();
+        let truth = plain.execute(&meta, &shape, &lhs, &rhs).unwrap();
+        let mut b = FaultyBackend::new(sim(), plan, 0);
+        b.prepare(&meta).unwrap();
+        for _ in 0..16 {
+            assert_eq!(b.execute(&meta, &shape, &lhs, &rhs).unwrap(), truth);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "injected worker panic")]
+    fn panic_at_fires_on_exact_execution() {
+        let plan = FaultPlan { panic_at: Some(2), ..FaultPlan::default() };
+        let shape = GemmShape::new(32, 32, 32, 1);
+        let (meta, lhs, rhs) = fixture(shape);
+        let mut b = FaultyBackend::new(sim(), plan, 0);
+        b.prepare(&meta).unwrap();
+        for _ in 0..3 {
+            let _ = b.execute(&meta, &shape, &lhs, &rhs);
+        }
+    }
+}

@@ -18,18 +18,23 @@
 //!   compiled, no external deps.
 //! * [`PjrtBackend`] — wraps the PJRT [`crate::runtime::Runtime`]; only
 //!   compiled with the `pjrt` cargo feature.
+//! * [`FaultyBackend`] — a seeded, deterministic fault-injecting wrapper
+//!   over any of the above, driven by a [`FaultPlan`]; the substrate of
+//!   the chaos harness that proves quarantine and shard supervision.
 //!
 //! Backends are deliberately `!Send`-friendly: PJRT handles are `Rc`-based
 //! and must stay on one thread, so shards receive a Send-able
 //! [`EngineKind`] *spec* and construct their backend on their own thread.
 
 pub mod cpu;
+pub mod faulty;
 pub mod sim;
 
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
 pub use cpu::CpuBackend;
+pub use faulty::{FaultPlan, FaultyBackend};
 pub use sim::SimBackend;
 
 #[cfg(feature = "pjrt")]

@@ -28,10 +28,11 @@
 
 // Every public item must carry rustdoc. The serving-stack modules
 // (`coordinator`, `tuning`, `engine`, `runtime`), the data substrate
-// (`dataset`, `devsim`) and the ML stack (`classify`, `ml`) are fully
-// documented and gated; the remaining modules below carry an explicit
-// module-level `allow` until their own documentation pass lands
-// (ROADMAP item) — the allows are the worklist, not an exemption.
+// (`dataset`, `devsim`), the ML stack (`classify`, `ml`, `linalg`) and
+// `selection` are fully documented and gated; the remaining modules
+// below carry an explicit module-level `allow` until their own
+// documentation pass lands (ROADMAP item) — the allows are the
+// worklist, not an exemption.
 #![warn(missing_docs)]
 
 pub mod classify;
@@ -41,11 +42,9 @@ pub mod devsim;
 pub mod engine;
 #[allow(missing_docs)]
 pub mod experiments;
-#[allow(missing_docs)]
 pub mod linalg;
 pub mod ml;
 pub mod runtime;
-#[allow(missing_docs)]
 pub mod selection;
 pub mod tuning;
 #[allow(missing_docs)]

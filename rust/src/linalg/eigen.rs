@@ -10,6 +10,7 @@ use super::Matrix;
 /// `vectors[.., i]`; sorted by descending eigenvalue.
 #[derive(Clone, Debug)]
 pub struct Eigh {
+    /// Eigenvalues in descending order.
     pub values: Vec<f64>,
     /// Column-eigenvector matrix: vectors[(r, i)] is component r of
     /// eigenvector i.

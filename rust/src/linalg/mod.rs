@@ -13,16 +13,22 @@ pub use eigen::{eigh, Eigh};
 /// Row-major dense f64 matrix.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Matrix {
+    /// Number of rows.
     pub rows: usize,
+    /// Number of columns.
     pub cols: usize,
+    /// Elements in row-major order; `data[r * cols + c]` is `(r, c)`.
     pub data: Vec<f64>,
 }
 
 impl Matrix {
+    /// All-zeros matrix of the given shape.
     pub fn zeros(rows: usize, cols: usize) -> Matrix {
         Matrix { rows, cols, data: vec![0.0; rows * cols] }
     }
 
+    /// Build from a slice of equal-length rows. Panics on empty or
+    /// ragged input.
     pub fn from_rows(rows_in: &[Vec<f64>]) -> Matrix {
         assert!(!rows_in.is_empty(), "Matrix::from_rows on empty input");
         let cols = rows_in[0].len();
@@ -34,11 +40,14 @@ impl Matrix {
         Matrix { rows: rows_in.len(), cols, data }
     }
 
+    /// Wrap an existing row-major buffer. Panics unless
+    /// `data.len() == rows * cols`.
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Matrix {
         assert_eq!(data.len(), rows * cols);
         Matrix { rows, cols, data }
     }
 
+    /// The n x n identity matrix.
     pub fn identity(n: usize) -> Matrix {
         let mut m = Matrix::zeros(n, n);
         for i in 0..n {
@@ -47,20 +56,24 @@ impl Matrix {
         m
     }
 
+    /// Row `r` as a contiguous slice.
     #[inline]
     pub fn row(&self, r: usize) -> &[f64] {
         &self.data[r * self.cols..(r + 1) * self.cols]
     }
 
+    /// Row `r` as a mutable contiguous slice.
     #[inline]
     pub fn row_mut(&mut self, r: usize) -> &mut [f64] {
         &mut self.data[r * self.cols..(r + 1) * self.cols]
     }
 
+    /// Column `c`, copied out (columns are strided in row-major storage).
     pub fn col(&self, c: usize) -> Vec<f64> {
         (0..self.rows).map(|r| self[(r, c)]).collect()
     }
 
+    /// The transposed matrix (c x r), copied.
     pub fn transpose(&self) -> Matrix {
         let mut out = Matrix::zeros(self.cols, self.rows);
         for r in 0..self.rows {
@@ -155,23 +168,28 @@ impl std::ops::IndexMut<(usize, usize)> for Matrix {
     }
 }
 
+/// Dot product of two equal-length slices.
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
     a.iter().zip(b).map(|(x, y)| x * y).sum()
 }
 
+/// Euclidean (L2) norm.
 #[inline]
 pub fn norm2(a: &[f64]) -> f64 {
     dot(a, a).sqrt()
 }
 
+/// Squared Euclidean distance (no square root — the form clustering
+/// inner loops want).
 #[inline]
 pub fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
     a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
 }
 
+/// Euclidean distance between two points.
 #[inline]
 pub fn euclidean(a: &[f64], b: &[f64]) -> f64 {
     sq_dist(a, b).sqrt()

@@ -12,6 +12,7 @@ pub fn variance(xs: &[f64]) -> f64 {
     xs.iter().map(|x| (x - mu) * (x - mu)).sum::<f64>() / xs.len() as f64
 }
 
+/// Population standard deviation.
 pub fn std_dev(xs: &[f64]) -> f64 {
     variance(xs).sqrt()
 }

@@ -24,14 +24,23 @@ use crate::ml::spectral::{spectral, SpectralParams};
 /// Selection methods of paper §4.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Method {
+    /// Top-N baseline (§4.2): configurations that win the most size sets.
     TopN,
+    /// K-means on the normalized 640-dim performance vectors.
     KMeans,
+    /// PCA to 15 components, then K-means on the scores.
     PcaKMeans,
+    /// Spectral clustering on the performance-vector similarity graph.
     Spectral,
+    /// HDBSCAN with the paper's hyperparameter sweep targeting k clusters.
     Hdbscan,
+    /// Decision-tree regressor with at most k leaves (§4.1.5); each leaf
+    /// is treated as a cluster.
     DecisionTree,
 }
 
+/// Every selection method, in the paper's presentation order — iterate
+/// this to run the full comparison table.
 pub const ALL_METHODS: [Method; 6] = [
     Method::TopN,
     Method::KMeans,
@@ -42,6 +51,8 @@ pub const ALL_METHODS: [Method; 6] = [
 ];
 
 impl Method {
+    /// Stable display name (matches the paper's figure labels and the
+    /// CLI/JSON spelling).
     pub fn name(&self) -> &'static str {
         match self {
             Method::TopN => "TopN",
@@ -53,6 +64,8 @@ impl Method {
         }
     }
 
+    /// Inverse of [`Method::name`], case-insensitive; `None` for an
+    /// unknown method name.
     pub fn by_name(name: &str) -> Option<Method> {
         ALL_METHODS.iter().copied().find(|m| m.name().eq_ignore_ascii_case(name))
     }

@@ -212,7 +212,9 @@ pub fn retune_once(
     if !tripped && !timer_due {
         return RetuneOutcome::NotDue;
     }
-    let pool = registry.manifest.shipped_configs();
+    // Quarantined variants are masked out of the candidate pool: a
+    // tripped kernel cannot be re-deployed until probation restores it.
+    let pool = registry.healthy_shipped_configs();
     let Some(dataset) = live_dataset(&snapshot, &model, &drift, &pool, cfg.min_cell_samples)
     else {
         return RetuneOutcome::Insufficient;

@@ -17,9 +17,10 @@ use std::cell::Cell;
 use std::path::PathBuf;
 
 use kernelsel::coordinator::{
-    AdmissionPolicy, Coordinator, PoolConfig, SelectorPolicy, TraceConfig,
+    AdmissionPolicy, Coordinator, PoolConfig, QuarantineConfig, SelectorPolicy, TraceConfig,
 };
 use kernelsel::dataset::GemmShape;
+use kernelsel::engine::FaultPlan;
 use kernelsel::util::fill_buffer;
 
 thread_local! {
@@ -169,6 +170,62 @@ fn warm_submit_with_flight_recorder_on_allocates_nothing() {
     let metrics = coord.stop();
     assert_eq!(metrics.requests, 40 + n);
     assert_eq!(metrics.failures, 0);
+}
+
+#[test]
+fn warm_submit_with_quarantine_tracking_on_allocates_nothing() {
+    // Quarantine tracking and the fault-injection canary must not cost
+    // the hot path its zero-alloc property. The fault plan here is armed
+    // (non-inert, so the shards wrap their backends and run the integrity
+    // canary + per-result quarantine observation) but its onset is beyond
+    // the horizon, so no fault ever fires: the client-side submit path —
+    // including the cache's quarantine re-screen on every hit — must stay
+    // off the heap.
+    let armed_but_quiet =
+        FaultPlan { transient_permille: 1, onset: u64::MAX, ..FaultPlan::default() };
+    let coord = Coordinator::start_pool(
+        PathBuf::from("/nonexistent-artifacts"),
+        SelectorPolicy::Xla,
+        PoolConfig {
+            shards: 2,
+            fault: Some(armed_but_quiet),
+            quarantine: QuarantineConfig::default(),
+            ..PoolConfig::default()
+        },
+    )
+    .expect("coordinator start");
+    let shape = GemmShape::new(64, 64, 64, 1);
+    for i in 0..40u32 {
+        let lhs = fill_buffer(i, 64 * 64);
+        let rhs = fill_buffer(i + 7, 64 * 64);
+        let resp = coord.call(shape, lhs, rhs).expect("warm call");
+        assert!(resp.result.is_ok());
+    }
+    let _ = std::thread::current();
+    let n = 96usize;
+    let inputs: Vec<(Vec<f32>, Vec<f32>)> = (0..n)
+        .map(|i| (fill_buffer(i as u32, 64 * 64), fill_buffer(i as u32 + 3, 64 * 64)))
+        .collect();
+
+    TRACKING.with(|t| t.set(true));
+    ALLOCS.with(|a| a.set(0));
+    for (lhs, rhs) in inputs {
+        let ticket = coord.submit(shape, lhs, rhs);
+        let resp = ticket.wait();
+        assert!(resp.result.is_ok());
+    }
+    TRACKING.with(|t| t.set(false));
+    let allocs = ALLOCS.with(|a| a.get());
+
+    assert_eq!(
+        allocs, 0,
+        "warm submit with quarantine tracking on allocated {allocs} times over {n} requests; \
+         health screening must keep the fast path off the heap"
+    );
+    let metrics = coord.stop();
+    assert_eq!(metrics.requests, 40 + n);
+    assert_eq!(metrics.failures, 0);
+    assert_eq!(metrics.quarantine_trips, 0, "a quiet plan must trip nothing");
 }
 
 #[test]

@@ -718,3 +718,205 @@ assert inflight == [3, 3, 3, 3]
 print(f"OK: weighted-fair quota predicate — reserved shares floor-divide "
       f"and stay monotone, {quota_checked} grid points match the Rust "
       f"contract, hostile burst capped at its 3-slot reserve")
+
+# ---- Variant quarantine + retry-budget check --------------------------------
+# Port of rust/src/coordinator/quarantine.rs::VariantHealth — the pure
+# per-variant circuit breaker behind variant quarantine (windowed failure
+# tracking, cooloff, half-open probation, promotion) — and
+# rust/src/coordinator/admission.rs::{retry_budget_after_failure,
+# retry_budget_after_success, retry_allowed}, the token-bucket arithmetic
+# that sheds retries first under load. Pinned against the worked examples
+# the Rust unit tests encode, plus a seeded invariant sweep.
+
+HEALTHY, QUARANTINED, PROBATION = "healthy", "quarantined", "probation"
+
+QUARANTINE_DEFAULTS = {
+    "window": 16,
+    "trip_failures": 8,
+    "cooloff": 32,
+    "probe_every": 8,
+    "promote_successes": 3,
+}
+
+def window_mask(cfg):
+    w = min(max(cfg["window"], 1), 64)
+    return MASK if w >= 64 else (1 << w) - 1
+
+class VariantHealth:
+    def __init__(self):
+        self.state = HEALTHY
+        self.recent = 0
+        self.seen = 0
+        self.cooloff_left = 0
+        self.probe_tick = 0
+        self.probe_successes = 0
+
+    def observe(self, ok, cfg):
+        if self.state == HEALTHY:
+            self.recent = ((self.recent << 1) | (0 if ok else 1)) & window_mask(cfg)
+            self.seen = min(self.seen + 1, min(max(cfg["window"], 1), 64))
+            if bin(self.recent).count("1") >= max(cfg["trip_failures"], 1):
+                self.trip(cfg)
+                return "tripped"
+            return None
+        if self.state == QUARANTINED:
+            return None  # stragglers from pre-trip batches: nothing to learn
+        if ok:
+            self.probe_successes += 1
+            if self.probe_successes >= max(cfg["promote_successes"], 1):
+                self.__init__()
+                return "restored"
+            return "probed"
+        self.trip(cfg)
+        return "tripped"
+
+    def screen(self, cfg):
+        if self.state == HEALTHY:
+            return (True, False)
+        if self.state == QUARANTINED:
+            self.cooloff_left = max(self.cooloff_left - 1, 0)
+            if self.cooloff_left == 0:
+                self.state = PROBATION
+                self.probe_tick = 0
+                self.probe_successes = 0
+            return (False, False)
+        fire = self.probe_tick % max(cfg["probe_every"], 1) == 0
+        self.probe_tick = (self.probe_tick + 1) & 0xFFFFFFFF
+        return (fire, fire)
+
+    def blocked(self):
+        return self.state != HEALTHY
+
+    def trip(self, cfg):
+        self.state = QUARANTINED
+        self.recent = 0
+        self.seen = 0
+        self.cooloff_left = max(cfg["cooloff"], 1)
+        self.probe_tick = 0
+        self.probe_successes = 0
+
+qcfg = dict(QUARANTINE_DEFAULTS)
+
+# Trip threshold: 7 windowed failures hold, the 8th trips.
+vh = VariantHealth()
+for _ in range(7):
+    assert vh.observe(False, qcfg) is None
+assert vh.state == HEALTHY and not vh.blocked()
+assert vh.observe(False, qcfg) == "tripped"
+assert vh.state == QUARANTINED and vh.blocked()
+
+# Sliding window: failures that fall out of the 16-outcome window never
+# accumulate to a trip, no matter how many in total.
+vh = VariantHealth()
+for _ in range(50):
+    assert vh.observe(False, qcfg) is None, "spaced failures must not trip"
+    for _ in range(16):
+        assert vh.observe(True, qcfg) is None
+assert vh.state == HEALTHY
+
+# Full lifecycle walk: trip -> 32 cooloff screens -> probation with probes
+# sampled every 8th screen -> 3 probe successes promote back to Healthy.
+vh = VariantHealth()
+for _ in range(8):
+    vh.observe(False, qcfg)
+assert vh.state == QUARANTINED
+for i in range(32):
+    assert vh.screen(qcfg) == (False, False), f"cooloff screen {i}"
+assert vh.state == PROBATION, "32nd screen must end the cooloff"
+probe_pattern = [vh.screen(qcfg) for _ in range(17)]
+fired = [i for i, (sel, probe) in enumerate(probe_pattern) if sel]
+assert fired == [0, 8, 16], fired
+assert all(sel == probe for sel, probe in probe_pattern)
+assert vh.observe(True, qcfg) == "probed"
+assert vh.observe(True, qcfg) == "probed"
+assert vh.observe(True, qcfg) == "restored"
+assert vh.state == HEALTHY and vh.screen(qcfg) == (True, False)
+
+# A failed probe re-trips and restarts the full cooloff.
+vh = VariantHealth()
+for _ in range(8):
+    vh.observe(False, qcfg)
+for _ in range(32):
+    vh.screen(qcfg)
+assert vh.state == PROBATION
+assert vh.observe(True, qcfg) == "probed"
+assert vh.observe(False, qcfg) == "tripped"
+assert vh.state == QUARANTINED and vh.cooloff_left == 32
+
+# Seeded invariant sweep: random outcome/screen interleavings can only
+# probe during probation, only restore after promote_successes straight
+# probe successes, and never leave counters inconsistent.
+rng = Rng(0xC1BC)
+sweep_trips = sweep_probes = sweep_restores = 0
+for _ in range(4):
+    vh = VariantHealth()
+    streak = 0
+    for _ in range(4000):
+        if rng.next_u64() & 1:
+            was = vh.state
+            sel, probe = vh.screen(qcfg)
+            assert probe == (was == PROBATION and sel)
+            if was == QUARANTINED:
+                assert not sel
+            if was == HEALTHY:
+                assert sel and not probe
+        else:
+            was = vh.state
+            ok = rng.next_u64() % 1000 >= 300
+            t = vh.observe(ok, qcfg)
+            if was == QUARANTINED:
+                assert t is None
+            if t == "tripped":
+                sweep_trips += 1
+                streak = 0
+                assert vh.state == QUARANTINED
+                assert vh.cooloff_left == qcfg["cooloff"]
+            elif t == "probed":
+                sweep_probes += 1
+                streak += 1
+                assert was == PROBATION and ok
+                assert streak < qcfg["promote_successes"]
+            elif t == "restored":
+                sweep_restores += 1
+                assert was == PROBATION and ok
+                assert streak == qcfg["promote_successes"] - 1
+                assert vh.state == HEALTHY
+                streak = 0
+            elif was == PROBATION:
+                assert False, "probation observe must report a transition"
+assert sweep_trips > 0 and sweep_probes > 0 and sweep_restores > 0
+
+# Retry token bucket (milli-token arithmetic; capacity in whole tokens).
+RETRY_TOKEN_MILLI = 1000
+
+def retry_budget_after_failure(tokens_milli):
+    return max(tokens_milli - RETRY_TOKEN_MILLI, 0)
+
+def retry_budget_after_success(tokens_milli, capacity, refill_permille):
+    return min(tokens_milli + refill_permille, capacity * RETRY_TOKEN_MILLI)
+
+def retry_allowed(tokens_milli, capacity):
+    return tokens_milli > capacity * RETRY_TOKEN_MILLI // 2
+
+assert retry_budget_after_failure(8_000) == 7_000
+assert retry_budget_after_failure(500) == 0
+assert retry_budget_after_success(7_950, 8, 100) == 8_000, "refill caps at capacity"
+assert retry_budget_after_success(4_000, 8, 100) == 4_100
+assert retry_allowed(4_001, 8)
+assert not retry_allowed(4_000, 8), "half-empty bucket sheds retries"
+
+# The default bucket (8 tokens, full) funds exactly 4 consecutive retries;
+# the 5th is refused at the half-capacity floor, and one refill of
+# successes buys the next retry back.
+tokens, spends = 8 * RETRY_TOKEN_MILLI, 0
+while retry_allowed(tokens, 8):
+    tokens = retry_budget_after_failure(tokens)
+    spends += 1
+assert spends == 4 and tokens == 4_000
+tokens = retry_budget_after_success(tokens, 8, 100)
+assert retry_allowed(tokens, 8)
+
+print(f"OK: quarantine breaker + retry bucket — trip at 8/16 windowed "
+      f"failures, 32-screen cooloff, probes every 8th screen, 3-success "
+      f"promotion; sweep saw {sweep_trips} trips / {sweep_probes} probes / "
+      f"{sweep_restores} restores; full bucket funds 4 retries then sheds")

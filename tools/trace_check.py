@@ -19,9 +19,16 @@ without needing a Rust toolchain on the checking side. Three passes:
      one `submit` and reaches exactly one terminal (`complete`, `shed`
      or `reject`); a completed chain carries at least one `execute`;
      unchained events (`seq == 0`) are only the pool-level kinds
-     (`batch`, `steal`, `swap`). Skipped (with a note) when the recorder
-     reported dropped events — an incomplete timeline cannot prove
-     lifecycle violations.
+     (`batch`, `steal`, `swap`, the quarantine transitions, `respawn`,
+     `retry`). Skipped (with a note) when the recorder reported dropped
+     events — an incomplete timeline cannot prove lifecycle violations.
+  4. **Quarantine lifecycle** — per config, `quarantine-probe` events
+     appear only while that config is blocked (between a
+     `quarantine-trip` and its `quarantine-restore`), and a restore
+     never lands on a config that was not tripped first. `respawn`
+     events are accepted wherever they appear: the panic that killed the
+     worker is by nature untraced (the unwinding shard writes no event),
+     so there is no preceding marker to anchor them to.
 
 Exits 0 when green; prints each violation and exits 1 otherwise.
 """
@@ -45,9 +52,23 @@ KIND_FIELDS = {
     "complete": {"latency_ns": NUMERIC, "ok": bool},
     "shed": {"queued_ns": NUMERIC, "budget_ns": NUMERIC},
     "swap": {"generation": NUMERIC, "domain": NUMERIC},
+    "quarantine-trip": {"config": NUMERIC, "trips": NUMERIC},
+    "quarantine-probe": {"config": NUMERIC},
+    "quarantine-restore": {"config": NUMERIC, "restores": NUMERIC},
+    "respawn": {"requests": NUMERIC},
+    "retry": {"reason": str, "attempt": NUMERIC, "tokens_milli": NUMERIC},
 }
 TERMINALS = {"complete", "shed", "reject"}
-POOL_LEVEL = {"batch", "steal", "swap"}
+POOL_LEVEL = {
+    "batch",
+    "steal",
+    "swap",
+    "quarantine-trip",
+    "quarantine-probe",
+    "quarantine-restore",
+    "respawn",
+    "retry",
+}
 
 
 def check_schema(doc, errors):
@@ -134,6 +155,38 @@ def check_causality(events, errors):
     return len(chains)
 
 
+def check_quarantine_lifecycle(events, errors):
+    """Per config: probes only while blocked, restores only after a trip.
+
+    A config becomes blocked at its first `quarantine-trip` and unblocked
+    at `quarantine-restore` (re-trips while blocked are failed probes and
+    keep it blocked). `quarantine-probe` outside a blocked span means the
+    breaker probed a healthy config; a restore without a preceding trip
+    means it promoted a config that was never quarantined. `respawn`
+    events are deliberately not anchored: the panic that necessitated one
+    is untraced (see module docstring).
+    """
+    blocked = set()
+    for i, ev in enumerate(events):
+        kind = ev["kind"]
+        if kind not in ("quarantine-trip", "quarantine-probe", "quarantine-restore"):
+            continue
+        config = ev["config"]
+        if kind == "quarantine-trip":
+            blocked.add(config)
+        elif kind == "quarantine-probe":
+            if config not in blocked:
+                errors.append(
+                    f"event[{i}]: probe of config {config} while not quarantined"
+                )
+        elif kind == "quarantine-restore":
+            if config not in blocked:
+                errors.append(
+                    f"event[{i}]: restore of config {config} that never tripped"
+                )
+            blocked.discard(config)
+
+
 def main():
     if len(sys.argv) != 2:
         print(__doc__.strip().splitlines()[0], file=sys.stderr)
@@ -159,6 +212,7 @@ def main():
             n_chains = sum(1 for e in events if e["kind"] == "submit")
         else:
             n_chains = check_causality(events, errors)
+            check_quarantine_lifecycle(events, errors)
 
     if errors:
         for err in errors:
