@@ -19,6 +19,11 @@
 //!         --slo interactive --admission bounded
 //!     cargo run --release --example serve -- --trace-out /tmp/trace.json \
 //!         --metrics-out /tmp/metrics.prom
+//!     cargo run --release --example serve -- --explore 100,64 \
+//!         --telemetry-out /tmp/warm.json
+//!     cargo run --release --example serve -- --explore 100,64 \
+//!         --telemetry-in /tmp/warm.json --retune-interval 150 \
+//!         --require-warm-start
 //!
 //! Clients submit mixed-shape GEMM requests; the submit path resolves each
 //! to a deployed kernel via the memoized decision-tree selector and routes
@@ -82,6 +87,22 @@
 //! a worker respawn when the plan panics — and exits non-zero otherwise
 //! (the CI chaos smoke).
 //!
+//! `--explore EPS,BUDGET[,SEED[,TOPK]]` arms runtime exploration: a
+//! seeded epsilon fraction (`EPS` permille) of submits is redirected to
+//! an unmeasured-but-shipped config at the same shape, capped at
+//! `BUDGET` lifetime probes, and the first submit of a never-seen shape
+//! bucket queues an off-hot-path micro-benchmark of the `TOPK`
+//! prior-ranked healthy variants. Probes ride idle capacity only and
+//! are shed to zero before admission rejects in-SLO work. Probe
+//! measurements persist through `--telemetry-out`, so the next run's
+//! `--telemetry-in` restores measured coverage instead of re-probing.
+//! `--require-warm-start` (with `--explore`, `--telemetry-in` and
+//! `--retune-interval`) keeps trickling traffic until the first retune
+//! lands on the restored measurements and exits non-zero if that took
+//! any live probing — the CI warm-start smoke. `--requests N` overrides
+//! the per-client request count (default 24) so an exploration run can
+//! drive enough traffic to measure a whole (bucket x config) matrix.
+//!
 //! `--engine sim|cpu` picks the backend (default sim). With `cpu` the
 //! pool executes real f32 GEMM on the host through the `engine::cpu`
 //! variant family: traffic drives the CPU manifest's bounded shape
@@ -107,11 +128,13 @@ use kernelsel::devsim::{generate_dataset, profile_by_name};
 use kernelsel::engine::cpu::cpu_variants;
 use kernelsel::engine::{EngineKind, FaultPlan};
 use kernelsel::runtime::Manifest;
-use kernelsel::tuning::{RetuneConfig, TelemetrySnapshot};
+use kernelsel::tuning::{ExploreConfig, RetuneConfig, TelemetrySnapshot};
 use kernelsel::util::fill_buffer;
 
 const CLIENTS: usize = 4;
 const REQUESTS_PER_CLIENT: usize = 24;
+// `--requests N` overrides REQUESTS_PER_CLIENT — exploration smokes drive
+// enough traffic to measure a whole (bucket x config) matrix in one run.
 
 fn flag_str(name: &str) -> Option<String> {
     let args: Vec<String> = std::env::args().collect();
@@ -216,6 +239,16 @@ fn main() -> Result<(), String> {
     if require_recovery && chaos.is_none() {
         return Err("--require-recovery needs --chaos".to_string());
     }
+    let explore = flag_str("--explore").map(|v| ExploreConfig::parse(&v)).transpose()?;
+    let require_warm_start = has_flag("--require-warm-start");
+    if require_warm_start
+        && (explore.is_none() || retune.is_none() || flag_str("--telemetry-in").is_none())
+    {
+        return Err(
+            "--require-warm-start needs --explore, --retune-interval and --telemetry-in"
+                .to_string(),
+        );
+    }
     let engine_name = flag_str("--engine").unwrap_or_else(|| "sim".to_string());
     let dir = PathBuf::from("artifacts");
 
@@ -285,6 +318,7 @@ fn main() -> Result<(), String> {
         quota_slots,
         trace,
         fault: chaos,
+        explore,
         ..PoolConfig::default()
     };
     println!(
@@ -304,6 +338,12 @@ fn main() -> Result<(), String> {
             n => format!("{n} x {} (quota {quota_slots})", slo.name()),
         },
     );
+    if let Some(e) = &explore {
+        println!(
+            "explore armed: eps {}/1000, budget {} probe(s), seed {}, first-sight top-{}",
+            e.eps_permille, e.budget, e.seed, e.top_k
+        );
+    }
     if let Some(plan) = &chaos {
         println!(
             "chaos armed: seed {} window [{}, {}) transient/corrupt/spike \
@@ -361,6 +401,7 @@ fn main() -> Result<(), String> {
         let _ = coord.call(s, lhs, rhs);
     }
 
+    let requests_per_client = flag("--requests", REQUESTS_PER_CLIENT);
     let t0 = Instant::now();
     let mut joins = Vec::new();
     for client in 0..CLIENTS {
@@ -376,7 +417,7 @@ fn main() -> Result<(), String> {
         joins.push(std::thread::spawn(move || {
             let mut ok = 0usize;
             let mut total_latency = 0.0f64;
-            for i in 0..REQUESTS_PER_CLIENT {
+            for i in 0..requests_per_client {
                 let s = shapes[(client + i) % shapes.len()];
                 let lhs = fill_buffer((client * 1000 + i) as u32, s.batch * s.m * s.k);
                 let rhs = fill_buffer((client * 1000 + i + 500) as u32, s.batch * s.k * s.n);
@@ -400,7 +441,7 @@ fn main() -> Result<(), String> {
         latency_sum += l;
     }
     let wall = t0.elapsed().as_secs_f64();
-    let total = CLIENTS * REQUESTS_PER_CLIENT;
+    let total = CLIENTS * requests_per_client;
 
     // Keep trickling traffic until the background retuner lands a swap
     // (the CI tuning smoke asserts adaptivity, not just liveness).
@@ -420,6 +461,42 @@ fn main() -> Result<(), String> {
         println!(
             "retune wait: swaps={} retunes={} drift_trips={} generation={}",
             stats.swaps, stats.retunes, stats.drift_trips, stats.generation
+        );
+    }
+
+    // Keep trickling traffic until the first retune lands on the restored
+    // telemetry. The CI warm-start smoke asserts that a pool seeded from a
+    // previous run's snapshot converges on measured data without a single
+    // live probe (the exit gate below).
+    let mut warm_start_met = !require_warm_start;
+    if require_warm_start {
+        let deadline = Instant::now() + Duration::from_secs(20);
+        loop {
+            let tuning = coord.retune_stats();
+            if tuning.retunes >= 1 {
+                warm_start_met = true;
+                break;
+            }
+            if Instant::now() >= deadline {
+                break;
+            }
+            for (i, s) in [shapes[0], shapes[shapes.len() - 1]].iter().enumerate() {
+                let lhs = fill_buffer(i as u32, s.batch * s.m * s.k);
+                let rhs = fill_buffer(i as u32 + 3, s.batch * s.k * s.n);
+                let _ = coord.call(*s, lhs, rhs);
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        let tuning = coord.retune_stats();
+        let probes = coord.explore_stats();
+        println!(
+            "warm-start wait: retunes={} swaps={} probes issued={} shed={} \
+             first-sight runs={}",
+            tuning.retunes,
+            tuning.swaps,
+            probes.probes_issued,
+            probes.probes_shed,
+            probes.first_sight_runs
         );
     }
 
@@ -461,15 +538,6 @@ fn main() -> Result<(), String> {
         }
     }
 
-    // Persist the telemetry snapshot before shutdown so the next run can
-    // seed itself with --telemetry-in.
-    if let Some(path) = flag_str("--telemetry-out") {
-        let snapshot = coord.telemetry().snapshot();
-        let text = snapshot.to_json().to_string() + "\n";
-        std::fs::write(&path, text).map_err(|e| format!("writing --telemetry-out {path}: {e}"))?;
-        println!("wrote telemetry snapshot ({} cells) to {path}", snapshot.cells.len());
-    }
-
     // Final exposition dump after the scraper stops: the file on disk
     // must reflect every completed request, not the last 200 ms tick.
     scraper_stop.store(true, Ordering::Relaxed);
@@ -485,7 +553,19 @@ fn main() -> Result<(), String> {
     // exported after shutdown — once every shard has drained and flushed.
     let recorder = coord.recorder().cloned();
 
+    let coverage = explore.map(|_| coord.explore_coverage(1));
+    let telemetry = coord.telemetry().clone();
     let report = Arc::try_unwrap(coord).ok().expect("sole owner").stop_detailed();
+
+    // Persist the telemetry snapshot after shutdown — the pool drains its
+    // first-sight micro-benchmark worker on stop, so the export carries
+    // every probe measurement for the next run's --telemetry-in.
+    if let Some(path) = flag_str("--telemetry-out") {
+        let snapshot = telemetry.snapshot();
+        let text = snapshot.to_json().to_string() + "\n";
+        std::fs::write(&path, text).map_err(|e| format!("writing --telemetry-out {path}: {e}"))?;
+        println!("wrote telemetry snapshot ({} cells) to {path}", snapshot.cells.len());
+    }
     println!(
         "\n{ok}/{total} requests ok in {wall:.3}s -> {:.1} req/s, mean latency {:.2} ms",
         total as f64 / wall,
@@ -526,8 +606,34 @@ fn main() -> Result<(), String> {
             report.total.retries_denied,
         );
     }
+    if let Some((measured, total_pairs)) = coverage {
+        println!(
+            "explore: coverage {measured}/{total_pairs} (bucket x healthy-shipped pairs), \
+             probes issued={} shed={} completed={}, first-sight shapes={} runs={}",
+            report.explore.probes_issued,
+            report.explore.probes_shed,
+            report.explore.probes_completed,
+            report.explore.first_sight_shapes,
+            report.explore.first_sight_runs,
+        );
+    }
     if require_swap && report.total.selector_swaps == 0 {
         return Err("no selector swap observed (drift never retuned the pool)".to_string());
+    }
+    if require_warm_start {
+        if !warm_start_met {
+            return Err(
+                "warm start failed: no retune landed on the restored telemetry within the \
+                 deadline"
+                    .to_string(),
+            );
+        }
+        if report.explore.probes_issued > 0 {
+            return Err(format!(
+                "warm start violated: {} live probe(s) issued despite restored coverage",
+                report.explore.probes_issued
+            ));
+        }
     }
     if !recovery_met {
         return Err(

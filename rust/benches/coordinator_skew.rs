@@ -27,6 +27,16 @@
 //! (`quota-off`) must demonstrably violate that — proving the quota
 //! layer, not luck, is what isolates the tenants.
 //!
+//! The **explore** scenario is the acceptance gate for runtime
+//! exploration: a pool whose shipped (bucket, config) matrix starts
+//! >= 50% unmeasured arms seeded epsilon probing with a hard budget and
+//! drives every cheap serving bucket sequentially. The exit code
+//! enforces that >= 90% of the healthy shipped matrix is measured
+//! within the probe budget AND that traced e2e p99 stays within 10% of
+//! an identical no-explore control — probes redirect live requests onto
+//! idle capacity, they never add load or displace in-SLO work. Explore
+//! cells are self-gated and excluded from the throughput baseline gate.
+//!
 //! The **chaos** scenario is the robustness gate for fault injection,
 //! variant quarantine and shard supervision: a seeded fault plan injects
 //! transient errors + silent corruption against the deployed config for
@@ -63,6 +73,7 @@ use kernelsel::dataset::{config_by_name, GemmShape};
 use kernelsel::engine::sim::host_gemm;
 use kernelsel::engine::FaultPlan;
 use kernelsel::runtime::Manifest;
+use kernelsel::tuning::{ExploreConfig, ExploreStats};
 use kernelsel::util::json::{parse, Json};
 use kernelsel::util::{fill_buffer, Stats};
 
@@ -546,6 +557,130 @@ fn run_isolated(n: usize, interval: Duration, slo_secs: f64) -> Cell {
     }
 }
 
+/// Explore: fraction of the healthy shipped (bucket, config) matrix that
+/// must hold at least one measured sample by the end of the run.
+const EXPLORE_COVERAGE_MIN: f64 = 0.90;
+/// Explore: the exploring pool's traced e2e p99 may exceed the
+/// no-explore control's by at most this factor.
+const EXPLORE_P99_TOLERANCE: f64 = 1.10;
+/// Explore: lifetime probe cap — coverage must be reached within it.
+const EXPLORE_BUDGET: u64 = 200;
+/// The three multi-hundred-MFLOP synthetic buckets, too slow for a tight
+/// sequential host-GEMM loop. The explore scenario pre-seeds them as
+/// already-measured history (a deployment with telemetry for its heavy
+/// shapes but none for the rest of the matrix) and drives the other
+/// eleven — which also sets up the scenario's precondition: >= 50% of
+/// the shipped matrix starts unmeasured.
+const EXPLORE_HEAVY: [(usize, usize, usize, usize); 3] =
+    [(512, 784, 512, 1), (512, 784, 512, 16), (196, 4608, 512, 1)];
+
+/// Run one explore-scenario cell: a 2-shard traced pool, the heavy
+/// buckets pre-seeded as measured, then `n` sequential blocking calls
+/// round-robining the cheap buckets. Sequential submission keeps every
+/// shard near-idle at submit time, so the only thing separating the
+/// explore cell from the control is the probe redirects themselves.
+/// Returns the cell, the final `(measured, total)` coverage, and the
+/// shutdown exploration counters.
+fn run_explore_cell(
+    admission_name: &'static str,
+    explore: Option<ExploreConfig>,
+    n: usize,
+) -> (Cell, (usize, usize), ExploreStats) {
+    let coord = Coordinator::start_pool(
+        PathBuf::from("artifacts"),
+        SelectorPolicy::Xla,
+        PoolConfig {
+            shards: 2,
+            explore,
+            trace: Some(TraceConfig {
+                capacity: (n * 6).next_power_of_two(),
+                sample_every: 1,
+            }),
+            ..PoolConfig::default()
+        },
+    )
+    .expect("start pool");
+    // Pre-seed the heavy buckets with 3 samples per deployed config (the
+    // sink's pricing threshold), leaving the driven matrix unmeasured.
+    let manifest = Manifest::synthetic();
+    let deployed: Vec<usize> = manifest
+        .deployed
+        .iter()
+        .map(|name| config_by_name(name).expect("deployed config").index())
+        .collect();
+    for &(m, k, nn, b) in &EXPLORE_HEAVY {
+        let shape = GemmShape::new(m, k, nn, b);
+        for &cfg in &deployed {
+            for _ in 0..3 {
+                coord.telemetry().record(shape, Some(cfg), shape.flops() / 4e10);
+            }
+        }
+    }
+    let driven: Vec<GemmShape> = manifest
+        .matmul_shapes()
+        .into_iter()
+        .filter(|dims| !EXPLORE_HEAVY.contains(dims))
+        .map(|(m, k, nn, b)| GemmShape::new(m, k, nn, b))
+        .collect();
+    let (m0, total0) = coord.explore_coverage(1);
+    assert!(
+        (total0 - m0) * 2 >= total0,
+        "explore precondition: >= 50% of the shipped matrix must start unmeasured \
+         ({m0}/{total0} already measured)"
+    );
+    // One warming pass keeps first-touch compiles out of the measured
+    // loop (on the explore cell it also fires each bucket's first-sight).
+    for s in &driven {
+        let lhs = fill_buffer(1, s.batch * s.m * s.k);
+        let rhs = fill_buffer(2, s.batch * s.k * s.n);
+        let _ = coord.call(*s, lhs, rhs);
+    }
+    let t_run = Instant::now();
+    let mut latencies = Vec::with_capacity(n);
+    for i in 0..n {
+        let s = driven[i % driven.len()];
+        let lhs = fill_buffer(i as u32, s.batch * s.m * s.k);
+        let rhs = fill_buffer((i + 13) as u32, s.batch * s.k * s.n);
+        let resp = coord.call(s, lhs, rhs).expect("explore call");
+        assert!(resp.result.is_ok(), "{:?}", resp.result.err());
+        latencies.push(resp.latency.as_secs_f64());
+    }
+    let wall = t_run.elapsed().as_secs_f64();
+    // The first-sight micro-benchmarks run off the hot path on the
+    // seeder thread; poll until their telemetry lands (or 5 s).
+    let deadline = Instant::now() + Duration::from_secs(5);
+    let mut coverage = coord.explore_coverage(1);
+    while explore.is_some()
+        && (coverage.0 as f64) < EXPLORE_COVERAGE_MIN * coverage.1 as f64
+        && Instant::now() < deadline
+    {
+        std::thread::sleep(Duration::from_millis(20));
+        coverage = coord.explore_coverage(1);
+    }
+    let report = coord.stop_detailed();
+    let lat = Stats::from_secs(&latencies);
+    (
+        Cell {
+            mix: "explore",
+            routing: "load-aware",
+            admission: admission_name,
+            shards: 2,
+            requests: n,
+            throughput_rps: n as f64 / wall,
+            goodput_rps: n as f64 / wall,
+            p50_ms: lat.p50 * 1e3,
+            p99_ms: lat.p99 * 1e3,
+            spilled: report.total.spilled,
+            steals: report.total.steals,
+            rejected: report.total.rejected,
+            shed: report.total.shed,
+            tenant: None,
+        },
+        coverage,
+        report.explore,
+    )
+}
+
 /// Chaos: quarantine must trip within this many requests of fault onset.
 const CHAOS_TRIP_WINDOW: usize = 64;
 /// Chaos: final-third goodput must hold this fraction of the fault-free
@@ -857,7 +992,7 @@ fn regressions(cells: &[Cell], baseline: &Json) -> Vec<String> {
         ) else {
             continue;
         };
-        if mix == "overload" || mix == "tenants" || mix == "chaos" {
+        if mix == "overload" || mix == "tenants" || mix == "chaos" || mix == "explore" {
             // Overload cells serve a deliberately tiny admitted subset —
             // their throughput is scheduler noise, not capacity — and the
             // bench already self-gates them on goodput vs Unbounded. Keep
@@ -868,6 +1003,7 @@ fn regressions(cells: &[Cell], baseline: &Json) -> Vec<String> {
             // admission) lookup can't distinguish. Chaos cells are
             // self-gating too (corruption/trip/recovery exit codes) and
             // deliberately run degraded — never throughput-comparable.
+            // Explore cells self-gate on coverage + p99-vs-control.
             continue;
         }
         // Pre-admission baselines carry no "admission" key: they describe
@@ -1146,6 +1282,62 @@ fn main() {
         if chaos_failures.is_empty() { "OK" } else { "NOT SELF-HEALING" }
     );
     let chaos_gate_failed = !chaos_failures.is_empty();
+    println!();
+
+    // Exploration scenario: seeded epsilon probing must measure >= 90%
+    // of the healthy shipped (bucket, config) matrix within a hard probe
+    // budget, while traced e2e p99 stays within 10% of an identical
+    // no-explore control run.
+    let explore_n = if smoke { 220 } else { 330 };
+    let explore_cfg = ExploreConfig {
+        eps_permille: 1000,
+        budget: EXPLORE_BUDGET,
+        seed: 21,
+        top_k: 3,
+    };
+    println!(
+        "explore: {explore_n} sequential requests over the cheap buckets, eps 1000/1000, \
+         budget {EXPLORE_BUDGET} probes, vs a no-explore control"
+    );
+    let (control_cell, _, _) = run_explore_cell("control", None, explore_n);
+    let (explore_cell, coverage, explore_stats) =
+        run_explore_cell("explore", Some(explore_cfg), explore_n);
+    let (control_p99, explore_p99) = (control_cell.p99_ms, explore_cell.p99_ms);
+    for c in [&control_cell, &explore_cell] {
+        println!(
+            "{:>8} {:>14} {} shard(s): {:>8.1} req/s  p50 {:>7.2} ms  p99 {:>7.2} ms",
+            c.mix, c.admission, c.shards, c.throughput_rps, c.p50_ms, c.p99_ms,
+        );
+    }
+    println!(
+        "{:>8} {:>14}: probes issued {} / shed {} / completed {}, first-sight {} \
+         bucket(s) / {} run(s)",
+        "explore",
+        "counters",
+        explore_stats.probes_issued,
+        explore_stats.probes_shed,
+        explore_stats.probes_completed,
+        explore_stats.first_sight_shapes,
+        explore_stats.first_sight_runs,
+    );
+    let coverage_ok = coverage.0 as f64 >= EXPLORE_COVERAGE_MIN * coverage.1 as f64;
+    let budget_ok = explore_stats.probes_issued <= EXPLORE_BUDGET;
+    let p99_ok = explore_p99 <= control_p99 * EXPLORE_P99_TOLERANCE;
+    println!(
+        "explore: coverage {}/{} pairs ({:.0}% floor), {} probes within budget {}, \
+         p99 {:.2} ms vs control {:.2} ms  [{}]",
+        coverage.0,
+        coverage.1,
+        EXPLORE_COVERAGE_MIN * 100.0,
+        explore_stats.probes_issued,
+        EXPLORE_BUDGET,
+        explore_p99,
+        control_p99,
+        if coverage_ok && budget_ok && p99_ok { "OK" } else { "EXPLORATION NOT EARNING KEEP" }
+    );
+    let explore_gate_failed = !(coverage_ok && budget_ok && p99_ok);
+    cells.push(control_cell);
+    cells.push(explore_cell);
 
     if let Some(path) = json_path {
         let doc = with_chaos(cells_to_json(&cells, mode), &chaos_cells);
@@ -1201,6 +1393,19 @@ fn main() {
         for f in &chaos_failures {
             eprintln!("  {f}");
         }
+        std::process::exit(1);
+    }
+    if explore_gate_failed {
+        eprintln!(
+            "\nEXPLORE GATE FAILED: within a {EXPLORE_BUDGET}-probe budget the pool must \
+             measure >= {:.0}% of the healthy shipped (bucket, config) matrix \
+             (got {}/{}) with traced e2e p99 within {:.0}% of the no-explore control \
+             ({explore_p99:.2} ms vs {control_p99:.2} ms)",
+            EXPLORE_COVERAGE_MIN * 100.0,
+            coverage.0,
+            coverage.1,
+            (EXPLORE_P99_TOLERANCE - 1.0) * 100.0,
+        );
         std::process::exit(1);
     }
 }

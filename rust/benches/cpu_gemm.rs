@@ -2,7 +2,7 @@
 //! kernel selection earn its keep when the timings are measured, not
 //! simulated?
 //!
-//! Two acceptance gates, both exit-code enforced:
+//! Three acceptance gates, all exit-code enforced:
 //!
 //! 1. **Variant spread** — in every shape regime (small / skinny / large)
 //!    at least one grid cell must show the best variant >= 2x the worst:
@@ -11,6 +11,15 @@
 //!    (PCA+K-means deployment, exact-fit decision tree; k swept over a
 //!    small range) must achieve >= 85% of the oracle-best variant's
 //!    throughput, as a geometric mean across the grid.
+//! 3. **Warm start** — the measured grid, re-recorded as probe
+//!    provenance and round-tripped through the `kernelsel-telemetry-v1`
+//!    wire format into a fresh default sink (what `serve
+//!    --telemetry-out` / `--telemetry-in` does across a redeployment),
+//!    must leave zero unmeasured (shape, variant) cells — so an
+//!    exploration planner warm-started from the snapshot issues zero
+//!    live probes — and a selector tuned on the restored data alone
+//!    must reach >= 95% of the directly tuned selector's
+//!    geomean-of-oracle, evaluated against the original measurements.
 //!
 //!     cargo bench --bench cpu_gemm
 //!     cargo bench --bench cpu_gemm -- --smoke --json BENCH_cpu.json \
@@ -26,10 +35,12 @@
 //! >20% drop — the mirror of the pool bench's throughput gate.
 
 use kernelsel::classify::ClassifierKind;
+use kernelsel::coordinator::cache::CostModel;
 use kernelsel::coordinator::tune_selector_with;
 use kernelsel::dataset::Normalization;
 use kernelsel::engine::cpu::{collect_dataset, grid_cells, variant_by_index, GridCell};
 use kernelsel::selection::Method;
+use kernelsel::tuning::{live_dataset, DriftReport, TelemetrySink, TelemetrySnapshot};
 use kernelsel::util::json::{parse, Json};
 
 /// Gate 1: best/worst variant ratio required on >= 1 cell per regime.
@@ -37,6 +48,15 @@ const SPREAD_MIN: f64 = 2.0;
 
 /// Gate 2: geomean of (chosen / oracle-best) throughput across the grid.
 const REGRET_MIN: f64 = 0.85;
+
+/// Gate 3: the selector tuned purely on the round-tripped warm-start
+/// snapshot must reach this fraction of the directly tuned selector's
+/// geomean-of-oracle (and the restored coverage must need zero probes).
+const WARM_START_MIN: f64 = 0.95;
+
+/// Samples recorded per warm-start cell — the pool sink's default
+/// `min_samples` threshold, so the restored cells price immediately.
+const WARM_START_SAMPLES: usize = 3;
 
 /// Deployment sizes swept for the selection-regret gate.
 const K_SWEEP: [usize; 3] = [4, 6, 8];
@@ -255,6 +275,83 @@ fn main() {
         if regret_ok { "OK" } else { "BELOW GATE" }
     );
 
+    // Gate 3: warm start. Re-record every measured cell as probe
+    // provenance, round-trip through the wire format into a fresh
+    // default sink, and tune a selector from the restored data alone —
+    // the exploration-then-redeploy lifecycle, compressed into-process.
+    let sink = TelemetrySink::new(WARM_START_SAMPLES as u64, 0.25);
+    for (i, shape) in ds.shapes.iter().enumerate() {
+        for v in 0..variant_count {
+            let gf = ds.gflops[(i, v)];
+            if gf <= 0.0 {
+                continue;
+            }
+            let secs = shape.flops() / (gf * 1e9);
+            for _ in 0..WARM_START_SAMPLES {
+                sink.record_probe(*shape, Some(v), secs);
+            }
+        }
+    }
+    let wire = sink.snapshot().to_json().to_string();
+    let restored = TelemetrySnapshot::from_json(&parse(&wire).expect("snapshot wire parses"))
+        .expect("snapshot wire loads");
+    let fresh = TelemetrySink::new(WARM_START_SAMPLES as u64, 0.25);
+    fresh.absorb(&restored);
+    // Zero-probe claim: every (shape, variant) cell prices from the
+    // restored snapshot, so `unmeasured_candidates` is empty everywhere
+    // and a warm-started exploration planner has nothing left to probe.
+    let mut unmeasured = 0usize;
+    for (i, shape) in ds.shapes.iter().enumerate() {
+        for v in 0..variant_count {
+            if ds.gflops[(i, v)] > 0.0 && fresh.measured_cost_secs(shape, Some(v)).is_none() {
+                unmeasured += 1;
+            }
+        }
+    }
+    let pool: Vec<usize> = (0..variant_count).collect();
+    let warm_ds = live_dataset(
+        &fresh.snapshot(),
+        &CostModel::CpuAnalytic,
+        &DriftReport::default(),
+        &pool,
+        WARM_START_SAMPLES as u64,
+    )
+    .expect("restored snapshot folds into a live dataset");
+    let mut warm_geomean = 0.0f64;
+    for k in K_SWEEP {
+        let Some((_deployed, tree)) = tune_selector_with(
+            Method::PcaKMeans,
+            ClassifierKind::DecisionTreeA,
+            &warm_ds,
+            k,
+            Normalization::Standard,
+            7,
+        ) else {
+            continue;
+        };
+        // Score the warm-tuned tree's choices against the ORIGINAL
+        // measured grid — the regret a warm-started deployment actually
+        // pays on live traffic.
+        let mut log_sum = 0.0f64;
+        for (i, shape) in ds.shapes.iter().enumerate() {
+            let chosen = tree.predict_config(&shape.features());
+            let oracle =
+                (0..variant_count).map(|v| ds.gflops[(i, v)]).fold(0.0f64, f64::max);
+            let got = ds.gflops[(i, chosen)];
+            log_sum += (got.max(1e-12) / oracle.max(1e-12)).ln();
+        }
+        warm_geomean = warm_geomean.max((log_sum / ds.shapes.len() as f64).exp());
+    }
+    let warm_ratio = if best_geomean > 0.0 { warm_geomean / best_geomean } else { 0.0 };
+    let warm_ok = unmeasured == 0 && warm_ratio >= WARM_START_MIN;
+    println!(
+        "warm start: {unmeasured} unmeasured cell(s) after round-trip; restored-data \
+         selector geomean {:.1}% of oracle = {:.1}% of the directly tuned selector  [{}]",
+        warm_geomean * 100.0,
+        warm_ratio * 100.0,
+        if warm_ok { "OK" } else { "BELOW GATE" }
+    );
+
     if let Some(path) = json_path {
         let entries: Vec<Json> = reports
             .iter()
@@ -293,6 +390,9 @@ fn main() {
             ("reps", Json::Num(reps as f64)),
             ("k_best", Json::Num(best_k as f64)),
             ("regret_geomean", Json::Num(best_geomean)),
+            ("warm_start_geomean", Json::Num(warm_geomean)),
+            ("warm_start_ratio", Json::Num(warm_ratio)),
+            ("warm_start_unmeasured", Json::Num(unmeasured as f64)),
             ("entries", Json::Arr(entries)),
             ("regimes", Json::Arr(regime_entries)),
         ]);
@@ -339,6 +439,16 @@ fn main() {
              oracle-best throughput geomean (got {:.1}%)",
             REGRET_MIN * 100.0,
             best_geomean * 100.0
+        );
+        std::process::exit(1);
+    }
+    if !warm_ok {
+        eprintln!(
+            "\nWARM START GATE FAILED: the round-tripped snapshot must leave zero \
+             unmeasured cells (got {unmeasured}) and the restored-data selector must \
+             reach >= {:.0}% of the directly tuned one (got {:.1}%)",
+            WARM_START_MIN * 100.0,
+            warm_ratio * 100.0
         );
         std::process::exit(1);
     }

@@ -323,6 +323,42 @@ impl ResolutionCache {
         Ok(resolved)
     }
 
+    /// Resolve `shape` to one *specific* shipped config, bypassing the
+    /// selector and the memoized map entirely — the exploration-probe
+    /// path. The result is never inserted into the cache (a probe must
+    /// not poison the organic hot path), and quarantine is consulted
+    /// with the pure `blocks` read, never `screen`: the breaker's
+    /// probation trickle belongs to the organic resolve path alone.
+    /// Returns `None` when the config is blocked or not shipped at the
+    /// shape.
+    pub fn resolve_probe(
+        &self,
+        registry: &KernelRegistry,
+        shape: &GemmShape,
+        config: usize,
+    ) -> Option<Arc<ResolvedKernel>> {
+        if self.quarantine.as_ref().is_some_and(|q| q.blocks(config)) {
+            return None;
+        }
+        let meta = registry
+            .manifest
+            .find_matmul(Some(config), shape.m, shape.k, shape.n, shape.batch)?;
+        let cost_hint_secs = self.model.predict_secs(shape, meta.config_index);
+        let artifact: Arc<str> = Arc::from(meta.path.as_str());
+        let mut hasher = DefaultHasher::new();
+        meta.path.hash(&mut hasher);
+        Some(Arc::new(ResolvedKernel {
+            meta: Arc::new(meta.clone()),
+            resolution: Resolution::Direct,
+            cost_hint_secs,
+            generation: registry.generation(),
+            artifact,
+            affinity: hasher.finish(),
+            cached_cost_ns: AtomicU64::new(0),
+            hint_tick: AtomicU64::new(0),
+        }))
+    }
+
     /// The per-dispatch cost hint (ns) the router should charge for a
     /// resolved request: the measured EWMA once the telemetry cell is
     /// warm, the devsim estimate while cold. The hint is memoized on the

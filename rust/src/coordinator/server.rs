@@ -58,7 +58,7 @@
 //! bit-identical to the pre-tenant pool.
 
 use std::collections::{HashMap, VecDeque};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Condvar, Mutex};
@@ -81,6 +81,10 @@ use crate::coordinator::trace::{pack_shape, EventKind, FlightRecorder, TraceConf
 use crate::dataset::GemmShape;
 use crate::engine::{Backend, EngineKind, FaultPlan, FaultyBackend};
 use crate::runtime::Manifest;
+use crate::tuning::explore::{
+    measured_coverage, probe_would_admit, rank_by_prior, unmeasured_candidates, ExploreConfig,
+    ExplorePlanner, ExploreStats,
+};
 use crate::tuning::regret::{evaluate_regret, RegretEstimator};
 use crate::tuning::retuner::{retune_once, RetuneConfig, RetuneOutcome, Retuner, RetunerStats};
 use crate::tuning::swap::deploy_policy;
@@ -340,6 +344,18 @@ pub struct PoolConfig {
     /// half-open probation cadence. Tracking is always on — the healthy
     /// fast path is one relaxed atomic load per served request.
     pub quarantine: QuarantineConfig,
+    /// Exploration (see [`ExploreConfig`]): when set and not inert, a
+    /// seeded epsilon fraction of live submits is redirected to
+    /// *unmeasured but shipped* configs (budget-capped, quarantine-
+    /// screened, and strictly idle-capacity-only — probes are shed
+    /// before any in-SLO work is refused), and the first submit of a
+    /// never-seen shape bucket queues an off-hot-path micro-benchmark
+    /// of the top-k prior-ranked variants. Probe measurements land in
+    /// the ordinary telemetry (flagged as probes), so they persist
+    /// through `--telemetry-out` and warm-start the next deployment.
+    /// `None` (the default) keeps the submit path bit-identical to a
+    /// pool without exploration.
+    pub explore: Option<ExploreConfig>,
 }
 
 impl Default for PoolConfig {
@@ -361,6 +377,7 @@ impl Default for PoolConfig {
             trace: None,
             fault: None,
             quarantine: QuarantineConfig::default(),
+            explore: None,
         }
     }
 }
@@ -385,6 +402,8 @@ pub struct PoolReport {
     /// Per-tenant serving report, in registration order (empty for a
     /// pool without registered tenants).
     pub tenants: Vec<TenantReport>,
+    /// Exploration counters (all zero when exploration was off).
+    pub explore: ExploreStats,
 }
 
 /// One registered tenant's slice of the shutdown report: its goodput
@@ -461,6 +480,17 @@ impl PoolReport {
                     ));
                 }
             }
+        }
+        let ex = &self.explore;
+        if ex.probes_issued > 0 || ex.probes_shed > 0 || ex.first_sight_shapes > 0 {
+            out.push_str(&format!(
+                "\n  explore: probes={} shed={} completed={} first_sight={} runs={}",
+                ex.probes_issued,
+                ex.probes_shed,
+                ex.probes_completed,
+                ex.first_sight_shapes,
+                ex.first_sight_runs,
+            ));
         }
         if self.tuning.ticks > 0 {
             out.push_str(&format!(
@@ -557,6 +587,10 @@ struct Job {
     /// Flight-recorder chain id linking this job's lifecycle events
     /// (0 = recorder off or this submit sampled out).
     trace_seq: u64,
+    /// True when the exploration policy redirected this request to an
+    /// unmeasured shipped config: its measurement records with probe
+    /// provenance and counts toward the planner's completion tally.
+    probe: bool,
 }
 
 /// Index sentinel for jobs outside every tenant lane.
@@ -845,6 +879,12 @@ pub struct Coordinator {
     /// Token bucket bounding `call_with_retry`: retries shed first under
     /// load, so they can never amplify overload.
     retry_budget: RetryBudget,
+    /// Exploration planner (`None` = exploration off or inert; the
+    /// submit path then takes a zero-cost early exit around it).
+    explore: Option<Arc<ExplorePlanner>>,
+    /// The first-sight micro-benchmark worker (armed with `explore`;
+    /// dropping the coordinator closes its channel and joins it).
+    seeder: Option<FirstSightSeeder>,
     /// Everything `maybe_respawn` needs to spawn a replacement worker on
     /// a dead shard's existing queue.
     respawn: RespawnSpec,
@@ -862,6 +902,95 @@ struct RespawnSpec {
     domains: Arc<Vec<ShardDomain>>,
     lanes: Arc<Vec<Arc<TenantLive>>>,
     fault: Option<FaultPlan>,
+    explore: Option<Arc<ExplorePlanner>>,
+}
+
+/// The first-sight micro-benchmark worker: a dedicated thread owning its
+/// own backend instance. The first submit of a never-seen shape bucket
+/// sends the shape here; the worker times the top-k prior-ranked healthy
+/// variants once, off the hot path, and records the measurements into
+/// the default domain's telemetry with probe provenance — so the
+/// selector's answer for a new bucket is backed by data before the
+/// retuner next trains. Dropping the handle closes the channel and joins
+/// the thread.
+struct FirstSightSeeder {
+    tx: Option<Sender<GemmShape>>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl FirstSightSeeder {
+    /// Queue `shape` for a first-sight sweep (never blocks; a dead
+    /// worker just drops the send).
+    fn send(&self, shape: GemmShape) {
+        if let Some(tx) = &self.tx {
+            let _ = tx.send(shape);
+        }
+    }
+}
+
+impl Drop for FirstSightSeeder {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(worker) = self.worker.take() {
+            let _ = worker.join();
+        }
+    }
+}
+
+/// Spawn the first-sight worker (see [`FirstSightSeeder`]). A backend
+/// that fails to construct (or a thread that fails to spawn) disables
+/// first-sight seeding rather than failing the pool — coverage is an
+/// optimization, never a liveness dependency.
+fn start_seeder(
+    artifacts_dir: &Path,
+    engine: &EngineKind,
+    registry: Arc<KernelRegistry>,
+    telemetry: Arc<TelemetrySink>,
+    planner: Arc<ExplorePlanner>,
+    model: CostModel,
+) -> Option<FirstSightSeeder> {
+    let mut backend = engine.create(artifacts_dir).ok()?;
+    let (tx, rx) = channel::<GemmShape>();
+    let worker = std::thread::Builder::new()
+        .name("kernelsel-first-sight".to_string())
+        .spawn(move || {
+            let top_k = planner.config().top_k;
+            while let Ok(shape) = rx.recv() {
+                // All-ones operands: cheap to build, and the measured
+                // time of a GEMM does not depend on operand values.
+                let lhs = vec![1.0f32; shape.batch * shape.m * shape.k];
+                let rhs = vec![1.0f32; shape.batch * shape.k * shape.n];
+                for config in rank_by_prior(&registry, &model, &shape, top_k) {
+                    // "Once": a variant the sink already prices from real
+                    // measurements — earlier in this run or restored from
+                    // a warm-start snapshot — is never re-benchmarked.
+                    if telemetry.measured_cost_secs(&shape, Some(config)).is_some() {
+                        continue;
+                    }
+                    let Some(meta) = registry.manifest.find_matmul(
+                        Some(config),
+                        shape.m,
+                        shape.k,
+                        shape.n,
+                        shape.batch,
+                    ) else {
+                        continue;
+                    };
+                    let meta = meta.clone();
+                    if backend.prepare(&meta).is_err() {
+                        continue;
+                    }
+                    if let Ok((_, secs)) =
+                        backend.execute_timed_for(&meta, &shape, &lhs, &rhs, None)
+                    {
+                        telemetry.record_probe(shape, meta.config_index, secs);
+                        planner.note_first_sight_run();
+                    }
+                }
+            }
+        })
+        .ok()?;
+    Some(FirstSightSeeder { tx: Some(tx), worker: Some(worker) })
 }
 
 /// The synthetic response for a request rejected on the submit path.
@@ -1042,6 +1171,25 @@ impl Coordinator {
                 .collect(),
         );
         let inflight = Arc::new(AtomicUsize::new(0));
+        // Exploration is armed only by a non-inert config: the planner is
+        // shared by the submit path (epsilon redirect + first-sight
+        // detection), the shards (probe completion accounting) and the
+        // first-sight worker. An absent or inert config keeps the submit
+        // path bit-identical to a pool without exploration.
+        let explore = cfg
+            .explore
+            .filter(|e| !e.is_inert())
+            .map(|e| Arc::new(ExplorePlanner::new(e)));
+        let seeder = explore.as_ref().and_then(|planner| {
+            start_seeder(
+                &artifacts_dir,
+                &engine_spec,
+                registry.clone(),
+                telemetry.clone(),
+                planner.clone(),
+                model,
+            )
+        });
         let queues: Arc<Vec<Arc<ShardQueue>>> =
             Arc::new((0..n_shards).map(|_| Arc::new(ShardQueue::new())).collect());
         // The shed budget is wall-clock wait since submit, which includes
@@ -1063,6 +1211,7 @@ impl Coordinator {
             let recorder_for_shard = recorder.clone();
             let lanes_for_shard = lanes.clone();
             let quarantine_for_shard = quarantine.clone();
+            let explore_for_shard = explore.clone();
             let spawned = std::thread::Builder::new()
                 .name(format!("kernelsel-shard-{shard_id}"))
                 .spawn(move || {
@@ -1081,6 +1230,7 @@ impl Coordinator {
                             shed_reason,
                             quarantine: quarantine_for_shard,
                             fault: cfg.fault,
+                            explore: explore_for_shard,
                         },
                         ready_tx,
                     )
@@ -1174,6 +1324,8 @@ impl Coordinator {
             shed_reason,
             quarantine,
             retry_budget: RetryBudget::default(),
+            explore: explore.clone(),
+            seeder,
             respawn: RespawnSpec {
                 artifacts_dir,
                 engine: engine_spec,
@@ -1183,6 +1335,7 @@ impl Coordinator {
                 domains: shard_domains,
                 lanes,
                 fault: cfg.fault,
+                explore,
             },
         })
     }
@@ -1849,7 +2002,114 @@ impl Coordinator {
             "",
             self.front.retries_denied.sum() as f64,
         );
+        // Exploration: probe accounting plus the measured-coverage gauge
+        // over the default domain's healthy shipped (bucket, config)
+        // matrix — the number the exploration acceptance gate watches.
+        if let Some(planner) = self.explore.as_deref() {
+            let stats = planner.stats();
+            prom_family(
+                &mut out,
+                "kernelsel_explore_probes_total",
+                "counter",
+                "Epsilon probes dispatched, by outcome bucket.",
+            );
+            prom_sample(
+                &mut out,
+                "kernelsel_explore_probes_total",
+                "outcome=\"issued\"",
+                stats.probes_issued as f64,
+            );
+            prom_sample(
+                &mut out,
+                "kernelsel_explore_probes_total",
+                "outcome=\"shed\"",
+                stats.probes_shed as f64,
+            );
+            prom_sample(
+                &mut out,
+                "kernelsel_explore_probes_total",
+                "outcome=\"completed\"",
+                stats.probes_completed as f64,
+            );
+            prom_family(
+                &mut out,
+                "kernelsel_explore_probe_budget",
+                "gauge",
+                "Lifetime probe budget this pool was started with.",
+            );
+            prom_sample(
+                &mut out,
+                "kernelsel_explore_probe_budget",
+                "",
+                planner.config().budget as f64,
+            );
+            prom_family(
+                &mut out,
+                "kernelsel_explore_first_sight_total",
+                "counter",
+                "Never-seen shape buckets seen, and micro-benchmark runs made for them.",
+            );
+            prom_sample(
+                &mut out,
+                "kernelsel_explore_first_sight_total",
+                "kind=\"shapes\"",
+                stats.first_sight_shapes as f64,
+            );
+            prom_sample(
+                &mut out,
+                "kernelsel_explore_first_sight_total",
+                "kind=\"runs\"",
+                stats.first_sight_runs as f64,
+            );
+            let (measured, total) = self.explore_coverage(1);
+            prom_family(
+                &mut out,
+                "kernelsel_explore_coverage",
+                "gauge",
+                "Measured fraction of the healthy shipped (bucket, config) matrix.",
+            );
+            prom_sample(
+                &mut out,
+                "kernelsel_explore_coverage",
+                "",
+                if total == 0 { 0.0 } else { measured as f64 / total as f64 },
+            );
+            prom_family(
+                &mut out,
+                "kernelsel_explore_coverage_pairs",
+                "gauge",
+                "Measured and total (bucket, config) pairs behind the coverage gauge.",
+            );
+            prom_sample(
+                &mut out,
+                "kernelsel_explore_coverage_pairs",
+                "state=\"measured\"",
+                measured as f64,
+            );
+            prom_sample(
+                &mut out,
+                "kernelsel_explore_coverage_pairs",
+                "state=\"total\"",
+                total as f64,
+            );
+        }
         out
+    }
+
+    /// Live exploration counters (all zero when exploration is off).
+    pub fn explore_stats(&self) -> ExploreStats {
+        self.explore.as_deref().map(ExplorePlanner::stats).unwrap_or_default()
+    }
+
+    /// Measured coverage `(measured, total)` of the default domain's
+    /// healthy shipped (bucket, config) matrix, counting cells holding at
+    /// least `min_samples` samples — the exploration acceptance gate
+    /// (`measured / total >= 0.9` within the probe budget). Available
+    /// whether or not exploration is armed: restored telemetry
+    /// (`serve --telemetry-in`) counts, which is exactly how a
+    /// warm-started pool proves it needs zero live probes.
+    pub fn explore_coverage(&self, min_samples: u64) -> (usize, usize) {
+        measured_coverage(&self.telemetry.snapshot(), &self.registry, min_samples)
     }
 
     /// Whether a shard's worker thread is still running, read lock-free
@@ -1892,6 +2152,7 @@ impl Coordinator {
             shed_reason: self.shed_reason,
             quarantine: self.quarantine.clone(),
             fault: spec.fault,
+            explore: spec.explore.clone(),
         };
         let spawned = std::thread::Builder::new()
             .name(format!("kernelsel-shard-{shard}"))
@@ -2231,8 +2492,9 @@ impl Coordinator {
     ) -> Ticket {
         let t_submit = Instant::now();
         let state = self.tenant_state(tenant);
-        let (registry, cache) = self.domain_handles(state.map_or(0, |s| s.domain));
-        let resolved = match cache.resolve(registry, &shape) {
+        let domain = state.map_or(0, |s| s.domain);
+        let (registry, cache) = self.domain_handles(domain);
+        let organic = match cache.resolve(registry, &shape) {
             Ok(r) => r,
             Err(e) => {
                 self.front.failures.incr();
@@ -2241,7 +2503,7 @@ impl Coordinator {
                 return ticket;
             }
         };
-        let (shard, spilled) = match self.pick_shard(&resolved) {
+        let (shard, spilled) = match self.pick_shard(&organic) {
             Some(pick) => pick,
             None => {
                 self.front.failures.incr();
@@ -2253,8 +2515,37 @@ impl Coordinator {
                 return ticket;
             }
         };
+        let policy = state.map_or(self.admission, |s| s.policy);
+        // Exploration: the seeded epsilon draw may redirect this request
+        // to an unmeasured shipped config at the same shape. The organic
+        // resolution is kept alongside — if admission later refuses the
+        // probe-priced request, it retries once un-redirected, so a probe
+        // can never displace work that would have been admitted without
+        // it. The probe rides the organic routing decision: exploration
+        // changes which variant serves the request, never where.
+        let mut probe = false;
+        let mut resolved = organic.clone();
+        if let Some(planner) = self.explore.as_deref() {
+            if planner.first_sight(shape) {
+                if let Some(seeder) = &self.seeder {
+                    seeder.send(shape);
+                }
+            }
+            let ordinal = planner.next_ordinal();
+            if planner.should_probe(ordinal) {
+                match self
+                    .plan_probe(planner, ordinal, registry, cache, domain, &shape, shard, policy)
+                {
+                    Some(redirect) => {
+                        resolved = redirect;
+                        probe = true;
+                    }
+                    None => planner.note_shed(),
+                }
+            }
+        }
         // Measured EWMA once telemetry is warm, devsim estimate while cold.
-        let cost_ns = cache.dispatch_cost_ns(&resolved);
+        let mut cost_ns = cache.dispatch_cost_ns(&resolved);
         let trace_seq = self.trace_submit(&shape, cost_ns, tenant, shard, spilled);
         let tenant_slot = match state.map_or(Ok(InflightSlot::none()), |s| {
             self.quota_gate(s, shard)
@@ -2262,14 +2553,44 @@ impl Coordinator {
             Ok(slot) => slot,
             Err(err) => {
                 debug_assert!(state.is_some(), "quota gate only rejects registered tenants");
+                if probe {
+                    // The fired draw dies with the request: quota is
+                    // resolution-independent, so the organic request
+                    // would have been refused identically — nothing was
+                    // displaced, but the probe never issued.
+                    if let Some(planner) = self.explore.as_deref() {
+                        planner.note_shed();
+                    }
+                }
                 self.count_reject(state, &err);
                 self.trace_reject(trace_seq, shard, tenant, &err);
                 return Ticket::rejected(err);
             }
         };
-        let policy = state.map_or(self.admission, |s| s.policy);
         let mut reservation = match self.admit(policy, shard, cost_ns) {
             Ok(slot) => slot,
+            Err(err) if probe => {
+                // Shed the probe, not the request: retry admission once
+                // with the organic resolution — the airtight half of the
+                // never-displace guarantee (the strict
+                // [`probe_would_admit`] pre-check is the cheap half).
+                if let Some(planner) = self.explore.as_deref() {
+                    planner.note_shed();
+                }
+                probe = false;
+                resolved = organic;
+                cost_ns = cache.dispatch_cost_ns(&resolved);
+                let _ = err; // the probe-priced refusal is superseded
+                match self.admit(policy, shard, cost_ns) {
+                    Ok(slot) => slot,
+                    Err(err) => {
+                        // `tenant_slot` drops, releasing the quota slot.
+                        self.count_reject(state, &err);
+                        self.trace_reject(trace_seq, shard, tenant, &err);
+                        return Ticket::rejected(err);
+                    }
+                }
+            }
             Err(err) => {
                 // `tenant_slot` drops here, releasing the quota slot.
                 self.count_reject(state, &err);
@@ -2278,6 +2599,11 @@ impl Coordinator {
             }
         };
         reservation.tenant = tenant_slot.into_tenant();
+        if probe {
+            if let Some(planner) = self.explore.as_deref() {
+                planner.note_issued();
+            }
+        }
         let (completion, ticket) = self.checkout_completion();
         let req = GemmRequest { shape, lhs, rhs };
         self.queues[shard].push(Job {
@@ -2290,11 +2616,59 @@ impl Coordinator {
             reservation,
             tenant,
             slo_wall: state.and_then(|s| s.spec.slo_wall),
-            domain: state.map_or(0, |s| s.domain),
+            domain,
             lane: state.map_or(NO_LANE, |s| s.lane),
             trace_seq,
+            probe,
         });
         ticket
+    }
+
+    /// Try to place the probe the epsilon draw at `ordinal` fired:
+    /// the routed shard must be near-idle with at least half of any
+    /// admission budget untouched ([`probe_would_admit`]), unmeasured
+    /// healthy candidates must exist at `shape`, and the deterministic
+    /// pick must survive the quarantine `blocks` read inside
+    /// [`ResolutionCache::resolve_probe`]. `None` means this probe is
+    /// shed and the request proceeds organically.
+    #[allow(clippy::too_many_arguments)]
+    fn plan_probe(
+        &self,
+        planner: &ExplorePlanner,
+        ordinal: u64,
+        registry: &Arc<KernelRegistry>,
+        cache: &Arc<ResolutionCache>,
+        domain: u32,
+        shape: &GemmShape,
+        shard: usize,
+        policy: AdmissionPolicy,
+    ) -> Option<Arc<ResolvedKernel>> {
+        // Only `BoundedQueue` exposes budget knobs for the half-budget
+        // rules; under other policies the idle-shard rules still apply,
+        // and the retry-as-organic fallback covers whatever a policy
+        // might refuse that this predicate cannot see.
+        let (max_inflight, max_queue_ns) = match policy {
+            AdmissionPolicy::BoundedQueue { max_inflight, max_queue_ns } => {
+                (max_inflight, max_queue_ns)
+            }
+            _ => (0, 0),
+        };
+        let load = &self.queues[shard].load;
+        if !probe_would_admit(
+            load.score_ns(),
+            load.depth(),
+            self.inflight.load(Ordering::Acquire),
+            max_inflight,
+            max_queue_ns,
+        ) {
+            return None;
+        }
+        let candidates = unmeasured_candidates(registry, self.domain_telemetry(domain), shape);
+        if candidates.is_empty() {
+            return None;
+        }
+        let pick = planner.pick(ordinal, candidates.len());
+        cache.resolve_probe(registry, shape, candidates[pick])
     }
 
     /// Submit a batch of requests in one call; returns one [`Ticket`] per
@@ -2435,6 +2809,11 @@ impl Coordinator {
                     domain,
                     lane,
                     trace_seq,
+                    // The batched fast path is deliberately unexplored:
+                    // a probe would split the run's single resolution,
+                    // and bursty batch traffic is exactly when probes
+                    // should not fire anyway.
+                    probe: false,
                 });
             }
             self.queues[shard].push_batch(jobs);
@@ -2560,6 +2939,12 @@ impl Coordinator {
                 let _ = retuner.finish();
             }
         }
+        // Drain the first-sight seeder before folding counters: dropping
+        // it closes the channel and joins the worker, so every queued
+        // micro-benchmark lands in telemetry (and in the explore stats)
+        // before the report — and before any `--telemetry-out` export —
+        // reads them. Also what makes same-seed runs report-identical.
+        self.seeder.take();
         let tuning = self.retune_stats.lock().unwrap().clone();
         // Signal all shards first so they drain concurrently, then join.
         let mut replies = Vec::with_capacity(self.queues.len());
@@ -2642,7 +3027,8 @@ impl Coordinator {
             })
             .collect();
         let (cache_hits, cache_misses) = self.cache.stats();
-        PoolReport { per_shard, total, cache_hits, cache_misses, tuning, tenants }
+        let explore = self.explore_stats();
+        PoolReport { per_shard, total, cache_hits, cache_misses, tuning, tenants, explore }
     }
 }
 
@@ -2785,6 +3171,9 @@ struct ShardSide {
     /// integrity canary in `run_batch`. `None` in production pools — the
     /// canary then costs one branch per served result, no recompute.
     fault: Option<FaultPlan>,
+    /// Exploration planner the drain side reports probe completions to
+    /// (`None` = exploration off; probe jobs then cannot exist).
+    explore: Option<Arc<ExplorePlanner>>,
 }
 
 /// Everything the drain-side paths (`run_batch`, `shed_jobs`) share for
@@ -3070,15 +3459,39 @@ fn run_batch(
                 );
                 match run {
                     Ok((out, measured_secs)) => {
+                        measured_ns = (measured_secs * 1e9) as u64;
                         // Close the loop: the measured execution time of
                         // this (shape, config) cell feeds cost hints and
                         // the background retuner — of the job's domain.
-                        dom.telemetry.record(
-                            job.req.shape,
-                            job.resolved.meta.config_index,
-                            measured_secs,
-                        );
-                        measured_ns = (measured_secs * 1e9) as u64;
+                        // Probe-redirected requests record with probe
+                        // provenance (the `probed` snapshot counter) and
+                        // count toward the planner's completion tally.
+                        if job.probe {
+                            dom.telemetry.record_probe(
+                                job.req.shape,
+                                job.resolved.meta.config_index,
+                                measured_secs,
+                            );
+                            if let Some(planner) = ctx.side.explore.as_deref() {
+                                planner.note_completed();
+                            }
+                            ctx.event(
+                                0,
+                                EventKind::ExploreProbe,
+                                0,
+                                [
+                                    job.resolved.meta.config_index.map_or(0, |c| c as u64),
+                                    measured_ns,
+                                    0,
+                                ],
+                            );
+                        } else {
+                            dom.telemetry.record(
+                                job.req.shape,
+                                job.resolved.meta.config_index,
+                                measured_secs,
+                            );
+                        }
                         // Integrity canary, armed only under a fault
                         // plan: silent corruption must surface as `Err`,
                         // never be delivered as `Ok`.
@@ -4709,5 +5122,386 @@ mod tests {
         assert!(summary.contains("quota-exceeded=6/0"), "summary: {summary}");
         assert!(summary.contains("inflight_peak="), "summary: {summary}");
         assert!(summary.contains("retries(spent/denied)=2/0"), "summary: {summary}");
+    }
+
+    fn explore_sim_pool(explore: ExploreConfig) -> Coordinator {
+        Coordinator::start_pool(
+            PathBuf::from("/nonexistent-artifacts"),
+            SelectorPolicy::Xla,
+            PoolConfig { shards: 1, explore: Some(explore), ..PoolConfig::default() },
+        )
+        .expect("coordinator start")
+    }
+
+    #[test]
+    fn explore_probes_cover_unmeasured_configs_and_expose_counters() {
+        // eps=1000: every submit draws a probe; the 64-probe budget
+        // comfortably covers the 8 shipped configs x 3-sample warm-up at
+        // the single visited bucket.
+        let coord = explore_sim_pool(ExploreConfig {
+            eps_permille: 1000,
+            budget: 64,
+            seed: 7,
+            top_k: 2,
+        });
+        let shape = GemmShape::new(64, 64, 64, 1);
+        for i in 0..64u32 {
+            coord
+                .call(shape, fill_buffer(i, 64 * 64), fill_buffer(i + 3, 64 * 64))
+                .unwrap()
+                .result
+                .unwrap();
+        }
+        // Stable mid-run counters: the sequential loop has fully drained,
+        // so only the async first-sight worker can still move (and it only
+        // moves `first_sight_runs` / telemetry samples).
+        let stats = coord.explore_stats();
+        assert!(stats.probes_issued > 0, "an unmeasured pool must draw probes");
+        assert_eq!(
+            stats.probes_completed, stats.probes_issued,
+            "sequential submits execute every issued probe"
+        );
+        assert_eq!(stats.first_sight_shapes, 1, "one bucket, one first-sight");
+        // Every healthy shipped config at the visited bucket is measured.
+        let (measured, total) = coord.explore_coverage(1);
+        assert!(measured >= 8, "all 8 shipped configs measured, got {measured}");
+        assert!(total > measured, "unvisited buckets stay uncovered");
+        let text = coord.metrics_text();
+        assert_eq!(
+            prom_total(&text, "kernelsel_explore_probes_total", "outcome=\"issued\""),
+            stats.probes_issued as usize
+        );
+        assert_eq!(
+            prom_total(&text, "kernelsel_explore_probes_total", "outcome=\"shed\""),
+            stats.probes_shed as usize
+        );
+        assert_eq!(
+            prom_total(&text, "kernelsel_explore_probes_total", "outcome=\"completed\""),
+            stats.probes_completed as usize
+        );
+        assert!(text.contains("kernelsel_explore_probe_budget 64"));
+        assert_eq!(
+            prom_total(&text, "kernelsel_explore_first_sight_total", "kind=\"shapes\""),
+            1
+        );
+        assert_eq!(
+            prom_total(&text, "kernelsel_explore_coverage_pairs", "state=\"measured\""),
+            measured
+        );
+        assert_eq!(
+            prom_total(&text, "kernelsel_explore_coverage_pairs", "state=\"total\""),
+            total
+        );
+        // `stop_detailed` drains the first-sight worker, so the report and
+        // the telemetry provenance are exact.
+        let telemetry = coord.telemetry().clone();
+        let report = coord.stop_detailed();
+        assert_eq!(report.explore.probes_issued, stats.probes_issued);
+        assert!(report.summary().contains("explore:"), "summary: {}", report.summary());
+        let snap = telemetry.snapshot();
+        let probed_sum: u64 = snap.cells.iter().map(|c| c.probed).sum();
+        assert_eq!(
+            probed_sum,
+            report.explore.probes_completed + report.explore.first_sight_runs,
+            "every probe measurement carries provenance, nothing else does"
+        );
+        for c in &snap.cells {
+            assert!(c.probed <= c.count, "provenance can never exceed the sample count");
+        }
+    }
+
+    /// One deterministic exploration run: prime the bucket's first-sight
+    /// sweep through a weight-0 tenant refusal (consumes ordinal 0 without
+    /// dispatching), wait for the micro-benchmark worker to go quiet, then
+    /// drive a sequential single-shard call loop — every remaining draw,
+    /// pick and measurement is a pure function of the explore seed.
+    fn deterministic_explore_run(
+        n: u32,
+    ) -> (ExploreStats, Vec<(usize, usize, usize, usize, Option<usize>, u64, u64)>) {
+        let coord = Coordinator::start_pool(
+            PathBuf::from("/nonexistent-artifacts"),
+            SelectorPolicy::Xla,
+            PoolConfig {
+                shards: 1,
+                explore: Some(ExploreConfig { eps_permille: 400, budget: 24, seed: 9, top_k: 1 }),
+                tenants: vec![
+                    TenantSpec::new(TenantId(1), "blocked", 0, SloClass::Standard),
+                    TenantSpec::new(TenantId(2), "paying", 1, SloClass::Standard),
+                ],
+                quota_slots: 8,
+                ..PoolConfig::default()
+            },
+        )
+        .expect("coordinator start");
+        let shape = GemmShape::new(64, 64, 64, 1);
+        let ticket =
+            coord.submit_as(TenantId(1), shape, fill_buffer(0, 64 * 64), fill_buffer(1, 64 * 64));
+        assert!(ticket.rejection().is_some(), "weight-0 priming submit must be refused");
+        for _ in 0..5000 {
+            if coord.explore_stats().first_sight_runs >= 1 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(
+            coord.explore_stats().first_sight_runs >= 1,
+            "the cold bucket's first-sight sweep must run"
+        );
+        for i in 0..n {
+            coord
+                .call(shape, fill_buffer(i, 64 * 64), fill_buffer(i + 5, 64 * 64))
+                .unwrap()
+                .result
+                .unwrap();
+        }
+        let telemetry = coord.telemetry().clone();
+        let report = coord.stop_detailed();
+        let mut cells: Vec<(usize, usize, usize, usize, Option<usize>, u64, u64)> = telemetry
+            .snapshot()
+            .cells
+            .iter()
+            .map(|c| (c.shape.m, c.shape.k, c.shape.n, c.shape.batch, c.config, c.count, c.probed))
+            .collect();
+        cells.sort_unstable();
+        (report.explore, cells)
+    }
+
+    #[test]
+    fn explore_identical_seed_replays_identical_schedule() {
+        let (stats_a, cells_a) = deterministic_explore_run(300);
+        let (stats_b, cells_b) = deterministic_explore_run(300);
+        assert!(stats_a.probes_issued > 0, "the schedule under test must contain probes");
+        assert_eq!(stats_a, stats_b, "identical seed, identical probe schedule");
+        assert_eq!(cells_a, cells_b, "identical seed, identical measured coverage");
+    }
+
+    #[test]
+    fn explore_overload_sheds_probes_to_zero_before_rejecting_in_quota_work() {
+        // max_inflight=1 makes the half-budget probe rule
+        // (2 * (inflight + 1) <= max_inflight) unsatisfiable: under this
+        // overload every fired draw must shed while organic admission
+        // keeps serving and rejecting exactly as without exploration.
+        let coord = Coordinator::start_pool(
+            PathBuf::from("/nonexistent-artifacts"),
+            SelectorPolicy::Xla,
+            PoolConfig {
+                shards: 1,
+                engine: EngineKind::SimPaced { profile: "i7-6700k", permille: 20_000 },
+                admission: AdmissionPolicy::BoundedQueue {
+                    max_inflight: 1,
+                    max_queue_ns: u64::MAX,
+                },
+                explore: Some(ExploreConfig {
+                    eps_permille: 1000,
+                    budget: 1000,
+                    seed: 3,
+                    top_k: 1,
+                }),
+                ..PoolConfig::default()
+            },
+        )
+        .expect("coordinator start");
+        let shape = GemmShape::new(128, 128, 128, 1);
+        let tickets: Vec<Ticket> = (0..40u32)
+            .map(|i| {
+                coord.submit(shape, fill_buffer(i, 128 * 128), fill_buffer(i + 7, 128 * 128))
+            })
+            .collect();
+        let mut ok = 0usize;
+        let mut rejected = 0usize;
+        for ticket in tickets {
+            if ticket.rejection().is_some() {
+                rejected += 1;
+                assert!(ticket.wait().result.is_err());
+            } else {
+                assert!(ticket.wait().result.is_ok());
+                ok += 1;
+            }
+        }
+        assert!(ok >= 1, "the pool must keep serving under overload");
+        assert!(rejected >= 1, "an open burst against max_inflight=1 must reject");
+        let report = coord.stop_detailed();
+        assert_eq!(
+            report.explore.probes_issued, 0,
+            "no probe may occupy capacity in a saturated pool"
+        );
+        assert_eq!(
+            report.explore.probes_shed, 40,
+            "every fired draw is shed strictly before in-quota work is rejected"
+        );
+        assert_eq!(report.total.rejected, rejected);
+    }
+
+    #[test]
+    fn explore_never_probes_quarantined_variant() {
+        // A tripped variant earns traffic only through the breaker's own
+        // probation trickle — the explorer must route around it entirely.
+        let manifest = Manifest::synthetic();
+        let best = config_by_name(&manifest.single_best).unwrap().index();
+        let coord = Coordinator::start_pool(
+            PathBuf::from("/nonexistent-artifacts"),
+            SelectorPolicy::Xla,
+            PoolConfig {
+                shards: 1,
+                explore: Some(ExploreConfig {
+                    eps_permille: 1000,
+                    budget: 64,
+                    seed: 11,
+                    top_k: 2,
+                }),
+                // A practically-infinite cooloff keeps the tripped variant
+                // out of probation for the whole test.
+                quarantine: QuarantineConfig { cooloff: 1_000_000, ..QuarantineConfig::default() },
+                ..PoolConfig::default()
+            },
+        )
+        .expect("coordinator start");
+        for _ in 0..8 {
+            coord.quarantine.observe(Some(best), false);
+        }
+        assert!(coord.quarantine.blocks(best), "8 failures in the window must trip");
+        let shape = GemmShape::new(64, 64, 64, 1);
+        for i in 0..64u32 {
+            coord
+                .call(shape, fill_buffer(i, 64 * 64), fill_buffer(i + 3, 64 * 64))
+                .unwrap()
+                .result
+                .unwrap();
+        }
+        let telemetry = coord.telemetry().clone();
+        let report = coord.stop_detailed();
+        assert!(
+            report.explore.probes_issued > 0,
+            "exploration must stay active around the quarantined variant"
+        );
+        let snap = telemetry.snapshot();
+        for c in &snap.cells {
+            if c.config == Some(best) {
+                assert_eq!(
+                    c.probed, 0,
+                    "the quarantined variant must never be probed (cell {:?})",
+                    c.shape
+                );
+            }
+        }
+        assert!(
+            snap.cells.iter().any(|c| c.config.is_some() && c.config != Some(best) && c.probed > 0),
+            "healthy siblings must still be probed"
+        );
+    }
+
+    #[test]
+    fn explore_probe_measurements_survive_hot_swap() {
+        // Telemetry is keyed by (shape, config), not by selector
+        // generation: probe provenance recorded under generation N must
+        // survive a hot swap to N+1.
+        let coord = explore_sim_pool(ExploreConfig {
+            eps_permille: 1000,
+            budget: 16,
+            seed: 5,
+            top_k: 1,
+        });
+        let shape = GemmShape::new(64, 64, 64, 1);
+        for i in 0..16u32 {
+            coord
+                .call(shape, fill_buffer(i, 64 * 64), fill_buffer(i + 3, 64 * 64))
+                .unwrap()
+                .result
+                .unwrap();
+        }
+        let before = coord.telemetry().snapshot();
+        let probed_before: u64 = before.cells.iter().map(|c| c.probed).sum();
+        assert!(probed_before > 0, "16 all-probe submits must leave provenance");
+        let manifest = Manifest::synthetic();
+        let best = config_by_name(&manifest.single_best).unwrap().index();
+        let generation = coord.swap_selector(SelectorPolicy::Single(best));
+        assert!(generation >= 1);
+        for i in 0..8u32 {
+            coord
+                .call(shape, fill_buffer(i + 20, 64 * 64), fill_buffer(i + 23, 64 * 64))
+                .unwrap()
+                .result
+                .unwrap();
+        }
+        let telemetry = coord.telemetry().clone();
+        let report = coord.stop_detailed();
+        assert!(report.total.selector_swaps >= 1);
+        let after = telemetry.snapshot();
+        for c in before.cells.iter().filter(|c| c.probed > 0) {
+            let kept = after
+                .cell(&c.shape, c.config)
+                .unwrap_or_else(|| panic!("cell {:?}/{:?} lost across swap", c.shape, c.config));
+            assert!(
+                kept.probed >= c.probed,
+                "probe provenance must survive the generation swap"
+            );
+        }
+    }
+
+    #[test]
+    fn inert_explore_config_stays_dark() {
+        // eps=0 can never fire: the planner is not even armed, so the
+        // pool is bit-identical to one without exploration — no metrics
+        // families, no report line, no first-sight worker.
+        let coord = explore_sim_pool(ExploreConfig {
+            eps_permille: 0,
+            budget: 100,
+            seed: 1,
+            top_k: 3,
+        });
+        let shape = GemmShape::new(64, 64, 64, 1);
+        for i in 0..8u32 {
+            coord
+                .call(shape, fill_buffer(i, 64 * 64), fill_buffer(i + 3, 64 * 64))
+                .unwrap()
+                .result
+                .unwrap();
+        }
+        let text = coord.metrics_text();
+        assert!(!text.contains("kernelsel_explore"), "inert policy exposes nothing");
+        let report = coord.stop_detailed();
+        assert_eq!(report.explore, ExploreStats::default());
+        assert!(!report.summary().contains("explore:"), "summary: {}", report.summary());
+    }
+
+    #[test]
+    fn warm_started_pool_issues_zero_live_probes() {
+        // Run A explores a bucket to full measured coverage and exports
+        // its snapshot over the JSON wire format; run B restores it before
+        // serving. B's draws still fire but find nothing unmeasured — the
+        // warm-start contract is zero live probes and zero re-benchmarks.
+        let explore = ExploreConfig { eps_permille: 1000, budget: 64, seed: 7, top_k: 2 };
+        let a = explore_sim_pool(explore);
+        let shape = GemmShape::new(64, 64, 64, 1);
+        for i in 0..64u32 {
+            a.call(shape, fill_buffer(i, 64 * 64), fill_buffer(i + 3, 64 * 64))
+                .unwrap()
+                .result
+                .unwrap();
+        }
+        let a_telemetry = a.telemetry().clone();
+        let report_a = a.stop_detailed();
+        assert!(report_a.explore.probes_issued > 0, "run A must have explored");
+        let restored =
+            crate::tuning::telemetry::TelemetrySnapshot::from_json(&a_telemetry.snapshot().to_json())
+                .expect("extended snapshot round-trips");
+        let b = explore_sim_pool(explore);
+        b.telemetry().absorb(&restored);
+        for i in 0..64u32 {
+            b.call(shape, fill_buffer(i, 64 * 64), fill_buffer(i + 3, 64 * 64))
+                .unwrap()
+                .result
+                .unwrap();
+        }
+        let report_b = b.stop_detailed();
+        assert_eq!(
+            report_b.explore.probes_issued, 0,
+            "warm measured coverage leaves nothing to probe"
+        );
+        assert!(report_b.explore.probes_shed > 0, "the draws still fire; they find no candidates");
+        assert_eq!(
+            report_b.explore.first_sight_runs, 0,
+            "restored buckets are never re-benchmarked"
+        );
     }
 }

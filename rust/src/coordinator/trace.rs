@@ -100,6 +100,11 @@ pub enum EventKind {
     /// attempt number, `c` the budget level in milli-tokens after
     /// spending.
     Retry = 13,
+    /// An exploration probe's measurement reached the telemetry sink
+    /// (pool-level; the probe-redirected request's own chain carries the
+    /// ordinary submit/execute/complete events). `a` is the config index
+    /// probed, `b` the measured execution time (ns).
+    ExploreProbe = 14,
 }
 
 impl EventKind {
@@ -120,6 +125,7 @@ impl EventKind {
             EventKind::QuarantineRestore => "quarantine-restore",
             EventKind::Respawn => "respawn",
             EventKind::Retry => "retry",
+            EventKind::ExploreProbe => "explore-probe",
         }
     }
 }
@@ -285,7 +291,8 @@ impl FlightRecorder {
     /// words `[a, b, c]`. No-op when `seq` is 0 for a per-request kind
     /// (the chain was not sampled), so call sites stay branch-free;
     /// pool-level kinds (`Steal`, `Batch`, `Swap`, the quarantine
-    /// transitions, `Respawn` and `Retry`) always record.
+    /// transitions, `Respawn`, `Retry` and `ExploreProbe`) always
+    /// record.
     pub fn event(&self, seq: u64, kind: EventKind, shard: u16, tenant: u32, payload: [u64; 3]) {
         let pool_level = matches!(
             kind,
@@ -297,6 +304,7 @@ impl FlightRecorder {
                 | EventKind::QuarantineRestore
                 | EventKind::Respawn
                 | EventKind::Retry
+                | EventKind::ExploreProbe
         );
         if seq == 0 && !pool_level {
             return;
@@ -469,6 +477,10 @@ fn event_to_json(ev: &TraceEvent) -> Json {
             ));
             pairs.push(("attempt", Json::Num(ev.b as f64)));
             pairs.push(("tokens_milli", Json::Num(ev.c as f64)));
+        }
+        EventKind::ExploreProbe => {
+            pairs.push(("config", Json::Num(ev.a as f64)));
+            pairs.push(("measured_ns", Json::Num(ev.b as f64)));
         }
     }
     Json::obj(pairs)

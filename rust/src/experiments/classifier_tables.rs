@@ -9,6 +9,7 @@ use crate::util::table::{fnum, Table};
 use super::selection_figs::DEPLOY_NORM;
 use super::Context;
 
+/// Deployment sizes (k) forming the columns of Tables 1/2.
 pub const K_COLUMNS: [usize; 4] = [5, 6, 8, 15];
 
 fn classifier_table(ctx: &Context, device: &str, tab: &str) -> Vec<Table> {

@@ -15,6 +15,7 @@ use std::path::Path;
 
 /// Shared experiment context: simulated datasets are generated once.
 pub struct Context {
+    /// Master seed every stochastic stage (splits, k-means, forests) forks from.
     pub seed: u64,
     /// Take every `stride`-th benchmark shape (1 = the full suite; larger
     /// strides keep tests fast).
@@ -23,6 +24,7 @@ pub struct Context {
 }
 
 impl Context {
+    /// Full-suite context (stride 1) from a master seed.
     pub fn new(seed: u64) -> Context {
         Context { seed, stride: 1, datasets: Default::default() }
     }

@@ -8,6 +8,7 @@ use crate::util::table::{fnum, Table};
 
 use super::Context;
 
+/// Deployed-kernel counts swept by Figures 5/6 (the paper's x-axis).
 pub const K_RANGE: [usize; 7] = [4, 5, 6, 8, 10, 12, 15];
 
 fn selection_figure(ctx: &Context, device: &str, fig: &str) -> Vec<Table> {

@@ -32,6 +32,8 @@ pub fn fits_vmem(cfg: &KernelConfig, dtype_bytes: usize) -> bool {
     2 * cfg.vmem_bytes(dtype_bytes) <= VMEM_BUDGET
 }
 
+/// The TPU-viability table: VMEM fit and MXU utilization for the shipped
+/// deployment plus the extreme corners of the configuration space.
 pub fn tpu_estimates() -> Vec<Table> {
     let mut t = Table::new(
         "TPU-viability estimates per kernel configuration (DESIGN.md §8)",

@@ -78,6 +78,8 @@ fn clblast_config(profile: &DeviceProfile) -> KernelConfig {
     best
 }
 
+/// Figure 7: VGG-16 end-to-end — the simulated comparison always, plus the
+/// measured (PJRT) table when artifacts are available, else a skip notice.
 pub fn fig7(ctx: &Context, artifacts_dir: &Path) -> Result<Vec<Table>, String> {
     let mut tables = vec![simulated_table(ctx)];
     match measured_table(ctx, artifacts_dir) {

@@ -26,13 +26,10 @@
 //! and a background retuner re-runs selection + classification on the
 //! measured data and hot-swaps the selector without pausing traffic.
 
-// Every public item must carry rustdoc. The serving-stack modules
-// (`coordinator`, `tuning`, `engine`, `runtime`), the data substrate
-// (`dataset`, `devsim`), the ML stack (`classify`, `ml`, `linalg`) and
-// `selection` are fully documented and gated; the remaining modules
-// below carry an explicit module-level `allow` until their own
-// documentation pass lands (ROADMAP item) — the allows are the
-// worklist, not an exemption.
+// Every public item must carry rustdoc. All modules are fully documented
+// and gated — CI promotes rustdoc warnings to errors (`cargo doc` with
+// `RUSTDOCFLAGS: -D warnings`), so a new undocumented public item or a
+// broken intra-doc link fails the build.
 #![warn(missing_docs)]
 
 pub mod classify;
@@ -40,12 +37,10 @@ pub mod coordinator;
 pub mod dataset;
 pub mod devsim;
 pub mod engine;
-#[allow(missing_docs)]
 pub mod experiments;
 pub mod linalg;
 pub mod ml;
 pub mod runtime;
 pub mod selection;
 pub mod tuning;
-#[allow(missing_docs)]
 pub mod util;

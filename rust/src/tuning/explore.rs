@@ -1,0 +1,588 @@
+//! Exploration: epsilon-probes over unmeasured shipped configs plus a
+//! first-sight micro-benchmark path, closing the retuner's exploration
+//! gap.
+//!
+//! The background retuner (PR 3) only ever measures configurations the
+//! deployed selector already picks, so the rest of the shipped pool stays
+//! priced by the drift-calibrated prior forever. This module adds the
+//! missing exploration half of the loop, after kubecl's runtime-autotune
+//! design (micro-benchmarks cached per device, cache shipped with the
+//! program) and the online-selection framing of arXiv 2003.06795:
+//!
+//! * **Epsilon probes** — a seeded, budget-capped fraction of live
+//!   submits is redirected to an *unmeasured but shipped* configuration
+//!   at the request's own shape. The draw is a pure function of
+//!   `(seed, submit ordinal)` (same xoshiro-keyed determinism as the
+//!   fault plan), so a probe schedule replays exactly across runs.
+//! * **Admission awareness** — probes only ever take idle capacity.
+//!   [`probe_would_admit`] is deliberately *stricter* than every
+//!   admission policy: it demands a near-empty routed shard and at most
+//!   half of any in-flight/backlog budget, so probes are shed to zero
+//!   strictly before the policy itself starts rejecting in-SLO work.
+//!   If admission still rejects a probe-redirected request, the pool
+//!   retries the same request un-redirected — a probe can therefore
+//!   never displace work that would have been admitted without it.
+//! * **Quarantine screening** — probe candidates come from
+//!   `healthy_shipped_configs()` and are re-checked against the breaker
+//!   with the pure `blocks` read. Probes never call `screen`: the
+//!   breaker's own probation trickle (the organic resolve path) stays
+//!   the only way a tripped variant earns traffic.
+//! * **First-sight micro-benchmarks** — the first submit of a
+//!   never-seen shape bucket queues an off-hot-path micro-benchmark of
+//!   the top-k prior-ranked healthy variants ([`rank_by_prior`]) on a
+//!   dedicated backend instance, so the selector's answer for a new
+//!   bucket is backed by measurements before it is trusted.
+//!
+//! Probe measurements flow into the ordinary [`TelemetrySink`] with a
+//! per-cell `probed` provenance counter, persist through the extended
+//! (back-compatible) `kernelsel-telemetry-v1` snapshot, and warm-start
+//! the next deployment: restored coverage means the planner finds no
+//! unmeasured candidates and issues zero live probes.
+//!
+//! [`TelemetrySink`]: crate::tuning::telemetry::TelemetrySink
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::coordinator::cache::CostModel;
+use crate::coordinator::registry::KernelRegistry;
+use crate::dataset::GemmShape;
+use crate::tuning::telemetry::{TelemetrySink, TelemetrySnapshot};
+use crate::util::Rng;
+
+/// Probes only fire while the routed shard's queue is at most this deep
+/// — exploration rides idle capacity, it never joins a real queue.
+pub const PROBE_MAX_QUEUE_DEPTH: usize = 2;
+
+/// Probes only fire while the routed shard's backlog estimate is at most
+/// this many nanoseconds (1 ms), regardless of the admission policy.
+pub const PROBE_MAX_BACKLOG_NS: u64 = 1_000_000;
+
+/// The exploration policy for one pool run (`--explore
+/// eps,budget[,seed[,topk]]`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExploreConfig {
+    /// Per-submit probability (permille) of redirecting the request to an
+    /// unmeasured shipped config.
+    pub eps_permille: u32,
+    /// Lifetime cap on issued epsilon probes for this pool run.
+    pub budget: u64,
+    /// Seed of the probe schedule; the draw at submit ordinal `i` is a
+    /// pure function of `(seed, i)`.
+    pub seed: u64,
+    /// Variants micro-benchmarked per never-seen shape bucket, ranked
+    /// best-first by the cost-model prior.
+    pub top_k: usize,
+}
+
+impl Default for ExploreConfig {
+    /// Mild defaults: 5% probe rate, 256-probe budget, 3-variant
+    /// first-sight sweep.
+    fn default() -> ExploreConfig {
+        ExploreConfig { eps_permille: 50, budget: 256, seed: 42, top_k: 3 }
+    }
+}
+
+impl ExploreConfig {
+    /// Parse an `--explore eps,budget[,seed[,topk]]` flag value. `eps` is
+    /// permille (`<= 1000`), `budget` the lifetime probe cap; seed and
+    /// top-k fall back to the defaults when omitted.
+    pub fn parse(s: &str) -> Result<ExploreConfig, String> {
+        let parts: Vec<&str> = s.split(',').collect();
+        if parts.len() < 2 || parts.len() > 4 {
+            return Err(format!("--explore {s}: expected eps,budget[,seed[,topk]]"));
+        }
+        let eps: u32 =
+            parts[0].trim().parse().map_err(|_| format!("--explore eps: {}", parts[0]))?;
+        if eps > 1000 {
+            return Err(format!("--explore eps {eps}: permille must be <= 1000"));
+        }
+        let budget: u64 =
+            parts[1].trim().parse().map_err(|_| format!("--explore budget: {}", parts[1]))?;
+        let mut cfg = ExploreConfig { eps_permille: eps, budget, ..ExploreConfig::default() };
+        if let Some(seed) = parts.get(2) {
+            cfg.seed = seed.trim().parse().map_err(|_| format!("--explore seed: {seed}"))?;
+        }
+        if let Some(k) = parts.get(3) {
+            cfg.top_k = k.trim().parse().map_err(|_| format!("--explore topk: {k}"))?;
+        }
+        Ok(cfg)
+    }
+
+    /// True when the policy can never fire a probe — an inert config is
+    /// never armed, so the submit path stays bit-identical to a pool
+    /// without exploration.
+    pub fn is_inert(&self) -> bool {
+        self.eps_permille == 0 || self.budget == 0
+    }
+}
+
+/// The epsilon draw for submit ordinal `ordinal`: a pure function of
+/// `(seed, ordinal)`, so the probe schedule is independent of thread
+/// interleaving and replays exactly under the same seed.
+pub fn probe_draw(seed: u64, ordinal: u64, eps_permille: u32) -> bool {
+    if eps_permille == 0 {
+        return false;
+    }
+    Rng::new(seed).fork(ordinal).below(1000) < eps_permille as usize
+}
+
+/// Which of `n_candidates` unmeasured configs the probe at `ordinal`
+/// targets. Continues the same per-ordinal stream as [`probe_draw`] (the
+/// gate draw is consumed first), so `(seed, ordinal, candidate list)`
+/// fully determines the redirect.
+pub fn probe_pick(seed: u64, ordinal: u64, n_candidates: usize) -> usize {
+    let mut rng = Rng::new(seed).fork(ordinal);
+    let _gate = rng.below(1000);
+    rng.below(n_candidates.max(1))
+}
+
+/// Should a probe be allowed to occupy capacity right now? Pure predicate
+/// over the routed shard's gauge (`backlog_ns`, `queued_depth`), the
+/// pool-wide in-flight count, and the admission policy's budgets
+/// (`max_inflight`/`max_queue_ns`, `0` = that budget is uncapped).
+///
+/// Deliberately stricter than every admission policy: a probe needs a
+/// near-idle shard ([`PROBE_MAX_QUEUE_DEPTH`], [`PROBE_MAX_BACKLOG_NS`])
+/// and must leave at least half of any bounded budget untouched —
+/// `2 * (inflight + 1) <= max_inflight` and `2 * backlog <= max_queue_ns`
+/// — so probes hit zero strictly before the policy starts rejecting
+/// in-quota work. Ported to `tools/devsim_check.py`, which sweeps the
+/// stricter-than-admission invariant without a Rust toolchain.
+pub fn probe_would_admit(
+    backlog_ns: u64,
+    queued_depth: usize,
+    inflight: usize,
+    max_inflight: usize,
+    max_queue_ns: u64,
+) -> bool {
+    if queued_depth > PROBE_MAX_QUEUE_DEPTH || backlog_ns > PROBE_MAX_BACKLOG_NS {
+        return false;
+    }
+    if max_inflight > 0 && (inflight + 1).saturating_mul(2) > max_inflight {
+        return false;
+    }
+    if max_queue_ns > 0 && backlog_ns.saturating_mul(2) > max_queue_ns {
+        return false;
+    }
+    true
+}
+
+/// Healthy shipped configs at `shape` with no warm measured telemetry
+/// cell yet — the probe candidate set. Quarantined variants are excluded
+/// by `healthy_shipped_configs` (and re-checked with `blocks` at dispatch
+/// time); "unmeasured" means the sink has fewer than its `min_samples`
+/// samples for the `(shape, config)` cell.
+pub fn unmeasured_candidates(
+    registry: &KernelRegistry,
+    telemetry: &TelemetrySink,
+    shape: &GemmShape,
+) -> Vec<usize> {
+    registry
+        .healthy_shipped_configs()
+        .into_iter()
+        .filter(|&cfg| {
+            registry
+                .manifest
+                .find_matmul(Some(cfg), shape.m, shape.k, shape.n, shape.batch)
+                .is_some()
+                && telemetry.measured_cost_secs(shape, Some(cfg)).is_none()
+        })
+        .collect()
+}
+
+/// The top-`k` healthy shipped configs at `shape`, ranked best-first by
+/// the cost-model prior — what the first-sight micro-benchmark sweeps for
+/// a never-seen bucket.
+pub fn rank_by_prior(
+    registry: &KernelRegistry,
+    model: &CostModel,
+    shape: &GemmShape,
+    k: usize,
+) -> Vec<usize> {
+    let mut ranked: Vec<(f64, usize)> = registry
+        .healthy_shipped_configs()
+        .into_iter()
+        .filter(|&cfg| {
+            registry
+                .manifest
+                .find_matmul(Some(cfg), shape.m, shape.k, shape.n, shape.batch)
+                .is_some()
+        })
+        .map(|cfg| (model.predict_secs(shape, Some(cfg)), cfg))
+        .collect();
+    ranked.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    ranked.into_iter().take(k.max(1)).map(|(_, cfg)| cfg).collect()
+}
+
+/// Measured coverage of the healthy shipped matrix: of every
+/// `(shape bucket, healthy shipped config)` pair the manifest can serve,
+/// how many have a telemetry cell with at least `min_samples` samples.
+/// Returns `(measured, total)`; the exploration acceptance gate demands
+/// `measured / total >= 0.9` within the probe budget.
+pub fn measured_coverage(
+    snapshot: &TelemetrySnapshot,
+    registry: &KernelRegistry,
+    min_samples: u64,
+) -> (usize, usize) {
+    let pool = registry.healthy_shipped_configs();
+    let mut measured = 0usize;
+    let mut total = 0usize;
+    for bucket in registry.buckets() {
+        for &cfg in &pool {
+            if registry
+                .manifest
+                .find_matmul(Some(cfg), bucket.m, bucket.k, bucket.n, bucket.batch)
+                .is_none()
+            {
+                continue;
+            }
+            total += 1;
+            if snapshot.cell(&bucket, Some(cfg)).is_some_and(|c| c.count >= min_samples) {
+                measured += 1;
+            }
+        }
+    }
+    (measured, total)
+}
+
+/// Point-in-time exploration counters (reports, metrics exposition).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ExploreStats {
+    /// Epsilon probes actually dispatched (counted against the budget).
+    pub probes_issued: u64,
+    /// Probe draws that fired but were refused capacity (load, budget
+    /// exhaustion, admission retry) — the shed-first guarantee at work.
+    pub probes_shed: u64,
+    /// Probe executions whose measurement reached the telemetry sink.
+    pub probes_completed: u64,
+    /// Never-seen shape buckets handed to the first-sight path.
+    pub first_sight_shapes: u64,
+    /// Micro-benchmark executions run by the first-sight path.
+    pub first_sight_runs: u64,
+}
+
+/// Shared exploration state for one pool run: the deterministic submit
+/// ordinal, budget accounting, and the first-sight dedup set.
+///
+/// The planner is intentionally dumb about *where* its numbers come from
+/// — the pool feeds it gauge readings and candidate sets; every decision
+/// reduces to the pure functions above, which is what makes the schedule
+/// replayable and the predicates portable to `tools/devsim_check.py`.
+#[derive(Debug)]
+pub struct ExplorePlanner {
+    cfg: ExploreConfig,
+    ordinal: AtomicU64,
+    issued: AtomicU64,
+    shed: AtomicU64,
+    completed: AtomicU64,
+    first_sight_shapes: AtomicU64,
+    first_sight_runs: AtomicU64,
+    seen: Mutex<HashSet<GemmShape>>,
+}
+
+impl ExplorePlanner {
+    /// A planner for one pool run under `cfg`.
+    pub fn new(cfg: ExploreConfig) -> ExplorePlanner {
+        ExplorePlanner {
+            cfg,
+            ordinal: AtomicU64::new(0),
+            issued: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            first_sight_shapes: AtomicU64::new(0),
+            first_sight_runs: AtomicU64::new(0),
+            seen: Mutex::new(HashSet::new()),
+        }
+    }
+
+    /// The policy this planner runs.
+    pub fn config(&self) -> ExploreConfig {
+        self.cfg
+    }
+
+    /// Claim the next submit ordinal (one relaxed `fetch_add` on the
+    /// explore-armed submit path).
+    pub fn next_ordinal(&self) -> u64 {
+        self.ordinal.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Does the epsilon draw fire at `ordinal`, with budget remaining?
+    /// The draw itself is pure ([`probe_draw`]); the budget guard reads
+    /// the issued counter, so once `budget` probes have been dispatched
+    /// every later draw is treated as shed.
+    pub fn should_probe(&self, ordinal: u64) -> bool {
+        if !probe_draw(self.cfg.seed, ordinal, self.cfg.eps_permille) {
+            return false;
+        }
+        if self.issued.load(Ordering::Relaxed) >= self.cfg.budget {
+            self.note_shed();
+            return false;
+        }
+        true
+    }
+
+    /// The candidate index the probe at `ordinal` targets (see
+    /// [`probe_pick`]).
+    pub fn pick(&self, ordinal: u64, n_candidates: usize) -> usize {
+        probe_pick(self.cfg.seed, ordinal, n_candidates)
+    }
+
+    /// Count one dispatched probe against the budget.
+    pub fn note_issued(&self) {
+        self.issued.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one fired-but-refused probe (load, budget, admission retry).
+    pub fn note_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one probe measurement that reached the telemetry sink.
+    pub fn note_completed(&self) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// First submit of `shape` this run? True exactly once per bucket —
+    /// the caller then queues the first-sight micro-benchmark for it.
+    pub fn first_sight(&self, shape: GemmShape) -> bool {
+        let fresh = self.seen.lock().unwrap().insert(shape);
+        if fresh {
+            self.first_sight_shapes.fetch_add(1, Ordering::Relaxed);
+        }
+        fresh
+    }
+
+    /// Count one first-sight micro-benchmark execution.
+    pub fn note_first_sight_run(&self) {
+        self.first_sight_runs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Point-in-time counter snapshot.
+    pub fn stats(&self) -> ExploreStats {
+        ExploreStats {
+            probes_issued: self.issued.load(Ordering::Relaxed),
+            probes_shed: self.shed.load(Ordering::Relaxed),
+            probes_completed: self.completed.load(Ordering::Relaxed),
+            first_sight_shapes: self.first_sight_shapes.load(Ordering::Relaxed),
+            first_sight_runs: self.first_sight_runs.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::admission::AdmissionPolicy;
+    use crate::coordinator::selector::SelectorPolicy;
+    use crate::runtime::Manifest;
+
+    #[test]
+    fn parse_accepts_all_arities() {
+        let two = ExploreConfig::parse("50,256").unwrap();
+        assert_eq!(two, ExploreConfig { eps_permille: 50, budget: 256, seed: 42, top_k: 3 });
+        let three = ExploreConfig::parse("100,64,7").unwrap();
+        assert_eq!(three.seed, 7);
+        let four = ExploreConfig::parse("100, 64, 7, 5").unwrap();
+        assert_eq!((four.eps_permille, four.budget, four.seed, four.top_k), (100, 64, 7, 5));
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        for bad in ["", "50", "1001,10", "x,10", "50,y", "50,10,z", "50,10,1,k", "1,2,3,4,5"] {
+            assert!(ExploreConfig::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn inert_configs_never_fire() {
+        assert!(ExploreConfig { eps_permille: 0, ..Default::default() }.is_inert());
+        assert!(ExploreConfig { budget: 0, ..Default::default() }.is_inert());
+        assert!(!ExploreConfig::default().is_inert());
+        for i in 0..1000 {
+            assert!(!probe_draw(42, i, 0));
+        }
+    }
+
+    #[test]
+    fn draw_is_deterministic_and_seed_sensitive() {
+        let a: Vec<bool> = (0..4096).map(|i| probe_draw(11, i, 50)).collect();
+        let b: Vec<bool> = (0..4096).map(|i| probe_draw(11, i, 50)).collect();
+        assert_eq!(a, b, "same seed, same schedule");
+        let c: Vec<bool> = (0..4096).map(|i| probe_draw(12, i, 50)).collect();
+        assert_ne!(a, c, "different seed, different schedule");
+    }
+
+    #[test]
+    fn draw_frequency_matches_eps_over_10k() {
+        // Satellite acceptance: over 10k submits the probe fraction lands
+        // within eps +/- tolerance (3-sigma of a Bernoulli(0.05) sum).
+        let n = 10_000u64;
+        let eps = 50u32; // 5%
+        let fired = (0..n).filter(|&i| probe_draw(42, i, eps)).count() as f64;
+        let expect = n as f64 * eps as f64 / 1000.0;
+        let sigma = (n as f64 * 0.05 * 0.95).sqrt();
+        assert!(
+            (fired - expect).abs() <= 3.0 * sigma,
+            "fired {fired} vs expected {expect} +/- {:.1}",
+            3.0 * sigma
+        );
+    }
+
+    #[test]
+    fn pick_is_deterministic_and_in_range() {
+        for n in [1usize, 2, 3, 17] {
+            for i in 0..256 {
+                let p = probe_pick(42, i, n);
+                assert!(p < n);
+                assert_eq!(p, probe_pick(42, i, n));
+            }
+        }
+        // Degenerate candidate count never panics.
+        assert_eq!(probe_pick(42, 0, 0), 0);
+        // All candidates are reachable.
+        let hit: HashSet<usize> = (0..256).map(|i| probe_pick(42, i, 3)).collect();
+        assert_eq!(hit.len(), 3);
+    }
+
+    #[test]
+    fn probe_admit_is_strictly_tighter_than_bounded_admission() {
+        // Sweep the gauge space: wherever the probe predicate admits, the
+        // BoundedQueue policy must admit too — probes are shed to zero
+        // strictly before in-quota work is rejected. Mirrored in
+        // tools/devsim_check.py.
+        for max_inflight in [2usize, 4, 8, 64] {
+            for max_queue_ns in [100_000u64, 1_000_000, 10_000_000] {
+                let policy = AdmissionPolicy::BoundedQueue { max_inflight, max_queue_ns };
+                for inflight in 0..=(max_inflight + 2) {
+                    for backlog_ns in
+                        [0u64, 40_000, 60_000, 500_000, 999_999, 1_000_001, 20_000_000]
+                    {
+                        for depth in [0usize, 1, 2, 3, 50] {
+                            if !probe_would_admit(
+                                backlog_ns,
+                                depth,
+                                inflight,
+                                max_inflight,
+                                max_queue_ns,
+                            ) {
+                                continue;
+                            }
+                            assert!(
+                                policy
+                                    .admit_with_drain(1, backlog_ns, inflight, depth, 0.0)
+                                    .is_ok(),
+                                "probe admitted where policy rejects: backlog={backlog_ns} \
+                                 depth={depth} inflight={inflight}/{max_inflight} \
+                                 queue_ns={max_queue_ns}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn probe_admit_requires_idle_shard() {
+        assert!(probe_would_admit(0, 0, 0, 0, 0));
+        assert!(!probe_would_admit(0, PROBE_MAX_QUEUE_DEPTH + 1, 0, 0, 0));
+        assert!(!probe_would_admit(PROBE_MAX_BACKLOG_NS + 1, 0, 0, 0, 0));
+        // Half-budget rules.
+        assert!(probe_would_admit(0, 0, 0, 4, 0));
+        assert!(probe_would_admit(0, 0, 1, 4, 0));
+        assert!(!probe_would_admit(0, 0, 2, 4, 0));
+        assert!(probe_would_admit(400_000, 0, 0, 0, 800_000));
+        assert!(!probe_would_admit(400_001, 0, 0, 0, 800_000));
+    }
+
+    #[test]
+    fn planner_budget_caps_issued_probes() {
+        let planner = ExplorePlanner::new(ExploreConfig {
+            eps_permille: 1000, // every draw fires
+            budget: 5,
+            seed: 1,
+            top_k: 3,
+        });
+        let mut issued = 0u64;
+        for _ in 0..100 {
+            let ord = planner.next_ordinal();
+            if planner.should_probe(ord) {
+                planner.note_issued();
+                issued += 1;
+            }
+        }
+        assert_eq!(issued, 5, "budget caps issuance");
+        let stats = planner.stats();
+        assert_eq!(stats.probes_issued, 5);
+        assert_eq!(stats.probes_shed, 95, "post-budget draws count as shed");
+    }
+
+    #[test]
+    fn first_sight_fires_once_per_bucket() {
+        let planner = ExplorePlanner::new(ExploreConfig::default());
+        let a = GemmShape::new(64, 64, 64, 1);
+        let b = GemmShape::new(128, 128, 128, 1);
+        assert!(planner.first_sight(a));
+        assert!(!planner.first_sight(a));
+        assert!(planner.first_sight(b));
+        assert_eq!(planner.stats().first_sight_shapes, 2);
+    }
+
+    #[test]
+    fn candidates_and_ranking_respect_manifest_and_telemetry() {
+        let registry = KernelRegistry::new(Manifest::synthetic(), SelectorPolicy::Xla);
+        let telemetry = TelemetrySink::new(1, 0.5);
+        let shape = registry.buckets()[0];
+        let cold = unmeasured_candidates(&registry, &telemetry, &shape);
+        assert!(!cold.is_empty(), "synthetic manifest ships configs at every bucket");
+        // Measure one candidate: it drops out of the unmeasured set.
+        telemetry.record(shape, Some(cold[0]), 1e-3);
+        let warmer = unmeasured_candidates(&registry, &telemetry, &shape);
+        assert_eq!(warmer.len(), cold.len() - 1);
+        assert!(!warmer.contains(&cold[0]));
+
+        let model = CostModel::devsim("i7-6700k");
+        let ranked = rank_by_prior(&registry, &model, &shape, 3);
+        assert!(ranked.len() <= 3 && !ranked.is_empty());
+        // Every ranked config is shipped at the shape.
+        for &cfg in &ranked {
+            assert!(registry
+                .manifest
+                .find_matmul(Some(cfg), shape.m, shape.k, shape.n, shape.batch)
+                .is_some());
+        }
+        // Ranking is by ascending predicted cost.
+        let costs: Vec<f64> =
+            ranked.iter().map(|&c| model.predict_secs(&shape, Some(c))).collect();
+        assert!(costs.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn coverage_counts_measured_pairs() {
+        let registry = KernelRegistry::new(Manifest::synthetic(), SelectorPolicy::Xla);
+        let telemetry = TelemetrySink::new(1, 0.5);
+        let (measured, total) = measured_coverage(&telemetry.snapshot(), &registry, 1);
+        assert_eq!(measured, 0);
+        assert!(total > 0);
+        // Measure every pair: coverage reaches 100%.
+        for bucket in registry.buckets() {
+            for cfg in registry.healthy_shipped_configs() {
+                if registry
+                    .manifest
+                    .find_matmul(Some(cfg), bucket.m, bucket.k, bucket.n, bucket.batch)
+                    .is_some()
+                {
+                    telemetry.record(bucket, Some(cfg), 1e-3);
+                }
+            }
+        }
+        let (measured, total2) = measured_coverage(&telemetry.snapshot(), &registry, 1);
+        assert_eq!(total2, total);
+        assert_eq!(measured, total);
+        // min_samples gates coverage: demanding 2 samples resets it.
+        let (strict, _) = measured_coverage(&telemetry.snapshot(), &registry, 2);
+        assert_eq!(strict, 0);
+    }
+}

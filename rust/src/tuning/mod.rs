@@ -16,6 +16,11 @@
 //!   router's load gauges.
 //! * [`drift`] — per-config geometric-mean measured/predicted ratios with
 //!   a configurable trip threshold, doubling as prior calibration.
+//! * [`explore`] — the exploration half of the loop: seeded,
+//!   budget-capped epsilon probes of unmeasured shipped configs and the
+//!   first-sight micro-benchmark planner, feeding the same telemetry
+//!   sink (and, via its extended snapshot, warm-starting the next
+//!   deployment).
 //! * [`retuner`] — the background thread plus the synchronous
 //!   [`retuner::retune_once`] step it (and benches) drive.
 //! * [`swap`] — the generation-counted selector handle and the shared
@@ -25,12 +30,17 @@
 //!   EWMA-smoothed into the metrics exposition's gauge.
 
 pub mod drift;
+pub mod explore;
 pub mod regret;
 pub mod retuner;
 pub mod swap;
 pub mod telemetry;
 
 pub use drift::{evaluate_drift, ConfigDrift, DriftReport};
+pub use explore::{
+    measured_coverage, probe_draw, probe_pick, probe_would_admit, rank_by_prior,
+    unmeasured_candidates, ExploreConfig, ExplorePlanner, ExploreStats,
+};
 pub use regret::{evaluate_regret, RegretEstimator, RegretReport, ShapeRegret};
 pub use retuner::{
     live_dataset, retune_once, RetuneConfig, RetuneOutcome, Retuner, RetunerStats,

@@ -42,6 +42,10 @@ struct Cell {
     count: u64,
     sum_secs: f64,
     ewma_secs: f64,
+    /// How many of `count` came from exploration probes (epsilon-probe
+    /// redirects or first-sight micro-benchmarks) rather than organic
+    /// selector traffic. Provenance only — the EWMA treats both equally.
+    probed: u64,
 }
 
 /// Lock-light accumulator of measured per-(shape, config) execution times.
@@ -81,6 +85,18 @@ impl TelemetrySink {
 
     /// Record one measured execution (seconds) for a served request.
     pub fn record(&self, shape: GemmShape, config: Option<usize>, secs: f64) {
+        self.record_inner(shape, config, secs, false);
+    }
+
+    /// Record one measured execution that came from an exploration probe
+    /// (epsilon-probe redirect or first-sight micro-benchmark). Identical
+    /// to [`TelemetrySink::record`] except the cell's `probed` provenance
+    /// counter is bumped alongside `count`.
+    pub fn record_probe(&self, shape: GemmShape, config: Option<usize>, secs: f64) {
+        self.record_inner(shape, config, secs, true);
+    }
+
+    fn record_inner(&self, shape: GemmShape, config: Option<usize>, secs: f64, probed: bool) {
         if !secs.is_finite() || secs <= 0.0 {
             return;
         }
@@ -91,6 +107,9 @@ impl TelemetrySink {
         let cell = stripe.entry((shape, config)).or_default();
         cell.count += 1;
         cell.sum_secs += secs;
+        if probed {
+            cell.probed += 1;
+        }
         cell.ewma_secs = if cell.count == 1 {
             secs
         } else {
@@ -145,6 +164,7 @@ impl TelemetrySink {
                     count: cell.count,
                     sum_secs: cell.mean_secs * cell.count as f64,
                     ewma_secs: cell.ewma_secs,
+                    probed: cell.probed.min(cell.count),
                 },
             );
             drop(stripe);
@@ -166,6 +186,7 @@ impl TelemetrySink {
                     count: cell.count,
                     mean_secs: cell.sum_secs / cell.count as f64,
                     ewma_secs: cell.ewma_secs,
+                    probed: cell.probed,
                 });
             }
         }
@@ -189,6 +210,9 @@ pub struct TelemetryCell {
     pub mean_secs: f64,
     /// Exponentially-weighted moving average of the measured seconds.
     pub ewma_secs: f64,
+    /// Of `count`, how many samples came from exploration probes (PR 10
+    /// provenance extension; `0` for snapshots written before it).
+    pub probed: u64,
 }
 
 impl TelemetryCell {
@@ -229,6 +253,9 @@ impl TelemetrySnapshot {
     /// [`TelemetrySnapshot::to_json`]); the derived `gflops` field is
     /// ignored on input. Feed the result to [`TelemetrySink::absorb`] to
     /// restore retune state across restarts.
+    ///
+    /// The optional per-cell `probed` field (exploration provenance, added
+    /// in PR 10) defaults to `0`, so pre-extension snapshots still load.
     pub fn from_json(doc: &Json) -> Result<TelemetrySnapshot, String> {
         if doc.get("schema").and_then(|s| s.as_str()) != Some("kernelsel-telemetry-v1") {
             return Err("not a kernelsel-telemetry-v1 document".to_string());
@@ -256,12 +283,17 @@ impl TelemetrySnapshot {
                 }
                 None => return Err(format!("cell {i}: missing config")),
             };
+            // Back-compat: `probed` was added after v1 shipped; absent (or
+            // invalid, in a hand-edited file) means "no probe provenance".
+            let probed =
+                cell.get("probed").and_then(|v| v.as_usize()).map_or(0, |p| p as u64);
             cells.push(TelemetryCell {
                 shape: GemmShape::new(dim("m")?, dim("k")?, dim("n")?, dim("batch")?),
                 config,
                 count: dim("count")? as u64,
                 mean_secs: num("mean_secs")?,
                 ewma_secs: num("ewma_secs")?,
+                probed,
             });
         }
         Ok(TelemetrySnapshot { cells })
@@ -287,6 +319,7 @@ impl TelemetrySnapshot {
                         },
                     ),
                     ("count", Json::Num(c.count as f64)),
+                    ("probed", Json::Num(c.probed as f64)),
                     ("mean_secs", Json::Num(c.mean_secs)),
                     ("ewma_secs", Json::Num(c.ewma_secs)),
                     ("gflops", Json::Num(c.gflops())),
@@ -374,7 +407,9 @@ mod tests {
         assert!(cells[0].get("config").unwrap().is_null(), "XLA cell sorts first");
         assert_eq!(cells[1].get("config").and_then(|v| v.as_usize()), Some(7));
         for cell in cells {
-            for key in ["m", "k", "n", "batch", "count", "mean_secs", "ewma_secs", "gflops"] {
+            for key in
+                ["m", "k", "n", "batch", "count", "probed", "mean_secs", "ewma_secs", "gflops"]
+            {
                 assert!(cell.get(key).is_some(), "missing {key}");
             }
         }
@@ -426,14 +461,17 @@ mod tests {
                     count: 99,
                     mean_secs: 1e-3,
                     ewma_secs: 1e-3,
+                    probed: 0,
                 },
-                // Fresh cell: must install.
+                // Fresh cell: must install (probed provenance carried, but
+                // clamped to count).
                 TelemetryCell {
                     shape: GemmShape::new(32, 32, 32, 1),
                     config: Some(7),
                     count: 4,
                     mean_secs: 5e-4,
                     ewma_secs: 6e-4,
+                    probed: 9,
                 },
                 // Garbage: dropped silently.
                 TelemetryCell {
@@ -442,6 +480,7 @@ mod tests {
                     count: 0,
                     mean_secs: 1e-3,
                     ewma_secs: 1e-3,
+                    probed: 0,
                 },
                 TelemetryCell {
                     shape: shape(),
@@ -449,6 +488,7 @@ mod tests {
                     count: 2,
                     mean_secs: -1.0,
                     ewma_secs: 1e-3,
+                    probed: 0,
                 },
             ],
         };
@@ -459,6 +499,47 @@ mod tests {
         assert!(sink.measured_cost_secs(&shape(), Some(8)).is_none());
         assert!(sink.measured_cost_secs(&shape(), Some(9)).is_none());
         assert_eq!(sink.total_samples(), 1 + 4);
+        let snap = sink.snapshot();
+        let fresh = snap.cell(&GemmShape::new(32, 32, 32, 1), Some(7)).unwrap();
+        assert_eq!(fresh.probed, 4, "absorbed probed clamps to count");
+    }
+
+    #[test]
+    fn probe_provenance_recorded_and_roundtripped() {
+        // record_probe and record share one cell; only probes bump the
+        // provenance counter, and it survives JSON -> absorb intact.
+        let sink = TelemetrySink::new(1, 0.5);
+        sink.record_probe(shape(), Some(4), 1e-3);
+        sink.record(shape(), Some(4), 2e-3);
+        sink.record_probe(shape(), Some(4), 3e-3);
+        let snap = sink.snapshot();
+        let cell = snap.cell(&shape(), Some(4)).expect("cell exists");
+        assert_eq!(cell.count, 3);
+        assert_eq!(cell.probed, 2);
+
+        let text = snap.to_json().to_string();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        let restored = TelemetrySnapshot::from_json(&parsed).unwrap();
+        assert_eq!(restored.cell(&shape(), Some(4)).unwrap().probed, 2);
+        let fresh = TelemetrySink::new(1, 0.5);
+        fresh.absorb(&restored);
+        assert_eq!(fresh.snapshot().cell(&shape(), Some(4)).unwrap().probed, 2);
+    }
+
+    #[test]
+    fn from_json_defaults_missing_probed_to_zero() {
+        // Pre-PR-10 kernelsel-telemetry-v1 documents carry no `probed`
+        // field; they must keep loading with provenance defaulted.
+        let doc = crate::util::json::parse(
+            r#"{"schema":"kernelsel-telemetry-v1","cells":[
+                {"m":64,"k":64,"n":64,"batch":1,"config":5,
+                 "count":7,"mean_secs":0.001,"ewma_secs":0.001,"gflops":524.3}]}"#,
+        )
+        .unwrap();
+        let snap = TelemetrySnapshot::from_json(&doc).expect("back-compat load");
+        assert_eq!(snap.cells.len(), 1);
+        assert_eq!(snap.cells[0].count, 7);
+        assert_eq!(snap.cells[0].probed, 0);
     }
 
     #[test]

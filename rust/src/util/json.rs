@@ -8,19 +8,28 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
+/// A parsed JSON value. Objects use a `BTreeMap` so serialization is
+/// deterministic (keys emit in sorted order).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// JSON `null` (also the serialization of non-finite numbers).
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number; integers are exact up to 2^53.
     Num(f64),
+    /// A string (escapes already decoded).
     Str(String),
+    /// An array of values.
     Arr(Vec<Json>),
+    /// An object, keyed in sorted order.
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
     // -- accessors ---------------------------------------------------------
 
+    /// Object member by key; `None` for non-objects or missing keys.
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -28,6 +37,7 @@ impl Json {
         }
     }
 
+    /// The string value, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -35,6 +45,7 @@ impl Json {
         }
     }
 
+    /// The numeric value, if this is a `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -42,6 +53,7 @@ impl Json {
         }
     }
 
+    /// The value as a `usize`, if this is a non-negative integer `Num`.
     pub fn as_usize(&self) -> Option<usize> {
         match self {
             Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as usize),
@@ -49,6 +61,7 @@ impl Json {
         }
     }
 
+    /// The boolean value, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -56,6 +69,7 @@ impl Json {
         }
     }
 
+    /// The element slice, if this is an `Arr`.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -63,6 +77,7 @@ impl Json {
         }
     }
 
+    /// True for JSON `null`.
     pub fn is_null(&self) -> bool {
         matches!(self, Json::Null)
     }
@@ -82,20 +97,25 @@ impl Json {
 
     // -- constructors ------------------------------------------------------
 
+    /// Build an object from `(key, value)` pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Build an array of numbers.
     pub fn arr_num<I: IntoIterator<Item = f64>>(xs: I) -> Json {
         Json::Arr(xs.into_iter().map(Json::Num).collect())
     }
 
+    /// Build an array of strings.
     pub fn arr_str<I: IntoIterator<Item = String>>(xs: I) -> Json {
         Json::Arr(xs.into_iter().map(Json::Str).collect())
     }
 
     // -- serialization -----------------------------------------------------
 
+    /// Serialize to compact JSON text (sorted object keys, no whitespace).
+    #[allow(clippy::inherent_to_string)]
     pub fn to_string(&self) -> String {
         let mut out = String::new();
         self.write(&mut out);
@@ -167,6 +187,7 @@ fn write_escaped(s: &str, out: &mut String) {
 // Parser.
 // ---------------------------------------------------------------------------
 
+/// Parse a complete JSON document; trailing non-whitespace is an error.
 pub fn parse(input: &str) -> Result<Json, String> {
     let bytes = input.as_bytes();
     let mut p = Parser { bytes, pos: 0 };

@@ -21,6 +21,7 @@ fn splitmix64(state: &mut u64) -> u64 {
 }
 
 impl Rng {
+    /// Expand a single `u64` seed into the four-lane state via SplitMix64.
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
         let s = [
@@ -37,6 +38,7 @@ impl Rng {
         Rng::new(self.next_u64() ^ stream.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// The next raw 64-bit output of the xoshiro256++ core.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[0]

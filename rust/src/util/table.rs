@@ -4,13 +4,18 @@
 /// A simple column-aligned table with a title and optional notes.
 #[derive(Clone, Debug, Default)]
 pub struct Table {
+    /// Title line rendered as `== title ==` above the header row.
     pub title: String,
+    /// Column headers; every row must match their count.
     pub headers: Vec<String>,
+    /// Row cells, outer index = row, inner index = column.
     pub rows: Vec<Vec<String>>,
+    /// Free-form footnotes rendered as `note: ...` lines.
     pub notes: Vec<String>,
 }
 
 impl Table {
+    /// Empty table with a title and column headers.
     pub fn new(title: &str, headers: &[&str]) -> Self {
         Table {
             title: title.to_string(),
@@ -20,6 +25,7 @@ impl Table {
         }
     }
 
+    /// Append a row; panics if the cell count differs from the headers.
     pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
         assert_eq!(
             cells.len(),
@@ -31,6 +37,7 @@ impl Table {
         self
     }
 
+    /// Append a footnote line.
     pub fn note(&mut self, s: &str) -> &mut Self {
         self.notes.push(s.to_string());
         self

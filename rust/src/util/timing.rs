@@ -6,17 +6,26 @@ use std::time::{Duration, Instant};
 /// Summary statistics over a set of per-iteration timings.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Stats {
+    /// Number of samples summarized.
     pub n: usize,
+    /// Arithmetic mean, seconds.
     pub mean: f64,
+    /// Population standard deviation, seconds.
     pub std: f64,
+    /// Smallest sample, seconds.
     pub min: f64,
+    /// Largest sample, seconds.
     pub max: f64,
+    /// Median (50th percentile), seconds.
     pub p50: f64,
+    /// 95th percentile, seconds.
     pub p95: f64,
+    /// 99th percentile, seconds.
     pub p99: f64,
 }
 
 impl Stats {
+    /// Summarize per-iteration timings (seconds); panics on an empty slice.
     pub fn from_secs(samples: &[f64]) -> Stats {
         assert!(!samples.is_empty(), "Stats::from_secs on empty sample set");
         let n = samples.len();
@@ -41,10 +50,12 @@ impl Stats {
         }
     }
 
+    /// Mean in milliseconds.
     pub fn mean_ms(&self) -> f64 {
         self.mean * 1e3
     }
 
+    /// Mean in microseconds.
     pub fn mean_us(&self) -> f64 {
         self.mean * 1e6
     }

@@ -1,0 +1,71 @@
+//! Integration tests: the `kernelsel-telemetry-v1` snapshot wire format —
+//! probe-provenance round-trips through the extended schema, and a golden
+//! pre-extension fixture (written before the per-cell `probed` field
+//! existed) still loads with the new field defaulted.
+
+use std::path::PathBuf;
+
+use kernelsel::dataset::GemmShape;
+use kernelsel::tuning::{TelemetrySink, TelemetrySnapshot};
+use kernelsel::util::json;
+
+fn fixture(name: &str) -> String {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name);
+    std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("fixture {} unreadable: {e}", path.display()))
+}
+
+#[test]
+fn pre_explore_v1_fixture_loads_with_probed_defaulted() {
+    let doc = json::parse(&fixture("telemetry_v1_pre_explore.json")).expect("fixture parses");
+    let snap = TelemetrySnapshot::from_json(&doc).expect("pre-extension v1 still loads");
+    assert_eq!(snap.cells.len(), 3);
+    for cell in &snap.cells {
+        assert_eq!(cell.probed, 0, "absent provenance must default to zero, not fail");
+    }
+    let small = GemmShape::new(64, 64, 64, 1);
+    let xla = snap.cell(&small, None).expect("xla cell");
+    assert_eq!((xla.count, xla.mean_secs), (12, 0.00031));
+    let cfg3 = snap.cell(&small, Some(3)).expect("config-3 cell");
+    assert_eq!(cfg3.count, 5);
+
+    // The restored cells behave exactly like natively recorded ones: a
+    // warm sink prices them, and re-exporting writes the extended schema.
+    let sink = TelemetrySink::new(3, 0.25);
+    sink.absorb(&snap);
+    let priced = sink.measured_cost_secs(&small, Some(3)).expect("5 samples price the cell");
+    assert!((priced - 0.0002).abs() < 1e-9, "EWMA restored, got {priced}");
+    let reexported = sink.snapshot().to_json().to_string();
+    assert!(
+        reexported.contains("\"probed\":0"),
+        "re-export must carry the extended field: {reexported}"
+    );
+}
+
+#[test]
+fn extended_snapshot_roundtrips_probe_provenance() {
+    let sink = TelemetrySink::new(1, 0.5);
+    let shape = GemmShape::new(256, 256, 256, 1);
+    sink.record(shape, Some(2), 1e-3);
+    sink.record_probe(shape, Some(2), 1.2e-3);
+    sink.record_probe(shape, Some(4), 2e-3);
+    sink.record(shape, None, 3e-3);
+
+    let wire = sink.snapshot().to_json().to_string();
+    let back = TelemetrySnapshot::from_json(&json::parse(&wire).expect("wire parses"))
+        .expect("extended snapshot loads");
+    let mixed = back.cell(&shape, Some(2)).expect("mixed cell");
+    assert_eq!((mixed.count, mixed.probed), (2, 1), "organic + probe provenance split");
+    let pure = back.cell(&shape, Some(4)).expect("probe-only cell");
+    assert_eq!((pure.count, pure.probed), (1, 1));
+    let organic = back.cell(&shape, None).expect("organic cell");
+    assert_eq!((organic.count, organic.probed), (1, 0));
+
+    // Absorbing the restored snapshot into a fresh sink keeps provenance —
+    // the warm-start path a redeployment takes.
+    let fresh = TelemetrySink::new(1, 0.5);
+    fresh.absorb(&back);
+    let again = fresh.snapshot();
+    assert_eq!(again.cell(&shape, Some(2)).unwrap().probed, 1);
+    assert_eq!(again.cell(&shape, Some(4)).unwrap().probed, 1);
+}

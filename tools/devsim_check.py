@@ -41,6 +41,15 @@ class Rng:
     def uniform(self):
         return (self.next_u64() >> 11) * (1.0 / (1 << 53))
 
+    def fork(self, stream):
+        """Port of Rng::fork: derive an independent per-stream generator."""
+        return Rng(self.next_u64() ^ (stream * 0x9E3779B97F4A7C15) & MASK)
+
+    def below(self, n):
+        """Port of Rng::below (uniform-scaled, same float path as Rust)."""
+        assert n > 0, "Rng.below(0)"
+        return int(self.uniform() * n) % n
+
     def normal(self):
         if self.spare is not None:
             z, self.spare = self.spare, None
@@ -920,3 +929,127 @@ print(f"OK: quarantine breaker + retry bucket — trip at 8/16 windowed "
       f"failures, 32-screen cooloff, probes every 8th screen, 3-success "
       f"promotion; sweep saw {sweep_trips} trips / {sweep_probes} probes / "
       f"{sweep_restores} restores; full bucket funds 4 retries then sheds")
+
+# ---- Exploration probe-budget admit predicate check --------------------------
+# Port of rust/src/tuning/explore.rs::{probe_draw, probe_pick,
+# probe_would_admit} — the pure epsilon-schedule and the probe admission
+# predicate behind live exploration. The key contract: probe admission is
+# STRICTLY tighter than BoundedQueue admission (probes need a near-idle
+# shard and must leave half of every bounded budget untouched), so probes
+# shed to zero strictly before the policy starts rejecting in-quota work.
+# Mirrors the Rust unit test probe_admit_is_strictly_tighter_than_
+# bounded_admission on the same gauge grid.
+
+PROBE_MAX_QUEUE_DEPTH = 2          # explore.rs PROBE_MAX_QUEUE_DEPTH
+PROBE_MAX_BACKLOG_NS = 1_000_000   # explore.rs PROBE_MAX_BACKLOG_NS
+
+def probe_draw(seed, ordinal, eps_permille):
+    """Port of explore::probe_draw — pure in (seed, ordinal)."""
+    if eps_permille == 0:
+        return False
+    return Rng(seed).fork(ordinal).below(1000) < eps_permille
+
+def probe_pick(seed, ordinal, n_candidates):
+    """Port of explore::probe_pick — continues probe_draw's stream
+    (the gate draw is consumed first)."""
+    rng = Rng(seed).fork(ordinal)
+    rng.below(1000)
+    return rng.below(max(n_candidates, 1))
+
+def probe_would_admit(backlog_ns, queued_depth, inflight,
+                      max_inflight, max_queue_ns):
+    """Port of explore::probe_would_admit (0 = that budget uncapped)."""
+    if queued_depth > PROBE_MAX_QUEUE_DEPTH \
+            or backlog_ns > PROBE_MAX_BACKLOG_NS:
+        return False
+    if max_inflight > 0 and (inflight + 1) * 2 > max_inflight:
+        return False
+    if max_queue_ns > 0 and backlog_ns * 2 > max_queue_ns:
+        return False
+    return True
+
+# Epsilon schedule: deterministic, seed-sensitive, eps=0 inert, and the
+# fire rate over 10k ordinals lands within 3 sigma of eps/1000.
+sched_a = [probe_draw(11, i, 50) for i in range(4096)]
+assert sched_a == [probe_draw(11, i, 50) for i in range(4096)], \
+    "same seed must replay the same schedule"
+assert sched_a != [probe_draw(12, i, 50) for i in range(4096)], \
+    "different seed must give a different schedule"
+assert not any(probe_draw(42, i, 0) for i in range(1000)), "eps=0 is inert"
+fired = sum(1 for i in range(10_000) if probe_draw(42, i, 50))
+expect, sigma = 10_000 * 0.05, math.sqrt(10_000 * 0.05 * 0.95)
+assert abs(fired - expect) <= 3 * sigma, (fired, expect)
+
+# Candidate pick: in range, deterministic, every candidate reachable, and
+# the gate draw is consumed first (the pick equals the stream's SECOND
+# below() — shifting the candidate count never perturbs the gate).
+for n in (1, 2, 3, 17):
+    for i in range(256):
+        p = probe_pick(42, i, n)
+        assert 0 <= p < n and p == probe_pick(42, i, n)
+assert probe_pick(42, 0, 0) == 0, "degenerate candidate count must not throw"
+assert {probe_pick(42, i, 3) for i in range(256)} == {0, 1, 2}
+for i in range(64):
+    stream = Rng(42).fork(i)
+    gate = stream.below(1000)
+    assert probe_draw(42, i, 1000) and gate < 1000
+    assert probe_pick(42, i, 7) == stream.below(7)
+
+# Idle-shard limbs pinned by the Rust probe_admit_requires_idle_shard test.
+assert probe_would_admit(0, 0, 0, 0, 0)
+assert not probe_would_admit(0, PROBE_MAX_QUEUE_DEPTH + 1, 0, 0, 0)
+assert not probe_would_admit(PROBE_MAX_BACKLOG_NS + 1, 0, 0, 0, 0)
+# Half-budget limbs: a probe may use at most half of a bounded budget.
+assert probe_would_admit(0, 0, 3, 8, 0)       # (3+1)*2 = 8 <= 8
+assert not probe_would_admit(0, 0, 4, 8, 0)   # (4+1)*2 = 10 > 8
+assert probe_would_admit(500_000, 0, 0, 0, 1_000_000)
+assert not probe_would_admit(500_001, 0, 0, 0, 1_000_000)
+
+# The stricter-than-admission sweep (mirrors the Rust unit test grid):
+# wherever the probe predicate admits, BoundedQueue admission with the
+# same budgets must admit too — at any measured drain rate, since the
+# decision is rate-independent.
+probe_checked = probe_admits = 0
+for max_inflight in (2, 4, 8, 64):
+    for max_queue_ns in (100_000, 1_000_000, 10_000_000):
+        for inflight in range(max_inflight + 3):
+            for backlog_ns in (0, 40_000, 60_000, 500_000, 999_999,
+                               1_000_001, 20_000_000):
+                for depth in (0, 1, 2, 3, 50):
+                    probe_checked += 1
+                    if not probe_would_admit(backlog_ns, depth, inflight,
+                                             max_inflight, max_queue_ns):
+                        continue
+                    probe_admits += 1
+                    for rate in (0.0, 1000.0):
+                        verdict = admit_bounded_drain(
+                            max_inflight, max_queue_ns, 1, backlog_ns,
+                            inflight, depth, rate)
+                        assert verdict is None, \
+                            (backlog_ns, depth, inflight, max_inflight,
+                             max_queue_ns, verdict)
+assert probe_admits > 0, "sweep must exercise the admit side of the grid"
+
+# Budget arithmetic: only ISSUED probes consume budget — sheds are free.
+# Walk the epsilon schedule against an adversarial gauge that rejects
+# every other probe attempt; the issue counter must stop exactly at the
+# budget while shed attempts keep passing through unbilled.
+budget, issued, sheds, attempt = 16, 0, 0, 0
+for ordinal in range(50_000):
+    if not probe_draw(7, ordinal, 100) or issued >= budget:
+        continue
+    attempt += 1
+    backlog = 0 if attempt % 2 else 2 * PROBE_MAX_BACKLOG_NS
+    if probe_would_admit(backlog, 0, 0, 0, 0):
+        issued += 1
+    else:
+        sheds += 1
+assert issued == budget, issued
+assert sheds > 0 and attempt == issued + sheds > budget, \
+    "shed probes must not consume budget"
+
+print(f"OK: exploration probe predicates — deterministic seeded epsilon "
+      f"schedule ({fired}/10000 fired at eps 50), probe admission strictly "
+      f"tighter than BoundedQueue on {probe_checked} gauge states "
+      f"({probe_admits} probe-admits, zero policy rejections), sheds "
+      f"never billed against the {budget}-probe budget")

@@ -51,7 +51,7 @@ CPU_ENTRY_KEYS = {
 }
 # Self-gated pool mixes: the bench enforces their acceptance criteria via
 # exit codes, so the ratchet never direction-checks them.
-SELF_GATED_MIXES = {"overload", "tenants"}
+SELF_GATED_MIXES = {"overload", "tenants", "explore"}
 
 
 def fail(msg):

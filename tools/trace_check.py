@@ -20,7 +20,7 @@ without needing a Rust toolchain on the checking side. Three passes:
      or `reject`); a completed chain carries at least one `execute`;
      unchained events (`seq == 0`) are only the pool-level kinds
      (`batch`, `steal`, `swap`, the quarantine transitions, `respawn`,
-     `retry`). Skipped (with a note) when the recorder reported dropped
+     `retry`, `explore-probe`). Skipped (with a note) when the recorder reported dropped
      events — an incomplete timeline cannot prove lifecycle violations.
   4. **Quarantine lifecycle** — per config, `quarantine-probe` events
      appear only while that config is blocked (between a
@@ -57,6 +57,7 @@ KIND_FIELDS = {
     "quarantine-restore": {"config": NUMERIC, "restores": NUMERIC},
     "respawn": {"requests": NUMERIC},
     "retry": {"reason": str, "attempt": NUMERIC, "tokens_milli": NUMERIC},
+    "explore-probe": {"config": NUMERIC, "measured_ns": NUMERIC},
 }
 TERMINALS = {"complete", "shed", "reject"}
 POOL_LEVEL = {
@@ -68,6 +69,7 @@ POOL_LEVEL = {
     "quarantine-restore",
     "respawn",
     "retry",
+    "explore-probe",
 }
 
 
